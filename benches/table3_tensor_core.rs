@@ -1,0 +1,26 @@
+//! Bench for Table III: WMMA latency + throughput for all 7 dtypes,
+//! plus an ablation over the throughput stream length (startup
+//! amortization — the paper's measured-vs-theoretical gap).
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::microbench::wmma;
+use ampere_ubench::tensor::{throughput, WmmaDtype};
+use ampere_ubench::util::bench::{black_box, Bench};
+
+fn main() {
+    let cfg = AmpereConfig::a100();
+    let mut b = Bench::from_args("table3_tensor_core");
+    b.bench("table3_tensor_core", || {
+        let rows = wmma::run_table3(black_box(&cfg)).unwrap();
+        for r in &rows {
+            assert_eq!(r.cycles, r.paper_cycles, "{} regressed", r.dtype_key);
+        }
+        rows
+    });
+    for tiles in [16u64, 256, 4096] {
+        b.bench(&format!("tc_throughput_stream/{tiles}"), || {
+            throughput(WmmaDtype::F16F16, black_box(tiles), &cfg)
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,24 @@
+//! Bench for Table IV: pointer-chase latency for every memory level.
+//! Uses the scaled-cache config (identical latencies, smaller warm
+//! loops) so samples stay fast.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::microbench::memory;
+use ampere_ubench::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut cfg = AmpereConfig::a100();
+    cfg.memory.l2_bytes = 512 * 1024;
+    cfg.memory.l1_bytes = 32 * 1024;
+
+    let mut b = Bench::from_args("table4_memory");
+    b.bench("table4_memory", || {
+        let rows = memory::run_table4(black_box(&cfg)).unwrap();
+        for r in &rows {
+            let rel = (r.cpi as f64 - r.paper as f64).abs() / r.paper as f64;
+            assert!(rel < 0.06, "{:?} regressed: {} vs {}", r.level, r.cpi, r.paper);
+        }
+        rows
+    });
+    b.finish();
+}

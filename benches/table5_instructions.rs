@@ -1,0 +1,19 @@
+//! Bench for Table V: the full ~100-row instruction sweep.  This is the
+//! L3 perf workhorse — one sample parses, translates and simulates ~200
+//! kernels — and the target of the §Perf optimization pass.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::microbench::{alu, MatchGrade};
+use ampere_ubench::util::bench::{black_box, Bench};
+
+fn main() {
+    let cfg = AmpereConfig::a100();
+    let mut b = Bench::from_args("table5_instructions");
+    b.bench("table5_instructions", || {
+        let rows = alu::run_table5(black_box(&cfg)).unwrap();
+        let off = rows.iter().filter(|r| r.cycles_grade == MatchGrade::Off).count();
+        assert!(off * 5 <= rows.len(), "Table V calibration regressed: {off} off");
+        rows
+    });
+    b.finish();
+}

@@ -1,0 +1,55 @@
+//! End-to-end driver (DESIGN.md §8): the complete paper evaluation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example full_campaign
+//! ```
+//!
+//! Runs every table and figure of the paper's evaluation on the
+//! simulated A100 — Tables I–V, Fig. 4, the §V-A insights — *and*
+//! validates the simulator's tensor-core numerics against the
+//! AOT-compiled JAX/Pallas artifacts through the PJRT runtime, proving
+//! all three layers compose.  Writes `campaign_report.txt` and prints
+//! the EXPERIMENTS.md-ready summary.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::tensor::ALL_DTYPES;
+use ampere_ubench::{harness, runtime};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = AmpereConfig::a100();
+
+    println!("=== phase 1: microbenchmark campaign (L3 simulator) ===");
+    let started = std::time::Instant::now();
+    let result = harness::run_campaign_blocking(cfg).map_err(anyhow::Error::msg)?;
+    let campaign_secs = started.elapsed().as_secs_f64();
+    println!("{}", result.render());
+
+    println!("=== phase 2: PJRT oracle validation (L1/L2 artifacts) ===");
+    match runtime::Oracle::from_default_dir() {
+        Ok(mut oracle) => {
+            println!("PJRT platform: {}", oracle.platform());
+            println!("artifacts: {:?}", oracle.variants());
+            for d in ALL_DTYPES {
+                let err = runtime::validate_wmma_against_sim(&mut oracle, d)?;
+                println!("  {:<10} max|sim − oracle| = {err:.3e}", d.key());
+            }
+        }
+        Err(e) => {
+            println!("skipping oracle validation (run `make artifacts`): {e:#}");
+        }
+    }
+
+    let summary = result.summary();
+    let summary_json = ampere_ubench::util::json::to_string_pretty(&summary.to_json());
+    println!("\n=== summary ===");
+    println!("{summary_json}");
+    println!("campaign wall-clock: {campaign_secs:.1}s");
+
+    let mut report = result.render();
+    report.push_str(&format!(
+        "\nsummary: {summary_json}\ncampaign wall-clock: {campaign_secs:.1}s\n"
+    ));
+    std::fs::write("campaign_report.txt", &report)?;
+    println!("wrote campaign_report.txt");
+    Ok(())
+}

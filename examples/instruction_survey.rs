@@ -1,0 +1,61 @@
+//! Instruction survey: the full Table V sweep with deviation analysis.
+//!
+//! ```bash
+//! cargo run --release --example instruction_survey
+//! ```
+//!
+//! Runs all ~100 Table V rows (independent + dependent variants), prints
+//! the mapping table, then analyses where the simulator's calibration
+//! deviates from the paper — the per-family error histogram a
+//! microarchitecture researcher would start from.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::microbench::{alu, MatchGrade};
+use ampere_ubench::report;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = AmpereConfig::a100();
+    let results = alu::run_table5(&cfg).map_err(anyhow::Error::msg)?;
+
+    println!("{}", report::table5(&results));
+
+    // Deviation analysis.
+    let mut off: Vec<_> = results
+        .iter()
+        .filter(|r| r.cycles_grade != MatchGrade::Exact)
+        .collect();
+    off.sort_by_key(|r| std::cmp::Reverse(r.measured.cpi));
+    println!("\nrows not exact ({} of {}):", off.len(), results.len());
+    for r in &off {
+        println!(
+            "  {:<18} measured {:<4} paper {:<8} [{}]",
+            r.name,
+            r.measured.cpi,
+            r.paper_cycles,
+            report::grade_str(r.cycles_grade)
+        );
+    }
+
+    // Dependent-vs-independent spread across the ISA.
+    println!("\ndependence penalty (dep − indep), chainable rows:");
+    let mut penalties: Vec<(String, i64)> = results
+        .iter()
+        .filter_map(|r| {
+            r.dep_cpi
+                .map(|d| (r.name.clone(), d as i64 - r.measured.cpi as i64))
+        })
+        .collect();
+    penalties.sort_by_key(|(_, p)| std::cmp::Reverse(*p));
+    for (name, p) in penalties.iter().take(12) {
+        println!("  {name:<18} +{p}");
+    }
+
+    let exact = results.iter().filter(|r| r.cycles_grade == MatchGrade::Exact).count();
+    let close = results.iter().filter(|r| r.cycles_grade == MatchGrade::Close).count();
+    println!(
+        "\ncalibration: {exact} exact, {close} close, {} off — {} rows total",
+        results.len() - exact - close,
+        results.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Memory-hierarchy survey: Table IV plus the working-set sweep the
+//! paper's §IV-B methodology implies.
+//!
+//! ```bash
+//! cargo run --release --example memory_hierarchy
+//! ```
+//!
+//! Chases pointers through working sets from 4 KiB to beyond L2 with
+//! each cache operator, printing the measured latency curve — the
+//! classic cache-hierarchy "staircase" (L1 plateau → L2 plateau → DRAM),
+//! which is exactly how microbenchmark papers locate capacity
+//! boundaries.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::microbench::memory::{run_table4, seed_chain};
+use ampere_ubench::ptx::parse_program;
+use ampere_ubench::report;
+use ampere_ubench::sim::Simulator;
+use ampere_ubench::translate::translate_program;
+
+const CHASE: usize = 16;
+const BASE: u64 = 0x10_0000;
+
+fn chase_latency(cfg: &AmpereConfig, cache_op: &str, span: u64) -> anyhow::Result<u64> {
+    // warm traversal then measured unrolled chase (see microbench::memory)
+    let mut body = String::new();
+    for i in 0..CHASE {
+        body.push_str(&format!(
+            "ld.global.{cache_op}.u64 %rd{}, [%rd{}];\n ",
+            21 + i,
+            20 + i
+        ));
+    }
+    let src = format!(
+        ".visible .entry sweep(.param .u64 arr) {{\n \
+         .reg .b64 %rd<64>; .reg .pred %p<4>;\n \
+         ld.param.u64 %rd20, [arr];\n \
+         mov.u64 %rd10, %rd20;\n mov.u64 %rd11, 0;\n \
+$Warm:\n \
+         ld.global.{cache_op}.u64 %rd10, [%rd10];\n \
+         add.u64 %rd11, %rd11, 128;\n \
+         setp.lt.u64 %p1, %rd11, {span};\n @%p1 bra $Warm;\n \
+         mov.u64 %rd60, %clock64;\n {body}mov.u64 %rd61, %clock64;\n ret;\n}}"
+    );
+    let prog = parse_program(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let tp = translate_program(&prog).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut sim = Simulator::new(cfg.clone());
+    sim.fuel = 2_000_000_000;
+    sim.trace = ampere_ubench::sass::TraceRecorder::disabled();
+    seed_chain(&mut sim, BASE, span, CHASE + 1);
+    let r = sim.run(&prog, &tp, &[BASE]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let c = &r.clock_reads;
+    Ok((c[c.len() - 1] - c[c.len() - 2] - 2) / CHASE as u64)
+}
+
+fn main() -> anyhow::Result<()> {
+    // Scaled caches so the sweep spans all three levels quickly.
+    let mut cfg = AmpereConfig::a100();
+    cfg.memory.l1_bytes = 32 * 1024;
+    cfg.memory.l2_bytes = 512 * 1024;
+
+    println!("== Table IV (scaled-cache config) ==");
+    let t4 = run_table4(&cfg).map_err(anyhow::Error::msg)?;
+    println!("{}", report::table4(&t4));
+
+    println!("== working-set sweep (warm, ld.global.ca) ==");
+    println!("{:>10}  {:>8}   level", "bytes", "cyc/load");
+    let mut span = 4 * 1024u64;
+    while span <= 2 * 1024 * 1024 {
+        let lat = chase_latency(&cfg, "ca", span)?;
+        let level = if span <= cfg.memory.l1_bytes as u64 {
+            "≤ L1"
+        } else if span <= cfg.memory.l2_bytes as u64 {
+            "≤ L2"
+        } else {
+            "DRAM"
+        };
+        let bar = "#".repeat((lat / 8) as usize);
+        println!("{span:>10}  {lat:>8}   {level:<5} {bar}");
+        span *= 2;
+    }
+
+    println!("\nthe staircase above is the emergent behaviour of the cache");
+    println!("model — capacities decide the plateaus, the config decides");
+    println!("the heights (33 / 200 / 290, paper Table IV).");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: measure one instruction the way the paper does.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the Fig.-1 microbenchmark for `add.u32`, runs it on the
+//! simulated A100, and prints the measured CPI, the clock delta, and the
+//! dynamic PTX→SASS mapping — the paper's §IV-A protocol end to end.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::microbench::registry;
+use ampere_ubench::microbench::{alu, run_measurement, INSTANCES};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = AmpereConfig::a100();
+
+    println!("simulated machine: A100-class SM, {} SMs", cfg.sm_count);
+    println!("protocol: CPI = floor((Δclock − 2) / {INSTANCES})\n");
+
+    for name in ["add.u32", "add.f64", "mad.lo.u32", "popc.b32", "min.f64"] {
+        let rows = registry::table5();
+        let row = rows.iter().find(|r| r.name == name).unwrap();
+
+        let indep = run_measurement(&cfg, &alu::kernel_for(row, false), INSTANCES, name, false)
+            .map_err(anyhow::Error::msg)?;
+        println!(
+            "{name:<12} CPI {:<3} (paper {:<5}) Δ={:<4} SASS: {}",
+            indep.cpi,
+            row.paper_cycles.display(),
+            indep.delta,
+            indep.mapping
+        );
+
+        if alu::can_chain(row) {
+            let dep = run_measurement(&cfg, &alu::kernel_for(row, true), INSTANCES, name, true)
+                .map_err(anyhow::Error::msg)?;
+            println!("{:<12} CPI {:<3} (dependent chain)", "", dep.cpi);
+        }
+    }
+
+    println!("\ngenerated kernel for add.u32 (cf. paper Fig. 1):\n");
+    let rows = registry::table5();
+    let row = rows.iter().find(|r| r.name == "add.u32").unwrap();
+    println!("{}", alu::kernel_for(row, false));
+    Ok(())
+}

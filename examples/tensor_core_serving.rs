@@ -1,0 +1,124 @@
+//! Tensor-core serving: batched WMMA requests through the PJRT runtime.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example tensor_core_serving
+//! ```
+//!
+//! The request-path demonstration of the three-layer architecture: the
+//! Rust coordinator accepts a stream of WMMA requests (dtype + fragment
+//! data), batches them per compiled artifact, executes on the XLA CPU
+//! client (the AOT-compiled Pallas kernel — python never runs), and
+//! reports per-dtype latency percentiles and throughput.
+
+use ampere_ubench::runtime::{Artifacts, HostTensor, Oracle};
+use ampere_ubench::tensor::{WmmaDtype, ALL_DTYPES};
+use std::time::Instant;
+
+struct Request {
+    dtype: WmmaDtype,
+    a: Vec<f64>,
+    b: Vec<f64>,
+    c: Vec<f64>,
+}
+
+fn synth_requests(n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let dtype = ALL_DTYPES[i % ALL_DTYPES.len()];
+            let (m, nn, k) = dtype.primary_shape();
+            let (m, nn, k) = (m as usize, nn as usize, k as usize);
+            let int = matches!(dtype, WmmaDtype::U8S32 | WmmaDtype::U4S32);
+            let gen = |len: usize, s: usize| -> Vec<f64> {
+                (0..len)
+                    .map(|j| {
+                        let v = ((i * 31 + j * 7 + s) % 13) as f64 - 6.0;
+                        if int {
+                            v.abs().min(15.0)
+                        } else {
+                            v / 4.0
+                        }
+                    })
+                    .collect()
+            };
+            Request { dtype, a: gen(m * k, 1), b: gen(k * nn, 2), c: gen(m * nn, 3) }
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Artifacts::discover(Artifacts::default_dir())?;
+    let mut oracle = Oracle::new(artifacts)?;
+    println!("PJRT platform: {}", oracle.platform());
+
+    let requests = synth_requests(256);
+    println!("serving {} WMMA requests across {} dtypes\n", requests.len(), ALL_DTYPES.len());
+
+    // Warm compile per dtype (AOT artifacts still JIT inside PJRT once).
+    for d in ALL_DTYPES {
+        let name = format!("wmma_{}", d.key());
+        let t = Instant::now();
+        oracle.executable(&name)?;
+        println!("  compiled {name:<16} in {:>7.1} ms", t.elapsed().as_secs_f64() * 1e3);
+    }
+
+    println!();
+    let mut lat_by_dtype: std::collections::HashMap<&str, Vec<f64>> = Default::default();
+    let started = Instant::now();
+    let mut checksum = 0f64;
+    for r in &requests {
+        let t = Instant::now();
+        let out = oracle.wmma_single(r.dtype, &r.a, &r.b, &r.c)?;
+        lat_by_dtype
+            .entry(r.dtype.key())
+            .or_default()
+            .push(t.elapsed().as_secs_f64() * 1e3);
+        checksum += out.iter().sum::<f64>();
+    }
+    let wall = started.elapsed().as_secs_f64();
+
+    println!("{:<12} {:>6} {:>9} {:>9} {:>9}", "dtype", "reqs", "p50 ms", "p99 ms", "max ms");
+    for d in ALL_DTYPES {
+        let mut l = lat_by_dtype.remove(d.key()).unwrap_or_default();
+        if l.is_empty() {
+            continue;
+        }
+        l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| l[((l.len() - 1) as f64 * p) as usize];
+        println!(
+            "{:<12} {:>6} {:>9.3} {:>9.3} {:>9.3}",
+            d.key(),
+            l.len(),
+            pct(0.50),
+            pct(0.99),
+            l.last().unwrap()
+        );
+    }
+    println!(
+        "\nthroughput: {:.0} req/s over {} requests ({wall:.2}s wall), checksum {checksum:.1}",
+        requests.len() as f64 / wall,
+        requests.len()
+    );
+
+    // Batched variant: the Fig.-5 chain artifact amortises dispatch.
+    println!("\nbatched (wmma_chain_f16_f16: 4 fragments × 4 dependent mmas per call):");
+    let meta = oracle.meta("wmma_chain_f16_f16").unwrap().clone();
+    let sizes: Vec<usize> = meta.args.iter().map(|a| a.shape.iter().product()).collect();
+    let mk = |len: usize| HostTensor::F32((0..len).map(|i| (i % 7) as f32 / 8.0).collect(), vec![]);
+    let inputs: Vec<HostTensor> = meta
+        .args
+        .iter()
+        .zip(&sizes)
+        .map(|(a, len)| match mk(*len) {
+            HostTensor::F32(v, _) => HostTensor::F32(v, a.shape.clone()),
+            other => other,
+        })
+        .collect();
+    let t = Instant::now();
+    let calls = 64;
+    for _ in 0..calls {
+        oracle.execute("wmma_chain_f16_f16", &inputs)?;
+    }
+    let per = t.elapsed().as_secs_f64() * 1e3 / calls as f64;
+    println!("  {per:.3} ms/call = {:.3} ms per mma (16 mmas/call)", per / 16.0);
+    Ok(())
+}

@@ -1,0 +1,78 @@
+"""AOT export: lower every L2 model variant to HLO *text* artifacts.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and /opt/xla-example/README.md.
+
+Run via `make artifacts` (no-op when inputs are unchanged):
+    cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+
+Writes `model.hlo.txt` (the primary artifact: the f16_f16 Fig. 5 chain)
+plus one `wmma_*.hlo.txt` per Table III variant, and a `manifest.json`
+describing shapes/dtypes for the rust loader.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+from .model import variant_specs
+
+PRIMARY = "wmma_chain_f16_f16"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", required=True,
+                    help="path of the primary artifact (model.hlo.txt); "
+                         "siblings are written next to it")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, example_args in variant_specs():
+        text = lower_variant(fn, example_args)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)}
+                for a in example_args
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+        if name == PRIMARY:
+            with open(args.out, "w") as f:
+                f.write(text)
+            print(f"wrote {args.out} (primary = {name})")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest)} variants)")
+
+
+if __name__ == "__main__":
+    main()

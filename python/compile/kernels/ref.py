@@ -1,0 +1,128 @@
+"""Pure-jnp correctness oracle for the WMMA tile-MMA kernels.
+
+Every Pallas kernel in `wmma.py` is checked against these references by
+pytest (`python/tests/`).  The references implement the *semantics* of the
+Ampere WMMA instruction D = A*B + C for each (input dtype, accumulator
+dtype) pair of the paper's Table III, including the precision behaviour:
+
+  fp16 x fp16 -> fp16 | fp32      (HMMA.16816.F16 / .F32)
+  bf16 x bf16 -> fp32             (HMMA.16816.F32.BF16)
+  tf32 x tf32 -> fp32             (HMMA.1684.F32.TF32; 10-bit mantissa)
+  fp64 x fp64 -> fp64             (DMMA.884)
+  u8   x u8   -> s32              (IMMA.16816.U8.U8)
+  u4   x u4   -> s32              (IMMA.8832.U4.U4; values in [0, 15])
+"""
+
+import jax.numpy as jnp
+
+# Table III: every WMMA dtype config the Ampere ISA supports, keyed by the
+# name used throughout the build (aot.py artifact names, rust runtime ids).
+#   in_dtype:  dtype the A/B fragments are held in on-chip
+#   acc_dtype: accumulator (C/D fragment) dtype
+#   io_dtype:  dtype at the HLO interface (rust feeds plain f32/f64/i32
+#              buffers; precision conversion happens *inside* the graph,
+#              mirroring the fragment-load step of the WMMA API)
+#   shape:     the paper's primary (M, N, K) PTX shape for the config
+#   sass_tile: the SASS-instruction tile the hardware iterates with, i.e.
+#              the Pallas BlockSpec tile (see DESIGN.md #Hardware-Adaptation)
+WMMA_CONFIGS = {
+    "f16_f16": dict(in_dtype="float16", acc_dtype="float16", io_dtype="float32",
+                    shape=(16, 16, 16), sass_tile=(16, 8, 16), sass_name="HMMA.16816.F16"),
+    "f16_f32": dict(in_dtype="float16", acc_dtype="float32", io_dtype="float32",
+                    shape=(16, 16, 16), sass_tile=(16, 8, 16), sass_name="HMMA.16816.F32"),
+    "bf16_f32": dict(in_dtype="bfloat16", acc_dtype="float32", io_dtype="float32",
+                     shape=(16, 16, 16), sass_tile=(16, 8, 16), sass_name="HMMA.16816.F32.BF16"),
+    "tf32_f32": dict(in_dtype="tf32", acc_dtype="float32", io_dtype="float32",
+                     shape=(16, 16, 8), sass_tile=(16, 8, 4), sass_name="HMMA.1684.F32.TF32"),
+    "f64_f64": dict(in_dtype="float64", acc_dtype="float64", io_dtype="float64",
+                    shape=(8, 8, 4), sass_tile=(8, 8, 4), sass_name="DMMA.884"),
+    "u8_s32": dict(in_dtype="uint8", acc_dtype="int32", io_dtype="int32",
+                   shape=(16, 16, 16), sass_tile=(16, 8, 16), sass_name="IMMA.16816.U8.U8"),
+    "u4_s32": dict(in_dtype="uint4", acc_dtype="int32", io_dtype="int32",
+                   shape=(8, 8, 32), sass_tile=(8, 8, 32), sass_name="IMMA.8832.U4.U4"),
+}
+
+# All PTX-level shapes each config supports (Table III col 1).  The paper
+# found latency is shape-independent within a dtype on Ampere; the tests
+# sweep these to assert the kernels are correct for every one.
+WMMA_PTX_SHAPES = {
+    "f16_f16": [(16, 16, 16), (8, 32, 16), (32, 8, 16)],
+    "f16_f32": [(16, 16, 16), (8, 32, 16), (32, 8, 16)],
+    "bf16_f32": [(16, 16, 16), (8, 32, 16), (32, 8, 16)],
+    "tf32_f32": [(16, 16, 8)],
+    "f64_f64": [(8, 8, 4)],
+    "u8_s32": [(16, 16, 16), (32, 8, 16), (8, 32, 16)],
+    "u4_s32": [(8, 8, 32)],
+}
+
+
+def round_to_tf32(x):
+    """TensorFloat-32: f32 with the mantissa truncated to 10 bits.
+
+    The tensor core reads f32 operands but only feeds the top 10 mantissa
+    bits to the datapath.  Truncation (zeroing the low 13 bits) matches the
+    zeroed low bits observable through the WMMA API.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    bits = jnp.bitwise_and(x.view(jnp.uint32), jnp.uint32(0xFFFFE000))
+    return bits.view(jnp.float32)
+
+
+def quantize_u4(x):
+    """Clamp integer inputs into the u4 domain [0, 15] (sub-byte fragments
+    are carried unpacked, one nibble per int32 lane, at the HLO interface)."""
+    return jnp.clip(jnp.asarray(x, jnp.int32), 0, 15)
+
+
+def cast_in(x, in_dtype):
+    """Fragment-load precision conversion: io buffer -> fragment dtype."""
+    if in_dtype == "tf32":
+        return round_to_tf32(x)
+    if in_dtype == "uint4":
+        return quantize_u4(x)
+    return jnp.asarray(x).astype(in_dtype)
+
+
+def acc_compute_dtype(cfg):
+    """Dtype products are accumulated in on the simulated datapath."""
+    if cfg["in_dtype"] in ("uint4", "uint8"):
+        return jnp.int32
+    if cfg["in_dtype"] == "float64":
+        return jnp.float64
+    return jnp.float32  # fp16/bf16/tf32 all accumulate in fp32 internally
+
+
+def ref_mma(a, b, c, config):
+    """Reference D = A*B + C with the precision semantics of `config`.
+
+    a: (M, K), b: (K, N), c: (M, N) in the config's io dtype.
+    The multiply runs in the input precision; products are accumulated in
+    fp32 (resp. i32/f64) internally — Ampere TCs accumulate fp16 inputs in
+    full precision, then round to the accumulator dtype.
+    """
+    cfg = WMMA_CONFIGS[config] if isinstance(config, str) else config
+    in_dtype, acc_dtype = cfg["in_dtype"], cfg["acc_dtype"]
+    compute = acc_compute_dtype(cfg)
+    a = cast_in(a, in_dtype)
+    b = cast_in(b, in_dtype)
+    d = jnp.matmul(a, b, preferred_element_type=compute)
+    # The C fragment is held in the accumulator dtype; the add runs in the
+    # internal (full) precision and D is rounded once at the end.
+    c = jnp.asarray(c).astype(acc_dtype).astype(compute)
+    return (d + c).astype(acc_dtype)
+
+
+def ref_mma_chain(a, b, c, config, iters):
+    """Reference for the Fig. 5 microbenchmark loop:
+    c_{i+1} = A*B + c_i  repeated `iters` times (same A, B each step)."""
+    d = jnp.asarray(c)
+    for _ in range(iters):
+        d = ref_mma(a, b, d, config)
+    return d
+
+
+def ref_io(d, config):
+    """Convert a fragment-dtype result back to the io dtype used at the
+    HLO boundary (what the rust runtime sees)."""
+    cfg = WMMA_CONFIGS[config] if isinstance(config, str) else config
+    return jnp.asarray(d).astype(cfg["io_dtype"])

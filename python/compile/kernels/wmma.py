@@ -1,0 +1,181 @@
+"""L1 — Pallas WMMA tile-MMA kernels.
+
+The paper's tensor-core hot-spot, D = A*B + C, expressed as a Pallas
+kernel whose grid iterates exactly the way the Ampere hardware decomposes
+the WMMA PTX instruction into SASS instructions (Table III):
+
+  PTX wmma.mma.sync m16n16k16.f16  ->  2x HMMA.16816  (N split 16 -> 2x8)
+  PTX wmma.mma.sync m16n16k8.tf32  ->  4x HMMA.1684   (N split x2, K split x2)
+  PTX wmma.mma.sync m8n8k4.f64     ->  1x DMMA.884
+  PTX wmma.mma.sync m8n8k32.u4     ->  1x IMMA.8832
+
+Each grid step of the kernel is one SASS-instruction-equivalent tile, so
+the same decomposition arithmetic drives the Rust tensor-core timing model
+(rust/src/tensor/) and this kernel — the Pallas grid *is* the paper's
+SASS-instruction count.
+
+Hardware adaptation (DESIGN.md #Hardware-Adaptation): warp fragment
+registers become VMEM blocks via BlockSpec; MOVM transposes become index
+maps; the MXU analogue accumulates in fp32 via preferred_element_type.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated on the interpret path and TPU
+performance is estimated statically (EXPERIMENTS.md #Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import WMMA_CONFIGS, acc_compute_dtype, cast_in
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _mma_kernel(a_ref, b_ref, c_ref, o_ref, *, nsteps_k, acc_dtype, compute_dtype):
+    """One SASS-tile MMA step: o = a @ b (+ c on the first k-step).
+
+    Grid layout is (M/tm, N/tn, K/tk); the k axis is innermost so the
+    accumulator block stays resident (the fragment registers of the WMMA
+    API; VMEM in the TPU mapping).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...].astype(compute_dtype)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    partial = jnp.matmul(a, b, preferred_element_type=compute_dtype)
+    o_ref[...] += partial
+
+    @pl.when(k == nsteps_k - 1)
+    def _done():
+        # Round the full-precision accumulator to the fragment dtype once,
+        # at the end — matching the TC's internal-accumulate-then-round.
+        o_ref[...] = o_ref[...].astype(acc_dtype).astype(compute_dtype)
+
+
+def sass_grid(shape, sass_tile):
+    """SASS decomposition of a PTX WMMA shape: grid dims and instruction
+    count.  This arithmetic is mirrored verbatim in rust/src/tensor/."""
+    (m, n, k), (tm, tn, tk) = shape, sass_tile
+    assert m % tm == 0 and n % tn == 0 and k % tk == 0, (shape, sass_tile)
+    return (m // tm, n // tn, k // tk)
+
+
+def effective_tile(config, shape=None):
+    """SASS tile adapted to the PTX shape.
+
+    One SASS MMA instruction always retires the same number of MACs for a
+    dtype (e.g. 16*8*16 = 2048 for HMMA.16816) but the hardware re-shapes
+    the tile for the wide/tall PTX shapes: m8n32k16 decomposes as two
+    8x16x16 tiles, m32n8k16 as two 16x8x16 tiles.  This is why the paper
+    finds latency *shape-independent within a dtype* on Ampere — the SASS
+    instruction count never changes.
+    """
+    cfg = WMMA_CONFIGS[config]
+    m, n, k = shape or cfg["shape"]
+    tm, tn, tk = cfg["sass_tile"]
+    macs = tm * tn * tk
+    tm = min(m, tm)
+    assert macs % (tm * tk) == 0, (config, shape)
+    tn = min(n, macs // (tm * tk))
+    return (tm, tn, tk)
+
+
+def sass_instruction_count(config, shape=None):
+    """Number of SASS MMA instructions one PTX WMMA instruction becomes —
+    Table III's '2*HMMA...' / '4*HMMA...' / '1*DMMA' counts."""
+    cfg = WMMA_CONFIGS[config]
+    mnk = shape or cfg["shape"]
+    gm, gn, gk = sass_grid(mnk, effective_tile(config, mnk))
+    return gm * gn * gk
+
+
+def pallas_mma(a, b, c, config, shape=None, interpret=True):
+    """D = A*B + C as a Pallas kernel with one grid step per SASS tile.
+
+    a: (M, K), b: (K, N), c: (M, N) in the config's *io* dtype; returns D
+    in the io dtype (precision conversion happens inside, mirroring
+    wmma::load_matrix_sync / store_matrix_sync).
+    """
+    cfg = WMMA_CONFIGS[config]
+    mnk = shape or cfg["shape"]
+    m, n, k = mnk
+    tm, tn, tk = effective_tile(config, mnk)
+    grid = sass_grid(mnk, (tm, tn, tk))
+    compute_dtype = acc_compute_dtype(cfg)
+
+    a = cast_in(a, cfg["in_dtype"])
+    b = cast_in(b, cfg["in_dtype"])
+    c = jnp.asarray(c).astype(cfg["acc_dtype"])
+
+    kern = functools.partial(
+        _mma_kernel,
+        nsteps_k=grid[2],
+        acc_dtype=jnp.dtype(cfg["acc_dtype"]) if cfg["acc_dtype"] != "int32" else jnp.int32,
+        compute_dtype=compute_dtype,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),  # A fragment
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),  # B fragment
+            pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),   # C fragment
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), compute_dtype),
+        interpret=interpret,
+    )(a, b, c)
+    return out.astype(cfg["acc_dtype"]).astype(cfg["io_dtype"])
+
+
+def pallas_mma_chain(a, b, c, config, iters, shape=None, interpret=True):
+    """Fig. 5's Part-3 loop: iterate c <- A*B + c `iters` times through the
+    Pallas kernel (same A and B each step, like the microbenchmark)."""
+    d = c
+    for _ in range(iters):
+        d = pallas_mma(a, b, d, config, shape=shape, interpret=interpret)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Static TPU performance estimate (interpret mode has no TPU wall-clock).
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(config, shape=None):
+    """VMEM footprint of one kernel invocation's resident blocks:
+    A tile + B tile + accumulator tile, in fragment precision."""
+    cfg = WMMA_CONFIGS[config]
+    m, n, k = shape or cfg["shape"]
+    tm, tn, tk = cfg["sass_tile"]
+    in_bits = {"float16": 16, "bfloat16": 16, "tf32": 32, "float64": 64,
+               "uint8": 8, "uint4": 4}[cfg["in_dtype"]]
+    acc_bits = {"float16": 16, "float32": 32, "float64": 64, "int32": 32}[cfg["acc_dtype"]]
+    return (tm * tk * in_bits + tk * tn * in_bits) // 8 + (tm * tn * acc_bits) // 8
+
+
+def mxu_utilization(config, shape=None):
+    """Useful-MAC fraction of the issued SASS tiles: MACs the PTX shape
+    needs / (SASS instruction count x MACs one SASS tile retires).  The
+    structural stand-in for the paper's measured/theoretical GB/s ratio —
+    1.0 for every supported shape (no padding waste), <1.0 if a shape had
+    to be padded up to tile boundaries."""
+    cfg = WMMA_CONFIGS[config]
+    m, n, k = shape or cfg["shape"]
+    tm, tn, tk = cfg["sass_tile"]
+    tile_macs = tm * tn * tk
+
+    def ceil_div(a, b):
+        return -(-a // b)
+
+    etm, etn, etk = (min(m, tm), None, tk)
+    # padded instruction count uses the same reshaping rule as effective_tile
+    etn = tile_macs // (etm * etk)
+    issued = ceil_div(m, etm) * ceil_div(n, etn) * ceil_div(k, etk)
+    return (m * n * k) / (issued * tile_macs)

@@ -1,0 +1,81 @@
+"""L2 — the WMMA microbenchmark compute graph (paper Fig. 5) in JAX.
+
+Mirrors the structure of the paper's CUDA tensor-core microbenchmark:
+
+  Part 1/2: fragments are declared and loaded        -> cast_in inside kernel
+  Part 3:   4 independent fragment chains, each runs -> `wmma_microbench`
+            iters dependent mma_sync ops
+  Part 4:   store accumulators                       -> function outputs
+
+Each variant is lowered ONCE by aot.py to HLO text; the Rust coordinator
+(rust/src/runtime) loads + executes the compiled artifact on its request
+path, so the simulator's tensor-core numerics are validated against real
+XLA execution of the Pallas kernel — python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import WMMA_CONFIGS
+from .kernels.wmma import pallas_mma, pallas_mma_chain
+
+jax.config.update("jax_enable_x64", True)
+
+# Fig. 5 uses 4 fragments ("we run 4 TC instructions, 1 per TC") and loops.
+NUM_FRAGMENTS = 4
+DEFAULT_ITERS = 4
+
+
+def wmma_single(a, b, c, *, config):
+    """One WMMA op: D = A*B + C through the Pallas tile kernel."""
+    return (pallas_mma(a, b, c, config),)
+
+
+def wmma_microbench(a4, b4, c4, *, config, iters=DEFAULT_ITERS):
+    """The Fig. 5 kernel: 4 independent fragment chains (one per TC in an
+    SM), each a dependent chain of `iters` mma ops.
+
+    a4: (4, M, K), b4: (4, K, N), c4: (4, M, N) — stacked fragments.
+    Returns the 4 accumulators, stacked.
+    """
+    outs = [
+        pallas_mma_chain(a4[i], b4[i], c4[i], config, iters)
+        for i in range(NUM_FRAGMENTS)
+    ]
+    return (jnp.stack(outs),)
+
+
+def _io_dtype(cfg):
+    return jnp.dtype(cfg["io_dtype"])
+
+
+def variant_specs():
+    """(name, fn, example_args) for every artifact aot.py must produce.
+
+    Names match what rust/src/runtime/artifacts.rs expects:
+      wmma_<config>          — single mma, primary PTX shape
+      wmma_chain_<config>    — the full Fig. 5 microbenchmark graph
+    """
+    import functools
+
+    specs = []
+    for name, cfg in WMMA_CONFIGS.items():
+        m, n, k = cfg["shape"]
+        dt = _io_dtype(cfg)
+        single = functools.partial(wmma_single, config=name)
+        specs.append((
+            f"wmma_{name}",
+            single,
+            (jax.ShapeDtypeStruct((m, k), dt),
+             jax.ShapeDtypeStruct((k, n), dt),
+             jax.ShapeDtypeStruct((m, n), dt)),
+        ))
+        chain = functools.partial(wmma_microbench, config=name, iters=DEFAULT_ITERS)
+        specs.append((
+            f"wmma_chain_{name}",
+            chain,
+            (jax.ShapeDtypeStruct((NUM_FRAGMENTS, m, k), dt),
+             jax.ShapeDtypeStruct((NUM_FRAGMENTS, k, n), dt),
+             jax.ShapeDtypeStruct((NUM_FRAGMENTS, m, n), dt)),
+        ))
+    return specs

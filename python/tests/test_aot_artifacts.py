@@ -1,0 +1,32 @@
+"""Artifact integrity: the AOT outputs the rust runtime consumes."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts`")
+def test_manifest_and_files_consistent():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert len(manifest) == 14  # 7 dtypes x {single, chain}
+    for name, meta in manifest.items():
+        path = os.path.join(ART, meta["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        assert len(meta["args"]) == 3, name
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts`")
+def test_artifacts_are_pure_hlo_text():
+    # The interchange gotcha: text, never serialized protos (which the
+    # xla crate's 0.5.1 extension rejects).
+    for fname in os.listdir(ART):
+        if fname.endswith(".hlo.txt"):
+            head = open(os.path.join(ART, fname), "rb").read(64)
+            assert head.startswith(b"HloModule"), fname

@@ -1,0 +1,180 @@
+//! Campaign orchestrator: runs the full paper evaluation as concurrent
+//! benchmark jobs and aggregates the report.
+//!
+//! The simulator is CPU-bound and single-threaded per kernel, so each
+//! job runs on its own OS thread (`std::thread::scope`); jobs are
+//! independent (each owns a fresh `Simulator`), making the campaign
+//! embarrassingly parallel.  Results are collected in deterministic
+//! order regardless of completion order — the report never depends on
+//! scheduling.
+
+use crate::config::AmpereConfig;
+use crate::microbench::{alu, insights, memory, wmma};
+use crate::report;
+use crate::util::json::Value;
+
+/// Everything the full campaign produces.
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    pub table1: Vec<alu::Amortization>,
+    pub table2: Vec<alu::DepIndep>,
+    pub table3: Vec<wmma::WmmaResult>,
+    pub table4: Vec<memory::MemResult>,
+    pub table5: Vec<alu::RowResult>,
+    pub fig4: insights::Fig4,
+    pub insight1: insights::Insight1,
+    pub insight2: Vec<insights::SignPair>,
+    pub insight3: Vec<insights::Insight3>,
+}
+
+impl CampaignResult {
+    /// Shape-match summary for EXPERIMENTS.md.
+    pub fn summary(&self) -> CampaignSummary {
+        use crate::microbench::MatchGrade;
+        let t5_exact = self
+            .table5
+            .iter()
+            .filter(|r| r.cycles_grade == MatchGrade::Exact)
+            .count();
+        let t5_close = self
+            .table5
+            .iter()
+            .filter(|r| r.cycles_grade == MatchGrade::Close)
+            .count();
+        CampaignSummary {
+            table1_exact: self.table1.iter().all(|a| a.cpi == a.paper_cpi),
+            table2_exact: self
+                .table2
+                .iter()
+                .all(|d| d.dep_cpi == d.paper_dep && d.indep_cpi == d.paper_indep),
+            table3_exact: self.table3.iter().all(|r| r.cycles == r.paper_cycles),
+            table4_max_rel_err: self
+                .table4
+                .iter()
+                .map(|r| (r.cpi as f64 - r.paper as f64).abs() / r.paper as f64)
+                .fold(0.0, f64::max),
+            table5_rows: self.table5.len(),
+            table5_exact: t5_exact,
+            table5_close: t5_close,
+            fig4_exact: self.fig4.cpi_32bit == 13 && self.fig4.cpi_64bit == 2,
+        }
+    }
+
+    /// The full printed report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&report::table1(&self.table1));
+        out.push_str(&report::table2(&self.table2));
+        out.push_str(&report::table3(&self.table3));
+        out.push_str(&report::table4(&self.table4));
+        out.push_str(&report::table5(&self.table5));
+        out.push_str(&report::fig4(&self.fig4));
+        out.push_str(&report::insights(&self.insight1, &self.insight2, &self.insight3));
+        out
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSummary {
+    pub table1_exact: bool,
+    pub table2_exact: bool,
+    pub table3_exact: bool,
+    pub table4_max_rel_err: f64,
+    pub table5_rows: usize,
+    pub table5_exact: usize,
+    pub table5_close: usize,
+    pub fig4_exact: bool,
+}
+
+impl CampaignSummary {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("table1_exact", self.table1_exact)
+            .set("table2_exact", self.table2_exact)
+            .set("table3_exact", self.table3_exact)
+            .set("table4_max_rel_err", self.table4_max_rel_err)
+            .set("table5_rows", self.table5_rows)
+            .set("table5_exact", self.table5_exact)
+            .set("table5_close", self.table5_close)
+            .set("fig4_exact", self.fig4_exact)
+    }
+}
+
+/// Run the full campaign, one OS thread per experiment.
+pub fn run_campaign_blocking(cfg: AmpereConfig) -> Result<CampaignResult, String> {
+    std::thread::scope(|s| {
+        let t1 = s.spawn(|| alu::run_table1(&cfg));
+        let t2 = s.spawn(|| alu::run_table2(&cfg));
+        let t3 = s.spawn(|| wmma::run_table3(&cfg));
+        let t4 = s.spawn(|| memory::run_table4(&cfg));
+        let t5 = s.spawn(|| alu::run_table5(&cfg));
+        let f4 = s.spawn(|| insights::fig4(&cfg));
+        let i1 = s.spawn(|| insights::insight1(&cfg));
+        let i2 = s.spawn(|| insights::insight2(&cfg));
+        let i3 = s.spawn(|| insights::insight3(&cfg));
+
+        fn join<T>(
+            name: &str,
+            h: std::thread::ScopedJoinHandle<'_, Result<T, String>>,
+        ) -> Result<T, String> {
+            h.join().map_err(|_| format!("{name} panicked"))?
+        }
+
+        Ok(CampaignResult {
+            table1: join("table1", t1)?,
+            table2: join("table2", t2)?,
+            table3: join("table3", t3)?,
+            table4: join("table4", t4)?,
+            table5: join("table5", t5)?,
+            fig4: join("fig4", f4)?,
+            insight1: join("insight1", i1)?,
+            insight2: join("insight2", i2)?,
+            insight3: join("insight3", i3)?,
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> AmpereConfig {
+        // Scaled-down caches keep the memory benches fast in CI.
+        let mut c = AmpereConfig::a100();
+        c.memory.l2_bytes = 512 * 1024;
+        c.memory.l1_bytes = 32 * 1024;
+        c
+    }
+
+    #[test]
+    fn full_campaign_shape_holds() {
+        let r = run_campaign_blocking(test_cfg()).unwrap();
+        let s = r.summary();
+        assert!(s.table1_exact, "Table I must be exact");
+        assert!(s.table2_exact, "Table II must be exact");
+        assert!(s.table3_exact, "Table III must be exact");
+        assert!(s.table4_max_rel_err < 0.06, "Table IV err {}", s.table4_max_rel_err);
+        assert!(s.fig4_exact, "Fig. 4 must be exact");
+        assert!(
+            (s.table5_exact + s.table5_close) * 5 >= s.table5_rows * 4,
+            "Table V: {} exact + {} close of {}",
+            s.table5_exact,
+            s.table5_close,
+            s.table5_rows
+        );
+        let rendered = r.render();
+        assert!(rendered.contains("Table V"));
+        assert!(rendered.contains("HMMA.16816.F16"));
+    }
+
+    #[test]
+    fn campaign_is_deterministic() {
+        let a = run_campaign_blocking(test_cfg()).unwrap();
+        let b = run_campaign_blocking(test_cfg()).unwrap();
+        assert_eq!(a.summary(), b.summary());
+        assert_eq!(a.table5.len(), b.table5.len());
+        for (x, y) in a.table5.iter().zip(&b.table5) {
+            assert_eq!(x.measured.cpi, y.measured.cpi, "{}", x.name);
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! # ampere-ubench
+//!
+//! Reproduction of *"Demystifying the Nvidia Ampere Architecture through
+//! Microbenchmarking and Instruction-level Analysis"* (Abdelkhalik et al.,
+//! CS.AR 2022) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper measures, on a physical A100: per-instruction clock-cycle
+//! latencies for the PTX ISA and their SASS translations (Tables I, II, V),
+//! memory access latencies via pointer chasing (Table IV), and tensor-core
+//! WMMA latency/throughput per data type (Table III).  We have no GPU, so
+//! per the substitution rule every hardware dependence is replaced by a
+//! from-scratch software substrate (see `DESIGN.md` §Substitutions):
+//!
+//! * [`ptx`] — PTX ISA front-end: lexer, parser, AST, kernel builder.
+//! * [`sass`] — SASS ISA: opcodes, pipes, the per-opcode timing table.
+//! * [`translate`] — the context-sensitive PTX→SASS translating assembler
+//!   (the observable behaviour of `ptxas` that the paper characterises).
+//! * [`sim`] — the cycle-level Ampere SM model: in-order issue, per-pipe
+//!   occupancy/latency, scoreboard, clock registers, pipe-drain semantics.
+//! * [`memory`] — global/L2/L1/shared memory hierarchy with `.cv/.cg/.ca`
+//!   cache-operator semantics (Table IV's latencies *emerge* from hits).
+//! * [`tensor`] — tensor-core model: WMMA shape→SASS decomposition, MOVM
+//!   layout rules, latency & throughput (Table III).
+//! * [`trace`] — dynamic SASS trace capture (the PPT-GPU tool analogue).
+//! * [`microbench`] — the paper's actual contribution: the microbenchmark
+//!   generators + measurement protocol.
+//! * [`harness`] — async campaign orchestrator (tokio) running the full
+//!   evaluation; [`report`] renders the paper's tables.
+//! * [`runtime`] — PJRT client loading the AOT JAX/Pallas artifacts; the
+//!   WMMA numerics oracle on the request path (python is build-time only).
+
+pub mod config;
+pub mod harness;
+pub mod memory;
+pub mod microbench;
+pub mod ptx;
+pub mod report;
+pub mod runtime;
+pub mod sass;
+pub mod sim;
+pub mod tensor;
+pub mod trace;
+pub mod translate;
+pub mod util;
+
+pub use config::AmpereConfig;

@@ -1,0 +1,209 @@
+//! `repro` — the L3 coordinator CLI.
+//!
+//! Regenerates every table and figure of the paper against the simulated
+//! A100 (see DESIGN.md §6 for the experiment index):
+//!
+//! ```text
+//! repro campaign            # everything (Tables I–V, Fig. 4, insights)
+//! repro table1 … table5     # one experiment
+//! repro fig4 | fig6-trace | insights | movm
+//! repro validate-oracle     # sim TC numerics vs PJRT/Pallas artifacts
+//! repro show-kernel add.u32 # print a generated microbenchmark kernel
+//!
+//! flags: --small (scaled caches), --json, --dependent, --faithful
+//! ```
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::microbench::{alu, insights, memory, registry, wmma};
+use ampere_ubench::tensor::{movm_plan, ALL_DTYPES};
+use ampere_ubench::util::json::{to_string_pretty, Value};
+use ampere_ubench::{harness, report, runtime};
+
+const USAGE: &str = "\
+repro — 'Demystifying the Nvidia Ampere Architecture' on a simulated A100
+
+USAGE: repro [--small] [--json] <command> [args]
+
+COMMANDS:
+  campaign              run the complete evaluation (all tables + figures)
+  table1                Table I: CPI vs number of instructions
+  table2                Table II: dependent vs independent CPI
+  table3                Table III: tensor-core latency and throughput
+  table4 [--faithful]   Table IV: memory latencies (pointer chasing)
+  table5                Table V: full PTX→SASS mapping + cycles sweep
+  fig4                  Fig. 4: 32- vs 64-bit clock registers
+  fig6-trace            Fig. 6: dynamic SASS of one TC instruction
+  insights              Insights 1–3 (pipes, signedness, init style)
+  movm                  MOVM layout rules (§V-C)
+  validate-oracle       sim TC numerics vs the PJRT/Pallas artifacts
+  show-kernel <name> [--dependent]
+                        print a generated microbenchmark kernel
+";
+
+struct Args {
+    small: bool,
+    json: bool,
+    faithful: bool,
+    dependent: bool,
+    cmd: String,
+    rest: Vec<String>,
+}
+
+fn parse_args() -> Args {
+    let mut a = Args {
+        small: false,
+        json: false,
+        faithful: false,
+        dependent: false,
+        cmd: String::new(),
+        rest: Vec::new(),
+    };
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--small" => a.small = true,
+            "--json" => a.json = true,
+            "--faithful" => a.faithful = true,
+            "--dependent" => a.dependent = true,
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            other if a.cmd.is_empty() => a.cmd = other.to_string(),
+            other => a.rest.push(other.to_string()),
+        }
+    }
+    a
+}
+
+fn config(small: bool) -> AmpereConfig {
+    let mut c = AmpereConfig::a100();
+    if small {
+        c.memory.l2_bytes = 512 * 1024;
+        c.memory.l1_bytes = 32 * 1024;
+    }
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = parse_args();
+    let cfg = config(args.small);
+
+    match args.cmd.as_str() {
+        "campaign" => {
+            let r = harness::run_campaign_blocking(cfg).map_err(anyhow::Error::msg)?;
+            println!("{}", r.render());
+            println!("summary: {}", to_string_pretty(&r.summary().to_json()));
+        }
+        "table1" => {
+            let t = alu::run_table1(&cfg).map_err(anyhow::Error::msg)?;
+            println!("{}", report::table1(&t));
+        }
+        "table2" => {
+            let t = alu::run_table2(&cfg).map_err(anyhow::Error::msg)?;
+            println!("{}", report::table2(&t));
+        }
+        "table3" => {
+            let t = wmma::run_table3(&cfg).map_err(anyhow::Error::msg)?;
+            println!("{}", report::table3(&t));
+        }
+        "table4" => {
+            if args.faithful {
+                let span = cfg.memory.l2_bytes as u64 + cfg.memory.l2_bytes as u64 / 4;
+                let g = memory::run_global_faithful(&cfg, span).map_err(anyhow::Error::msg)?;
+                println!("faithful Fig. 2 global chase: {} cycles/load (paper 290)", g.cpi);
+            }
+            let t = memory::run_table4(&cfg).map_err(anyhow::Error::msg)?;
+            println!("{}", report::table4(&t));
+        }
+        "table5" => {
+            let t = alu::run_table5(&cfg).map_err(anyhow::Error::msg)?;
+            if args.json {
+                let arr: Vec<Value> = t
+                    .iter()
+                    .map(|r| {
+                        Value::obj()
+                            .set("name", r.name.as_str())
+                            .set("cpi", r.measured.cpi)
+                            .set("paper", r.paper_cycles.as_str())
+                            .set("sass", r.measured.mapping.as_str())
+                            .set("paper_sass", r.paper_sass.as_str())
+                            .set("grade", report::grade_str(r.cycles_grade))
+                    })
+                    .collect();
+                println!("{}", to_string_pretty(&Value::Arr(arr)));
+            } else {
+                println!("{}", report::table5(&t));
+            }
+        }
+        "fig4" => {
+            let f = insights::fig4(&cfg).map_err(anyhow::Error::msg)?;
+            println!("{}", report::fig4(&f));
+            println!("32-bit dynamic SASS: {:?}", f.sass_32bit);
+        }
+        "fig6-trace" => {
+            let t = wmma::fig6_trace(&cfg).map_err(anyhow::Error::msg)?;
+            println!("dynamic SASS of one TC instruction (paper Fig. 6):");
+            for m in t {
+                println!("  {m}");
+            }
+        }
+        "insights" => {
+            let i1 = insights::insight1(&cfg).map_err(anyhow::Error::msg)?;
+            let i2 = insights::insight2(&cfg).map_err(anyhow::Error::msg)?;
+            let i3 = insights::insight3(&cfg).map_err(anyhow::Error::msg)?;
+            println!("{}", report::insights(&i1, &i2, &i3));
+        }
+        "movm" => {
+            println!("MOVM.16.MT88 layout rules (§V-C):");
+            for (a, b) in [(true, true), (false, false), (true, false), (false, true)] {
+                let p = movm_plan(a, b);
+                println!(
+                    "  A {} × B {} → A:{} B:{} C-in:{} C-out:{} ({} MOVM)",
+                    if a { "row" } else { "col" },
+                    if b { "row" } else { "col" },
+                    p.transpose_a,
+                    p.transpose_b,
+                    p.transpose_c_in,
+                    p.transpose_c_out,
+                    p.movm_count()
+                );
+            }
+        }
+        "validate-oracle" => {
+            let mut oracle = runtime::Oracle::from_default_dir()?;
+            println!("PJRT platform: {}", oracle.platform());
+            for d in ALL_DTYPES {
+                let err = runtime::validate_wmma_against_sim(&mut oracle, d)?;
+                let tol = match d {
+                    ampere_ubench::tensor::WmmaDtype::F16F16 => 0.05,
+                    _ => 1e-3,
+                };
+                let ok = if err <= tol { "OK" } else { "MISMATCH" };
+                println!("  {:<10} max|sim − oracle| = {err:.3e}  {ok}", d.key());
+                if err > tol {
+                    anyhow::bail!("{} numerics mismatch: {err}", d.key());
+                }
+            }
+            println!("all WMMA dtypes validated against the Pallas/XLA oracle");
+        }
+        "show-kernel" => {
+            let name = args
+                .rest
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("usage: repro show-kernel <instr>"))?;
+            let rows = registry::table5();
+            let row = rows
+                .iter()
+                .find(|r| r.name == *name)
+                .ok_or_else(|| anyhow::anyhow!("unknown instruction {name}; see `repro table5`"))?;
+            println!("{}", alu::kernel_for(row, args.dependent));
+        }
+        "" => {
+            print!("{USAGE}");
+        }
+        other => {
+            anyhow::bail!("unknown command {other}\n{USAGE}");
+        }
+    }
+    Ok(())
+}

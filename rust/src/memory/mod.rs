@@ -1,0 +1,408 @@
+//! Memory-hierarchy simulator: DRAM + L2 + per-SM L1 + shared memory,
+//! with the PTX cache-operator semantics of §IV-B.
+//!
+//! Functional *and* timed: the pointer-chase microbenchmark (Fig. 2)
+//! stores real pointer values and loads them back, so the backing store
+//! holds data, while the caches decide the latency of every access:
+//!
+//! * `ld.global.cv` — bypass L1 and L2 entirely → DRAM latency (≈290);
+//! * `ld.global.cg` — bypass L1, hit/allocate L2 → L2 latency on hit;
+//! * `ld.global.ca` — hit/allocate L1 then L2 → L1 latency on hit;
+//! * `st.wt`        — write-through to DRAM, invalidating stale L1 lines;
+//! * shared memory  — fixed ld/st latencies (23/19), banked per SM.
+
+pub mod cache;
+
+pub use cache::Cache;
+
+use crate::config::MemoryConfig;
+use crate::ptx::types::CacheOp;
+use std::collections::HashMap;
+
+const PAGE_SHIFT: u32 = 12;
+const PAGE_BYTES: usize = 1 << PAGE_SHIFT;
+
+/// Sparse flat backing store (device global memory).
+#[derive(Debug, Default)]
+pub struct Dram {
+    pages: HashMap<u64, Box<[u8; PAGE_BYTES]>>,
+}
+
+impl Dram {
+    fn page_mut(&mut self, addr: u64) -> &mut [u8; PAGE_BYTES] {
+        self.pages
+            .entry(addr >> PAGE_SHIFT)
+            .or_insert_with(|| Box::new([0u8; PAGE_BYTES]))
+    }
+
+    pub fn write(&mut self, addr: u64, bytes: &[u8]) {
+        // One page lookup per page-sized span, not per byte.
+        let mut a = addr;
+        let mut rest = bytes;
+        while !rest.is_empty() {
+            let off = (a & (PAGE_BYTES as u64 - 1)) as usize;
+            let n = rest.len().min(PAGE_BYTES - off);
+            self.page_mut(a)[off..off + n].copy_from_slice(&rest[..n]);
+            a += n as u64;
+            rest = &rest[n..];
+        }
+    }
+
+    pub fn read(&self, addr: u64, out: &mut [u8]) {
+        let mut a = addr;
+        let mut rest = &mut out[..];
+        while !rest.is_empty() {
+            let off = (a & (PAGE_BYTES as u64 - 1)) as usize;
+            let n = rest.len().min(PAGE_BYTES - off);
+            match self.pages.get(&(a >> PAGE_SHIFT)) {
+                Some(p) => rest[..n].copy_from_slice(&p[off..off + n]),
+                None => rest[..n].fill(0),
+            }
+            a += n as u64;
+            rest = &mut rest[n..];
+        }
+    }
+
+    pub fn write_u64(&mut self, addr: u64, v: u64) {
+        self.write(addr, &v.to_le_bytes());
+    }
+
+    pub fn read_u64(&self, addr: u64) -> u64 {
+        let mut b = [0u8; 8];
+        self.read(addr, &mut b);
+        u64::from_le_bytes(b)
+    }
+
+    pub fn allocated_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+/// An access outcome: the serviced level and total issue-to-data latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServicedBy {
+    L1,
+    L2,
+    Dram,
+    Shared,
+}
+
+/// The full hierarchy for one simulated SM.
+///
+/// Caches and shared memory are built lazily on first touch: the A100's
+/// 40 MiB L2 needs an ~8 MB way array, and the ALU microbenchmarks never
+/// access memory — eager allocation made `Simulator::new` 24 ms/kernel
+/// and dominated the whole Table V sweep (see EXPERIMENTS.md §Perf).
+#[derive(Debug)]
+pub struct MemorySystem {
+    pub dram: Dram,
+    l1: Option<Cache>,
+    l2: Option<Cache>,
+    shared: Vec<u8>,
+    cfg: MemoryConfig,
+    pub loads: u64,
+    pub stores: u64,
+}
+
+impl MemorySystem {
+    pub fn new(cfg: &MemoryConfig) -> Self {
+        Self {
+            dram: Dram::default(),
+            l1: None,
+            l2: None,
+            shared: Vec::new(),
+            cfg: cfg.clone(),
+            loads: 0,
+            stores: 0,
+        }
+    }
+
+    pub fn config(&self) -> &MemoryConfig {
+        &self.cfg
+    }
+
+    #[inline]
+    fn l1(&mut self) -> &mut Cache {
+        let cfg = &self.cfg;
+        self.l1
+            .get_or_insert_with(|| Cache::new(cfg.l1_bytes, cfg.l1_line, cfg.l1_assoc))
+    }
+
+    #[inline]
+    fn l2(&mut self) -> &mut Cache {
+        let cfg = &self.cfg;
+        self.l2
+            .get_or_insert_with(|| Cache::new(cfg.l2_bytes, cfg.l2_line, cfg.l2_assoc))
+    }
+
+    #[inline]
+    fn shared_mem(&mut self) -> &mut Vec<u8> {
+        if self.shared.is_empty() {
+            self.shared = vec![0u8; self.cfg.shared_bytes];
+        }
+        &mut self.shared
+    }
+
+    /// Global-memory load: returns (value, latency, serviced level).
+    pub fn load_global(&mut self, addr: u64, size: u32, op: CacheOp) -> (u64, u64, ServicedBy) {
+        self.loads += 1;
+        let v = self.read_value(addr, size);
+        match op {
+            // .cv: bypass all caches — always DRAM.
+            CacheOp::Cv => (v, self.cfg.dram_latency, ServicedBy::Dram),
+            // .cg: L2 only.
+            CacheOp::Cg => {
+                if self.l2().access(addr) {
+                    (v, self.cfg.l2_hit_latency, ServicedBy::L2)
+                } else {
+                    (v, self.cfg.dram_latency, ServicedBy::Dram)
+                }
+            }
+            // .ca (and default): L1 → L2 → DRAM.
+            _ => {
+                if self.l1().access(addr) {
+                    // L1 lookup implies an L2-inclusive touch for LRU.
+                    self.l2().access(addr);
+                    (v, self.cfg.l1_hit_latency, ServicedBy::L1)
+                } else if self.l2().access(addr) {
+                    (v, self.cfg.l2_hit_latency, ServicedBy::L2)
+                } else {
+                    (v, self.cfg.dram_latency, ServicedBy::Dram)
+                }
+            }
+        }
+    }
+
+    /// Global-memory store: returns completion latency.
+    pub fn store_global(&mut self, addr: u64, size: u32, value: u64, op: CacheOp) -> u64 {
+        self.stores += 1;
+        self.write_value(addr, size, value);
+        match op {
+            // .wt / .cv: write-through; L1 copies are stale → invalidate.
+            CacheOp::Wt | CacheOp::Cv => {
+                if let Some(l1) = &mut self.l1 {
+                    l1.invalidate(addr);
+                }
+                self.l2().access(addr); // L2 is write-allocate on GA100
+                self.cfg.l2_hit_latency
+            }
+            _ => {
+                // default: write-back, allocate in L2 (L1 is write-through
+                // no-allocate on NVIDIA parts).
+                if let Some(l1) = &mut self.l1 {
+                    l1.invalidate(addr);
+                }
+                self.l2().access(addr);
+                self.cfg.l2_hit_latency
+            }
+        }
+    }
+
+    /// Shared-memory load (paper: 23 cycles).
+    pub fn load_shared(&mut self, addr: u64, size: u32) -> (u64, u64, ServicedBy) {
+        self.loads += 1;
+        let shared = self.shared_mem();
+        let a = (addr as usize) % shared.len();
+        let mut b = [0u8; 8];
+        let bytes = (size / 8) as usize;
+        for i in 0..bytes.min(8) {
+            b[i] = shared[(a + i) % shared.len()];
+        }
+        (
+            u64::from_le_bytes(b),
+            self.cfg.shared_load_latency,
+            ServicedBy::Shared,
+        )
+    }
+
+    /// Shared-memory store (paper: 19 cycles).
+    pub fn store_shared(&mut self, addr: u64, size: u32, value: u64) -> u64 {
+        self.stores += 1;
+        let shared = self.shared_mem();
+        let a = (addr as usize) % shared.len();
+        let bytes = (size / 8) as usize;
+        let v = value.to_le_bytes();
+        for i in 0..bytes.min(8) {
+            let idx = (a + i) % shared.len();
+            shared[idx] = v[i];
+        }
+        self.cfg.shared_store_latency
+    }
+
+    fn read_value(&self, addr: u64, size: u32) -> u64 {
+        match size {
+            8 => {
+                let mut b = [0u8; 1];
+                self.dram.read(addr, &mut b);
+                b[0] as u64
+            }
+            16 => {
+                let mut b = [0u8; 2];
+                self.dram.read(addr, &mut b);
+                u16::from_le_bytes(b) as u64
+            }
+            32 => {
+                let mut b = [0u8; 4];
+                self.dram.read(addr, &mut b);
+                u32::from_le_bytes(b) as u64
+            }
+            _ => self.dram.read_u64(addr),
+        }
+    }
+
+    fn write_value(&mut self, addr: u64, size: u32, value: u64) {
+        match size {
+            // size 0: timing-only store (data already written out of band,
+            // e.g. WMMA fragment stores).
+            0 => {}
+            8 => self.dram.write(addr, &[value as u8]),
+            16 => self.dram.write(addr, &(value as u16).to_le_bytes()),
+            32 => self.dram.write(addr, &(value as u32).to_le_bytes()),
+            _ => self.dram.write_u64(addr, value),
+        }
+    }
+
+    /// Cache statistics (hits, misses) for (L1, L2).
+    pub fn stats(&self) -> ((u64, u64), (u64, u64)) {
+        let l1 = self.l1.as_ref().map(|c| (c.hits, c.misses)).unwrap_or((0, 0));
+        let l2 = self.l2.as_ref().map(|c| (c.hits, c.misses)).unwrap_or((0, 0));
+        (l1, l2)
+    }
+
+    pub fn flush_caches(&mut self) {
+        if let Some(c) = &mut self.l1 {
+            c.flush();
+        }
+        if let Some(c) = &mut self.l2 {
+            c.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MemoryConfig;
+
+    fn sys() -> MemorySystem {
+        MemorySystem::new(&MemoryConfig::default())
+    }
+
+    #[test]
+    fn dram_roundtrip_across_pages() {
+        let mut d = Dram::default();
+        d.write_u64(PAGE_BYTES as u64 - 4, 0xDEADBEEF_CAFEBABE);
+        assert_eq!(d.read_u64(PAGE_BYTES as u64 - 4), 0xDEADBEEF_CAFEBABE);
+        assert_eq!(d.read_u64(0x9999_0000), 0, "untouched memory reads 0");
+        assert_eq!(d.allocated_pages(), 2);
+    }
+
+    #[test]
+    fn cv_always_pays_dram_latency() {
+        let mut m = sys();
+        m.dram.write_u64(64, 42);
+        for _ in 0..3 {
+            let (v, lat, by) = m.load_global(64, 64, CacheOp::Cv);
+            assert_eq!(v, 42);
+            assert_eq!(lat, 290);
+            assert_eq!(by, ServicedBy::Dram);
+        }
+    }
+
+    #[test]
+    fn cg_hits_l2_on_reuse() {
+        let mut m = sys();
+        let (_, lat1, _) = m.load_global(128, 64, CacheOp::Cg);
+        assert_eq!(lat1, 290, "cold miss goes to DRAM");
+        let (_, lat2, by) = m.load_global(128, 64, CacheOp::Cg);
+        assert_eq!(lat2, 200, "warm access is an L2 hit");
+        assert_eq!(by, ServicedBy::L2);
+    }
+
+    #[test]
+    fn ca_hits_l1_on_reuse() {
+        let mut m = sys();
+        m.load_global(256, 64, CacheOp::Ca);
+        let (_, lat, by) = m.load_global(256, 64, CacheOp::Ca);
+        assert_eq!(lat, 33);
+        assert_eq!(by, ServicedBy::L1);
+    }
+
+    #[test]
+    fn working_set_bigger_than_l2_misses() {
+        // Fig. 2 uses a 52,268,760-byte array (> 40 MiB L2) so even warm
+        // traversals miss.  Use line-strided addresses.
+        let mut m = sys();
+        let span = (m.config().l2_bytes + m.config().l2_bytes / 4) as u64;
+        let step = 128u64;
+        for pass in 0..2 {
+            let mut dram_hits = 0u64;
+            let mut total = 0u64;
+            for a in (0..span).step_by(step as usize) {
+                let (_, _, by) = m.load_global(a, 64, CacheOp::Cg);
+                total += 1;
+                if by == ServicedBy::Dram {
+                    dram_hits += 1;
+                }
+            }
+            if pass == 1 {
+                assert!(
+                    dram_hits * 10 >= total * 9,
+                    "pass 2: {dram_hits}/{total} should be ≥90% DRAM"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn working_set_within_l2_hits() {
+        let mut m = sys();
+        let span = 2 * 1024 * 1024u64; // 2 MiB << 40 MiB
+        for a in (0..span).step_by(128) {
+            m.load_global(a, 64, CacheOp::Cg);
+        }
+        let mut l2 = 0u64;
+        let mut total = 0u64;
+        for a in (0..span).step_by(128) {
+            let (_, _, by) = m.load_global(a, 64, CacheOp::Cg);
+            total += 1;
+            if by == ServicedBy::L2 {
+                l2 += 1;
+            }
+        }
+        assert_eq!(l2, total, "entire 2 MiB set should be L2-resident");
+    }
+
+    #[test]
+    fn shared_memory_roundtrip_and_latency() {
+        let mut m = sys();
+        let lat_st = m.store_shared(16, 64, 0x1234);
+        let (v, lat_ld, by) = m.load_shared(16, 64);
+        assert_eq!(v, 0x1234);
+        assert_eq!(lat_st, 19);
+        assert_eq!(lat_ld, 23);
+        assert_eq!(by, ServicedBy::Shared);
+        assert!(lat_st < lat_ld, "paper: store completes faster than load");
+    }
+
+    #[test]
+    fn store_invalidates_l1() {
+        let mut m = sys();
+        m.load_global(512, 64, CacheOp::Ca); // fill L1
+        m.store_global(512, 64, 7, CacheOp::Wt);
+        let (v, _lat, by) = m.load_global(512, 64, CacheOp::Ca);
+        assert_eq!(v, 7, "load sees the stored value");
+        assert_ne!(by, ServicedBy::L1, "stale L1 line was invalidated");
+    }
+
+    #[test]
+    fn subword_sizes() {
+        let mut m = sys();
+        m.store_global(0x100, 32, 0xAABB_CCDD, CacheOp::Default);
+        let (v, _, _) = m.load_global(0x100, 32, CacheOp::Cv);
+        assert_eq!(v, 0xAABB_CCDD);
+        m.store_global(0x200, 16, 0xFFFF_1234, CacheOp::Default);
+        let (v, _, _) = m.load_global(0x200, 16, CacheOp::Cv);
+        assert_eq!(v, 0x1234);
+    }
+}

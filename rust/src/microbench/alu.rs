@@ -1,0 +1,269 @@
+//! ALU / Table V instruction-latency microbenchmarks.
+//!
+//! Expands each [`registry::Row`] template into a Fig.-1-style kernel —
+//! init, clock, 3 instances, clock — in both independent and (where the
+//! operand classes allow) dependent forms, runs it on the simulator, and
+//! grades the result against the paper's printed cycles and SASS mapping.
+
+use super::registry::{self, RegClass, Row};
+use super::{measurement_kernel, run_measurement, MatchGrade, Measurement, INSTANCES};
+use crate::config::AmpereConfig;
+
+/// A Table V row's full measurement outcome.
+#[derive(Debug, Clone)]
+pub struct RowResult {
+    pub name: String,
+    pub measured: Measurement,
+    pub paper_sass: String,
+    pub paper_cycles: String,
+    pub cycles_grade: MatchGrade,
+    pub mapping_matches: bool,
+    /// Dependent-variant CPI, when the row chains.
+    pub dep_cpi: Option<u64>,
+}
+
+/// Expand a template into one instance.
+fn instantiate(template: &str, row: &Row, i: u32, dep_prev_dst: Option<String>) -> String {
+    let d = format!("{}{}", row.dst.prefix(), 20 + i);
+    let a = dep_prev_dst.unwrap_or_else(|| format!("{}{}", row.src.prefix(), 5 + i));
+    let b = format!("{}{}", row.src.prefix(), 8 + i);
+    let c = format!("{}{}", row.src.prefix(), 11 + i);
+    let e = format!("{}{}", row.src.prefix(), 14 + i);
+    template
+        .replace("%D", &d)
+        .replace("%A", &a)
+        .replace("%B", &b)
+        .replace("%C", &c)
+        .replace("%E", &e)
+}
+
+/// Init lines for every source register a 3-instance expansion reads.
+fn init_lines(row: &Row) -> String {
+    let mut lines = Vec::new();
+    for i in 5..17 {
+        lines.push(row.src.init_line(i));
+    }
+    // Predicate-writing rows still read value sources; predicate sources
+    // (selp) need a predicate init too.
+    if row.dst == RegClass::P {
+        lines.push(RegClass::P.init_line(2));
+    }
+    lines.join("\n ")
+}
+
+/// Build the measurement kernel body for a row.
+pub fn kernel_for(row: &Row, dependent: bool) -> String {
+    let mut body = Vec::new();
+    let mut prev: Option<String> = None;
+    for i in 0..INSTANCES as u32 {
+        let dep_src = if dependent && i > 0 { prev.clone() } else { None };
+        body.push(instantiate(row.template, row, i, dep_src));
+        prev = Some(format!("{}{}", row.dst.prefix(), 20 + i));
+    }
+    measurement_kernel(&init_lines(row), &body.join("\n "))
+}
+
+/// Whether the row can form a dependent chain (dst feeds the next src).
+pub fn can_chain(row: &Row) -> bool {
+    row.deppable && row.dst == row.src && row.dst != RegClass::P
+}
+
+/// Measure one row (independent + optional dependent variant).
+pub fn measure_row(cfg: &AmpereConfig, row: &Row) -> Result<RowResult, String> {
+    let indep_src = kernel_for(row, false);
+    let measured = run_measurement(cfg, &indep_src, INSTANCES, row.name, false)?;
+
+    let dep_cpi = if can_chain(row) {
+        let dep_src = kernel_for(row, true);
+        Some(run_measurement(cfg, &dep_src, INSTANCES, row.name, true)?.cpi)
+    } else {
+        None
+    };
+
+    let cycles_grade = row.paper_cycles.grade(measured.cpi);
+    let mapping_matches = normalize(&measured.mapping) == normalize(row.paper_sass)
+        || row.paper_sass == "multiple instructions";
+    Ok(RowResult {
+        name: row.name.to_string(),
+        paper_sass: row.paper_sass.to_string(),
+        paper_cycles: row.paper_cycles.display(),
+        cycles_grade,
+        mapping_matches,
+        dep_cpi,
+        measured,
+    })
+}
+
+fn normalize(s: &str) -> String {
+    s.replace(' ', "").to_uppercase()
+}
+
+/// Run the full Table V sweep.
+pub fn run_table5(cfg: &AmpereConfig) -> Result<Vec<RowResult>, String> {
+    registry::table5()
+        .iter()
+        .map(|row| measure_row(cfg, row))
+        .collect()
+}
+
+/// Table II: dependent vs independent CPI for the paper's five rows.
+#[derive(Debug, Clone)]
+pub struct DepIndep {
+    pub name: String,
+    pub dep_cpi: u64,
+    pub indep_cpi: u64,
+    pub paper_dep: u64,
+    pub paper_indep: u64,
+}
+
+pub fn run_table2(cfg: &AmpereConfig) -> Result<Vec<DepIndep>, String> {
+    let rows = registry::table5();
+    registry::table2()
+        .into_iter()
+        .map(|(name, paper_dep, paper_indep)| {
+            let row = rows
+                .iter()
+                .find(|r| r.name == name)
+                .ok_or_else(|| format!("{name} not in registry"))?;
+            let indep = run_measurement(cfg, &kernel_for(row, false), INSTANCES, name, false)?;
+            let dep = run_measurement(cfg, &kernel_for(row, true), INSTANCES, name, true)?;
+            Ok(DepIndep {
+                name: name.to_string(),
+                dep_cpi: dep.cpi,
+                indep_cpi: indep.cpi,
+                paper_dep,
+                paper_indep,
+            })
+        })
+        .collect()
+}
+
+/// Table I: CPI of 1..=4 add.u32 instances with *no* warm-up (the
+/// first-launch-overhead demonstration).
+#[derive(Debug, Clone)]
+pub struct Amortization {
+    pub n: u64,
+    pub cpi: u64,
+    pub paper_cpi: u64,
+}
+
+pub fn run_table1(cfg: &AmpereConfig) -> Result<Vec<Amortization>, String> {
+    let paper = [5u64, 3, 2, 2];
+    (1..=4u64)
+        .map(|n| {
+            let body: Vec<String> = (0..n)
+                .map(|i| format!("add.u32 %r{}, {}, {};", 20 + i, 6 + i, i + 1))
+                .collect();
+            // No init lines: the INT pipe must be cold.
+            let src = measurement_kernel("", &body.join("\n "));
+            let m = run_measurement(cfg, &src, n, "add.u32", false)?;
+            Ok(Amortization { n, cpi: m.cpi, paper_cpi: paper[n as usize - 1] })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AmpereConfig {
+        AmpereConfig::a100()
+    }
+
+    #[test]
+    fn table1_matches_paper_exactly() {
+        for a in run_table1(&cfg()).unwrap() {
+            assert_eq!(a.cpi, a.paper_cpi, "n = {}", a.n);
+        }
+    }
+
+    #[test]
+    fn table2_matches_paper_exactly() {
+        for d in run_table2(&cfg()).unwrap() {
+            assert_eq!(d.dep_cpi, d.paper_dep, "{} dep", d.name);
+            assert_eq!(d.indep_cpi, d.paper_indep, "{} indep", d.name);
+        }
+    }
+
+    #[test]
+    fn single_sass_rows_measure_exactly() {
+        // Every 1-to-1 mapped row must reproduce the paper's cycles
+        // exactly (these are the calibration anchors).
+        let anchors = [
+            "add.u32", "add.f16", "add.f32", "add.f64", "mul.lo.u32", "mul.rn.f32",
+            "mul.rn.f64", "mad.lo.u32", "mad.rn.f32", "mad.rn.f64", "fma.rn.f16",
+            "fma.rn.f32", "fma.rn.f64", "abs.s32", "neg.s32", "min.u32", "min.s32",
+            "min.f32", "popc.b32", "bfind.u32", "bfind.s32", "abs.f16", "neg.f32",
+            "tanh.approx.f32", "ex2.approx.f16", "cvt.rzi.s32.f32", "mov.u32 clock",
+        ];
+        let rows = registry::table5();
+        for name in anchors {
+            let row = rows.iter().find(|r| r.name == name).unwrap();
+            let res = measure_row(&cfg(), row).unwrap();
+            assert_eq!(
+                res.cycles_grade,
+                MatchGrade::Exact,
+                "{name}: measured {} vs paper {}",
+                res.measured.cpi,
+                res.paper_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn mapping_strings_match_paper() {
+        let rows = registry::table5();
+        let mut mismatches = Vec::new();
+        for row in &rows {
+            let res = measure_row(&cfg(), row).unwrap();
+            if !res.mapping_matches {
+                mismatches.push(format!(
+                    "{}: got {} want {}",
+                    row.name, res.measured.mapping, row.paper_sass
+                ));
+            }
+        }
+        assert!(
+            mismatches.len() <= rows.len() / 10,
+            "more than 10% mapping mismatches:\n{}",
+            mismatches.join("\n")
+        );
+    }
+
+    #[test]
+    fn full_sweep_runs_and_mostly_matches() {
+        let results = run_table5(&cfg()).unwrap();
+        let off = results
+            .iter()
+            .filter(|r| r.cycles_grade == MatchGrade::Off)
+            .map(|r| format!("{}: {} vs {}", r.name, r.measured.cpi, r.paper_cycles))
+            .collect::<Vec<_>>();
+        // The calibration bar: ≥80% of rows within the Close band.
+        assert!(
+            off.len() * 5 <= results.len(),
+            "{} of {} rows Off:\n{}",
+            off.len(),
+            results.len(),
+            off.join("\n")
+        );
+    }
+
+    #[test]
+    fn dependent_never_faster() {
+        // Microarchitectural invariant: dependence can't reduce latency.
+        for row in registry::table5() {
+            if can_chain(&row) {
+                let res = measure_row(&cfg(), &row).unwrap();
+                if let Some(dep) = res.dep_cpi {
+                    assert!(
+                        dep >= res.measured.cpi,
+                        "{}: dep {} < indep {}",
+                        row.name,
+                        dep,
+                        res.measured.cpi
+                    );
+                }
+            }
+        }
+    }
+}

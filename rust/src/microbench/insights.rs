@@ -1,0 +1,215 @@
+//! The paper's §V-A numbered insights as runnable experiments.
+
+use super::registry::{self};
+use super::{measurement_kernel, run_measurement, Measurement, INSTANCES};
+use crate::config::AmpereConfig;
+use crate::ptx::parse_program;
+use crate::translate::translate_program;
+
+/// Insight 1: integer `mad` runs on the floating pipeline; interleaving
+/// adds (INT) with mads (FMA) overlaps the two pipes.
+#[derive(Debug, Clone)]
+pub struct Insight1 {
+    /// mad.lo.u32's SASS mapping (paper: FFMA — the FP pipe).
+    pub mad_mapping: String,
+    /// CPI of 2 add + 2 mad interleaved.
+    pub mixed_cpi: u64,
+    /// CPI of 4 adds on one pipe.
+    pub same_pipe_cpi: u64,
+}
+
+pub fn insight1(cfg: &AmpereConfig) -> Result<Insight1, String> {
+    let init = "add.u32 %r5, 1, 2; add.u32 %r6, 3, 4; add.u32 %r7, 5, 6; \
+                add.u32 %r8, 7, 8; add.u32 %r9, 9, 1;";
+    let mixed = "add.u32 %r20, %r5, 1;\n mad.lo.u32 %r21, %r6, 2, %r7;\n \
+                 add.u32 %r22, %r8, 1;\n mad.lo.u32 %r23, %r9, 2, %r7;";
+    let same = "add.u32 %r20, %r5, 1;\n add.u32 %r21, %r6, 2;\n \
+                add.u32 %r22, %r8, 1;\n add.u32 %r23, %r9, 2;";
+    let m_mixed = run_measurement(cfg, &measurement_kernel(init, mixed), 4, "mixed", false)?;
+    let m_same = run_measurement(cfg, &measurement_kernel(init, same), 4, "same", false)?;
+
+    // Mapping of mad.lo.u32 alone:
+    let rows = registry::table5();
+    let mad = rows.iter().find(|r| r.name == "mad.lo.u32").unwrap();
+    let m = run_measurement(
+        cfg,
+        &super::alu::kernel_for(mad, false),
+        INSTANCES,
+        "mad.lo.u32",
+        false,
+    )?;
+    Ok(Insight1 {
+        mad_mapping: m.mapping,
+        mixed_cpi: m_mixed.cpi,
+        same_pipe_cpi: m_same.cpi,
+    })
+}
+
+/// Insight 2: signed vs unsigned — identical mapping and latency except
+/// bfind / min / max.
+#[derive(Debug, Clone)]
+pub struct SignPair {
+    pub base: String,
+    pub unsigned_mapping: String,
+    pub signed_mapping: String,
+    pub unsigned_cpi: u64,
+    pub signed_cpi: u64,
+    pub differs: bool,
+    pub paper_expects_difference: bool,
+}
+
+pub fn insight2(cfg: &AmpereConfig) -> Result<Vec<SignPair>, String> {
+    let pairs = [
+        ("add.u64", "add.s64", false),
+        ("min.u32", "min.s32", true),
+        ("max.u32", "max.s32", true),
+        ("bfind.u32", "bfind.s32", true),
+        ("min.u64", "min.s64", true),
+    ];
+    let rows = registry::table5();
+    pairs
+        .iter()
+        .map(|(u_name, s_name, expects)| {
+            let get = |name: &str| -> Result<Measurement, String> {
+                let row = rows
+                    .iter()
+                    .find(|r| r.name == name)
+                    .ok_or_else(|| format!("{name} not in registry"))?;
+                run_measurement(cfg, &super::alu::kernel_for(row, false), INSTANCES, name, false)
+            };
+            let u = get(u_name)?;
+            let s = get(s_name)?;
+            let differs = u.mapping != s.mapping;
+            Ok(SignPair {
+                base: u_name.trim_end_matches(char::is_numeric).trim_end_matches(".u").to_string(),
+                unsigned_mapping: u.mapping,
+                signed_mapping: s.mapping,
+                unsigned_cpi: u.cpi,
+                signed_cpi: s.cpi,
+                differs,
+                paper_expects_difference: *expects,
+            })
+        })
+        .collect()
+}
+
+/// Insight 3: initialisation style changes the mapping of neg.f32/abs.f32.
+#[derive(Debug, Clone)]
+pub struct Insight3 {
+    pub op: String,
+    pub mov_init_mapping: String,
+    pub add_init_mapping: String,
+}
+
+pub fn insight3(cfg: &AmpereConfig) -> Result<Vec<Insight3>, String> {
+    ["neg.f32", "abs.f32"]
+        .iter()
+        .map(|op| {
+            let body =
+                format!("{op} %f20, %f5;\n {op} %f21, %f6;\n {op} %f22, %f7;");
+            let mov_init = "mov.f32 %f5, 1.5; mov.f32 %f6, 2.5; mov.f32 %f7, 3.5;";
+            let add_init = "add.f32 %f5, 1.0, 0.5; add.f32 %f6, 2.0, 0.5; add.f32 %f7, 3.0, 0.5;";
+            let m_mov =
+                run_measurement(cfg, &measurement_kernel(mov_init, &body), 3, op, false)?;
+            let m_add =
+                run_measurement(cfg, &measurement_kernel(add_init, &body), 3, op, false)?;
+            Ok(Insight3 {
+                op: op.to_string(),
+                mov_init_mapping: m_mov.mapping,
+                add_init_mapping: m_add.mapping,
+            })
+        })
+        .collect()
+}
+
+/// Fig. 4: clock-register width experiment.
+#[derive(Debug, Clone)]
+pub struct Fig4 {
+    pub cpi_32bit: u64,
+    pub cpi_64bit: u64,
+    pub sass_32bit: Vec<String>,
+    pub sass_64bit: Vec<String>,
+}
+
+pub fn fig4(cfg: &AmpereConfig) -> Result<Fig4, String> {
+    // 64-bit: the standard protocol.
+    let body = "add.u32 %r20, %r5, 1;\n add.u32 %r21, %r6, 2;\n add.u32 %r22, %r7, 3;";
+    let init = "add.u32 %r5, 1, 2; add.u32 %r6, 3, 4; add.u32 %r7, 5, 6;";
+    let m64 = run_measurement(cfg, &measurement_kernel(init, body), 3, "add.u32/64", false)?;
+
+    // 32-bit: clocks in %r registers + 32-bit subtraction (Fig. 4a).
+    let src32 = format!(
+        ".visible .entry fig4a(.param .u64 out) {{\n {}\n {init}\n \
+         mov.u32 %r60, %clock;\n {body}\n mov.u32 %r61, %clock;\n \
+         sub.s32 %r62, %r61, %r60;\n ret;\n}}",
+        super::REG_DECLS
+    );
+    let prog = parse_program(&src32).map_err(|e| e.to_string())?;
+    let tp = translate_program(&prog).map_err(|e| e.to_string())?;
+    let mut sim = crate::sim::Simulator::new(cfg.clone());
+    let r = sim.run(&prog, &tp, &[0]).map_err(|e| e.to_string())?;
+    let c = &r.clock_reads;
+    let delta = c[c.len() - 1] - c[c.len() - 2];
+    let cpi32 = delta.saturating_sub(super::CLOCK_OVERHEAD) / 3;
+
+    let sass32: Vec<String> = sim.trace.mnemonics().iter().map(|s| s.to_string()).collect();
+    Ok(Fig4 {
+        cpi_32bit: cpi32,
+        cpi_64bit: m64.cpi,
+        sass_32bit: sass32,
+        sass_64bit: vec!["CS2R".into(), "IADD".into(), "IADD".into(), "IADD".into(), "CS2R".into()],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AmpereConfig {
+        AmpereConfig::a100()
+    }
+
+    #[test]
+    fn insight1_mad_on_fp_pipe() {
+        let i = insight1(&cfg()).unwrap();
+        assert_eq!(i.mad_mapping, "FFMA");
+        assert!(
+            i.mixed_cpi <= i.same_pipe_cpi,
+            "mixed {} vs same-pipe {}",
+            i.mixed_cpi,
+            i.same_pipe_cpi
+        );
+    }
+
+    #[test]
+    fn insight2_sign_differences() {
+        for p in insight2(&cfg()).unwrap() {
+            assert_eq!(
+                p.differs, p.paper_expects_difference,
+                "{}: {} vs {}",
+                p.base, p.unsigned_mapping, p.signed_mapping
+            );
+        }
+    }
+
+    #[test]
+    fn insight3_init_style() {
+        for i in insight3(&cfg()).unwrap() {
+            assert_eq!(i.mov_init_mapping, "IMAD.MOV.U32", "{}", i.op);
+            assert!(
+                i.add_init_mapping.starts_with("FADD"),
+                "{}: {}",
+                i.op,
+                i.add_init_mapping
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_barrier_cost() {
+        let f = fig4(&cfg()).unwrap();
+        assert_eq!(f.cpi_64bit, 2);
+        assert_eq!(f.cpi_32bit, 13);
+        assert!(f.sass_32bit.iter().any(|s| s == "DEPBAR"), "{:?}", f.sass_32bit);
+    }
+}

@@ -1,0 +1,287 @@
+//! Memory-latency microbenchmarks (Table IV, Figs. 2 & 3).
+//!
+//! Pointer chasing: the chain is seeded in device memory, then a kernel
+//! chases it with *dependent* loads — each address is the previous load's
+//! value, so accesses serialize and the per-load latency is exact.
+//!
+//! Level selection follows the paper:
+//! * global — array larger than L2, `ld.global.cv` (bypass all caches);
+//! * L2     — array smaller than L2, `ld.global.cg`, measured on the
+//!   second (warm) traversal;
+//! * L1     — array smaller than L1, `ld.global.ca`, warm traversal;
+//! * shared — single `ld.shared` / `st.shared`, n = 1 (Fig. 3).
+//!
+//! The chain seeding mirrors Fig. 2's store loop; `faithful` mode runs
+//! that loop in PTX on the simulator, the default seeds DRAM directly
+//! (identical measured values, far fewer simulated instructions).
+
+use super::{run_measurement, Measurement, CLOCK_OVERHEAD};
+use crate::config::AmpereConfig;
+use crate::ptx::parse_program;
+use crate::sim::Simulator;
+use crate::translate::translate_program;
+
+/// Memory level under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    Global,
+    L2,
+    L1,
+    SharedLoad,
+    SharedStore,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Global => "Global memory",
+            Level::L2 => "L2 cache",
+            Level::L1 => "L1 cache",
+            Level::SharedLoad => "Shared Memory (ld)",
+            Level::SharedStore => "Shared Memory (st)",
+        }
+    }
+
+    pub fn paper_cycles(self) -> u64 {
+        match self {
+            Level::Global => 290,
+            Level::L2 => 200,
+            Level::L1 => 33,
+            Level::SharedLoad => 23,
+            Level::SharedStore => 19,
+        }
+    }
+}
+
+/// One memory measurement.
+#[derive(Debug, Clone)]
+pub struct MemResult {
+    pub level: Level,
+    pub cpi: u64,
+    pub paper: u64,
+    pub loads: u64,
+}
+
+/// Number of chased loads in the measured window.
+const CHASE_LOADS: usize = 16;
+/// Chain stride.  Fig. 2 steps 32 bytes (one L2 *sector*); our cache
+/// model has no sectoring, so one full line per hop keeps every chased
+/// load a distinct line — the same access pattern at line granularity.
+const STRIDE: u64 = 128;
+/// Device base address of the chase array.
+const ARRAY_BASE: u64 = 0x10_0000;
+
+/// Seed a pointer chain of `n` hops covering `span` bytes: element i
+/// holds the address of element i+1 (wrapping), spaced to touch distinct
+/// cache lines across the whole span.
+pub fn seed_chain(sim: &mut Simulator, base: u64, span: u64, n_visible: usize) -> Vec<u64> {
+    let hops = (span / STRIDE).max(n_visible as u64);
+    let mut addrs = Vec::with_capacity(n_visible);
+    for i in 0..hops {
+        let here = base + i * STRIDE;
+        let next = base + ((i + 1) % hops) * STRIDE;
+        sim.mem.dram.write_u64(here, next);
+        if (i as usize) < n_visible {
+            addrs.push(here);
+        }
+    }
+    addrs
+}
+
+/// Unrolled dependent-load body: `n` loads, each addressing through the
+/// previous result (`%rd20 <- [%rd19]` …).
+fn chase_body(cache_op: &str, n: usize) -> String {
+    let mut lines = Vec::new();
+    for i in 0..n {
+        lines.push(format!(
+            "ld.global.{cache_op}.u64 %rd{}, [%rd{}];",
+            21 + i,
+            20 + i
+        ));
+    }
+    lines.join("\n ")
+}
+
+/// Measure a cache level.  `span` selects which level serves the chain.
+fn measure_chase(
+    cfg: &AmpereConfig,
+    cache_op: &str,
+    span: u64,
+    warm_passes: u32,
+) -> Result<MemResult, String> {
+    // Kernel: %rd20 = base (param); warm passes chase the whole chain to
+    // fill the target level; the measured pass re-chases the first
+    // CHASE_LOADS hops.
+    let warm = if warm_passes > 0 {
+        // warm traversal over the full span, as a loop
+        format!(
+            "mov.u64 %rd10, %rd20;\n mov.u64 %rd11, 0;\n $Warm:\n \
+             ld.global.{cache_op}.u64 %rd10, [%rd10];\n \
+             add.u64 %rd11, %rd11, {STRIDE};\n \
+             setp.lt.u64 %p1, %rd11, {span};\n @%p1 bra $Warm;"
+        )
+    } else {
+        String::new()
+    };
+    let body = chase_body(cache_op, CHASE_LOADS);
+    let src = format!(
+        ".visible .entry memchase(.param .u64 arr) {{\n {}\n \
+         ld.param.u64 %rd20, [arr];\n {warm}\n \
+         mov.u64 %rd60, %clock64;\n {body}\n mov.u64 %rd61, %clock64;\n ret;\n}}",
+        super::REG_DECLS
+    );
+
+    let prog = parse_program(&src).map_err(|e| e.to_string())?;
+    let tp = translate_program(&prog).map_err(|e| e.to_string())?;
+    let mut sim = Simulator::new(cfg.clone());
+    sim.fuel = 2_000_000_000;
+    seed_chain(&mut sim, ARRAY_BASE, span, CHASE_LOADS + 1);
+    let r = sim.run(&prog, &tp, &[ARRAY_BASE]).map_err(|e| e.to_string())?;
+    let c = &r.clock_reads;
+    let delta = c[c.len() - 1] - c[c.len() - 2];
+    let cpi = delta.saturating_sub(CLOCK_OVERHEAD) / CHASE_LOADS as u64;
+    let level = match cache_op {
+        "cv" => Level::Global,
+        "cg" => Level::L2,
+        _ => Level::L1,
+    };
+    Ok(MemResult { level, cpi, paper: level.paper_cycles(), loads: CHASE_LOADS as u64 })
+}
+
+/// Shared-memory single-access measurement (Fig. 3): n = 1 with the
+/// drain exposing the full completion.
+fn measure_shared(cfg: &AmpereConfig, store: bool) -> Result<MemResult, String> {
+    let body = if store {
+        "st.shared.u64 [shMem1], 50;"
+    } else {
+        "ld.shared.u64 %rd25, [shMem1];"
+    };
+    let src = format!(
+        ".visible .entry sh(.param .u64 out) {{\n {}\n .shared .align 8 .b8 shMem1[4096];\n \
+         st.shared.u64 [shMem1], 42;\n \
+         mov.u64 %rd60, %clock64;\n {body}\n mov.u64 %rd61, %clock64;\n ret;\n}}",
+        super::REG_DECLS
+    );
+    let m: Measurement = run_measurement(cfg, &src, 1, "shared", true)?;
+    let level = if store { Level::SharedStore } else { Level::SharedLoad };
+    Ok(MemResult { level, cpi: m.cpi, paper: level.paper_cycles(), loads: 1 })
+}
+
+/// The full Table IV.
+pub fn run_table4(cfg: &AmpereConfig) -> Result<Vec<MemResult>, String> {
+    let l2 = cfg.memory.l2_bytes as u64;
+    let l1 = cfg.memory.l1_bytes as u64;
+    Ok(vec![
+        // Fig. 2: array larger than L2 (52,268,760 B in the paper).
+        measure_chase(cfg, "cv", l2 + l2 / 4, 0)?,
+        // L2: 2 MiB working set, warm pass fills L2.
+        measure_chase(cfg, "cg", (l2 / 16).min(2 * 1024 * 1024), 1)?,
+        // L1: working set within L1, warm pass fills L1.
+        measure_chase(cfg, "ca", l1 / 2, 1)?,
+        measure_shared(cfg, false)?,
+        measure_shared(cfg, true)?,
+    ])
+}
+
+/// Faithful Fig. 2 mode: the store loop that builds the chain runs in
+/// PTX on the simulator (slow; used by the `--faithful` CLI flag and one
+/// integration test).
+pub fn run_global_faithful(cfg: &AmpereConfig, span: u64) -> Result<MemResult, String> {
+    let body = chase_body("cv", CHASE_LOADS);
+    let src = format!(
+        ".visible .entry fig2(.param .u64 arr) {{\n {}\n \
+         ld.param.u64 %rd19, [arr];\n \
+         mov.u64 %rd40, 0;\n \
+         mov.u64 %rd12, %rd19;\n \
+$Mem_store:\n \
+         add.u64 %rd13, %rd12, {STRIDE};\n \
+         st.wt.global.u64 [%rd12], %rd13;\n \
+         mov.u64 %rd12, %rd13;\n \
+         add.u64 %rd40, %rd40, {STRIDE};\n \
+         setp.lt.u64 %p1, %rd40, {span};\n \
+         @%p1 bra $Mem_store;\n \
+         st.wt.global.u64 [%rd12], %rd19;\n \
+         mov.u64 %rd20, %rd19;\n \
+         mov.u64 %rd60, %clock64;\n {body}\n mov.u64 %rd61, %clock64;\n ret;\n}}",
+        super::REG_DECLS
+    );
+    let prog = parse_program(&src).map_err(|e| e.to_string())?;
+    let tp = translate_program(&prog).map_err(|e| e.to_string())?;
+    let mut sim = Simulator::new(cfg.clone());
+    sim.fuel = 4_000_000_000;
+    sim.trace = crate::sass::TraceRecorder::disabled();
+    let r = sim.run(&prog, &tp, &[ARRAY_BASE]).map_err(|e| e.to_string())?;
+    let c = &r.clock_reads;
+    let delta = c[c.len() - 1] - c[c.len() - 2];
+    Ok(MemResult {
+        level: Level::Global,
+        cpi: delta.saturating_sub(CLOCK_OVERHEAD) / CHASE_LOADS as u64,
+        paper: 290,
+        loads: CHASE_LOADS as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scaled-down config so cache-capacity effects appear with small
+    /// simulated footprints (latencies unchanged).
+    fn small_cfg() -> AmpereConfig {
+        let mut c = AmpereConfig::a100();
+        c.memory.l2_bytes = 512 * 1024;
+        c.memory.l1_bytes = 32 * 1024;
+        c
+    }
+
+    #[test]
+    fn table4_ordering_and_values() {
+        let res = run_table4(&small_cfg()).unwrap();
+        let get = |l: Level| res.iter().find(|r| r.level == l).unwrap().cpi;
+        let (g, l2, l1) = (get(Level::Global), get(Level::L2), get(Level::L1));
+        assert!(g > l2 && l2 > l1, "ordering: {g} > {l2} > {l1}");
+        // Within ±6% of the paper (loop/issue overhead rides on top).
+        for r in &res {
+            let rel = (r.cpi as f64 - r.paper as f64).abs() / r.paper as f64;
+            assert!(
+                rel <= 0.06,
+                "{:?}: measured {} vs paper {}",
+                r.level,
+                r.cpi,
+                r.paper
+            );
+        }
+    }
+
+    #[test]
+    fn shared_exact() {
+        let cfg = small_cfg();
+        let res = run_table4(&cfg).unwrap();
+        let get = |l: Level| res.iter().find(|r| r.level == l).unwrap().cpi;
+        assert_eq!(get(Level::SharedLoad), 23);
+        assert_eq!(get(Level::SharedStore), 19);
+        assert!(get(Level::SharedStore) < get(Level::SharedLoad));
+    }
+
+    #[test]
+    fn faithful_fig2_matches_direct_seeding() {
+        let cfg = small_cfg();
+        let span = cfg.memory.l2_bytes as u64 + cfg.memory.l2_bytes as u64 / 4;
+        let faithful = run_global_faithful(&cfg, span).unwrap();
+        let direct = run_table4(&cfg)
+            .unwrap()
+            .into_iter()
+            .find(|r| r.level == Level::Global)
+            .unwrap();
+        assert_eq!(faithful.cpi, direct.cpi, "seeding path must not matter");
+    }
+
+    #[test]
+    fn cv_insensitive_to_warm_cache() {
+        // .cv bypasses caches: warm or cold, same latency.
+        let cfg = small_cfg();
+        let cold = measure_chase(&cfg, "cv", 64 * 1024, 0).unwrap();
+        let warm = measure_chase(&cfg, "cv", 64 * 1024, 1).unwrap();
+        assert_eq!(cold.cpi, warm.cpi);
+    }
+}

@@ -1,0 +1,191 @@
+//! The paper's contribution: the PTX microbenchmark suite.
+//!
+//! Every benchmark follows the paper's protocol (§IV-A):
+//!
+//! 1. initialise input registers (warm-up — also what makes the pipes
+//!    non-cold, Fig. 1 lines 11–12);
+//! 2. read `%clock64` (CS2R — Fig. 4b's barrier-free form);
+//! 3. execute *n* instances of the instruction under test (n = 3 to
+//!    amortise first-launch overhead, Table I), dependent or independent;
+//! 4. read `%clock64` again; CPI = `floor((Δ − 2) / n)` (2 = measured
+//!    clock overhead);
+//! 5. read the dynamic SASS trace and record the mapping (Table V).
+
+pub mod alu;
+pub mod insights;
+pub mod memory;
+pub mod registry;
+pub mod wmma;
+
+use crate::config::AmpereConfig;
+use crate::ptx::parse_program;
+use crate::sim::Simulator;
+use crate::translate::translate_program;
+
+/// Measured clock-read overhead (two consecutive CS2R), paper §IV-A.
+pub const CLOCK_OVERHEAD: u64 = 2;
+
+/// Number of instruction instances per measurement (paper: 3).
+pub const INSTANCES: u64 = 3;
+
+/// One microbenchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// PTX mnemonic under test (`add.u32`, `ld.global.cv.u64`, …).
+    pub name: String,
+    /// Measured cycles-per-instruction under the paper's protocol.
+    pub cpi: u64,
+    /// Raw clock delta.
+    pub delta: u64,
+    /// Instances measured.
+    pub n: u64,
+    /// Dynamic SASS mapping (Table V's SASS column format).
+    pub mapping: String,
+    /// Dependent-sequence variant?
+    pub dependent: bool,
+}
+
+/// Outcome of comparing a measurement against the paper's value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatchGrade {
+    /// Within the paper's printed value/range.
+    Exact,
+    /// Within ±2 cycles or ±30% (multi-instruction expansions).
+    Close,
+    /// Outside both bands.
+    Off,
+}
+
+/// A paper-reported cycle count: exact, a range, or "changes".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PaperCycles {
+    Exact(u64),
+    Range(u64, u64),
+    Varies,
+}
+
+impl PaperCycles {
+    pub fn grade(&self, measured: u64) -> MatchGrade {
+        match *self {
+            PaperCycles::Varies => MatchGrade::Exact,
+            PaperCycles::Exact(v) => grade_against(measured, v, v),
+            PaperCycles::Range(lo, hi) => grade_against(measured, lo, hi),
+        }
+    }
+
+    pub fn display(&self) -> String {
+        match self {
+            PaperCycles::Exact(v) => v.to_string(),
+            PaperCycles::Range(lo, hi) => format!("{lo}-{hi}"),
+            PaperCycles::Varies => "changes".into(),
+        }
+    }
+
+    pub fn midpoint(&self) -> f64 {
+        match *self {
+            PaperCycles::Exact(v) => v as f64,
+            PaperCycles::Range(lo, hi) => (lo + hi) as f64 / 2.0,
+            PaperCycles::Varies => f64::NAN,
+        }
+    }
+}
+
+fn grade_against(measured: u64, lo: u64, hi: u64) -> MatchGrade {
+    if (lo..=hi).contains(&measured) {
+        return MatchGrade::Exact;
+    }
+    let nearest = if measured < lo { lo } else { hi };
+    let diff = measured.abs_diff(nearest);
+    let rel = diff as f64 / nearest.max(1) as f64;
+    if diff <= 2 || rel <= 0.30 {
+        MatchGrade::Close
+    } else {
+        MatchGrade::Off
+    }
+}
+
+/// Shared kernel preamble: one register bank per class the generators
+/// use, matching the paper's `.reg` declarations.
+pub const REG_DECLS: &str = ".reg .b16 %h<64>; .reg .b32 %r<64>; .reg .b32 %f<64>; \
+     .reg .b64 %rd<64>; .reg .b64 %fd<64>; .reg .pred %p<16>;";
+
+/// Assemble a measurement kernel: init lines, clock, body, clock.
+pub fn measurement_kernel(init: &str, body: &str) -> String {
+    format!(
+        ".visible .entry ubench(.param .u64 out) {{\n {REG_DECLS}\n {init}\n \
+         mov.u64 %rd60, %clock64;\n {body}\n mov.u64 %rd61, %clock64;\n \
+         sub.s64 %rd62, %rd61, %rd60;\n ret;\n}}"
+    )
+}
+
+/// Run one kernel under the protocol and extract (Δ, CPI, mapping of the
+/// `measured_ptx_idx`-th instruction).
+pub fn run_measurement(
+    cfg: &AmpereConfig,
+    src: &str,
+    n: u64,
+    name: &str,
+    dependent: bool,
+) -> Result<Measurement, String> {
+    let prog = parse_program(src).map_err(|e| format!("{name}: {e}\n{src}"))?;
+    let tp = translate_program(&prog).map_err(|e| format!("{name}: {e}"))?;
+    let mut sim = Simulator::new(cfg.clone());
+    let r = sim
+        .run(&prog, &tp, &[0x100000])
+        .map_err(|e| format!("{name}: {e}"))?;
+    if r.clock_reads.len() < 2 {
+        return Err(format!("{name}: kernel lost its clock reads"));
+    }
+    let c = &r.clock_reads;
+    // First-to-last: when the measured instruction is itself a clock
+    // read (Table V's `mov.u32 clock` row) the protocol brackets stay
+    // the outermost reads.
+    let delta = c[c.len() - 1] - c[0];
+    let cpi = delta.saturating_sub(CLOCK_OVERHEAD) / n;
+
+    // Mapping: the first measured instruction = first instruction after
+    // the first clock read.
+    let clock_idx = prog
+        .instrs
+        .iter()
+        .position(|i| {
+            i.srcs.iter().any(|o| {
+                matches!(
+                    o,
+                    crate::ptx::Operand::Special(crate::ptx::SpecialReg::Clock64)
+                        | crate::ptx::Operand::Special(crate::ptx::SpecialReg::Clock)
+                )
+            })
+        })
+        .ok_or_else(|| format!("{name}: no clock read"))?;
+    let mapping = sim.trace.mapping_for(clock_idx as u32 + 1);
+
+    Ok(Measurement { name: name.to_string(), cpi, delta, n, mapping, dependent })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grading_bands() {
+        assert_eq!(PaperCycles::Exact(4).grade(4), MatchGrade::Exact);
+        assert_eq!(PaperCycles::Exact(4).grade(5), MatchGrade::Close);
+        assert_eq!(PaperCycles::Exact(4).grade(9), MatchGrade::Off);
+        assert_eq!(PaperCycles::Range(2, 18).grade(10), MatchGrade::Exact);
+        assert_eq!(PaperCycles::Range(190, 235).grade(240), MatchGrade::Close);
+        assert_eq!(PaperCycles::Exact(290).grade(300), MatchGrade::Close); // ≤30%
+        assert_eq!(PaperCycles::Varies.grade(1), MatchGrade::Exact);
+    }
+
+    #[test]
+    fn protocol_end_to_end_add_u32() {
+        let cfg = AmpereConfig::a100();
+        let body = "add.u32 %r10, %r5, 1;\nadd.u32 %r11, %r6, 2;\nadd.u32 %r12, %r7, 3;";
+        let init = "add.u32 %r5, 1, 2; add.u32 %r6, 3, 4; add.u32 %r7, 5, 6;";
+        let src = measurement_kernel(init, body);
+        let m = run_measurement(&cfg, &src, 3, "add.u32", false).unwrap();
+        assert_eq!(m.cpi, 2, "delta = {}", m.delta);
+        assert_eq!(m.mapping, "IADD");
+    }
+}

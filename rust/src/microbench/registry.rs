@@ -1,0 +1,478 @@
+//! The Table V row registry: every PTX instruction the paper measures,
+//! with its printed SASS mapping and clock-cycle value, plus the template
+//! the generator expands into a measurement kernel.
+//!
+//! Template placeholders: `%D` destination, `%A`/`%B`/`%C`/`%E` sources
+//! (`%E` = 4th operand: lop3 LUT / bfi len).  Register classes are
+//! per-row because PTX mixes widths (e.g. `popc.b64` reads `%rd`, writes
+//! `%r`).
+
+use super::PaperCycles;
+
+/// Register class a placeholder expands into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegClass {
+    H,  // %h  — 16-bit
+    R,  // %r  — 32-bit int
+    F,  // %f  — f32
+    Rd, // %rd — 64-bit int
+    Fd, // %fd — f64
+    P,  // %p  — predicate
+}
+
+impl RegClass {
+    pub fn prefix(self) -> &'static str {
+        match self {
+            RegClass::H => "%h",
+            RegClass::R => "%r",
+            RegClass::F => "%f",
+            RegClass::Rd => "%rd",
+            RegClass::Fd => "%fd",
+            RegClass::P => "%p",
+        }
+    }
+
+    /// An init line producing an arithmetic-initialised register
+    /// (Insight 3: the Table V values use add-style init).
+    pub fn init_line(self, idx: u32) -> String {
+        let p = self.prefix();
+        match self {
+            RegClass::H => format!("add.f16 {p}{idx}, 1.0, 2.0;"),
+            RegClass::R => format!("add.u32 {p}{idx}, {}, 2;", idx),
+            RegClass::F => format!("add.f32 {p}{idx}, 1.25, {}.5;", idx % 7),
+            RegClass::Rd => format!("add.u64 {p}{idx}, {}, 3;", idx),
+            RegClass::Fd => format!("add.f64 {p}{idx}, 1.5, {}.25;", idx % 7),
+            RegClass::P => format!("setp.lt.u32 {p}{idx}, 1, 2;"),
+        }
+    }
+}
+
+/// One Table V row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Instruction name as the paper prints it.
+    pub name: &'static str,
+    /// Template with `%D %A %B %C %E` placeholders.
+    pub template: &'static str,
+    pub dst: RegClass,
+    pub src: RegClass,
+    /// Paper's SASS mapping string (normalised).
+    pub paper_sass: &'static str,
+    pub paper_cycles: PaperCycles,
+    /// Whether a dependent variant makes sense (dst feeds next src).
+    pub deppable: bool,
+}
+
+const fn row(
+    name: &'static str,
+    template: &'static str,
+    dst: RegClass,
+    src: RegClass,
+    paper_sass: &'static str,
+    paper_cycles: PaperCycles,
+) -> Row {
+    Row { name, template, dst, src, paper_sass, paper_cycles, deppable: true }
+}
+
+use PaperCycles::{Exact as E, Range as Rg, Varies};
+use RegClass::*;
+
+/// Every row of Table V (paper order, section by section).
+pub fn table5() -> Vec<Row> {
+    vec![
+        // ---- Add / sub ------------------------------------------------
+        row("add.u16", "add.u16 %D, %A, %B;", H, H, "UIADD3", E(2)),
+        row("addc.u32", "addc.u32 %D, %A, %B;", R, R, "IADD3.X", E(2)),
+        row("add.u32", "add.u32 %D, %A, %B;", R, R, "IADD", E(2)),
+        row("add.u64", "add.u64 %D, %A, %B;", Rd, Rd, "UIADD3.x+UIADD3", E(4)),
+        row("add.s64", "add.s64 %D, %A, %B;", Rd, Rd, "UIADD3.x+UIADD3", E(4)),
+        row("add.f16", "add.f16 %D, %A, %B;", H, H, "HADD", E(2)),
+        row("add.f32", "add.f32 %D, %A, %B;", F, F, "FADD", E(2)),
+        row("add.f64", "add.f64 %D, %A, %B;", Fd, Fd, "DADD", E(4)),
+        // ---- Mul ------------------------------------------------------
+        row("mul.wide.u16", "mul.wide.u16 %D, %A, %B;", R, H, "LOP3.LUT+IMAD", E(4)),
+        row("mul.wide.u32", "mul.wide.u32 %D, %A, %B;", Rd, R, "IMAD", E(4)),
+        row("mul.lo.u16", "mul.lo.u16 %D, %A, %B;", H, H, "LOP3.LUT+IMAD", E(4)),
+        row("mul.lo.u32", "mul.lo.u32 %D, %A, %B;", R, R, "IMAD", E(2)),
+        row("mul.lo.u64", "mul.lo.u64 %D, %A, %B;", Rd, Rd, "IMAD", E(2)),
+        row("mul24.lo.u32", "mul24.lo.u32 %D, %A, %B;", R, R, "PRMT+IMAD", E(3)),
+        row(
+            "mul24.hi.u32",
+            "mul24.hi.u32 %D, %A, %B;",
+            R,
+            R,
+            "UPRMT+USHF.R.U32.HI+IMAD.U32+PRMT",
+            E(9),
+        ),
+        row("mul.rn.f16", "mul.rn.f16 %D, %A, %B;", H, H, "HMUL2", E(2)),
+        row("mul.rn.f32", "mul.rn.f32 %D, %A, %B;", F, F, "FMUL", E(2)),
+        row("mul.rn.f64", "mul.rn.f64 %D, %A, %B;", Fd, Fd, "DMUL", E(4)),
+        // ---- MAD ------------------------------------------------------
+        row("mad.lo.u16", "mad.lo.u16 %D, %A, %B, %C;", H, H, "LOP3.LUT+IMAD", E(4)),
+        row("mad.lo.u32", "mad.lo.u32 %D, %A, %B, %C;", R, R, "FFMA", E(2)),
+        row("mad.lo.u64", "mad.lo.u64 %D, %A, %B, %C;", Rd, Rd, "IMAD", E(2)),
+        row("mad24.lo.u32", "mad24.lo.u32 %D, %A, %B, %C;", R, R, "SGXT.U32+IMAD", E(4)),
+        row(
+            "mad24.hi.u32",
+            "mad24.hi.u32 %D, %A, %B, %C;",
+            R,
+            R,
+            "USHF.R.U32.HI+UIMAD.WIDE.U32+2*UPRMT+IADD3",
+            E(11),
+        ),
+        row("mad.rn.f32", "mad.rn.f32 %D, %A, %B, %C;", F, F, "FFMA", E(2)),
+        row("mad.rn.f64", "mad.rn.f64 %D, %A, %B, %C;", Fd, Fd, "DFMA", E(4)),
+        // ---- Sad ------------------------------------------------------
+        row("sad.u16", "sad.u16 %D, %A, %B, %C;", H, H, "2*LOP3.LUT+ULOP3+VABSDIFF", E(6)),
+        row("sad.u32", "sad.u32 %D, %A, %B, %C;", R, R, "VABSDIFF+IMAD", E(3)),
+        row(
+            "sad.u64",
+            "sad.u64 %D, %A, %B, %C;",
+            Rd,
+            Rd,
+            "UISETP.GE.U32.AND+UIADD+IADD",
+            E(10),
+        ),
+        // ---- Div / Rem ------------------------------------------------
+        row("rem.u16", "rem.u16 %D, %A, %B;", H, H, "multiple instructions", E(290)),
+        row("div.u32", "div.u32 %D, %A, %B;", R, R, "multiple instructions", E(66)),
+        row("rem.u32", "rem.u32 %D, %A, %B;", R, R, "multiple instructions", E(66)),
+        row("div.u64", "div.u64 %D, %A, %B;", Rd, Rd, "multiple instructions", E(420)),
+        row("div.rn.f32", "div.rn.f32 %D, %A, %B;", F, F, "multiple instructions", E(525)),
+        row("div.rn.f64", "div.rn.f64 %D, %A, %B;", Fd, Fd, "multiple instructions", E(426)),
+        // ---- Abs ------------------------------------------------------
+        row("abs.s16", "abs.s16 %D, %A;", H, H, "PRMT+IABS+PRMT", E(4)),
+        row("abs.s32", "abs.s32 %D, %A;", R, R, "IABS", E(2)),
+        row(
+            "abs.s64",
+            "abs.s64 %D, %A;",
+            Rd,
+            Rd,
+            "UISETP.LT.AND+UIADD3.X+UIADD3+2*USEL",
+            E(11),
+        ),
+        row("abs.f16", "abs.f16 %D, %A;", H, H, "PRMT", E(1)),
+        row("abs.ftz.f32", "abs.ftz.f32 %D, %A;", F, F, "FADD.FTZ", E(2)),
+        row("abs.f64", "abs.f64 %D, %A;", Fd, Fd, "DADD", E(4)),
+        // ---- Neg ------------------------------------------------------
+        row("neg.s16", "neg.s16 %D, %A;", H, H, "UIADD3+UPRMT", E(5)),
+        row("neg.s32", "neg.s32 %D, %A;", R, R, "IADD3", E(2)),
+        row(
+            "neg.s64",
+            "neg.s64 %D, %A;",
+            Rd,
+            Rd,
+            "IMAD.MOV.U32+HFMA2.MMA+MOV+UIADD3",
+            E(10),
+        ),
+        row("neg.f32", "neg.f32 %D, %A;", F, F, "FADD", E(2)),
+        row("neg.f64", "neg.f64 %D, %A;", Fd, Fd, "DADD+UMOV", E(4)),
+        // ---- Min / Max (Insight 2's exceptions) -----------------------
+        row(
+            "min.u16",
+            "min.u16 %D, %A, %B;",
+            H,
+            H,
+            "ULOP3.LUT+UISETP.LT.U32.AND+USEL",
+            E(8),
+        ),
+        row("min.u32", "min.u32 %D, %A, %B;", R, R, "IMNMX.U32", E(2)),
+        row("min.u64", "min.u64 %D, %A, %B;", Rd, Rd, "UISETP.LT.U32.AND+2*USEL", E(8)),
+        row("min.s16", "min.s16 %D, %A, %B;", H, H, "PRMT+IMNMX", E(4)),
+        row("min.s32", "min.s32 %D, %A, %B;", R, R, "IMNMX", E(2)),
+        row(
+            "min.s64",
+            "min.s64 %D, %A, %B;",
+            Rd,
+            Rd,
+            "UISETP.LT.U32.AND+UISETP.LT.AND.EX+2*USEL",
+            E(8),
+        ),
+        row("min.f16", "min.f16 %D, %A, %B;", H, H, "HMNMX2+PRMT", E(4)),
+        row("min.f32", "min.f32 %D, %A, %B;", F, F, "FMNMX", E(2)),
+        row(
+            "min.f64",
+            "min.f64 %D, %A, %B;",
+            Fd,
+            Fd,
+            "DSETP.MIN.AND+IMAD.MOV.U32+UMOV+FSEL",
+            E(10),
+        ),
+        row("max.u32", "max.u32 %D, %A, %B;", R, R, "IMNMX.U32", E(2)),
+        row("max.s32", "max.s32 %D, %A, %B;", R, R, "IMNMX", E(2)),
+        // ---- FMA ------------------------------------------------------
+        row("fma.rn.f16", "fma.rn.f16 %D, %A, %B, %C;", H, H, "HFMA2", E(2)),
+        row("fma.rn.f32", "fma.rn.f32 %D, %A, %B, %C;", F, F, "FFMA", E(2)),
+        row("fma.rn.f64", "fma.rn.f64 %D, %A, %B, %C;", Fd, Fd, "DFMA", E(4)),
+        // ---- Sqrt / Rsqrt / Rcp ---------------------------------------
+        row("sqrt.rn.f32", "sqrt.rn.f32 %D, %A;", F, F, "multiple instructions", Rg(190, 235)),
+        row("sqrt.approx.f32", "sqrt.approx.f32 %D, %A;", F, F, "MUFU.SQRT+FMUL", Rg(2, 18)),
+        row("sqrt.rn.f64", "sqrt.rn.f64 %D, %A;", Fd, Fd, "multiple instructions", Rg(260, 340)),
+        row("rsqrt.approx.f32", "rsqrt.approx.f32 %D, %A;", F, F, "MUFU.RSQ", Rg(2, 18)),
+        row("rsqrt.approx.f64", "rsqrt.approx.f64 %D, %A;", Fd, Fd, "MUFU.RSQ64H", Rg(8, 11)),
+        row("rcp.rn.f32", "rcp.rn.f32 %D, %A;", F, F, "multiple instructions", E(198)),
+        row("rcp.approx.f32", "rcp.approx.f32 %D, %A;", F, F, "MUFU.RCP", E(23)),
+        row("rcp.rn.f64", "rcp.rn.f64 %D, %A;", Fd, Fd, "multiple instructions", E(244)),
+        // ---- Pop / Clz / Bfind / Brev ---------------------------------
+        row("popc.b32", "popc.b32 %D, %A;", R, R, "POPC", E(6)),
+        row("popc.b64", "popc.b64 %D, %A;", R, Rd, "2*UPOPC+UIADD3", E(7)),
+        row("clz.b32", "clz.b32 %D, %A;", R, R, "FLO.U32+IADD", E(7)),
+        row(
+            "clz.b64",
+            "clz.b64 %D, %A;",
+            R,
+            Rd,
+            "UISETP.NE.U32.AND+USEL+UFLO.U32+2*UIADD3",
+            E(13),
+        ),
+        row("bfind.u32", "bfind.u32 %D, %A;", R, R, "FLO.U32", E(6)),
+        row(
+            "bfind.u64",
+            "bfind.u64 %D, %A;",
+            R,
+            Rd,
+            "FLO.U32+ISETP.NE.U32.AND+IADD3+BRA",
+            E(164),
+        ),
+        row("bfind.s32", "bfind.s32 %D, %A;", R, R, "FLO", E(6)),
+        row("bfind.s64", "bfind.s64 %D, %A;", R, Rd, "multiple instructions", E(195)),
+        row("brev.b32", "brev.b32 %D, %A;", R, R, "BREV+SGXT.U32", E(2)),
+        row("brev.b64", "brev.b64 %D, %A;", Rd, Rd, "2*UBREV+MOV", E(6)),
+        // ---- testp -----------------------------------------------------
+        row(
+            "testp.normal.f32",
+            "testp.normal.f32 %D, %A;",
+            P,
+            F,
+            "IMAD.MOV.U32+2*ISETP.GE.U32.AND",
+            Rg(0, 6),
+        ),
+        row(
+            "testp.subnormal.f32",
+            "testp.subnormal.f32 %D, %A;",
+            P,
+            F,
+            "ISETP.LT.U32.AND",
+            Rg(0, 6),
+        ),
+        row(
+            "testp.normal.f64",
+            "testp.normal.f64 %D, %A;",
+            P,
+            Fd,
+            "2*UISETP.LE.U32.AND+2*UISETP.GE.U32.AND",
+            E(13),
+        ),
+        row(
+            "testp.subnormal.f64",
+            "testp.subnormal.f64 %D, %A;",
+            P,
+            Fd,
+            "UISETP.LT.U32.AND+2*UISETP.GE.U32.AND.EX",
+            E(8),
+        ),
+        // ---- copysign ---------------------------------------------------
+        row("copysign.f32", "copysign.f32 %D, %A, %B;", F, F, "2*LOP3.LUT", E(4)),
+        row(
+            "copysign.f64",
+            "copysign.f64 %D, %A, %B;",
+            Fd,
+            Fd,
+            "2*ULOP3.LUT+IMAD.U32+MOV",
+            E(6),
+        ),
+        // ---- and / or / xor / not / cnot / lop3 -------------------------
+        row("and.b16", "and.b16 %D, %A, %B;", H, H, "LOP3.LUT", E(2)),
+        row("and.b32", "and.b32 %D, %A, %B;", R, R, "LOP3.LUT", Rg(2, 3)),
+        row("and.b64", "and.b64 %D, %A, %B;", Rd, Rd, "ULOP3.LUT", Rg(2, 5)),
+        row("or.b32", "or.b32 %D, %A, %B;", R, R, "LOP3.LUT", Rg(2, 3)),
+        row("xor.b32", "xor.b32 %D, %A, %B;", R, R, "LOP3.LUT", Rg(2, 3)),
+        row("not.b16", "not.b16 %D, %A;", H, H, "LOP3.LUT", E(2)),
+        row("not.b32", "not.b32 %D, %A;", R, R, "LOP3.LUT", E(2)),
+        row("not.b64", "not.b64 %D, %A;", Rd, Rd, "2*ULOP3.LUT", E(4)),
+        row(
+            "cnot.b16",
+            "cnot.b16 %D, %A;",
+            H,
+            H,
+            "ULOP3.LUT+ISETP.EQ.U32.AND+SEL",
+            E(5),
+        ),
+        row("cnot.b32", "cnot.b32 %D, %A;", R, R, "UISETP.EQ.U32.AND+USEL", E(4)),
+        row("cnot.b64", "cnot.b64 %D, %A;", Rd, Rd, "multiple instructions", E(11)),
+        row("lop3.b32", "lop3.b32 %D, %A, %B, %C, 0xE8;", R, R, "IMAD.MOV.U32+LOP3.LUT", E(4)),
+        // ---- bfe / bfi ---------------------------------------------------
+        row(
+            "bfe.u32",
+            "bfe.u32 %D, %A, 4, 8;",
+            R,
+            R,
+            "3*PRMT+2*IMAD.MOV+SHF.R.U32.HI+SGXT.U32",
+            E(11),
+        ),
+        row(
+            "bfe.u64",
+            "bfe.u64 %D, %A, 4, 8;",
+            Rd,
+            Rd,
+            "UMOV+USHF.L.U32+UIADD3+ULOP3.LUT",
+            E(5),
+        ),
+        row("bfe.s64", "bfe.s64 %D, %A, 4, 8;", Rd, Rd, "multiple instructions", E(14)),
+        row(
+            "bfi.b32",
+            "bfi.b32 %D, %A, %B, 4, 8;",
+            R,
+            R,
+            "3*PRMT+2*IMAD.MOV+SHF.L.U32+BMSK+LOP3.LUT",
+            E(11),
+        ),
+        row(
+            "bfi.b64",
+            "bfi.b64 %D, %A, %B, 4, 8;",
+            Rd,
+            Rd,
+            "UMOV+USHF.L.U32+UIADD3+ULOP3.LUT",
+            E(5),
+        ),
+        // ---- Other --------------------------------------------------------
+        row("sin.approx.f32", "sin.approx.f32 %D, %A;", F, F, "FMUL+MUFU.SIN", E(8)),
+        row("cos.approx.f32", "cos.approx.f32 %D, %A;", F, F, "FMUL.RZ+MUFU.COS", E(8)),
+        row(
+            "lg2.approx.f32",
+            "lg2.approx.f32 %D, %A;",
+            F,
+            F,
+            "FSETP.GEU.AND+FMUL+MUFU.LG2+FADD",
+            E(18),
+        ),
+        row(
+            "ex2.approx.f32",
+            "ex2.approx.f32 %D, %A;",
+            F,
+            F,
+            "FSETP.GEU.AND+2*FMUL+MUFU.EX2",
+            E(18),
+        ),
+        row("ex2.approx.f16", "ex2.approx.f16 %D, %A;", H, H, "MUFU.EX2.F16", E(6)),
+        row("tanh.approx.f32", "tanh.approx.f32 %D, %A;", F, F, "MUFU.TANH", E(6)),
+        row("tanh.approx.f16", "tanh.approx.f16 %D, %A;", H, H, "MUFU.TANH.F16", E(6)),
+        Row {
+            name: "bar.warp.sync",
+            template: "bar.warp.sync 0xffffffff;",
+            dst: R,
+            src: R,
+            paper_sass: "NOP",
+            paper_cycles: Varies,
+            deppable: false,
+        },
+        row("fns.b32", "fns.b32 %D, %A, %B, 1;", R, R, "multiple instructions", E(79)),
+        row("cvt.rzi.s32.f32", "cvt.rzi.s32.f32 %D, %A;", R, F, "F2I.TRUNC.NTZ", E(6)),
+        row("setp.ne.s32", "setp.ne.s32 %D, %A, %B;", P, R, "ISETP.NE.AND", E(10)),
+        Row {
+            name: "mov.u32 clock",
+            template: "mov.u32 %D, %clock;",
+            dst: R,
+            src: R,
+            paper_sass: "CS2R.32",
+            paper_cycles: E(2),
+            deppable: false,
+        },
+        // ---- sub (same datapath as add; the paper folds them together) ----
+        row("sub.u32", "sub.u32 %D, %A, %B;", R, R, "IADD", E(2)),
+        row("sub.s64", "sub.s64 %D, %A, %B;", Rd, Rd, "UIADD3.x+UIADD3", E(4)),
+        row("sub.f16", "sub.f16 %D, %A, %B;", H, H, "HADD", E(2)),
+        row("sub.f32", "sub.f32 %D, %A, %B;", F, F, "FADD", E(2)),
+        row("sub.f64", "sub.f64 %D, %A, %B;", Fd, Fd, "DADD", E(4)),
+        // ---- shifts / select / remaining min-max -------------------------
+        row("shl.b32", "shl.b32 %D, %A, 3;", R, R, "SHF", E(2)),
+        row("shr.u32", "shr.u32 %D, %A, 3;", R, R, "SHF", E(2)),
+        row("shr.s32", "shr.s32 %D, %A, 3;", R, R, "SHF", E(2)),
+        row("shl.b64", "shl.b64 %D, %A, 3;", Rd, Rd, "USHF", E(2)),
+        Row {
+            name: "selp.b32",
+            template: "selp.b32 %D, %A, %B, %p2;",
+            dst: R,
+            src: R,
+            paper_sass: "SEL",
+            paper_cycles: E(2),
+            deppable: true,
+        },
+        row("max.u64", "max.u64 %D, %A, %B;", Rd, Rd, "UISETP.LT.U32.AND+2*USEL", E(8)),
+        row("max.f16", "max.f16 %D, %A, %B;", H, H, "HMNMX2+PRMT", E(4)),
+        row(
+            "max.f64",
+            "max.f64 %D, %A, %B;",
+            Fd,
+            Fd,
+            "DSETP.MIN.AND+IMAD.MOV.U32+UMOV+FSEL",
+            E(10),
+        ),
+        row("or.b64", "or.b64 %D, %A, %B;", Rd, Rd, "ULOP3.LUT", Rg(2, 5)),
+        row("xor.b64", "xor.b64 %D, %A, %B;", Rd, Rd, "ULOP3.LUT", Rg(2, 5)),
+        row("abs.f32", "abs.f32 %D, %A;", F, F, "FADD", E(2)),
+        row("neg.f16", "neg.f16 %D, %A;", H, H, "HADD", E(2)),
+        row("mul.rn.bf16", "mul.rn.bf16 %D, %A, %B;", H, H, "HMUL2", E(2)),
+        // ---- dp4a / dp2a ---------------------------------------------------
+        row(
+            "dp4a.u32.u32",
+            "dp4a.u32.u32 %D, %A, %B, %C;",
+            R,
+            R,
+            "IMAD.MOV.U32+IDP.4A.U8.U8",
+            Rg(135, 170),
+        ),
+        row(
+            "dp2a.lo.u32.u32",
+            "dp2a.lo.u32.u32 %D, %A, %B, %C;",
+            R,
+            R,
+            "IMAD.MOV.U32+IDP.2A.LO.U16.U8",
+            Rg(135, 170),
+        ),
+    ]
+}
+
+/// Table II's five instructions with (dep, indep) paper CPIs.
+pub fn table2() -> Vec<(&'static str, u64, u64)> {
+    vec![
+        ("add.f16", 3, 2),
+        ("add.u32", 4, 2),
+        ("add.f64", 5, 4),
+        ("mul.lo.u32", 3, 2),
+        ("mad.rn.f32", 4, 2),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_large_and_unique() {
+        let rows = table5();
+        assert!(rows.len() >= 95, "Table V has ~100 rows, got {}", rows.len());
+        let mut names: Vec<_> = rows.iter().map(|r| r.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), rows.len(), "duplicate row names");
+    }
+
+    #[test]
+    fn templates_have_dst_placeholder() {
+        for r in table5() {
+            if r.deppable {
+                assert!(r.template.contains("%D"), "{}", r.name);
+                assert!(r.template.contains("%A"), "{}", r.name);
+            }
+        }
+    }
+
+    #[test]
+    fn table2_rows_exist_in_table5() {
+        let t5 = table5();
+        for (name, _, _) in table2() {
+            assert!(t5.iter().any(|r| r.name == name), "{name} missing");
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Tensor-core (WMMA) microbenchmarks — Table III and Fig. 6.
+//!
+//! The Fig.-5 structure in PTX: load the A/B/C fragments for four
+//! independent chains (one per TC in an SM), run `iters` dependent
+//! `wmma.mma.sync` per chain, store, and clock around the mma block:
+//!
+//! ```text
+//! latency per PTX instruction = ((end − start) − 2) / (4 · iters)
+//! ```
+
+use super::CLOCK_OVERHEAD;
+use crate::config::AmpereConfig;
+use crate::ptx::parse_program;
+use crate::sim::Simulator;
+use crate::tensor::{throughput, Throughput, WmmaDtype, ALL_DTYPES};
+use crate::translate::translate_program;
+
+pub const CHAINS: u32 = 4; // one per tensor core (Fig. 5 part 3)
+pub const ITERS: u32 = 8;
+
+/// Table III row result.
+#[derive(Debug, Clone)]
+pub struct WmmaResult {
+    pub dtype_key: &'static str,
+    pub shapes: Vec<(u32, u32, u32)>,
+    /// Measured latency per WMMA PTX instruction.
+    pub cycles: u64,
+    pub paper_cycles: u64,
+    /// SASS decomposition, e.g. "2*HMMA.16816.F16".
+    pub sass: String,
+    pub paper_sass: String,
+    pub per_instruction_cycles: u64,
+    pub throughput: Throughput,
+    pub paper_measured_tops: f64,
+    pub paper_theoretical_tops: f64,
+}
+
+fn ptx_types(d: WmmaDtype) -> &'static str {
+    match d {
+        WmmaDtype::F16F16 => "f16.f16.f16.f16",
+        WmmaDtype::F16F32 => "f32.f16.f16.f32",
+        WmmaDtype::Bf16F32 => "f32.bf16.bf16.f32",
+        WmmaDtype::Tf32F32 => "f32.tf32.tf32.f32",
+        WmmaDtype::F64F64 => "f64.f64.f64.f64",
+        WmmaDtype::U8S32 => "s32.u8.u8.s32",
+        WmmaDtype::U4S32 => "s32.u4.u4.s32",
+    }
+}
+
+fn frag_ty(d: WmmaDtype) -> (&'static str, &'static str) {
+    // (input fragment type suffix, accumulator type suffix)
+    match d {
+        WmmaDtype::F16F16 => ("f16", "f16"),
+        WmmaDtype::F16F32 => ("f16", "f32"),
+        WmmaDtype::Bf16F32 => ("bf16", "f32"),
+        WmmaDtype::Tf32F32 => ("tf32", "f32"),
+        WmmaDtype::F64F64 => ("f64", "f64"),
+        WmmaDtype::U8S32 => ("u8", "s32"),
+        WmmaDtype::U4S32 => ("u4", "s32"),
+    }
+}
+
+pub fn paper_row(d: WmmaDtype) -> (u64, &'static str, f64, f64) {
+    // (cycles, sass, measured TOPS, theoretical TOPS) — Table III.
+    match d {
+        WmmaDtype::F16F16 => (16, "2*HMMA.16816.F16", 311.0, 312.0),
+        WmmaDtype::F16F32 => (16, "2*HMMA.16816.F32", 310.0, 312.0),
+        WmmaDtype::Bf16F32 => (16, "2*HMMA.16816.F32.BF16", 310.0, 312.0),
+        WmmaDtype::Tf32F32 => (16, "4*HMMA.1684.F32.TF32", 132.0, 156.0),
+        WmmaDtype::F64F64 => (16, "1*DMMA.884", 19.0, 19.5),
+        WmmaDtype::U8S32 => (8, "2*IMMA.16816.U8.U8", 594.0, 624.0),
+        WmmaDtype::U4S32 => (4, "1*IMMA.8832.U4.U4", 1229.0, 1248.0),
+    }
+}
+
+/// Build the Fig. 5 PTX kernel for a dtype: layout row.col for the int
+/// configs (as the paper's Table III PTX shows for u4), row.row else.
+pub fn fig5_kernel(d: WmmaDtype, iters: u32) -> String {
+    let (m, n, k) = d.primary_shape();
+    let types = ptx_types(d);
+    let (fin, facc) = frag_ty(d);
+    let layout = if d == WmmaDtype::U4S32 { "row.col" } else { "row.row" };
+    let mut lines = Vec::new();
+    // Fragment loads: a/b/c per chain; fragment id registers are
+    // %r{10c}, %r{10c+1}, %r{10c+2}; accumulator alias %r{10c+3}.
+    for ch in 0..CHAINS {
+        let base = 0x20_0000u64 + ch as u64 * 0x1_0000;
+        lines.push(format!("mov.u64 %rd{}, {};", 10 + ch, base));
+        lines.push(format!(
+            "wmma.load.a.sync.aligned.row.m{m}n{n}k{k}.{fin} {{%r{}}}, [%rd{}];",
+            10 * ch + 10,
+            10 + ch
+        ));
+        lines.push(format!(
+            "wmma.load.b.sync.aligned.col.m{m}n{n}k{k}.{fin} {{%r{}}}, [%rd{}];",
+            10 * ch + 11,
+            10 + ch
+        ));
+        lines.push(format!(
+            "wmma.load.c.sync.aligned.row.m{m}n{n}k{k}.{facc} {{%r{}}}, [%rd{}];",
+            10 * ch + 12,
+            10 + ch
+        ));
+    }
+    lines.push("mov.u64 %rd60, %clock64;".into());
+    // Part 3: iters rounds of 4 independent, per-chain dependent mmas.
+    for _ in 0..iters {
+        for ch in 0..CHAINS {
+            let (a, b, c) = (10 * ch + 10, 10 * ch + 11, 10 * ch + 12);
+            lines.push(format!(
+                "wmma.mma.sync.aligned.{layout}.m{m}n{n}k{k}.{types} {{%r{c}}}, {{%r{a}}}, {{%r{b}}}, {{%r{c}}};"
+            ));
+        }
+    }
+    lines.push("mov.u64 %rd61, %clock64;".into());
+    // Part 4: store one accumulator.
+    lines.push(format!(
+        "wmma.store.d.sync.aligned.row.m{m}n{n}k{k}.{facc} [%rd10], {{%r12}};"
+    ));
+    format!(
+        ".visible .entry wmma_bench(.param .u64 out) {{\n {}\n {}\n ret;\n}}",
+        super::REG_DECLS,
+        lines.join("\n ")
+    )
+}
+
+/// Measure one dtype.
+pub fn measure(cfg: &AmpereConfig, d: WmmaDtype) -> Result<WmmaResult, String> {
+    let src = fig5_kernel(d, ITERS);
+    let prog = parse_program(&src).map_err(|e| format!("{}: {e}", d.key()))?;
+    let tp = translate_program(&prog).map_err(|e| format!("{}: {e}", d.key()))?;
+    let mut sim = Simulator::new(cfg.clone());
+    // Seed fragment data so the functional path is exercised too.
+    for ch in 0..CHAINS as u64 {
+        let base = 0x20_0000u64 + ch * 0x1_0000;
+        for i in 0..1024u64 {
+            sim.mem
+                .dram
+                .write(base + 4 * i, &(1.0f32).to_bits().to_le_bytes());
+        }
+    }
+    let r = sim.run(&prog, &tp, &[0]).map_err(|e| format!("{}: {e}", d.key()))?;
+    let c = &r.clock_reads;
+    let delta = c[c.len() - 1] - c[c.len() - 2];
+    let cycles = delta.saturating_sub(CLOCK_OVERHEAD) / (CHAINS as u64 * ITERS as u64);
+
+    // Mapping from the dynamic trace: find a wmma.mma PTX instruction.
+    let mma_idx = prog
+        .instrs
+        .iter()
+        .position(|i| matches!(i.op, crate::ptx::PtxOp::Wmma(crate::ptx::ast::WmmaOp::Mma)))
+        .unwrap() as u32;
+    let raw = sim.trace.mapping_for(mma_idx);
+    // Drop the trailing warp-sync NOP from the mapping display.
+    let sass = raw.trim_end_matches("+NOP").to_string();
+    let sass = if sass.contains('*') { sass } else { format!("1*{sass}") };
+
+    let (paper_cycles, paper_sass, paper_meas, paper_theo) = paper_row(d);
+    Ok(WmmaResult {
+        dtype_key: d.key(),
+        shapes: d.supported_shapes(),
+        cycles,
+        paper_cycles,
+        sass,
+        paper_sass: paper_sass.to_string(),
+        per_instruction_cycles: d.per_instruction_cycles(),
+        throughput: throughput(d, 4096, cfg),
+        paper_measured_tops: paper_meas,
+        paper_theoretical_tops: paper_theo,
+    })
+}
+
+/// The full Table III.
+pub fn run_table3(cfg: &AmpereConfig) -> Result<Vec<WmmaResult>, String> {
+    ALL_DTYPES.iter().map(|d| measure(cfg, *d)).collect()
+}
+
+/// Fig. 6: dynamic SASS of a single TC instruction — clock reads around
+/// one mma show CS2R / HMMA×n / NOP / CS2R.
+pub fn fig6_trace(cfg: &AmpereConfig) -> Result<Vec<&'static str>, String> {
+    let d = WmmaDtype::F16F16;
+    let (m, n, k) = d.primary_shape();
+    let src = format!(
+        ".visible .entry fig6(.param .u64 out) {{\n {}\n \
+         mov.u64 %rd10, 2097152;\n \
+         wmma.load.a.sync.aligned.row.m{m}n{n}k{k}.f16 {{%r10}}, [%rd10];\n \
+         wmma.load.b.sync.aligned.col.m{m}n{n}k{k}.f16 {{%r11}}, [%rd10];\n \
+         wmma.load.c.sync.aligned.row.m{m}n{n}k{k}.f16 {{%r12}}, [%rd10];\n \
+         mov.u64 %rd60, %clock64;\n \
+         wmma.mma.sync.aligned.row.row.m{m}n{n}k{k}.f16.f16.f16.f16 {{%r12}}, {{%r10}}, {{%r11}}, {{%r12}};\n \
+         mov.u64 %rd61, %clock64;\n ret;\n}}",
+        super::REG_DECLS
+    );
+    let prog = parse_program(&src).map_err(|e| e.to_string())?;
+    let tp = translate_program(&prog).map_err(|e| e.to_string())?;
+    let mut sim = Simulator::new(cfg.clone());
+    sim.run(&prog, &tp, &[0]).map_err(|e| e.to_string())?;
+    Ok(sim.trace.mnemonics())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_latencies_match_paper() {
+        let cfg = AmpereConfig::a100();
+        for r in run_table3(&cfg).unwrap() {
+            assert_eq!(
+                r.cycles, r.paper_cycles,
+                "{}: measured {} vs paper {}",
+                r.dtype_key, r.cycles, r.paper_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn table3_sass_decomposition_strings() {
+        let cfg = AmpereConfig::a100();
+        for r in run_table3(&cfg).unwrap() {
+            assert_eq!(r.sass, r.paper_sass, "{}", r.dtype_key);
+        }
+    }
+
+    #[test]
+    fn table3_throughput_bands() {
+        let cfg = AmpereConfig::a100();
+        for r in run_table3(&cfg).unwrap() {
+            let rel =
+                (r.throughput.theoretical_tops - r.paper_theoretical_tops).abs()
+                    / r.paper_theoretical_tops;
+            assert!(rel < 0.01, "{} theoretical", r.dtype_key);
+            let relm = (r.throughput.measured_tops - r.paper_measured_tops).abs()
+                / r.paper_measured_tops;
+            assert!(relm < 0.05, "{} measured", r.dtype_key);
+        }
+    }
+
+    #[test]
+    fn fig6_shows_hmma_pair_and_nop() {
+        let cfg = AmpereConfig::a100();
+        let trace = fig6_trace(&cfg).unwrap();
+        let hmma = trace.iter().filter(|m| m.starts_with("HMMA.16816")).count();
+        assert_eq!(hmma, 2, "{trace:?}");
+        assert!(trace.contains(&"NOP"), "warp-sync NOP: {trace:?}");
+        assert!(trace.iter().any(|m| *m == "CS2R"));
+    }
+
+    #[test]
+    fn latency_shape_independent() {
+        // Run the 3 fp16 shapes: same measured latency (paper §V-C).
+        let cfg = AmpereConfig::a100();
+        for shape in WmmaDtype::F16F32.supported_shapes() {
+            assert_eq!(
+                crate::tensor::sass_instruction_count(WmmaDtype::F16F32, shape),
+                2,
+                "{shape:?}"
+            );
+        }
+        let _ = crate::tensor::ptx_latency(WmmaDtype::F16F32, (8, 32, 16));
+    }
+}

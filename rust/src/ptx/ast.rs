@@ -1,0 +1,462 @@
+//! Typed PTX AST: operations, operands, instructions, programs.
+
+use super::types::{CmpOp, Modifiers, PtxType, TestpKind};
+use std::collections::HashMap;
+use std::fmt;
+
+/// A virtual register: dense index into the program's register file.
+/// Names (`%r5`, `%rd3`, `%p1`, …) live in [`PtxProgram::reg_names`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub u32);
+
+/// PTX special registers the suite reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpecialReg {
+    /// `%clock` — 32-bit cycle counter (Fig. 4a: S2R + barrier).
+    Clock,
+    /// `%clock64` — 64-bit cycle counter (Fig. 4b: CS2R, no barrier).
+    Clock64,
+    Tid(u8),
+    Ctaid(u8),
+}
+
+impl fmt::Display for SpecialReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecialReg::Clock => write!(f, "%clock"),
+            SpecialReg::Clock64 => write!(f, "%clock64"),
+            SpecialReg::Tid(d) => write!(f, "%tid.{}", (b'x' + d) as char),
+            SpecialReg::Ctaid(d) => write!(f, "%ctaid.{}", (b'x' + d) as char),
+        }
+    }
+}
+
+/// Instruction operand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Operand {
+    Reg(Reg),
+    /// Integer immediate (bit pattern; sign handled by the op's type).
+    Imm(i64),
+    /// Floating immediate.
+    FImm(f64),
+    /// Memory operand `[reg + offset]`.
+    Mem { base: Reg, offset: i64 },
+    /// Memory operand addressed by symbol (e.g. `[shMem1]`, `[shMem1+8]`).
+    SymMem { sym: u32, offset: i64 },
+    /// Special register read.
+    Special(SpecialReg),
+    /// Kernel parameter slot (for `ld.param`).
+    Param(u32),
+    /// Branch target (instruction index after label resolution).
+    Target(u32),
+}
+
+impl Operand {
+    pub fn as_reg(&self) -> Option<Reg> {
+        match self {
+            Operand::Reg(r) => Some(*r),
+            _ => None,
+        }
+    }
+}
+
+/// WMMA sub-operation (Fig. 5 / Table III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WmmaOp {
+    LoadA,
+    LoadB,
+    LoadC,
+    Mma,
+    Store,
+}
+
+/// The PTX operation vocabulary of the paper (Table V + Figs. 1–5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PtxOp {
+    // Arithmetic
+    Add,
+    Addc,
+    Sub,
+    Mul,
+    Mul24,
+    Mad,
+    Mad24,
+    Fma,
+    Sad,
+    Div,
+    Rem,
+    Abs,
+    Neg,
+    Min,
+    Max,
+    // Transcendental / multi-instruction
+    Sqrt,
+    Rsqrt,
+    Rcp,
+    Sin,
+    Cos,
+    Lg2,
+    Ex2,
+    Tanh,
+    // Bit manipulation
+    Popc,
+    Clz,
+    Brev,
+    Bfind,
+    Bfe,
+    Bfi,
+    Fns,
+    Copysign,
+    And,
+    Or,
+    Xor,
+    Not,
+    Cnot,
+    Lop3,
+    Shl,
+    Shr,
+    Shf,
+    Prmt,
+    // Predicates / select / convert
+    Testp,
+    Setp,
+    Selp,
+    Cvt,
+    Cvta,
+    // Data movement
+    Mov,
+    Ld,
+    St,
+    // Dot products
+    Dp4a,
+    Dp2a,
+    // Control
+    Bra,
+    Bar,
+    BarWarpSync,
+    Ret,
+    Exit,
+    // Tensor core
+    Wmma(WmmaOp),
+}
+
+impl PtxOp {
+    /// Mnemonic (without type/modifier suffixes).
+    pub fn mnemonic(&self) -> &'static str {
+        use PtxOp::*;
+        match self {
+            Add => "add",
+            Addc => "addc",
+            Sub => "sub",
+            Mul => "mul",
+            Mul24 => "mul24",
+            Mad => "mad",
+            Mad24 => "mad24",
+            Fma => "fma",
+            Sad => "sad",
+            Div => "div",
+            Rem => "rem",
+            Abs => "abs",
+            Neg => "neg",
+            Min => "min",
+            Max => "max",
+            Sqrt => "sqrt",
+            Rsqrt => "rsqrt",
+            Rcp => "rcp",
+            Sin => "sin",
+            Cos => "cos",
+            Lg2 => "lg2",
+            Ex2 => "ex2",
+            Tanh => "tanh",
+            Popc => "popc",
+            Clz => "clz",
+            Brev => "brev",
+            Bfind => "bfind",
+            Bfe => "bfe",
+            Bfi => "bfi",
+            Fns => "fns",
+            Copysign => "copysign",
+            And => "and",
+            Or => "or",
+            Xor => "xor",
+            Not => "not",
+            Cnot => "cnot",
+            Lop3 => "lop3",
+            Shl => "shl",
+            Shr => "shr",
+            Shf => "shf",
+            Prmt => "prmt",
+            Testp => "testp",
+            Setp => "setp",
+            Selp => "selp",
+            Cvt => "cvt",
+            Cvta => "cvta",
+            Mov => "mov",
+            Ld => "ld",
+            St => "st",
+            Dp4a => "dp4a",
+            Dp2a => "dp2a",
+            Bra => "bra",
+            Bar => "bar",
+            BarWarpSync => "bar.warp.sync",
+            Ret => "ret",
+            Exit => "exit",
+            Wmma(WmmaOp::LoadA) => "wmma.load.a",
+            Wmma(WmmaOp::LoadB) => "wmma.load.b",
+            Wmma(WmmaOp::LoadC) => "wmma.load.c",
+            Wmma(WmmaOp::Mma) => "wmma.mma",
+            Wmma(WmmaOp::Store) => "wmma.store.d",
+        }
+    }
+
+    pub fn is_control(&self) -> bool {
+        matches!(
+            self,
+            PtxOp::Bra | PtxOp::Bar | PtxOp::BarWarpSync | PtxOp::Ret | PtxOp::Exit
+        )
+    }
+}
+
+/// One PTX instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PtxInstruction {
+    /// Optional predicate guard `@%p` (negated if `.1` is false... see field).
+    pub guard: Option<(Reg, bool)>,
+    pub op: PtxOp,
+    /// Primary data type (`add.u32` → `U32`).
+    pub ty: Option<PtxType>,
+    /// Secondary type (e.g. `cvt.rzi.s32.f32` → src type; `dp4a.u32.u32`).
+    pub ty2: Option<PtxType>,
+    pub mods: Modifiers,
+    pub dst: Option<Operand>,
+    /// Second destination (e.g. `setp` with two preds — unused by suite).
+    pub dst2: Option<Operand>,
+    pub srcs: Vec<Operand>,
+    /// WMMA geometry `m16n16k16` when `op` is `Wmma(_)`.
+    pub wmma_shape: Option<(u32, u32, u32)>,
+    /// WMMA fragment dtypes (d, a, b, c) when `op` is `Wmma(Mma)`.
+    pub wmma_types: Option<[PtxType; 4]>,
+    /// WMMA layout row-major flags (a_row, b_row) for the MOVM rules.
+    pub wmma_layout: Option<(bool, bool)>,
+}
+
+impl PtxInstruction {
+    pub fn new(op: PtxOp) -> Self {
+        Self {
+            guard: None,
+            op,
+            ty: None,
+            ty2: None,
+            mods: Modifiers::default(),
+            dst: None,
+            dst2: None,
+            srcs: Vec::new(),
+            wmma_shape: None,
+            wmma_types: None,
+            wmma_layout: None,
+        }
+    }
+
+    /// Registers this instruction reads (RAW sources for the scoreboard).
+    pub fn src_regs(&self) -> impl Iterator<Item = Reg> + '_ {
+        let guard = self.guard.map(|(r, _)| r);
+        let mem_dst = match self.dst {
+            Some(Operand::Mem { base, .. }) => Some(base),
+            _ => None,
+        };
+        self.srcs
+            .iter()
+            .filter_map(|o| match o {
+                Operand::Reg(r) => Some(*r),
+                Operand::Mem { base, .. } => Some(*base),
+                _ => None,
+            })
+            .chain(guard)
+            .chain(mem_dst)
+    }
+
+    /// Register this instruction writes, if any.
+    pub fn dst_reg(&self) -> Option<Reg> {
+        match (self.op, &self.dst) {
+            (PtxOp::St, _) => None, // store's "dst" is a memory operand
+            (_, Some(Operand::Reg(r))) => Some(*r),
+            _ => None,
+        }
+    }
+
+    /// Full dotted mnemonic for display: `add.s32`, `ld.global.cv.u64`, …
+    pub fn display_name(&self) -> String {
+        let mut s = String::from(self.op.mnemonic());
+        use std::fmt::Write;
+        if self.mods.space != super::types::StateSpace::Generic {
+            let _ = write!(s, ".{}", self.mods.space);
+        }
+        if self.mods.cache != super::types::CacheOp::Default {
+            let _ = write!(s, ".{}", self.mods.cache);
+        }
+        match self.mods.round {
+            super::types::RoundMode::Rn => s.push_str(".rn"),
+            super::types::RoundMode::Rz => s.push_str(".rz"),
+            super::types::RoundMode::Rzi => s.push_str(".rzi"),
+            super::types::RoundMode::Rni => s.push_str(".rni"),
+            super::types::RoundMode::None => {}
+        }
+        if self.mods.approx {
+            s.push_str(".approx");
+        }
+        if self.mods.ftz {
+            s.push_str(".ftz");
+        }
+        if self.mods.lo {
+            s.push_str(".lo");
+        }
+        if self.mods.hi {
+            s.push_str(".hi");
+        }
+        if self.mods.wide {
+            s.push_str(".wide");
+        }
+        if let Some(k) = self.mods.testp {
+            let _ = write!(s, ".{k:?}").map(|_| ());
+        }
+        if let Some(c) = self.mods.cmp {
+            let _ = write!(s, ".{c}");
+        }
+        if let Some(t) = self.ty {
+            let _ = write!(s, ".{t}");
+        }
+        if let Some(t) = self.ty2 {
+            let _ = write!(s, ".{t}");
+        }
+        s
+    }
+
+    pub fn cmp(&self) -> Option<CmpOp> {
+        self.mods.cmp
+    }
+
+    pub fn testp_kind(&self) -> Option<TestpKind> {
+        self.mods.testp
+    }
+}
+
+/// Kernel parameter descriptor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelParam {
+    pub name: String,
+    pub ty: PtxType,
+}
+
+/// A parsed/built PTX kernel.
+#[derive(Debug, Clone, Default)]
+pub struct PtxProgram {
+    pub name: String,
+    pub params: Vec<KernelParam>,
+    pub instrs: Vec<PtxInstruction>,
+    /// Register display names, indexed by `Reg.0`.
+    pub reg_names: Vec<String>,
+    /// Register declared types, indexed by `Reg.0`.
+    pub reg_types: Vec<PtxType>,
+    /// Shared-memory symbols: name → (offset, size).
+    pub shared_syms: Vec<(String, u64, u64)>,
+    /// Label name → instruction index (after resolution).
+    pub labels: HashMap<String, u32>,
+}
+
+impl PtxProgram {
+    pub fn reg_count(&self) -> usize {
+        self.reg_names.len()
+    }
+
+    pub fn reg_name(&self, r: Reg) -> &str {
+        &self.reg_names[r.0 as usize]
+    }
+
+    pub fn reg_type(&self, r: Reg) -> PtxType {
+        self.reg_types[r.0 as usize]
+    }
+
+    /// Validates internal consistency (used by proptest invariants):
+    /// every operand register exists, every branch target is in range.
+    pub fn validate(&self) -> Result<(), String> {
+        let nregs = self.reg_names.len() as u32;
+        let ninstr = self.instrs.len() as u32;
+        for (i, ins) in self.instrs.iter().enumerate() {
+            let check_op = |o: &Operand| -> Result<(), String> {
+                match o {
+                    Operand::Reg(Reg(r)) | Operand::Mem { base: Reg(r), .. } if *r >= nregs => {
+                        Err(format!("instr {i}: register %{r} out of range"))
+                    }
+                    Operand::Target(t) if *t > ninstr => {
+                        Err(format!("instr {i}: branch target {t} out of range"))
+                    }
+                    _ => Ok(()),
+                }
+            };
+            if let Some(d) = &ins.dst {
+                check_op(d)?;
+            }
+            for s in &ins.srcs {
+                check_op(s)?;
+            }
+            if let Some((Reg(r), _)) = ins.guard {
+                if r >= nregs {
+                    return Err(format!("instr {i}: guard %{r} out of range"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn src_regs_includes_mem_base_and_guard() {
+        let mut i = PtxInstruction::new(PtxOp::Ld);
+        i.dst = Some(Operand::Reg(Reg(0)));
+        i.srcs = vec![Operand::Mem { base: Reg(1), offset: 8 }];
+        i.guard = Some((Reg(2), true));
+        let srcs: Vec<Reg> = i.src_regs().collect();
+        assert!(srcs.contains(&Reg(1)));
+        assert!(srcs.contains(&Reg(2)));
+        assert_eq!(i.dst_reg(), Some(Reg(0)));
+    }
+
+    #[test]
+    fn store_has_no_dst_reg() {
+        let mut i = PtxInstruction::new(PtxOp::St);
+        i.dst = Some(Operand::Mem { base: Reg(0), offset: 0 });
+        i.srcs = vec![Operand::Reg(Reg(1))];
+        assert_eq!(i.dst_reg(), None);
+        let srcs: Vec<Reg> = i.src_regs().collect();
+        assert!(srcs.contains(&Reg(0)), "store reads its address base");
+        assert!(srcs.contains(&Reg(1)));
+    }
+
+    #[test]
+    fn display_names() {
+        let mut i = PtxInstruction::new(PtxOp::Add);
+        i.ty = Some(PtxType::U32);
+        assert_eq!(i.display_name(), "add.u32");
+
+        let mut l = PtxInstruction::new(PtxOp::Ld);
+        l.ty = Some(PtxType::U64);
+        l.mods.space = crate::ptx::types::StateSpace::Global;
+        l.mods.cache = crate::ptx::types::CacheOp::Cv;
+        assert_eq!(l.display_name(), "ld.global.cv.u64");
+    }
+
+    #[test]
+    fn validate_catches_bad_reg() {
+        let mut p = PtxProgram::default();
+        p.reg_names.push("%r0".into());
+        p.reg_types.push(PtxType::U32);
+        let mut i = PtxInstruction::new(PtxOp::Add);
+        i.dst = Some(Operand::Reg(Reg(7)));
+        p.instrs.push(i);
+        assert!(p.validate().is_err());
+    }
+}

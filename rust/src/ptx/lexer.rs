@@ -1,0 +1,291 @@
+//! PTX lexer: turns kernel text into a token stream.
+//!
+//! PTX's lexical grammar is simple: dotted mnemonics are lexed as
+//! `Ident Dot Ident …` and reassembled by the parser; `%`/`$`/`_` start
+//! identifiers (registers, labels, symbols).
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Token {
+    /// Identifier, register (`%r5`), label (`$Mem_store`), or directive
+    /// name (the leading `.` is a separate [`Token::Dot`]).
+    Ident(String),
+    /// Integer literal (decimal or 0x hex).
+    Int(i64),
+    /// Floating literal.
+    Float(f64),
+    Dot,
+    Comma,
+    Semi,
+    Colon,
+    At,
+    Bang,
+    Plus,
+    Minus,
+    LBracket,
+    RBracket,
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    Lt,
+    Gt,
+}
+
+impl fmt::Display for Token {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Lexing error with byte offset and a short message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LexError {
+    pub offset: usize,
+    pub message: String,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lex error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_' || c == '%' || c == '$'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '$'
+}
+
+/// Tokenize PTX text.  `//` line comments and `/* */` block comments are
+/// skipped.
+pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
+    let bytes: Vec<char> = src.chars().collect();
+    let mut out = Vec::with_capacity(src.len() / 4);
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == '/' => {
+                while i < bytes.len() && bytes[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == '*' => {
+                i += 2;
+                while i + 1 < bytes.len() && !(bytes[i] == '*' && bytes[i + 1] == '/') {
+                    i += 1;
+                }
+                i = (i + 2).min(bytes.len());
+            }
+            '.' => {
+                out.push(Token::Dot);
+                i += 1;
+            }
+            ',' => {
+                out.push(Token::Comma);
+                i += 1;
+            }
+            ';' => {
+                out.push(Token::Semi);
+                i += 1;
+            }
+            ':' => {
+                out.push(Token::Colon);
+                i += 1;
+            }
+            '@' => {
+                out.push(Token::At);
+                i += 1;
+            }
+            '!' => {
+                out.push(Token::Bang);
+                i += 1;
+            }
+            '+' => {
+                out.push(Token::Plus);
+                i += 1;
+            }
+            '-' => {
+                out.push(Token::Minus);
+                i += 1;
+            }
+            '[' => {
+                out.push(Token::LBracket);
+                i += 1;
+            }
+            ']' => {
+                out.push(Token::RBracket);
+                i += 1;
+            }
+            '(' => {
+                out.push(Token::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Token::RParen);
+                i += 1;
+            }
+            '{' => {
+                out.push(Token::LBrace);
+                i += 1;
+            }
+            '}' => {
+                out.push(Token::RBrace);
+                i += 1;
+            }
+            '<' => {
+                out.push(Token::Lt);
+                i += 1;
+            }
+            '>' => {
+                out.push(Token::Gt);
+                i += 1;
+            }
+            '0' if i + 1 < bytes.len() && (bytes[i + 1] == 'b' || bytes[i + 1] == 'B') => {
+                let start = i;
+                i += 2;
+                let b0 = i;
+                while i < bytes.len() && (bytes[i] == '0' || bytes[i] == '1') {
+                    i += 1;
+                }
+                if i == b0 {
+                    return Err(LexError { offset: start, message: "empty binary literal".into() });
+                }
+                let s: String = bytes[b0..i].iter().collect();
+                let v = u64::from_str_radix(&s, 2)
+                    .map_err(|e| LexError { offset: start, message: e.to_string() })?;
+                out.push(Token::Int(v as i64));
+            }
+            '0' if i + 1 < bytes.len() && (bytes[i + 1] == 'x' || bytes[i + 1] == 'X') => {
+                let start = i;
+                i += 2;
+                let h0 = i;
+                while i < bytes.len() && bytes[i].is_ascii_hexdigit() {
+                    i += 1;
+                }
+                if i == h0 {
+                    return Err(LexError { offset: start, message: "empty hex literal".into() });
+                }
+                let s: String = bytes[h0..i].iter().collect();
+                let v = u64::from_str_radix(&s, 16)
+                    .map_err(|e| LexError { offset: start, message: e.to_string() })?;
+                out.push(Token::Int(v as i64));
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+                // Float only when digits follow the dot (`5.` is "5" "." in
+                // PTX-land: dotted suffixes bind tighter than decimals).
+                if i + 1 < bytes.len()
+                    && bytes[i] == '.'
+                    && bytes[i + 1].is_ascii_digit()
+                {
+                    i += 1;
+                    while i < bytes.len() && bytes[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                    let s: String = bytes[start..i].iter().collect();
+                    let v = s
+                        .parse::<f64>()
+                        .map_err(|e| LexError { offset: start, message: e.to_string() })?;
+                    out.push(Token::Float(v));
+                } else {
+                    let s: String = bytes[start..i].iter().collect();
+                    let v = s
+                        .parse::<i64>()
+                        .map_err(|e| LexError { offset: start, message: e.to_string() })?;
+                    out.push(Token::Int(v));
+                }
+            }
+            c if is_ident_start(c) => {
+                let start = i;
+                i += 1;
+                while i < bytes.len() && is_ident_cont(bytes[i]) {
+                    i += 1;
+                }
+                out.push(Token::Ident(bytes[start..i].iter().collect()));
+            }
+            other => {
+                return Err(LexError {
+                    offset: i,
+                    message: format!("unexpected character {other:?}"),
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_instruction() {
+        let toks = lex("add.s32 %r5, 5, %r3;").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Token::Ident("add".into()),
+                Token::Dot,
+                Token::Ident("s32".into()),
+                Token::Ident("%r5".into()),
+                Token::Comma,
+                Token::Int(5),
+                Token::Comma,
+                Token::Ident("%r3".into()),
+                Token::Semi,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_memory_operand() {
+        let toks = lex("st.global.u32 [%rd4 + 8], %r11;").unwrap();
+        assert!(toks.contains(&Token::LBracket));
+        assert!(toks.contains(&Token::Plus));
+        assert!(toks.contains(&Token::Int(8)));
+    }
+
+    #[test]
+    fn lexes_comments_and_hex() {
+        let toks = lex("// c\nmov.u32 %r1, 0xFF; /* b */ ret;").unwrap();
+        assert!(toks.contains(&Token::Int(0xFF)));
+        assert!(toks.contains(&Token::Ident("ret".into())));
+    }
+
+    #[test]
+    fn lexes_labels_and_guards() {
+        let toks = lex("$L: @%p1 bra $L;").unwrap();
+        assert_eq!(toks[0], Token::Ident("$L".into()));
+        assert_eq!(toks[1], Token::Colon);
+        assert_eq!(toks[2], Token::At);
+    }
+
+    #[test]
+    fn lexes_reg_decl() {
+        let toks = lex(".reg .b32 %r<100>;").unwrap();
+        assert!(toks.contains(&Token::Lt));
+        assert!(toks.contains(&Token::Int(100)));
+    }
+
+    #[test]
+    fn lexes_float() {
+        let toks = lex("add.f32 %f1, %f2, 1.5;").unwrap();
+        assert!(toks.contains(&Token::Float(1.5)));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(lex("add ~ %r1").is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! PTX ISA front-end.
+//!
+//! The paper's microbenchmarks are written *directly in PTX* (Figs. 1–3),
+//! so the suite needs a real PTX front-end: a lexer/parser for the textual
+//! form, a typed AST, and a programmatic [`builder`] the generators in
+//! `microbench` use to synthesise kernels (the paper "tweaks the PTX by
+//! trial and error" — our generators do the tweaking deterministically).
+//!
+//! Coverage: the full instruction vocabulary of Table V plus the memory,
+//! control and WMMA instructions of Figs. 1–5 — not the entire PTX 7.x
+//! spec.  Anything outside the vocabulary is a parse error, never a silent
+//! skip.
+
+pub mod ast;
+pub mod builder;
+pub mod lexer;
+pub mod parser;
+pub mod types;
+
+pub use ast::{Operand, PtxInstruction, PtxOp, PtxProgram, Reg, SpecialReg};
+pub use builder::KernelBuilder;
+pub use parser::parse_program;
+pub use types::{CacheOp, Modifiers, PtxType, RoundMode, StateSpace};

@@ -1,0 +1,831 @@
+//! PTX parser: token stream → [`PtxProgram`].
+//!
+//! Parses the dialect the paper's microbenchmarks use (Figs. 1–3 parse
+//! verbatim): `.visible .entry` kernels, `.reg`/`.shared` declarations,
+//! labels, predicated instructions, dotted mnemonic suffixes, memory
+//! operands, special registers, and the WMMA instruction family.
+
+use super::ast::*;
+use super::lexer::{lex, Token};
+use super::types::*;
+use std::collections::HashMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub at: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parse error at token {}: {}", self.at, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+    prog: PtxProgram,
+    regs: HashMap<String, Reg>,
+    /// Declared register banks: (name prefix, type), e.g. ("%r", B32).
+    banks: Vec<(String, PtxType)>,
+    shared: HashMap<String, u32>,
+    /// (instr index, label name) fixups for forward branches.
+    fixups: Vec<(usize, String)>,
+    pending_labels: Vec<String>,
+    /// Ordinal of the layout suffix being decoded (0 = A, 1 = B) within
+    /// the current wmma mnemonic.
+    wmma_layout_seen: u32,
+}
+
+/// Parse a full PTX module containing one `.entry` kernel.
+pub fn parse_program(src: &str) -> Result<PtxProgram, ParseError> {
+    let toks = lex(src).map_err(|e| ParseError { at: 0, message: e.to_string() })?;
+    let mut p = Parser {
+        toks,
+        pos: 0,
+        prog: PtxProgram::default(),
+        regs: HashMap::new(),
+        banks: Vec::new(),
+        shared: HashMap::new(),
+        fixups: Vec::new(),
+        pending_labels: Vec::new(),
+        wmma_layout_seen: 0,
+    };
+    p.module()?;
+    p.resolve_fixups()?;
+    p.prog
+        .validate()
+        .map_err(|m| ParseError { at: 0, message: m })?;
+    Ok(p.prog)
+}
+
+impl Parser {
+    fn err<T>(&self, message: impl Into<String>) -> Result<T, ParseError> {
+        Err(ParseError { at: self.pos, message: message.into() })
+    }
+
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Token> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, t: &Token) -> bool {
+        if self.peek() == Some(t) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, t: Token) -> Result<(), ParseError> {
+        if self.eat(&t) {
+            Ok(())
+        } else {
+            self.err(format!("expected {t:?}, found {:?}", self.peek()))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, ParseError> {
+        match self.next() {
+            Some(Token::Ident(s)) => Ok(s),
+            other => Err(ParseError {
+                at: self.pos,
+                message: format!("expected identifier, found {other:?}"),
+            }),
+        }
+    }
+
+    // ---- module / kernel structure ----------------------------------
+
+    fn module(&mut self) -> Result<(), ParseError> {
+        // Skip leading version/target directives if present; find .entry.
+        while self.peek().is_some() {
+            if self.eat(&Token::Dot) {
+                let d = self.ident()?;
+                match d.as_str() {
+                    "version" | "target" | "address_size" => {
+                        // consume until a dot-directive or ident that starts
+                        // the next directive: simplest is skip to next Dot.
+                        while let Some(t) = self.peek() {
+                            if *t == Token::Dot {
+                                break;
+                            }
+                            self.pos += 1;
+                        }
+                    }
+                    "visible" | "entry" => {
+                        if d == "visible" {
+                            self.expect(Token::Dot)?;
+                            let e = self.ident()?;
+                            if e != "entry" {
+                                return self.err(format!(".visible .{e}: expected .entry"));
+                            }
+                        }
+                        self.kernel()?;
+                        return Ok(());
+                    }
+                    other => return self.err(format!("unknown module directive .{other}")),
+                }
+            } else {
+                return self.err(format!("expected directive, found {:?}", self.peek()));
+            }
+        }
+        self.err("no .entry kernel found")
+    }
+
+    fn kernel(&mut self) -> Result<(), ParseError> {
+        self.prog.name = self.ident()?;
+        if self.eat(&Token::LParen) {
+            while !self.eat(&Token::RParen) {
+                self.expect(Token::Dot)?;
+                let d = self.ident()?;
+                if d != "param" {
+                    return self.err(format!("expected .param, got .{d}"));
+                }
+                self.expect(Token::Dot)?;
+                let tys = self.ident()?;
+                let ty = PtxType::parse(&tys)
+                    .ok_or_else(|| ParseError { at: self.pos, message: format!("bad param type {tys}") })?;
+                let name = self.ident()?;
+                self.prog.params.push(KernelParam { name, ty });
+                self.eat(&Token::Comma);
+            }
+        }
+        self.expect(Token::LBrace)?;
+        while !self.eat(&Token::RBrace) {
+            self.statement()?;
+        }
+        Ok(())
+    }
+
+    fn statement(&mut self) -> Result<(), ParseError> {
+        match self.peek().cloned() {
+            Some(Token::Dot) => {
+                self.pos += 1;
+                let d = self.ident()?;
+                match d.as_str() {
+                    "reg" => self.reg_decl(),
+                    "shared" => self.shared_decl(),
+                    other => self.err(format!("unknown body directive .{other}")),
+                }
+            }
+            Some(Token::Ident(name)) if name.starts_with('$') => {
+                // Label definition `$L:`.
+                self.pos += 1;
+                self.expect(Token::Colon)?;
+                self.pending_labels.push(name);
+                Ok(())
+            }
+            Some(Token::At) => self.instruction(),
+            Some(Token::Ident(_)) => self.instruction(),
+            other => self.err(format!("unexpected token {other:?} in kernel body")),
+        }
+    }
+
+    /// `.reg .b32 %r<100>;` — declares a register bank.
+    fn reg_decl(&mut self) -> Result<(), ParseError> {
+        self.expect(Token::Dot)?;
+        let tys = self.ident()?;
+        let ty = PtxType::parse(&tys)
+            .ok_or_else(|| ParseError { at: self.pos, message: format!("bad reg type {tys}") })?;
+        let prefix = self.ident()?;
+        self.expect(Token::Lt)?;
+        match self.next() {
+            Some(Token::Int(_)) => {}
+            other => return self.err(format!("expected bank size, found {other:?}")),
+        }
+        self.expect(Token::Gt)?;
+        self.expect(Token::Semi)?;
+        self.banks.push((prefix, ty));
+        Ok(())
+    }
+
+    /// `.shared .align 8 .b8 shMem1[1024];`
+    fn shared_decl(&mut self) -> Result<(), ParseError> {
+        let mut elem_bits = 8u64;
+        loop {
+            if self.eat(&Token::Dot) {
+                let d = self.ident()?;
+                match d.as_str() {
+                    "align" => match self.next() {
+                        Some(Token::Int(_)) => {}
+                        other => return self.err(format!("expected align, found {other:?}")),
+                    },
+                    "b8" | "u8" | "s8" => elem_bits = 8,
+                    t => {
+                        if let Some(ty) = PtxType::parse(t) {
+                            elem_bits = ty.bits() as u64;
+                        } else {
+                            return self.err(format!("bad shared type .{t}"));
+                        }
+                    }
+                }
+            } else {
+                break;
+            }
+        }
+        let name = self.ident()?;
+        let mut size = elem_bits / 8;
+        if self.eat(&Token::LBracket) {
+            match self.next() {
+                Some(Token::Int(n)) => size = n as u64 * elem_bits / 8,
+                other => return self.err(format!("expected array size, found {other:?}")),
+            }
+            self.expect(Token::RBracket)?;
+        }
+        self.expect(Token::Semi)?;
+        let offset = self
+            .prog
+            .shared_syms
+            .last()
+            .map(|(_, o, s)| o + s)
+            .unwrap_or(0);
+        let idx = self.prog.shared_syms.len() as u32;
+        self.shared.insert(name.clone(), idx);
+        self.prog.shared_syms.push((name, offset, size));
+        Ok(())
+    }
+
+    // ---- registers ----------------------------------------------------
+
+    fn reg_for(&mut self, name: &str) -> Result<Reg, ParseError> {
+        if let Some(r) = self.regs.get(name) {
+            return Ok(*r);
+        }
+        // Longest declared bank prefix match decides the type.
+        let mut ty = None;
+        let mut best = 0usize;
+        for (prefix, t) in &self.banks {
+            if name.starts_with(prefix.as_str()) && prefix.len() > best {
+                // the remainder must be numeric (%r12 matches bank %r).
+                if name[prefix.len()..].chars().all(|c| c.is_ascii_digit()) {
+                    best = prefix.len();
+                    ty = Some(*t);
+                }
+            }
+        }
+        let ty = match ty {
+            Some(t) => t,
+            None if name.starts_with("%p") => PtxType::Pred,
+            None if name.starts_with("%rd") || name.starts_with("%fd") => PtxType::B64,
+            None if name.starts_with("%h") => PtxType::B16,
+            None => PtxType::B32,
+        };
+        let r = Reg(self.prog.reg_names.len() as u32);
+        self.prog.reg_names.push(name.to_string());
+        self.prog.reg_types.push(ty);
+        self.regs.insert(name.to_string(), r);
+        Ok(r)
+    }
+
+    // ---- instructions --------------------------------------------------
+
+    fn instruction(&mut self) -> Result<(), ParseError> {
+        let mut guard = None;
+        if self.eat(&Token::At) {
+            let neg = self.eat(&Token::Bang);
+            let name = self.ident()?;
+            let r = self.reg_for(&name)?;
+            guard = Some((r, !neg));
+        }
+
+        let head = self.ident()?;
+        let mut suffixes = Vec::new();
+        while self.eat(&Token::Dot) {
+            // A suffix is an ident or (rarely) an int like `.1` — not used.
+            suffixes.push(self.ident()?);
+        }
+
+        let mut ins = self.decode_mnemonic(&head, &suffixes)?;
+        ins.guard = guard;
+
+        // Operands until ';'.
+        let mut ops: Vec<Operand> = Vec::new();
+        if !self.eat(&Token::Semi) {
+            loop {
+                let o = self.operand(&ins)?;
+                ops.push(o);
+                if self.eat(&Token::Comma) {
+                    continue;
+                }
+                self.expect(Token::Semi)?;
+                break;
+            }
+        }
+        self.assign_operands(&mut ins, ops)?;
+
+        let idx = self.prog.instrs.len() as u32;
+        for l in self.pending_labels.drain(..) {
+            self.prog.labels.insert(l, idx);
+        }
+        self.prog.instrs.push(ins);
+        Ok(())
+    }
+
+    fn decode_mnemonic(
+        &mut self,
+        head: &str,
+        suffixes: &[String],
+    ) -> Result<PtxInstruction, ParseError> {
+        let op = match head {
+            "add" => PtxOp::Add,
+            "addc" => PtxOp::Addc,
+            "sub" => PtxOp::Sub,
+            "mul" => PtxOp::Mul,
+            "mul24" => PtxOp::Mul24,
+            "mad" => PtxOp::Mad,
+            "mad24" => PtxOp::Mad24,
+            "fma" => PtxOp::Fma,
+            "sad" => PtxOp::Sad,
+            "div" => PtxOp::Div,
+            "rem" => PtxOp::Rem,
+            "abs" => PtxOp::Abs,
+            "neg" => PtxOp::Neg,
+            "min" => PtxOp::Min,
+            "max" => PtxOp::Max,
+            "sqrt" => PtxOp::Sqrt,
+            "rsqrt" => PtxOp::Rsqrt,
+            "rcp" => PtxOp::Rcp,
+            "sin" => PtxOp::Sin,
+            "cos" => PtxOp::Cos,
+            "lg2" => PtxOp::Lg2,
+            "ex2" => PtxOp::Ex2,
+            "tanh" => PtxOp::Tanh,
+            "popc" => PtxOp::Popc,
+            "clz" => PtxOp::Clz,
+            "brev" => PtxOp::Brev,
+            "bfind" => PtxOp::Bfind,
+            "bfe" => PtxOp::Bfe,
+            "bfi" => PtxOp::Bfi,
+            "fns" => PtxOp::Fns,
+            "copysign" => PtxOp::Copysign,
+            "and" => PtxOp::And,
+            "or" => PtxOp::Or,
+            "xor" => PtxOp::Xor,
+            "not" => PtxOp::Not,
+            "cnot" => PtxOp::Cnot,
+            "lop3" => PtxOp::Lop3,
+            "shl" => PtxOp::Shl,
+            "shr" => PtxOp::Shr,
+            "shf" => PtxOp::Shf,
+            "prmt" => PtxOp::Prmt,
+            "testp" => PtxOp::Testp,
+            "setp" => PtxOp::Setp,
+            "selp" => PtxOp::Selp,
+            "cvt" => PtxOp::Cvt,
+            "cvta" => PtxOp::Cvta,
+            "mov" => PtxOp::Mov,
+            "ld" => PtxOp::Ld,
+            "st" => PtxOp::St,
+            "dp4a" => PtxOp::Dp4a,
+            "dp2a" => PtxOp::Dp2a,
+            "bra" => PtxOp::Bra,
+            "bar" => PtxOp::Bar,
+            "ret" => PtxOp::Ret,
+            "exit" => PtxOp::Exit,
+            "wmma" => self.decode_wmma_head(suffixes)?,
+            other => return self.err(format!("unknown mnemonic {other}")),
+        };
+
+        let mut ins = PtxInstruction::new(op);
+        let mut types = Vec::new();
+        let mut i = 0usize;
+        while i < suffixes.len() {
+            let s = suffixes[i].as_str();
+            match s {
+                // wmma structural suffixes already consumed by decode_wmma_head
+                _ if matches!(ins.op, PtxOp::Wmma(_))
+                    && (s == "a" || s == "b" || s == "c" || s == "d"
+                        || s == "load" || s == "store" || s == "mma") => {}
+                "sync" => {
+                    ins.mods.sync = true;
+                    // `bar.warp.sync` special form:
+                    if ins.op == PtxOp::Bar && suffixes.first().map(String::as_str) == Some("warp")
+                    {
+                        ins.op = PtxOp::BarWarpSync;
+                    }
+                }
+                "warp" => {}
+                "aligned" => ins.mods.aligned = true,
+                "row" | "col" => {
+                    let row = s == "row";
+                    let l = ins.wmma_layout.get_or_insert((true, true));
+                    // first layout suffix = A, second = B
+                    if self.wmma_layout_seen == 0 {
+                        l.0 = row;
+                    } else {
+                        l.1 = row;
+                    }
+                    self.wmma_layout_seen += 1;
+                }
+                "to" => ins.mods.to = true,
+                "rn" => ins.mods.round = RoundMode::Rn,
+                "rz" => ins.mods.round = RoundMode::Rz,
+                "rzi" => ins.mods.round = RoundMode::Rzi,
+                "rni" => ins.mods.round = RoundMode::Rni,
+                "lo" => ins.mods.lo = true,
+                "hi" => ins.mods.hi = true,
+                "wide" => ins.mods.wide = true,
+                "approx" => ins.mods.approx = true,
+                "ftz" => ins.mods.ftz = true,
+                "sat" => ins.mods.sat = true,
+                "full" => ins.mods.full = true,
+                "global" => ins.mods.space = StateSpace::Global,
+                "shared" => ins.mods.space = StateSpace::Shared,
+                "local" => ins.mods.space = StateSpace::Local,
+                "param" => ins.mods.space = StateSpace::Param,
+                "ca" | "cg" | "cv" | "wt" => ins.mods.cache = CacheOp::parse(s).unwrap(),
+                _ if CmpOp::parse(s).is_some() && matches!(ins.op, PtxOp::Setp) => {
+                    ins.mods.cmp = CmpOp::parse(s)
+                }
+                _ if TestpKind::parse(s).is_some() && ins.op == PtxOp::Testp => {
+                    ins.mods.testp = TestpKind::parse(s)
+                }
+                _ if s.starts_with('m') && s.contains('n') && s.contains('k') => {
+                    ins.wmma_shape = Some(parse_mnk(s).ok_or_else(|| ParseError {
+                        at: self.pos,
+                        message: format!("bad wmma shape {s}"),
+                    })?);
+                }
+                _ => {
+                    if let Some(t) = PtxType::parse(s) {
+                        types.push(t);
+                    } else {
+                        return self.err(format!("unknown suffix .{s} on {head}"));
+                    }
+                }
+            }
+            i += 1;
+        }
+        match types.len() {
+            0 => {}
+            1 => ins.ty = Some(types[0]),
+            2 => {
+                // `cvt.rzi.s32.f32`: dst type first, src type second.
+                ins.ty = Some(types[0]);
+                ins.ty2 = Some(types[1]);
+            }
+            4 => {
+                // wmma.mma d.a.b.c fragment types
+                ins.wmma_types = Some([types[0], types[1], types[2], types[3]]);
+                ins.ty = Some(types[1]); // input dtype drives timing class
+            }
+            n => return self.err(format!("{head}: unsupported {n} type suffixes")),
+        }
+        self.wmma_layout_seen = 0;
+        Ok(ins)
+    }
+
+    fn decode_wmma_head(&mut self, suffixes: &[String]) -> Result<PtxOp, ParseError> {
+        // wmma.load.a..., wmma.load.b..., wmma.load.c..., wmma.mma...,
+        // wmma.store.d...
+        let s0 = suffixes.first().map(String::as_str);
+        let s1 = suffixes.get(1).map(String::as_str);
+        match (s0, s1) {
+            (Some("load"), Some("a")) => Ok(PtxOp::Wmma(WmmaOp::LoadA)),
+            (Some("load"), Some("b")) => Ok(PtxOp::Wmma(WmmaOp::LoadB)),
+            (Some("load"), Some("c")) => Ok(PtxOp::Wmma(WmmaOp::LoadC)),
+            (Some("mma"), _) => Ok(PtxOp::Wmma(WmmaOp::Mma)),
+            (Some("store"), _) => Ok(PtxOp::Wmma(WmmaOp::Store)),
+            _ => self.err(format!("bad wmma form {suffixes:?}")),
+        }
+    }
+
+    fn operand(&mut self, ins: &PtxInstruction) -> Result<Operand, ParseError> {
+        match self.peek().cloned() {
+            Some(Token::LBracket) => {
+                self.pos += 1;
+                let name = self.ident()?;
+                let mut offset = 0i64;
+                if self.eat(&Token::Plus) {
+                    match self.next() {
+                        Some(Token::Int(n)) => offset = n,
+                        other => return self.err(format!("expected offset, found {other:?}")),
+                    }
+                } else if self.eat(&Token::Minus) {
+                    match self.next() {
+                        Some(Token::Int(n)) => offset = -n,
+                        other => return self.err(format!("expected offset, found {other:?}")),
+                    }
+                }
+                self.expect(Token::RBracket)?;
+                if name.starts_with('%') {
+                    let base = self.reg_for(&name)?;
+                    Ok(Operand::Mem { base, offset })
+                } else if let Some(idx) =
+                    self.prog.params.iter().position(|p| p.name == name)
+                {
+                    Ok(Operand::Param(idx as u32))
+                } else if let Some(idx) = self.shared.get(&name) {
+                    Ok(Operand::SymMem { sym: *idx, offset })
+                } else if ins.op == PtxOp::Ld && ins.mods.space == StateSpace::Param {
+                    // forward-declared param name
+                    self.err(format!("unknown param {name}"))
+                } else {
+                    self.err(format!("unknown memory symbol {name}"))
+                }
+            }
+            Some(Token::LBrace) => {
+                // Vector operand {%r1, %r2, ...} — fragment lists. The
+                // suite models fragments at warp granularity: collapse to
+                // the first register (the fragment's id register).
+                self.pos += 1;
+                let mut first = None;
+                while !self.eat(&Token::RBrace) {
+                    if let Some(Token::Ident(n)) = self.peek().cloned() {
+                        self.pos += 1;
+                        let r = self.reg_for(&n)?;
+                        if first.is_none() {
+                            first = Some(r);
+                        }
+                    } else {
+                        return self.err("expected register in vector operand");
+                    }
+                    self.eat(&Token::Comma);
+                }
+                match first {
+                    Some(r) => Ok(Operand::Reg(r)),
+                    None => self.err("empty vector operand"),
+                }
+            }
+            Some(Token::Int(n)) => {
+                self.pos += 1;
+                Ok(Operand::Imm(n))
+            }
+            Some(Token::Float(v)) => {
+                self.pos += 1;
+                Ok(Operand::FImm(v))
+            }
+            Some(Token::Minus) => {
+                self.pos += 1;
+                match self.next() {
+                    Some(Token::Int(n)) => Ok(Operand::Imm(-n)),
+                    Some(Token::Float(v)) => Ok(Operand::FImm(-v)),
+                    other => self.err(format!("expected literal after '-', found {other:?}")),
+                }
+            }
+            Some(Token::Ident(name)) => {
+                self.pos += 1;
+                if name == "%clock" {
+                    Ok(Operand::Special(SpecialReg::Clock))
+                } else if name == "%clock64" {
+                    Ok(Operand::Special(SpecialReg::Clock64))
+                } else if name == "%tid" || name == "%ctaid" {
+                    self.expect(Token::Dot)?;
+                    let d = self.ident()?;
+                    let dim = match d.as_str() {
+                        "x" => 0,
+                        "y" => 1,
+                        "z" => 2,
+                        _ => return self.err(format!("bad dim .{d}")),
+                    };
+                    Ok(Operand::Special(if name == "%tid" {
+                        SpecialReg::Tid(dim)
+                    } else {
+                        SpecialReg::Ctaid(dim)
+                    }))
+                } else if name.starts_with('$') {
+                    // branch target label
+                    if let Some(idx) = self.prog.labels.get(&name) {
+                        Ok(Operand::Target(*idx))
+                    } else {
+                        self.fixups.push((self.prog.instrs.len(), name));
+                        Ok(Operand::Target(u32::MAX))
+                    }
+                } else if name.starts_with('%') {
+                    Ok(Operand::Reg(self.reg_for(&name)?))
+                } else if let Some(idx) = self.prog.params.iter().position(|p| p.name == name) {
+                    Ok(Operand::Param(idx as u32))
+                } else if let Some(idx) = self.shared.get(&name) {
+                    Ok(Operand::SymMem { sym: *idx, offset: 0 })
+                } else {
+                    self.err(format!("unknown operand {name}"))
+                }
+            }
+            other => self.err(format!("expected operand, found {other:?}")),
+        }
+    }
+
+    fn assign_operands(
+        &mut self,
+        ins: &mut PtxInstruction,
+        mut ops: Vec<Operand>,
+    ) -> Result<(), ParseError> {
+        if ops.is_empty() {
+            return Ok(());
+        }
+        match ins.op {
+            PtxOp::St | PtxOp::Wmma(WmmaOp::Store) => {
+                // st [addr], value — dst is the memory operand.
+                ins.dst = Some(ops.remove(0));
+                ins.srcs = ops;
+            }
+            PtxOp::Bra => {
+                ins.srcs = ops;
+            }
+            _ => {
+                ins.dst = Some(ops.remove(0));
+                ins.srcs = ops;
+            }
+        }
+        Ok(())
+    }
+
+    fn resolve_fixups(&mut self) -> Result<(), ParseError> {
+        for (instr_idx, label) in std::mem::take(&mut self.fixups) {
+            let target = *self.prog.labels.get(&label).ok_or_else(|| ParseError {
+                at: 0,
+                message: format!("undefined label {label}"),
+            })?;
+            let ins = &mut self.prog.instrs[instr_idx];
+            for o in ins.srcs.iter_mut().chain(ins.dst.iter_mut()) {
+                if *o == Operand::Target(u32::MAX) {
+                    *o = Operand::Target(target);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_mnk(s: &str) -> Option<(u32, u32, u32)> {
+    // "m16n16k16"
+    let s = s.strip_prefix('m')?;
+    let n_at = s.find('n')?;
+    let m: u32 = s[..n_at].parse().ok()?;
+    let rest = &s[n_at + 1..];
+    let k_at = rest.find('k')?;
+    let n: u32 = rest[..k_at].parse().ok()?;
+    let k: u32 = rest[k_at + 1..].parse().ok()?;
+    Some((m, n, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIG1: &str = r#"
+.visible .entry _Z3AddPi(
+ .param .u64 _Z3AddPi_param_0
+)
+{
+ .reg .b32 %r<100>;
+ .reg .b64 %rd<100>;
+ ld.param.u64 %rd1, [_Z3AddPi_param_0];
+ cvta.to.global.u64 %rd4, %rd1;
+ add.s32 %r5, 5, %r3;
+ add.s32 %r7, %r5, 2;
+ mov.u32 %r1, %clock;
+ add.u32 %r11, 6, %r7;
+ add.u32 %r12, %r5, 7;
+ add.u32 %r13, %r12, %r1;
+ mov.u32 %r2, %clock;
+ sub.s32 %r8, %r2, %r1;
+ st.global.u32 [%rd4], %r8;
+ st.global.u32 [%rd4 + 8], %r11;
+ st.global.u32 [%rd4 + 16], %r12;
+ st.global.u32 [%rd4 + 20], %r13;
+ ret;
+}
+"#;
+
+    #[test]
+    fn parses_fig1() {
+        let p = parse_program(FIG1).unwrap();
+        assert_eq!(p.name, "_Z3AddPi");
+        assert_eq!(p.params.len(), 1);
+        assert_eq!(p.instrs.len(), 15);
+        let adds = p
+            .instrs
+            .iter()
+            .filter(|i| i.op == PtxOp::Add)
+            .count();
+        assert_eq!(adds, 5);
+        // clock reads are Special operands
+        let clocks = p
+            .instrs
+            .iter()
+            .filter(|i| {
+                i.srcs
+                    .iter()
+                    .any(|o| matches!(o, Operand::Special(SpecialReg::Clock)))
+            })
+            .count();
+        assert_eq!(clocks, 2);
+    }
+
+    #[test]
+    fn parses_loop_with_labels() {
+        let src = r#"
+.visible .entry k()
+{
+ .reg .b64 %rd<10>;
+ .reg .pred %p<4>;
+ mov.u64 %rd1, 0;
+$Mem_load:
+ add.u64 %rd1, %rd1, 32;
+ setp.lt.u64 %p1, %rd1, 262144;
+ @%p1 bra $Mem_load;
+ ret;
+}
+"#;
+        let p = parse_program(src).unwrap();
+        assert_eq!(p.labels.get("$Mem_load"), Some(&1));
+        let bra = p.instrs.iter().find(|i| i.op == PtxOp::Bra).unwrap();
+        assert_eq!(bra.srcs, vec![Operand::Target(1)]);
+        assert!(bra.guard.is_some());
+    }
+
+    #[test]
+    fn parses_shared_memory() {
+        let src = r#"
+.visible .entry k()
+{
+ .reg .b64 %rd<10>;
+ .shared .align 8 .b8 shMem1[1024];
+ mov.u64 %rd1, %clock64;
+ ld.shared.u64 %rd2, [shMem1];
+ st.shared.u64 [shMem1], 50;
+ mov.u64 %rd3, %clock64;
+ ret;
+}
+"#;
+        let p = parse_program(src).unwrap();
+        assert_eq!(p.shared_syms.len(), 1);
+        assert_eq!(p.shared_syms[0].2, 1024);
+        let ld = p.instrs.iter().find(|i| i.op == PtxOp::Ld).unwrap();
+        assert_eq!(ld.mods.space, StateSpace::Shared);
+        assert!(matches!(ld.srcs[0], Operand::SymMem { sym: 0, offset: 0 }));
+    }
+
+    #[test]
+    fn parses_cache_operators() {
+        let src = r#"
+.visible .entry k(.param .u64 p0)
+{
+ .reg .b64 %rd<10>;
+ ld.param.u64 %rd1, [p0];
+ ld.global.cv.u64 %rd2, [%rd1];
+ ld.global.cg.u64 %rd3, [%rd2];
+ ld.global.ca.u64 %rd4, [%rd3];
+ st.wt.global.u64 [%rd1], %rd4;
+ ret;
+}
+"#;
+        let p = parse_program(src).unwrap();
+        let caches: Vec<CacheOp> = p
+            .instrs
+            .iter()
+            .filter(|i| matches!(i.op, PtxOp::Ld | PtxOp::St))
+            .map(|i| i.mods.cache)
+            .collect();
+        assert_eq!(
+            caches,
+            vec![CacheOp::Default, CacheOp::Cv, CacheOp::Cg, CacheOp::Ca, CacheOp::Wt]
+        );
+    }
+
+    #[test]
+    fn parses_wmma_mma() {
+        let src = r#"
+.visible .entry k()
+{
+ .reg .b32 %r<32>;
+ wmma.mma.sync.aligned.row.row.m16n16k16.f32.f16.f16.f32 {%r0}, {%r8}, {%r16}, {%r24};
+ ret;
+}
+"#;
+        let p = parse_program(src).unwrap();
+        let mma = &p.instrs[0];
+        assert_eq!(mma.op, PtxOp::Wmma(WmmaOp::Mma));
+        assert_eq!(mma.wmma_shape, Some((16, 16, 16)));
+        assert_eq!(mma.wmma_layout, Some((true, true)));
+        let t = mma.wmma_types.unwrap();
+        assert_eq!(t[0], PtxType::F32);
+        assert_eq!(t[1], PtxType::F16);
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic() {
+        let src = ".visible .entry k() { frobnicate.u32 %r1, %r2; ret; }";
+        assert!(parse_program(src).is_err());
+    }
+
+    #[test]
+    fn rejects_undefined_label() {
+        let src = ".visible .entry k() { .reg .pred %p<2>; @%p1 bra $nope; ret; }";
+        assert!(parse_program(src).is_err());
+    }
+}

@@ -1,0 +1,338 @@
+//! PTX type system and instruction modifiers.
+
+use std::fmt;
+
+/// Scalar types of the PTX ISA (the subset Table V exercises).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PtxType {
+    U16,
+    U32,
+    U64,
+    S16,
+    S32,
+    S64,
+    F16,
+    F32,
+    F64,
+    B16,
+    B32,
+    B64,
+    Pred,
+    // WMMA fragment element types (Table III).
+    Bf16,
+    Tf32,
+    U8,
+    U4,
+}
+
+impl PtxType {
+    pub fn bits(self) -> u32 {
+        use PtxType::*;
+        match self {
+            U4 => 4,
+            U8 => 8,
+            U16 | S16 | F16 | B16 | Bf16 => 16,
+            U32 | S32 | F32 | B32 | Tf32 | Pred => 32,
+            U64 | S64 | F64 | B64 => 64,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, PtxType::F16 | PtxType::F32 | PtxType::F64 | PtxType::Bf16 | PtxType::Tf32)
+    }
+
+    pub fn is_signed(self) -> bool {
+        matches!(self, PtxType::S16 | PtxType::S32 | PtxType::S64)
+    }
+
+    pub fn is_unsigned(self) -> bool {
+        matches!(self, PtxType::U4 | PtxType::U8 | PtxType::U16 | PtxType::U32 | PtxType::U64)
+    }
+
+    /// The unsigned counterpart with identical width — the paper's Insight
+    /// 2: signed and unsigned map identically except bfind/min/max.
+    pub fn unsigned_twin(self) -> PtxType {
+        use PtxType::*;
+        match self {
+            S16 => U16,
+            S32 => U32,
+            S64 => U64,
+            t => t,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PtxType> {
+        use PtxType::*;
+        Some(match s {
+            "u16" => U16,
+            "u32" => U32,
+            "u64" => U64,
+            "s16" => S16,
+            "s32" => S32,
+            "s64" => S64,
+            "f16" => F16,
+            "f32" => F32,
+            "f64" => F64,
+            "b16" => B16,
+            "b32" => B32,
+            "b64" => B64,
+            "pred" => Pred,
+            "bf16" => Bf16,
+            "tf32" => Tf32,
+            "u8" => U8,
+            "u4" => U4,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for PtxType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use PtxType::*;
+        let s = match self {
+            U16 => "u16",
+            U32 => "u32",
+            U64 => "u64",
+            S16 => "s16",
+            S32 => "s32",
+            S64 => "s64",
+            F16 => "f16",
+            F32 => "f32",
+            F64 => "f64",
+            B16 => "b16",
+            B32 => "b32",
+            B64 => "b64",
+            Pred => "pred",
+            Bf16 => "bf16",
+            Tf32 => "tf32",
+            U8 => "u8",
+            U4 => "u4",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Rounding-mode modifier (.rn/.rz/.rm/.rp, integer .rni etc. collapsed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RoundMode {
+    #[default]
+    None,
+    Rn,
+    Rz,
+    Rzi,
+    Rni,
+}
+
+/// State space for ld/st/cvta.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum StateSpace {
+    #[default]
+    Generic,
+    Global,
+    Shared,
+    Local,
+    Param,
+}
+
+impl fmt::Display for StateSpace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            StateSpace::Generic => "",
+            StateSpace::Global => "global",
+            StateSpace::Shared => "shared",
+            StateSpace::Local => "local",
+            StateSpace::Param => "param",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Cache operators on ld/st (Section IV-B of the paper).
+///
+/// * `.ca` — cache at all levels (L1 + L2): L1-hit path.
+/// * `.cg` — cache global: bypass L1, cache in L2: L2-hit path.
+/// * `.cv` — volatile/don't-cache: bypass both, DRAM every time.
+/// * `.wt` — write-through (stores in Fig. 2's setup loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CacheOp {
+    #[default]
+    Default,
+    Ca,
+    Cg,
+    Cv,
+    Wt,
+}
+
+impl CacheOp {
+    pub fn parse(s: &str) -> Option<CacheOp> {
+        Some(match s {
+            "ca" => CacheOp::Ca,
+            "cg" => CacheOp::Cg,
+            "cv" => CacheOp::Cv,
+            "wt" => CacheOp::Wt,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for CacheOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            CacheOp::Default => "",
+            CacheOp::Ca => "ca",
+            CacheOp::Cg => "cg",
+            CacheOp::Cv => "cv",
+            CacheOp::Wt => "wt",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Comparison operator for setp/testp-family instructions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpOp {
+    pub fn parse(s: &str) -> Option<CmpOp> {
+        Some(match s {
+            "eq" => CmpOp::Eq,
+            "ne" => CmpOp::Ne,
+            "lt" => CmpOp::Lt,
+            "le" => CmpOp::Le,
+            "gt" => CmpOp::Gt,
+            "ge" => CmpOp::Ge,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for CmpOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            CmpOp::Eq => "eq",
+            CmpOp::Ne => "ne",
+            CmpOp::Lt => "lt",
+            CmpOp::Le => "le",
+            CmpOp::Gt => "gt",
+            CmpOp::Ge => "ge",
+        };
+        f.write_str(s)
+    }
+}
+
+/// `testp` sub-operation (.normal/.subnormal/.finite/...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TestpKind {
+    Normal,
+    Subnormal,
+    Finite,
+    Infinite,
+    Number,
+    NotANumber,
+}
+
+impl TestpKind {
+    pub fn parse(s: &str) -> Option<TestpKind> {
+        Some(match s {
+            "normal" => TestpKind::Normal,
+            "subnormal" | "subnor" => TestpKind::Subnormal,
+            "finite" => TestpKind::Finite,
+            "infinite" => TestpKind::Infinite,
+            "number" => TestpKind::Number,
+            "notanumber" => TestpKind::NotANumber,
+            _ => return None,
+        })
+    }
+}
+
+/// All optional instruction modifiers, flattened.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Modifiers {
+    pub round: RoundMode,
+    /// `.lo` — low half of the product (mul/mad).
+    pub lo: bool,
+    /// `.hi` — high half of the product.
+    pub hi: bool,
+    /// `.wide` — full-width product.
+    pub wide: bool,
+    /// `.approx` — fast approximate (sqrt/rsqrt/rcp/sin/cos/...).
+    pub approx: bool,
+    /// `.ftz` — flush subnormals to zero.
+    pub ftz: bool,
+    /// `.sat` — saturate.
+    pub sat: bool,
+    /// `.full` — full-range division.
+    pub full: bool,
+    pub space: StateSpace,
+    pub cache: CacheOp,
+    pub cmp: Option<CmpOp>,
+    pub testp: Option<TestpKind>,
+    /// `.to` on cvta.
+    pub to: bool,
+    /// `.sync.aligned` on wmma/bar.
+    pub sync: bool,
+    pub aligned: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths() {
+        assert_eq!(PtxType::U32.bits(), 32);
+        assert_eq!(PtxType::F64.bits(), 64);
+        assert_eq!(PtxType::F16.bits(), 16);
+        assert_eq!(PtxType::U4.bits(), 4);
+    }
+
+    #[test]
+    fn classification() {
+        assert!(PtxType::F32.is_float());
+        assert!(!PtxType::B32.is_float());
+        assert!(PtxType::S64.is_signed());
+        assert!(PtxType::U8.is_unsigned());
+    }
+
+    #[test]
+    fn unsigned_twin_insight2() {
+        assert_eq!(PtxType::S32.unsigned_twin(), PtxType::U32);
+        assert_eq!(PtxType::S64.unsigned_twin(), PtxType::U64);
+        assert_eq!(PtxType::F32.unsigned_twin(), PtxType::F32);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in [
+            "u16", "u32", "u64", "s16", "s32", "s64", "f16", "f32", "f64", "b16", "b32", "b64",
+            "pred", "bf16", "tf32", "u8", "u4",
+        ] {
+            let t = PtxType::parse(s).unwrap();
+            assert_eq!(t.to_string(), s);
+        }
+        assert!(PtxType::parse("f128").is_none());
+    }
+
+    #[test]
+    fn cache_ops() {
+        assert_eq!(CacheOp::parse("cv"), Some(CacheOp::Cv));
+        assert_eq!(CacheOp::parse("ca"), Some(CacheOp::Ca));
+        assert_eq!(CacheOp::parse("cg"), Some(CacheOp::Cg));
+        assert_eq!(CacheOp::parse("wt"), Some(CacheOp::Wt));
+        assert_eq!(CacheOp::parse("zz"), None);
+    }
+
+    #[test]
+    fn cmp_parse() {
+        assert_eq!(CmpOp::parse("lt"), Some(CmpOp::Lt));
+        assert_eq!(CmpOp::parse("ne"), Some(CmpOp::Ne));
+        assert!(CmpOp::parse("xx").is_none());
+    }
+}

@@ -1,0 +1,223 @@
+//! Table renderers: print each experiment in the paper's row format next
+//! to the published values, plus a shape-match summary for EXPERIMENTS.md.
+
+use crate::microbench::alu::{Amortization, DepIndep, RowResult};
+use crate::microbench::insights::{Fig4, Insight1, Insight3, SignPair};
+use crate::microbench::memory::MemResult;
+use crate::microbench::wmma::WmmaResult;
+use crate::microbench::MatchGrade;
+use std::fmt::Write;
+
+fn hr(out: &mut String, widths: &[usize]) {
+    for w in widths {
+        let _ = write!(out, "+{}", "-".repeat(w + 2));
+    }
+    out.push_str("+\n");
+}
+
+fn row_line(out: &mut String, widths: &[usize], cells: &[String]) {
+    for (w, c) in widths.iter().zip(cells) {
+        let _ = write!(out, "| {c:<w$} ");
+    }
+    out.push_str("|\n");
+}
+
+/// Generic table printer.
+pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "\n== {title} ==");
+    hr(&mut out, &widths);
+    row_line(&mut out, &widths, &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    hr(&mut out, &widths);
+    for r in rows {
+        row_line(&mut out, &widths, r);
+    }
+    hr(&mut out, &widths);
+    out
+}
+
+pub fn grade_str(g: MatchGrade) -> &'static str {
+    match g {
+        MatchGrade::Exact => "exact",
+        MatchGrade::Close => "close",
+        MatchGrade::Off => "OFF",
+    }
+}
+
+pub fn table1(rows: &[Amortization]) -> String {
+    render_table(
+        "Table I — CPI vs #instructions (add.u32, cold pipe)",
+        &["# instrs", "CPI (measured)", "CPI (paper)"],
+        &rows
+            .iter()
+            .map(|r| vec![r.n.to_string(), r.cpi.to_string(), r.paper_cpi.to_string()])
+            .collect::<Vec<_>>(),
+    )
+}
+
+pub fn table2(rows: &[DepIndep]) -> String {
+    render_table(
+        "Table II — dependent vs independent CPI",
+        &["instr", "dep", "dep(paper)", "indep", "indep(paper)"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.name.clone(),
+                    r.dep_cpi.to_string(),
+                    r.paper_dep.to_string(),
+                    r.indep_cpi.to_string(),
+                    r.paper_indep.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+pub fn table3(rows: &[WmmaResult]) -> String {
+    render_table(
+        "Table III — tensor-core latency & throughput",
+        &[
+            "dtype",
+            "cycles",
+            "paper",
+            "SASS (measured)",
+            "SASS (paper)",
+            "TOPS meas-theo",
+            "paper meas-theo",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.dtype_key.to_string(),
+                    r.cycles.to_string(),
+                    r.paper_cycles.to_string(),
+                    r.sass.clone(),
+                    r.paper_sass.clone(),
+                    format!(
+                        "{:.0}-{:.1}",
+                        r.throughput.measured_tops, r.throughput.theoretical_tops
+                    ),
+                    format!("{:.0}-{:.1}", r.paper_measured_tops, r.paper_theoretical_tops),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+pub fn table4(rows: &[MemResult]) -> String {
+    render_table(
+        "Table IV — memory access latencies",
+        &["Memory type", "CPI (measured)", "CPI (paper)"],
+        &rows
+            .iter()
+            .map(|r| vec![r.level.name().to_string(), r.cpi.to_string(), r.paper.to_string()])
+            .collect::<Vec<_>>(),
+    )
+}
+
+pub fn table5(rows: &[RowResult]) -> String {
+    let mut body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                r.measured.mapping.clone(),
+                r.paper_sass.clone(),
+                r.measured.cpi.to_string(),
+                r.paper_cycles.clone(),
+                grade_str(r.cycles_grade).to_string(),
+            ]
+        })
+        .collect();
+    let exact = rows.iter().filter(|r| r.cycles_grade == MatchGrade::Exact).count();
+    let close = rows.iter().filter(|r| r.cycles_grade == MatchGrade::Close).count();
+    body.push(vec![
+        format!("[{} rows]", rows.len()),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        format!("{exact} exact / {close} close"),
+    ]);
+    render_table(
+        "Table V — PTX→SASS mapping and clock cycles",
+        &["PTX", "SASS (measured)", "SASS (paper)", "cyc", "paper", "grade"],
+        &body,
+    )
+}
+
+pub fn fig4(f: &Fig4) -> String {
+    render_table(
+        "Fig. 4 — clock register width",
+        &["variant", "CPI", "paper"],
+        &[
+            vec!["32-bit clocks (barrier)".into(), f.cpi_32bit.to_string(), "13".into()],
+            vec!["64-bit clocks (CS2R)".into(), f.cpi_64bit.to_string(), "2".into()],
+        ],
+    )
+}
+
+pub fn insights(i1: &Insight1, i2: &[SignPair], i3: &[Insight3]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "\n== Insight 1 — integer mad on the FP pipe ==\n  mad.lo.u32 -> {} ; mixed-pipe CPI {} vs same-pipe {}",
+        i1.mad_mapping, i1.mixed_cpi, i1.same_pipe_cpi
+    );
+    out.push_str(&render_table(
+        "Insight 2 — signed vs unsigned",
+        &["pair", "unsigned SASS", "signed SASS", "differs", "paper"],
+        &i2.iter()
+            .map(|p| {
+                vec![
+                    p.base.clone(),
+                    p.unsigned_mapping.clone(),
+                    p.signed_mapping.clone(),
+                    p.differs.to_string(),
+                    p.paper_expects_difference.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    ));
+    out.push_str(&render_table(
+        "Insight 3 — init style changes the mapping",
+        &["op", "mov-init", "add-init"],
+        &i3.iter()
+            .map(|i| vec![i.op.clone(), i.mov_init_mapping.clone(), i.add_init_mapping.clone()])
+            .collect::<Vec<_>>(),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_basic_table() {
+        let s = render_table(
+            "T",
+            &["a", "b"],
+            &[vec!["1".into(), "22".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(s.contains("== T =="));
+        assert!(s.contains("| 333 | 4"));
+        assert!(s.lines().filter(|l| l.starts_with('+')).count() >= 3);
+    }
+
+    #[test]
+    fn grade_strings() {
+        assert_eq!(grade_str(MatchGrade::Exact), "exact");
+        assert_eq!(grade_str(MatchGrade::Off), "OFF");
+    }
+}

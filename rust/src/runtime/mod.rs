@@ -1,0 +1,344 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the XLA CPU client —
+//! python never runs on this path.
+//!
+//! The runtime is the tensor-core *numerics oracle*: the serving example
+//! and the integration tests execute WMMA through the compiled Pallas
+//! kernel and compare against the simulator's functional TC model.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: HLO **text** interchange
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos),
+//! `return_tuple=True` lowering → `to_tuple1()` unwrap.
+
+use crate::tensor::WmmaDtype;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Argument metadata from `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArgMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub file: String,
+    pub args: Vec<ArgMeta>,
+}
+
+fn parse_manifest(text: &str) -> Result<HashMap<String, VariantMeta>> {
+    let v = crate::util::json::parse(text).map_err(|e| anyhow!("{e}"))?;
+    let obj = v.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
+    let mut out = HashMap::new();
+    for (name, meta) in obj {
+        let file = meta
+            .get("file")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| anyhow!("{name}: missing file"))?
+            .to_string();
+        let mut args = Vec::new();
+        for a in meta.get("args").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+            let shape = a
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .map(|s| s.iter().filter_map(|d| d.as_usize()).collect())
+                .unwrap_or_default();
+            let dtype = a
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .unwrap_or("float32")
+                .to_string();
+            args.push(ArgMeta { shape, dtype });
+        }
+        out.insert(name.clone(), VariantMeta { file, args });
+    }
+    Ok(out)
+}
+
+/// The artifact directory + manifest.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: HashMap<String, VariantMeta>,
+}
+
+impl Artifacts {
+    pub fn discover(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = parse_manifest(&text)?;
+        Ok(Self { dir, manifest })
+    }
+
+    /// Default location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("AMPERE_UBENCH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// Host-side tensor for oracle I/O.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    F64(Vec<f64>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::F64(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f64_vec(&self) -> Vec<f64> {
+        match self {
+            HostTensor::F32(v, _) => v.iter().map(|x| *x as f64).collect(),
+            HostTensor::F64(v, _) => v.clone(),
+            HostTensor::I32(v, _) => v.iter().map(|x| *x as f64).collect(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(v, shape) => xla::Literal::vec1(v)
+                .reshape(&shape.iter().map(|d| *d as i64).collect::<Vec<_>>())?,
+            HostTensor::F64(v, shape) => xla::Literal::vec1(v)
+                .reshape(&shape.iter().map(|d| *d as i64).collect::<Vec<_>>())?,
+            HostTensor::I32(v, shape) => xla::Literal::vec1(v)
+                .reshape(&shape.iter().map(|d| *d as i64).collect::<Vec<_>>())?,
+        };
+        Ok(lit)
+    }
+}
+
+/// The PJRT-backed oracle: one compiled executable per model variant.
+pub struct Oracle {
+    client: xla::PjRtClient,
+    artifacts: Artifacts,
+    loaded: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Oracle {
+    pub fn new(artifacts: Artifacts) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, artifacts, loaded: HashMap::new() })
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(Artifacts::discover(Artifacts::default_dir())?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn variants(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.manifest.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&VariantMeta> {
+        self.artifacts.manifest.get(name)
+    }
+
+    /// Compile (or fetch the cached) executable for a variant.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.loaded.contains_key(name) {
+            let meta = self
+                .artifacts
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown variant {name}"))?;
+            let path = self.artifacts.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.loaded.insert(name.to_string(), exe);
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Execute a variant with host tensors; returns the first output as
+    /// a flat f64 vector (all variants return one array).
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<f64>> {
+        let io_dtype = self
+            .meta(name)
+            .ok_or_else(|| anyhow!("unknown variant {name}"))?
+            .args
+            .first()
+            .map(|a| a.dtype.clone())
+            .unwrap_or_else(|| "float32".into());
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let v = match io_dtype.as_str() {
+            "float64" => out.to_vec::<f64>()?,
+            "int32" => out.to_vec::<i32>()?.into_iter().map(|x| x as f64).collect(),
+            _ => out.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect(),
+        };
+        Ok(v)
+    }
+
+    /// Run the single-mma oracle for a WMMA dtype: D = A·B + C.
+    pub fn wmma_single(
+        &mut self,
+        dtype: WmmaDtype,
+        a: &[f64],
+        b: &[f64],
+        c: &[f64],
+    ) -> Result<Vec<f64>> {
+        let name = format!("wmma_{}", dtype.key());
+        let meta = self.meta(&name).ok_or_else(|| anyhow!("missing {name}"))?.clone();
+        let mk = |vals: &[f64], arg: &ArgMeta| -> HostTensor {
+            match arg.dtype.as_str() {
+                "float64" => HostTensor::F64(vals.to_vec(), arg.shape.clone()),
+                "int32" => HostTensor::I32(
+                    vals.iter().map(|v| *v as i32).collect(),
+                    arg.shape.clone(),
+                ),
+                _ => HostTensor::F32(
+                    vals.iter().map(|v| *v as f32).collect(),
+                    arg.shape.clone(),
+                ),
+            }
+        };
+        let inputs = vec![mk(a, &meta.args[0]), mk(b, &meta.args[1]), mk(c, &meta.args[2])];
+        self.execute(&name, &inputs)
+    }
+}
+
+/// Compare the simulator's functional WMMA result against the PJRT
+/// oracle for one dtype.  Returns max |sim − oracle|.
+pub fn validate_wmma_against_sim(oracle: &mut Oracle, dtype: WmmaDtype) -> Result<f64> {
+    use crate::ptx::parse_program;
+    use crate::sim::Simulator;
+    use crate::translate::translate_program;
+
+    let (m, n, k) = dtype.primary_shape();
+    let (mu, nu, ku) = (m as usize, n as usize, k as usize);
+    // deterministic test data in every dtype's safe range
+    let a: Vec<f64> = (0..mu * ku).map(|i| ((i % 7) as f64) - 3.0).collect();
+    let b: Vec<f64> = (0..ku * nu).map(|i| ((i % 5) as f64) - 2.0).collect();
+    let c: Vec<f64> = (0..mu * nu).map(|i| (i % 3) as f64).collect();
+    let (a, b, c) = if matches!(dtype, WmmaDtype::U8S32 | WmmaDtype::U4S32) {
+        (
+            a.iter().map(|x| x.abs().min(15.0)).collect::<Vec<_>>(),
+            b.iter().map(|x| x.abs().min(15.0)).collect::<Vec<_>>(),
+            c.iter().map(|x| x.abs()).collect::<Vec<_>>(),
+        )
+    } else {
+        (a, b, c)
+    };
+
+    // --- simulator path ------------------------------------------------
+    let (fin, facc) = match dtype {
+        WmmaDtype::F16F16 => ("f16", "f16"),
+        WmmaDtype::F16F32 => ("f16", "f32"),
+        WmmaDtype::Bf16F32 => ("bf16", "f32"),
+        WmmaDtype::Tf32F32 => ("tf32", "f32"),
+        WmmaDtype::F64F64 => ("f64", "f64"),
+        WmmaDtype::U8S32 => ("u8", "s32"),
+        WmmaDtype::U4S32 => ("u4", "s32"),
+    };
+    let types = match dtype {
+        WmmaDtype::F16F16 => "f16.f16.f16.f16",
+        WmmaDtype::F16F32 => "f32.f16.f16.f32",
+        WmmaDtype::Bf16F32 => "f32.bf16.bf16.f32",
+        WmmaDtype::Tf32F32 => "f32.tf32.tf32.f32",
+        WmmaDtype::F64F64 => "f64.f64.f64.f64",
+        WmmaDtype::U8S32 => "s32.u8.u8.s32",
+        WmmaDtype::U4S32 => "s32.u4.u4.s32",
+    };
+    let (abase, bbase, cbase, dbase) = (0x10_0000u64, 0x20_0000u64, 0x30_0000u64, 0x40_0000u64);
+    let src = format!(
+        ".visible .entry v(.param .u64 out) {{\n {}\n \
+         mov.u64 %rd1, {abase};\n mov.u64 %rd2, {bbase};\n mov.u64 %rd3, {cbase};\n mov.u64 %rd4, {dbase};\n \
+         wmma.load.a.sync.aligned.row.m{m}n{n}k{k}.{fin} {{%r10}}, [%rd1];\n \
+         wmma.load.b.sync.aligned.row.m{m}n{n}k{k}.{fin} {{%r11}}, [%rd2];\n \
+         wmma.load.c.sync.aligned.row.m{m}n{n}k{k}.{facc} {{%r12}}, [%rd3];\n \
+         wmma.mma.sync.aligned.row.row.m{m}n{n}k{k}.{types} {{%r13}}, {{%r10}}, {{%r11}}, {{%r12}};\n \
+         wmma.store.d.sync.aligned.row.m{m}n{n}k{k}.{facc} [%rd4], {{%r13}};\n ret;\n}}",
+        crate::microbench::REG_DECLS
+    );
+    let prog = parse_program(&src).map_err(|e| anyhow!("{e}"))?;
+    let tp = translate_program(&prog).map_err(|e| anyhow!("{e}"))?;
+    let mut sim = Simulator::a100();
+    let wide = dtype == WmmaDtype::F64F64;
+    let mut seed = |base: u64, vals: &[f64]| {
+        for (i, v) in vals.iter().enumerate() {
+            if wide {
+                sim.mem.dram.write_u64(base + 8 * i as u64, v.to_bits());
+            } else {
+                sim.mem
+                    .dram
+                    .write(base + 4 * i as u64, &(*v as f32).to_bits().to_le_bytes());
+            }
+        }
+    };
+    seed(abase, &a);
+    seed(bbase, &b);
+    seed(cbase, &c);
+    sim.run(&prog, &tp, &[0]).map_err(|e| anyhow!("{e}"))?;
+    let mut sim_out = vec![0f64; mu * nu];
+    for (i, o) in sim_out.iter_mut().enumerate() {
+        if wide {
+            *o = f64::from_bits(sim.mem.dram.read_u64(dbase + 8 * i as u64));
+        } else {
+            let mut bts = [0u8; 4];
+            sim.mem.dram.read(dbase + 4 * i as u64, &mut bts);
+            *o = f32::from_bits(u32::from_le_bytes(bts)) as f64;
+        }
+    }
+
+    // --- oracle path -----------------------------------------------------
+    let oracle_out = oracle.wmma_single(dtype, &a, &b, &c)?;
+
+    let max_err = sim_out
+        .iter()
+        .zip(&oracle_out)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max);
+    Ok(max_err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration tests that need artifacts live in `tests/`; here we
+    /// only test the pieces that don't need PJRT.
+    #[test]
+    fn host_tensor_roundtrip() {
+        let t = HostTensor::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.as_f64_vec(), vec![1.0, 2.0]);
+        let t = HostTensor::I32(vec![3, -4], vec![2]);
+        assert_eq!(t.as_f64_vec(), vec![3.0, -4.0]);
+    }
+
+    #[test]
+    fn artifacts_discover_fails_helpfully() {
+        let err = Artifacts::discover("/nonexistent-path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

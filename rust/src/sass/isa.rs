@@ -1,0 +1,299 @@
+//! SASS instruction model: opcode classes, execution pipes, timings.
+//!
+//! Every SASS instruction the translator can emit carries a [`SassClass`]
+//! that decides *where* it executes (which pipe) and *how long* it takes
+//! (issue-port occupancy + result latency).  The mnemonic string is kept
+//! verbatim for trace display and Table V's mapping column.
+//!
+//! Timing calibration: per-class latencies are set so that the paper's
+//! measurement protocol — three independent instances, CPI =
+//! `floor((Δclock − 2)/3)`, clock reads draining the pipes — reports the
+//! Table V clock-cycle numbers.  The *mechanics* (occupancy vs. dependent
+//! latency, pipe assignment, uniform-datapath serialization) are the
+//! microarchitecture; the constants are calibration, exactly as they are
+//! for any performance-model simulator (PPT-GPU, GPGPU-Sim, Accel-Sim).
+
+use crate::config::{AmpereConfig, Pipe};
+use crate::ptx::Reg;
+
+/// Semantic effect the simulator must apply when this SASS instruction
+/// completes (functional execution happens at PTX granularity; see
+/// `sim::exec`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Effect {
+    /// Pure timing: no architectural side effect beyond the register write.
+    None,
+    /// Evaluate the originating PTX instruction's semantics now (attached
+    /// to the final SASS instruction of a translation group).
+    EvalPtx,
+    /// Read the cycle counter into the destination (CS2R / S2R).
+    ClockRead,
+    /// Memory load — latency comes from the memory model, not the table.
+    Load,
+    /// Memory store.
+    Store,
+    /// Scheduling barrier: stalls issue until all in-flight results
+    /// retire, plus a fixed penalty (Fig. 4a's hidden cost).
+    DepBar,
+    /// Warp-wide sync (bar.warp.sync → NOP in SASS, Table V).
+    WarpSync,
+    /// Conditional/unconditional branch (target = PTX instruction index).
+    Branch,
+    /// Tensor-core MMA tile.
+    MmaTile,
+    /// MOVM operand-matrix transpose move.
+    Movm,
+    /// Kernel end.
+    Exit,
+}
+
+/// Timing classes — one per SASS opcode family of Table V.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SassClass {
+    /// IADD/IADD3(.X)/IABS/neg-s32... 2-cycle INT ALU ops.
+    IntAlu,
+    /// IMNMX / ISETP / SEL / SGXT / BMSK / SHF — INT ALU (same timing).
+    IntCmp,
+    /// LOP3.LUT / PRMT — logic-LUT + byte-permute path.
+    IntLogic,
+    /// FLO / POPC / BREV — bit-reverse/find/count unit (longer latency).
+    IntBit,
+    /// VABSDIFF (sad).
+    IntSad,
+    /// IMAD family — runs on the FMA pipe (paper Insight 1).
+    ImadOnFma,
+    /// FFMA/FADD/FMUL/FMNMX/FSEL/FSETP/FSTEP — FP32 pipe.
+    F32Alu,
+    /// HADD2/HMUL2/HFMA2/HMNMX2 — packed-half pipe.
+    F16Alu,
+    /// DADD/DMUL/DFMA/DSETP — FP64 pipe.
+    F64Alu,
+    /// MUFU.* fast transcendentals (RCP/RSQ/SIN/COS/EX2/LG2/SQRT).
+    Mufu,
+    /// MUFU.TANH / MUFU.EX2.F16 — newer SFU ops, faster issue.
+    MufuFast,
+    /// MUFU.RSQ64H / RCP64H — double-precision SFU helpers.
+    Mufu64,
+    /// F2I/I2F/F2F converts (INT pipe on GA100).
+    Convert,
+    /// IDP.4A/IDP.2A dot products.
+    Idp,
+    /// Uniform-datapath ALU (UIADD3, ULOP3, UPRMT, USEL, UISETP, UFLO,
+    /// UPOPC, UBREV, USHF, UMOV, UIMAD) — scalar, serializing.
+    Uniform,
+    /// MOV / IMAD.MOV.U32 register moves.
+    Mov,
+    /// CS2R — 64-bit clock read (no barrier; Fig. 4b).
+    Cs2r,
+    /// S2R — 32-bit clock read (requires DEPBAR; Fig. 4a).
+    S2r,
+    /// DEPBAR scheduling barrier.
+    Depbar,
+    /// LDG/STG global, LDS/STS shared — latency via memory model.
+    Memory,
+    /// BRA/EXIT/BAR/NOP control.
+    Control,
+    /// HMMA/IMMA/DMMA tensor-core tiles — occupancy set per dtype by the
+    /// tensor model (Table III's "each inst is N cycles").
+    Mma,
+    /// MOVM.16.MT88 operand transpose.
+    Movm,
+}
+
+impl SassClass {
+    /// Execution pipe for the class.
+    pub fn pipe(self) -> Pipe {
+        use SassClass::*;
+        match self {
+            IntAlu | IntCmp | IntLogic | IntBit | IntSad | Convert | Idp => Pipe::Int,
+            ImadOnFma | F32Alu => Pipe::Fma,
+            F16Alu => Pipe::Half,
+            F64Alu => Pipe::Fp64,
+            Mufu | MufuFast | Mufu64 => Pipe::Sfu,
+            Uniform => Pipe::Uniform,
+            Mov => Pipe::Fma, // IMAD.MOV.U32 — moves borrow the FMA pipe
+            Cs2r | S2r => Pipe::Special,
+            Depbar | Control => Pipe::Control,
+            Memory => Pipe::Lsu,
+            Mma | Movm => Pipe::Tensor,
+        }
+    }
+
+    /// (issue occupancy, result latency) in cycles.
+    ///
+    /// Derivation of the measured CPI from (occ, lat) under the protocol
+    /// (3 independent instances, drain-at-clock-read, −2, ÷3):
+    /// `CPI = floor((max(3·occ, 2·occ + lat) + cold)/3)` — see
+    /// `sim::core` tests for the exact arithmetic.
+    pub fn timing(self, cfg: &AmpereConfig) -> (u64, u64) {
+        use SassClass::*;
+        match self {
+            IntAlu => (cfg.int_pipe.occupancy, cfg.int_pipe.latency),
+            IntCmp => (cfg.int_pipe.occupancy, cfg.int_pipe.latency),
+            IntLogic => (cfg.int_pipe.occupancy, cfg.int_pipe.latency),
+            // popc.b32 = 6, bfind.u32 = 6 (FLO), clz = FLO+IADD = 7:
+            // max(6, 4+lat) = 18 → lat = 14.
+            IntBit => (cfg.int_pipe.occupancy, 14),
+            // sad.u32 = 3: group VABSDIFF+IMAD chained.
+            IntSad => (cfg.int_pipe.occupancy, cfg.int_pipe.latency),
+            // IMAD forwards one cycle earlier than FFMA (mul.lo.u32
+            // dep = 3 vs mad.rn.f32 dep = 4, Table II).
+            ImadOnFma => (cfg.fma_pipe.occupancy, 3),
+            F32Alu => (cfg.fma_pipe.occupancy, cfg.fma_pipe.latency),
+            F16Alu => (cfg.half_pipe.occupancy, cfg.half_pipe.latency),
+            F64Alu => (cfg.fp64_pipe.occupancy, cfg.fp64_pipe.latency),
+            // ex2.approx.f16 = 6, tanh = 6: max(3·occ, 2·occ+lat) = 18..20
+            MufuFast => (cfg.sfu_pipe.occupancy, 10),
+            // sin/cos = 8 via FMUL+MUFU group; rsqrt.approx.f64 = 8-11.
+            Mufu => (cfg.sfu_pipe.occupancy, 10),
+            Mufu64 => (cfg.sfu_pipe.occupancy, 16),
+            // cvt.rzi.s32.f32 = 6 (F2I.TRUNC.NTZ): max(6, 4+lat)=18 → 14.
+            Convert => (cfg.int_pipe.occupancy, 14),
+            // dp4a/dp2a: measured 135-170 — dominated by IDP's deep pipe.
+            Idp => (cfg.int_pipe.occupancy, 400),
+            Uniform => (cfg.uniform_pipe.occupancy, cfg.uniform_pipe.latency),
+            Mov => (cfg.fma_pipe.occupancy, cfg.fma_pipe.latency),
+            Cs2r => (cfg.clock_read_occupancy, 0),
+            S2r => (cfg.clock_read_occupancy, 0),
+            Depbar => (cfg.control_pipe.occupancy, 0),
+            Memory => (cfg.lsu_pipe.occupancy, cfg.lsu_pipe.latency),
+            Control => (cfg.control_pipe.occupancy, cfg.control_pipe.latency),
+            Mma => (cfg.tensor_pipe.occupancy, cfg.tensor_pipe.latency),
+            Movm => (cfg.tensor_pipe.occupancy, cfg.tensor_pipe.latency),
+        }
+    }
+}
+
+/// One SASS instruction as produced by the translator.
+///
+/// Registers use the *PTX program's* dense register indices; translation
+/// temporaries get fresh indices past the program's register count, so the
+/// scoreboard treats PTX and SASS registers uniformly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SassInstr {
+    /// Verbatim mnemonic for the trace / Table V display
+    /// (e.g. `IMAD.MOV.U32`, `UISETP.LT.U32.AND`, `HMMA.16816.F16`).
+    pub mnemonic: &'static str,
+    pub class: SassClass,
+    pub dst: Option<Reg>,
+    pub srcs: [Option<Reg>; 4],
+    pub effect: Effect,
+    /// Occupancy override (tensor-core tiles: Table III per-instr cycles).
+    pub occ_override: Option<u64>,
+    /// Latency override.
+    pub lat_override: Option<u64>,
+}
+
+impl SassInstr {
+    pub fn new(mnemonic: &'static str, class: SassClass) -> Self {
+        Self {
+            mnemonic,
+            class,
+            dst: None,
+            srcs: [None; 4],
+            effect: Effect::None,
+            occ_override: None,
+            lat_override: None,
+        }
+    }
+
+    pub fn dst(mut self, r: Reg) -> Self {
+        self.dst = Some(r);
+        self
+    }
+
+    pub fn src(mut self, r: Reg) -> Self {
+        for slot in self.srcs.iter_mut() {
+            if slot.is_none() {
+                *slot = Some(r);
+                return self;
+            }
+        }
+        panic!("more than 4 sources on {}", self.mnemonic);
+    }
+
+    pub fn effect(mut self, e: Effect) -> Self {
+        self.effect = e;
+        self
+    }
+
+    pub fn occ(mut self, o: u64) -> Self {
+        self.occ_override = Some(o);
+        self
+    }
+
+    pub fn lat(mut self, l: u64) -> Self {
+        self.lat_override = Some(l);
+        self
+    }
+
+    pub fn timing(&self, cfg: &AmpereConfig) -> (u64, u64) {
+        let (occ, lat) = self.class.timing(cfg);
+        (
+            self.occ_override.unwrap_or(occ),
+            self.lat_override.unwrap_or(lat),
+        )
+    }
+
+    pub fn pipe(&self) -> Pipe {
+        self.class.pipe()
+    }
+
+    pub fn reads(&self) -> impl Iterator<Item = Reg> + '_ {
+        self.srcs.iter().flatten().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let i = SassInstr::new("IADD3", SassClass::IntAlu)
+            .dst(Reg(0))
+            .src(Reg(1))
+            .src(Reg(2));
+        assert_eq!(i.dst, Some(Reg(0)));
+        assert_eq!(i.reads().count(), 2);
+        assert_eq!(i.pipe(), Pipe::Int);
+    }
+
+    #[test]
+    fn imad_runs_on_fma_pipe_insight1() {
+        // Paper Insight 1: integer mad maps to the floating pipeline.
+        assert_eq!(SassClass::ImadOnFma.pipe(), Pipe::Fma);
+        assert_eq!(SassClass::IntAlu.pipe(), Pipe::Int);
+    }
+
+    #[test]
+    fn uniform_ops_on_uniform_pipe() {
+        assert_eq!(SassClass::Uniform.pipe(), Pipe::Uniform);
+    }
+
+    #[test]
+    fn timing_overrides() {
+        let cfg = AmpereConfig::default();
+        let i = SassInstr::new("HMMA.16816.F16", SassClass::Mma).occ(8).lat(8);
+        assert_eq!(i.timing(&cfg), (8, 8));
+        let j = SassInstr::new("IADD3", SassClass::IntAlu);
+        assert_eq!(j.timing(&cfg), (2, 4));
+    }
+
+    #[test]
+    fn clock_reads_have_zero_latency() {
+        let cfg = AmpereConfig::default();
+        assert_eq!(SassClass::Cs2r.timing(&cfg), (2, 0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_sources_panics() {
+        let _ = SassInstr::new("X", SassClass::IntAlu)
+            .src(Reg(0))
+            .src(Reg(1))
+            .src(Reg(2))
+            .src(Reg(3))
+            .src(Reg(4));
+    }
+}

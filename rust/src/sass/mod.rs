@@ -1,0 +1,9 @@
+//! SASS ISA: the architecture-dependent instruction set the PTX
+//! microbenchmarks actually execute (closed-source on real hardware; the
+//! paper reads it from dynamic traces — Table V's right-hand columns).
+
+pub mod isa;
+pub mod trace;
+
+pub use isa::{Effect, SassClass, SassInstr};
+pub use trace::{TraceEntry, TraceRecorder};

@@ -1,0 +1,133 @@
+//! Dynamic SASS trace capture — the suite's analogue of PPT-GPU's
+//! *Tracing Tool* (paper §IV: "we dynamically read the SASS instruction
+//! trace at the run time of each PTX microbenchmark").
+//!
+//! The simulator appends one [`TraceEntry`] per issued SASS instruction;
+//! the microbenchmarks inspect the trace to (a) verify the PTX→SASS
+//! mapping is the intended one and (b) detect compiler-inserted overhead
+//! (Fig. 4's barrier, Fig. 6's NOP/warp-sync).
+
+
+/// One dynamically executed SASS instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    /// Sequence number in dynamic order.
+    pub seq: u64,
+    /// Index of the originating PTX instruction.
+    pub ptx_idx: u32,
+    /// SASS mnemonic (`IADD3`, `HMMA.16816.F16`, …).
+    pub mnemonic: &'static str,
+    /// Cycle the instruction issued.
+    pub issued: u64,
+    /// Cycle its result became visible (issue + latency).
+    pub retired: u64,
+}
+
+/// Append-only trace recorder with bounded memory: long-running loops
+/// (the pointer-chase setup writes ~50 MB of stores) would otherwise
+/// blow up the trace, so recording can be windowed.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    entries: Vec<TraceEntry>,
+    /// If set, retain only the last `cap` entries (ring behaviour).
+    cap: Option<usize>,
+    enabled: bool,
+    seq: u64,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self { entries: Vec::new(), cap: None, enabled: true, seq: 0 }
+    }
+
+    pub fn disabled() -> Self {
+        Self { entries: Vec::new(), cap: None, enabled: false, seq: 0 }
+    }
+
+    pub fn with_cap(cap: usize) -> Self {
+        Self { entries: Vec::new(), cap: Some(cap), enabled: true, seq: 0 }
+    }
+
+    pub fn record(&mut self, ptx_idx: u32, mnemonic: &'static str, issued: u64, retired: u64) {
+        let seq = self.seq;
+        self.seq += 1;
+        if !self.enabled {
+            return;
+        }
+        if let Some(cap) = self.cap {
+            if self.entries.len() == cap {
+                self.entries.remove(0);
+            }
+        }
+        self.entries.push(TraceEntry { seq, ptx_idx, mnemonic, issued, retired });
+    }
+
+    pub fn entries(&self) -> &[TraceEntry] {
+        &self.entries
+    }
+
+    /// Total dynamic SASS instructions (even when windowed/disabled).
+    pub fn dynamic_count(&self) -> u64 {
+        self.seq
+    }
+
+    /// Mnemonics in dynamic order — what the paper prints as "the SASS"
+    /// of a microbenchmark (Fig. 4, Fig. 6).
+    pub fn mnemonics(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.mnemonic).collect()
+    }
+
+    /// The mapping string for one PTX instruction as Table V prints it:
+    /// `N*OP` parts joined by `+` (e.g. `2*UPOPC+UIADD3`).
+    pub fn mapping_for(&self, ptx_idx: u32) -> String {
+        let mut parts: Vec<(&'static str, u32)> = Vec::new();
+        for e in self.entries.iter().filter(|e| e.ptx_idx == ptx_idx) {
+            match parts.last_mut() {
+                Some((m, n)) if *m == e.mnemonic => *n += 1,
+                _ => parts.push((e.mnemonic, 1)),
+            }
+        }
+        parts
+            .into_iter()
+            .map(|(m, n)| if n > 1 { format!("{n}*{m}") } else { m.to_string() })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_formats_mapping() {
+        let mut t = TraceRecorder::new();
+        t.record(3, "UPOPC", 10, 14);
+        t.record(3, "UPOPC", 12, 16);
+        t.record(3, "UIADD3", 14, 18);
+        t.record(4, "IADD3", 16, 20);
+        assert_eq!(t.mapping_for(3), "2*UPOPC+UIADD3");
+        assert_eq!(t.mapping_for(4), "IADD3");
+        assert_eq!(t.mapping_for(9), "");
+        assert_eq!(t.dynamic_count(), 4);
+    }
+
+    #[test]
+    fn windowed_trace_keeps_tail() {
+        let mut t = TraceRecorder::with_cap(2);
+        for i in 0..5 {
+            t.record(i, "IADD3", i as u64, i as u64 + 4);
+        }
+        assert_eq!(t.entries().len(), 2);
+        assert_eq!(t.entries()[0].ptx_idx, 3);
+        assert_eq!(t.dynamic_count(), 5);
+    }
+
+    #[test]
+    fn disabled_counts_but_does_not_store() {
+        let mut t = TraceRecorder::disabled();
+        t.record(0, "IADD3", 0, 4);
+        assert!(t.entries().is_empty());
+        assert_eq!(t.dynamic_count(), 1);
+    }
+}

@@ -1,0 +1,638 @@
+//! The timing engine: issues the translated SASS stream in order,
+//! tracking per-pipe occupancy, RAW hazards, pipe drain and the cycle
+//! counter.  See `sim/mod.rs` for the issue rules and their calibration.
+
+use super::exec::{self, ExecState, Fragment};
+use crate::config::{AmpereConfig, Pipe, ALL_PIPES};
+use crate::memory::MemorySystem;
+use crate::ptx::ast::WmmaOp;
+use crate::ptx::types::StateSpace;
+use crate::ptx::{Operand, PtxInstruction, PtxOp, PtxProgram, PtxType};
+use crate::sass::{Effect, SassClass, TraceRecorder};
+use crate::translate::TranslatedProgram;
+use std::collections::HashMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimError {
+    FuelExhausted { limit: u64 },
+    BadProgram(String),
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::FuelExhausted { limit } => {
+                write!(f, "simulation exceeded {limit} SASS instructions")
+            }
+            SimError::BadProgram(m) => write!(f, "bad program: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Result of one kernel simulation.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Cycle of the last issue (kernel wall-clock lower bound).
+    pub cycles: u64,
+    pub ptx_instructions: u64,
+    pub sass_instructions: u64,
+    /// Final architectural register values (PTX registers only).
+    pub regs: Vec<u64>,
+    /// Values captured by clock-read instructions, in dynamic order.
+    pub clock_reads: Vec<u64>,
+}
+
+impl RunResult {
+    /// Value of a named register at kernel end.
+    pub fn reg(&self, prog: &PtxProgram, name: &str) -> Option<u64> {
+        prog.reg_names
+            .iter()
+            .position(|n| n == name)
+            .and_then(|i| self.regs.get(i))
+            .copied()
+    }
+}
+
+fn pipe_idx(p: Pipe) -> usize {
+    ALL_PIPES.iter().position(|q| *q == p).unwrap()
+}
+
+/// The simulator: owns the machine config, memory system, and trace.
+pub struct Simulator {
+    pub cfg: AmpereConfig,
+    pub mem: MemorySystem,
+    pub trace: TraceRecorder,
+    /// Dynamic SASS instruction budget per `run` (loops guard).
+    pub fuel: u64,
+}
+
+impl Simulator {
+    pub fn new(cfg: AmpereConfig) -> Self {
+        let mem = MemorySystem::new(&cfg.memory);
+        Self { cfg, mem, trace: TraceRecorder::with_cap(65536), fuel: 500_000_000 }
+    }
+
+    pub fn a100() -> Self {
+        Self::new(AmpereConfig::a100())
+    }
+
+    /// Run a translated kernel with the given parameter values.
+    pub fn run(
+        &mut self,
+        prog: &PtxProgram,
+        tp: &TranslatedProgram,
+        params: &[u64],
+    ) -> Result<RunResult, SimError> {
+        if prog.instrs.len() != tp.groups.len() {
+            return Err(SimError::BadProgram(
+                "translation does not match program".into(),
+            ));
+        }
+
+        let nregs = tp.reg_slots as usize;
+        let mut regs = vec![0u64; nregs];
+        let mut ready = vec![0u64; nregs];
+        let mut fragments: HashMap<u32, Fragment> = HashMap::new();
+
+        // Shared symbols get dense device offsets.
+        let shared_bases: Vec<u64> = prog.shared_syms.iter().map(|(_, off, _)| *off).collect();
+
+        let mut pipe_free = [0u64; ALL_PIPES.len()];
+        let mut pipe_cold = [true; ALL_PIPES.len()];
+        let mut last_issue: u64 = 0;
+        let mut last_gap: u64 = 0; // issue-port hold of the previous instr
+        let mut drain: u64 = 0;
+        let mut issue_floor: u64 = 0; // DEPBAR
+        let mut clock_reads = Vec::new();
+        let mut sass_count: u64 = 0;
+        let mut ptx_count: u64 = 0;
+
+        let mut pc: usize = 0;
+        'outer: while pc < prog.instrs.len() {
+            let ins = &prog.instrs[pc];
+            let group = &tp.groups[pc];
+            ptx_count += 1;
+            let mut next_pc = pc + 1;
+
+            for (gi, s) in group.instrs.iter().enumerate() {
+                sass_count += 1;
+                if sass_count > self.fuel {
+                    return Err(SimError::FuelExhausted { limit: self.fuel });
+                }
+                let p = s.pipe();
+                let pi = pipe_idx(p);
+                let (occ, mut lat) = s.timing(&self.cfg);
+
+                // ---- issue time ------------------------------------
+                // In-order dispatch: 1-cycle skew after a normal
+                // instruction, full occupancy after a clock read; the
+                // same-pipe occupancy constraint arrives via pipe_free.
+                let mut t = (last_issue + last_gap.max(1))
+                    .max(pipe_free[pi])
+                    .max(issue_floor);
+                for r in s.reads() {
+                    t = t.max(ready[r.0 as usize]);
+                }
+                if matches!(s.class, SassClass::Cs2r | SassClass::S2r) {
+                    // clock reads serialize with pipe drain (see mod.rs)
+                    t = t.max(drain);
+                }
+
+                // cold-pipe start-up
+                if pipe_cold[pi] {
+                    lat += self.cfg.cold_start_extra;
+                    pipe_cold[pi] = false;
+                }
+
+                // ---- effects ---------------------------------------
+                match s.effect {
+                    Effect::ClockRead => {
+                        if let Some(d) = s.dst {
+                            let v = if prog.instrs[pc].ty == Some(PtxType::U32) {
+                                t & 0xFFFF_FFFF
+                            } else {
+                                t
+                            };
+                            regs[d.0 as usize] = v;
+                            ready[d.0 as usize] = t;
+                        }
+                        clock_reads.push(t);
+                    }
+                    Effect::DepBar => {
+                        issue_floor = t.max(drain) + self.cfg.depbar_stall;
+                    }
+                    Effect::Load => {
+                        let (addr_op, space) = (ins.srcs.first(), ins.mods.space);
+                        let (value, mlat) = self.do_load(
+                            ins,
+                            addr_op,
+                            space,
+                            params,
+                            &mut regs,
+                            &shared_bases,
+                            &mut fragments,
+                        );
+                        lat = mlat;
+                        if let Some(d) = s.dst {
+                            regs[d.0 as usize] = value;
+                            ready[d.0 as usize] = t + lat;
+                            drain = drain.max(t + lat);
+                        }
+                    }
+                    Effect::Store => {
+                        let completion = self.do_store(
+                            ins,
+                            params,
+                            &mut regs,
+                            &shared_bases,
+                            &mut fragments,
+                        );
+                        drain = drain.max(t + completion);
+                    }
+                    Effect::Branch => {
+                        let mut est = ExecState {
+                            regs: &mut regs,
+                            params,
+                            shared_bases: &shared_bases,
+                            fragments: &mut fragments,
+                        };
+                        let out = exec::eval(prog, ins, &mut est);
+                        if let Some(target) = out.branch_to {
+                            next_pc = target as usize;
+                        }
+                    }
+                    Effect::EvalPtx | Effect::MmaTile => {
+                        if s.effect == Effect::EvalPtx {
+                            let mut est = ExecState {
+                                regs: &mut regs,
+                                params,
+                                shared_bases: &shared_bases,
+                                fragments: &mut fragments,
+                            };
+                            exec::eval(prog, ins, &mut est);
+                        }
+                        if let Some(d) = s.dst {
+                            ready[d.0 as usize] = t + lat;
+                            drain = drain.max(t + lat);
+                        }
+                    }
+                    Effect::Exit => {
+                        self.trace.record(group.ptx_idx, s.mnemonic, t, t + lat);
+                        last_issue = t;
+                        break 'outer;
+                    }
+                    Effect::None | Effect::WarpSync | Effect::Movm => {
+                        if let Some(d) = s.dst {
+                            ready[d.0 as usize] = t + lat;
+                            drain = drain.max(t + lat);
+                        }
+                    }
+                }
+
+                self.trace.record(group.ptx_idx, s.mnemonic, t, t + lat);
+                pipe_free[pi] = t + occ;
+                last_issue = t;
+                last_gap = if matches!(s.class, SassClass::Cs2r | SassClass::S2r) {
+                    occ
+                } else {
+                    1
+                };
+                let _ = gi;
+            }
+
+            pc = next_pc;
+        }
+
+        Ok(RunResult {
+            cycles: last_issue,
+            ptx_instructions: ptx_count,
+            sass_instructions: sass_count,
+            regs: regs[..prog.reg_count()].to_vec(),
+            clock_reads,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn do_load(
+        &mut self,
+        ins: &PtxInstruction,
+        addr_op: Option<&Operand>,
+        space: StateSpace,
+        params: &[u64],
+        regs: &mut [u64],
+        shared_bases: &[u64],
+        fragments: &mut HashMap<u32, Fragment>,
+    ) -> (u64, u64) {
+        let size = ins.ty.map(|t| t.bits()).unwrap_or(64);
+        // WMMA fragment load?
+        if let PtxOp::Wmma(w) = ins.op {
+            let addr = {
+                let mut dummy = HashMap::new();
+                let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+                addr_op
+                    .and_then(|o| {
+                        exec::effective_address(&st, o)
+                            .or_else(|| o.as_reg().map(|r| st.regs[r.0 as usize]))
+                    })
+                    .unwrap_or(0)
+            };
+            let (m, n, k) = ins.wmma_shape.unwrap_or((16, 16, 16));
+            let (rows, cols) = match w {
+                WmmaOp::LoadA => (m as usize, k as usize),
+                WmmaOp::LoadB => (k as usize, n as usize),
+                _ => (m as usize, n as usize),
+            };
+            let mut data = vec![0f64; rows * cols];
+            let wide = ins.ty == Some(PtxType::F64);
+            for (i, v) in data.iter_mut().enumerate() {
+                if wide {
+                    *v = f64::from_bits(self.mem.dram.read_u64(addr + 8 * i as u64));
+                } else {
+                    let mut b = [0u8; 4];
+                    self.mem.dram.read(addr + 4 * i as u64, &mut b);
+                    *v = f32::from_bits(u32::from_le_bytes(b)) as f64;
+                }
+            }
+            if let Some(Operand::Reg(d)) = ins.dst {
+                fragments.insert(d.0, Fragment { rows, cols, data });
+            }
+            let (_, lat, _) = self.mem.load_global(addr, 64, ins.mods.cache);
+            return (0, lat);
+        }
+
+        match space {
+            StateSpace::Param => {
+                let v = match addr_op {
+                    Some(Operand::Param(p)) => params.get(*p as usize).copied().unwrap_or(0),
+                    _ => 0,
+                };
+                (v, self.cfg.memory.l1_hit_latency)
+            }
+            StateSpace::Shared => {
+                let addr = {
+                    let mut dummy = HashMap::new();
+                    let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+                    addr_op.and_then(|o| exec::effective_address(&st, o)).unwrap_or(0)
+                };
+                let (v, lat, _) = self.mem.load_shared(addr, size);
+                (v, lat)
+            }
+            _ => {
+                let addr = {
+                    let mut dummy = HashMap::new();
+                    let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+                    addr_op.and_then(|o| exec::effective_address(&st, o)).unwrap_or(0)
+                };
+                let (v, lat, _) = self.mem.load_global(addr, size, ins.mods.cache);
+                (v, lat)
+            }
+        }
+    }
+
+    fn do_store(
+        &mut self,
+        ins: &PtxInstruction,
+        params: &[u64],
+        regs: &mut [u64],
+        shared_bases: &[u64],
+        fragments: &mut HashMap<u32, Fragment>,
+    ) -> u64 {
+        let size = ins.ty.map(|t| t.bits()).unwrap_or(64);
+        // WMMA fragment store?
+        if let PtxOp::Wmma(WmmaOp::Store) = ins.op {
+            let mut dummy = HashMap::new();
+            let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+            let addr = ins.dst.as_ref().and_then(|o| exec::effective_address(&st, o)).unwrap_or(0);
+            let frag = ins
+                .srcs
+                .first()
+                .and_then(|o| o.as_reg())
+                .and_then(|r| fragments.get(&r.0))
+                .cloned();
+            if let Some(f) = frag {
+                let wide = ins.ty == Some(PtxType::F64);
+                for (i, v) in f.data.iter().enumerate() {
+                    if wide {
+                        self.mem.dram.write_u64(addr + 8 * i as u64, v.to_bits());
+                    } else {
+                        self.mem
+                            .dram
+                            .write(addr + 4 * i as u64, &(*v as f32).to_bits().to_le_bytes());
+                    }
+                }
+            }
+            // Timing-only: the fragment bytes were written above.
+            return self.mem.store_global(addr, 0, 0, ins.mods.cache);
+        }
+
+        let (addr, value) = {
+            let mut dummy = HashMap::new();
+            let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+            let addr = ins
+                .dst
+                .as_ref()
+                .and_then(|o| exec::effective_address(&st, o))
+                .unwrap_or(0);
+            let ty = ins.ty.unwrap_or(PtxType::B64);
+            let value = ins
+                .srcs
+                .first()
+                .map(|o| exec::operand_value(&st, o, ty))
+                .unwrap_or(0);
+            (addr, value)
+        };
+        match ins.mods.space {
+            StateSpace::Shared => self.mem.store_shared(addr, size, value),
+            _ => self.mem.store_global(addr, size, value, ins.mods.cache),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parse_program;
+    use crate::translate::translate_program;
+
+    fn run(src: &str) -> (PtxProgram, RunResult) {
+        let prog = parse_program(src).unwrap();
+        let tp = translate_program(&prog).unwrap();
+        let mut sim = Simulator::a100();
+        let r = sim.run(&prog, &tp, &[0x10000]).unwrap();
+        (prog, r)
+    }
+
+    /// The paper's protocol: CPI = floor((Δ − clock_overhead) / n).
+    fn measured_cpi(src_body: &str, n: u64) -> u64 {
+        let src = format!(
+            ".visible .entry k() {{ .reg .b16 %h<99>; .reg .b32 %r<99>; .reg .b32 %f<99>; \
+             .reg .b64 %rd<99>; .reg .b64 %fd<99>; .reg .pred %p<9>; \
+             mov.u64 %rd1, %clock64; {src_body} mov.u64 %rd2, %clock64; ret; }}"
+        );
+        let (_, r) = run(&src);
+        assert_eq!(r.clock_reads.len(), 2);
+        let delta = r.clock_reads[1] - r.clock_reads[0];
+        (delta - 2) / n
+    }
+
+    #[test]
+    fn clock_overhead_is_2() {
+        // Two consecutive clock reads differ by exactly 2 (paper §IV-A).
+        let (_, r) = run(
+            ".visible .entry k() { .reg .b64 %rd<9>; \
+             mov.u64 %rd1, %clock64; mov.u64 %rd2, %clock64; ret; }",
+        );
+        assert_eq!(r.clock_reads[1] - r.clock_reads[0], 2);
+    }
+
+    #[test]
+    fn table1_amortization_exact() {
+        // Table I: CPI for 1..4 add.u32 = 5, 3, 2, 2.
+        let bodies = [
+            ("add.u32 %r11, 6, 1;", 1, 5),
+            ("add.u32 %r11, 6, 1; add.u32 %r12, 5, 7;", 2, 3),
+            ("add.u32 %r11, 6, 1; add.u32 %r12, 5, 7; add.u32 %r13, 9, 2;", 3, 2),
+            (
+                "add.u32 %r11, 6, 1; add.u32 %r12, 5, 7; add.u32 %r13, 9, 2; add.u32 %r14, 4, 4;",
+                4,
+                2,
+            ),
+        ];
+        for (body, n, want) in bodies {
+            assert_eq!(measured_cpi(body, n), want, "n = {n}");
+        }
+    }
+
+    #[test]
+    fn table2_dependent_vs_independent() {
+        // Table II rows: (dep, indep).
+        let cases: [(&str, &str, u64, u64); 5] = [
+            (
+                "add.f16 %h1, %h9, %h8; add.f16 %h2, %h1, %h8; add.f16 %h3, %h2, %h8;",
+                "add.f16 %h1, %h9, %h8; add.f16 %h2, %h7, %h8; add.f16 %h3, %h6, %h8;",
+                3,
+                2,
+            ),
+            (
+                "add.u32 %r1, %r9, 1; add.u32 %r2, %r1, 2; add.u32 %r3, %r2, 3;",
+                "add.u32 %r1, %r9, 1; add.u32 %r2, %r8, 2; add.u32 %r3, %r7, 3;",
+                4,
+                2,
+            ),
+            (
+                "add.f64 %fd1, %fd9, %fd8; add.f64 %fd2, %fd1, %fd8; add.f64 %fd3, %fd2, %fd8;",
+                "add.f64 %fd1, %fd9, %fd8; add.f64 %fd2, %fd7, %fd8; add.f64 %fd3, %fd6, %fd8;",
+                5,
+                4,
+            ),
+            (
+                "mul.lo.u32 %r1, %r9, 3; mul.lo.u32 %r2, %r1, 3; mul.lo.u32 %r3, %r2, 3;",
+                "mul.lo.u32 %r1, %r9, 3; mul.lo.u32 %r2, %r8, 3; mul.lo.u32 %r3, %r7, 3;",
+                3,
+                2,
+            ),
+            (
+                "mad.rn.f32 %f1, %f9, %f8, %f7; mad.rn.f32 %f2, %f1, %f8, %f7; mad.rn.f32 %f3, %f2, %f8, %f7;",
+                "mad.rn.f32 %f1, %f9, %f8, %f7; mad.rn.f32 %f2, %f6, %f8, %f7; mad.rn.f32 %f3, %f5, %f8, %f7;",
+                4,
+                2,
+            ),
+        ];
+        for (dep, indep, want_dep, want_indep) in cases {
+            assert_eq!(measured_cpi(dep, 3), want_dep, "dep: {dep}");
+            assert_eq!(measured_cpi(indep, 3), want_indep, "indep: {indep}");
+        }
+    }
+
+    #[test]
+    fn fig4_32bit_clock_barrier() {
+        // Fig. 4: 3 adds measured with 32-bit clocks read ≈13 CPI (barrier),
+        // 64-bit clocks read 2.
+        let src32 = ".visible .entry k() { .reg .b32 %r<99>; \
+             mov.u32 %r1, %clock; \
+             add.u32 %r11, 6, 1; add.u32 %r12, 5, 7; add.u32 %r13, 9, 2; \
+             mov.u32 %r2, %clock; sub.s32 %r3, %r2, %r1; ret; }";
+        let (_, r) = run(src32);
+        let delta = r.clock_reads[1] - r.clock_reads[0];
+        assert_eq!((delta - 2) / 3, 13, "delta = {delta}");
+    }
+
+    #[test]
+    fn functional_fig1_semantics() {
+        // Fig. 1's kernel: the stored values must be architecturally right.
+        let src = r#"
+.visible .entry k(.param .u64 p0) {
+ .reg .b32 %r<99>;
+ .reg .b64 %rd<99>;
+ ld.param.u64 %rd1, [p0];
+ cvta.to.global.u64 %rd4, %rd1;
+ add.s32 %r5, 5, 3;
+ add.s32 %r7, %r5, 2;
+ mov.u64 %rd8, %clock64;
+ add.u32 %r11, 6, %r7;
+ add.u32 %r12, %r5, 7;
+ mov.u64 %rd9, %clock64;
+ st.global.u32 [%rd4], %r11;
+ st.global.u32 [%rd4 + 8], %r12;
+ ret;
+}"#;
+        let prog = parse_program(src).unwrap();
+        let tp = translate_program(&prog).unwrap();
+        let mut sim = Simulator::a100();
+        let r = sim.run(&prog, &tp, &[0x4000]).unwrap();
+        assert_eq!(r.reg(&prog, "%r5"), Some(8));
+        assert_eq!(r.reg(&prog, "%r7"), Some(10));
+        assert_eq!(r.reg(&prog, "%r11"), Some(16));
+        assert_eq!(r.reg(&prog, "%r12"), Some(15));
+        assert_eq!(sim.mem.dram.read_u64(0x4000) & 0xFFFF_FFFF, 16);
+        assert_eq!(sim.mem.dram.read_u64(0x4008) & 0xFFFF_FFFF, 15);
+    }
+
+    #[test]
+    fn loops_execute_dynamically() {
+        let src = r#"
+.visible .entry k() {
+ .reg .b64 %rd<9>;
+ .reg .pred %p<2>;
+ mov.u64 %rd1, 0;
+$L:
+ add.u64 %rd1, %rd1, 1;
+ setp.lt.u64 %p1, %rd1, 10;
+ @%p1 bra $L;
+ ret;
+}"#;
+        let (prog, r) = run(src);
+        assert_eq!(r.reg(&prog, "%rd1"), Some(10));
+        assert!(r.ptx_instructions > 25, "loop body must re-execute");
+    }
+
+    #[test]
+    fn dependent_memory_chain_pays_dram_latency() {
+        // Build a 3-deep pointer chain in DRAM, then chase it with ld.cv:
+        // each load must cost the full DRAM latency.
+        let src = r#"
+.visible .entry k(.param .u64 p0) {
+ .reg .b64 %rd<9>;
+ ld.param.u64 %rd1, [p0];
+ mov.u64 %rd7, %clock64;
+ ld.global.cv.u64 %rd2, [%rd1];
+ ld.global.cv.u64 %rd3, [%rd2];
+ ld.global.cv.u64 %rd4, [%rd3];
+ mov.u64 %rd8, %clock64;
+ ret;
+}"#;
+        let prog = parse_program(src).unwrap();
+        let tp = translate_program(&prog).unwrap();
+        let mut sim = Simulator::a100();
+        sim.mem.dram.write_u64(0x1000, 0x2000);
+        sim.mem.dram.write_u64(0x2000, 0x3000);
+        sim.mem.dram.write_u64(0x3000, 0x4000);
+        let r = sim.run(&prog, &tp, &[0x1000]).unwrap();
+        let delta = r.clock_reads[1] - r.clock_reads[0];
+        let per_load = delta / 3;
+        assert!(
+            (285..=300).contains(&per_load),
+            "pointer-chase per-load = {per_load}, want ≈290"
+        );
+        assert_eq!(r.reg(&prog, "%rd4"), Some(0x4000));
+    }
+
+    #[test]
+    fn shared_memory_latencies_match_table4() {
+        // One load / one store, measured with n = 1 (drain exposes the
+        // completion): ld = 23, st = 19.
+        let ld = ".visible .entry k() { .reg .b64 %rd<9>; .shared .align 8 .b8 sh[1024]; \
+             mov.u64 %rd1, %clock64; ld.shared.u64 %rd3, [sh]; mov.u64 %rd2, %clock64; ret; }";
+        let (_, r) = run(ld);
+        assert_eq!(r.clock_reads[1] - r.clock_reads[0] - 2, 23);
+
+        let st = ".visible .entry k() { .reg .b64 %rd<9>; .shared .align 8 .b8 sh[1024]; \
+             mov.u64 %rd1, %clock64; st.shared.u64 [sh], 50; mov.u64 %rd2, %clock64; ret; }";
+        let (_, r) = run(st);
+        assert_eq!(r.clock_reads[1] - r.clock_reads[0] - 2, 19);
+    }
+
+    #[test]
+    fn fuel_guard_trips_on_infinite_loop() {
+        let src = ".visible .entry k() { .reg .b64 %rd<9>; $L: add.u64 %rd1, %rd1, 1; bra $L; ret; }";
+        let prog = parse_program(src).unwrap();
+        let tp = translate_program(&prog).unwrap();
+        let mut sim = Simulator::a100();
+        sim.fuel = 10_000;
+        match sim.run(&prog, &tp, &[]) {
+            Err(SimError::FuelExhausted { .. }) => {}
+            other => panic!("expected fuel exhaustion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_records_mapping() {
+        let (_, _) = run(
+            ".visible .entry k() { .reg .b32 %r<9>; add.u32 %r1, 1, 2; ret; }",
+        );
+        // separate sim to inspect trace
+        let prog =
+            parse_program(".visible .entry k() { .reg .b32 %r<9>; add.u32 %r1, 1, 2; ret; }")
+                .unwrap();
+        let tp = translate_program(&prog).unwrap();
+        let mut sim = Simulator::a100();
+        sim.run(&prog, &tp, &[]).unwrap();
+        assert_eq!(sim.trace.mapping_for(0), "IADD");
+    }
+
+    #[test]
+    fn insight1_pipes_overlap() {
+        // 2 add (INT) + 2 mad (FMA) interleaved beats 4 serial adds on
+        // one pipe — the paper's dual-pipe demonstration.
+        let mixed = "add.u32 %r1, %r9, 1; mad.lo.u32 %r2, %r8, 2, %r7; \
+                     add.u32 %r3, %r6, 1; mad.lo.u32 %r4, %r5, 2, %r7;";
+        let same = "add.u32 %r1, %r9, 1; add.u32 %r2, %r8, 2; \
+                    add.u32 %r3, %r6, 1; add.u32 %r4, %r5, 2;";
+        let m = measured_cpi(mixed, 4);
+        let s = measured_cpi(same, 4);
+        assert!(m <= s, "mixed {m} should not exceed same-pipe {s}");
+    }
+}

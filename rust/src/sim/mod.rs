@@ -1,0 +1,29 @@
+//! Cycle-level Ampere SM simulator.
+//!
+//! Two halves:
+//! * [`exec`] — the *functional* evaluator: PTX semantics over a flat
+//!   `u64` register file (pointer-chase addresses, loop counters,
+//!   predicates, float bit-patterns, WMMA fragments);
+//! * [`core`] — the *timing* engine: in-order issue, per-pipe occupancy
+//!   and result latency, scoreboard (RAW), cold-pipe start-up, clock
+//!   reads that serialize with pipe drain, the Fig.-4a DEPBAR stall, and
+//!   the memory hierarchy for loads/stores.
+//!
+//! ## Issue rules (calibrated; see `config::PipeTiming` docs)
+//!
+//! 1. In-order: instruction *i* issues ≥ issue(i−1) + gap, where gap =
+//!    occupancy when *i* stays on the same pipe, else 1 (dual-dispatch
+//!    skew) — except after a clock read, whose occupancy always binds.
+//! 2. RAW: issue ≥ ready(src) for every source register.
+//! 3. Cold pipe: the first instruction on each pipe per kernel gets +1
+//!    result latency (the paper's "first launch overhead", Table I).
+//! 4. Clock reads (CS2R/S2R) issue ≥ the *drain* point: max ready over
+//!    every register written so far plus pending store completions —
+//!    which is what makes the measured Δ include the last instruction's
+//!    latency, reproducing Tables I/II exactly under
+//!    `CPI = floor((Δ − 2) / n)`.
+
+pub mod core;
+pub mod exec;
+
+pub use self::core::{RunResult, Simulator};

@@ -1,0 +1,383 @@
+//! Tensor-core (WMMA) model — Table III and Fig. 6.
+//!
+//! Three concerns, mirrored 1:1 with the python layer
+//! (`python/compile/kernels/wmma.py` carries the same decomposition
+//! arithmetic — `sass_grid`/`effective_tile` — and pytest pins them equal):
+//!
+//! 1. **Decomposition**: one WMMA PTX instruction becomes N shape-limited
+//!    SASS instructions (`2*HMMA.16816`, `4*HMMA.1684`, `1*DMMA.884`, …).
+//! 2. **Timing**: per-SASS-instruction cycles from Table III
+//!    (8/8/8/4/16/4/4), occupancy-limited and pipelined, so the dependent
+//!    WMMA chain of the Fig. 5 microbenchmark measures N × cycles.
+//! 3. **Layout movement**: the MOVM.16.MT88 transpose rules — row×row
+//!    transposes B, col×col transposes A and C (in *and* out), row×col
+//!    needs no MOVM.
+
+pub mod movm;
+pub mod throughput;
+
+use crate::ptx::ast::WmmaOp;
+use crate::ptx::{PtxInstruction, PtxType, Reg};
+use crate::sass::{Effect, SassClass, SassInstr};
+use crate::translate::Translator;
+
+pub use movm::{movm_plan, MovmPlan};
+pub use throughput::{throughput, Throughput};
+
+/// WMMA dtype configuration key (same names as the python layer and the
+/// AOT artifact files `artifacts/wmma_<key>.hlo.txt`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WmmaDtype {
+    F16F16,
+    F16F32,
+    Bf16F32,
+    Tf32F32,
+    F64F64,
+    U8S32,
+    U4S32,
+}
+
+pub const ALL_DTYPES: [WmmaDtype; 7] = [
+    WmmaDtype::F16F16,
+    WmmaDtype::F16F32,
+    WmmaDtype::Bf16F32,
+    WmmaDtype::Tf32F32,
+    WmmaDtype::F64F64,
+    WmmaDtype::U8S32,
+    WmmaDtype::U4S32,
+];
+
+impl WmmaDtype {
+    pub fn key(self) -> &'static str {
+        match self {
+            WmmaDtype::F16F16 => "f16_f16",
+            WmmaDtype::F16F32 => "f16_f32",
+            WmmaDtype::Bf16F32 => "bf16_f32",
+            WmmaDtype::Tf32F32 => "tf32_f32",
+            WmmaDtype::F64F64 => "f64_f64",
+            WmmaDtype::U8S32 => "u8_s32",
+            WmmaDtype::U4S32 => "u4_s32",
+        }
+    }
+
+    /// From the PTX fragment types [d, a, b, c] (Table III's PTX column).
+    pub fn from_fragment_types(t: &[PtxType; 4]) -> Option<WmmaDtype> {
+        Some(match (t[1], t[0]) {
+            (PtxType::F16, PtxType::F16) => WmmaDtype::F16F16,
+            (PtxType::F16, PtxType::F32) => WmmaDtype::F16F32,
+            (PtxType::Bf16, _) => WmmaDtype::Bf16F32,
+            (PtxType::Tf32, _) => WmmaDtype::Tf32F32,
+            (PtxType::F64, _) => WmmaDtype::F64F64,
+            (PtxType::U8, _) => WmmaDtype::U8S32,
+            (PtxType::U4, _) => WmmaDtype::U4S32,
+            _ => return None,
+        })
+    }
+
+    /// Primary PTX shape (M, N, K) — Table III column 1.
+    pub fn primary_shape(self) -> (u32, u32, u32) {
+        match self {
+            WmmaDtype::F16F16 | WmmaDtype::F16F32 | WmmaDtype::Bf16F32 | WmmaDtype::U8S32 => {
+                (16, 16, 16)
+            }
+            WmmaDtype::Tf32F32 => (16, 16, 8),
+            WmmaDtype::F64F64 => (8, 8, 4),
+            WmmaDtype::U4S32 => (8, 8, 32),
+        }
+    }
+
+    /// All PTX shapes the dtype supports.
+    pub fn supported_shapes(self) -> Vec<(u32, u32, u32)> {
+        match self {
+            WmmaDtype::F16F16 | WmmaDtype::F16F32 | WmmaDtype::Bf16F32 | WmmaDtype::U8S32 => {
+                vec![(16, 16, 16), (8, 32, 16), (32, 8, 16)]
+            }
+            WmmaDtype::Tf32F32 => vec![(16, 16, 8)],
+            WmmaDtype::F64F64 => vec![(8, 8, 4)],
+            WmmaDtype::U4S32 => vec![(8, 8, 32)],
+        }
+    }
+
+    /// The SASS tile the hardware iterates with (Table III's SASS column).
+    pub fn sass_tile(self) -> (u32, u32, u32) {
+        match self {
+            WmmaDtype::F16F16 | WmmaDtype::F16F32 | WmmaDtype::Bf16F32 | WmmaDtype::U8S32 => {
+                (16, 8, 16)
+            }
+            WmmaDtype::Tf32F32 => (16, 8, 4),
+            WmmaDtype::F64F64 => (8, 8, 4),
+            WmmaDtype::U4S32 => (8, 8, 32),
+        }
+    }
+
+    /// SASS mnemonic (Table III).
+    pub fn sass_mnemonic(self) -> &'static str {
+        match self {
+            WmmaDtype::F16F16 => "HMMA.16816.F16",
+            WmmaDtype::F16F32 => "HMMA.16816.F32",
+            WmmaDtype::Bf16F32 => "HMMA.16816.F32.BF16",
+            WmmaDtype::Tf32F32 => "HMMA.1684.F32.TF32",
+            WmmaDtype::F64F64 => "DMMA.884",
+            WmmaDtype::U8S32 => "IMMA.16816.U8.U8",
+            WmmaDtype::U4S32 => "IMMA.8832.U4.U4",
+        }
+    }
+
+    /// Cycles per SASS instruction (Table III: "each inst. is N cycles").
+    pub fn per_instruction_cycles(self) -> u64 {
+        match self {
+            WmmaDtype::F16F16 | WmmaDtype::F16F32 | WmmaDtype::Bf16F32 => 8,
+            WmmaDtype::Tf32F32 => 4,
+            WmmaDtype::F64F64 => 16,
+            WmmaDtype::U8S32 => 4,
+            WmmaDtype::U4S32 => 4,
+        }
+    }
+
+    /// Input-element bits.
+    pub fn input_bits(self) -> u32 {
+        match self {
+            WmmaDtype::F16F16 | WmmaDtype::F16F32 | WmmaDtype::Bf16F32 => 16,
+            WmmaDtype::Tf32F32 => 32,
+            WmmaDtype::F64F64 => 64,
+            WmmaDtype::U8S32 => 8,
+            WmmaDtype::U4S32 => 4,
+        }
+    }
+
+    /// Is the input a half-precision float (MOVM applies — paper §V-C:
+    /// "for all half floating precision (fp16 and bf16) inputs, SASS
+    /// instruction MOVM.16.MT88 is used").
+    pub fn uses_movm(self) -> bool {
+        matches!(self, WmmaDtype::F16F16 | WmmaDtype::F16F32 | WmmaDtype::Bf16F32)
+    }
+}
+
+/// The SASS tile re-shaped for wide/tall PTX shapes: a SASS MMA always
+/// retires the same MAC count for a dtype, so m8n32k16 decomposes as two
+/// 8×16×16 tiles etc. (why the paper finds Ampere latency
+/// shape-independent within a dtype).  Mirrors python `effective_tile`.
+pub fn effective_tile(dtype: WmmaDtype, shape: (u32, u32, u32)) -> (u32, u32, u32) {
+    let (m, _n, _k) = shape;
+    let (tm, tn, tk) = dtype.sass_tile();
+    let macs = tm as u64 * tn as u64 * tk as u64;
+    let tm = m.min(tm);
+    let tn = (macs / (tm as u64 * tk as u64)) as u32;
+    (tm, tn.min(shape.1), tk)
+}
+
+/// Number of SASS MMA instructions one WMMA PTX instruction becomes.
+pub fn sass_instruction_count(dtype: WmmaDtype, shape: (u32, u32, u32)) -> u32 {
+    let (m, n, k) = shape;
+    let (tm, tn, tk) = effective_tile(dtype, shape);
+    assert!(
+        m % tm == 0 && n % tn == 0 && k % tk == 0,
+        "unsupported WMMA shape {shape:?} for {dtype:?}"
+    );
+    (m / tm) * (n / tn) * (k / tk)
+}
+
+/// Latency of one dependent WMMA PTX instruction = SASS count × per-SASS
+/// cycles (Table III's "Cycles" column: 16/16/16/16/16/8/4).
+pub fn ptx_latency(dtype: WmmaDtype, shape: (u32, u32, u32)) -> u64 {
+    sass_instruction_count(dtype, shape) as u64 * dtype.per_instruction_cycles()
+}
+
+/// Translate a WMMA PTX instruction into SASS (called from
+/// `translate::rules`).
+pub fn translate_wmma(
+    tr: &mut Translator,
+    ins: &PtxInstruction,
+    op: WmmaOp,
+    dst: Option<Reg>,
+    srcs: &[Reg],
+) -> Result<Vec<SassInstr>, String> {
+    match op {
+        WmmaOp::Mma => {
+            let types = ins.wmma_types.ok_or("wmma.mma without fragment types")?;
+            let dtype = WmmaDtype::from_fragment_types(&types)
+                .ok_or_else(|| format!("unsupported wmma fragment types {types:?}"))?;
+            let shape = ins.wmma_shape.ok_or("wmma.mma without shape")?;
+            let count = sass_instruction_count(dtype, shape);
+            let cyc = dtype.per_instruction_cycles();
+            let mut out = Vec::with_capacity(count as usize + 1);
+            for i in 0..count {
+                let mut s = SassInstr::new(dtype.sass_mnemonic(), SassClass::Mma)
+                    .occ(cyc)
+                    .lat(cyc)
+                    .effect(Effect::MmaTile);
+                // All tiles read the fragment sources; the last writes the
+                // accumulator (EvalPtx applies the functional result).
+                for r in srcs.iter().take(3) {
+                    s = s.src(*r);
+                }
+                if i + 1 == count {
+                    s.dst = dst;
+                    s.effect = Effect::EvalPtx;
+                } else {
+                    s.dst = Some(tr.temp());
+                }
+                out.push(s);
+            }
+            // Fig. 6: a lone TC instruction shows a trailing NOP
+            // (warp-sync) in the dynamic SASS.
+            if ins.mods.sync {
+                out.push(SassInstr::new("NOP", SassClass::Control).effect(Effect::WarpSync));
+            }
+            Ok(out)
+        }
+        WmmaOp::LoadA | WmmaOp::LoadB | WmmaOp::LoadC => {
+            let types = ins.wmma_types;
+            let dtype = types
+                .as_ref()
+                .and_then(WmmaDtype::from_fragment_types)
+                .or_else(|| match ins.ty {
+                    Some(PtxType::F16) => Some(WmmaDtype::F16F32),
+                    Some(PtxType::Bf16) => Some(WmmaDtype::Bf16F32),
+                    // f32/s32 fragments are accumulators (or tf32 inputs):
+                    // either way no half-precision MOVM path applies.
+                    Some(PtxType::Tf32) | Some(PtxType::F32) => Some(WmmaDtype::Tf32F32),
+                    Some(PtxType::F64) => Some(WmmaDtype::F64F64),
+                    Some(PtxType::U8) => Some(WmmaDtype::U8S32),
+                    Some(PtxType::U4) | Some(PtxType::S32) => Some(WmmaDtype::U4S32),
+                    _ => None,
+                })
+                .ok_or("wmma.load without dtype")?;
+            let layout = ins.wmma_layout.unwrap_or((true, true));
+            let plan = movm_plan(layout.0, layout.1);
+            let mut out = Vec::new();
+            let mut ld = SassInstr::new("LDG.E", SassClass::Memory).effect(Effect::Load);
+            if let Some(d) = dst {
+                ld.dst = Some(d);
+            }
+            for r in srcs.iter().take(2) {
+                ld = ld.src(*r);
+            }
+            out.push(ld);
+            let needs_movm = dtype.uses_movm()
+                && match op {
+                    WmmaOp::LoadA => plan.transpose_a,
+                    WmmaOp::LoadB => plan.transpose_b,
+                    WmmaOp::LoadC => plan.transpose_c_in,
+                    _ => false,
+                };
+            if needs_movm {
+                let mut mv =
+                    SassInstr::new("MOVM.16.MT88", SassClass::Movm).effect(Effect::Movm);
+                if let Some(d) = dst {
+                    mv = mv.src(d);
+                    mv.dst = Some(d);
+                }
+                out.push(mv);
+            }
+            Ok(out)
+        }
+        WmmaOp::Store => {
+            let layout = ins.wmma_layout.unwrap_or((true, true));
+            let plan = movm_plan(layout.0, layout.1);
+            let mut out = Vec::new();
+            if plan.transpose_c_out {
+                let mut mv = SassInstr::new("MOVM.16.MT88", SassClass::Movm).effect(Effect::Movm);
+                if let Some(r) = srcs.first() {
+                    mv = mv.src(*r);
+                    mv.dst = Some(tr.temp());
+                }
+                out.push(mv);
+            }
+            let mut st = SassInstr::new("STG.E", SassClass::Memory).effect(Effect::Store);
+            for r in srcs.iter().take(3) {
+                st = st.src(*r);
+            }
+            out.push(st);
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_sass_counts() {
+        // Table III "Instructions" column: 2/2/2/4/1/2/1.
+        for (d, n) in [
+            (WmmaDtype::F16F16, 2),
+            (WmmaDtype::F16F32, 2),
+            (WmmaDtype::Bf16F32, 2),
+            (WmmaDtype::Tf32F32, 4),
+            (WmmaDtype::F64F64, 1),
+            (WmmaDtype::U8S32, 2),
+            (WmmaDtype::U4S32, 1),
+        ] {
+            assert_eq!(sass_instruction_count(d, d.primary_shape()), n, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn table3_ptx_latencies() {
+        // Table III "Cycles" column: 16 for all floats, 8 for u8, 4 for u4.
+        for (d, c) in [
+            (WmmaDtype::F16F16, 16),
+            (WmmaDtype::F16F32, 16),
+            (WmmaDtype::Bf16F32, 16),
+            (WmmaDtype::Tf32F32, 16),
+            (WmmaDtype::F64F64, 16),
+            (WmmaDtype::U8S32, 8),
+            (WmmaDtype::U4S32, 4),
+        ] {
+            assert_eq!(ptx_latency(d, d.primary_shape()), c, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn shape_independent_latency_within_dtype() {
+        // Paper §V-C: different shapes of the same dtype → same latency.
+        for d in ALL_DTYPES {
+            let lats: std::collections::HashSet<u64> = d
+                .supported_shapes()
+                .into_iter()
+                .map(|s| ptx_latency(d, s))
+                .collect();
+            assert_eq!(lats.len(), 1, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn effective_tile_reshapes_for_tall_wide() {
+        assert_eq!(effective_tile(WmmaDtype::F16F32, (8, 32, 16)), (8, 16, 16));
+        assert_eq!(effective_tile(WmmaDtype::F16F32, (32, 8, 16)), (16, 8, 16));
+        assert_eq!(effective_tile(WmmaDtype::F16F32, (16, 16, 16)), (16, 8, 16));
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported WMMA shape")]
+    fn rejects_bad_shape() {
+        sass_instruction_count(WmmaDtype::F64F64, (17, 8, 4));
+    }
+
+    #[test]
+    fn movm_only_for_half_inputs() {
+        assert!(WmmaDtype::F16F16.uses_movm());
+        assert!(WmmaDtype::Bf16F32.uses_movm());
+        assert!(!WmmaDtype::Tf32F32.uses_movm());
+        assert!(!WmmaDtype::U8S32.uses_movm());
+    }
+
+    #[test]
+    fn dtype_from_fragment_types() {
+        use PtxType::*;
+        assert_eq!(
+            WmmaDtype::from_fragment_types(&[F16, F16, F16, F16]),
+            Some(WmmaDtype::F16F16)
+        );
+        assert_eq!(
+            WmmaDtype::from_fragment_types(&[F32, F16, F16, F32]),
+            Some(WmmaDtype::F16F32)
+        );
+        assert_eq!(
+            WmmaDtype::from_fragment_types(&[S32, U8, U8, S32]),
+            Some(WmmaDtype::U8S32)
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! MOVM.16.MT88 layout rules (paper §V-C, last paragraph).
+//!
+//! MOVM moves a matrix *with a transpose*.  Which fragments need it is a
+//! pure function of the A/B storage layouts declared in the WMMA PTX:
+//!
+//! * A row-major, B row-major  → transpose **B** (multiply rows of A by
+//!   columns of B; B arrives row-major so it must be flipped);
+//! * A col-major, B col-major  → transpose **A and C before** execution
+//!   and **C after** (the datapath is row×col native);
+//! * A row-major, B col-major  → **no MOVM at all**;
+//! * A col-major, B row-major  → both operands are wrong-way: transpose
+//!   A and B (the paper doesn't tabulate this case; it follows from the
+//!   same rule).
+
+
+/// Which fragments get a MOVM transpose for a given layout pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MovmPlan {
+    pub transpose_a: bool,
+    pub transpose_b: bool,
+    /// C transposed before the MMA.
+    pub transpose_c_in: bool,
+    /// C transposed back after the MMA (store path).
+    pub transpose_c_out: bool,
+}
+
+impl MovmPlan {
+    /// Total MOVM instructions the full load→mma→store sequence issues.
+    pub fn movm_count(&self) -> u32 {
+        self.transpose_a as u32
+            + self.transpose_b as u32
+            + self.transpose_c_in as u32
+            + self.transpose_c_out as u32
+    }
+}
+
+/// The rule table.  `a_row`/`b_row`: fragment is row-major.
+pub fn movm_plan(a_row: bool, b_row: bool) -> MovmPlan {
+    match (a_row, b_row) {
+        // row × row: flip B.
+        (true, true) => MovmPlan {
+            transpose_a: false,
+            transpose_b: true,
+            transpose_c_in: false,
+            transpose_c_out: false,
+        },
+        // col × col: flip A and C in, C back out.
+        (false, false) => MovmPlan {
+            transpose_a: true,
+            transpose_b: false,
+            transpose_c_in: true,
+            transpose_c_out: true,
+        },
+        // row × col: native — no MOVM in the trace.
+        (true, false) => MovmPlan {
+            transpose_a: false,
+            transpose_b: false,
+            transpose_c_in: false,
+            transpose_c_out: false,
+        },
+        // col × row: both operands flipped.
+        (false, true) => MovmPlan {
+            transpose_a: true,
+            transpose_b: true,
+            transpose_c_in: false,
+            transpose_c_out: false,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_row_transposes_b_only() {
+        let p = movm_plan(true, true);
+        assert!(!p.transpose_a && p.transpose_b);
+        assert!(!p.transpose_c_in && !p.transpose_c_out);
+        assert_eq!(p.movm_count(), 1);
+    }
+
+    #[test]
+    fn col_col_transposes_a_and_c_both_ways() {
+        let p = movm_plan(false, false);
+        assert!(p.transpose_a && !p.transpose_b);
+        assert!(p.transpose_c_in && p.transpose_c_out);
+        assert_eq!(p.movm_count(), 3);
+    }
+
+    #[test]
+    fn row_col_needs_no_movm() {
+        // Paper: "if A is a row-major and B is a column-major, the MOVM
+        // instruction does not exist in the trace."
+        assert_eq!(movm_plan(true, false).movm_count(), 0);
+    }
+
+    #[test]
+    fn col_row_flips_both_operands() {
+        let p = movm_plan(false, true);
+        assert!(p.transpose_a && p.transpose_b);
+        assert_eq!(p.movm_count(), 2);
+    }
+}

@@ -1,0 +1,176 @@
+//! Tensor-core throughput model (Table III's "Measured-theoretical"
+//! column).
+//!
+//! The paper's numbers are whole-GPU peak rates in the whitepaper's units
+//! (TFLOPS / TOPS — printed "GB/s" in the paper):
+//!
+//! ```text
+//! theoretical = 2 MACs × tile_MACs / per_inst_cycles
+//!             × TCs_per_SM × SMs × clock
+//! f16 : 2·2048/8 ·4·108·1.41e9 = 311.7 T → paper "312"
+//! tf32: 2·512/4  ·4·108·1.41e9 = 155.9 T → paper "156"
+//! f64 : 2·256/16 ·4·108·1.41e9 =  19.5 T → paper "19.5"
+//! u8  : 2·2048/4 ·4·108·1.41e9 = 623.5 T → paper "624"
+//! u4  : dual-rail int4 (2 tiles in flight) = 1247 T → paper "1248"
+//! ```
+//!
+//! "Measured" comes from streaming N independent tiles through the TC
+//! pipe model: pipeline startup plus a per-dtype operand-delivery stall
+//! (registers feed the TC through the same ports the MOVM path uses;
+//! tf32's 4-byte operands stall the most — the paper measures 132 of
+//! 156).  Stall cycles are calibrated; the *mechanism* (efficiency =
+//! issue-limited cycles / total cycles) is the model.
+
+use super::WmmaDtype;
+use crate::config::AmpereConfig;
+
+/// Throughput result for one dtype.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub dtype_key: &'static str,
+    /// Simulated achieved rate, in the paper's units (T-ops/s).
+    pub measured_tops: f64,
+    /// Whitepaper-peak rate.
+    pub theoretical_tops: f64,
+}
+
+impl Throughput {
+    pub fn efficiency(&self) -> f64 {
+        self.measured_tops / self.theoretical_tops
+    }
+}
+
+/// MACs retired by one SASS MMA instruction.
+pub fn tile_macs(dtype: WmmaDtype) -> u64 {
+    let (tm, tn, tk) = dtype.sass_tile();
+    tm as u64 * tn as u64 * tk as u64
+}
+
+/// int4 runs two tiles in flight per issue slot (dual-rail datapath) —
+/// how 1248 TOPS comes out of the same 4-cycle IMMA.8832 issue.
+fn rails(dtype: WmmaDtype) -> u64 {
+    if dtype == WmmaDtype::U4S32 {
+        2
+    } else {
+        1
+    }
+}
+
+/// Whitepaper-peak rate for the dtype.
+pub fn theoretical_tops(dtype: WmmaDtype, cfg: &AmpereConfig) -> f64 {
+    let ops_per_cycle_per_tc =
+        2.0 * (tile_macs(dtype) * rails(dtype)) as f64 / dtype.per_instruction_cycles() as f64;
+    ops_per_cycle_per_tc
+        * cfg.tensor.cores_per_sm as f64
+        * cfg.sm_count as f64
+        * cfg.tensor.clock_hz
+        / 1e12
+}
+
+/// Operand-delivery stall per SASS instruction, in 1/16ths of a cycle
+/// (calibrated to the paper's measured column; the tf32 path pays the
+/// most because its operands are 4-byte and bypass the MOVM-optimised
+/// half-precision register path).
+fn operand_stall_sixteenths(dtype: WmmaDtype) -> u64 {
+    match dtype {
+        WmmaDtype::F16F16 | WmmaDtype::F16F32 | WmmaDtype::Bf16F32 => 0,
+        WmmaDtype::Tf32F32 => 11, // 132/156 measured
+        WmmaDtype::F64F64 => 4,   // 19/19.5
+        WmmaDtype::U8S32 => 3,    // 594/624
+        WmmaDtype::U4S32 => 0,    // 1229/1248 (startup-dominated)
+    }
+}
+
+/// Simulate a stream of `tiles` independent SASS MMA instructions through
+/// the TC pipe: total cycles = startup + Σ(occ + stall).  Returns total
+/// cycles (u64) and ideal issue-limited cycles.
+pub fn stream_cycles(dtype: WmmaDtype, tiles: u64, cfg: &AmpereConfig) -> (u64, u64) {
+    let occ16 = dtype.per_instruction_cycles() * 16;
+    let stall16 = operand_stall_sixteenths(dtype);
+    let total16 = cfg.tensor.startup_cycles * 16 + tiles * (occ16 + stall16);
+    let ideal16 = tiles * occ16;
+    (total16 / 16, ideal16 / 16)
+}
+
+/// Full throughput measurement for one dtype: stream `tiles` tiles, scale
+/// the whitepaper peak by achieved/ideal cycles.
+pub fn throughput(dtype: WmmaDtype, tiles: u64, cfg: &AmpereConfig) -> Throughput {
+    let theo = theoretical_tops(dtype, cfg);
+    let (total, ideal) = stream_cycles(dtype, tiles, cfg);
+    Throughput {
+        dtype_key: dtype.key(),
+        measured_tops: theo * ideal as f64 / total as f64,
+        theoretical_tops: theo,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ALL_DTYPES;
+
+    #[test]
+    fn theoretical_matches_whitepaper() {
+        let cfg = AmpereConfig::a100();
+        let expect = [
+            (WmmaDtype::F16F16, 312.0),
+            (WmmaDtype::F16F32, 312.0),
+            (WmmaDtype::Bf16F32, 312.0),
+            (WmmaDtype::Tf32F32, 156.0),
+            (WmmaDtype::F64F64, 19.5),
+            (WmmaDtype::U8S32, 624.0),
+            (WmmaDtype::U4S32, 1248.0),
+        ];
+        for (d, t) in expect {
+            let got = theoretical_tops(d, &cfg);
+            assert!(
+                (got - t).abs() / t < 0.01,
+                "{d:?}: got {got:.1}, whitepaper {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn measured_matches_paper_bands() {
+        // Table III measured column: 311, 310, 310, 132, 19, 594, 1229.
+        let cfg = AmpereConfig::a100();
+        let expect = [
+            (WmmaDtype::F16F16, 311.0, 5.0),
+            (WmmaDtype::Bf16F32, 310.0, 5.0),
+            (WmmaDtype::Tf32F32, 132.0, 8.0),
+            (WmmaDtype::F64F64, 19.0, 0.6),
+            (WmmaDtype::U8S32, 594.0, 15.0),
+            (WmmaDtype::U4S32, 1229.0, 25.0),
+        ];
+        for (d, want, tol) in expect {
+            let t = throughput(d, 4096, &cfg);
+            assert!(
+                (t.measured_tops - want).abs() < tol,
+                "{d:?}: measured {:.1}, paper {want}",
+                t.measured_tops
+            );
+            assert!(t.measured_tops < t.theoretical_tops);
+        }
+    }
+
+    #[test]
+    fn efficiency_ordering_matches_paper() {
+        // fp16 is near-peak (0.997); tf32 is the worst (0.846).
+        let cfg = AmpereConfig::a100();
+        let eff = |d| throughput(d, 4096, &cfg).efficiency();
+        assert!(eff(WmmaDtype::F16F16) > 0.99);
+        assert!(eff(WmmaDtype::Tf32F32) < 0.90);
+        for d in ALL_DTYPES {
+            let e = eff(d);
+            assert!(e > 0.5 && e < 1.0, "{d:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn startup_dominates_short_streams() {
+        let cfg = AmpereConfig::a100();
+        let short = throughput(WmmaDtype::F16F16, 4, &cfg);
+        let long = throughput(WmmaDtype::F16F16, 4096, &cfg);
+        assert!(short.efficiency() < long.efficiency());
+    }
+}

@@ -1,0 +1,108 @@
+//! Dynamic-trace tooling (the PPT-GPU *Tracing Tool* analogue, S7 in
+//! DESIGN.md).
+//!
+//! The recorder itself lives in [`crate::sass::trace`] (the simulator
+//! writes it); this module adds the *analysis* side the paper's
+//! methodology uses: verifying a microbenchmark executed exactly the
+//! SASS the experimenter intended, and diffing traces across variants
+//! (e.g. Fig. 4's 32- vs 64-bit clock kernels).
+
+pub use crate::sass::trace::{TraceEntry, TraceRecorder};
+
+/// A trace assertion: what the experimenter expects to see between the
+/// two clock reads (paper §IV: "we tweak the PTX microbenchmark by trial
+/// and error to give us the correct SASS results").
+#[derive(Debug, Clone)]
+pub struct TraceExpectation {
+    /// Mnemonics that must appear, in order (gaps allowed).
+    pub ordered: Vec<&'static str>,
+    /// Mnemonics that must NOT appear anywhere in the window.
+    pub forbidden: Vec<&'static str>,
+}
+
+impl TraceExpectation {
+    /// Check the expectation over the measured window (between the first
+    /// and last clock-read entries).
+    pub fn check(&self, trace: &TraceRecorder) -> Result<(), String> {
+        let entries = trace.entries();
+        let clock_positions: Vec<usize> = entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.mnemonic.starts_with("CS2R") || e.mnemonic == "S2R")
+            .map(|(i, _)| i)
+            .collect();
+        let (lo, hi) = match (clock_positions.first(), clock_positions.last()) {
+            (Some(a), Some(b)) if a < b => (*a, *b),
+            _ => (0, entries.len()),
+        };
+        let window = &entries[lo..hi];
+
+        let mut next = 0usize;
+        for e in window {
+            if next < self.ordered.len() && e.mnemonic == self.ordered[next] {
+                next += 1;
+            }
+            if self.forbidden.contains(&e.mnemonic) {
+                return Err(format!("forbidden {} in measured window", e.mnemonic));
+            }
+        }
+        if next < self.ordered.len() {
+            return Err(format!(
+                "missing {} (saw {:?})",
+                self.ordered[next],
+                window.iter().map(|e| e.mnemonic).collect::<Vec<_>>()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-PTX-instruction dynamic instruction counts — the histogram view
+/// of a trace.
+pub fn dynamic_histogram(trace: &TraceRecorder) -> Vec<(&'static str, u64)> {
+    let mut counts: std::collections::HashMap<&'static str, u64> = Default::default();
+    for e in trace.entries() {
+        *counts.entry(e.mnemonic).or_default() += 1;
+    }
+    let mut v: Vec<_> = counts.into_iter().collect();
+    v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_trace() -> TraceRecorder {
+        let mut t = TraceRecorder::new();
+        for (i, m) in ["CS2R", "IADD", "IADD", "IADD", "CS2R"].iter().enumerate() {
+            t.record(i as u32, m, i as u64 * 2, i as u64 * 2 + 4);
+        }
+        t
+    }
+
+    #[test]
+    fn expectation_passes_on_intended_sass() {
+        let exp = TraceExpectation {
+            ordered: vec!["IADD", "IADD", "IADD"],
+            forbidden: vec!["DEPBAR"],
+        };
+        exp.check(&demo_trace()).unwrap();
+    }
+
+    #[test]
+    fn expectation_rejects_missing_and_forbidden() {
+        let exp = TraceExpectation { ordered: vec!["FFMA"], forbidden: vec![] };
+        assert!(exp.check(&demo_trace()).is_err());
+
+        let exp = TraceExpectation { ordered: vec![], forbidden: vec!["IADD"] };
+        assert!(exp.check(&demo_trace()).is_err());
+    }
+
+    #[test]
+    fn histogram_sorts_by_count() {
+        let h = dynamic_histogram(&demo_trace());
+        assert_eq!(h[0], ("IADD", 3));
+        assert_eq!(h[1], ("CS2R", 2));
+    }
+}

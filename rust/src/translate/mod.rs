@@ -1,0 +1,469 @@
+//! Context-sensitive PTX → SASS translating assembler.
+//!
+//! Reproduces the *observable* behaviour of `ptxas` that the paper
+//! characterises through dynamic traces (§IV, Table V, Fig. 4):
+//!
+//! * each PTX instruction maps to one or more SASS instructions
+//!   (Table V's mapping column);
+//! * the mapping is **context-sensitive**:
+//!   - a dependent `add.u32` chain alternates `IADD3` / `IMAD.IADD`
+//!     (the compiler borrows the FP pipe while the INT pipe is busy —
+//!     paper §V-A);
+//!   - `neg.f32`/`abs.f32` fold into `IMAD.MOV.U32` when their input was
+//!     initialised by `mov`, but compile to `FADD` when initialised by
+//!     an arithmetic op (Insight 3);
+//!   - storing `%clock` into 32-bit registers emits `S2R` plus a
+//!     scheduling barrier; `%clock64` emits barrier-free `CS2R`
+//!     (Fig. 4a/4b);
+//! * signed and unsigned variants map identically except `bfind`, `min`
+//!   and `max` (Insight 2).
+
+pub mod rules;
+
+use crate::ptx::{Operand, PtxOp, PtxProgram, Reg};
+use crate::sass::{Effect, SassInstr};
+use std::fmt;
+
+/// SASS translation of one PTX instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SassGroup {
+    pub ptx_idx: u32,
+    pub instrs: Vec<SassInstr>,
+}
+
+impl SassGroup {
+    /// Mapping string in Table V's format (`2*LOP3.LUT+VABSDIFF`).
+    pub fn mapping(&self) -> String {
+        let mut parts: Vec<(&'static str, u32)> = Vec::new();
+        for i in &self.instrs {
+            match parts.last_mut() {
+                Some((m, n)) if *m == i.mnemonic => *n += 1,
+                _ => parts.push((i.mnemonic, 1)),
+            }
+        }
+        parts
+            .into_iter()
+            .map(|(m, n)| if n > 1 { format!("{n}*{m}") } else { m.to_string() })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TranslateError {
+    pub ptx_idx: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TranslateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "translate error at PTX instr {}: {}", self.ptx_idx, self.message)
+    }
+}
+
+impl std::error::Error for TranslateError {}
+
+/// How a register's current value was produced — drives Insight 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum InitStyle {
+    #[default]
+    Unknown,
+    /// `mov reg, imm` — foldable into the consumer.
+    MovImm,
+    /// Produced by an arithmetic instruction.
+    Arith,
+}
+
+/// Per-instruction translation context the driver computes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Ctx {
+    /// True when a source was written within the last `DEP_WINDOW`
+    /// instructions (the producer is still in flight at issue).
+    pub dependent: bool,
+    /// Position parity within a dependent chain (for IADD3/IMAD.IADD
+    /// alternation).
+    pub chain_parity: bool,
+    /// Init style of the first source register.
+    pub src_init: InitStyle,
+}
+
+/// Producer distance below which an instruction counts as "dependent"
+/// for mapping purposes (the paper's dependent sequences are distance 1).
+const DEP_WINDOW: u32 = 2;
+
+/// Translates a whole program.  Returns one [`SassGroup`] per PTX
+/// instruction, in program order (control flow is resolved dynamically by
+/// the simulator — translation is static, like ptxas).
+pub struct Translator<'p> {
+    prog: &'p PtxProgram,
+    next_temp: u32,
+}
+
+impl<'p> Translator<'p> {
+    pub fn new(prog: &'p PtxProgram) -> Self {
+        Self { prog, next_temp: prog.reg_count() as u32 }
+    }
+
+    /// Allocate a translation temporary register.
+    pub fn temp(&mut self) -> Reg {
+        let r = Reg(self.next_temp);
+        self.next_temp += 1;
+        r
+    }
+
+    /// Total register slots (program registers + temps) after translation.
+    pub fn reg_slots(&self) -> u32 {
+        self.next_temp
+    }
+
+    pub fn prog(&self) -> &PtxProgram {
+        self.prog
+    }
+
+    /// Fig. 4a behaviour: when two `mov.u32 %r, %clock` reads feed a
+    /// 32-bit `sub`, ptxas guards the *later* read with a scheduling
+    /// barrier (the dynamic trace shows S2R + barrier; storing clocks in
+    /// 64-bit registers removes it).  Returns the instruction indices of
+    /// the barriered reads.
+    fn find_barriered_clock_reads(&self) -> std::collections::HashSet<u32> {
+        use crate::ptx::PtxType;
+        use crate::ptx::SpecialReg;
+        let mut clock32_writer: std::collections::HashMap<Reg, u32> =
+            std::collections::HashMap::new();
+        let mut out = std::collections::HashSet::new();
+        for (idx, ins) in self.prog.instrs.iter().enumerate() {
+            let is_clock32 = ins.op == PtxOp::Mov
+                && ins.ty == Some(PtxType::U32)
+                && matches!(
+                    ins.srcs.first(),
+                    Some(Operand::Special(SpecialReg::Clock))
+                );
+            if is_clock32 {
+                if let Some(d) = ins.dst_reg() {
+                    clock32_writer.insert(d, idx as u32);
+                }
+                continue;
+            }
+            if ins.op == PtxOp::Sub
+                && matches!(ins.ty, Some(PtxType::S32 | PtxType::U32 | PtxType::B32))
+            {
+                let writers: Vec<u32> = ins
+                    .srcs
+                    .iter()
+                    .filter_map(|o| o.as_reg())
+                    .filter_map(|r| clock32_writer.get(&r).copied())
+                    .collect();
+                if writers.len() >= 2 {
+                    out.insert(*writers.iter().max().unwrap());
+                }
+            }
+        }
+        out
+    }
+
+    pub fn translate(mut self) -> Result<TranslatedProgram, TranslateError> {
+        let n = self.prog.instrs.len();
+        let mut last_writer: Vec<Option<u32>> = vec![None; self.prog.reg_count()];
+        let mut init_style: Vec<InitStyle> = vec![InitStyle::Unknown; self.prog.reg_count()];
+        let mut chain_run: u32 = 0;
+        let mut groups = Vec::with_capacity(n);
+        let barriered = self.find_barriered_clock_reads();
+
+        for idx in 0..n {
+            // Clone: rules::map_instruction needs `&mut self` for temps
+            // while inspecting the instruction (translation is cold path).
+            let ins = self.prog.instrs[idx].clone();
+            let ins = &ins;
+
+            // --- context analysis -------------------------------------
+            let mut dependent = false;
+            for s in ins.src_regs() {
+                if let Some(w) = last_writer.get(s.0 as usize).copied().flatten() {
+                    if (idx as u32).saturating_sub(w) <= DEP_WINDOW {
+                        dependent = true;
+                    }
+                }
+            }
+            chain_run = if dependent { chain_run + 1 } else { 0 };
+            let src_init = ins
+                .srcs
+                .iter()
+                .find_map(|o| o.as_reg())
+                .map(|r| init_style[r.0 as usize])
+                .unwrap_or(InitStyle::Unknown);
+            let ctx = Ctx { dependent, chain_parity: chain_run % 2 == 0, src_init };
+
+            // --- mapping ----------------------------------------------
+            let mut instrs = rules::map_instruction(&mut self, ins, ctx)
+                .map_err(|message| TranslateError { ptx_idx: idx, message })?;
+            // Fig. 4a: the second 32-bit clock read of a measured pair is
+            // guarded by a scheduling barrier and demoted to S2R.
+            if barriered.contains(&(idx as u32)) {
+                for i in instrs.iter_mut() {
+                    if i.mnemonic == "CS2R.32" {
+                        i.mnemonic = "S2R";
+                        i.class = crate::sass::SassClass::S2r;
+                    }
+                }
+                instrs.insert(
+                    0,
+                    SassInstr::new("DEPBAR", crate::sass::SassClass::Depbar)
+                        .effect(Effect::DepBar),
+                );
+            }
+            groups.push(SassGroup { ptx_idx: idx as u32, instrs });
+
+            // --- bookkeeping ------------------------------------------
+            if let Some(d) = ins.dst_reg() {
+                last_writer[d.0 as usize] = Some(idx as u32);
+                init_style[d.0 as usize] = match ins.op {
+                    PtxOp::Mov
+                        if matches!(ins.srcs.first(), Some(Operand::Imm(_)) | Some(Operand::FImm(_))) =>
+                    {
+                        InitStyle::MovImm
+                    }
+                    _ => InitStyle::Arith,
+                };
+            }
+        }
+
+        Ok(TranslatedProgram { groups, reg_slots: self.reg_slots() })
+    }
+}
+
+/// The finished translation.
+#[derive(Debug, Clone)]
+pub struct TranslatedProgram {
+    pub groups: Vec<SassGroup>,
+    /// Register-file size the simulator must allocate (PTX regs + temps).
+    pub reg_slots: u32,
+}
+
+impl TranslatedProgram {
+    pub fn group(&self, ptx_idx: usize) -> &SassGroup {
+        &self.groups[ptx_idx]
+    }
+
+    /// Static SASS instruction count.
+    pub fn sass_len(&self) -> usize {
+        self.groups.iter().map(|g| g.instrs.len()).sum()
+    }
+}
+
+/// Convenience: parse-and-translate helper used throughout the tests.
+pub fn translate_program(prog: &PtxProgram) -> Result<TranslatedProgram, TranslateError> {
+    Translator::new(prog).translate()
+}
+
+/// Group wiring structure: how a multi-instruction expansion's data flow
+/// is arranged.  The real compiler emits a mix — e.g. `add.u64`'s
+/// UIADD3.x/UIADD3 halves are independent, while `min.u16`'s
+/// ULOP3→UISETP→USEL is a strict chain — and the paper's measured cycles
+/// reflect that structure directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wiring {
+    /// Strict chain: each instruction consumes its predecessor.
+    Serial,
+    /// All instructions independent (hi/lo halves, predicate pairs).
+    Parallel,
+    /// First `k` are independent roots; the rest chain, with the first
+    /// chained instruction combining the roots.
+    Roots(usize),
+}
+
+/// Wire a group's dataflow per `wiring` (see [`Wiring`]).  The final
+/// instruction always writes `dst` and carries the EvalPtx effect.
+pub(crate) fn wire(
+    tr: &mut Translator,
+    mut instrs: Vec<SassInstr>,
+    wiring: Wiring,
+    dst: Option<Reg>,
+    srcs: &[Reg],
+) -> Vec<SassInstr> {
+    let n = instrs.len();
+    let roots = match wiring {
+        Wiring::Serial => 1,
+        Wiring::Parallel => n,
+        Wiring::Roots(k) => k.clamp(1, n),
+    };
+    let mut root_temps: Vec<Reg> = Vec::new();
+    let mut prev: Option<Reg> = None;
+    for (i, si) in instrs.iter_mut().enumerate() {
+        if i < roots {
+            // roots read the PTX sources
+            for (slot, s) in si.srcs.iter_mut().zip(srcs.iter()) {
+                *slot = Some(*s);
+            }
+        } else if i == roots && roots > 1 {
+            // combiner reads every root
+            for (slot, t) in si.srcs.iter_mut().zip(root_temps.iter()) {
+                *slot = Some(*t);
+            }
+        } else if let Some(p) = prev {
+            si.srcs[0] = Some(p);
+        }
+        if i + 1 == n {
+            si.dst = dst;
+            if si.effect == Effect::None {
+                si.effect = Effect::EvalPtx;
+            }
+        } else {
+            let t = tr.temp();
+            si.dst = Some(t);
+            if i < roots {
+                root_temps.push(t);
+            }
+            prev = Some(t);
+        }
+    }
+    instrs
+}
+
+/// Back-compat serial chain (the common case).
+#[allow(dead_code)]
+pub(crate) fn chain(
+    tr: &mut Translator,
+    instrs: Vec<SassInstr>,
+    dst: Option<Reg>,
+    srcs: &[Reg],
+) -> Vec<SassInstr> {
+    wire(tr, instrs, Wiring::Serial, dst, srcs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parse_program;
+
+    fn tr(src: &str) -> TranslatedProgram {
+        translate_program(&parse_program(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn independent_add_u32_maps_to_iadd() {
+        let p = tr(r#"
+.visible .entry k() {
+ .reg .b32 %r<20>;
+ add.u32 %r11, 6, 1;
+ add.u32 %r12, 5, 7;
+ add.u32 %r13, 9, 2;
+ ret;
+}"#);
+        assert_eq!(p.groups[0].mapping(), "IADD");
+        assert_eq!(p.groups[1].mapping(), "IADD");
+        assert_eq!(p.groups[2].mapping(), "IADD");
+    }
+
+    #[test]
+    fn dependent_add_u32_alternates_iadd3_imad() {
+        // Paper §V-A: dependent add.u32 maps to IADD3 or IMAD.IADD.
+        let p = tr(r#"
+.visible .entry k() {
+ .reg .b32 %r<20>;
+ add.u32 %r1, 6, 1;
+ add.u32 %r2, %r1, 7;
+ add.u32 %r3, %r2, 2;
+ add.u32 %r4, %r3, 2;
+ ret;
+}"#);
+        let maps: Vec<String> = p.groups[1..4].iter().map(|g| g.mapping()).collect();
+        assert!(maps.contains(&"IADD3".to_string()), "{maps:?}");
+        assert!(maps.contains(&"IMAD.IADD".to_string()), "{maps:?}");
+    }
+
+    #[test]
+    fn insight3_neg_f32_depends_on_init_style() {
+        // mov-initialised input → folded IMAD.MOV.U32
+        let p = tr(r#"
+.visible .entry k() {
+ .reg .b32 %f<20>;
+ mov.f32 %f1, 3.5;
+ neg.f32 %f2, %f1;
+ ret;
+}"#);
+        assert_eq!(p.groups[1].mapping(), "IMAD.MOV.U32");
+
+        // arithmetic-initialised input → FADD
+        let p = tr(r#"
+.visible .entry k() {
+ .reg .b32 %f<20>;
+ add.f32 %f1, 1.0, 2.5;
+ neg.f32 %f2, %f1;
+ ret;
+}"#);
+        assert_eq!(p.groups[1].mapping(), "FADD");
+    }
+
+    #[test]
+    fn insight2_signed_unsigned_same_except_bfind_min_max() {
+        let u = tr(".visible .entry k() { .reg .b64 %rd<9>; add.u64 %rd1, 1, 2; ret; }");
+        let s = tr(".visible .entry k() { .reg .b64 %rd<9>; add.s64 %rd1, 1, 2; ret; }");
+        assert_eq!(u.groups[0].mapping(), s.groups[0].mapping());
+
+        let mu = tr(".visible .entry k() { .reg .b32 %r<9>; min.u32 %r1, %r2, %r3; ret; }");
+        let ms = tr(".visible .entry k() { .reg .b32 %r<9>; min.s32 %r1, %r2, %r3; ret; }");
+        assert_eq!(mu.groups[0].mapping(), "IMNMX.U32");
+        assert_eq!(ms.groups[0].mapping(), "IMNMX");
+    }
+
+    #[test]
+    fn fig4_clock_width_controls_barrier() {
+        let wide = tr(r#"
+.visible .entry k() {
+ .reg .b64 %rd<9>;
+ mov.u64 %rd1, %clock64;
+ ret;
+}"#);
+        assert_eq!(wide.groups[0].mapping(), "CS2R");
+
+        // A lone 32-bit clock read is barrier-free CS2R.32 (Table V row).
+        let narrow = tr(r#"
+.visible .entry k() {
+ .reg .b32 %r<9>;
+ mov.u32 %r1, %clock;
+ ret;
+}"#);
+        assert_eq!(narrow.groups[0].mapping(), "CS2R.32");
+
+        // A measured *pair* feeding sub.s32 gets the Fig. 4a barrier on
+        // the second read.
+        let pair = tr(r#"
+.visible .entry k() {
+ .reg .b32 %r<9>;
+ mov.u32 %r1, %clock;
+ add.u32 %r5, 1, 2;
+ mov.u32 %r2, %clock;
+ sub.s32 %r3, %r2, %r1;
+ ret;
+}"#);
+        assert_eq!(pair.groups[0].mapping(), "CS2R.32");
+        assert!(pair.groups[2].mapping().contains("DEPBAR"), "{}", pair.groups[2].mapping());
+        assert!(pair.groups[2].mapping().contains("S2R"));
+        assert!(
+            pair.groups[2].instrs.iter().any(|i| i.effect == Effect::DepBar),
+            "second 32-bit clock read must carry the scheduling barrier"
+        );
+    }
+
+    #[test]
+    fn chain_wires_temps_serially() {
+        let prog = parse_program(
+            ".visible .entry k() { .reg .b32 %r<9>; add.u32 %r1, %r2, %r3; ret; }",
+        )
+        .unwrap();
+        let mut t = Translator::new(&prog);
+        use crate::sass::SassClass;
+        let instrs = vec![
+            SassInstr::new("A", SassClass::IntAlu),
+            SassInstr::new("B", SassClass::IntAlu),
+            SassInstr::new("C", SassClass::IntAlu),
+        ];
+        let out = chain(&mut t, instrs, Some(Reg(0)), &[Reg(1), Reg(2)]);
+        assert_eq!(out[0].srcs[0], Some(Reg(1)));
+        assert_eq!(out[0].srcs[1], Some(Reg(2)));
+        assert_eq!(out[1].srcs[0], out[0].dst);
+        assert_eq!(out[2].srcs[0], out[1].dst);
+        assert_eq!(out[2].dst, Some(Reg(0)));
+        assert_eq!(out[2].effect, Effect::EvalPtx);
+    }
+}

@@ -1,0 +1,711 @@
+//! Table V: the PTX → SASS instruction-selection rules.
+//!
+//! One arm per Table V row (plus the memory/control/WMMA instructions of
+//! Figs. 1–5).  Mapping strings are verbatim from the paper's dynamic
+//! traces; grouping is serial-chained through temporaries unless the row
+//! is known to split into independent halves.
+//!
+//! "multiple instructions" rows (div, rem, big transcendental expansions)
+//! emit a representative expansion whose *first* instruction carries a
+//! latency override calibrated to the paper's measured total — the
+//! dynamic trace still shows a realistic multi-instruction sequence.
+
+use super::{wire, Ctx, InitStyle, Translator, Wiring};
+use crate::ptx::types::{CacheOp, StateSpace, TestpKind};
+use crate::ptx::{Operand, PtxInstruction, PtxOp, PtxType, Reg};
+use crate::sass::{Effect, SassClass, SassInstr};
+use crate::tensor;
+
+use PtxType::*;
+use SassClass::*;
+
+fn one(i: SassInstr) -> Vec<SassInstr> {
+    vec![i]
+}
+
+/// Shorthand constructors.
+fn si(m: &'static str, c: SassClass) -> SassInstr {
+    SassInstr::new(m, c)
+}
+
+/// Map one PTX instruction to its SASS group.
+pub fn map_instruction(
+    tr: &mut Translator,
+    ins: &PtxInstruction,
+    ctx: Ctx,
+) -> Result<Vec<SassInstr>, String> {
+    let ty = ins.ty;
+    let dst = ins.dst_reg();
+    let srcs: Vec<Reg> = ins
+        .srcs
+        .iter()
+        .filter_map(|o| match o {
+            Operand::Reg(r) => Some(*r),
+            Operand::Mem { base, .. } => Some(*base),
+            _ => None,
+        })
+        .collect();
+
+    // Spec: the uncontextualised instruction list for the row.
+    let spec: Vec<SassInstr> = match (ins.op, ty) {
+        // ---------------- add / sub ---------------------------------
+        (PtxOp::Add | PtxOp::Sub, Some(U16 | S16)) => one(si("UIADD3", Uniform)),
+        (PtxOp::Addc, _) => one(si("IADD3.X", IntAlu)),
+        (PtxOp::Add | PtxOp::Sub, Some(U32 | S32 | B32)) => {
+            if ctx.dependent {
+                // §V-A: the compiler alternates pipes under dependency.
+                if ctx.chain_parity {
+                    one(si("IADD3", IntAlu))
+                } else {
+                    one(si("IMAD.IADD", ImadOnFma))
+                }
+            } else {
+                one(si("IADD", IntAlu))
+            }
+        }
+        (PtxOp::Add | PtxOp::Sub, Some(U64 | S64 | B64)) => {
+            vec![si("UIADD3.x", Uniform), si("UIADD3", Uniform)]
+        }
+        (PtxOp::Add | PtxOp::Sub, Some(F16)) => one(si("HADD", F16Alu)),
+        (PtxOp::Add | PtxOp::Sub, Some(F32)) => one(si("FADD", F32Alu)),
+        (PtxOp::Add | PtxOp::Sub, Some(F64)) => one(si("DADD", F64Alu)),
+
+        // ---------------- mul ---------------------------------------
+        (PtxOp::Mul, Some(U16 | S16)) => {
+            vec![si("LOP3.LUT", IntLogic), si("IMAD", ImadOnFma)]
+        }
+        (PtxOp::Mul, Some(U32 | S32)) if ins.mods.wide => {
+            // mul.wide.u32 = 4 cycles: deeper IMAD.WIDE path.
+            one(si("IMAD", ImadOnFma).lat(8))
+        }
+        (PtxOp::Mul, Some(U32 | S32)) => one(si("IMAD", ImadOnFma)),
+        (PtxOp::Mul, Some(U64 | S64)) => one(si("IMAD", ImadOnFma)),
+        (PtxOp::Mul24, Some(U32 | S32)) if ins.mods.hi => {
+            vec![
+                si("UPRMT", Uniform),
+                si("USHF.R.U32.HI", Uniform),
+                si("IMAD.U32", ImadOnFma),
+                si("PRMT", IntLogic),
+            ]
+        }
+        (PtxOp::Mul24, Some(U32 | S32)) => {
+            vec![si("PRMT", IntLogic), si("IMAD", ImadOnFma)]
+        }
+        (PtxOp::Mul, Some(F16 | Bf16)) => one(si("HMUL2", F16Alu)),
+        (PtxOp::Mul, Some(F32)) => one(si("FMUL", F32Alu)),
+        (PtxOp::Mul, Some(F64)) => one(si("DMUL", F64Alu)),
+
+        // ---------------- mad / fma ---------------------------------
+        (PtxOp::Mad, Some(U16 | S16)) => {
+            vec![si("LOP3.LUT", IntLogic), si("IMAD", ImadOnFma)]
+        }
+        // Insight 1: integer mad.lo.u32 runs on the floating pipe (FFMA).
+        (PtxOp::Mad, Some(U32 | S32)) if ins.mods.lo => one(si("FFMA", F32Alu)),
+        (PtxOp::Mad, Some(U64 | S64)) => one(si("IMAD", ImadOnFma)),
+        (PtxOp::Mad24, Some(U32 | S32)) if ins.mods.hi => {
+            vec![
+                si("USHF.R.U32.HI", Uniform),
+                si("UIMAD.WIDE.U32", Uniform),
+                si("UPRMT", Uniform),
+                si("UPRMT", Uniform),
+                si("IADD3", IntAlu),
+            ]
+        }
+        (PtxOp::Mad24, Some(U32 | S32)) => {
+            vec![si("SGXT.U32", IntCmp), si("IMAD", ImadOnFma)]
+        }
+        (PtxOp::Mad, Some(F32)) => one(si("FFMA", F32Alu)),
+        (PtxOp::Mad, Some(F64)) => one(si("DFMA", F64Alu)),
+        (PtxOp::Fma, Some(F16)) => one(si("HFMA2", F16Alu)),
+        (PtxOp::Fma, Some(F32)) => one(si("FFMA", F32Alu)),
+        (PtxOp::Fma, Some(F64)) => one(si("DFMA", F64Alu)),
+
+        // ---------------- sad ---------------------------------------
+        (PtxOp::Sad, Some(U16 | S16)) => {
+            vec![
+                si("LOP3.LUT", IntLogic),
+                si("LOP3.LUT", IntLogic),
+                si("ULOP3", Uniform),
+                si("VABSDIFF", IntSad),
+            ]
+        }
+        (PtxOp::Sad, Some(U32 | S32)) => {
+            vec![si("VABSDIFF", IntSad), si("IMAD", ImadOnFma)]
+        }
+        (PtxOp::Sad, Some(U64 | S64)) => {
+            vec![
+                si("UISETP.GE.U32.AND", Uniform).lat(4),
+                si("UIADD", Uniform).lat(4),
+                si("IADD", IntAlu),
+            ]
+        }
+
+        // ---------------- div / rem (multi-instruction) -------------
+        (PtxOp::Div | PtxOp::Rem, Some(U16 | S16)) => expansion(tr, "DIV16", 290),
+        (PtxOp::Div | PtxOp::Rem, Some(U32 | S32)) => expansion(tr, "DIV32", 66),
+        (PtxOp::Div | PtxOp::Rem, Some(U64 | S64)) => expansion(tr, "DIV64", 420),
+        (PtxOp::Div, Some(F32)) => expansion(tr, "FDIV", 525),
+        (PtxOp::Div, Some(F64)) => expansion(tr, "DDIV", 426),
+
+        // ---------------- abs ---------------------------------------
+        (PtxOp::Abs, Some(S16)) => {
+            vec![si("PRMT", IntLogic), si("IABS", IntAlu), si("PRMT", IntLogic)]
+        }
+        (PtxOp::Abs, Some(S32)) => one(si("IABS", IntAlu)),
+        (PtxOp::Abs, Some(S64)) => {
+            vec![
+                si("UISETP.LT.AND", Uniform),
+                si("UIADD3.X", Uniform),
+                si("UIADD3", Uniform),
+                si("USEL", Uniform),
+                si("USEL", Uniform),
+            ]
+        }
+        (PtxOp::Abs, Some(F16)) => one(si("PRMT", IntLogic).lat(1)),
+        // Insight 3: abs.f32/neg.f32 fold into the producing mov.
+        (PtxOp::Abs, Some(F32)) => {
+            if ctx.src_init == InitStyle::MovImm {
+                one(si("IMAD.MOV.U32", Mov))
+            } else if ins.mods.ftz {
+                one(si("FADD.FTZ", F32Alu))
+            } else {
+                one(si("FADD", F32Alu))
+            }
+        }
+        (PtxOp::Abs, Some(F64)) => one(si("DADD", F64Alu)),
+
+        // ---------------- neg ---------------------------------------
+        (PtxOp::Neg, Some(S16)) => vec![si("UIADD3", Uniform), si("UPRMT", Uniform)],
+        (PtxOp::Neg, Some(F16)) => one(si("HADD", F16Alu)),
+        (PtxOp::Neg, Some(S32)) => one(si("IADD3", IntAlu)),
+        (PtxOp::Neg, Some(S64)) => {
+            vec![
+                si("IMAD.MOV.U32", Mov),
+                si("HFMA2.MMA", F16Alu),
+                si("MOV", Mov),
+                si("UIADD3", Uniform),
+            ]
+        }
+        (PtxOp::Neg, Some(F32)) => {
+            if ctx.src_init == InitStyle::MovImm {
+                one(si("IMAD.MOV.U32", Mov))
+            } else {
+                one(si("FADD", F32Alu))
+            }
+        }
+        (PtxOp::Neg, Some(F64)) => vec![si("DADD", F64Alu), si("UMOV", Uniform)],
+
+        // ---------------- min / max (Insight 2: sign matters) -------
+        (PtxOp::Min | PtxOp::Max, Some(U16)) => {
+            vec![
+                si("ULOP3.LUT", Uniform),
+                si("UISETP.LT.U32.AND", Uniform),
+                si("USEL", Uniform),
+            ]
+        }
+        (PtxOp::Min | PtxOp::Max, Some(U32)) => one(si("IMNMX.U32", IntCmp)),
+        (PtxOp::Min | PtxOp::Max, Some(U64)) => {
+            vec![
+                si("UISETP.LT.U32.AND", Uniform),
+                si("USEL", Uniform),
+                si("USEL", Uniform),
+            ]
+        }
+        (PtxOp::Min | PtxOp::Max, Some(S16)) => {
+            vec![si("PRMT", IntLogic), si("IMNMX", IntCmp)]
+        }
+        (PtxOp::Min | PtxOp::Max, Some(S32)) => one(si("IMNMX", IntCmp)),
+        (PtxOp::Min | PtxOp::Max, Some(S64)) => {
+            vec![
+                si("UISETP.LT.U32.AND", Uniform),
+                si("UISETP.LT.AND.EX", Uniform),
+                si("USEL", Uniform),
+                si("USEL", Uniform),
+            ]
+        }
+        (PtxOp::Min | PtxOp::Max, Some(F16)) => {
+            vec![si("HMNMX2", F16Alu), si("PRMT", IntLogic)]
+        }
+        (PtxOp::Min | PtxOp::Max, Some(F32)) => one(si("FMNMX", F32Alu)),
+        (PtxOp::Min | PtxOp::Max, Some(F64)) => {
+            vec![
+                si("DSETP.MIN.AND", F64Alu),
+                si("IMAD.MOV.U32", Mov),
+                si("UMOV", Uniform),
+                si("FSEL", F32Alu),
+            ]
+        }
+
+        // ---------------- sqrt / rsqrt / rcp ------------------------
+        (PtxOp::Sqrt, Some(F32)) if ins.mods.approx => {
+            vec![si("MUFU.SQRT", Mufu).lat(28), si("FMUL", F32Alu)]
+        }
+        (PtxOp::Sqrt, Some(F32)) => expansion(tr, "MUFU.RSQ", 210),
+        (PtxOp::Sqrt, Some(F64)) => expansion(tr, "MUFU.RSQ64", 300),
+        (PtxOp::Rsqrt, Some(F32)) => {
+            vec![si("MUFU.RSQ", Mufu).lat(22)]
+        }
+        (PtxOp::Rsqrt, Some(F64)) => one(si("MUFU.RSQ64H", Mufu64)),
+        (PtxOp::Rcp, Some(F32)) if ins.mods.approx => {
+            vec![si("MUFU.RCP", Mufu).lat(55)]
+        }
+        (PtxOp::Rcp, Some(F32)) => expansion(tr, "MUFU.RCP", 198),
+        (PtxOp::Rcp, Some(F64)) => expansion(tr, "MUFU.RCP64H", 244),
+
+        // ---------------- transcendental (Other) ---------------------
+        (PtxOp::Sin, Some(F32)) => vec![si("FMUL", F32Alu), si("MUFU.SIN", Mufu)],
+        (PtxOp::Cos, Some(F32)) => vec![si("FMUL.RZ", F32Alu), si("MUFU.COS", Mufu)],
+        (PtxOp::Lg2, Some(F32)) => {
+            vec![
+                si("FSETP.GEU.AND", F32Alu).lat(13),
+                si("FMUL", F32Alu).lat(13),
+                si("MUFU.LG2", Mufu).lat(24),
+                si("FADD", F32Alu),
+            ]
+        }
+        (PtxOp::Ex2, Some(F32)) => {
+            vec![
+                si("FSETP.GEU.AND", F32Alu).lat(13),
+                si("FMUL", F32Alu).lat(13),
+                si("FMUL", F32Alu).lat(13),
+                si("MUFU.EX2", Mufu).lat(24),
+            ]
+        }
+        (PtxOp::Ex2, Some(F16)) => one(si("MUFU.EX2.F16", MufuFast)),
+        (PtxOp::Tanh, Some(F32)) => one(si("MUFU.TANH", MufuFast)),
+        (PtxOp::Tanh, Some(F16)) => one(si("MUFU.TANH.F16", MufuFast)),
+
+        // ---------------- popc / clz / brev / bfind ------------------
+        (PtxOp::Popc, Some(B32)) => one(si("POPC", IntBit)),
+        (PtxOp::Popc, Some(B64)) => {
+            vec![si("UPOPC", Uniform), si("UPOPC", Uniform), si("UIADD3", Uniform)]
+        }
+        (PtxOp::Clz, Some(B32)) => vec![si("FLO.U32", IntBit), si("IADD", IntAlu)],
+        (PtxOp::Clz, Some(B64)) => {
+            vec![
+                si("UISETP.NE.U32.AND", Uniform).lat(8),
+                si("USEL", Uniform).lat(8),
+                si("UFLO.U32", Uniform).lat(8),
+                si("UIADD3", Uniform),
+                si("UIADD3", Uniform),
+            ]
+        }
+        (PtxOp::Brev, Some(B32)) => vec![si("BREV", IntAlu).occ(1).lat(2), si("SGXT.U32", IntCmp).occ(1).lat(2)],
+        (PtxOp::Brev, Some(B64)) => {
+            vec![si("UBREV", Uniform), si("UBREV", Uniform), si("MOV", Mov)]
+        }
+        // Insight 2 exception: bfind differs by sign.
+        (PtxOp::Bfind, Some(U32)) => one(si("FLO.U32", IntBit)),
+        (PtxOp::Bfind, Some(S32)) => one(si("FLO", IntBit)),
+        (PtxOp::Bfind, Some(U64)) => {
+            // 164 cycles: FLO+ISETP+IADD3+BRA replay loop.
+            vec![
+                si("FLO.U32", IntBit).lat(150),
+                si("ISETP.NE.U32.AND", IntCmp),
+                si("IADD3", IntAlu),
+                si("BRA", Control),
+            ]
+        }
+        (PtxOp::Bfind, Some(S64)) => expansion(tr, "BFIND64", 195),
+
+        // ---------------- bfe / bfi / fns ----------------------------
+        (PtxOp::Bfe, Some(U32 | S32)) => {
+            vec![
+                si("PRMT", IntLogic),
+                si("PRMT", IntLogic),
+                si("PRMT", IntLogic),
+                si("IMAD.MOV", Mov),
+                si("IMAD.MOV", Mov),
+                si("SHF.R.U32.HI", IntCmp),
+                si("SGXT.U32", IntCmp),
+            ]
+        }
+        (PtxOp::Bfe, Some(U64)) => {
+            vec![
+                si("UMOV", Uniform).occ(1),
+                si("USHF.L.U32", Uniform).occ(1),
+                si("UIADD3", Uniform).occ(1),
+                si("ULOP3.LUT", Uniform).occ(1),
+            ]
+        }
+        (PtxOp::Bfe, Some(S64)) => expansion(tr, "BFE64", 14),
+        (PtxOp::Bfi, Some(B32 | U32 | S32)) => {
+            vec![
+                si("PRMT", IntLogic),
+                si("PRMT", IntLogic),
+                si("PRMT", IntLogic),
+                si("IMAD.MOV", Mov),
+                si("IMAD.MOV", Mov),
+                si("SHF.L.U32", IntCmp),
+                si("BMSK", IntCmp),
+                si("LOP3.LUT", IntLogic),
+            ]
+        }
+        (PtxOp::Bfi, Some(B64 | U64 | S64)) => {
+            vec![
+                si("UMOV", Uniform).occ(1),
+                si("USHF.L.U32", Uniform).occ(1),
+                si("UIADD3", Uniform).occ(1),
+                si("ULOP3.LUT", Uniform).occ(1),
+            ]
+        }
+        (PtxOp::Fns, Some(B32)) => expansion(tr, "FNS", 79),
+
+        // ---------------- copysign -----------------------------------
+        (PtxOp::Copysign, Some(F32)) => {
+            vec![si("LOP3.LUT", IntLogic).lat(8), si("LOP3.LUT", IntLogic)]
+        }
+        (PtxOp::Copysign, Some(F64)) => {
+            vec![
+                si("ULOP3.LUT", Uniform),
+                si("ULOP3.LUT", Uniform),
+                si("IMAD.U32", ImadOnFma),
+                si("MOV", Mov),
+            ]
+        }
+
+        // ---------------- logic ---------------------------------------
+        (PtxOp::And | PtxOp::Or | PtxOp::Xor, Some(B16 | B32 | U16 | U32 | S32)) => {
+            one(si("LOP3.LUT", IntLogic))
+        }
+        (PtxOp::And | PtxOp::Or | PtxOp::Xor, Some(B64 | U64 | S64)) => {
+            one(si("ULOP3.LUT", Uniform))
+        }
+        (PtxOp::Not, Some(B16 | B32)) => one(si("LOP3.LUT", IntLogic)),
+        (PtxOp::Not, Some(B64)) => {
+            vec![si("ULOP3.LUT", Uniform), si("ULOP3.LUT", Uniform)]
+        }
+        (PtxOp::Cnot, Some(B16)) => {
+            vec![
+                si("ULOP3.LUT", Uniform),
+                si("ISETP.EQ.U32.AND", IntCmp),
+                si("SEL", IntCmp),
+            ]
+        }
+        (PtxOp::Cnot, Some(B32)) => {
+            vec![si("UISETP.EQ.U32.AND", Uniform), si("USEL", Uniform)]
+        }
+        (PtxOp::Cnot, Some(B64)) => expansion(tr, "CNOT64", 11),
+        (PtxOp::Lop3, Some(B32)) => {
+            vec![si("IMAD.MOV.U32", Mov), si("LOP3.LUT", IntLogic)]
+        }
+        (PtxOp::Shl | PtxOp::Shr, Some(B16 | B32 | U32 | S32)) => one(si("SHF", IntCmp)),
+        (PtxOp::Shl | PtxOp::Shr, Some(B64 | U64 | S64)) => one(si("USHF", Uniform)),
+        (PtxOp::Shf, _) => one(si("SHF", IntCmp)),
+        (PtxOp::Prmt, _) => one(si("PRMT", IntLogic)),
+
+        // ---------------- testp / setp / selp / cvt -------------------
+        (PtxOp::Testp, Some(F32)) => match ins.mods.testp {
+            Some(TestpKind::Normal) => {
+                vec![
+                    si("IMAD.MOV.U32", Mov),
+                    si("ISETP.GE.U32.AND", IntCmp),
+                    si("ISETP.GE.U32.AND", IntCmp),
+                ]
+            }
+            _ => one(si("ISETP.LT.U32.AND", IntCmp).lat(14)),
+        },
+        (PtxOp::Testp, Some(F64)) => match ins.mods.testp {
+            Some(TestpKind::Normal) => {
+                vec![
+                    si("UISETP.LE.U32.AND", Uniform),
+                    si("UISETP.LE.U32.AND", Uniform),
+                    si("UISETP.GE.U32.AND", Uniform),
+                    si("UISETP.GE.U32.AND", Uniform),
+                ]
+            }
+            _ => {
+                vec![
+                    si("UISETP.LT.U32.AND", Uniform),
+                    si("UISETP.GE.U32.AND.EX", Uniform),
+                    si("UISETP.GE.U32.AND.EX", Uniform),
+                ]
+            }
+        },
+        (PtxOp::Setp, _) => one(si("ISETP.NE.AND", IntCmp).lat(26)),
+        (PtxOp::Selp, _) => one(si("SEL", IntCmp)),
+        (PtxOp::Cvt, _) => one(si("F2I.TRUNC.NTZ", Convert)),
+        (PtxOp::Cvta, _) => one(si("IADD3", IntAlu)),
+
+        // ---------------- dp4a / dp2a ---------------------------------
+        (PtxOp::Dp4a, _) => {
+            vec![si("IMAD.MOV.U32", Mov), si("IDP.4A.U8.U8", Idp)]
+        }
+        (PtxOp::Dp2a, _) => {
+            vec![si("IMAD.MOV.U32", Mov), si("IDP.2A.LO.U16.U8", Idp)]
+        }
+
+        // ---------------- data movement -------------------------------
+        (PtxOp::Mov, _) => {
+            // Clock reads are the microbenchmarks' measuring device.
+            match ins.srcs.first() {
+                Some(Operand::Special(crate::ptx::SpecialReg::Clock64)) => {
+                    return Ok(one(
+                        si("CS2R", Cs2r).dst(dst.ok_or("mov needs dst")?).effect(Effect::ClockRead),
+                    ))
+                }
+                Some(Operand::Special(crate::ptx::SpecialReg::Clock)) => {
+                    // Table V: mov.u32 %clock -> CS2R.32 (2 cycles).  The
+                    // Fig. 4a scheduling barrier is injected by the driver
+                    // when a 32-bit subtraction consumes two such reads —
+                    // see `Translator::translate`.
+                    let d = dst.ok_or("mov needs dst")?;
+                    return Ok(one(si("CS2R.32", Cs2r).dst(d).effect(Effect::ClockRead)));
+                }
+                _ => one(si("MOV", Mov)),
+            }
+        }
+        (PtxOp::Ld, _) => {
+            let d = dst.ok_or("ld needs dst")?;
+            let mn = match (ins.mods.space, ins.mods.cache) {
+                (StateSpace::Shared, _) => "LDS",
+                (StateSpace::Param, _) => "LDC",
+                (_, CacheOp::Cv) => "LDG.E.STRONG.SYS",
+                (_, CacheOp::Cg) => "LDG.E.STRONG.GPU",
+                _ => "LDG.E",
+            };
+            let mut i = si(mn, Memory).dst(d).effect(Effect::Load);
+            for s in srcs.iter().take(4) {
+                i = i.src(*s);
+            }
+            return Ok(one(i));
+        }
+        (PtxOp::St, _) => {
+            let mn = match ins.mods.space {
+                StateSpace::Shared => "STS",
+                _ => match ins.mods.cache {
+                    CacheOp::Wt => "STG.E.STRONG.SYS",
+                    _ => "STG.E",
+                },
+            };
+            let mut i = si(mn, Memory).effect(Effect::Store);
+            if let Some(Operand::Mem { base, .. }) = ins.dst {
+                i = i.src(base);
+            }
+            for s in srcs.iter().take(3) {
+                i = i.src(*s);
+            }
+            return Ok(one(i));
+        }
+
+        // ---------------- control -------------------------------------
+        (PtxOp::Bra, _) => {
+            let mut i = si("BRA", Control).effect(Effect::Branch);
+            if let Some((g, _)) = ins.guard {
+                i = i.src(g);
+            }
+            return Ok(one(i));
+        }
+        (PtxOp::BarWarpSync, _) => {
+            // Table V: bar.warp.sync → NOP ("changes").
+            return Ok(one(si("NOP", Control).effect(Effect::WarpSync)));
+        }
+        (PtxOp::Bar, _) => return Ok(one(si("BAR.SYNC", Control).effect(Effect::WarpSync))),
+        (PtxOp::Ret | PtxOp::Exit, _) => {
+            return Ok(one(si("EXIT", Control).effect(Effect::Exit)))
+        }
+
+        // ---------------- tensor core ---------------------------------
+        (PtxOp::Wmma(w), _) => return tensor::translate_wmma(tr, ins, w, dst, &srcs),
+
+        (op, t) => {
+            return Err(format!(
+                "no Table V mapping for {} (type {:?})",
+                op.mnemonic(),
+                t
+            ))
+        }
+    };
+
+    Ok(wire(tr, spec, wiring_for(ins), dst, &srcs))
+}
+
+/// Group dataflow structure per Table V row (see [`Wiring`]).  The
+/// choices mirror what the expansions compute: independent hi/lo halves
+/// and bit-field shuffles are parallel; compare-select chains are serial.
+fn wiring_for(ins: &PtxInstruction) -> Wiring {
+    use PtxOp::*;
+    match (ins.op, ins.ty) {
+        // hi/lo half pairs — independent.
+        (Add | Sub, Some(U64 | S64 | B64)) => Wiring::Parallel,
+        (Sad, Some(U16 | S16)) => Wiring::Parallel,
+        (Min | Max, Some(S16)) => Wiring::Parallel,
+        (Min | Max, Some(S64)) => Wiring::Parallel,
+        (Min | Max, Some(F64)) => Wiring::Roots(2),
+        (Clz, Some(B32)) => Wiring::Parallel,
+        (Brev, Some(B32)) => Wiring::Parallel,
+        (Not, Some(B64)) => Wiring::Parallel,
+        (Copysign, _) => Wiring::Parallel,
+        // sign/byte shuffles around one core op.
+        (Abs, Some(S16)) => Wiring::Parallel,
+        (Neg, Some(S16)) => Wiring::Parallel,
+        (Cnot, Some(B16 | B32)) => Wiring::Parallel,
+        (Lop3, _) => Wiring::Parallel,
+        // bit-field extract/insert: byte-permutes are independent.
+        (Bfe, Some(U32 | S32 | U64)) => Wiring::Parallel,
+        (Bfi, Some(B32 | U32 | S32 | B64 | U64 | S64)) => Wiring::Parallel,
+        // predicate-pair tests.
+        (Testp, Some(F32)) => Wiring::Parallel,
+        (Testp, Some(F64)) => Wiring::Serial,
+        // popc/brev 64-bit: two independent halves + combiner.
+        (Popc, Some(B64)) => Wiring::Roots(2),
+        (Brev, Some(B64)) => Wiring::Roots(2),
+        (Clz, Some(B64)) => Wiring::Parallel,
+        // transcendental prep ops feed the MUFU independently.
+        (Lg2 | Ex2, Some(F32)) => Wiring::Parallel,
+        // "multiple instructions" expansions: path-dominated.
+        (Div | Rem, _) => Wiring::Parallel,
+        (Sqrt, Some(F32 | F64)) if true => Wiring::Parallel,
+        (Rcp, _) => Wiring::Parallel,
+        (Bfind, Some(S64)) => Wiring::Parallel,
+        (Bfe, Some(S64)) => Wiring::Parallel,
+        (Cnot, Some(B64)) => Wiring::Parallel,
+        (Fns, _) => Wiring::Parallel,
+        _ => Wiring::Serial,
+    }
+}
+
+/// Representative expansion for Table V's "multiple instructions" rows:
+/// a Newton-Raphson-style MUFU + FFMA sequence.  The lead instruction
+/// carries the calibrated latency (`target` = the paper's measured CPI);
+/// the refinement ops are issue-parallel, matching how the measured
+/// value is dominated by the longest dependence path, not the op count.
+fn expansion(tr: &mut Translator, tag: &'static str, target: u64) -> Vec<SassInstr> {
+    let _ = tr;
+    // The measured value is dominated by the longest dependence path
+    // (the MUFU seed + Newton refinement), not the op count; with
+    // parallel wiring delta ≈ 12 + L, so L = 3·target − 10 makes the
+    // 3-instance protocol read `target`.
+    let lead_lat = (3 * target).saturating_sub(10).max(4);
+    vec![
+        si(tag, Mufu).lat(lead_lat),
+        si("FFMA", F32Alu),
+        si("FFMA", F32Alu),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parse_program;
+    use crate::translate::translate_program;
+
+    fn map_of(line: &str) -> String {
+        let src = format!(
+            ".visible .entry k() {{ .reg .b16 %h<20>; .reg .b32 %r<20>; .reg .b32 %f<20>; \
+             .reg .b64 %rd<20>; .reg .b64 %fd<20>; .reg .pred %p<8>; {line} ret; }}"
+        );
+        let prog = parse_program(&src).unwrap();
+        let t = translate_program(&prog).unwrap();
+        t.groups[0].mapping()
+    }
+
+    #[test]
+    fn table5_add_family() {
+        assert_eq!(map_of("add.u16 %h1, %h2, %h3;"), "UIADD3");
+        assert_eq!(map_of("addc.u32 %r1, %r2, %r3;"), "IADD3.X");
+        assert_eq!(map_of("add.u32 %r1, %r2, %r3;"), "IADD");
+        assert_eq!(map_of("add.u64 %rd1, %rd2, %rd3;"), "UIADD3.x+UIADD3");
+        assert_eq!(map_of("add.f16 %h1, %h2, %h3;"), "HADD");
+        assert_eq!(map_of("add.f32 %f1, %f2, %f3;"), "FADD");
+        assert_eq!(map_of("add.f64 %fd1, %fd2, %fd3;"), "DADD");
+    }
+
+    #[test]
+    fn table5_mul_mad_family() {
+        assert_eq!(map_of("mul.lo.u32 %r1, %r2, %r3;"), "IMAD");
+        assert_eq!(map_of("mul.lo.u16 %h1, %h2, %h3;"), "LOP3.LUT+IMAD");
+        assert_eq!(map_of("mul24.lo.u32 %r1, %r2, %r3;"), "PRMT+IMAD");
+        assert_eq!(map_of("mul.rn.f32 %f1, %f2, %f3;"), "FMUL");
+        assert_eq!(map_of("mul.rn.f64 %fd1, %fd2, %fd3;"), "DMUL");
+        // Insight 1: integer mad on the floating pipe.
+        assert_eq!(map_of("mad.lo.u32 %r1, %r2, %r3, %r4;"), "FFMA");
+        assert_eq!(map_of("mad.lo.u64 %rd1, %rd2, %rd3, %rd4;"), "IMAD");
+        assert_eq!(map_of("fma.rn.f16 %h1, %h2, %h3, %h4;"), "HFMA2");
+        assert_eq!(map_of("fma.rn.f64 %fd1, %fd2, %fd3, %fd4;"), "DFMA");
+    }
+
+    #[test]
+    fn table5_bit_family() {
+        assert_eq!(map_of("popc.b32 %r1, %r2;"), "POPC");
+        assert_eq!(map_of("popc.b64 %r1, %rd2;"), "2*UPOPC+UIADD3");
+        assert_eq!(map_of("clz.b32 %r1, %r2;"), "FLO.U32+IADD");
+        assert_eq!(map_of("brev.b32 %r1, %r2;"), "BREV+SGXT.U32");
+        assert_eq!(map_of("brev.b64 %rd1, %rd2;"), "2*UBREV+MOV");
+        assert_eq!(map_of("bfind.u32 %r1, %r2;"), "FLO.U32");
+        assert_eq!(map_of("bfind.s32 %r1, %r2;"), "FLO");
+    }
+
+    #[test]
+    fn table5_minmax_family() {
+        assert_eq!(map_of("min.u32 %r1, %r2, %r3;"), "IMNMX.U32");
+        assert_eq!(map_of("min.s32 %r1, %r2, %r3;"), "IMNMX");
+        assert_eq!(
+            map_of("min.u16 %h1, %h2, %h3;"),
+            "ULOP3.LUT+UISETP.LT.U32.AND+USEL"
+        );
+        assert_eq!(map_of("min.f32 %f1, %f2, %f3;"), "FMNMX");
+        assert_eq!(map_of("min.f16 %h1, %h2, %h3;"), "HMNMX2+PRMT");
+        assert_eq!(map_of("max.u32 %r1, %r2, %r3;"), "IMNMX.U32");
+    }
+
+    #[test]
+    fn table5_sad_copysign_logic() {
+        assert_eq!(map_of("sad.u32 %r1, %r2, %r3, %r4;"), "VABSDIFF+IMAD");
+        assert_eq!(
+            map_of("sad.u16 %h1, %h2, %h3, %h4;"),
+            "2*LOP3.LUT+ULOP3+VABSDIFF"
+        );
+        assert_eq!(map_of("copysign.f32 %f1, %f2, %f3;"), "2*LOP3.LUT");
+        assert_eq!(map_of("and.b32 %r1, %r2, %r3;"), "LOP3.LUT");
+        assert_eq!(map_of("and.b64 %rd1, %rd2, %rd3;"), "ULOP3.LUT");
+        assert_eq!(map_of("not.b64 %rd1, %rd2;"), "2*ULOP3.LUT");
+        assert_eq!(map_of("cnot.b32 %r1, %r2;"), "UISETP.EQ.U32.AND+USEL");
+        assert_eq!(map_of("lop3.b32 %r1, %r2, %r3, %r4, 5;"), "IMAD.MOV.U32+LOP3.LUT");
+    }
+
+    #[test]
+    fn table5_transcendental() {
+        assert_eq!(map_of("sin.approx.f32 %f1, %f2;"), "FMUL+MUFU.SIN");
+        assert_eq!(map_of("cos.approx.f32 %f1, %f2;"), "FMUL.RZ+MUFU.COS");
+        assert_eq!(map_of("tanh.approx.f32 %f1, %f2;"), "MUFU.TANH");
+        assert_eq!(map_of("ex2.approx.f16 %h1, %h2;"), "MUFU.EX2.F16");
+        assert_eq!(
+            map_of("lg2.approx.f32 %f1, %f2;"),
+            "FSETP.GEU.AND+FMUL+MUFU.LG2+FADD"
+        );
+        assert_eq!(map_of("rsqrt.approx.f64 %fd1, %fd2;"), "MUFU.RSQ64H");
+    }
+
+    #[test]
+    fn table5_dp4a_dp2a() {
+        assert_eq!(map_of("dp4a.u32.u32 %r1, %r2, %r3, %r4;"), "IMAD.MOV.U32+IDP.4A.U8.U8");
+        assert_eq!(
+            map_of("dp2a.lo.u32.u32 %r1, %r2, %r3, %r4;"),
+            "IMAD.MOV.U32+IDP.2A.LO.U16.U8"
+        );
+    }
+
+    #[test]
+    fn memory_ops_carry_effects() {
+        let src = r#"
+.visible .entry k(.param .u64 p0) {
+ .reg .b64 %rd<9>;
+ ld.param.u64 %rd1, [p0];
+ ld.global.cv.u64 %rd2, [%rd1];
+ st.wt.global.u64 [%rd1], %rd2;
+ ret;
+}"#;
+        let prog = parse_program(src).unwrap();
+        let t = translate_program(&prog).unwrap();
+        assert_eq!(t.groups[1].instrs[0].effect, Effect::Load);
+        assert_eq!(t.groups[1].instrs[0].mnemonic, "LDG.E.STRONG.SYS");
+        assert_eq!(t.groups[2].instrs[0].effect, Effect::Store);
+    }
+
+    #[test]
+    fn div_expands_to_multiple_instructions() {
+        let m = map_of("div.s32 %r1, %r2, %r3;");
+        assert!(m.contains('+'), "div must be multi-instruction: {m}");
+    }
+}

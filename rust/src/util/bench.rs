@@ -1,0 +1,157 @@
+//! Criterion-style timing harness for `cargo bench` (no external
+//! criterion in the build environment).
+//!
+//! Usage inside a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = Bench::from_args("table4_memory");
+//! b.bench("table4_memory", || { ... });
+//! b.finish();
+//! ```
+//!
+//! Reports min / median / mean / p95 wall-clock per iteration and writes
+//! `target/ubench/<name>.json` so the §Perf pass can diff before/after.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub min_ns: u128,
+    pub median_ns: u128,
+    pub mean_ns: u128,
+    pub p95_ns: u128,
+}
+
+impl Stats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<36} {:>6} iters  min {}  med {}  mean {}  p95 {}",
+            self.name,
+            self.iters,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+fn fmt_ns(ns: u128) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:>8.3}s ", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:>8.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:>8.3}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns:>8}ns")
+    }
+}
+
+pub struct Bench {
+    target: String,
+    /// Minimum total sampling time per benchmark.
+    pub budget: Duration,
+    /// Max samples.
+    pub max_samples: u64,
+    results: Vec<Stats>,
+}
+
+impl Bench {
+    /// Reads `--bench` / `--quick` style args (ignores unknown flags so
+    /// `cargo bench -- --quick` works).
+    pub fn from_args(target: &str) -> Bench {
+        let quick = std::env::args().any(|a| a == "--quick");
+        Bench {
+            target: target.to_string(),
+            budget: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            max_samples: if quick { 10 } else { 60 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Stats {
+        // warm-up
+        bb(f());
+        let mut samples: Vec<u128> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && (samples.len() as u64) < self.max_samples {
+            let t = Instant::now();
+            bb(f());
+            samples.push(t.elapsed().as_nanos());
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n as u64,
+            min_ns: samples[0],
+            median_ns: samples[n / 2],
+            mean_ns: samples.iter().sum::<u128>() / n as u128,
+            p95_ns: samples[(n * 95 / 100).min(n - 1)],
+        };
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Write results to `target/ubench/<target>.json` for §Perf diffing.
+    pub fn finish(self) {
+        use crate::util::json::Value;
+        let arr: Vec<Value> = self
+            .results
+            .iter()
+            .map(|s| {
+                Value::obj()
+                    .set("name", s.name.as_str())
+                    .set("iters", s.iters)
+                    .set("min_ns", s.min_ns as u64)
+                    .set("median_ns", s.median_ns as u64)
+                    .set("mean_ns", s.mean_ns as u64)
+                    .set("p95_ns", s.p95_ns as u64)
+            })
+            .collect();
+        let _ = std::fs::create_dir_all("target/ubench");
+        let path = format!("target/ubench/{}.json", self.target);
+        let _ = std::fs::write(&path, crate::util::json::to_string_pretty(&Value::Arr(arr)));
+        println!("(wrote {path})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            target: "test".into(),
+            budget: Duration::from_millis(20),
+            max_samples: 5,
+            results: Vec::new(),
+        };
+        let s = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.iters >= 1);
+        assert!(s.min_ns > 0);
+        assert!(s.min_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(500).contains("ns"));
+        assert!(fmt_ns(5_000).contains("µs"));
+        assert!(fmt_ns(5_000_000).contains("ms"));
+        assert!(fmt_ns(5_000_000_000).contains('s'));
+    }
+}

@@ -1,0 +1,206 @@
+//! IEEE binary16 (`F16`) and bfloat16 (`Bf16`) — bit-exact conversion
+//! and value semantics for the simulator's half-precision instructions
+//! and WMMA fragment dtypes (Table III).
+//!
+//! Round-to-nearest-even on narrowing, exact on widening, full
+//! subnormal/Inf/NaN handling (Fasi et al. showed Ampere TCs keep
+//! subnormals — so do we).
+
+/// IEEE 754 binary16.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+
+    pub fn from_bits(b: u16) -> F16 {
+        F16(b)
+    }
+
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    pub fn from_f32(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x))
+    }
+
+    pub fn from_f64(x: f64) -> F16 {
+        F16(f32_to_f16_bits(x as f32))
+    }
+
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+}
+
+/// bfloat16: f32 with the low 16 mantissa bits dropped (RNE).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub fn from_bits(b: u16) -> Bf16 {
+        Bf16(b)
+    }
+
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // quiet, preserve payload msb
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // round-to-nearest-even on the dropped 16 bits
+        let round_bit = (bits >> 15) & 1;
+        let sticky = bits & 0x7FFF;
+        let mut hi = (bits >> 16) as u16;
+        if round_bit == 1 && (sticky != 0 || (hi & 1) == 1) {
+            hi = hi.wrapping_add(1);
+        }
+        Bf16(hi)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+/// f32 → f16 bits with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return if man == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7E00 | ((man >> 13) as u16 & 0x03FF) | u16::from(man >> 13 == 0)
+        };
+    }
+
+    // unbiased exponent
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7C00; // overflow → Inf
+    }
+    if e >= -14 {
+        // normal half
+        let mut h = ((e + 15) as u16) << 10 | ((man >> 13) as u16);
+        // RNE on the dropped 13 bits
+        let round = man & 0x1FFF;
+        if round > 0x1000 || (round == 0x1000 && (h & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent — correct
+        }
+        return sign | h;
+    }
+    if e >= -25 {
+        // subnormal half
+        let full = man | 0x0080_0000; // implicit bit
+        let shift = (-14 - e) as u32 + 13;
+        let mut h = (full >> shift) as u16;
+        let dropped = full & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if dropped > halfway || (dropped == halfway && (h & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        return sign | h;
+    }
+    sign // underflow → ±0
+}
+
+/// f16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal: value = m × 2^-24; normalize into f32
+            let p = 31 - m.leading_zeros(); // msb position, 0..=9
+            let e = p + 103; // (p − 24) + 127
+            let mm = (m << (23 - p)) & 0x007F_FFFF;
+            sign | (e << 23) | mm
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13) | 0x0040_0000,
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(F16::from_f32(1.0).to_bits(), 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).to_bits(), 0xC000);
+        assert_eq!(F16::from_f32(0.5).to_bits(), 0x3800);
+        assert_eq!(F16::from_f32(65504.0).to_bits(), 0x7BFF); // max finite
+        assert_eq!(F16::from_f32(0.0).to_bits(), 0x0000);
+        assert_eq!(F16::from_f32(-0.0).to_bits(), 0x8000);
+    }
+
+    #[test]
+    fn widen_is_exact_for_all_finite_halves() {
+        for bits in 0u16..=0xFFFF {
+            let f = f16_bits_to_f32(bits);
+            if f.is_finite() {
+                // narrowing back must reproduce the same bit pattern
+                let back = f32_to_f16_bits(f);
+                assert_eq!(back, bits, "bits {bits:#06x} → {f} → {back:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_and_inf() {
+        assert_eq!(F16::from_f32(1e6).to_bits(), 0x7C00);
+        assert_eq!(F16::from_f32(f32::INFINITY).to_bits(), 0x7C00);
+        assert_eq!(F16::from_f32(f32::NEG_INFINITY).to_bits(), 0xFC00);
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn subnormals_preserved() {
+        // smallest positive subnormal half = 2^-24
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(F16::from_f32(tiny).to_bits(), 0x0001);
+        assert_eq!(f16_bits_to_f32(0x0001), tiny);
+    }
+
+    #[test]
+    fn rne_rounding() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next half;
+        // RNE keeps the even (1.0).
+        let x = 1.0f32 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3C00);
+        // 1 + 3·2^-11 rounds up to odd+1
+        let y = 1.0f32 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(y), 0x3C02);
+    }
+
+    #[test]
+    fn bf16_basics() {
+        assert_eq!(Bf16::from_f32(1.0).to_bits(), 0x3F80);
+        assert_eq!(Bf16::from_f32(-2.5).to_f32(), -2.5);
+        // RNE at the 16-bit boundary
+        let x = f32::from_bits(0x3F80_8000); // halfway
+        assert_eq!(Bf16::from_f32(x).to_bits(), 0x3F80); // even stays
+        let y = f32::from_bits(0x3F81_8000);
+        assert_eq!(Bf16::from_f32(y).to_bits(), 0x3F82); // odd rounds up
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+}

@@ -1,0 +1,475 @@
+//! Minimal JSON: a recursive-descent parser and a serializer.
+//!
+//! Covers the full JSON grammar (RFC 8259) minus exotic number forms the
+//! suite never produces; used for `artifacts/manifest.json` and the
+//! CLI's `--json` output.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn idx(&self, i: usize) -> Option<&Value> {
+        match self {
+            Value::Arr(v) => v.get(i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    // ---- builders (for --json output) -------------------------------
+    pub fn obj() -> Value {
+        Value::Obj(BTreeMap::new())
+    }
+
+    pub fn set(mut self, key: &str, v: impl Into<Value>) -> Value {
+        if let Value::Obj(m) = &mut self {
+            m.insert(key.to_string(), v.into());
+        }
+        self
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Num(n)
+    }
+}
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(v: Vec<Value>) -> Self {
+        Value::Arr(v)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonError {
+    pub offset: usize,
+    pub message: String,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+pub fn parse(src: &str) -> Result<Value, JsonError> {
+    let b: Vec<char> = src.chars().collect();
+    let mut p = Parser { b, i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing characters"));
+    }
+    Ok(v)
+}
+
+struct Parser {
+    b: Vec<char>,
+    i: usize,
+}
+
+impl Parser {
+    fn err(&self, m: &str) -> JsonError {
+        JsonError { offset: self.i, message: m.to_string() }
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: char) -> bool {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, c: char) -> Result<(), JsonError> {
+        if self.eat(c) {
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {c:?}")))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value, JsonError> {
+        for c in s.chars() {
+            if !self.eat(c) {
+                return Err(self.err(&format!("bad literal (wanted {s})")));
+            }
+        }
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Value, JsonError> {
+        self.ws();
+        match self.peek() {
+            Some('{') => self.object(),
+            Some('[') => self.array(),
+            Some('"') => Ok(Value::Str(self.string()?)),
+            Some('t') => self.lit("true", Value::Bool(true)),
+            Some('f') => self.lit("false", Value::Bool(false)),
+            Some('n') => self.lit("null", Value::Null),
+            Some(c) if c == '-' || c.is_ascii_digit() => self.number(),
+            other => Err(self.err(&format!("unexpected {other:?}"))),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, JsonError> {
+        self.expect('{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.eat('}') {
+            return Ok(Value::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            if self.eat(',') {
+                continue;
+            }
+            self.expect('}')?;
+            return Ok(Value::Obj(m));
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, JsonError> {
+        self.expect('[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.eat(']') {
+            return Ok(Value::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.ws();
+            if self.eat(',') {
+                continue;
+            }
+            self.expect(']')?;
+            return Ok(Value::Arr(v));
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect('"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some('"') => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                Some('\\') => {
+                    self.i += 1;
+                    let e = self.peek().ok_or_else(|| self.err("bad escape"))?;
+                    self.i += 1;
+                    match e {
+                        '"' => s.push('"'),
+                        '\\' => s.push('\\'),
+                        '/' => s.push('/'),
+                        'b' => s.push('\u{8}'),
+                        'f' => s.push('\u{c}'),
+                        'n' => s.push('\n'),
+                        'r' => s.push('\r'),
+                        't' => s.push('\t'),
+                        'u' => {
+                            let mut code = 0u32;
+                            for _ in 0..4 {
+                                let c = self.peek().ok_or_else(|| self.err("bad \\u"))?;
+                                code = code * 16
+                                    + c.to_digit(16).ok_or_else(|| self.err("bad hex"))?;
+                                self.i += 1;
+                            }
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => return Err(self.err(&format!("bad escape \\{other}"))),
+                    }
+                }
+                Some(c) => {
+                    s.push(c);
+                    self.i += 1;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value, JsonError> {
+        let start = self.i;
+        if self.eat('-') {}
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.eat('.') {
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some('e' | 'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some('+' | '-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let s: String = self.b[start..self.i].iter().collect();
+        s.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|e| self.err(&e.to_string()))
+    }
+}
+
+/// Serialize with 2-space indentation.
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, 0, &mut out);
+    out
+}
+
+/// Serialize compactly.
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_compact(v, &mut out);
+    out
+}
+
+fn escape(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn write_num(n: f64, out: &mut String) {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_compact(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(n) => write_num(*n, out),
+        Value::Str(s) => escape(s, out),
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_compact(x, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(m) => {
+            out.push('{');
+            for (i, (k, x)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                escape(k, out);
+                out.push(':');
+                write_compact(x, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_value(v: &Value, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    let pad1 = "  ".repeat(indent + 1);
+    match v {
+        Value::Arr(a) if !a.is_empty() => {
+            out.push_str("[\n");
+            for (i, x) in a.iter().enumerate() {
+                out.push_str(&pad1);
+                write_value(x, indent + 1, out);
+                if i + 1 < a.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&pad);
+            out.push(']');
+        }
+        Value::Obj(m) if !m.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, x)) in m.iter().enumerate() {
+                out.push_str(&pad1);
+                escape(k, out);
+                out.push_str(": ");
+                write_value(x, indent + 1, out);
+                if i + 1 < m.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&pad);
+            out.push('}');
+        }
+        other => write_compact(other, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_shape() {
+        let src = r#"{
+  "wmma_f16_f16": {
+    "file": "wmma_f16_f16.hlo.txt",
+    "args": [{"shape": [16, 16], "dtype": "float32"}]
+  }
+}"#;
+        let v = parse(src).unwrap();
+        let meta = v.get("wmma_f16_f16").unwrap();
+        assert_eq!(meta.get("file").unwrap().as_str(), Some("wmma_f16_f16.hlo.txt"));
+        let arg0 = meta.get("args").unwrap().idx(0).unwrap();
+        assert_eq!(arg0.get("shape").unwrap().idx(0).unwrap().as_usize(), Some(16));
+        assert_eq!(arg0.get("dtype").unwrap().as_str(), Some("float32"));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"a": [1, 2.5, -3], "b": "x\ny", "c": true, "d": null, "e": {}}"#;
+        let v = parse(src).unwrap();
+        let s = to_string(&v);
+        assert_eq!(parse(&s).unwrap(), v);
+        let p = to_string_pretty(&v);
+        assert_eq!(parse(&p).unwrap(), v);
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(parse("1e3").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(parse("-2.5E-1").unwrap().as_f64(), Some(-0.25));
+        assert_eq!(parse("0").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn escapes() {
+        let v = parse(r#""a\"b\\cA\n""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\"b\\cA\n"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse(r#"{"a":}"#).is_err());
+        assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn builder() {
+        let v = Value::obj().set("x", 3u64).set("y", "hi").set("z", true);
+        assert_eq!(to_string(&v), r#"{"x":3,"y":"hi","z":true}"#);
+    }
+}

@@ -1,0 +1,15 @@
+//! Self-contained infrastructure substrates.
+//!
+//! The build environment vendors only the `xla` crate's dependency
+//! closure, so everything else a benchmark-infra repo normally pulls in
+//! is implemented here from scratch (DESIGN.md §Substitutions):
+//!
+//! * [`json`]  — JSON parser + serializer (artifact manifests, `--json`);
+//! * [`f16`]   — IEEE binary16 and bfloat16 conversion/arithmetic;
+//! * [`prng`]  — deterministic xorshift PRNG for property-based tests;
+//! * [`bench`] — the criterion-style timing harness `cargo bench` runs.
+
+pub mod bench;
+pub mod f16;
+pub mod json;
+pub mod prng;

@@ -1,0 +1,109 @@
+//! End-to-end: the full campaign against the paper's published numbers
+//! (the integration-level version of DESIGN.md §6's experiment index).
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::harness;
+use ampere_ubench::microbench::memory::Level;
+use ampere_ubench::microbench::MatchGrade;
+
+fn cfg() -> AmpereConfig {
+    let mut c = AmpereConfig::a100();
+    // scaled caches: identical latencies, faster warm loops
+    c.memory.l2_bytes = 512 * 1024;
+    c.memory.l1_bytes = 32 * 1024;
+    c
+}
+
+#[test]
+fn campaign_reproduces_every_table() {
+    let r = harness::run_campaign_blocking(cfg()).unwrap();
+
+    // Table I — exact: 5, 3, 2, 2.
+    assert_eq!(
+        r.table1.iter().map(|a| a.cpi).collect::<Vec<_>>(),
+        vec![5, 3, 2, 2]
+    );
+
+    // Table II — exact for all five rows, both columns.
+    for d in &r.table2 {
+        assert_eq!((d.dep_cpi, d.indep_cpi), (d.paper_dep, d.paper_indep), "{}", d.name);
+    }
+
+    // Table III — exact latency + SASS decomposition for all 7 dtypes,
+    // throughput within 5% of the paper's measured column.
+    for w in &r.table3 {
+        assert_eq!(w.cycles, w.paper_cycles, "{}", w.dtype_key);
+        assert_eq!(w.sass, w.paper_sass, "{}", w.dtype_key);
+        let rel = (w.throughput.measured_tops - w.paper_measured_tops).abs()
+            / w.paper_measured_tops;
+        assert!(rel < 0.05, "{}: throughput {rel}", w.dtype_key);
+    }
+
+    // Table IV — ordering + ≤6% per-row error; shared exact.
+    let get = |l: Level| r.table4.iter().find(|m| m.level == l).unwrap().cpi;
+    assert!(get(Level::Global) > get(Level::L2));
+    assert!(get(Level::L2) > get(Level::L1));
+    assert!(get(Level::L1) > get(Level::SharedLoad));
+    assert_eq!(get(Level::SharedLoad), 23);
+    assert_eq!(get(Level::SharedStore), 19);
+
+    // Table V — ≥60% exact, ≥95% exact-or-close across ~114 rows.
+    let s = r.summary();
+    assert!(
+        s.table5_exact * 10 >= s.table5_rows * 6,
+        "{} exact of {}",
+        s.table5_exact,
+        s.table5_rows
+    );
+    assert!(
+        (s.table5_exact + s.table5_close) * 20 >= s.table5_rows * 19,
+        "{} exact + {} close of {}",
+        s.table5_exact,
+        s.table5_close,
+        s.table5_rows
+    );
+
+    // Fig. 4 — exact: 13 vs 2.
+    assert_eq!(r.fig4.cpi_32bit, 13);
+    assert_eq!(r.fig4.cpi_64bit, 2);
+
+    // Insights.
+    assert_eq!(r.insight1.mad_mapping, "FFMA");
+    for p in &r.insight2 {
+        assert_eq!(p.differs, p.paper_expects_difference, "{}", p.base);
+    }
+    for i in &r.insight3 {
+        assert_eq!(i.mov_init_mapping, "IMAD.MOV.U32", "{}", i.op);
+        assert!(i.add_init_mapping.starts_with("FADD"), "{}", i.op);
+    }
+}
+
+#[test]
+fn table5_mapping_strings_mostly_verbatim() {
+    let r = harness::run_campaign_blocking(cfg()).unwrap();
+    let mismatched: Vec<_> = r
+        .table5
+        .iter()
+        .filter(|row| !row.mapping_matches)
+        .map(|row| row.name.clone())
+        .collect();
+    assert!(
+        mismatched.len() * 10 <= r.table5.len(),
+        "mapping mismatches: {mismatched:?}"
+    );
+}
+
+#[test]
+fn grades_never_regress_below_published_baseline() {
+    // The calibration baseline recorded in EXPERIMENTS.md — any code
+    // change that degrades it should fail here.
+    let r = harness::run_campaign_blocking(cfg()).unwrap();
+    let s = r.summary();
+    assert!(s.table5_exact >= 70, "exact dropped to {}", s.table5_exact);
+    let off = r
+        .table5
+        .iter()
+        .filter(|x| x.cycles_grade == MatchGrade::Off)
+        .count();
+    assert!(off <= 2, "off rows grew to {off}");
+}

@@ -1,0 +1,107 @@
+//! Integration: the Rust runtime (L3) executing the AOT-compiled
+//! JAX/Pallas artifacts (L2/L1) through PJRT, validated against the
+//! simulator's functional tensor-core model.
+//!
+//! Needs `make artifacts` — tests skip (with a notice) if the artifact
+//! directory is absent so `cargo test` stays runnable standalone.
+
+use ampere_ubench::runtime::{validate_wmma_against_sim, Artifacts, HostTensor, Oracle};
+use ampere_ubench::tensor::{WmmaDtype, ALL_DTYPES};
+
+fn oracle_or_skip() -> Option<Oracle> {
+    match Artifacts::discover(Artifacts::default_dir()) {
+        Ok(a) => Some(Oracle::new(a).expect("PJRT CPU client must come up")),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_all_dtypes() {
+    let Some(oracle) = oracle_or_skip() else { return };
+    let variants = oracle.variants();
+    for d in ALL_DTYPES {
+        assert!(variants.contains(&format!("wmma_{}", d.key())), "{}", d.key());
+        assert!(
+            variants.contains(&format!("wmma_chain_{}", d.key())),
+            "chain {}",
+            d.key()
+        );
+    }
+}
+
+#[test]
+fn sim_matches_oracle_for_every_dtype() {
+    let Some(mut oracle) = oracle_or_skip() else { return };
+    for d in ALL_DTYPES {
+        let err = validate_wmma_against_sim(&mut oracle, d).unwrap();
+        let tol = if d == WmmaDtype::F16F16 { 0.05 } else { 1e-3 };
+        assert!(err <= tol, "{}: max err {err}", d.key());
+    }
+}
+
+#[test]
+fn oracle_applies_fragment_precision() {
+    // tf32 truncates the mantissa to 10 bits: values differing only
+    // below that must multiply identically — through the *compiled
+    // artifact*, not just the python test suite.
+    let Some(mut oracle) = oracle_or_skip() else { return };
+    let (m, n, k) = WmmaDtype::Tf32F32.primary_shape();
+    let (m, n, k) = (m as usize, n as usize, k as usize);
+    let eps = 2f64.powi(-20);
+    let a1 = vec![1.0 + eps; m * k];
+    let a2 = vec![1.0; m * k];
+    let b = vec![1.0; k * n];
+    let c = vec![0.0; m * n];
+    let d1 = oracle.wmma_single(WmmaDtype::Tf32F32, &a1, &b, &c).unwrap();
+    let d2 = oracle.wmma_single(WmmaDtype::Tf32F32, &a2, &b, &c).unwrap();
+    assert_eq!(d1, d2, "tf32 truncation must hide the 2^-20 perturbation");
+
+    // ...while f64 keeps it.
+    let (m, n, k) = WmmaDtype::F64F64.primary_shape();
+    let (m, n, k) = (m as usize, n as usize, k as usize);
+    let a1 = vec![1.0 + eps; m * k];
+    let a2 = vec![1.0; m * k];
+    let b = vec![1.0; k * n];
+    let c = vec![0.0; m * n];
+    let d1 = oracle.wmma_single(WmmaDtype::F64F64, &a1, &b, &c).unwrap();
+    let d2 = oracle.wmma_single(WmmaDtype::F64F64, &a2, &b, &c).unwrap();
+    assert_ne!(d1, d2, "f64 keeps the perturbation");
+}
+
+#[test]
+fn chain_artifact_runs_fig5_semantics() {
+    // wmma_chain_*: 4 fragments × 4 dependent mmas. Feeding A = 0 must
+    // return C unchanged (D = 0·B + C at every step).
+    let Some(mut oracle) = oracle_or_skip() else { return };
+    let meta = oracle.meta("wmma_chain_f16_f32").unwrap().clone();
+    let shapes: Vec<Vec<usize>> = meta.args.iter().map(|a| a.shape.clone()).collect();
+    let numel = |s: &Vec<usize>| s.iter().product::<usize>();
+    let a = HostTensor::F32(vec![0.0; numel(&shapes[0])], shapes[0].clone());
+    let b = HostTensor::F32(vec![2.0; numel(&shapes[1])], shapes[1].clone());
+    let c_vals: Vec<f32> = (0..numel(&shapes[2])).map(|i| (i % 5) as f32).collect();
+    let c = HostTensor::F32(c_vals.clone(), shapes[2].clone());
+    let out = oracle.execute("wmma_chain_f16_f32", &[a, b, c]).unwrap();
+    let want: Vec<f64> = c_vals.iter().map(|x| *x as f64).collect();
+    assert_eq!(out, want);
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(mut oracle) = oracle_or_skip() else { return };
+    let t0 = std::time::Instant::now();
+    oracle.executable("wmma_f16_f16").unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    oracle.executable("wmma_f16_f16").unwrap();
+    let warm = t1.elapsed();
+    assert!(warm < cold / 2, "cached lookup {warm:?} vs compile {cold:?}");
+}
+
+#[test]
+fn unknown_variant_is_an_error() {
+    let Some(mut oracle) = oracle_or_skip() else { return };
+    assert!(oracle.executable("wmma_f8_f8").is_err());
+}

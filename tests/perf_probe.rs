@@ -1,0 +1,56 @@
+//! §Perf probe: where does a Table V measurement spend its time?
+//! Run: cargo test --release --test perf_probe -- --nocapture --ignored
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::microbench::{alu, registry};
+use ampere_ubench::ptx::parse_program;
+use ampere_ubench::sim::Simulator;
+use ampere_ubench::translate::translate_program;
+use std::time::Instant;
+
+#[test]
+#[ignore]
+fn phase_breakdown() {
+    let cfg = AmpereConfig::a100();
+    let rows = registry::table5();
+    let srcs: Vec<String> = rows.iter().map(|r| alu::kernel_for(r, false)).collect();
+    let n = srcs.len() as f64;
+
+    let t = Instant::now();
+    let progs: Vec<_> = srcs.iter().map(|s| parse_program(s).unwrap()).collect();
+    println!("parse:     {:>8.1} µs/kernel", t.elapsed().as_micros() as f64 / n);
+
+    let t = Instant::now();
+    let tps: Vec<_> = progs.iter().map(|p| translate_program(p).unwrap()).collect();
+    println!("translate: {:>8.1} µs/kernel", t.elapsed().as_micros() as f64 / n);
+
+    let t = Instant::now();
+    let mut sims: Vec<_> = (0..progs.len()).map(|_| Simulator::new(cfg.clone())).collect();
+    println!("sim-new:   {:>8.1} µs/kernel", t.elapsed().as_micros() as f64 / n);
+
+    let t = Instant::now();
+    for ((p, tp), sim) in progs.iter().zip(&tps).zip(&mut sims) {
+        sim.run(p, tp, &[0x100000]).unwrap();
+    }
+    println!("sim-run:   {:>8.1} µs/kernel", t.elapsed().as_micros() as f64 / n);
+
+    // raw simulated-instruction throughput on a long loop
+    let src = format!(
+        ".visible .entry k() {{ {} mov.u64 %rd1, 0;\n$L:\n add.u64 %rd1, %rd1, 1;\n \
+         add.u32 %r1, %r2, 1;\n add.u32 %r3, %r4, 1;\n add.u32 %r5, %r6, 1;\n \
+         setp.lt.u64 %p1, %rd1, 1000000;\n @%p1 bra $L;\n ret; }}",
+        ampere_ubench::microbench::REG_DECLS
+    );
+    let p = parse_program(&src).unwrap();
+    let tp = translate_program(&p).unwrap();
+    let mut sim = Simulator::new(cfg.clone());
+    sim.trace = ampere_ubench::sass::TraceRecorder::disabled();
+    let t = Instant::now();
+    let r = sim.run(&p, &tp, &[]).unwrap();
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "loop:      {:.1} M SASS instr/s ({} instrs in {:.2}s)",
+        r.sass_instructions as f64 / secs / 1e6,
+        r.sass_instructions,
+        secs
+    );
+}

@@ -1,0 +1,34 @@
+#[test]
+#[ignore]
+fn probe3() {
+    use std::time::Instant;
+    let cfg = ampere_ubench::config::AmpereConfig::a100();
+    for d in ampere_ubench::tensor::ALL_DTYPES {
+        let t = Instant::now();
+        let src = ampere_ubench::microbench::wmma::fig5_kernel(d, 8);
+        let t_gen = t.elapsed();
+        let t = Instant::now();
+        let prog = ampere_ubench::ptx::parse_program(&src).unwrap();
+        let t_parse = t.elapsed();
+        let t = Instant::now();
+        let tp = ampere_ubench::translate::translate_program(&prog).unwrap();
+        let t_tr = t.elapsed();
+        let t = Instant::now();
+        let mut sim = ampere_ubench::sim::Simulator::new(cfg.clone());
+        sim.trace = ampere_ubench::sass::TraceRecorder::disabled();
+        let t_new = t.elapsed();
+        let t = Instant::now();
+        for ch in 0..4u64 {
+            let base = 0x20_0000u64 + ch * 0x1_0000;
+            for i in 0..1024u64 {
+                sim.mem.dram.write(base + 4 * i, &(1.0f32).to_bits().to_le_bytes());
+            }
+        }
+        let t_seed = t.elapsed();
+        let t = Instant::now();
+        sim.run(&prog, &tp, &[0]).unwrap();
+        let t_run = t.elapsed();
+        println!("{:<10} gen {:?} parse {:?} tr {:?} new {:?} seed {:?} run {:?}",
+            d.key(), t_gen, t_parse, t_tr, t_new, t_seed, t_run);
+    }
+}

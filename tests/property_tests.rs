@@ -1,0 +1,246 @@
+//! Property-based tests over the coordinator's invariants, driven by the
+//! in-tree xorshift PRNG (`util::prng::check` replays failures by seed).
+//!
+//! Invariants covered:
+//! * translation is deterministic and register-safe;
+//! * measured CPI of a dependent chain never beats the independent form;
+//! * clock reads are monotone; the measurement protocol is
+//!   seed-independent;
+//! * the cache model obeys LRU capacity bounds for any stride/size;
+//! * generated Table V kernels always parse, translate, and run;
+//! * f16/json substrates round-trip arbitrary values.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::microbench::registry::{self, RegClass};
+use ampere_ubench::microbench::{alu, run_measurement, INSTANCES};
+use ampere_ubench::ptx::parse_program;
+use ampere_ubench::sim::Simulator;
+use ampere_ubench::translate::translate_program;
+use ampere_ubench::util::f16;
+use ampere_ubench::util::json;
+use ampere_ubench::util::prng::{check, Rng};
+
+#[test]
+fn prop_every_registry_row_parses_translates_runs() {
+    let cfg = AmpereConfig::a100();
+    check("registry-rows", 40, |rng| {
+        let rows = registry::table5();
+        let row = &rows[rng.below(rows.len() as u64) as usize];
+        let dependent = rng.bool() && alu::can_chain(row);
+        let src = alu::kernel_for(row, dependent);
+        let prog = parse_program(&src).map_err(|e| format!("{}: {e}", row.name))?;
+        let tp = translate_program(&prog).map_err(|e| format!("{}: {e}", row.name))?;
+        prog.validate()?;
+        let mut sim = Simulator::new(cfg.clone());
+        let r = sim
+            .run(&prog, &tp, &[0x100000])
+            .map_err(|e| format!("{}: {e}", row.name))?;
+        if r.clock_reads.len() < 2 {
+            return Err(format!("{}: lost clock reads", row.name));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_translation_is_deterministic() {
+    check("translate-deterministic", 30, |rng| {
+        let rows = registry::table5();
+        let row = &rows[rng.below(rows.len() as u64) as usize];
+        let src = alu::kernel_for(row, false);
+        let prog = parse_program(&src).map_err(|e| e.to_string())?;
+        let a = translate_program(&prog).map_err(|e| e.to_string())?;
+        let b = translate_program(&prog).map_err(|e| e.to_string())?;
+        for (x, y) in a.groups.iter().zip(&b.groups) {
+            if x.mapping() != y.mapping() {
+                return Err(format!("{}: {} vs {}", row.name, x.mapping(), y.mapping()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dependence_never_speeds_up() {
+    let cfg = AmpereConfig::a100();
+    check("dep>=indep", 25, |rng| {
+        let rows = registry::table5();
+        let chainable: Vec<_> = rows.iter().filter(|r| alu::can_chain(r)).collect();
+        let row = chainable[rng.below(chainable.len() as u64) as usize];
+        let indep =
+            run_measurement(&cfg, &alu::kernel_for(row, false), INSTANCES, row.name, false)?;
+        let dep = run_measurement(&cfg, &alu::kernel_for(row, true), INSTANCES, row.name, true)?;
+        if dep.cpi < indep.cpi {
+            return Err(format!("{}: dep {} < indep {}", row.name, dep.cpi, indep.cpi));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_clock_reads_are_monotone() {
+    let cfg = AmpereConfig::a100();
+    check("clock-monotone", 20, |rng| {
+        // Random straight-line arithmetic between many clock reads.
+        let ops = ["add.u32", "mul.lo.u32", "and.b32", "min.u32", "popc.b32"];
+        let mut body = String::new();
+        let reads = 3 + rng.below(4);
+        for i in 0..reads {
+            body.push_str(&format!("mov.u64 %rd{}, %clock64;\n ", 30 + i));
+            let op = rng.pick(&ops);
+            let n = 1 + rng.below(3);
+            for j in 0..n {
+                body.push_str(&format!("{op} %r{}, %r{}, %r7;\n ", 20 + j, 5 + j));
+            }
+        }
+        let src = format!(
+            ".visible .entry k(.param .u64 out) {{ {} {} ret; }}",
+            ampere_ubench::microbench::REG_DECLS,
+            body
+        );
+        let prog = parse_program(&src).map_err(|e| e.to_string())?;
+        let tp = translate_program(&prog).map_err(|e| e.to_string())?;
+        let mut sim = Simulator::new(cfg.clone());
+        let r = sim.run(&prog, &tp, &[0]).map_err(|e| e.to_string())?;
+        for w in r.clock_reads.windows(2) {
+            if w[1] <= w[0] {
+                return Err(format!("clock went backwards: {:?}", r.clock_reads));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_capacity_bound() {
+    use ampere_ubench::memory::Cache;
+    check("cache-lru", 40, |rng| {
+        let line = 64usize << rng.below(2); // 64 or 128
+        let assoc = 1 + rng.below(8) as usize;
+        let sets = 1 + rng.below(64) as usize;
+        let bytes = line * assoc * sets;
+        let mut c = Cache::new(bytes, line, assoc);
+        // working set strictly within capacity, any line-aligned stride
+        // pattern: second pass must be all hits.
+        let lines = (bytes / line) as u64;
+        let used = 1 + rng.below(lines);
+        let addrs: Vec<u64> = (0..used).map(|i| i * line as u64).collect();
+        for a in &addrs {
+            c.access(*a);
+        }
+        for a in &addrs {
+            if !c.access(*a) {
+                return Err(format!(
+                    "miss on warm addr {a} (bytes={bytes}, line={line}, assoc={assoc})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pointer_chase_latency_bounded() {
+    // Any chain the generator can produce must measure within the
+    // [L1 hit, DRAM] bracket.
+    let mut cfg = AmpereConfig::a100();
+    cfg.memory.l2_bytes = 256 * 1024;
+    cfg.memory.l1_bytes = 16 * 1024;
+    check("chase-bounds", 8, |rng| {
+        let ops = ["cv", "cg", "ca"];
+        let op = rng.pick(&ops);
+        let span = 8 * 1024u64 << rng.below(6);
+        let mut body = String::new();
+        for i in 0..8 {
+            body.push_str(&format!(
+                "ld.global.{op}.u64 %rd{}, [%rd{}];\n ",
+                21 + i,
+                20 + i
+            ));
+        }
+        let src = format!(
+            ".visible .entry k(.param .u64 arr) {{ {} ld.param.u64 %rd20, [arr];\n \
+             mov.u64 %rd60, %clock64;\n {} mov.u64 %rd61, %clock64;\n ret; }}",
+            ampere_ubench::microbench::REG_DECLS,
+            body
+        );
+        let prog = parse_program(&src).map_err(|e| e.to_string())?;
+        let tp = translate_program(&prog).map_err(|e| e.to_string())?;
+        let mut sim = Simulator::new(cfg.clone());
+        ampere_ubench::microbench::memory::seed_chain(&mut sim, 0x100000, span, 9);
+        let r = sim.run(&prog, &tp, &[0x100000]).map_err(|e| e.to_string())?;
+        let delta = r.clock_reads[1] - r.clock_reads[0];
+        let per = (delta - 2) / 8;
+        let lo = cfg.memory.l1_hit_latency;
+        let hi = cfg.memory.dram_latency + 20;
+        if !(lo..=hi).contains(&per) {
+            return Err(format!("{op} span {span}: {per} outside [{lo}, {hi}]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f16_roundtrip_through_f32() {
+    check("f16-roundtrip", 200, |rng| {
+        // f32 values that fit in half must round-trip bit-exactly.
+        let h = (rng.next_u32() & 0xFFFF) as u16;
+        let f = f16::f16_bits_to_f32(h);
+        if f.is_finite() {
+            let back = f16::f32_to_f16_bits(f);
+            if back != h {
+                return Err(format!("{h:#06x} -> {f} -> {back:#06x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_value(rng: &mut Rng, depth: u32) -> json::Value {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.bool()),
+            2 => json::Value::Num((rng.range(-1_000_000, 1_000_000) as f64) / 4.0),
+            3 => json::Value::Str(format!("s{}-\"{}\"\n", rng.below(100), rng.below(10))),
+            4 => json::Value::Arr(
+                (0..rng.below(4)).map(|_| random_value(rng, depth + 1)).collect(),
+            ),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), random_value(rng, depth + 1));
+                }
+                json::Value::Obj(m)
+            }
+        }
+    }
+    check("json-roundtrip", 100, |rng| {
+        let v = random_value(rng, 0);
+        let compact = json::parse(&json::to_string(&v)).map_err(|e| e.to_string())?;
+        let pretty = json::parse(&json::to_string_pretty(&v)).map_err(|e| e.to_string())?;
+        if compact != v || pretty != v {
+            return Err(format!("roundtrip mismatch for {v:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_registry_dst_classes_are_consistent() {
+    // Every generated kernel's destination register class must be
+    // declared by REG_DECLS — guards registry typos.
+    check("registry-classes", 114, |rng| {
+        let rows = registry::table5();
+        let row = &rows[rng.below(rows.len() as u64) as usize];
+        let ok = matches!(
+            row.dst,
+            RegClass::H | RegClass::R | RegClass::F | RegClass::Rd | RegClass::Fd | RegClass::P
+        );
+        if !ok {
+            return Err(format!("{}: bad dst class", row.name));
+        }
+        Ok(())
+    });
+}
