@@ -1,14 +1,16 @@
-//! Bench for Fig. 4: the 32- vs 64-bit clock-register experiment.
+//! Bench for Fig. 4: the 32- vs 64-bit clock-register experiment,
+//! through the shared engine.
 
 use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::insights;
 use ampere_ubench::util::bench::{black_box, Bench};
 
 fn main() {
-    let cfg = AmpereConfig::a100();
+    let engine = Engine::new(AmpereConfig::a100());
     let mut b = Bench::from_args("fig4_clock_width");
     b.bench("fig4_clock_width", || {
-        let f = insights::fig4(black_box(&cfg)).unwrap();
+        let f = insights::fig4_with(black_box(&engine)).unwrap();
         assert_eq!(f.cpi_32bit, 13, "barrier cost regressed");
         assert_eq!(f.cpi_64bit, 2);
         f

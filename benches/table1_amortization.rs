@@ -1,17 +1,19 @@
 //! Bench for Table I: first-launch-overhead amortization (1..4 add.u32).
 //!
-//! Measures the L3 hot path (parse → translate → simulate); the
-//! assertions pin the paper's CPI values on every sample.
+//! Measures the L3 hot path through the engine (cached kernels, pooled
+//! simulators); the assertions pin the paper's CPI values on every
+//! sample.
 
 use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::alu;
 use ampere_ubench::util::bench::{black_box, Bench};
 
 fn main() {
-    let cfg = AmpereConfig::a100();
+    let engine = Engine::new(AmpereConfig::a100());
     let mut b = Bench::from_args("table1_amortization");
     b.bench("table1_amortization", || {
-        let rows = alu::run_table1(black_box(&cfg)).unwrap();
+        let rows = alu::run_table1_with(black_box(&engine)).unwrap();
         for r in &rows {
             assert_eq!(r.cpi, r.paper_cpi, "Table I regressed at n = {}", r.n);
         }

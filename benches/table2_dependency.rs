@@ -1,15 +1,16 @@
 //! Bench for Table II: dependent vs independent CPI for the paper's
-//! five instructions.
+//! five instructions, through the shared engine.
 
 use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::alu;
 use ampere_ubench::util::bench::{black_box, Bench};
 
 fn main() {
-    let cfg = AmpereConfig::a100();
+    let engine = Engine::new(AmpereConfig::a100());
     let mut b = Bench::from_args("table2_dependency");
     b.bench("table2_dependency", || {
-        let rows = alu::run_table2(black_box(&cfg)).unwrap();
+        let rows = alu::run_table2_with(black_box(&engine)).unwrap();
         for r in &rows {
             assert_eq!(r.dep_cpi, r.paper_dep, "{} dep regressed", r.name);
             assert_eq!(r.indep_cpi, r.paper_indep, "{} indep regressed", r.name);

@@ -3,15 +3,17 @@
 //! amortization — the paper's measured-vs-theoretical gap).
 
 use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::wmma;
 use ampere_ubench::tensor::{throughput, WmmaDtype};
 use ampere_ubench::util::bench::{black_box, Bench};
 
 fn main() {
     let cfg = AmpereConfig::a100();
+    let engine = Engine::new(cfg.clone());
     let mut b = Bench::from_args("table3_tensor_core");
     b.bench("table3_tensor_core", || {
-        let rows = wmma::run_table3(black_box(&cfg)).unwrap();
+        let rows = wmma::run_table3_with(black_box(&engine)).unwrap();
         for r in &rows {
             assert_eq!(r.cycles, r.paper_cycles, "{} regressed", r.dtype_key);
         }

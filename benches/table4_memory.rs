@@ -1,8 +1,11 @@
 //! Bench for Table IV: pointer-chase latency for every memory level.
 //! Uses the scaled-cache config (identical latencies, smaller warm
-//! loops) so samples stay fast.
+//! loops) so samples stay fast.  The shared engine means steady-state
+//! samples exercise the simulator pool's in-place reset of the cache
+//! arrays instead of reallocating them per sample.
 
 use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::memory;
 use ampere_ubench::util::bench::{black_box, Bench};
 
@@ -10,10 +13,11 @@ fn main() {
     let mut cfg = AmpereConfig::a100();
     cfg.memory.l2_bytes = 512 * 1024;
     cfg.memory.l1_bytes = 32 * 1024;
+    let engine = Engine::new(cfg);
 
     let mut b = Bench::from_args("table4_memory");
     b.bench("table4_memory", || {
-        let rows = memory::run_table4(black_box(&cfg)).unwrap();
+        let rows = memory::run_table4_with(black_box(&engine)).unwrap();
         for r in &rows {
             let rel = (r.cpi as f64 - r.paper as f64).abs() / r.paper as f64;
             assert!(rel < 0.06, "{:?} regressed: {} vs {}", r.level, r.cpi, r.paper);

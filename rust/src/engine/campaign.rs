@@ -1,0 +1,179 @@
+//! The full paper evaluation as one fine-grained job batch.
+//!
+//! Every table row, figure and insight becomes one job (~140 total);
+//! the engine's queue spreads them across all cores and returns them in
+//! input order, so [`run`] reassembles the exact `CampaignResult` the
+//! old table-per-thread harness produced — the report never depends on
+//! scheduling.
+
+use super::Engine;
+use crate::harness::CampaignResult;
+use crate::microbench::{alu, insights, memory, registry, wmma};
+use crate::tensor::ALL_DTYPES;
+
+/// One row-level result, tagged with the experiment it belongs to.
+enum JobOut {
+    T1(alu::Amortization),
+    T2(alu::DepIndep),
+    T3(wmma::WmmaResult),
+    T4(memory::MemResult),
+    T5(alu::RowResult),
+    F4(insights::Fig4),
+    I1(insights::Insight1),
+    I2(insights::SignPair),
+    I3(insights::Insight3),
+}
+
+type Job<'a> = Box<dyn FnOnce() -> Result<JobOut, String> + Send + 'a>;
+
+/// Run the complete campaign on `engine`.
+pub fn run(engine: &Engine) -> Result<CampaignResult, String> {
+    let mut jobs: Vec<Job<'_>> = Vec::new();
+
+    // Table I: one job per instance count.
+    for n in 1..=4u64 {
+        jobs.push(Box::new(move || alu::table1_row_with(engine, n).map(JobOut::T1)));
+    }
+    // Table II: one job per (dep, indep) instruction pair, rows
+    // resolved against the registry once up front.
+    for (row, paper_dep, paper_indep) in alu::table2_rows()? {
+        jobs.push(Box::new(move || {
+            alu::table2_row_with(engine, &row, paper_dep, paper_indep).map(JobOut::T2)
+        }));
+    }
+    // Table III: one job per WMMA dtype.
+    for d in ALL_DTYPES {
+        jobs.push(Box::new(move || wmma::measure_with(engine, d).map(JobOut::T3)));
+    }
+    // Table IV: one job per memory level.
+    for level in memory::TABLE4_LEVELS {
+        jobs.push(Box::new(move || {
+            memory::measure_level_with(engine, level).map(JobOut::T4)
+        }));
+    }
+    // Table V: one job per registry row — the bulk of the campaign.
+    for row in registry::table5() {
+        jobs.push(Box::new(move || alu::measure_row_with(engine, &row).map(JobOut::T5)));
+    }
+    // Fig. 4 and the §V-A insights.
+    jobs.push(Box::new(move || insights::fig4_with(engine).map(JobOut::F4)));
+    jobs.push(Box::new(move || insights::insight1_with(engine).map(JobOut::I1)));
+    for (u_name, s_name, expects) in insights::SIGN_PAIRS {
+        jobs.push(Box::new(move || {
+            insights::sign_pair_with(engine, u_name, s_name, expects).map(JobOut::I2)
+        }));
+    }
+    for op in insights::INSIGHT3_OPS {
+        jobs.push(Box::new(move || {
+            insights::insight3_op_with(engine, op).map(JobOut::I3)
+        }));
+    }
+
+    // The pre-engine harness converted a panicking experiment thread
+    // into Err("<table> panicked"); keep that contract at row
+    // granularity so `repro campaign` reports a failure instead of
+    // aborting (the panic backtrace still reaches stderr via the hook).
+    let guarded: Vec<Job<'_>> = jobs
+        .into_iter()
+        .enumerate()
+        .map(|(i, job)| -> Job<'_> {
+            Box::new(move || {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).unwrap_or_else(
+                    |_| Err(format!("campaign job #{i} panicked (see stderr backtrace)")),
+                )
+            })
+        })
+        .collect();
+    let outs = engine.run_all(guarded);
+
+    // Demux in input order: per-table ordering is exactly push order.
+    let mut table1 = Vec::new();
+    let mut table2 = Vec::new();
+    let mut table3 = Vec::new();
+    let mut table4 = Vec::new();
+    let mut table5 = Vec::new();
+    let mut fig4 = None;
+    let mut insight1 = None;
+    let mut insight2 = Vec::new();
+    let mut insight3 = Vec::new();
+    for out in outs {
+        match out? {
+            JobOut::T1(x) => table1.push(x),
+            JobOut::T2(x) => table2.push(x),
+            JobOut::T3(x) => table3.push(x),
+            JobOut::T4(x) => table4.push(x),
+            JobOut::T5(x) => table5.push(x),
+            JobOut::F4(x) => fig4 = Some(x),
+            JobOut::I1(x) => insight1 = Some(x),
+            JobOut::I2(x) => insight2.push(x),
+            JobOut::I3(x) => insight3.push(x),
+        }
+    }
+
+    Ok(CampaignResult {
+        table1,
+        table2,
+        table3,
+        table4,
+        table5,
+        fig4: fig4.ok_or_else(|| "campaign produced no fig4".to_string())?,
+        insight1: insight1.ok_or_else(|| "campaign produced no insight1".to_string())?,
+        insight2,
+        insight3,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AmpereConfig;
+
+    fn test_cfg() -> AmpereConfig {
+        let mut c = AmpereConfig::a100();
+        c.memory.l2_bytes = 512 * 1024;
+        c.memory.l1_bytes = 32 * 1024;
+        c
+    }
+
+    #[test]
+    fn row_level_schedule_matches_serial_execution() {
+        // The same engine config run 1-wide and N-wide must agree on
+        // every row — scheduling can never leak into results.
+        let serial = run(&Engine::with_workers(test_cfg(), 1)).unwrap();
+        let parallel = run(&Engine::new(test_cfg())).unwrap();
+        assert_eq!(serial.summary(), parallel.summary());
+        assert_eq!(serial.table5.len(), parallel.table5.len());
+        for (a, b) in serial.table5.iter().zip(&parallel.table5) {
+            assert_eq!(a.name, b.name, "row order must be deterministic");
+            assert_eq!(a.measured.cpi, b.measured.cpi, "{}", a.name);
+            assert_eq!(a.measured.mapping, b.measured.mapping, "{}", a.name);
+        }
+        for (a, b) in serial.table4.iter().zip(&parallel.table4) {
+            assert_eq!(a.level, b.level);
+            assert_eq!(a.cpi, b.cpi, "{:?}", a.level);
+        }
+    }
+
+    #[test]
+    fn campaign_amortises_kernel_compilation() {
+        let engine = Engine::new(test_cfg());
+        run(&engine).unwrap();
+        let first = engine.cache_stats();
+        assert!(first.entries > 100, "campaign compiles >100 distinct kernels");
+        run(&engine).unwrap();
+        let second = engine.cache_stats();
+        assert_eq!(
+            second.entries, first.entries,
+            "a repeated campaign must not compile anything new"
+        );
+        assert!(
+            second.hits >= first.hits + first.entries as u64,
+            "second pass served from cache: {second:?} vs {first:?}"
+        );
+        let pool = engine.pool_stats();
+        assert!(
+            (pool.created as usize) <= engine.workers(),
+            "pool never exceeds worker count: {pool:?}"
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Simulator pool: reusable `Simulator` instances with reset-on-return.
+//!
+//! `Simulator::new` builds a `MemorySystem` whose cache way arrays and
+//! shared buffer are allocated lazily but, once touched, are multi-MB;
+//! building one per measurement made construction a visible fraction of
+//! the campaign.  The pool instead checks an instance out, lets the job
+//! customise it (fuel, trace mode, seeded DRAM), and on drop resets it
+//! to a fresh-equivalent state (see `Simulator::reset`, which the
+//! equivalence test in `sim::core` pins to byte-identical results) and
+//! returns it for the next job.
+
+use crate::config::AmpereConfig;
+use crate::sim::Simulator;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Pool observability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Simulators constructed from scratch.
+    pub created: u64,
+    /// Checkouts served by a recycled instance.
+    pub reused: u64,
+    /// Instances currently idle in the pool.
+    pub idle: usize,
+}
+
+/// The pool.  Unbounded: it never holds more simulators than the peak
+/// number of concurrently running jobs (one per worker thread).
+pub struct SimPool {
+    cfg: AmpereConfig,
+    idle: Mutex<Vec<Simulator>>,
+    created: AtomicU64,
+    reused: AtomicU64,
+}
+
+impl SimPool {
+    pub fn new(cfg: AmpereConfig) -> Self {
+        Self {
+            cfg,
+            idle: Mutex::new(Vec::new()),
+            created: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+        }
+    }
+
+    /// Check a simulator out.  The guard derefs to `&mut Simulator` and
+    /// returns the instance (reset) on drop — including on panic, so a
+    /// failing job cannot poison the next one.
+    pub fn checkout(&self) -> PooledSim<'_> {
+        let recycled = self.idle.lock().unwrap().pop();
+        let sim = match recycled {
+            Some(s) => {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                self.created.fetch_add(1, Ordering::Relaxed);
+                Simulator::new(self.cfg.clone())
+            }
+        };
+        PooledSim { pool: self, sim: Some(sim) }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            created: self.created.load(Ordering::Relaxed),
+            reused: self.reused.load(Ordering::Relaxed),
+            idle: self.idle.lock().unwrap().len(),
+        }
+    }
+}
+
+/// RAII checkout guard.
+pub struct PooledSim<'a> {
+    pool: &'a SimPool,
+    sim: Option<Simulator>,
+}
+
+impl Deref for PooledSim<'_> {
+    type Target = Simulator;
+
+    fn deref(&self) -> &Simulator {
+        self.sim.as_ref().expect("simulator present until drop")
+    }
+}
+
+impl DerefMut for PooledSim<'_> {
+    fn deref_mut(&mut self) -> &mut Simulator {
+        self.sim.as_mut().expect("simulator present until drop")
+    }
+}
+
+impl Drop for PooledSim<'_> {
+    fn drop(&mut self) {
+        if let Some(mut sim) = self.sim.take() {
+            sim.reset();
+            // On a poisoned pool (another job panicked while pushing)
+            // just let this instance drop; correctness never depends on
+            // recycling.
+            if let Ok(mut idle) = self.pool.idle.lock() {
+                idle.push(sim);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parse_program;
+    use crate::translate::translate_program;
+
+    #[test]
+    fn sequential_checkouts_reuse_one_instance() {
+        let pool = SimPool::new(AmpereConfig::a100());
+        for _ in 0..5 {
+            let _sim = pool.checkout();
+        }
+        let s = pool.stats();
+        assert_eq!(s.created, 1, "one instance serves sequential use");
+        assert_eq!(s.reused, 4);
+        assert_eq!(s.idle, 1);
+    }
+
+    #[test]
+    fn recycled_simulator_behaves_fresh() {
+        let pool = SimPool::new(AmpereConfig::a100());
+        let src = ".visible .entry k(.param .u64 p) { .reg .b64 %rd<9>; \
+                   ld.param.u64 %rd1, [p]; st.global.u64 [%rd1], 9; \
+                   ld.global.ca.u64 %rd2, [%rd1]; ret; }";
+        let prog = parse_program(src).unwrap();
+        let tp = translate_program(&prog).unwrap();
+
+        let first = {
+            let mut sim = pool.checkout();
+            sim.run(&prog, &tp, &[0x1000]).unwrap()
+        };
+        let second = {
+            let mut sim = pool.checkout();
+            sim.run(&prog, &tp, &[0x1000]).unwrap()
+        };
+        assert_eq!(first, second, "recycled run must equal the first");
+        assert_eq!(pool.stats().created, 1);
+    }
+
+    #[test]
+    fn concurrent_checkouts_create_at_most_one_per_job() {
+        let pool = SimPool::new(AmpereConfig::a100());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..3 {
+                        let _sim = pool.checkout();
+                    }
+                });
+            }
+        });
+        let s = pool.stats();
+        assert!(s.created <= 4, "never more instances than concurrent jobs");
+        assert_eq!(s.created + s.reused, 12);
+        assert_eq!(s.idle as u64, s.created);
+    }
+}

@@ -1,0 +1,116 @@
+//! Fine-grained work queue: run a batch of independent jobs across all
+//! cores with deterministic result ordering.
+//!
+//! The campaign's unit of work is one table *row* (one or two simulated
+//! kernels), not one table — the seed's table-level threads left the
+//! whole Table V sweep on a single core.  Workers claim job indices from
+//! an atomic counter (natural load balancing: cheap ALU rows and
+//! expensive memory rows interleave freely) and write results into the
+//! slot of the claimed index, so the output order equals the input order
+//! regardless of scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count the engine defaults to: one per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run every job, `workers`-wide, returning results in input order.
+///
+/// A panicking job propagates the panic after all workers finish (via
+/// `std::thread::scope`), matching the behaviour of running the jobs
+/// inline.
+pub fn run_indexed<T, F>(jobs: Vec<F>, workers: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return jobs.into_iter().map(|job| job()).collect();
+    }
+
+    let slots: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = slots[i].lock().unwrap().take();
+                if let Some(job) = job {
+                    let out = job();
+                    *results[i].lock().unwrap() = Some(out);
+                }
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("every claimed job stores its result")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        // Jobs finish in scrambled wall-clock order; outputs must not.
+        let jobs: Vec<_> = (0..64usize)
+            .map(|i| {
+                move || {
+                    if i % 7 == 0 {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                    i * 3
+                }
+            })
+            .collect();
+        let out = run_indexed(jobs, 8);
+        assert_eq!(out, (0..64usize).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let counter = AtomicU64::new(0);
+        let jobs: Vec<_> = (0..100)
+            .map(|_| || counter.fetch_add(1, Ordering::Relaxed))
+            .collect();
+        let mut claimed: Vec<u64> = run_indexed(jobs, 5);
+        claimed.sort_unstable();
+        assert_eq!(claimed, (0..100u64).collect::<Vec<_>>());
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn single_worker_and_empty_batches_degrade_gracefully() {
+        let out = run_indexed((0..5).map(|i| move || i).collect::<Vec<_>>(), 1);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        let none: Vec<i32> = run_indexed(Vec::<fn() -> i32>::new(), 8);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs_is_fine() {
+        let out = run_indexed((0..3).map(|i| move || i).collect::<Vec<_>>(), 64);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+}

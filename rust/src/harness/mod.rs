@@ -1,14 +1,15 @@
-//! Campaign orchestrator: runs the full paper evaluation as concurrent
-//! benchmark jobs and aggregates the report.
+//! Campaign orchestrator: runs the full paper evaluation and aggregates
+//! the report.
 //!
-//! The simulator is CPU-bound and single-threaded per kernel, so each
-//! job runs on its own OS thread (`std::thread::scope`); jobs are
-//! independent (each owns a fresh `Simulator`), making the campaign
-//! embarrassingly parallel.  Results are collected in deterministic
-//! order regardless of completion order — the report never depends on
-//! scheduling.
+//! Execution is delegated to the [`engine`](crate::engine): every table
+//! *row* becomes one job on a fine-grained work queue spanning all
+//! cores, kernels are compiled once through the content-addressed cache,
+//! and simulators come from a reset-on-return pool.  Results are
+//! collected in deterministic (input) order regardless of completion
+//! order — the report never depends on scheduling.
 
 use crate::config::AmpereConfig;
+use crate::engine::{campaign, Engine};
 use crate::microbench::{alu, insights, memory, wmma};
 use crate::report;
 use crate::util::json::Value;
@@ -100,38 +101,16 @@ impl CampaignSummary {
     }
 }
 
-/// Run the full campaign, one OS thread per experiment.
+/// Run the full campaign on a transient [`Engine`]: every table row is
+/// one scheduled job across all cores (see `engine::campaign`).
 pub fn run_campaign_blocking(cfg: AmpereConfig) -> Result<CampaignResult, String> {
-    std::thread::scope(|s| {
-        let t1 = s.spawn(|| alu::run_table1(&cfg));
-        let t2 = s.spawn(|| alu::run_table2(&cfg));
-        let t3 = s.spawn(|| wmma::run_table3(&cfg));
-        let t4 = s.spawn(|| memory::run_table4(&cfg));
-        let t5 = s.spawn(|| alu::run_table5(&cfg));
-        let f4 = s.spawn(|| insights::fig4(&cfg));
-        let i1 = s.spawn(|| insights::insight1(&cfg));
-        let i2 = s.spawn(|| insights::insight2(&cfg));
-        let i3 = s.spawn(|| insights::insight3(&cfg));
+    run_campaign_with(&Engine::new(cfg))
+}
 
-        fn join<T>(
-            name: &str,
-            h: std::thread::ScopedJoinHandle<'_, Result<T, String>>,
-        ) -> Result<T, String> {
-            h.join().map_err(|_| format!("{name} panicked"))?
-        }
-
-        Ok(CampaignResult {
-            table1: join("table1", t1)?,
-            table2: join("table2", t2)?,
-            table3: join("table3", t3)?,
-            table4: join("table4", t4)?,
-            table5: join("table5", t5)?,
-            fig4: join("fig4", f4)?,
-            insight1: join("insight1", i1)?,
-            insight2: join("insight2", i2)?,
-            insight3: join("insight3", i3)?,
-        })
-    })
+/// Run the full campaign on an existing engine — repeated campaigns
+/// (benches, serving) reuse its kernel cache and simulator pool.
+pub fn run_campaign_with(engine: &Engine) -> Result<CampaignResult, String> {
+    campaign::run(engine)
 }
 
 #[cfg(test)]
@@ -176,5 +155,31 @@ mod tests {
         for (x, y) in a.table5.iter().zip(&b.table5) {
             assert_eq!(x.measured.cpi, y.measured.cpi, "{}", x.name);
         }
+
+        // Engine reuse: a warm kernel cache and recycled simulators must
+        // not change any measurement, and the fine-grained scheduler
+        // must keep row order stable.
+        let engine = Engine::new(test_cfg());
+        let c = run_campaign_with(&engine).unwrap();
+        let d = run_campaign_with(&engine).unwrap();
+        assert_eq!(c.summary(), a.summary(), "fresh engine matches transient path");
+        assert_eq!(d.summary(), a.summary(), "warm engine matches too");
+        for (x, y) in a.table5.iter().zip(&d.table5) {
+            assert_eq!(x.name, y.name, "row order drifted");
+            assert_eq!(x.measured.cpi, y.measured.cpi, "{}", x.name);
+            assert_eq!(x.measured.mapping, y.measured.mapping, "{}", x.name);
+            assert_eq!(x.dep_cpi, y.dep_cpi, "{}", x.name);
+        }
+        for (x, y) in a.table4.iter().zip(&d.table4) {
+            assert_eq!((x.level, x.cpi), (y.level, y.cpi));
+        }
+        for (x, y) in a.table2.iter().zip(&d.table2) {
+            assert_eq!((x.dep_cpi, x.indep_cpi), (y.dep_cpi, y.indep_cpi), "{}", x.name);
+        }
+        let stats = engine.cache_stats();
+        assert!(
+            stats.hits > stats.misses,
+            "second campaign on one engine must be cache-served: {stats:?}"
+        );
     }
 }

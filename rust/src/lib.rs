@@ -24,12 +24,18 @@
 //! * [`trace`] — dynamic SASS trace capture (the PPT-GPU tool analogue).
 //! * [`microbench`] — the paper's actual contribution: the microbenchmark
 //!   generators + measurement protocol.
-//! * [`harness`] — async campaign orchestrator (tokio) running the full
-//!   evaluation; [`report`] renders the paper's tables.
+//! * [`engine`] — the campaign execution engine: content-addressed
+//!   kernel cache (each distinct PTX source parses/translates once),
+//!   simulator pool with cheap reset-on-return, and a fine-grained work
+//!   queue that schedules every table *row* across all cores with
+//!   deterministic result ordering.
+//! * [`harness`] — campaign orchestrator running the full evaluation on
+//!   the engine; [`report`] renders the paper's tables.
 //! * [`runtime`] — PJRT client loading the AOT JAX/Pallas artifacts; the
 //!   WMMA numerics oracle on the request path (python is build-time only).
 
 pub mod config;
+pub mod engine;
 pub mod harness;
 pub mod memory;
 pub mod microbench;
@@ -44,3 +50,4 @@ pub mod translate;
 pub mod util;
 
 pub use config::AmpereConfig;
+pub use engine::Engine;

@@ -14,6 +14,7 @@
 //! ```
 
 use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::{alu, insights, memory, registry, wmma};
 use ampere_ubench::tensor::{movm_plan, ALL_DTYPES};
 use ampere_ubench::util::json::{to_string_pretty, Value};
@@ -87,36 +88,46 @@ fn config(small: bool) -> AmpereConfig {
 fn main() -> anyhow::Result<()> {
     let args = parse_args();
     let cfg = config(args.small);
+    // One engine per invocation: every command below shares its kernel
+    // cache, simulator pool and row-level scheduler.
+    let engine = Engine::new(cfg.clone());
 
     match args.cmd.as_str() {
         "campaign" => {
-            let r = harness::run_campaign_blocking(cfg).map_err(anyhow::Error::msg)?;
+            let r = harness::run_campaign_with(&engine).map_err(anyhow::Error::msg)?;
             println!("{}", r.render());
             println!("summary: {}", to_string_pretty(&r.summary().to_json()));
+            let cs = engine.cache_stats();
+            let ps = engine.pool_stats();
+            println!(
+                "engine: {} kernels compiled, {} cache hits, {} sims created ({} reuses), {} workers",
+                cs.entries, cs.hits, ps.created, ps.reused, engine.workers()
+            );
         }
         "table1" => {
-            let t = alu::run_table1(&cfg).map_err(anyhow::Error::msg)?;
+            let t = alu::run_table1_with(&engine).map_err(anyhow::Error::msg)?;
             println!("{}", report::table1(&t));
         }
         "table2" => {
-            let t = alu::run_table2(&cfg).map_err(anyhow::Error::msg)?;
+            let t = alu::run_table2_with(&engine).map_err(anyhow::Error::msg)?;
             println!("{}", report::table2(&t));
         }
         "table3" => {
-            let t = wmma::run_table3(&cfg).map_err(anyhow::Error::msg)?;
+            let t = wmma::run_table3_with(&engine).map_err(anyhow::Error::msg)?;
             println!("{}", report::table3(&t));
         }
         "table4" => {
             if args.faithful {
                 let span = cfg.memory.l2_bytes as u64 + cfg.memory.l2_bytes as u64 / 4;
-                let g = memory::run_global_faithful(&cfg, span).map_err(anyhow::Error::msg)?;
+                let g =
+                    memory::run_global_faithful_with(&engine, span).map_err(anyhow::Error::msg)?;
                 println!("faithful Fig. 2 global chase: {} cycles/load (paper 290)", g.cpi);
             }
-            let t = memory::run_table4(&cfg).map_err(anyhow::Error::msg)?;
+            let t = memory::run_table4_with(&engine).map_err(anyhow::Error::msg)?;
             println!("{}", report::table4(&t));
         }
         "table5" => {
-            let t = alu::run_table5(&cfg).map_err(anyhow::Error::msg)?;
+            let t = alu::run_table5_with(&engine).map_err(anyhow::Error::msg)?;
             if args.json {
                 let arr: Vec<Value> = t
                     .iter()
@@ -136,7 +147,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "fig4" => {
-            let f = insights::fig4(&cfg).map_err(anyhow::Error::msg)?;
+            let f = insights::fig4_with(&engine).map_err(anyhow::Error::msg)?;
             println!("{}", report::fig4(&f));
             println!("32-bit dynamic SASS: {:?}", f.sass_32bit);
         }
@@ -148,9 +159,9 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "insights" => {
-            let i1 = insights::insight1(&cfg).map_err(anyhow::Error::msg)?;
-            let i2 = insights::insight2(&cfg).map_err(anyhow::Error::msg)?;
-            let i3 = insights::insight3(&cfg).map_err(anyhow::Error::msg)?;
+            let i1 = insights::insight1_with(&engine).map_err(anyhow::Error::msg)?;
+            let i2 = insights::insight2_with(&engine).map_err(anyhow::Error::msg)?;
+            let i3 = insights::insight3_with(&engine).map_err(anyhow::Error::msg)?;
             println!("{}", report::insights(&i1, &i2, &i3));
         }
         "movm" => {

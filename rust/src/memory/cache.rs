@@ -103,6 +103,18 @@ impl Cache {
         }
     }
 
+    /// Return to the exact state of a freshly constructed cache with the
+    /// same geometry, reusing the way-array allocation (the A100 L2 way
+    /// array is ~8 MB — the simulator pool resets instead of rebuilding).
+    pub fn reset(&mut self) {
+        for w in &mut self.sets {
+            *w = Way::default();
+        }
+        self.tick = 0;
+        self.hits = 0;
+        self.misses = 0;
+    }
+
     pub fn line_bytes(&self) -> usize {
         1 << self.line_shift
     }
@@ -162,6 +174,22 @@ mod tests {
         }
         for a in (0..4096u64).step_by(64) {
             assert!(c.access(a), "addr {a} should hit on pass 2");
+        }
+    }
+
+    #[test]
+    fn reset_restores_fresh_state() {
+        let mut c = Cache::new(1024, 64, 2);
+        c.access(0);
+        c.access(64);
+        c.access(0);
+        c.reset();
+        assert_eq!((c.hits, c.misses), (0, 0));
+        assert!(!c.probe(0) && !c.probe(64), "no line survives reset");
+        // Behaviour after reset matches a fresh cache exactly.
+        let mut fresh = Cache::new(1024, 64, 2);
+        for a in [0u64, 64, 0, 128, 1024, 64] {
+            assert_eq!(c.access(a), fresh.access(a), "addr {a}");
         }
     }
 

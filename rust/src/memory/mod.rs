@@ -76,6 +76,23 @@ impl Dram {
     pub fn allocated_pages(&self) -> usize {
         self.pages.len()
     }
+
+    /// Make every address read 0 again, as in a fresh `Dram`.
+    ///
+    /// Small footprints (the common microbenchmark case) zero the
+    /// already-allocated pages in place so the next run reuses them;
+    /// past a threshold the page map is dropped instead — zeroing tens
+    /// of MB would cost more than faulting fresh pages.
+    pub fn reset(&mut self) {
+        const REUSE_LIMIT_PAGES: usize = 4096; // 16 MiB
+        if self.pages.len() > REUSE_LIMIT_PAGES {
+            self.pages.clear();
+        } else {
+            for p in self.pages.values_mut() {
+                p[..].fill(0);
+            }
+        }
+    }
 }
 
 /// An access outcome: the serviced level and total issue-to-data latency.
@@ -277,6 +294,27 @@ impl MemorySystem {
             c.flush();
         }
     }
+
+    /// Return to a state observationally identical to
+    /// `MemorySystem::new(&self.cfg)` while *reusing* every large
+    /// allocation: the multi-MB cache way arrays are reset in place, the
+    /// shared-memory buffer is zeroed rather than reallocated, and DRAM
+    /// pages are recycled.  This is what makes a pooled simulator cheap
+    /// to hand out per kernel (see `engine::pool`).
+    pub fn reset(&mut self) {
+        self.dram.reset();
+        if let Some(c) = &mut self.l1 {
+            c.reset();
+        }
+        if let Some(c) = &mut self.l2 {
+            c.reset();
+        }
+        // Keep the allocation: `self.shared = vec![0u8; …]` here would
+        // redo a 164 KiB allocation per kernel.
+        self.shared.fill(0);
+        self.loads = 0;
+        self.stores = 0;
+    }
 }
 
 #[cfg(test)]
@@ -371,6 +409,29 @@ mod tests {
             }
         }
         assert_eq!(l2, total, "entire 2 MiB set should be L2-resident");
+    }
+
+    #[test]
+    fn reset_is_observationally_fresh_and_reuses_allocations() {
+        let mut m = sys();
+        m.dram.write_u64(0x40, 0xFEED);
+        m.load_global(0x40, 64, CacheOp::Ca); // fill L1 + L2
+        m.store_shared(8, 64, 0x77);
+        let shared_ptr = m.shared.as_ptr();
+        let shared_len = m.shared.len();
+        m.reset();
+        // values gone, buffers reused
+        assert_eq!(m.dram.read_u64(0x40), 0);
+        let (v, _, _) = m.load_shared(8, 64);
+        assert_eq!(v, 0);
+        assert_eq!(m.shared.as_ptr(), shared_ptr, "shared buffer must be reused");
+        assert_eq!(m.shared.len(), shared_len);
+        // caches cold again: first load after reset is a DRAM miss
+        let (_, lat, by) = m.load_global(0x40, 64, CacheOp::Ca);
+        assert_eq!(lat, 290);
+        assert_eq!(by, ServicedBy::Dram);
+        // counters rewound (loads counted since reset: shared + global)
+        assert_eq!((m.loads, m.stores), (2, 0));
     }
 
     #[test]

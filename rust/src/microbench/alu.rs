@@ -6,8 +6,11 @@
 //! grades the result against the paper's printed cycles and SASS mapping.
 
 use super::registry::{self, RegClass, Row};
-use super::{measurement_kernel, run_measurement, MatchGrade, Measurement, INSTANCES};
+use super::{
+    measurement_kernel, run_measurement, run_measurement_with, MatchGrade, Measurement, INSTANCES,
+};
 use crate::config::AmpereConfig;
+use crate::engine::Engine;
 
 /// A Table V row's full measurement outcome.
 #[derive(Debug, Clone)]
@@ -69,13 +72,33 @@ pub fn can_chain(row: &Row) -> bool {
 }
 
 /// Measure one row (independent + optional dependent variant).
+///
+/// Standalone form; campaign-scale sweeps go through
+/// [`measure_row_with`] so repeated rows share compiled kernels and
+/// pooled simulators.
 pub fn measure_row(cfg: &AmpereConfig, row: &Row) -> Result<RowResult, String> {
+    measure_row_inner(row, |src, dependent| {
+        run_measurement(cfg, src, INSTANCES, row.name, dependent)
+    })
+}
+
+/// Engine-backed form of [`measure_row`].
+pub fn measure_row_with(engine: &Engine, row: &Row) -> Result<RowResult, String> {
+    measure_row_inner(row, |src, dependent| {
+        run_measurement_with(engine, src, INSTANCES, row.name, dependent)
+    })
+}
+
+fn measure_row_inner(
+    row: &Row,
+    mut measure: impl FnMut(&str, bool) -> Result<Measurement, String>,
+) -> Result<RowResult, String> {
     let indep_src = kernel_for(row, false);
-    let measured = run_measurement(cfg, &indep_src, INSTANCES, row.name, false)?;
+    let measured = measure(&indep_src, false)?;
 
     let dep_cpi = if can_chain(row) {
         let dep_src = kernel_for(row, true);
-        Some(run_measurement(cfg, &dep_src, INSTANCES, row.name, true)?.cpi)
+        Some(measure(&dep_src, true)?.cpi)
     } else {
         None
     };
@@ -98,12 +121,20 @@ fn normalize(s: &str) -> String {
     s.replace(' ', "").to_uppercase()
 }
 
-/// Run the full Table V sweep.
+/// Run the full Table V sweep (transient engine; see
+/// [`run_table5_with`]).
 pub fn run_table5(cfg: &AmpereConfig) -> Result<Vec<RowResult>, String> {
-    registry::table5()
-        .iter()
-        .map(|row| measure_row(cfg, row))
-        .collect()
+    run_table5_with(&Engine::new(cfg.clone()))
+}
+
+/// Table V over an engine: one scheduled job per row, results in
+/// registry order.
+pub fn run_table5_with(engine: &Engine) -> Result<Vec<RowResult>, String> {
+    let jobs: Vec<_> = registry::table5()
+        .into_iter()
+        .map(|row| move || measure_row_with(engine, &row))
+        .collect();
+    engine.run_all(jobs).into_iter().collect()
 }
 
 /// Table II: dependent vs independent CPI for the paper's five rows.
@@ -116,26 +147,56 @@ pub struct DepIndep {
     pub paper_indep: u64,
 }
 
-pub fn run_table2(cfg: &AmpereConfig) -> Result<Vec<DepIndep>, String> {
+/// One Table II row on an engine.  Takes the resolved registry [`Row`]
+/// so per-row jobs don't each rebuild the registry (see
+/// [`table2_rows`] for the lookup).
+pub fn table2_row_with(
+    engine: &Engine,
+    row: &Row,
+    paper_dep: u64,
+    paper_indep: u64,
+) -> Result<DepIndep, String> {
+    let name = row.name;
+    let indep = run_measurement_with(engine, &kernel_for(row, false), INSTANCES, name, false)?;
+    let dep = run_measurement_with(engine, &kernel_for(row, true), INSTANCES, name, true)?;
+    Ok(DepIndep {
+        name: name.to_string(),
+        dep_cpi: dep.cpi,
+        indep_cpi: indep.cpi,
+        paper_dep,
+        paper_indep,
+    })
+}
+
+/// Resolve Table II's instruction names against the registry once,
+/// pairing each row with its paper (dep, indep) cycles.
+pub fn table2_rows() -> Result<Vec<(Row, u64, u64)>, String> {
     let rows = registry::table5();
     registry::table2()
         .into_iter()
         .map(|(name, paper_dep, paper_indep)| {
-            let row = rows
-                .iter()
+            rows.iter()
                 .find(|r| r.name == name)
-                .ok_or_else(|| format!("{name} not in registry"))?;
-            let indep = run_measurement(cfg, &kernel_for(row, false), INSTANCES, name, false)?;
-            let dep = run_measurement(cfg, &kernel_for(row, true), INSTANCES, name, true)?;
-            Ok(DepIndep {
-                name: name.to_string(),
-                dep_cpi: dep.cpi,
-                indep_cpi: indep.cpi,
-                paper_dep,
-                paper_indep,
-            })
+                .cloned()
+                .map(|row| (row, paper_dep, paper_indep))
+                .ok_or_else(|| format!("{name} not in registry"))
         })
         .collect()
+}
+
+pub fn run_table2(cfg: &AmpereConfig) -> Result<Vec<DepIndep>, String> {
+    run_table2_with(&Engine::new(cfg.clone()))
+}
+
+/// Table II over an engine: one job per instruction pair.
+pub fn run_table2_with(engine: &Engine) -> Result<Vec<DepIndep>, String> {
+    let jobs: Vec<_> = table2_rows()?
+        .into_iter()
+        .map(|(row, paper_dep, paper_indep)| {
+            move || table2_row_with(engine, &row, paper_dep, paper_indep)
+        })
+        .collect();
+    engine.run_all(jobs).into_iter().collect()
 }
 
 /// Table I: CPI of 1..=4 add.u32 instances with *no* warm-up (the
@@ -147,19 +208,26 @@ pub struct Amortization {
     pub paper_cpi: u64,
 }
 
-pub fn run_table1(cfg: &AmpereConfig) -> Result<Vec<Amortization>, String> {
+/// One Table I row (n instances of `add.u32`, cold pipes) on an engine.
+pub fn table1_row_with(engine: &Engine, n: u64) -> Result<Amortization, String> {
     let paper = [5u64, 3, 2, 2];
-    (1..=4u64)
-        .map(|n| {
-            let body: Vec<String> = (0..n)
-                .map(|i| format!("add.u32 %r{}, {}, {};", 20 + i, 6 + i, i + 1))
-                .collect();
-            // No init lines: the INT pipe must be cold.
-            let src = measurement_kernel("", &body.join("\n "));
-            let m = run_measurement(cfg, &src, n, "add.u32", false)?;
-            Ok(Amortization { n, cpi: m.cpi, paper_cpi: paper[n as usize - 1] })
-        })
-        .collect()
+    let body: Vec<String> = (0..n)
+        .map(|i| format!("add.u32 %r{}, {}, {};", 20 + i, 6 + i, i + 1))
+        .collect();
+    // No init lines: the INT pipe must be cold.
+    let src = measurement_kernel("", &body.join("\n "));
+    let m = run_measurement_with(engine, &src, n, "add.u32", false)?;
+    Ok(Amortization { n, cpi: m.cpi, paper_cpi: paper[n as usize - 1] })
+}
+
+pub fn run_table1(cfg: &AmpereConfig) -> Result<Vec<Amortization>, String> {
+    run_table1_with(&Engine::new(cfg.clone()))
+}
+
+/// Table I over an engine: one job per instance count.
+pub fn run_table1_with(engine: &Engine) -> Result<Vec<Amortization>, String> {
+    let jobs: Vec<_> = (1..=4u64).map(|n| move || table1_row_with(engine, n)).collect();
+    engine.run_all(jobs).into_iter().collect()
 }
 
 #[cfg(test)]

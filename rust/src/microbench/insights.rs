@@ -1,10 +1,9 @@
 //! The paper's §V-A numbered insights as runnable experiments.
 
 use super::registry::{self};
-use super::{measurement_kernel, run_measurement, Measurement, INSTANCES};
+use super::{measurement_kernel, run_measurement_with, Measurement, INSTANCES};
 use crate::config::AmpereConfig;
-use crate::ptx::parse_program;
-use crate::translate::translate_program;
+use crate::engine::Engine;
 
 /// Insight 1: integer `mad` runs on the floating pipeline; interleaving
 /// adds (INT) with mads (FMA) overlaps the two pipes.
@@ -19,20 +18,25 @@ pub struct Insight1 {
 }
 
 pub fn insight1(cfg: &AmpereConfig) -> Result<Insight1, String> {
+    insight1_with(&Engine::new(cfg.clone()))
+}
+
+pub fn insight1_with(engine: &Engine) -> Result<Insight1, String> {
     let init = "add.u32 %r5, 1, 2; add.u32 %r6, 3, 4; add.u32 %r7, 5, 6; \
                 add.u32 %r8, 7, 8; add.u32 %r9, 9, 1;";
     let mixed = "add.u32 %r20, %r5, 1;\n mad.lo.u32 %r21, %r6, 2, %r7;\n \
                  add.u32 %r22, %r8, 1;\n mad.lo.u32 %r23, %r9, 2, %r7;";
     let same = "add.u32 %r20, %r5, 1;\n add.u32 %r21, %r6, 2;\n \
                 add.u32 %r22, %r8, 1;\n add.u32 %r23, %r9, 2;";
-    let m_mixed = run_measurement(cfg, &measurement_kernel(init, mixed), 4, "mixed", false)?;
-    let m_same = run_measurement(cfg, &measurement_kernel(init, same), 4, "same", false)?;
+    let m_mixed =
+        run_measurement_with(engine, &measurement_kernel(init, mixed), 4, "mixed", false)?;
+    let m_same = run_measurement_with(engine, &measurement_kernel(init, same), 4, "same", false)?;
 
     // Mapping of mad.lo.u32 alone:
     let rows = registry::table5();
     let mad = rows.iter().find(|r| r.name == "mad.lo.u32").unwrap();
-    let m = run_measurement(
-        cfg,
+    let m = run_measurement_with(
+        engine,
         &super::alu::kernel_for(mad, false),
         INSTANCES,
         "mad.lo.u32",
@@ -58,38 +62,52 @@ pub struct SignPair {
     pub paper_expects_difference: bool,
 }
 
-pub fn insight2(cfg: &AmpereConfig) -> Result<Vec<SignPair>, String> {
-    let pairs = [
-        ("add.u64", "add.s64", false),
-        ("min.u32", "min.s32", true),
-        ("max.u32", "max.s32", true),
-        ("bfind.u32", "bfind.s32", true),
-        ("min.u64", "min.s64", true),
-    ];
+/// The (unsigned, signed, paper-expects-difference) pairs of Insight 2.
+pub const SIGN_PAIRS: [(&str, &str, bool); 5] = [
+    ("add.u64", "add.s64", false),
+    ("min.u32", "min.s32", true),
+    ("max.u32", "max.s32", true),
+    ("bfind.u32", "bfind.s32", true),
+    ("min.u64", "min.s64", true),
+];
+
+/// Measure one signed/unsigned pair on an engine.
+pub fn sign_pair_with(
+    engine: &Engine,
+    u_name: &str,
+    s_name: &str,
+    expects: bool,
+) -> Result<SignPair, String> {
     let rows = registry::table5();
-    pairs
+    let get = |name: &str| -> Result<Measurement, String> {
+        let row = rows
+            .iter()
+            .find(|r| r.name == name)
+            .ok_or_else(|| format!("{name} not in registry"))?;
+        run_measurement_with(engine, &super::alu::kernel_for(row, false), INSTANCES, name, false)
+    };
+    let u = get(u_name)?;
+    let s = get(s_name)?;
+    let differs = u.mapping != s.mapping;
+    Ok(SignPair {
+        base: u_name.trim_end_matches(char::is_numeric).trim_end_matches(".u").to_string(),
+        unsigned_mapping: u.mapping,
+        signed_mapping: s.mapping,
+        unsigned_cpi: u.cpi,
+        signed_cpi: s.cpi,
+        differs,
+        paper_expects_difference: expects,
+    })
+}
+
+pub fn insight2(cfg: &AmpereConfig) -> Result<Vec<SignPair>, String> {
+    insight2_with(&Engine::new(cfg.clone()))
+}
+
+pub fn insight2_with(engine: &Engine) -> Result<Vec<SignPair>, String> {
+    SIGN_PAIRS
         .iter()
-        .map(|(u_name, s_name, expects)| {
-            let get = |name: &str| -> Result<Measurement, String> {
-                let row = rows
-                    .iter()
-                    .find(|r| r.name == name)
-                    .ok_or_else(|| format!("{name} not in registry"))?;
-                run_measurement(cfg, &super::alu::kernel_for(row, false), INSTANCES, name, false)
-            };
-            let u = get(u_name)?;
-            let s = get(s_name)?;
-            let differs = u.mapping != s.mapping;
-            Ok(SignPair {
-                base: u_name.trim_end_matches(char::is_numeric).trim_end_matches(".u").to_string(),
-                unsigned_mapping: u.mapping,
-                signed_mapping: s.mapping,
-                unsigned_cpi: u.cpi,
-                signed_cpi: s.cpi,
-                differs,
-                paper_expects_difference: *expects,
-            })
-        })
+        .map(|(u_name, s_name, expects)| sign_pair_with(engine, u_name, s_name, *expects))
         .collect()
 }
 
@@ -101,24 +119,33 @@ pub struct Insight3 {
     pub add_init_mapping: String,
 }
 
+/// The ops Insight 3 ablates over.
+pub const INSIGHT3_OPS: [&str; 2] = ["neg.f32", "abs.f32"];
+
+/// Measure one Insight-3 op (mov-init vs add-init) on an engine.
+pub fn insight3_op_with(engine: &Engine, op: &str) -> Result<Insight3, String> {
+    let body = format!("{op} %f20, %f5;\n {op} %f21, %f6;\n {op} %f22, %f7;");
+    let mov_init = "mov.f32 %f5, 1.5; mov.f32 %f6, 2.5; mov.f32 %f7, 3.5;";
+    let add_init = "add.f32 %f5, 1.0, 0.5; add.f32 %f6, 2.0, 0.5; add.f32 %f7, 3.0, 0.5;";
+    let m_mov =
+        run_measurement_with(engine, &measurement_kernel(mov_init, &body), 3, op, false)?;
+    let m_add =
+        run_measurement_with(engine, &measurement_kernel(add_init, &body), 3, op, false)?;
+    Ok(Insight3 {
+        op: op.to_string(),
+        mov_init_mapping: m_mov.mapping,
+        add_init_mapping: m_add.mapping,
+    })
+}
+
 pub fn insight3(cfg: &AmpereConfig) -> Result<Vec<Insight3>, String> {
-    ["neg.f32", "abs.f32"]
+    insight3_with(&Engine::new(cfg.clone()))
+}
+
+pub fn insight3_with(engine: &Engine) -> Result<Vec<Insight3>, String> {
+    INSIGHT3_OPS
         .iter()
-        .map(|op| {
-            let body =
-                format!("{op} %f20, %f5;\n {op} %f21, %f6;\n {op} %f22, %f7;");
-            let mov_init = "mov.f32 %f5, 1.5; mov.f32 %f6, 2.5; mov.f32 %f7, 3.5;";
-            let add_init = "add.f32 %f5, 1.0, 0.5; add.f32 %f6, 2.0, 0.5; add.f32 %f7, 3.0, 0.5;";
-            let m_mov =
-                run_measurement(cfg, &measurement_kernel(mov_init, &body), 3, op, false)?;
-            let m_add =
-                run_measurement(cfg, &measurement_kernel(add_init, &body), 3, op, false)?;
-            Ok(Insight3 {
-                op: op.to_string(),
-                mov_init_mapping: m_mov.mapping,
-                add_init_mapping: m_add.mapping,
-            })
-        })
+        .map(|op| insight3_op_with(engine, op))
         .collect()
 }
 
@@ -132,10 +159,15 @@ pub struct Fig4 {
 }
 
 pub fn fig4(cfg: &AmpereConfig) -> Result<Fig4, String> {
+    fig4_with(&Engine::new(cfg.clone()))
+}
+
+pub fn fig4_with(engine: &Engine) -> Result<Fig4, String> {
     // 64-bit: the standard protocol.
     let body = "add.u32 %r20, %r5, 1;\n add.u32 %r21, %r6, 2;\n add.u32 %r22, %r7, 3;";
     let init = "add.u32 %r5, 1, 2; add.u32 %r6, 3, 4; add.u32 %r7, 5, 6;";
-    let m64 = run_measurement(cfg, &measurement_kernel(init, body), 3, "add.u32/64", false)?;
+    let m64 =
+        run_measurement_with(engine, &measurement_kernel(init, body), 3, "add.u32/64", false)?;
 
     // 32-bit: clocks in %r registers + 32-bit subtraction (Fig. 4a).
     let src32 = format!(
@@ -144,10 +176,11 @@ pub fn fig4(cfg: &AmpereConfig) -> Result<Fig4, String> {
          sub.s32 %r62, %r61, %r60;\n ret;\n}}",
         super::REG_DECLS
     );
-    let prog = parse_program(&src32).map_err(|e| e.to_string())?;
-    let tp = translate_program(&prog).map_err(|e| e.to_string())?;
-    let mut sim = crate::sim::Simulator::new(cfg.clone());
-    let r = sim.run(&prog, &tp, &[0]).map_err(|e| e.to_string())?;
+    let kernel = engine.compile(&src32).map_err(|e| e.to_string())?;
+    let mut sim = engine.simulator();
+    let r = sim
+        .run(&kernel.prog, &kernel.tp, &[0])
+        .map_err(|e| e.to_string())?;
     let c = &r.clock_reads;
     let delta = c[c.len() - 1] - c[c.len() - 2];
     let cpi32 = delta.saturating_sub(super::CLOCK_OVERHEAD) / 3;

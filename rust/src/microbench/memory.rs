@@ -15,11 +15,10 @@
 //! that loop in PTX on the simulator, the default seeds DRAM directly
 //! (identical measured values, far fewer simulated instructions).
 
-use super::{run_measurement, Measurement, CLOCK_OVERHEAD};
+use super::{run_measurement_with, Measurement, CLOCK_OVERHEAD};
 use crate::config::AmpereConfig;
-use crate::ptx::parse_program;
+use crate::engine::Engine;
 use crate::sim::Simulator;
-use crate::translate::translate_program;
 
 /// Memory level under test.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -104,7 +103,7 @@ fn chase_body(cache_op: &str, n: usize) -> String {
 
 /// Measure a cache level.  `span` selects which level serves the chain.
 fn measure_chase(
-    cfg: &AmpereConfig,
+    engine: &Engine,
     cache_op: &str,
     span: u64,
     warm_passes: u32,
@@ -131,12 +130,13 @@ fn measure_chase(
         super::REG_DECLS
     );
 
-    let prog = parse_program(&src).map_err(|e| e.to_string())?;
-    let tp = translate_program(&prog).map_err(|e| e.to_string())?;
-    let mut sim = Simulator::new(cfg.clone());
-    sim.fuel = 2_000_000_000;
+    let kernel = engine.compile(&src).map_err(|e| e.to_string())?;
+    let mut sim = engine.simulator();
+    sim.fuel = 2_000_000_000; // warm loops; rolled back on checkin
     seed_chain(&mut sim, ARRAY_BASE, span, CHASE_LOADS + 1);
-    let r = sim.run(&prog, &tp, &[ARRAY_BASE]).map_err(|e| e.to_string())?;
+    let r = sim
+        .run(&kernel.prog, &kernel.tp, &[ARRAY_BASE])
+        .map_err(|e| e.to_string())?;
     let c = &r.clock_reads;
     let delta = c[c.len() - 1] - c[c.len() - 2];
     let cpi = delta.saturating_sub(CLOCK_OVERHEAD) / CHASE_LOADS as u64;
@@ -150,7 +150,7 @@ fn measure_chase(
 
 /// Shared-memory single-access measurement (Fig. 3): n = 1 with the
 /// drain exposing the full completion.
-fn measure_shared(cfg: &AmpereConfig, store: bool) -> Result<MemResult, String> {
+fn measure_shared(engine: &Engine, store: bool) -> Result<MemResult, String> {
     let body = if store {
         "st.shared.u64 [shMem1], 50;"
     } else {
@@ -162,31 +162,61 @@ fn measure_shared(cfg: &AmpereConfig, store: bool) -> Result<MemResult, String> 
          mov.u64 %rd60, %clock64;\n {body}\n mov.u64 %rd61, %clock64;\n ret;\n}}",
         super::REG_DECLS
     );
-    let m: Measurement = run_measurement(cfg, &src, 1, "shared", true)?;
+    let m: Measurement = run_measurement_with(engine, &src, 1, "shared", true)?;
     let level = if store { Level::SharedStore } else { Level::SharedLoad };
     Ok(MemResult { level, cpi: m.cpi, paper: level.paper_cycles(), loads: 1 })
 }
 
-/// The full Table IV.
-pub fn run_table4(cfg: &AmpereConfig) -> Result<Vec<MemResult>, String> {
-    let l2 = cfg.memory.l2_bytes as u64;
-    let l1 = cfg.memory.l1_bytes as u64;
-    Ok(vec![
+/// Table IV's rows in paper order.
+pub const TABLE4_LEVELS: [Level; 5] = [
+    Level::Global,
+    Level::L2,
+    Level::L1,
+    Level::SharedLoad,
+    Level::SharedStore,
+];
+
+/// Measure one Table IV level on an engine.  `span` selection follows
+/// the paper: bigger than L2 for global, within L2/L1 (plus a warm
+/// pass) for the cache levels.
+pub fn measure_level_with(engine: &Engine, level: Level) -> Result<MemResult, String> {
+    let l2 = engine.cfg().memory.l2_bytes as u64;
+    let l1 = engine.cfg().memory.l1_bytes as u64;
+    match level {
         // Fig. 2: array larger than L2 (52,268,760 B in the paper).
-        measure_chase(cfg, "cv", l2 + l2 / 4, 0)?,
+        Level::Global => measure_chase(engine, "cv", l2 + l2 / 4, 0),
         // L2: 2 MiB working set, warm pass fills L2.
-        measure_chase(cfg, "cg", (l2 / 16).min(2 * 1024 * 1024), 1)?,
+        Level::L2 => measure_chase(engine, "cg", (l2 / 16).min(2 * 1024 * 1024), 1),
         // L1: working set within L1, warm pass fills L1.
-        measure_chase(cfg, "ca", l1 / 2, 1)?,
-        measure_shared(cfg, false)?,
-        measure_shared(cfg, true)?,
-    ])
+        Level::L1 => measure_chase(engine, "ca", l1 / 2, 1),
+        Level::SharedLoad => measure_shared(engine, false),
+        Level::SharedStore => measure_shared(engine, true),
+    }
+}
+
+/// The full Table IV (transient engine; see [`run_table4_with`]).
+pub fn run_table4(cfg: &AmpereConfig) -> Result<Vec<MemResult>, String> {
+    run_table4_with(&Engine::new(cfg.clone()))
+}
+
+/// Table IV over an engine: one job per memory level.
+pub fn run_table4_with(engine: &Engine) -> Result<Vec<MemResult>, String> {
+    let jobs: Vec<_> = TABLE4_LEVELS
+        .into_iter()
+        .map(|level| move || measure_level_with(engine, level))
+        .collect();
+    engine.run_all(jobs).into_iter().collect()
 }
 
 /// Faithful Fig. 2 mode: the store loop that builds the chain runs in
 /// PTX on the simulator (slow; used by the `--faithful` CLI flag and one
 /// integration test).
 pub fn run_global_faithful(cfg: &AmpereConfig, span: u64) -> Result<MemResult, String> {
+    run_global_faithful_with(&Engine::new(cfg.clone()), span)
+}
+
+/// Engine-backed faithful Fig. 2 (the store loop runs in PTX).
+pub fn run_global_faithful_with(engine: &Engine, span: u64) -> Result<MemResult, String> {
     let body = chase_body("cv", CHASE_LOADS);
     let src = format!(
         ".visible .entry fig2(.param .u64 arr) {{\n {}\n \
@@ -205,12 +235,13 @@ $Mem_store:\n \
          mov.u64 %rd60, %clock64;\n {body}\n mov.u64 %rd61, %clock64;\n ret;\n}}",
         super::REG_DECLS
     );
-    let prog = parse_program(&src).map_err(|e| e.to_string())?;
-    let tp = translate_program(&prog).map_err(|e| e.to_string())?;
-    let mut sim = Simulator::new(cfg.clone());
+    let kernel = engine.compile(&src).map_err(|e| e.to_string())?;
+    let mut sim = engine.simulator();
     sim.fuel = 4_000_000_000;
     sim.trace = crate::sass::TraceRecorder::disabled();
-    let r = sim.run(&prog, &tp, &[ARRAY_BASE]).map_err(|e| e.to_string())?;
+    let r = sim
+        .run(&kernel.prog, &kernel.tp, &[ARRAY_BASE])
+        .map_err(|e| e.to_string())?;
     let c = &r.clock_reads;
     let delta = c[c.len() - 1] - c[c.len() - 2];
     Ok(MemResult {
@@ -279,9 +310,22 @@ mod tests {
     #[test]
     fn cv_insensitive_to_warm_cache() {
         // .cv bypasses caches: warm or cold, same latency.
-        let cfg = small_cfg();
-        let cold = measure_chase(&cfg, "cv", 64 * 1024, 0).unwrap();
-        let warm = measure_chase(&cfg, "cv", 64 * 1024, 1).unwrap();
+        let engine = Engine::new(small_cfg());
+        let cold = measure_chase(&engine, "cv", 64 * 1024, 0).unwrap();
+        let warm = measure_chase(&engine, "cv", 64 * 1024, 1).unwrap();
         assert_eq!(cold.cpi, warm.cpi);
+    }
+
+    #[test]
+    fn engine_reuse_does_not_leak_chain_state() {
+        // The chase seeds DRAM and fills caches; a second measurement on
+        // the same engine must see a fully reset memory system.
+        let engine = Engine::new(small_cfg());
+        let a = run_table4_with(&engine).unwrap();
+        let b = run_table4_with(&engine).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.level, y.level);
+            assert_eq!(x.cpi, y.cpi, "{:?} drifted across engine reuse", x.level);
+        }
     }
 }

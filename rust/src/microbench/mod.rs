@@ -18,8 +18,10 @@ pub mod registry;
 pub mod wmma;
 
 use crate::config::AmpereConfig;
+use crate::engine::Engine;
 use crate::ptx::parse_program;
-use crate::sim::Simulator;
+use crate::sass::TraceRecorder;
+use crate::sim::{RunResult, Simulator};
 use crate::translate::translate_program;
 
 /// Measured clock-read overhead (two consecutive CS2R), paper §IV-A.
@@ -118,21 +120,21 @@ pub fn measurement_kernel(init: &str, body: &str) -> String {
     )
 }
 
-/// Run one kernel under the protocol and extract (Δ, CPI, mapping of the
-/// `measured_ptx_idx`-th instruction).
-pub fn run_measurement(
-    cfg: &AmpereConfig,
-    src: &str,
+/// Parameter block every measurement kernel runs with (the `out`
+/// pointer the protocol never dereferences on the measured path).
+pub(crate) const MEASUREMENT_PARAMS: &[u64] = &[0x100000];
+
+/// Extract a [`Measurement`] from a finished protocol run: Δ from the
+/// outermost clock reads, CPI per the paper's formula, and the SASS
+/// mapping of the first measured instruction from the dynamic trace.
+fn finish_measurement(
+    prog: &crate::ptx::PtxProgram,
+    trace: &TraceRecorder,
+    r: &RunResult,
     n: u64,
     name: &str,
     dependent: bool,
 ) -> Result<Measurement, String> {
-    let prog = parse_program(src).map_err(|e| format!("{name}: {e}\n{src}"))?;
-    let tp = translate_program(&prog).map_err(|e| format!("{name}: {e}"))?;
-    let mut sim = Simulator::new(cfg.clone());
-    let r = sim
-        .run(&prog, &tp, &[0x100000])
-        .map_err(|e| format!("{name}: {e}"))?;
     if r.clock_reads.len() < 2 {
         return Err(format!("{name}: kernel lost its clock reads"));
     }
@@ -158,9 +160,48 @@ pub fn run_measurement(
             })
         })
         .ok_or_else(|| format!("{name}: no clock read"))?;
-    let mapping = sim.trace.mapping_for(clock_idx as u32 + 1);
+    let mapping = trace.mapping_for(clock_idx as u32 + 1);
 
     Ok(Measurement { name: name.to_string(), cpi, delta, n, mapping, dependent })
+}
+
+/// Run one kernel under the protocol and extract (Δ, CPI, mapping of the
+/// `measured_ptx_idx`-th instruction).
+///
+/// Standalone form: parses, translates and builds a fresh simulator per
+/// call.  Campaign-scale callers should use [`run_measurement_with`],
+/// which amortises all three through an [`Engine`].
+pub fn run_measurement(
+    cfg: &AmpereConfig,
+    src: &str,
+    n: u64,
+    name: &str,
+    dependent: bool,
+) -> Result<Measurement, String> {
+    let prog = parse_program(src).map_err(|e| format!("{name}: {e}\n{src}"))?;
+    let tp = translate_program(&prog).map_err(|e| format!("{name}: {e}"))?;
+    let mut sim = Simulator::new(cfg.clone());
+    let r = sim
+        .run(&prog, &tp, MEASUREMENT_PARAMS)
+        .map_err(|e| format!("{name}: {e}"))?;
+    finish_measurement(&prog, &sim.trace, &r, n, name, dependent)
+}
+
+/// Engine-backed form of [`run_measurement`]: the kernel is served from
+/// the content-addressed cache and the simulator from the pool.
+pub fn run_measurement_with(
+    engine: &Engine,
+    src: &str,
+    n: u64,
+    name: &str,
+    dependent: bool,
+) -> Result<Measurement, String> {
+    let kernel = engine.compile(src).map_err(|e| format!("{name}: {e}"))?;
+    let mut sim = engine.simulator();
+    let r = sim
+        .run(&kernel.prog, &kernel.tp, MEASUREMENT_PARAMS)
+        .map_err(|e| format!("{name}: {e}"))?;
+    finish_measurement(&kernel.prog, &sim.trace, &r, n, name, dependent)
 }
 
 #[cfg(test)]
@@ -187,5 +228,25 @@ mod tests {
         let m = run_measurement(&cfg, &src, 3, "add.u32", false).unwrap();
         assert_eq!(m.cpi, 2, "delta = {}", m.delta);
         assert_eq!(m.mapping, "IADD");
+    }
+
+    #[test]
+    fn engine_path_matches_standalone_path() {
+        let cfg = AmpereConfig::a100();
+        let body = "add.u32 %r10, %r5, 1;\nadd.u32 %r11, %r6, 2;\nadd.u32 %r12, %r7, 3;";
+        let init = "add.u32 %r5, 1, 2; add.u32 %r6, 3, 4; add.u32 %r7, 5, 6;";
+        let src = measurement_kernel(init, body);
+        let standalone = run_measurement(&cfg, &src, 3, "add.u32", false).unwrap();
+        let engine = Engine::new(cfg);
+        let first = run_measurement_with(&engine, &src, 3, "add.u32", false).unwrap();
+        // cached kernel + recycled simulator must not change anything
+        let second = run_measurement_with(&engine, &src, 3, "add.u32", false).unwrap();
+        for m in [&first, &second] {
+            assert_eq!(m.cpi, standalone.cpi);
+            assert_eq!(m.delta, standalone.delta);
+            assert_eq!(m.mapping, standalone.mapping);
+        }
+        let cs = engine.cache_stats();
+        assert_eq!((cs.hits, cs.misses), (1, 1));
     }
 }

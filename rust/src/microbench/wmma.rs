@@ -10,6 +10,7 @@
 
 use super::CLOCK_OVERHEAD;
 use crate::config::AmpereConfig;
+use crate::engine::Engine;
 use crate::ptx::parse_program;
 use crate::sim::Simulator;
 use crate::tensor::{throughput, Throughput, WmmaDtype, ALL_DTYPES};
@@ -124,12 +125,18 @@ pub fn fig5_kernel(d: WmmaDtype, iters: u32) -> String {
     )
 }
 
-/// Measure one dtype.
+/// Measure one dtype (transient engine; see [`measure_with`]).
 pub fn measure(cfg: &AmpereConfig, d: WmmaDtype) -> Result<WmmaResult, String> {
+    measure_with(&Engine::new(cfg.clone()), d)
+}
+
+/// Measure one dtype on an engine.
+pub fn measure_with(engine: &Engine, d: WmmaDtype) -> Result<WmmaResult, String> {
+    let cfg = engine.cfg();
     let src = fig5_kernel(d, ITERS);
-    let prog = parse_program(&src).map_err(|e| format!("{}: {e}", d.key()))?;
-    let tp = translate_program(&prog).map_err(|e| format!("{}: {e}", d.key()))?;
-    let mut sim = Simulator::new(cfg.clone());
+    let kernel = engine.compile(&src).map_err(|e| format!("{}: {e}", d.key()))?;
+    let prog = &kernel.prog;
+    let mut sim = engine.simulator();
     // Seed fragment data so the functional path is exercised too.
     for ch in 0..CHAINS as u64 {
         let base = 0x20_0000u64 + ch * 0x1_0000;
@@ -139,7 +146,9 @@ pub fn measure(cfg: &AmpereConfig, d: WmmaDtype) -> Result<WmmaResult, String> {
                 .write(base + 4 * i, &(1.0f32).to_bits().to_le_bytes());
         }
     }
-    let r = sim.run(&prog, &tp, &[0]).map_err(|e| format!("{}: {e}", d.key()))?;
+    let r = sim
+        .run(prog, &kernel.tp, &[0])
+        .map_err(|e| format!("{}: {e}", d.key()))?;
     let c = &r.clock_reads;
     let delta = c[c.len() - 1] - c[c.len() - 2];
     let cycles = delta.saturating_sub(CLOCK_OVERHEAD) / (CHAINS as u64 * ITERS as u64);
@@ -170,9 +179,18 @@ pub fn measure(cfg: &AmpereConfig, d: WmmaDtype) -> Result<WmmaResult, String> {
     })
 }
 
-/// The full Table III.
+/// The full Table III (transient engine; see [`run_table3_with`]).
 pub fn run_table3(cfg: &AmpereConfig) -> Result<Vec<WmmaResult>, String> {
-    ALL_DTYPES.iter().map(|d| measure(cfg, *d)).collect()
+    run_table3_with(&Engine::new(cfg.clone()))
+}
+
+/// Table III over an engine: one job per dtype.
+pub fn run_table3_with(engine: &Engine) -> Result<Vec<WmmaResult>, String> {
+    let jobs: Vec<_> = ALL_DTYPES
+        .into_iter()
+        .map(|d| move || measure_with(engine, d))
+        .collect();
+    engine.run_all(jobs).into_iter().collect()
 }
 
 /// Fig. 6: dynamic SASS of a single TC instruction — clock reads around

@@ -66,6 +66,16 @@ impl TraceRecorder {
         &self.entries
     }
 
+    /// Rewind to the state of `TraceRecorder::with_cap(cap)` while
+    /// keeping the entry buffer's allocation (pooled simulators reset
+    /// between kernels instead of rebuilding the recorder).
+    pub fn reset_to_cap(&mut self, cap: usize) {
+        self.entries.clear();
+        self.cap = Some(cap);
+        self.enabled = true;
+        self.seq = 0;
+    }
+
     /// Total dynamic SASS instructions (even when windowed/disabled).
     pub fn dynamic_count(&self) -> u64 {
         self.seq
@@ -121,6 +131,20 @@ mod tests {
         assert_eq!(t.entries().len(), 2);
         assert_eq!(t.entries()[0].ptx_idx, 3);
         assert_eq!(t.dynamic_count(), 5);
+    }
+
+    #[test]
+    fn reset_restores_recording_defaults() {
+        let mut t = TraceRecorder::disabled();
+        t.record(0, "IADD3", 0, 4);
+        t.reset_to_cap(2);
+        t.record(1, "FADD", 0, 4);
+        assert_eq!(t.entries().len(), 1, "recording re-enabled");
+        assert_eq!(t.entries()[0].seq, 0, "sequence rewound");
+        assert_eq!(t.dynamic_count(), 1);
+        t.record(2, "FADD", 1, 5);
+        t.record(3, "FADD", 2, 6);
+        assert_eq!(t.entries().len(), 2, "cap re-applied");
     }
 
     #[test]

@@ -33,7 +33,7 @@ impl fmt::Display for SimError {
 impl std::error::Error for SimError {}
 
 /// Result of one kernel simulation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RunResult {
     /// Cycle of the last issue (kernel wall-clock lower bound).
     pub cycles: u64,
@@ -60,6 +60,12 @@ fn pipe_idx(p: Pipe) -> usize {
     ALL_PIPES.iter().position(|q| *q == p).unwrap()
 }
 
+/// Default dynamic SASS instruction budget per `run`.
+pub const DEFAULT_FUEL: u64 = 500_000_000;
+
+/// Default trace-recorder window (entries retained).
+pub const DEFAULT_TRACE_CAP: usize = 65536;
+
 /// The simulator: owns the machine config, memory system, and trace.
 pub struct Simulator {
     pub cfg: AmpereConfig,
@@ -72,11 +78,23 @@ pub struct Simulator {
 impl Simulator {
     pub fn new(cfg: AmpereConfig) -> Self {
         let mem = MemorySystem::new(&cfg.memory);
-        Self { cfg, mem, trace: TraceRecorder::with_cap(65536), fuel: 500_000_000 }
+        Self { cfg, mem, trace: TraceRecorder::with_cap(DEFAULT_TRACE_CAP), fuel: DEFAULT_FUEL }
     }
 
     pub fn a100() -> Self {
         Self::new(AmpereConfig::a100())
+    }
+
+    /// Return to a state observationally identical to
+    /// `Simulator::new(self.cfg)` without rebuilding the multi-MB cache
+    /// arrays or the shared-memory buffer — the cheap path that lets the
+    /// engine's simulator pool hand one instance from kernel to kernel.
+    /// Any per-run customisation (raised `fuel`, a disabled trace) is
+    /// rolled back to the constructor defaults.
+    pub fn reset(&mut self) {
+        self.mem.reset();
+        self.trace.reset_to_cap(DEFAULT_TRACE_CAP);
+        self.fuel = DEFAULT_FUEL;
     }
 
     /// Run a translated kernel with the given parameter values.
@@ -593,6 +611,52 @@ $L:
              mov.u64 %rd1, %clock64; st.shared.u64 [sh], 50; mov.u64 %rd2, %clock64; ret; }";
         let (_, r) = run(st);
         assert_eq!(r.clock_reads[1] - r.clock_reads[0] - 2, 19);
+    }
+
+    #[test]
+    fn reset_and_rerun_is_byte_identical_to_fresh() {
+        // Dirty a simulator with a kernel that touches DRAM, caches and
+        // shared memory, reset it, and rerun a second kernel: the result
+        // must equal a fresh simulator's bit for bit.
+        let dirty = r#"
+.visible .entry d(.param .u64 p0) {
+ .reg .b64 %rd<9>;
+ .shared .align 8 .b8 sh[256];
+ ld.param.u64 %rd1, [p0];
+ st.global.u64 [%rd1], 77;
+ ld.global.ca.u64 %rd2, [%rd1];
+ st.shared.u64 [sh], %rd2;
+ ret;
+}"#;
+        let probe = r#"
+.visible .entry k(.param .u64 p0) {
+ .reg .b64 %rd<9>;
+ .shared .align 8 .b8 sh[256];
+ ld.param.u64 %rd1, [p0];
+ mov.u64 %rd7, %clock64;
+ ld.global.ca.u64 %rd2, [%rd1];
+ ld.shared.u64 %rd3, [sh];
+ mov.u64 %rd8, %clock64;
+ ret;
+}"#;
+        let dprog = parse_program(dirty).unwrap();
+        let dtp = translate_program(&dprog).unwrap();
+        let pprog = parse_program(probe).unwrap();
+        let ptp = translate_program(&pprog).unwrap();
+
+        let mut reused = Simulator::a100();
+        reused.fuel = 1_000; // per-run customisation must roll back too
+        reused.run(&dprog, &dtp, &[0x8000]).unwrap();
+        reused.reset();
+        let a = reused.run(&pprog, &ptp, &[0x8000]).unwrap();
+
+        let mut fresh = Simulator::a100();
+        let b = fresh.run(&pprog, &ptp, &[0x8000]).unwrap();
+
+        assert_eq!(a, b, "reset-and-rerun must match a fresh simulator");
+        assert_eq!(reused.fuel, fresh.fuel);
+        assert_eq!(reused.trace.mapping_for(2), fresh.trace.mapping_for(2));
+        assert_eq!((reused.mem.loads, reused.mem.stores), (fresh.mem.loads, fresh.mem.stores));
     }
 
     #[test]

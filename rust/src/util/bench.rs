@@ -100,8 +100,8 @@ impl Bench {
         self.results.last().unwrap()
     }
 
-    /// Write results to `target/ubench/<target>.json` for §Perf diffing.
-    pub fn finish(self) {
+    /// Serialize the collected stats (shared by both output files).
+    fn results_json(&self) -> crate::util::json::Value {
         use crate::util::json::Value;
         let arr: Vec<Value> = self
             .results
@@ -116,10 +116,27 @@ impl Bench {
                     .set("p95_ns", s.p95_ns as u64)
             })
             .collect();
+        Value::Arr(arr)
+    }
+
+    /// Write results to `target/ubench/<target>.json` for §Perf diffing,
+    /// and to `BENCH_<target>.json` in the working directory so the perf
+    /// trajectory stays machine-readable across PRs (before/after files
+    /// survive `cargo clean`; diff them to demonstrate speedups).
+    pub fn finish(self) {
+        use crate::util::json::Value;
+        let results = self.results_json();
         let _ = std::fs::create_dir_all("target/ubench");
         let path = format!("target/ubench/{}.json", self.target);
-        let _ = std::fs::write(&path, crate::util::json::to_string_pretty(&Value::Arr(arr)));
+        let _ = std::fs::write(&path, crate::util::json::to_string_pretty(&results));
         println!("(wrote {path})");
+
+        let bench_path = format!("BENCH_{}.json", self.target);
+        let doc = Value::obj()
+            .set("bench", self.target.as_str())
+            .set("results", results);
+        let _ = std::fs::write(&bench_path, crate::util::json::to_string_pretty(&doc));
+        println!("(wrote {bench_path})");
     }
 }
 
@@ -145,6 +162,22 @@ mod tests {
         assert!(s.iters >= 1);
         assert!(s.min_ns > 0);
         assert!(s.min_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn results_serialize_with_required_fields() {
+        let mut b = Bench {
+            target: "test".into(),
+            budget: Duration::from_millis(20),
+            max_samples: 2,
+            results: Vec::new(),
+        };
+        b.bench("spin", || 1 + 1);
+        let v = b.results_json();
+        let row = v.idx(0).unwrap();
+        for key in ["name", "iters", "median_ns", "p95_ns"] {
+            assert!(row.get(key).is_some(), "missing {key}");
+        }
     }
 
     #[test]
