@@ -28,10 +28,7 @@ use ampere_ubench::tensor::ALL_DTYPES;
 use ampere_ubench::util::bench::{black_box, Bench};
 
 fn scaled_cfg() -> AmpereConfig {
-    let mut c = AmpereConfig::a100();
-    c.memory.l2_bytes = 512 * 1024;
-    c.memory.l1_bytes = 32 * 1024;
-    c
+    AmpereConfig::small()
 }
 
 /// The seed harness, reconstructed from the preserved standalone APIs:

@@ -1,0 +1,177 @@
+//! Bench for the latency-oracle serving path — the acceptance workload
+//! for the oracle PR (ISSUE 2): warm-cache served predictions must be
+//! ≥ 10× faster than per-request live simulation, in one run on one
+//! machine, recorded in `BENCH_oracle.json`.
+//!
+//! Every series pushes the same 64 requests (16 distinct Table V
+//! kernels × 4) through a real loopback TCP connection, so the numbers
+//! compare like for like:
+//!
+//! * `predict_warm_batch1`  — 64 single-request round trips, cache-hot.
+//! * `predict_warm_batch64` — the same 64 requests as one protocol
+//!   batch (one line out, one line back): what a model-serving client
+//!   should do.
+//! * `predict_cold_batch64` — 64 never-seen kernels as one batch: every
+//!   request parses + translates + runs the dataflow pass.
+//! * `simulate_batch1`      — 64 single `mode=simulate` round trips:
+//!   each request runs the cycle-level simulator (the no-oracle
+//!   baseline a consumer would otherwise pay per query).
+//!
+//! Acceptance: median(simulate_batch1) ≥ 10 × median(predict_warm_batch64).
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::microbench::{alu, registry};
+use ampere_ubench::oracle::{LatencyModel, LatencyOracle, Server};
+use ampere_ubench::util::bench::Bench;
+use ampere_ubench::util::json::Value;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// Requests per bench iteration, for every series.
+const REQS: usize = 64;
+
+/// A mix of cheap single-SASS rows and expensive multi-instruction
+/// expansions — prediction cost is identical for both, simulation cost
+/// is not, which is the point of serving the model.
+const KERNEL_ROWS: [&str; 16] = [
+    "add.u32",
+    "add.f64",
+    "mul.lo.u32",
+    "mad.rn.f32",
+    "min.f64",
+    "popc.b32",
+    "sad.u64",
+    "abs.s64",
+    "div.u32",
+    "div.u64",
+    "div.rn.f32",
+    "div.rn.f64",
+    "sqrt.rn.f32",
+    "rcp.rn.f32",
+    "bfind.u64",
+    "fns.b32",
+];
+
+fn request_line(mode: &str, src: &str) -> String {
+    ampere_ubench::util::json::to_string(
+        &Value::obj().set("mode", mode).set("kernel", src),
+    )
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to loopback oracle");
+        stream.set_nodelay(true).expect("nodelay");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        Client { stream, reader }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        writeln!(self.stream, "{line}").expect("send");
+        let mut out = String::new();
+        let n = self.reader.read_line(&mut out).expect("receive");
+        assert!(n > 0, "server closed the connection mid-bench");
+        assert!(!out.contains("\"ok\":false"), "oracle error: {out}");
+        out
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_args("oracle");
+
+    eprintln!("extracting latency model (one scaled-cache campaign)…");
+    let engine = Engine::new(AmpereConfig::small());
+    let model = LatencyModel::extract(&engine).expect("model extraction");
+    let oracle = Arc::new(LatencyOracle::with_engine(model, engine));
+    let server = Server::bind(oracle, "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let handle = server.spawn().expect("spawn");
+    let mut client = Client::connect(addr);
+
+    // 64 warm requests = 16 distinct kernels, cycled.
+    let sources: Vec<String> = KERNEL_ROWS
+        .iter()
+        .map(|name| {
+            let row = registry::find(name).unwrap_or_else(|| panic!("{name} in registry"));
+            alu::kernel_for(&row, false)
+        })
+        .collect();
+    let predict_lines: Vec<String> = (0..REQS)
+        .map(|i| request_line("predict", &sources[i % sources.len()]))
+        .collect();
+    let simulate_lines: Vec<String> = (0..REQS)
+        .map(|i| request_line("simulate", &sources[i % sources.len()]))
+        .collect();
+    let warm_batch = format!("[{}]", predict_lines.join(","));
+
+    // Prewarm: every kernel parsed, predicted and cached once.
+    client.roundtrip(&warm_batch);
+
+    let warm1 = b
+        .bench("predict_warm_batch1", || {
+            for line in &predict_lines {
+                client.roundtrip(line);
+            }
+        })
+        .median_ns;
+
+    let warm64 = b
+        .bench("predict_warm_batch64", || {
+            client.roundtrip(&warm_batch);
+        })
+        .median_ns;
+
+    // Cold: a fresh batch of never-seen kernels per sample (a unique
+    // immediate per kernel defeats both caches).
+    let mut salt = 0u64;
+    let cold64 = b
+        .bench("predict_cold_batch64", || {
+            let lines: Vec<String> = (0..REQS)
+                .map(|_| {
+                    salt += 1;
+                    let body = format!(
+                        "add.u32 %r20, %r5, {salt};\n add.u32 %r21, %r6, {salt};\n \
+                         add.u32 %r22, %r7, {salt};"
+                    );
+                    let src = ampere_ubench::microbench::measurement_kernel(
+                        "add.u32 %r5, 1, 2; add.u32 %r6, 3, 4; add.u32 %r7, 5, 6;",
+                        &body,
+                    );
+                    request_line("predict", &src)
+                })
+                .collect();
+            client.roundtrip(&format!("[{}]", lines.join(",")));
+        })
+        .median_ns;
+
+    let sim1 = b
+        .bench("simulate_batch1", || {
+            for line in &simulate_lines {
+                client.roundtrip(line);
+            }
+        })
+        .median_ns;
+
+    b.finish();
+    handle.stop();
+
+    let vs_batched = sim1 as f64 / warm64 as f64;
+    let vs_batch1 = sim1 as f64 / warm1 as f64;
+    let vs_cold = sim1 as f64 / cold64 as f64;
+    println!(
+        "per-request live simulation vs warm-cache served predictions: \
+         {vs_batched:.1}x (batched), {vs_batch1:.1}x (batch-1), {vs_cold:.1}x (cold batch)"
+    );
+    assert!(
+        vs_batched >= 10.0,
+        "acceptance: warm-cache served predictions must be >= 10x faster \
+         than per-request live simulation (got {vs_batched:.1}x)"
+    );
+}

@@ -10,10 +10,7 @@ use ampere_ubench::microbench::memory;
 use ampere_ubench::util::bench::{black_box, Bench};
 
 fn main() {
-    let mut cfg = AmpereConfig::a100();
-    cfg.memory.l2_bytes = 512 * 1024;
-    cfg.memory.l1_bytes = 32 * 1024;
-    let engine = Engine::new(cfg);
+    let engine = Engine::new(AmpereConfig::small());
 
     let mut b = Bench::from_args("table4_memory");
     b.bench("table4_memory", || {

@@ -36,11 +36,7 @@ fn main() -> anyhow::Result<()> {
     println!(" is what forces the chase to DRAM — capacity, not scripting)");
     println!("{:>12} {:>10} {:>10}", "L2 bytes", "cg chase", "cv chase");
     for l2 in [128 * 1024usize, 512 * 1024, 2 * 1024 * 1024] {
-        let mut cfg = AmpereConfig::a100();
-        cfg.memory.l2_bytes = 512 * 1024; // span is derived from this
-        cfg.memory.l1_bytes = 32 * 1024;
-        let span_cfg = cfg.clone();
-        let _ = span_cfg;
+        let mut cfg = AmpereConfig::small(); // scaled L1; the loop varies L2
         cfg.memory.l2_bytes = l2;
         let rows = memory::run_table4(&cfg).map_err(anyhow::Error::msg)?;
         let get = |lv: memory::Level| rows.iter().find(|r| r.level == lv).map(|r| r.cpi);

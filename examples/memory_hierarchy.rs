@@ -55,9 +55,7 @@ $Warm:\n \
 
 fn main() -> anyhow::Result<()> {
     // Scaled caches so the sweep spans all three levels quickly.
-    let mut cfg = AmpereConfig::a100();
-    cfg.memory.l1_bytes = 32 * 1024;
-    cfg.memory.l2_bytes = 512 * 1024;
+    let cfg = AmpereConfig::small();
 
     println!("== Table IV (scaled-cache config) ==");
     let t4 = run_table4(&cfg).map_err(anyhow::Error::msg)?;

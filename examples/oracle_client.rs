@@ -1,0 +1,105 @@
+//! Oracle client: stand a latency-oracle server up on a loopback port
+//! and query it over the JSON-line wire protocol.
+//!
+//! ```bash
+//! cargo run --release --example oracle_client
+//! # or, reusing a model extracted by `repro --small extract-model`
+//! # (the example's engine runs the scaled-cache config, and the model
+//! # must match it — a full-config model_a100.json is rejected):
+//! ORACLE_MODEL=model_small.json cargo run --release --example oracle_client
+//! ```
+//!
+//! Walks the whole protocol: single predictions (cold then cache-hit),
+//! a fanned-out batch, a live simulation, a self-consistency check, and
+//! the stats endpoint.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::oracle::{LatencyModel, LatencyOracle, Server};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // 1. An oracle: load the model if the operator extracted one,
+    //    otherwise run the campaign here.
+    let engine = Engine::new(AmpereConfig::small());
+    let model = match std::env::var("ORACLE_MODEL") {
+        Ok(path) => {
+            println!("loading model from {path}");
+            LatencyModel::load(&path).map_err(anyhow::Error::msg)?
+        }
+        Err(_) => {
+            println!("extracting model (set ORACLE_MODEL=<path> to skip the campaign)…");
+            LatencyModel::extract(&engine).map_err(anyhow::Error::msg)?
+        }
+    };
+    println!(
+        "model: {} instructions, {} memory levels, {} wmma dtypes\n",
+        model.instructions.len(),
+        model.memory.len(),
+        model.wmma.len()
+    );
+    let oracle = Arc::new(LatencyOracle::with_engine(model, engine));
+    if let Some(mismatch) = oracle.config_mismatch() {
+        anyhow::bail!("{mismatch} — extract the model with `repro --small extract-model`");
+    }
+
+    // 2. A server on an ephemeral loopback port.
+    let server = Server::bind(oracle, "127.0.0.1:0")?;
+    let addr = server.local_addr()?;
+    let handle = server.spawn()?;
+    println!("server up on {addr}\n");
+
+    // 3. A plain TCP client.
+    let mut stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    // Every request in this walkthrough must succeed — CI runs this
+    // example as the serving smoke test, so an ok:false anywhere is a
+    // regression, not output to shrug at.
+    let mut ask = |req: &str| -> anyhow::Result<String> {
+        writeln!(stream, "{req}")?;
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed the connection while answering: {req}");
+        }
+        let line = line.trim().to_string();
+        if line.contains("\"ok\":false") {
+            anyhow::bail!("request failed: {req}\nresponse: {line}");
+        }
+        Ok(line)
+    };
+
+    println!("-> ping");
+    println!("<- {}\n", ask(r#"{"mode":"ping"}"#)?);
+
+    println!("-> predict add.u32 (cold)");
+    println!("<- {}\n", ask(r#"{"mode":"predict","instr":"add.u32","id":1}"#)?);
+
+    println!("-> predict add.u32 again (cache hit)");
+    println!("<- {}\n", ask(r#"{"mode":"predict","instr":"add.u32","id":2}"#)?);
+
+    println!("-> batch of 6 predictions (one line, fanned across workers)");
+    let batch: Vec<String> = ["add.f16", "add.f64", "mul.lo.u32", "popc.b32", "min.f64", "div.u32"]
+        .iter()
+        .enumerate()
+        .map(|(i, name)| format!(r#"{{"mode":"predict","instr":"{name}","id":{i}}}"#))
+        .collect();
+    println!("<- {}\n", ask(&format!("[{}]", batch.join(",")))?);
+
+    println!("-> simulate add.u32 (live simulator-pool fallback)");
+    println!("<- {}\n", ask(r#"{"mode":"simulate","instr":"add.u32"}"#)?);
+
+    println!("-> check mad.rn.f32 (static prediction vs live simulation)");
+    println!("<- {}\n", ask(r#"{"mode":"check","instr":"mad.rn.f32"}"#)?);
+
+    println!("-> dependent-chain prediction");
+    println!("<- {}\n", ask(r#"{"mode":"predict","instr":"add.u32","dependent":true}"#)?);
+
+    println!("-> stats");
+    println!("<- {}\n", ask(r#"{"mode":"stats"}"#)?);
+
+    handle.stop();
+    println!("server stopped cleanly");
+    Ok(())
+}

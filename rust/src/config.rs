@@ -200,6 +200,17 @@ impl AmpereConfig {
         Self::default()
     }
 
+    /// A100 with scaled-down caches (`--small`): identical latencies and
+    /// semantics, smaller L1/L2 arrays so the warm pointer-chase loops
+    /// finish quickly.  The shared definition behind the CLI flag, CI,
+    /// tests and benches.
+    pub fn small() -> Self {
+        let mut c = Self::a100();
+        c.memory.l2_bytes = 512 * 1024;
+        c.memory.l1_bytes = 32 * 1024;
+        c
+    }
+
     pub fn pipe(&self, pipe: Pipe) -> PipeTiming {
         match pipe {
             Pipe::Int => self.int_pipe,
@@ -228,6 +239,19 @@ mod tests {
         assert_eq!(c.memory.dram_latency, 290);
         assert_eq!(c.memory.l2_hit_latency, 200);
         assert_eq!(c.memory.l1_hit_latency, 33);
+    }
+
+    #[test]
+    fn small_only_scales_the_caches() {
+        let small = AmpereConfig::small();
+        let full = AmpereConfig::a100();
+        assert_eq!(small.memory.l2_bytes, 512 * 1024);
+        assert_eq!(small.memory.l1_bytes, 32 * 1024);
+        // Latencies — the measured quantities — are untouched.
+        assert_eq!(small.memory.l1_hit_latency, full.memory.l1_hit_latency);
+        assert_eq!(small.memory.l2_hit_latency, full.memory.l2_hit_latency);
+        assert_eq!(small.memory.dram_latency, full.memory.dram_latency);
+        assert_eq!(small.int_pipe, full.int_pipe);
     }
 
     #[test]

@@ -129,10 +129,7 @@ mod tests {
     use crate::config::AmpereConfig;
 
     fn test_cfg() -> AmpereConfig {
-        let mut c = AmpereConfig::a100();
-        c.memory.l2_bytes = 512 * 1024;
-        c.memory.l1_bytes = 32 * 1024;
-        c
+        AmpereConfig::small()
     }
 
     #[test]

@@ -119,10 +119,7 @@ mod tests {
 
     fn test_cfg() -> AmpereConfig {
         // Scaled-down caches keep the memory benches fast in CI.
-        let mut c = AmpereConfig::a100();
-        c.memory.l2_bytes = 512 * 1024;
-        c.memory.l1_bytes = 32 * 1024;
-        c
+        AmpereConfig::small()
     }
 
     #[test]

@@ -31,6 +31,13 @@
 //!   deterministic result ordering.
 //! * [`harness`] — campaign orchestrator running the full evaluation on
 //!   the engine; [`report`] renders the paper's tables.
+//! * [`oracle`] — the latency oracle, the layer that *consumes* the
+//!   measurements the way the paper says they are used (performance-
+//!   modeling simulators à la PPT-GPU): campaign results distilled into
+//!   a serializable analytical [`LatencyModel`](oracle::LatencyModel),
+//!   dependence-aware static prediction of kernel cycles, and a
+//!   JSON-line TCP server with request batching, an LRU prediction
+//!   cache and live-simulation fallback (`repro serve`).
 //! * [`runtime`] — PJRT client loading the AOT JAX/Pallas artifacts; the
 //!   WMMA numerics oracle on the request path (python is build-time only).
 
@@ -39,6 +46,7 @@ pub mod engine;
 pub mod harness;
 pub mod memory;
 pub mod microbench;
+pub mod oracle;
 pub mod ptx;
 pub mod report;
 pub mod runtime;
@@ -51,3 +59,4 @@ pub mod util;
 
 pub use config::AmpereConfig;
 pub use engine::Engine;
+pub use oracle::{LatencyModel, LatencyOracle};

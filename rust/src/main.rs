@@ -1,7 +1,9 @@
 //! `repro` — the L3 coordinator CLI.
 //!
 //! Regenerates every table and figure of the paper against the simulated
-//! A100 (see DESIGN.md §6 for the experiment index):
+//! A100 (see DESIGN.md §6 for the experiment index), and serves the
+//! extracted latency model at scale (`serve` / `extract-model` /
+//! `predict` — the oracle subsystem).
 //!
 //! ```text
 //! repro campaign            # everything (Tables I–V, Fig. 4, insights)
@@ -9,16 +11,22 @@
 //! repro fig4 | fig6-trace | insights | movm
 //! repro validate-oracle     # sim TC numerics vs PJRT/Pallas artifacts
 //! repro show-kernel add.u32 # print a generated microbenchmark kernel
+//! repro extract-model       # distill the campaign into model JSON
+//! repro predict add.u32     # static prediction + live cross-check
+//! repro serve               # JSON-line TCP prediction service
 //!
-//! flags: --small (scaled caches), --json, --dependent, --faithful
+//! flags: --small (scaled caches), --json, --dependent, --faithful,
+//!        --model <path>, --out <path>, --port <n>
 //! ```
 
 use ampere_ubench::config::AmpereConfig;
 use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::{alu, insights, memory, registry, wmma};
+use ampere_ubench::oracle::{serve, LatencyModel, LatencyOracle, Server};
 use ampere_ubench::tensor::{movm_plan, ALL_DTYPES};
 use ampere_ubench::util::json::{to_string_pretty, Value};
 use ampere_ubench::{harness, report, runtime};
+use std::sync::Arc;
 
 const USAGE: &str = "\
 repro — 'Demystifying the Nvidia Ampere Architecture' on a simulated A100
@@ -39,6 +47,29 @@ COMMANDS:
   validate-oracle       sim TC numerics vs the PJRT/Pallas artifacts
   show-kernel <name> [--dependent]
                         print a generated microbenchmark kernel
+  extract-model [--out <path>]
+                        run the campaign once and write the latency
+                        model as JSON (default model_a100.json)
+  predict <instr|file.ptx> [--dependent] [--model <path>]
+                        static prediction from the model, cross-checked
+                        against live simulation of the same kernel
+                        (extracts a fresh model unless --model is given)
+  serve [--model <path>] [--port <n>]
+                        JSON-line TCP prediction service on
+                        127.0.0.1:<port> (default 7845)
+
+--json applies to table1…table5, fig4, insights, extract-model and
+predict.
+
+SERVE WIRE PROTOCOL (one JSON value per line, both directions):
+  request   {\"id\": 7, \"mode\": \"predict|simulate|check|stats|ping\",
+             \"kernel\": \"<PTX>\" | \"instr\": \"add.u32\",
+             \"dependent\": true}
+  batch     a JSON array of requests -> one array of responses, same
+            order, fanned out across the worker pool
+  response  {\"ok\": true, \"id\": 7, ...} — predict adds cpi/cycles/n/
+            unresolved/cached; simulate adds cpi/delta/n/mapping; check
+            adds predicted_cpi/simulated_cpi/matches
 ";
 
 struct Args {
@@ -46,6 +77,9 @@ struct Args {
     json: bool,
     faithful: bool,
     dependent: bool,
+    model: Option<String>,
+    out: Option<String>,
+    port: Option<u16>,
     cmd: String,
     rest: Vec<String>,
 }
@@ -56,15 +90,42 @@ fn parse_args() -> Args {
         json: false,
         faithful: false,
         dependent: false,
+        model: None,
+        out: None,
+        port: None,
         cmd: String::new(),
         rest: Vec::new(),
     };
-    for arg in std::env::args().skip(1) {
-        match arg.as_str() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let need_value = |argv: &[String], i: usize| -> String {
+        argv.get(i + 1).cloned().unwrap_or_else(|| {
+            eprintln!("flag {} needs a value\n{USAGE}", argv[i]);
+            std::process::exit(2);
+        })
+    };
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
             "--small" => a.small = true,
             "--json" => a.json = true,
             "--faithful" => a.faithful = true,
             "--dependent" => a.dependent = true,
+            "--model" => {
+                a.model = Some(need_value(&argv, i));
+                i += 1;
+            }
+            "--out" => {
+                a.out = Some(need_value(&argv, i));
+                i += 1;
+            }
+            "--port" => {
+                let v = need_value(&argv, i);
+                a.port = Some(v.parse().unwrap_or_else(|_| {
+                    eprintln!("--port wants a number, got {v:?}");
+                    std::process::exit(2);
+                }));
+                i += 1;
+            }
             "-h" | "--help" => {
                 print!("{USAGE}");
                 std::process::exit(0);
@@ -72,17 +133,32 @@ fn parse_args() -> Args {
             other if a.cmd.is_empty() => a.cmd = other.to_string(),
             other => a.rest.push(other.to_string()),
         }
+        i += 1;
     }
     a
 }
 
 fn config(small: bool) -> AmpereConfig {
-    let mut c = AmpereConfig::a100();
     if small {
-        c.memory.l2_bytes = 512 * 1024;
-        c.memory.l1_bytes = 32 * 1024;
+        AmpereConfig::small()
+    } else {
+        AmpereConfig::a100()
     }
-    c
+}
+
+/// Load the model from `--model`, or extract a fresh one on `engine`.
+fn load_or_extract(args: &Args, engine: &Engine) -> anyhow::Result<LatencyModel> {
+    match &args.model {
+        Some(path) => {
+            let m = LatencyModel::load(path).map_err(anyhow::Error::msg)?;
+            eprintln!("loaded model {path} ({} instruction entries)", m.instructions.len());
+            Ok(m)
+        }
+        None => {
+            eprintln!("no --model given; extracting one (runs the full campaign)…");
+            LatencyModel::extract(engine).map_err(anyhow::Error::msg)
+        }
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -106,15 +182,27 @@ fn main() -> anyhow::Result<()> {
         }
         "table1" => {
             let t = alu::run_table1_with(&engine).map_err(anyhow::Error::msg)?;
-            println!("{}", report::table1(&t));
+            if args.json {
+                println!("{}", to_string_pretty(&report::table1_json(&t)));
+            } else {
+                println!("{}", report::table1(&t));
+            }
         }
         "table2" => {
             let t = alu::run_table2_with(&engine).map_err(anyhow::Error::msg)?;
-            println!("{}", report::table2(&t));
+            if args.json {
+                println!("{}", to_string_pretty(&report::table2_json(&t)));
+            } else {
+                println!("{}", report::table2(&t));
+            }
         }
         "table3" => {
             let t = wmma::run_table3_with(&engine).map_err(anyhow::Error::msg)?;
-            println!("{}", report::table3(&t));
+            if args.json {
+                println!("{}", to_string_pretty(&report::table3_json(&t)));
+            } else {
+                println!("{}", report::table3(&t));
+            }
         }
         "table4" => {
             if args.faithful {
@@ -124,32 +212,28 @@ fn main() -> anyhow::Result<()> {
                 println!("faithful Fig. 2 global chase: {} cycles/load (paper 290)", g.cpi);
             }
             let t = memory::run_table4_with(&engine).map_err(anyhow::Error::msg)?;
-            println!("{}", report::table4(&t));
+            if args.json {
+                println!("{}", to_string_pretty(&report::table4_json(&t)));
+            } else {
+                println!("{}", report::table4(&t));
+            }
         }
         "table5" => {
             let t = alu::run_table5_with(&engine).map_err(anyhow::Error::msg)?;
             if args.json {
-                let arr: Vec<Value> = t
-                    .iter()
-                    .map(|r| {
-                        Value::obj()
-                            .set("name", r.name.as_str())
-                            .set("cpi", r.measured.cpi)
-                            .set("paper", r.paper_cycles.as_str())
-                            .set("sass", r.measured.mapping.as_str())
-                            .set("paper_sass", r.paper_sass.as_str())
-                            .set("grade", report::grade_str(r.cycles_grade))
-                    })
-                    .collect();
-                println!("{}", to_string_pretty(&Value::Arr(arr)));
+                println!("{}", to_string_pretty(&report::table5_json(&t)));
             } else {
                 println!("{}", report::table5(&t));
             }
         }
         "fig4" => {
             let f = insights::fig4_with(&engine).map_err(anyhow::Error::msg)?;
-            println!("{}", report::fig4(&f));
-            println!("32-bit dynamic SASS: {:?}", f.sass_32bit);
+            if args.json {
+                println!("{}", to_string_pretty(&report::fig4_json(&f)));
+            } else {
+                println!("{}", report::fig4(&f));
+                println!("32-bit dynamic SASS: {:?}", f.sass_32bit);
+            }
         }
         "fig6-trace" => {
             let t = wmma::fig6_trace(&cfg).map_err(anyhow::Error::msg)?;
@@ -162,7 +246,11 @@ fn main() -> anyhow::Result<()> {
             let i1 = insights::insight1_with(&engine).map_err(anyhow::Error::msg)?;
             let i2 = insights::insight2_with(&engine).map_err(anyhow::Error::msg)?;
             let i3 = insights::insight3_with(&engine).map_err(anyhow::Error::msg)?;
-            println!("{}", report::insights(&i1, &i2, &i3));
+            if args.json {
+                println!("{}", to_string_pretty(&report::insights_json(&i1, &i2, &i3)));
+            } else {
+                println!("{}", report::insights(&i1, &i2, &i3));
+            }
         }
         "movm" => {
             println!("MOVM.16.MT88 layout rules (§V-C):");
@@ -202,12 +290,135 @@ fn main() -> anyhow::Result<()> {
                 .rest
                 .first()
                 .ok_or_else(|| anyhow::anyhow!("usage: repro show-kernel <instr>"))?;
-            let rows = registry::table5();
-            let row = rows
-                .iter()
-                .find(|r| r.name == *name)
-                .ok_or_else(|| anyhow::anyhow!("unknown instruction {name}; see `repro table5`"))?;
-            println!("{}", alu::kernel_for(row, args.dependent));
+            let row = registry::find(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown instruction {name:?}; valid names are:\n  {}",
+                    registry::names().join("\n  ")
+                )
+            })?;
+            println!("{}", alu::kernel_for(&row, args.dependent));
+        }
+        "extract-model" => {
+            eprintln!("running the campaign to extract the latency model…");
+            let model = LatencyModel::extract(&engine).map_err(anyhow::Error::msg)?;
+            let path = args.out.as_deref().unwrap_or("model_a100.json");
+            model.save(path).map_err(anyhow::Error::msg)?;
+            let summary = format!(
+                "extracted {} instruction entries, {} memory levels, {} wmma dtypes -> {path}",
+                model.instructions.len(),
+                model.memory.len(),
+                model.wmma.len()
+            );
+            if args.json {
+                // stdout stays pure JSON (pipeable), like every other
+                // --json mode; progress goes to stderr.
+                eprintln!("{summary}");
+                println!("{}", model.to_json_string());
+            } else {
+                println!("{summary}");
+            }
+        }
+        "predict" => {
+            let target = args
+                .rest
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("usage: repro predict <instr|file.ptx>"))?;
+            let src = if std::path::Path::new(target).is_file() {
+                if args.dependent {
+                    // Same contract as the wire protocol: a raw kernel
+                    // already fixes its own dependence structure.
+                    anyhow::bail!(
+                        "--dependent only applies to registry instruction names, \
+                         not PTX files"
+                    );
+                }
+                std::fs::read_to_string(target)?
+            } else {
+                let row = registry::find(target).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "{target:?} is neither a PTX file nor a registry instruction; \
+                         valid names are:\n  {}",
+                        registry::names().join("\n  ")
+                    )
+                })?;
+                if args.dependent && !alu::can_chain(&row) {
+                    anyhow::bail!(
+                        "{target} cannot form a dependent chain (its destination \
+                         cannot feed the next instance's source)"
+                    );
+                }
+                alu::kernel_for(&row, args.dependent)
+            };
+            let model = load_or_extract(&args, &engine)?;
+            let oracle = LatencyOracle::with_engine(model, engine);
+            if let Some(mismatch) = oracle.config_mismatch() {
+                anyhow::bail!("{mismatch} (pass or drop --small to match the model)");
+            }
+            let check = oracle.cross_check(&src).map_err(anyhow::Error::msg)?;
+            let p = &check.predicted;
+            if args.json {
+                let per: Vec<Value> = p
+                    .per_instr
+                    .iter()
+                    .map(|i| {
+                        Value::obj()
+                            .set("name", i.name.as_str())
+                            .set("cost", i.cost)
+                            .set("chained", i.chained)
+                            .set("resolution", i.resolution.as_str())
+                    })
+                    .collect();
+                let v = Value::obj()
+                    .set("predicted_cpi", p.cpi)
+                    .set("predicted_cycles", p.cycles)
+                    .set("n", p.n)
+                    .set("unresolved", p.unresolved)
+                    .set("simulated_cpi", check.simulated.cpi)
+                    .set("simulated_delta", check.simulated.delta)
+                    .set("mapping", check.simulated.mapping.as_str())
+                    .set("matches", check.matches)
+                    .set("per_instruction", Value::Arr(per));
+                println!("{}", to_string_pretty(&v));
+            } else {
+                println!("static prediction ({} measured instructions):", p.n);
+                for i in &p.per_instr {
+                    println!(
+                        "  {:<24} {:>5} cycles  [{}{}]",
+                        i.name,
+                        i.cost,
+                        i.resolution.as_str(),
+                        if i.chained { ", chained" } else { "" }
+                    );
+                }
+                println!("  predicted: CPI {} ({} cycles)", p.cpi, p.cycles);
+                println!(
+                    "  simulated: CPI {} (Δ = {}, SASS {})",
+                    check.simulated.cpi, check.simulated.delta, check.simulated.mapping
+                );
+                println!(
+                    "  self-consistency: {}",
+                    if check.matches { "MATCH" } else { "MISMATCH" }
+                );
+            }
+            if !check.matches {
+                anyhow::bail!(
+                    "prediction {} != simulation {}",
+                    p.cpi,
+                    check.simulated.cpi
+                );
+            }
+        }
+        "serve" => {
+            let model = load_or_extract(&args, &engine)?;
+            let oracle = Arc::new(LatencyOracle::with_engine(model, engine));
+            if let Some(mismatch) = oracle.config_mismatch() {
+                anyhow::bail!("{mismatch} (pass or drop --small to match the model)");
+            }
+            let port = args.port.unwrap_or(serve::DEFAULT_PORT);
+            let server = Server::bind(oracle, &format!("127.0.0.1:{port}"))?;
+            println!("latency oracle serving on {}", server.local_addr()?);
+            println!("protocol: one JSON request per line (array = batch); see `repro -h`");
+            server.run()?;
         }
         "" => {
             print!("{USAGE}");

@@ -259,10 +259,7 @@ mod tests {
     /// Scaled-down config so cache-capacity effects appear with small
     /// simulated footprints (latencies unchanged).
     fn small_cfg() -> AmpereConfig {
-        let mut c = AmpereConfig::a100();
-        c.memory.l2_bytes = 512 * 1024;
-        c.memory.l1_bytes = 32 * 1024;
-        c
+        AmpereConfig::small()
     }
 
     #[test]

@@ -127,7 +127,9 @@ pub(crate) const MEASUREMENT_PARAMS: &[u64] = &[0x100000];
 /// Extract a [`Measurement`] from a finished protocol run: Δ from the
 /// outermost clock reads, CPI per the paper's formula, and the SASS
 /// mapping of the first measured instruction from the dynamic trace.
-fn finish_measurement(
+/// `pub(crate)`: the oracle's live-simulation fallback shares this so
+/// the serving path can never diverge from the campaign's protocol.
+pub(crate) fn finish_measurement(
     prog: &crate::ptx::PtxProgram,
     trace: &TraceRecorder,
     r: &RunResult,

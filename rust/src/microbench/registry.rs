@@ -433,6 +433,26 @@ pub fn table5() -> Vec<Row> {
     ]
 }
 
+/// The registry built once, for lookup-heavy callers: the oracle's
+/// serving path resolves `{"instr": …}` requests per message, and must
+/// not pay full table construction before its prediction cache.
+fn cached_rows() -> &'static [Row] {
+    static ROWS: std::sync::OnceLock<Vec<Row>> = std::sync::OnceLock::new();
+    ROWS.get_or_init(table5)
+}
+
+/// Look one Table V row up by its paper name (`add.u32`,
+/// `mov.u32 clock`, …).
+pub fn find(name: &str) -> Option<Row> {
+    cached_rows().iter().find(|r| r.name == name).cloned()
+}
+
+/// Every registry row name, in paper order (CLI listings and error
+/// messages).
+pub fn names() -> Vec<&'static str> {
+    cached_rows().iter().map(|r| r.name).collect()
+}
+
 /// Table II's five instructions with (dep, indep) paper CPIs.
 pub fn table2() -> Vec<(&'static str, u64, u64)> {
     vec![
@@ -466,6 +486,16 @@ mod tests {
                 assert!(r.template.contains("%A"), "{}", r.name);
             }
         }
+    }
+
+    #[test]
+    fn find_and_names_agree_with_table5() {
+        assert_eq!(find("add.u32").unwrap().paper_sass, "IADD");
+        assert_eq!(find("mov.u32 clock").unwrap().paper_sass, "CS2R.32");
+        assert!(find("warp.drive").is_none());
+        let names = names();
+        assert_eq!(names.len(), table5().len());
+        assert!(names.contains(&"min.f64"));
     }
 
     #[test]

@@ -1,0 +1,431 @@
+//! Request batching and the LRU prediction cache.
+//!
+//! * [`LruCache`] — the oracle's prediction cache, keyed by kernel hash.
+//!   Plain `HashMap` + recency deque with hit/miss/eviction counters;
+//!   move-to-back is a linear scan, which is far below measurement noise
+//!   at serving cache sizes (≤ a few thousand entries of `u64` keys).
+//! * [`Request`] / [`parse_request`] — one wire-protocol request
+//!   (see [`super::serve`] for the framing: one JSON value per line,
+//!   a JSON *array* is a batch).
+//! * [`handle_batch`] — runs a batch across the engine's worker pool
+//!   and returns responses in request order (the queue's deterministic
+//!   ordering, so batched clients can correlate by position as well as
+//!   by id).
+
+use super::LatencyOracle;
+use crate::microbench::{alu, registry};
+use crate::util::json::Value;
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
+
+/// Cache observability counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Least-recently-used cache with hit statistics.
+#[derive(Debug)]
+pub struct LruCache<K: Eq + Hash + Clone, V: Clone> {
+    cap: usize,
+    map: HashMap<K, V>,
+    /// Recency order, oldest at the front.
+    order: VecDeque<K>,
+    counters: CacheCounters,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> LruCache<K, V> {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            cap,
+            map: HashMap::with_capacity(cap),
+            order: VecDeque::with_capacity(cap),
+            counters: CacheCounters::default(),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        self.counters
+    }
+
+    fn touch(&mut self, key: &K) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            self.order.remove(pos);
+        }
+        self.order.push_back(key.clone());
+    }
+
+    /// Borrow `key`'s value without refreshing recency or moving the
+    /// hit/miss counters — for dispatch probes and collision checks
+    /// that must not distort statistics.
+    pub fn peek_value(&self, key: &K) -> Option<&V> {
+        self.map.get(key)
+    }
+
+    /// Look `key` up, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        match self.map.get(key).cloned() {
+            Some(v) => {
+                self.counters.hits += 1;
+                self.touch(key);
+                Some(v)
+            }
+            None => {
+                self.counters.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key`, evicting the least-recently-used entry
+    /// when full.
+    pub fn put(&mut self, key: K, value: V) {
+        if self.map.insert(key.clone(), value).is_some() {
+            self.touch(&key);
+            return;
+        }
+        self.order.push_back(key);
+        if self.map.len() > self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+                self.counters.evictions += 1;
+            }
+        }
+    }
+
+    /// Reclassify the most recent `get` hit as a miss — for callers
+    /// whose post-lookup validation (the oracle's source equality check
+    /// on a hash collision) rejects the returned entry.  Keeps
+    /// `hits + misses == lookups` exact for the stats endpoint.
+    pub fn reclassify_hit_as_miss(&mut self) {
+        self.counters.hits = self.counters.hits.saturating_sub(1);
+        self.counters.misses += 1;
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+    }
+}
+
+/// Request mode over the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Static prediction from the model (LRU-cached by kernel hash).
+    Predict,
+    /// Live simulation of the kernel on the engine's simulator pool.
+    Simulate,
+    /// Self-consistency: predict *and* simulate, report whether the
+    /// CPIs agree.
+    Check,
+    /// Oracle / cache / engine statistics.
+    Stats,
+    Ping,
+}
+
+impl Mode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Mode::Predict => "predict",
+            Mode::Simulate => "simulate",
+            Mode::Check => "check",
+            Mode::Stats => "stats",
+            Mode::Ping => "ping",
+        }
+    }
+}
+
+/// One parsed wire request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Echoed verbatim in the response when present.
+    pub id: Option<Value>,
+    pub mode: Mode,
+    /// Raw PTX kernel source.
+    pub kernel: Option<String>,
+    /// Registry row name (`add.u32`) — the server generates the row's
+    /// microbenchmark kernel.  Mutually exclusive with `kernel`.
+    pub instr: Option<String>,
+    /// With `instr`: generate the dependent-chain variant.
+    pub dependent: bool,
+}
+
+/// Parse one JSON object into a [`Request`].
+pub fn parse_request(v: &Value) -> Result<Request, String> {
+    let obj = v.as_obj().ok_or("request must be a JSON object")?;
+    for key in obj.keys() {
+        if !matches!(key.as_str(), "id" | "mode" | "kernel" | "instr" | "dependent") {
+            return Err(format!("unknown request field {key:?}"));
+        }
+    }
+    // Wrong-typed fields are hard errors, not silent defaults — a
+    // coerced "dependent" would hand back the wrong CPI with ok:true.
+    let string_field = |key: &str| -> Result<Option<String>, String> {
+        match v.get(key) {
+            None => Ok(None),
+            Some(f) => f
+                .as_str()
+                .map(|s| Some(s.to_string()))
+                .ok_or_else(|| format!("{key:?} must be a string")),
+        }
+    };
+    let mode = match string_field("mode")?.as_deref() {
+        None | Some("predict") => Mode::Predict,
+        Some("simulate") => Mode::Simulate,
+        Some("check") => Mode::Check,
+        Some("stats") => Mode::Stats,
+        Some("ping") => Mode::Ping,
+        Some(other) => return Err(format!("unknown mode {other:?}")),
+    };
+    let kernel = string_field("kernel")?;
+    let instr = string_field("instr")?;
+    if kernel.is_some() && instr.is_some() {
+        return Err("request carries both \"kernel\" and \"instr\"".to_string());
+    }
+    if kernel.is_none() && instr.is_none() && !matches!(mode, Mode::Stats | Mode::Ping) {
+        return Err(format!("mode {:?} needs \"kernel\" or \"instr\"", mode.as_str()));
+    }
+    let dependent = match v.get("dependent") {
+        None => false,
+        Some(d) => d
+            .as_bool()
+            .ok_or_else(|| "\"dependent\" must be a boolean".to_string())?,
+    };
+    if dependent && kernel.is_some() {
+        return Err(
+            "\"dependent\" only applies to \"instr\" requests (a raw kernel already \
+             fixes its own dependence structure)"
+                .to_string(),
+        );
+    }
+    Ok(Request { id: v.get("id").cloned(), mode, kernel, instr, dependent })
+}
+
+/// Resolve the request's kernel source: raw PTX verbatim, or the
+/// registry row's generated microbenchmark.
+fn resolve_kernel(req: &Request) -> Result<String, String> {
+    if let Some(src) = &req.kernel {
+        return Ok(src.clone());
+    }
+    let name = req.instr.as_deref().ok_or("no kernel in request")?;
+    let row = registry::find(name)
+        .ok_or_else(|| format!("unknown instruction {name:?}; see `repro table5`"))?;
+    // Same guard the campaign applies (`measure_row_inner`): a row
+    // whose destination can't feed the next source has no measured
+    // dependent variant — generating one anyway would serve numbers
+    // the model never saw.
+    if req.dependent && !alu::can_chain(&row) {
+        return Err(format!("{name:?} cannot form a dependent chain"));
+    }
+    Ok(alu::kernel_for(&row, req.dependent))
+}
+
+fn err_response(id: Option<&Value>, message: &str) -> Value {
+    let mut v = Value::obj().set("ok", false).set("error", message);
+    if let Some(id) = id {
+        v = v.set("id", id.clone());
+    }
+    v
+}
+
+fn ok_response(id: Option<&Value>, mode: Mode) -> Value {
+    let mut v = Value::obj().set("ok", true).set("mode", mode.as_str());
+    if let Some(id) = id {
+        v = v.set("id", id.clone());
+    }
+    v
+}
+
+/// The request id alone, pulled from a raw value before full parsing —
+/// the wire contract echoes `id` even on validation failures, so the
+/// id must survive a `parse_request` error.
+pub fn request_id(v: &Value) -> Option<Value> {
+    v.get("id").cloned()
+}
+
+/// Serve one request.  Never panics outward: every failure becomes an
+/// `{"ok": false, "error": …, "id": …}` response (`id` from
+/// [`request_id`], echoed whether or not parsing succeeded).
+pub fn handle(
+    oracle: &LatencyOracle,
+    id: Option<Value>,
+    parsed: Result<Request, String>,
+) -> Value {
+    let req = match parsed {
+        Ok(r) => r,
+        Err(e) => return err_response(id.as_ref(), &e),
+    };
+    match handle_inner(oracle, &req) {
+        Ok(v) => v,
+        Err(e) => err_response(req.id.as_ref(), &e),
+    }
+}
+
+fn handle_inner(oracle: &LatencyOracle, req: &Request) -> Result<Value, String> {
+    let id = req.id.as_ref();
+    match req.mode {
+        Mode::Ping => Ok(ok_response(id, Mode::Ping).set("pong", true)),
+        Mode::Stats => Ok(ok_response(id, Mode::Stats).set("stats", oracle.stats_json())),
+        Mode::Predict => {
+            let src = resolve_kernel(req)?;
+            let (p, cached) = oracle.predict_cached(&src)?;
+            Ok(ok_response(id, Mode::Predict)
+                .set("cpi", p.cpi)
+                .set("cycles", p.cycles)
+                .set("n", p.n)
+                .set("unresolved", p.unresolved)
+                .set("cached", cached))
+        }
+        Mode::Simulate => {
+            let src = resolve_kernel(req)?;
+            let s = oracle.simulate(&src)?;
+            Ok(ok_response(id, Mode::Simulate)
+                .set("cpi", s.cpi)
+                .set("delta", s.delta)
+                .set("n", s.n)
+                .set("mapping", s.mapping.as_str()))
+        }
+        Mode::Check => {
+            let src = resolve_kernel(req)?;
+            let c = oracle.cross_check(&src)?;
+            Ok(ok_response(id, Mode::Check)
+                .set("predicted_cpi", c.predicted.cpi)
+                .set("simulated_cpi", c.simulated.cpi)
+                .set("matches", c.matches))
+        }
+    }
+}
+
+/// Serve a batch; responses come back in request order.
+///
+/// Batches with real work — anything touching the simulator
+/// (`simulate` / `check`), or predictions whose kernels are not yet
+/// cached (compile + dataflow on a miss) — fan out across the engine's
+/// worker pool.  Fully warm prediction batches run inline: a
+/// cache-served prediction is a hash lookup, far cheaper than
+/// scheduling it.
+pub fn handle_batch(
+    oracle: &LatencyOracle,
+    parsed: Vec<(Option<Value>, Result<Request, String>)>,
+) -> Vec<Value> {
+    let needs_pool = parsed.iter().any(|(_, p)| match p {
+        Ok(r) => match r.mode {
+            Mode::Simulate | Mode::Check => true,
+            // Probe without distorting hit stats.  Raw kernels are
+            // checked by borrow (no clone of a multi-KiB source);
+            // registry rows regenerate their µs-scale kernel once —
+            // noise next to a compile-on-miss.
+            Mode::Predict => match &r.kernel {
+                Some(src) => !oracle.is_prediction_cached(src),
+                None => resolve_kernel(r)
+                    .map(|src| !oracle.is_prediction_cached(&src))
+                    .unwrap_or(false),
+            },
+            Mode::Stats | Mode::Ping => false,
+        },
+        Err(_) => false,
+    });
+    if parsed.len() <= 1 || !needs_pool {
+        return parsed
+            .into_iter()
+            .map(|(id, p)| handle(oracle, id, p))
+            .collect();
+    }
+    let jobs: Vec<_> = parsed
+        .into_iter()
+        .map(|(id, p)| move || handle(oracle, id, p))
+        .collect();
+    oracle.engine().run_all(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn lru_hits_misses_and_eviction_order() {
+        let mut c: LruCache<u64, u64> = LruCache::new(2);
+        assert_eq!(c.get(&1), None);
+        c.put(1, 10);
+        c.put(2, 20);
+        assert_eq!(c.get(&1), Some(10), "1 refreshed — now most recent");
+        c.put(3, 30); // evicts 2, the least recently used
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some(10));
+        assert_eq!(c.get(&3), Some(30));
+        let s = c.counters();
+        assert_eq!((s.hits, s.misses, s.evictions), (3, 2, 1));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn lru_refresh_does_not_grow_or_evict() {
+        let mut c: LruCache<u64, u64> = LruCache::new(2);
+        c.put(1, 10);
+        c.put(1, 11);
+        c.put(1, 12);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&1), Some(12));
+        assert_eq!(c.counters().evictions, 0);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.get(&1), None);
+    }
+
+    #[test]
+    fn lru_cap_one_still_caches() {
+        let mut c: LruCache<u64, u64> = LruCache::new(1);
+        c.put(1, 10);
+        assert_eq!(c.get(&1), Some(10));
+        c.put(2, 20);
+        assert_eq!(c.get(&1), None);
+        assert_eq!(c.get(&2), Some(20));
+        assert_eq!(c.counters().evictions, 1);
+    }
+
+    #[test]
+    fn request_parsing_and_validation() {
+        let r = parse_request(&parse(r#"{"mode":"predict","instr":"add.u32","id":7}"#).unwrap())
+            .unwrap();
+        assert_eq!(r.mode, Mode::Predict);
+        assert_eq!(r.instr.as_deref(), Some("add.u32"));
+        assert!(!r.dependent);
+
+        // mode defaults to predict
+        let r = parse_request(&parse(r#"{"kernel":"…"}"#).unwrap()).unwrap();
+        assert_eq!(r.mode, Mode::Predict);
+
+        // ping needs no kernel
+        assert!(parse_request(&parse(r#"{"mode":"ping"}"#).unwrap()).is_ok());
+
+        for bad in [
+            r#"{"mode":"predict"}"#,                        // no kernel
+            r#"{"mode":"warp-drive","instr":"add.u32"}"#,   // unknown mode
+            r#"{"instr":"add.u32","kernel":"x"}"#,          // both sources
+            r#"{"instr":"add.u32","typo":1}"#,              // unknown field
+            r#"[1,2]"#,                                     // not an object
+            r#"{"mode":true,"instr":"add.u32"}"#,           // wrong-typed mode
+            r#"{"instr":"add.u32","dependent":"true"}"#,    // wrong-typed flag
+            r#"{"kernel":42}"#,                             // wrong-typed kernel
+            r#"{"kernel":"x","dependent":true}"#,           // flag needs instr
+        ] {
+            assert!(parse_request(&parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+}

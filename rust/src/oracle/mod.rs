@@ -1,0 +1,392 @@
+//! Latency oracle: the campaign's measurements served as an analytical
+//! performance model.
+//!
+//! The repo's other layers *reproduce* the paper's tables; this one
+//! *consumes* them, the way the paper says its numbers are used ("the
+//! clock cycles per instructions are widely used by performance modeling
+//! simulators and tools").  Four pieces:
+//!
+//! * [`model`] — run the Table I/II/III/IV/V campaigns once through the
+//!   [`Engine`] and distill them into a serializable [`LatencyModel`]
+//!   (JSON via `util::json`, reloadable without re-simulation);
+//! * [`predict`] — statically predict a kernel's measured cycles from
+//!   the model: measurement-window detection, a dataflow pass for
+//!   dependent-chain classification, instruction classes resolved
+//!   through display names and the translator's SASS mappings;
+//! * [`batch`] — the LRU prediction cache (keyed by kernel hash) and
+//!   batch execution across the engine's worker pool;
+//! * [`serve`] — a `std::net::TcpListener` JSON-line protocol server
+//!   (no external deps) with protocol-level batching.
+//!
+//! [`LatencyOracle`] ties them together: predictions are cache-served,
+//! `simulate` requests fall back to the engine's simulator pool, and
+//! `check` cross-validates a static prediction against a live run of
+//! the same kernel (the self-consistency mode the acceptance test pins
+//! over every Table V row).
+
+pub mod batch;
+pub mod model;
+pub mod predict;
+pub mod serve;
+
+pub use batch::{CacheCounters, LruCache, Mode, Request};
+pub use model::{InstrEntry, LatencyModel, WmmaEntry};
+pub use predict::{InstrPrediction, Prediction, Resolution};
+pub use serve::{Server, ServerHandle};
+
+use crate::engine::{CompiledKernel, Engine};
+use crate::ptx::parse_program;
+use crate::translate::translate_program;
+use crate::util::json::Value;
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default LRU prediction-cache capacity.
+pub const DEFAULT_CACHE_CAP: usize = 1024;
+
+/// Compiled-kernel LRU capacity for the serving path.  The engine's own
+/// `KernelCache` is content-addressed and *unbounded* — right for a
+/// finite campaign, wrong for a server fed arbitrary client kernels
+/// forever — so the oracle compiles through its own bounded cache.
+pub const COMPILED_CACHE_CAP: usize = 512;
+
+/// One live simulation of a kernel under the measurement protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulatedRun {
+    /// Measured CPI (`floor((Δ − overhead) / n)` for bracketed kernels).
+    pub cpi: u64,
+    /// Raw clock delta (total issue cycles for unbracketed kernels).
+    pub delta: u64,
+    /// Instructions in the measured window.
+    pub n: u64,
+    /// Dynamic SASS mapping of the first measured instruction.
+    pub mapping: String,
+}
+
+/// A static prediction next to a live simulation of the same kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrossCheck {
+    pub predicted: Prediction,
+    pub simulated: SimulatedRun,
+    /// Do the CPIs agree exactly?
+    pub matches: bool,
+}
+
+/// Oracle observability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OracleStats {
+    pub cache: CacheCounters,
+    pub cache_len: usize,
+    pub cache_cap: usize,
+    /// Bounded compiled-kernel LRU counters.
+    pub compiled: CacheCounters,
+    pub compiled_len: usize,
+    /// Predictions computed (cache misses + uncached calls).
+    pub predictions: u64,
+    /// Live simulations served.
+    pub simulations: u64,
+}
+
+/// The oracle: an extracted [`LatencyModel`], the [`Engine`] it falls
+/// back to for live simulation, and the LRU prediction cache.
+///
+/// Shared by reference across server worker threads (`&LatencyOracle`
+/// is `Sync`: the cache sits behind a mutex, the engine behind its own
+/// internal locks).
+pub struct LatencyOracle {
+    model: LatencyModel,
+    engine: Engine,
+    /// Predictions cached behind `Arc` so a warm hit clones a pointer,
+    /// not the per-instruction breakdown.  Entries carry the full
+    /// source: the map key is a bare 64-bit hash (cheap borrowed
+    /// lookups), so every hit equality-checks the source — a crafted
+    /// hash collision degrades to a miss, never to another kernel's
+    /// numbers (the same guarantee the engine's content-addressed
+    /// `KernelCache` gives).
+    cache: Mutex<LruCache<u64, (Arc<str>, Arc<Prediction>)>>,
+    /// Bounded parse+translate cache for client kernels (see
+    /// [`COMPILED_CACHE_CAP`]); same collision-checked layout.
+    compiled: Mutex<LruCache<u64, (Arc<str>, Arc<CompiledKernel>)>>,
+    predictions: AtomicU64,
+    simulations: AtomicU64,
+}
+
+impl LatencyOracle {
+    /// Oracle over an existing engine (must share the config the model
+    /// was extracted under for `check` mode to be meaningful).
+    pub fn with_engine(model: LatencyModel, engine: Engine) -> Self {
+        Self {
+            model,
+            engine,
+            cache: Mutex::new(LruCache::new(DEFAULT_CACHE_CAP)),
+            compiled: Mutex::new(LruCache::new(COMPILED_CACHE_CAP)),
+            predictions: AtomicU64::new(0),
+            simulations: AtomicU64::new(0),
+        }
+    }
+
+    pub fn model(&self) -> &LatencyModel {
+        &self.model
+    }
+
+    /// `Some(description)` when the engine's cache geometry differs
+    /// from the config the model was extracted under — live simulation
+    /// (`simulate`/`check`) would then disagree with the model on
+    /// memory-touching kernels for a reason the caller can't see.
+    pub fn config_mismatch(&self) -> Option<String> {
+        let mem = &self.engine.cfg().memory;
+        if (mem.l1_bytes as u64, mem.l2_bytes as u64) == (self.model.l1_bytes, self.model.l2_bytes)
+        {
+            None
+        } else {
+            Some(format!(
+                "model was extracted with L1/L2 = {}/{} bytes, engine has {}/{}",
+                self.model.l1_bytes, self.model.l2_bytes, mem.l1_bytes, mem.l2_bytes
+            ))
+        }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn kernel_hash(src: &str) -> u64 {
+        let mut h = DefaultHasher::new();
+        src.hash(&mut h);
+        h.finish()
+    }
+
+    /// Parse + translate through the oracle's *bounded* kernel LRU —
+    /// repeated kernels compile once, and a server fed endless distinct
+    /// kernels stays at a fixed memory footprint.
+    fn compile(&self, src: &str) -> Result<Arc<CompiledKernel>, String> {
+        let key = Self::kernel_hash(src);
+        {
+            let mut compiled = self.compiled.lock().unwrap();
+            if let Some((stored, k)) = compiled.get(&key) {
+                if stored.as_ref() == src {
+                    return Ok(k);
+                }
+                compiled.reclassify_hit_as_miss();
+            }
+        }
+        let prog = parse_program(src).map_err(|e| format!("parse: {e}"))?;
+        let tp = translate_program(&prog).map_err(|e| format!("translate: {e}"))?;
+        let k = Arc::new(CompiledKernel { prog, tp });
+        self.compiled
+            .lock()
+            .unwrap()
+            .put(key, (Arc::from(src), Arc::clone(&k)));
+        Ok(k)
+    }
+
+    /// Predict without consulting the prediction cache.
+    pub fn predict_src(&self, src: &str) -> Result<Prediction, String> {
+        let kernel = self.compile(src)?;
+        self.predictions.fetch_add(1, Ordering::Relaxed);
+        predict::predict(&self.model, &kernel.prog, &kernel.tp)
+    }
+
+    /// Cache-served prediction keyed by kernel hash.  Returns the
+    /// prediction and whether it was a cache hit.
+    pub fn predict_cached(&self, src: &str) -> Result<(Arc<Prediction>, bool), String> {
+        let key = Self::kernel_hash(src);
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if let Some((stored, p)) = cache.get(&key) {
+                if stored.as_ref() == src {
+                    return Ok((p, true));
+                }
+                // Hash collision: count it as the miss it really is and
+                // recompute (the put below replaces the colliding entry).
+                cache.reclassify_hit_as_miss();
+            }
+        }
+        let p = Arc::new(self.predict_src(src)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .put(key, (Arc::from(src), Arc::clone(&p)));
+        Ok((p, false))
+    }
+
+    /// Is this kernel's prediction already cached?  Stats-neutral (no
+    /// hit/miss counted, no recency refresh) — the batch dispatcher's
+    /// probe.
+    pub fn is_prediction_cached(&self, src: &str) -> bool {
+        matches!(
+            self.cache.lock().unwrap().peek_value(&Self::kernel_hash(src)),
+            Some((stored, _)) if stored.as_ref() == src
+        )
+    }
+
+    /// Live simulation under the measurement protocol: *n* is derived
+    /// from the kernel's own clock brackets, so arbitrary protocol
+    /// kernels (not just registry rows) simulate correctly — provided
+    /// the measured window is straight-line (loops belong outside the
+    /// brackets, as in the paper's own warm loops; a loop *through* the
+    /// window would divide a dynamic delta by a static count and is
+    /// rejected instead of served wrong).
+    pub fn simulate(&self, src: &str) -> Result<SimulatedRun, String> {
+        let kernel = self.compile(src)?;
+        let (body, bracketed) = predict::measured_body(&kernel.prog);
+        if body.is_empty() {
+            return Err("kernel has no measurable instructions".to_string());
+        }
+        predict::check_straight_line(&kernel.prog, &body, bracketed)?;
+        self.simulations.fetch_add(1, Ordering::Relaxed);
+        let mut sim = self.engine.simulator();
+        let r = sim
+            .run(&kernel.prog, &kernel.tp, crate::microbench::MEASUREMENT_PARAMS)
+            .map_err(|e| e.to_string())?;
+        let n = body.len() as u64;
+        if bracketed {
+            // Bracketed kernels go through the campaign's own protocol
+            // extraction — one formula, shared, so serving can never
+            // drift from how the model's numbers were measured.
+            let m = crate::microbench::finish_measurement(
+                &kernel.prog,
+                &sim.trace,
+                &r,
+                n,
+                "serve",
+                false,
+            )?;
+            Ok(SimulatedRun { cpi: m.cpi, delta: m.delta, n, mapping: m.mapping })
+        } else {
+            let mapping = sim.trace.mapping_for(body[0] as u32);
+            Ok(SimulatedRun { cpi: r.cycles / n, delta: r.cycles, n, mapping })
+        }
+    }
+
+    /// Self-consistency mode: static prediction vs live simulation of
+    /// the same kernel.
+    pub fn cross_check(&self, src: &str) -> Result<CrossCheck, String> {
+        let predicted = self.predict_src(src)?;
+        let simulated = self.simulate(src)?;
+        let matches = predicted.cpi == simulated.cpi;
+        Ok(CrossCheck { predicted, simulated, matches })
+    }
+
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    pub fn stats(&self) -> OracleStats {
+        let cache = self.cache.lock().unwrap();
+        let compiled = self.compiled.lock().unwrap();
+        OracleStats {
+            cache: cache.counters(),
+            cache_len: cache.len(),
+            cache_cap: cache.cap(),
+            compiled: compiled.counters(),
+            compiled_len: compiled.len(),
+            predictions: self.predictions.load(Ordering::Relaxed),
+            simulations: self.simulations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stats as a wire-protocol JSON object.
+    pub fn stats_json(&self) -> Value {
+        let s = self.stats();
+        let es = self.engine.cache_stats();
+        let ps = self.engine.pool_stats();
+        Value::obj()
+            .set(
+                "cache",
+                Value::obj()
+                    .set("hits", s.cache.hits)
+                    .set("misses", s.cache.misses)
+                    .set("evictions", s.cache.evictions)
+                    .set("len", s.cache_len)
+                    .set("cap", s.cache_cap),
+            )
+            .set(
+                "compiled",
+                Value::obj()
+                    .set("hits", s.compiled.hits)
+                    .set("misses", s.compiled.misses)
+                    .set("evictions", s.compiled.evictions)
+                    .set("len", s.compiled_len),
+            )
+            .set("predictions", s.predictions)
+            .set("simulations", s.simulations)
+            .set(
+                "engine",
+                Value::obj()
+                    .set("kernels", es.entries)
+                    .set("kernel_hits", es.hits)
+                    .set("sims_created", ps.created)
+                    .set("sims_reused", ps.reused)
+                    .set("workers", self.engine.workers()),
+            )
+            .set(
+                "model",
+                Value::obj()
+                    .set("arch", self.model.arch.as_str())
+                    .set("instructions", self.model.instructions.len())
+                    .set("memory_levels", self.model.memory.len())
+                    .set("wmma_dtypes", self.model.wmma.len()),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AmpereConfig;
+    use crate::microbench::measurement_kernel;
+
+    fn oracle() -> LatencyOracle {
+        LatencyOracle::with_engine(model::tiny_model(), Engine::new(AmpereConfig::a100()))
+    }
+
+    fn add_kernel(imm: u64) -> String {
+        measurement_kernel(
+            "add.u32 %r5, 1, 2; add.u32 %r6, 3, 4; add.u32 %r7, 5, 6;",
+            &format!(
+                "add.u32 %r20, %r5, {imm};\n add.u32 %r21, %r6, {imm};\n add.u32 %r22, %r7, {imm};"
+            ),
+        )
+    }
+
+    #[test]
+    fn cached_prediction_hits_on_second_lookup() {
+        let o = oracle();
+        let src = add_kernel(1);
+        let (p1, hit1) = o.predict_cached(&src).unwrap();
+        let (p2, hit2) = o.predict_cached(&src).unwrap();
+        assert!(!hit1 && hit2);
+        assert_eq!(p1, p2);
+        assert_eq!(p1.cpi, 2);
+        let s = o.stats();
+        assert_eq!(s.predictions, 1, "second lookup never re-predicted");
+        assert_eq!((s.cache.hits, s.cache.misses), (1, 1));
+        o.clear_cache();
+        let (_, hit3) = o.predict_cached(&src).unwrap();
+        assert!(!hit3);
+    }
+
+    #[test]
+    fn cross_check_agrees_on_add_u32() {
+        // The tiny model's add.u32 entries are the true simulated values,
+        // so prediction and simulation must agree end to end.
+        let o = oracle();
+        let c = o.cross_check(&add_kernel(1)).unwrap();
+        assert!(c.matches, "{c:?}");
+        assert_eq!(c.predicted.cpi, 2);
+        assert_eq!(c.simulated.mapping, "IADD");
+        assert_eq!(o.stats().simulations, 1);
+    }
+
+    #[test]
+    fn simulate_rejects_empty_kernels() {
+        let o = oracle();
+        let err = o
+            .simulate(".visible .entry k() { .reg .b32 %r<9>; ret; }")
+            .unwrap_err();
+        assert!(err.contains("no measurable"), "{err}");
+    }
+}

@@ -1,0 +1,448 @@
+//! Static prediction: estimate a kernel's measured cycles from the
+//! extracted [`LatencyModel`] without running the simulator.
+//!
+//! The pass mirrors the paper's measurement protocol in reverse:
+//!
+//! 1. locate the measured window — the instructions bracketed by the
+//!    outermost clock reads (kernels without brackets fall back to the
+//!    whole body minus control flow);
+//! 2. run a dataflow pass over the window: an instruction whose source
+//!    was produced by another in-window instruction forms a *dependent
+//!    chain* with its producer, and every chain member is costed at the
+//!    row's dependent-chain CPI (exactly how the dependent variant of
+//!    the microbenchmark is measured — the chain head is part of the
+//!    measured average);
+//! 3. resolve each instruction class to a model entry: display name
+//!    first, then the dynamic-SASS mapping the translator assigns
+//!    (context-sensitive, so `neg.f32` after a `mov` init resolves
+//!    differently than after arithmetic), memory ops by level via their
+//!    state space + cache operator, WMMA by fragment dtype;
+//! 4. sum per-instruction costs; CPI follows the paper's formula
+//!    `floor(total / n)`.
+//!
+//! Predictions are *steady-state*: Table I's cold-start amortisation is
+//! carried in the model (`cold_start_cpi`) but not applied per kernel.
+
+use super::model::LatencyModel;
+use crate::ptx::ast::WmmaOp;
+use crate::ptx::{Operand, PtxInstruction, PtxOp, PtxProgram, SpecialReg};
+use crate::ptx::{CacheOp, StateSpace};
+use crate::tensor::WmmaDtype;
+use crate::translate::TranslatedProgram;
+use std::collections::HashMap;
+
+/// How one instruction's cost was resolved against the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resolution {
+    /// Display-name hit in the instruction table.
+    Name,
+    /// Fallback hit via the translated SASS mapping string.
+    Sass,
+    /// Memory table (level from state space + cache operator).
+    Memory,
+    /// Tensor-core table (dtype from the fragment types).
+    Wmma,
+    /// Nothing matched — costed at the model's default CPI.
+    Default,
+}
+
+impl Resolution {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Resolution::Name => "name",
+            Resolution::Sass => "sass",
+            Resolution::Memory => "memory",
+            Resolution::Wmma => "wmma",
+            Resolution::Default => "default",
+        }
+    }
+}
+
+/// One instruction's predicted cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstrPrediction {
+    /// PTX instruction index in the program.
+    pub idx: usize,
+    /// Dotted display name (`add.u32`, `ld.global.cv.u64`).
+    pub name: String,
+    /// Predicted cycles charged to this instruction.
+    pub cost: u64,
+    /// Member of a dependent chain inside the measured window?
+    pub chained: bool,
+    pub resolution: Resolution,
+}
+
+/// A kernel-level prediction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    /// Measured-window instruction count (the protocol's *n*).
+    pub n: u64,
+    /// Predicted clock delta (includes the clock overhead when the
+    /// kernel carries protocol brackets).
+    pub cycles: u64,
+    /// Predicted CPI under the paper's formula.
+    pub cpi: u64,
+    /// Whether the kernel had clock-read brackets.
+    pub bracketed: bool,
+    /// Instructions that fell through to the default cost.
+    pub unresolved: usize,
+    pub per_instr: Vec<InstrPrediction>,
+}
+
+/// Does this instruction read a clock special register?
+pub fn reads_clock(ins: &PtxInstruction) -> bool {
+    ins.srcs.iter().any(|o| {
+        matches!(
+            o,
+            Operand::Special(SpecialReg::Clock) | Operand::Special(SpecialReg::Clock64)
+        )
+    })
+}
+
+/// Outermost clock-read bracket `(first, last)` when the kernel follows
+/// the measurement protocol (two or more clock reads).
+pub fn clock_window(prog: &PtxProgram) -> Option<(usize, usize)> {
+    let mut first = None;
+    let mut last = None;
+    for (i, ins) in prog.instrs.iter().enumerate() {
+        if reads_clock(ins) {
+            if first.is_none() {
+                first = Some(i);
+            }
+            last = Some(i);
+        }
+    }
+    match (first, last) {
+        (Some(f), Some(l)) if f < l => Some((f, l)),
+        _ => None,
+    }
+}
+
+/// The measured instruction indices and whether they came from protocol
+/// brackets.  Bracketed kernels measure exactly the instructions between
+/// the outermost clock reads (clock reads *inside* the window are
+/// themselves measured — Table V's `mov.u32 clock` row); unbracketed
+/// kernels fall back to every non-control instruction.
+pub fn measured_body(prog: &PtxProgram) -> (Vec<usize>, bool) {
+    if let Some((f, l)) = clock_window(prog) {
+        ((f + 1..l).collect(), true)
+    } else {
+        let body = prog
+            .instrs
+            .iter()
+            .enumerate()
+            .filter(|(_, ins)| !matches!(ins.op, PtxOp::Ret | PtxOp::Exit | PtxOp::Bra))
+            .map(|(i, _)| i)
+            .collect();
+        (body, false)
+    }
+}
+
+/// The protocol's CPI formula divides one clock delta by the *static*
+/// body size, so re-executing the measured window (a loop through it)
+/// would silently distort every per-instruction number.  Kernels may
+/// loop freely *outside* the brackets — Table IV's warm loops do — but
+/// inside, execution must be straight-line.  Unbracketed kernels with
+/// any control flow are rejected outright: without brackets the static
+/// count is the only *n* available.
+pub fn check_straight_line(
+    prog: &PtxProgram,
+    body: &[usize],
+    bracketed: bool,
+) -> Result<(), String> {
+    let (lo, hi) = match (body.first(), body.last()) {
+        (Some(&lo), Some(&hi)) => (lo, hi),
+        _ => return Ok(()),
+    };
+    for (idx, ins) in prog.instrs.iter().enumerate() {
+        if ins.op != PtxOp::Bra {
+            continue;
+        }
+        if !bracketed {
+            return Err(
+                "kernel has branches but no clock brackets; per-instruction \
+                 cycles would be ill-defined"
+                    .to_string(),
+            );
+        }
+        if (lo..=hi).contains(&idx) {
+            return Err(
+                "branch inside the measured clock window; the protocol needs a \
+                 straight-line body (loop outside the brackets instead)"
+                    .to_string(),
+            );
+        }
+        for s in &ins.srcs {
+            if let Operand::Target(t) = s {
+                if (lo..=hi).contains(&(*t as usize)) {
+                    return Err(
+                        "branch targets the measured clock window; the body would \
+                         re-execute and break the CPI formula"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Memory-model key for a load/store (level selection mirrors the
+/// paper's §IV-B cache-operator semantics).  Non-shared stores are
+/// charged the global latency — an upper bound, since the protocol only
+/// measures shared-memory stores.
+fn memory_key(ins: &PtxInstruction) -> &'static str {
+    let store = ins.op == PtxOp::St;
+    match ins.mods.space {
+        StateSpace::Shared => {
+            if store {
+                "shared_st"
+            } else {
+                "shared_ld"
+            }
+        }
+        // Param loads ride the constant/L1 path.
+        StateSpace::Param => "l1",
+        _ => {
+            if store {
+                "global"
+            } else {
+                match ins.mods.cache {
+                    CacheOp::Cv => "global",
+                    CacheOp::Cg => "l2",
+                    _ => "l1",
+                }
+            }
+        }
+    }
+}
+
+/// Resolve one instruction's (independent cost, dependent cost,
+/// resolution) against the model.
+fn resolve(
+    model: &LatencyModel,
+    ins: &PtxInstruction,
+    sass_mapping: &str,
+) -> (u64, Option<u64>, Resolution) {
+    match ins.op {
+        PtxOp::Wmma(WmmaOp::Mma) => {
+            let entry = ins
+                .wmma_types
+                .as_ref()
+                .and_then(WmmaDtype::from_fragment_types)
+                .and_then(|d| model.wmma.get(d.key()));
+            match entry {
+                Some(e) => (e.latency, None, Resolution::Wmma),
+                None => (model.default_cpi, None, Resolution::Default),
+            }
+        }
+        PtxOp::Ld | PtxOp::St => match model.memory.get(memory_key(ins)) {
+            Some(lat) => (*lat, None, Resolution::Memory),
+            None => (model.default_cpi, None, Resolution::Default),
+        },
+        _ => {
+            if let Some(e) = model.lookup(&ins.display_name()) {
+                (e.cpi, e.dep_cpi, Resolution::Name)
+            } else if let Some(e) = model.lookup_by_sass(sass_mapping) {
+                (e.cpi, e.dep_cpi, Resolution::Sass)
+            } else {
+                (model.default_cpi, None, Resolution::Default)
+            }
+        }
+    }
+}
+
+/// Predict the measured cycles of a parsed + translated kernel.
+pub fn predict(
+    model: &LatencyModel,
+    prog: &PtxProgram,
+    tp: &TranslatedProgram,
+) -> Result<Prediction, String> {
+    if prog.instrs.len() != tp.groups.len() {
+        return Err("translation does not match program".to_string());
+    }
+    let (body, bracketed) = measured_body(prog);
+    if body.is_empty() {
+        return Err("kernel has no measurable instructions".to_string());
+    }
+    check_straight_line(prog, &body, bracketed)?;
+
+    // Dataflow pass: mark dependent-chain membership within the window.
+    // An edge exists when an instruction reads a register another
+    // in-window instruction wrote; both endpoints join the chain.
+    let mut writer: HashMap<crate::ptx::Reg, usize> = HashMap::new();
+    let mut member = vec![false; body.len()];
+    for (pos, &idx) in body.iter().enumerate() {
+        let ins = &prog.instrs[idx];
+        for s in ins.src_regs() {
+            if let Some(&wpos) = writer.get(&s) {
+                member[pos] = true;
+                member[wpos] = true;
+            }
+        }
+        if let Some(d) = ins.dst_reg() {
+            writer.insert(d, pos);
+        }
+    }
+
+    let mut per_instr = Vec::with_capacity(body.len());
+    let mut total = 0u64;
+    let mut unresolved = 0usize;
+    for (pos, &idx) in body.iter().enumerate() {
+        let ins = &prog.instrs[idx];
+        let mapping = tp.groups[idx].mapping();
+        let (indep, dep, resolution) = resolve(model, ins, &mapping);
+        let chained = member[pos];
+        let cost = match (chained, dep) {
+            (true, Some(d)) => d,
+            _ => indep,
+        };
+        if resolution == Resolution::Default {
+            unresolved += 1;
+        }
+        total += cost;
+        per_instr.push(InstrPrediction {
+            idx,
+            name: ins.display_name(),
+            cost,
+            chained,
+            resolution,
+        });
+    }
+
+    let n = body.len() as u64;
+    let cycles = if bracketed { total + model.clock_overhead } else { total };
+    Ok(Prediction {
+        n,
+        cycles,
+        cpi: total / n,
+        bracketed,
+        unresolved,
+        per_instr,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::microbench::measurement_kernel;
+    use crate::ptx::parse_program;
+    use crate::translate::translate_program;
+
+    fn model() -> LatencyModel {
+        super::super::model::tiny_model()
+    }
+
+    fn predict_src(src: &str) -> Prediction {
+        let prog = parse_program(src).unwrap();
+        let tp = translate_program(&prog).unwrap();
+        predict(&model(), &prog, &tp).unwrap()
+    }
+
+    #[test]
+    fn window_and_body_detection() {
+        let src = measurement_kernel(
+            "add.u32 %r5, 1, 2;",
+            "add.u32 %r20, %r5, 1;\n add.u32 %r21, %r5, 2;\n add.u32 %r22, %r5, 3;",
+        );
+        let prog = parse_program(&src).unwrap();
+        let (body, bracketed) = measured_body(&prog);
+        assert!(bracketed);
+        assert_eq!(body.len(), 3, "three measured instances");
+        // Unbracketed kernel: whole body minus control.
+        let plain = ".visible .entry k() { .reg .b32 %r<9>; add.u32 %r1, 1, 2; ret; }";
+        let prog = parse_program(plain).unwrap();
+        let (body, bracketed) = measured_body(&prog);
+        assert!(!bracketed);
+        assert_eq!(body.len(), 1);
+    }
+
+    #[test]
+    fn independent_instances_cost_indep_cpi() {
+        let src = measurement_kernel(
+            "add.u32 %r5, 1, 2; add.u32 %r6, 3, 4; add.u32 %r7, 5, 6;",
+            "add.u32 %r20, %r5, 1;\n add.u32 %r21, %r6, 2;\n add.u32 %r22, %r7, 3;",
+        );
+        let p = predict_src(&src);
+        assert_eq!(p.n, 3);
+        assert_eq!(p.cpi, 2, "{p:?}");
+        assert_eq!(p.cycles, 2 + 3 * 2);
+        assert!(p.per_instr.iter().all(|i| !i.chained));
+        assert!(p.per_instr.iter().all(|i| i.resolution == Resolution::Name));
+        assert_eq!(p.unresolved, 0);
+    }
+
+    #[test]
+    fn dependent_chain_costs_dep_cpi_including_head() {
+        let src = measurement_kernel(
+            "add.u32 %r5, 1, 2;",
+            "add.u32 %r20, %r5, 1;\n add.u32 %r21, %r20, 2;\n add.u32 %r22, %r21, 3;",
+        );
+        let p = predict_src(&src);
+        assert!(p.per_instr.iter().all(|i| i.chained), "{p:?}");
+        assert_eq!(p.cpi, 4, "chain costs the dependent CPI");
+    }
+
+    #[test]
+    fn memory_ops_resolve_by_level() {
+        let src = ".visible .entry k(.param .u64 a) {\n .reg .b64 %rd<9>;\n \
+                   ld.param.u64 %rd1, [a];\n \
+                   mov.u64 %rd5, %clock64;\n \
+                   ld.global.cv.u64 %rd2, [%rd1];\n \
+                   ld.global.cg.u64 %rd3, [%rd1];\n \
+                   ld.global.ca.u64 %rd4, [%rd1];\n \
+                   mov.u64 %rd6, %clock64;\n ret;\n}";
+        let p = predict_src(src);
+        let costs: Vec<u64> = p.per_instr.iter().map(|i| i.cost).collect();
+        assert_eq!(costs, vec![290, 200, 33]);
+        assert!(p.per_instr.iter().all(|i| i.resolution == Resolution::Memory));
+    }
+
+    #[test]
+    fn unknown_instruction_falls_back_to_default() {
+        // popc.b32 is not in the tiny model and its SASS mapping (POPC)
+        // matches no entry either.
+        let src = measurement_kernel(
+            "add.u32 %r5, 1, 2;",
+            "popc.b32 %r20, %r5;\n popc.b32 %r21, %r5;\n popc.b32 %r22, %r5;",
+        );
+        let p = predict_src(&src);
+        assert_eq!(p.unresolved, 3);
+        assert_eq!(p.cpi, model().default_cpi);
+    }
+
+    #[test]
+    fn loops_outside_brackets_pass_loops_through_window_fail() {
+        // A Table-IV-style warm loop *before* the clock brackets is the
+        // protocol's own shape and must predict fine.
+        let warm_outside = ".visible .entry k(.param .u64 a) {\n .reg .b64 %rd<9>; .reg .pred %p<4>;\n \
+             ld.param.u64 %rd1, [a];\n mov.u64 %rd2, 0;\n \
+             $Warm:\n add.u64 %rd2, %rd2, 128;\n setp.lt.u64 %p1, %rd2, 4096;\n @%p1 bra $Warm;\n \
+             mov.u64 %rd5, %clock64;\n \
+             ld.global.cv.u64 %rd3, [%rd1];\n \
+             mov.u64 %rd6, %clock64;\n ret;\n}";
+        let p = predict_src(warm_outside);
+        assert_eq!(p.per_instr.len(), 1);
+        assert_eq!(p.per_instr[0].cost, 290);
+
+        // The same loop *through* the measured window would divide a
+        // dynamic delta by a static count — rejected, not served wrong.
+        let loop_inside = ".visible .entry k() {\n .reg .b64 %rd<9>; .reg .pred %p<4>;\n \
+             mov.u64 %rd2, 0;\n \
+             mov.u64 %rd5, %clock64;\n \
+             $L:\n add.u64 %rd2, %rd2, 1;\n setp.lt.u64 %p1, %rd2, 8;\n @%p1 bra $L;\n \
+             mov.u64 %rd6, %clock64;\n ret;\n}";
+        let prog = parse_program(loop_inside).unwrap();
+        let tp = translate_program(&prog).unwrap();
+        let err = predict(&model(), &prog, &tp).unwrap_err();
+        assert!(err.contains("measured clock window"), "{err}");
+    }
+
+    #[test]
+    fn kernel_without_body_is_an_error() {
+        let prog =
+            parse_program(".visible .entry k() { .reg .b32 %r<9>; ret; }").unwrap();
+        let tp = translate_program(&prog).unwrap();
+        assert!(predict(&model(), &prog, &tp).is_err());
+    }
+}

@@ -1,0 +1,323 @@
+//! JSON-line TCP serving for the latency oracle.
+//!
+//! ## Wire protocol
+//!
+//! One JSON value per `\n`-terminated line, both directions.
+//!
+//! * A JSON **object** is a single request; the response is a single
+//!   object on one line.
+//! * A JSON **array** of objects is a *batch*: the server answers with
+//!   one array, same order, on one line.  Batches containing
+//!   `simulate`/`check` work fan out across the engine's worker pool;
+//!   pure-prediction batches are served inline from the cache.
+//!
+//! Request fields (all optional but mode-dependent — see
+//! [`super::batch::parse_request`]):
+//!
+//! ```text
+//! {"id": 7,                  echoed verbatim in the response
+//!  "mode": "predict",        predict | simulate | check | stats | ping
+//!  "kernel": "<PTX source>", raw kernel to analyse, or
+//!  "instr": "add.u32",       a Table V registry row name
+//!  "dependent": true}        with "instr": the dependent-chain variant
+//! ```
+//!
+//! Responses always carry `"ok"`; failures are
+//! `{"ok": false, "error": "…", "id": …}` and never tear down the
+//! connection.  `predict` responses add `cpi`, `cycles`, `n`,
+//! `unresolved` and `cached`; `simulate` adds `cpi`, `delta`, `n`,
+//! `mapping`; `check` adds `predicted_cpi`, `simulated_cpi`, `matches`.
+//!
+//! ## Threading
+//!
+//! One accept loop, one thread per live connection (capped at
+//! [`MAX_CONNECTIONS`]; excess connections get a one-line error), and
+//! per-batch fan-out on the shared engine's work queue (scoped threads
+//! per batch — the same execution model the campaign uses).  All
+//! connections share one [`LatencyOracle`] — one prediction cache, one
+//! bounded compiled-kernel cache, one simulator pool.
+
+use super::{batch, LatencyOracle};
+use crate::util::json::{self, Value};
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Default CLI serving port (`repro serve`).
+pub const DEFAULT_PORT: u16 = 7845;
+
+/// Concurrent-connection cap (one OS thread per live connection).
+pub const MAX_CONNECTIONS: usize = 256;
+
+/// A bound-but-not-yet-serving oracle server.
+pub struct Server {
+    oracle: Arc<LatencyOracle>,
+    listener: TcpListener,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral test port).
+    pub fn bind(oracle: Arc<LatencyOracle>, addr: &str) -> io::Result<Server> {
+        Ok(Server { oracle, listener: TcpListener::bind(addr)? })
+    }
+
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Serve forever on the calling thread (the CLI path).
+    pub fn run(self) -> io::Result<()> {
+        let never = Arc::new(AtomicBool::new(false));
+        self.accept_loop(never);
+        Ok(())
+    }
+
+    /// Serve on a background thread; the returned handle stops the
+    /// accept loop (tests, examples, benches).
+    pub fn spawn(self) -> io::Result<ServerHandle> {
+        let addr = self.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let join = std::thread::spawn(move || self.accept_loop(flag));
+        Ok(ServerHandle { addr, shutdown, join: Some(join) })
+    }
+
+    fn accept_loop(self, shutdown: Arc<AtomicBool>) {
+        let active = Arc::new(AtomicUsize::new(0));
+        for conn in self.listener.incoming() {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else {
+                // Persistent accept errors (EMFILE when the fd limit is
+                // hit, etc.) must not busy-spin the accept thread while
+                // it waits for connection threads to release fds.
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                continue;
+            };
+            // Responses are one small line each; don't let Nagle hold
+            // them back against the client's next request.
+            let _ = stream.set_nodelay(true);
+            // One thread per connection, capped: beyond the cap a
+            // client gets a one-line error instead of an unbounded
+            // thread pile-up.
+            if active.fetch_add(1, Ordering::SeqCst) >= MAX_CONNECTIONS {
+                active.fetch_sub(1, Ordering::SeqCst);
+                reject_at_capacity(stream);
+                continue;
+            }
+            let slot = SlotGuard(Arc::clone(&active));
+            let oracle = Arc::clone(&self.oracle);
+            std::thread::spawn(move || {
+                let _slot = slot; // released on exit, panics included
+                let _ = serve_connection(&oracle, stream);
+            });
+        }
+    }
+}
+
+/// Turn an over-capacity connection away with the documented one-line
+/// error.  The client has usually pipelined a request already; closing
+/// with those bytes unread makes the kernel RST the socket and destroy
+/// the error in flight, so drain briefly (bounded, short timeout)
+/// before dropping.
+fn reject_at_capacity(stream: TcpStream) {
+    let err = Value::obj()
+        .set("ok", false)
+        .set("error", "server at connection capacity, retry later");
+    let mut writer = BufWriter::new(&stream);
+    let _ = writer.write_all(json::to_string(&err).as_bytes());
+    let _ = writer.write_all(b"\n");
+    let _ = writer.flush();
+    drop(writer);
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    let mut reader = &stream;
+    let mut sink = [0u8; 8192];
+    let mut drained = 0usize;
+    loop {
+        match reader.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                drained += n;
+                if drained > 64 * 1024 {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Decrements the live-connection count when a connection thread ends,
+/// unwinding included.
+struct SlotGuard(Arc<AtomicUsize>);
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Handle for a spawned server; stopping is idempotent and also runs on
+/// drop.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop.  Connections already in
+    /// flight finish on their own threads.
+    pub fn stop(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        if let Some(join) = self.join.take() {
+            self.shutdown.store(true, Ordering::SeqCst);
+            // Wake the blocking accept with a throwaway connection.
+            let _ = TcpStream::connect(self.addr);
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+/// Largest accepted request line.  A 64-kernel batch is ~0.5 MiB; the
+/// cap bounds memory against a stream that never sends a newline.
+const MAX_REQUEST_BYTES: u64 = 8 * 1024 * 1024;
+
+/// One client connection: read a line, answer a line, until EOF.
+///
+/// Lines are read as raw bytes and converted lossily: a stray non-UTF-8
+/// byte becomes U+FFFD, fails JSON parsing, and earns an `ok:false`
+/// response — per the module contract, malformed input never tears the
+/// connection down (only real socket errors do).
+fn serve_connection(oracle: &LatencyOracle, stream: TcpStream) -> io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        if reader.by_ref().take(MAX_REQUEST_BYTES).read_until(b'\n', &mut buf)? == 0 {
+            return Ok(()); // client closed
+        }
+        if !buf.ends_with(b"\n") && buf.len() as u64 >= MAX_REQUEST_BYTES {
+            // Newline never came within the cap: answer once, hang up.
+            let err = Value::obj()
+                .set("ok", false)
+                .set("error", "request line exceeds the 8 MiB limit");
+            writer.write_all(json::to_string(&err).as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            // Drain the rest of the oversized line (bounded, with a
+            // short timeout so an idle client can't pin this thread)
+            // before closing: unread receive data makes close() send
+            // RST, which would destroy the error response in flight.
+            let _ = reader
+                .get_ref()
+                .set_read_timeout(Some(std::time::Duration::from_millis(200)));
+            let mut sink = [0u8; 8192];
+            let mut drained = 0u64;
+            loop {
+                match reader.read(&mut sink) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => {
+                        drained += n as u64;
+                        if sink[..n].contains(&b'\n') || drained > MAX_REQUEST_BYTES {
+                            break;
+                        }
+                    }
+                }
+            }
+            return Ok(());
+        }
+        let line = String::from_utf8_lossy(&buf);
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let response = respond(oracle, text);
+        writer.write_all(json::to_string(&response).as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+/// One request line → one response value (object in, object out; array
+/// in, array out).
+pub fn respond(oracle: &LatencyOracle, text: &str) -> Value {
+    match json::parse(text) {
+        Err(e) => Value::obj().set("ok", false).set("error", format!("bad json: {e}")),
+        Ok(Value::Arr(items)) => {
+            let parsed = items
+                .iter()
+                .map(|v| (batch::request_id(v), batch::parse_request(v)))
+                .collect();
+            Value::Arr(batch::handle_batch(oracle, parsed))
+        }
+        Ok(v) => batch::handle(oracle, batch::request_id(&v), batch::parse_request(&v)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AmpereConfig;
+    use crate::engine::Engine;
+    use crate::oracle::model;
+
+    fn oracle() -> LatencyOracle {
+        LatencyOracle::with_engine(model::tiny_model(), Engine::new(AmpereConfig::a100()))
+    }
+
+    #[test]
+    fn respond_handles_objects_arrays_and_garbage() {
+        let o = oracle();
+        let v = respond(&o, r#"{"mode":"ping","id":"x"}"#);
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("pong"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("id").and_then(Value::as_str), Some("x"));
+
+        let v = respond(&o, r#"[{"mode":"ping","id":1},{"mode":"nope","id":9},{"mode":"stats"}]"#);
+        let arr = v.as_arr().expect("batch answers with an array");
+        assert_eq!(arr.len(), 3, "every batch slot answered in order");
+        assert_eq!(arr[0].get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(arr[0].get("id").and_then(Value::as_u64), Some(1));
+        assert_eq!(arr[1].get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(
+            arr[1].get("id").and_then(Value::as_u64),
+            Some(9),
+            "id echoed even when the request fails to parse"
+        );
+        assert!(arr[2].get("stats").is_some());
+
+        let v = respond(&o, "{{{{");
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+    }
+
+    #[test]
+    fn spawned_server_stops_cleanly_even_unused() {
+        // stop() must join the accept loop without hanging, and dropping
+        // an already-stopped handle must be a no-op.
+        let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").unwrap();
+        let handle = server.spawn().unwrap();
+        assert_ne!(handle.addr().port(), 0, "ephemeral port was assigned");
+        handle.stop();
+
+        // A second server can be spun up and torn down via Drop alone.
+        let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").unwrap();
+        let _handle = server.spawn().unwrap();
+    }
+}

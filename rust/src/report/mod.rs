@@ -199,6 +199,137 @@ pub fn insights(i1: &Insight1, i2: &[SignPair], i3: &[Insight3]) -> String {
     out
 }
 
+// ---- machine-readable (`--json`) forms ------------------------------
+//
+// One builder per experiment so `repro --json table1…table5 | insights`
+// and the oracle's model-extraction path share a single JSON shape.
+
+use crate::util::json::Value;
+
+pub fn table1_json(rows: &[Amortization]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| Value::obj().set("n", r.n).set("cpi", r.cpi).set("paper", r.paper_cpi))
+            .collect(),
+    )
+}
+
+pub fn table2_json(rows: &[DepIndep]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                Value::obj()
+                    .set("name", r.name.as_str())
+                    .set("dep", r.dep_cpi)
+                    .set("indep", r.indep_cpi)
+                    .set("paper_dep", r.paper_dep)
+                    .set("paper_indep", r.paper_indep)
+            })
+            .collect(),
+    )
+}
+
+pub fn table3_json(rows: &[WmmaResult]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                Value::obj()
+                    .set("dtype", r.dtype_key)
+                    .set("cycles", r.cycles)
+                    .set("paper", r.paper_cycles)
+                    .set("sass", r.sass.as_str())
+                    .set("paper_sass", r.paper_sass.as_str())
+                    .set("per_sass_cycles", r.per_instruction_cycles)
+                    .set("measured_tops", r.throughput.measured_tops)
+                    .set("theoretical_tops", r.throughput.theoretical_tops)
+                    .set("paper_measured_tops", r.paper_measured_tops)
+                    .set("paper_theoretical_tops", r.paper_theoretical_tops)
+            })
+            .collect(),
+    )
+}
+
+pub fn table4_json(rows: &[MemResult]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                Value::obj()
+                    .set("level", r.level.name())
+                    .set("cpi", r.cpi)
+                    .set("paper", r.paper)
+                    .set("loads", r.loads)
+            })
+            .collect(),
+    )
+}
+
+pub fn table5_json(rows: &[RowResult]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                Value::obj()
+                    .set("name", r.name.as_str())
+                    .set("cpi", r.measured.cpi)
+                    .set("paper", r.paper_cycles.as_str())
+                    .set("sass", r.measured.mapping.as_str())
+                    .set("paper_sass", r.paper_sass.as_str())
+                    .set("grade", grade_str(r.cycles_grade))
+            })
+            .collect(),
+    )
+}
+
+pub fn fig4_json(f: &Fig4) -> Value {
+    Value::obj()
+        .set("cpi_32bit", f.cpi_32bit)
+        .set("cpi_64bit", f.cpi_64bit)
+        .set(
+            "sass_32bit",
+            Value::Arr(f.sass_32bit.iter().map(|s| Value::from(s.as_str())).collect()),
+        )
+}
+
+pub fn insights_json(i1: &Insight1, i2: &[SignPair], i3: &[Insight3]) -> Value {
+    Value::obj()
+        .set(
+            "insight1",
+            Value::obj()
+                .set("mad_mapping", i1.mad_mapping.as_str())
+                .set("mixed_cpi", i1.mixed_cpi)
+                .set("same_pipe_cpi", i1.same_pipe_cpi),
+        )
+        .set(
+            "insight2",
+            Value::Arr(
+                i2.iter()
+                    .map(|p| {
+                        Value::obj()
+                            .set("pair", p.base.as_str())
+                            .set("unsigned_sass", p.unsigned_mapping.as_str())
+                            .set("signed_sass", p.signed_mapping.as_str())
+                            .set("unsigned_cpi", p.unsigned_cpi)
+                            .set("signed_cpi", p.signed_cpi)
+                            .set("differs", p.differs)
+                            .set("paper_expects_difference", p.paper_expects_difference)
+                    })
+                    .collect(),
+            ),
+        )
+        .set(
+            "insight3",
+            Value::Arr(
+                i3.iter()
+                    .map(|i| {
+                        Value::obj()
+                            .set("op", i.op.as_str())
+                            .set("mov_init", i.mov_init_mapping.as_str())
+                            .set("add_init", i.add_init_mapping.as_str())
+                    })
+                    .collect(),
+            ),
+        )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,5 +350,33 @@ mod tests {
     fn grade_strings() {
         assert_eq!(grade_str(MatchGrade::Exact), "exact");
         assert_eq!(grade_str(MatchGrade::Off), "OFF");
+    }
+
+    #[test]
+    fn json_forms_carry_the_table_fields() {
+        let t1 = table1_json(&[Amortization { n: 1, cpi: 5, paper_cpi: 5 }]);
+        let row = t1.idx(0).unwrap();
+        assert_eq!(row.get("cpi").unwrap().as_u64(), Some(5));
+        assert_eq!(row.get("paper").unwrap().as_u64(), Some(5));
+
+        let t2 = table2_json(&[DepIndep {
+            name: "add.u32".into(),
+            dep_cpi: 4,
+            indep_cpi: 2,
+            paper_dep: 4,
+            paper_indep: 2,
+        }]);
+        let row = t2.idx(0).unwrap();
+        assert_eq!(row.get("name").unwrap().as_str(), Some("add.u32"));
+        assert_eq!(row.get("dep").unwrap().as_u64(), Some(4));
+
+        let f4 = fig4_json(&Fig4 {
+            cpi_32bit: 13,
+            cpi_64bit: 2,
+            sass_32bit: vec!["DEPBAR".into()],
+            sass_64bit: vec![],
+        });
+        assert_eq!(f4.get("cpi_32bit").unwrap().as_u64(), Some(13));
+        assert_eq!(f4.get("sass_32bit").unwrap().idx(0).unwrap().as_str(), Some("DEPBAR"));
     }
 }

@@ -50,6 +50,26 @@ impl Value {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Strict: only whole, in-range, non-negative numbers convert —
+    /// `-3` or `2.7` return `None` instead of silently truncating, so
+    /// schema loaders (e.g. the oracle's `LatencyModel::from_json`)
+    /// reject corrupt files rather than absorbing them.
+    pub fn as_u64(&self) -> Option<u64> {
+        // `u64::MAX as f64` rounds up to exactly 2^64, which is *not*
+        // representable — so the bound is strict.
+        match self.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 && n < u64::MAX as f64 => Some(n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -99,6 +119,11 @@ impl From<u64> for Value {
 }
 impl From<usize> for Value {
     fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<u32> for Value {
+    fn from(n: u32) -> Self {
         Value::Num(n as f64)
     }
 }

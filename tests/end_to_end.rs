@@ -7,11 +7,8 @@ use ampere_ubench::microbench::memory::Level;
 use ampere_ubench::microbench::MatchGrade;
 
 fn cfg() -> AmpereConfig {
-    let mut c = AmpereConfig::a100();
     // scaled caches: identical latencies, faster warm loops
-    c.memory.l2_bytes = 512 * 1024;
-    c.memory.l1_bytes = 32 * 1024;
-    c
+    AmpereConfig::small()
 }
 
 #[test]

@@ -1,0 +1,199 @@
+//! Integration: the latency-oracle subsystem end to end — model
+//! extraction, JSON round-trip, static-vs-live self-consistency over
+//! the full Table V registry, and the loopback TCP serving path with
+//! concurrent clients.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::microbench::{alu, registry};
+use ampere_ubench::oracle::{LatencyModel, LatencyOracle, Server};
+use ampere_ubench::util::json::{self, Value};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, OnceLock};
+
+/// One extracted model shared by every test in this binary (extraction
+/// runs the full campaign once).
+fn model() -> &'static LatencyModel {
+    static MODEL: OnceLock<LatencyModel> = OnceLock::new();
+    MODEL.get_or_init(|| {
+        LatencyModel::extract(&Engine::new(AmpereConfig::small())).expect("extraction")
+    })
+}
+
+fn oracle() -> LatencyOracle {
+    LatencyOracle::with_engine(model().clone(), Engine::new(AmpereConfig::small()))
+}
+
+#[test]
+fn extracted_model_round_trips_through_json() {
+    let m = model();
+    assert!(m.instructions.len() >= 95, "Table V-sized: {}", m.instructions.len());
+    assert_eq!(m.memory.len(), 5, "five Table IV levels");
+    assert_eq!(m.wmma.len(), 7, "seven Table III dtypes");
+    assert_eq!(m.cold_start_cpi, vec![5, 3, 2, 2], "Table I curve");
+    assert_eq!(m.clock_overhead, 2);
+
+    let s = m.to_json_string();
+    let back = LatencyModel::from_json_str(&s).expect("parse back");
+    assert_eq!(&back, m, "serialize→parse is the identity");
+
+    // And through a file, like `repro extract-model` writes it.
+    let path = std::env::temp_dir().join("oracle_model_roundtrip.json");
+    let path = path.to_str().unwrap();
+    m.save(path).unwrap();
+    assert_eq!(&LatencyModel::load(path).unwrap(), m);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn model_keys_are_unique_per_registry_row() {
+    // Every Table V row must land its own entry — a key collision would
+    // silently alias two instructions' CPIs.
+    assert_eq!(
+        model().instructions.len(),
+        registry::table5().len(),
+        "one model entry per registry row"
+    );
+}
+
+/// Acceptance: for every Table V row, the static prediction from the
+/// extracted model equals live `Engine` simulation of the same
+/// microbenchmark kernel — same CPI, independent *and* dependent
+/// variants.
+#[test]
+fn static_prediction_matches_live_sim_for_every_table5_row() {
+    let o = oracle();
+    let mut checked = 0;
+    for row in registry::table5() {
+        let src = alu::kernel_for(&row, false);
+        let c = o.cross_check(&src).unwrap_or_else(|e| panic!("{}: {e}", row.name));
+        assert!(
+            c.matches,
+            "{}: predicted {} vs simulated {}",
+            row.name, c.predicted.cpi, c.simulated.cpi
+        );
+        assert_eq!(c.predicted.n, 3, "{}: three instances", row.name);
+        checked += 1;
+
+        if alu::can_chain(&row) {
+            let dep_src = alu::kernel_for(&row, true);
+            let c = o
+                .cross_check(&dep_src)
+                .unwrap_or_else(|e| panic!("{} (dep): {e}", row.name));
+            assert!(
+                c.matches,
+                "{} (dep): predicted {} vs simulated {}",
+                row.name, c.predicted.cpi, c.simulated.cpi
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 150, "swept both variants: {checked} checks");
+}
+
+#[test]
+fn prediction_cache_serves_repeats_without_recomputing() {
+    let o = oracle();
+    let src = alu::kernel_for(&registry::find("add.u32").unwrap(), false);
+    let (p1, hit1) = o.predict_cached(&src).unwrap();
+    let (p2, hit2) = o.predict_cached(&src).unwrap();
+    assert!(!hit1 && hit2);
+    assert_eq!(p1, p2);
+    let s = o.stats();
+    assert_eq!(s.predictions, 1);
+    assert_eq!(s.cache.hits, 1);
+}
+
+// ---- loopback serving ------------------------------------------------
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        Client { stream, reader }
+    }
+
+    fn roundtrip(&mut self, request: &str) -> Value {
+        writeln!(self.stream, "{request}").expect("send");
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("receive");
+        json::parse(line.trim()).expect("response is JSON")
+    }
+}
+
+#[test]
+fn loopback_server_concurrent_clients_deterministic_responses() {
+    let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").expect("bind port 0");
+    let handle = server.spawn().expect("spawn");
+    let addr = handle.addr();
+
+    let expected_cpi = model().lookup("add.u32").expect("add.u32 in model").cpi;
+
+    std::thread::scope(|s| {
+        for client_id in 0..4u64 {
+            s.spawn(move || {
+                let mut c = Client::connect(addr);
+
+                // ping
+                let v = c.roundtrip(r#"{"mode":"ping"}"#);
+                assert_eq!(v.get("pong"), Some(&Value::Bool(true)));
+
+                // repeated single predictions: identical, deterministic
+                for i in 0..5 {
+                    let v = c.roundtrip(&format!(
+                        r#"{{"mode":"predict","instr":"add.u32","id":{client_id}}}"#
+                    ));
+                    assert_eq!(
+                        v.get("ok"),
+                        Some(&Value::Bool(true)),
+                        "client {client_id} iter {i}: {v:?}"
+                    );
+                    assert_eq!(v.get("cpi").and_then(Value::as_u64), Some(expected_cpi));
+                    assert_eq!(v.get("id").and_then(Value::as_u64), Some(client_id));
+                }
+
+                // a batch: responses in request order, ids echoed.
+                // (one line — the protocol is line-framed)
+                let batch = [
+                    r#"{"mode":"predict","instr":"add.u32","id":0}"#,
+                    r#"{"mode":"predict","instr":"mul.lo.u32","id":1}"#,
+                    r#"{"mode":"check","instr":"add.f64","id":2}"#,
+                    r#"{"mode":"simulate","instr":"add.u32","id":3}"#,
+                ];
+                let v = c.roundtrip(&format!("[{}]", batch.join(",")));
+                let arr = v.as_arr().expect("batch response is an array");
+                assert_eq!(arr.len(), 4);
+                for (i, r) in arr.iter().enumerate() {
+                    assert_eq!(r.get("ok"), Some(&Value::Bool(true)), "slot {i}: {r:?}");
+                    assert_eq!(r.get("id").and_then(Value::as_u64), Some(i as u64));
+                }
+                assert_eq!(arr[2].get("matches"), Some(&Value::Bool(true)));
+                assert_eq!(
+                    arr[3].get("mapping").and_then(Value::as_str),
+                    Some("IADD"),
+                    "simulate fell back to the live simulator pool"
+                );
+
+                // malformed input degrades to an error response, not a
+                // dropped connection
+                let v = c.roundtrip(r#"{"mode":"predict"}"#);
+                assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+                let v = c.roundtrip("this is not json");
+                assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+
+                // and the connection still works afterwards
+                let v = c.roundtrip(r#"{"mode":"stats"}"#);
+                assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+                assert!(v.get("stats").is_some());
+            });
+        }
+    });
+
+    handle.stop();
+}
