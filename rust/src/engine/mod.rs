@@ -83,6 +83,14 @@ impl Engine {
         self.pool.checkout()
     }
 
+    /// A brand-new, never-pooled simulator over the engine's config —
+    /// the reference instance the differential fuzzer compares pooled
+    /// runs against (`Simulator::reset` is *supposed* to make these
+    /// indistinguishable; the fuzzer checks that on arbitrary kernels).
+    pub fn fresh_simulator(&self) -> crate::sim::Simulator {
+        crate::sim::Simulator::new(self.cfg.clone())
+    }
+
     /// Run independent jobs across the engine's workers; results come
     /// back in input order.
     pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>

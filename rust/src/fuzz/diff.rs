@@ -1,0 +1,418 @@
+//! The three-path differential harness.
+//!
+//! Every generated kernel runs through:
+//!
+//! 1. **the engine** — compiled via the content-addressed kernel cache,
+//!    simulated on a *pooled* (reset-on-return, possibly recycled)
+//!    simulator;
+//! 2. **a fresh stack** — an independent parse + translate of the same
+//!    source, simulated on a never-pooled [`Simulator`] built from the
+//!    same config;
+//! 3. **the static predictor** — [`predict::predict`] against an
+//!    extracted [`LatencyModel`].
+//!
+//! Divergences are classified so a failure names the broken layer:
+//!
+//! * paths 1 vs 2 disagreeing on the translation fingerprint is
+//!   [`DivergenceKind::TranslatorNondeterminism`];
+//! * paths 1 vs 2 disagreeing on the run result (or the dynamic trace)
+//!   is [`DivergenceKind::PoolContamination`] — a recycled simulator
+//!   leaked state through `reset`;
+//! * path 3 failing, or (on the predictor-exact families) disagreeing
+//!   with the measured CPI, is [`DivergenceKind::PredictorError`] /
+//!   [`DivergenceKind::PredictorMismatch`].
+//!
+//! On failure the case is *seed-minimized* — regenerated at shrinking
+//! size budgets until the smallest kernel that still shows the same
+//! divergence kind is found — and dumped as a reproducer `.ptx` plus a
+//! JSON report carrying the exact replay command.
+
+use super::gen::{self, FuzzCase};
+use crate::engine::Engine;
+use crate::microbench::{CLOCK_OVERHEAD, MEASUREMENT_PARAMS};
+use crate::oracle::{predict, LatencyModel};
+use crate::ptx::parse_program;
+use crate::translate::translate_program;
+use crate::util::json::{to_string_pretty, Value};
+use std::collections::BTreeMap;
+
+/// Which layer diverged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DivergenceKind {
+    /// The source failed to compile (or compiled on one path only).
+    Compile,
+    /// Independent translations of one source disagree.
+    TranslatorNondeterminism,
+    /// Pooled (recycled) simulator result differs from a fresh one.
+    PoolContamination,
+    /// A simulation path failed outright.
+    SimFailure,
+    /// The static predictor errored or disagreed on the window size.
+    PredictorError,
+    /// Predictor-exact family: predicted CPI != measured CPI.
+    PredictorMismatch,
+}
+
+impl DivergenceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DivergenceKind::Compile => "compile",
+            DivergenceKind::TranslatorNondeterminism => "translator-nondeterminism",
+            DivergenceKind::PoolContamination => "pool-contamination",
+            DivergenceKind::SimFailure => "sim-failure",
+            DivergenceKind::PredictorError => "predictor-error",
+            DivergenceKind::PredictorMismatch => "predictor-mismatch",
+        }
+    }
+}
+
+/// A classified divergence.
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    pub kind: DivergenceKind,
+    pub detail: String,
+}
+
+impl Divergence {
+    fn new(kind: DivergenceKind, detail: impl Into<String>) -> Self {
+        Self { kind, detail: detail.into() }
+    }
+}
+
+/// One failing case, after shrinking.
+#[derive(Debug, Clone)]
+pub struct Failure {
+    /// Index within the `--cases` run.
+    pub index: u64,
+    /// The per-case seed (replay: `repro fuzz --seed <s> --cases 1`).
+    pub case_seed: u64,
+    /// Source length of the un-shrunk kernel.
+    pub original_len: usize,
+    /// The minimized case (falls back to the original when no smaller
+    /// size reproduces the divergence).
+    pub case: FuzzCase,
+    pub divergence: Divergence,
+}
+
+impl Failure {
+    pub fn rerun_command(&self) -> String {
+        format!("repro fuzz --seed {} --cases 1", self.case_seed)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("case_index", self.index)
+            .set("seed", self.case_seed)
+            .set("family", self.case.family.name())
+            .set("label", self.case.label.as_str())
+            .set("kind", self.divergence.kind.name())
+            .set("detail", self.divergence.detail.as_str())
+            .set("predict_exact", self.case.predict_exact)
+            .set("original_src_len", self.original_len)
+            .set("minimized_src_len", self.case.src.len())
+            .set("rerun", self.rerun_command())
+    }
+}
+
+/// Outcome of one fuzz run.
+#[derive(Debug)]
+pub struct FuzzOutcome {
+    pub base_seed: u64,
+    pub cases: u64,
+    /// Cases generated per family name.
+    pub family_counts: BTreeMap<String, u64>,
+    pub failures: Vec<Failure>,
+}
+
+impl FuzzOutcome {
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let families = self
+            .family_counts
+            .iter()
+            .map(|(k, v)| format!("{k} {v}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let _ = writeln!(
+            out,
+            "fuzz: {} cases from seed {} ({families}) — {} divergence(s)",
+            self.cases,
+            self.base_seed,
+            self.failures.len()
+        );
+        for f in &self.failures {
+            let _ = writeln!(
+                out,
+                "  case {} [{}] {}: {} — {}\n    replay: {}",
+                f.index,
+                f.case.family.name(),
+                f.case.label,
+                f.divergence.kind.name(),
+                f.divergence.detail,
+                f.rerun_command()
+            );
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fams = Value::obj();
+        for (k, v) in &self.family_counts {
+            fams = fams.set(k, *v);
+        }
+        Value::obj()
+            .set("seed", self.base_seed)
+            .set("cases", self.cases)
+            .set("families", fams)
+            .set("divergences", Value::Arr(self.failures.iter().map(Failure::to_json).collect()))
+            .set("pass", self.failures.is_empty())
+    }
+}
+
+/// Run one case through all three paths.  `Ok(cpi)` is the measured
+/// (pooled-path) CPI under the paper's protocol.
+pub fn run_case(
+    engine: &Engine,
+    model: &LatencyModel,
+    case: &FuzzCase,
+) -> Result<u64, Divergence> {
+    // Path 1 front-end: the engine's content-addressed cache.
+    let kernel = engine
+        .compile(&case.src)
+        .map_err(|e| Divergence::new(DivergenceKind::Compile, format!("engine compile: {e}")))?;
+
+    // Path 2 front-end: an independent parse + translate of the same
+    // bytes.  Any disagreement here is translator nondeterminism (the
+    // cached kernel was produced by the very same pure functions).
+    let prog2 = parse_program(&case.src).map_err(|e| {
+        Divergence::new(
+            DivergenceKind::Compile,
+            format!("fresh parse failed where the cached compile succeeded: {e}"),
+        )
+    })?;
+    let tp2 = translate_program(&prog2).map_err(|e| {
+        Divergence::new(
+            DivergenceKind::Compile,
+            format!("fresh translation failed where the cached compile succeeded: {e}"),
+        )
+    })?;
+    let m1 = kernel.tp.mappings();
+    let m2 = tp2.mappings();
+    if m1 != m2 {
+        let at = m1
+            .iter()
+            .zip(&m2)
+            .position(|(a, b)| a != b)
+            .unwrap_or(m1.len().min(m2.len()));
+        return Err(Divergence::new(
+            DivergenceKind::TranslatorNondeterminism,
+            format!(
+                "mapping fingerprints differ at instr {at}: {:?} vs {:?}",
+                m1.get(at),
+                m2.get(at)
+            ),
+        ));
+    }
+
+    // Path 1: pooled (possibly recycled) simulator.
+    let mut pooled = engine.simulator();
+    let r_pool = pooled
+        .run(&kernel.prog, &kernel.tp, MEASUREMENT_PARAMS)
+        .map_err(|e| Divergence::new(DivergenceKind::SimFailure, format!("pooled sim: {e}")))?;
+
+    // Path 2: a never-pooled simulator over the fresh translation.
+    let mut fresh = engine.fresh_simulator();
+    let r_fresh = fresh
+        .run(&prog2, &tp2, MEASUREMENT_PARAMS)
+        .map_err(|e| Divergence::new(DivergenceKind::SimFailure, format!("fresh sim: {e}")))?;
+
+    if r_pool != r_fresh {
+        return Err(Divergence::new(
+            DivergenceKind::PoolContamination,
+            format!(
+                "pooled run != fresh run: cycles {} vs {}, clocks {:?} vs {:?}",
+                r_pool.cycles, r_fresh.cycles, r_pool.clock_reads, r_fresh.clock_reads
+            ),
+        ));
+    }
+
+    let (body, bracketed) = predict::measured_body(&kernel.prog);
+    if body.is_empty() {
+        return Err(Divergence::new(DivergenceKind::SimFailure, "no measurable instructions"));
+    }
+    // The dynamic traces must agree too (RunResult doesn't carry them).
+    let first = body[0] as u32;
+    let map_pool = pooled.trace.mapping_for(first);
+    let map_fresh = fresh.trace.mapping_for(first);
+    if map_pool != map_fresh {
+        return Err(Divergence::new(
+            DivergenceKind::PoolContamination,
+            format!("dynamic SASS of first measured instr: {map_pool:?} vs {map_fresh:?}"),
+        ));
+    }
+
+    let n = body.len() as u64;
+    let c = &r_pool.clock_reads;
+    let cpi = if bracketed && c.len() >= 2 {
+        (c[c.len() - 1] - c[0]).saturating_sub(CLOCK_OVERHEAD) / n
+    } else {
+        r_pool.cycles / n
+    };
+
+    // Path 3: the static predictor.
+    match predict::predict(model, &kernel.prog, &kernel.tp) {
+        Err(e) => Err(Divergence::new(DivergenceKind::PredictorError, e)),
+        Ok(p) => {
+            if p.n != n {
+                return Err(Divergence::new(
+                    DivergenceKind::PredictorError,
+                    format!("predictor saw a {}-instruction window, protocol saw {n}", p.n),
+                ));
+            }
+            if case.predict_exact && p.cpi != cpi {
+                return Err(Divergence::new(
+                    DivergenceKind::PredictorMismatch,
+                    format!("predicted CPI {} != measured CPI {cpi}", p.cpi),
+                ));
+            }
+            Ok(cpi)
+        }
+    }
+}
+
+/// Seed-minimize a failing case: regenerate from the same seed at
+/// growing size budgets and keep the first (smallest) case reproducing
+/// the same divergence kind.  Size-insensitive families fall back to
+/// the original case.
+fn shrink(
+    engine: &Engine,
+    model: &LatencyModel,
+    seed: u64,
+    original: &FuzzCase,
+    kind: DivergenceKind,
+) -> FuzzCase {
+    for size in 1..gen::DEFAULT_SIZE {
+        let candidate = gen::generate(seed, size);
+        // Size-insensitive families (alu, alu-dep, wmma) regenerate the
+        // same kernel at every budget — don't re-simulate those.
+        if candidate.src == original.src {
+            continue;
+        }
+        if let Err(d) = run_case(engine, model, &candidate) {
+            if d.kind == kind {
+                return candidate;
+            }
+        }
+    }
+    original.clone()
+}
+
+/// Run `cases` seeded cases and classify every divergence.
+pub fn run(engine: &Engine, model: &LatencyModel, base_seed: u64, cases: u64) -> FuzzOutcome {
+    let mut family_counts: BTreeMap<String, u64> = BTreeMap::new();
+    let mut failures = Vec::new();
+    for index in 0..cases {
+        let seed = gen::case_seed(base_seed, index);
+        let case = gen::generate(seed, gen::DEFAULT_SIZE);
+        *family_counts.entry(case.family.name().to_string()).or_insert(0) += 1;
+        if let Err(divergence) = run_case(engine, model, &case) {
+            let minimized = shrink(engine, model, seed, &case, divergence.kind);
+            failures.push(Failure {
+                index,
+                case_seed: seed,
+                original_len: case.src.len(),
+                case: minimized,
+                divergence,
+            });
+        }
+    }
+    FuzzOutcome { base_seed, cases, family_counts, failures }
+}
+
+/// Dump a failure's reproducer kernel + JSON report into `dir`.
+/// Returns the two paths written.
+pub fn dump_reproducer(dir: &str, f: &Failure) -> Result<(String, String), String> {
+    let ptx_path = format!("{dir}/fuzz_repro_{}.ptx", f.case_seed);
+    let json_path = format!("{dir}/fuzz_repro_{}.json", f.case_seed);
+    std::fs::write(&ptx_path, &f.case.src).map_err(|e| format!("write {ptx_path}: {e}"))?;
+    let report = f.to_json().set("ptx", ptx_path.as_str());
+    std::fs::write(&json_path, to_string_pretty(&report) + "\n")
+        .map_err(|e| format!("write {json_path}: {e}"))?;
+    Ok((ptx_path, json_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AmpereConfig;
+    use crate::oracle::model::tiny_model;
+
+    #[test]
+    fn divergence_kind_names_are_stable() {
+        // Reproducer JSON schema: the kind strings are part of it.
+        let all = [
+            DivergenceKind::Compile,
+            DivergenceKind::TranslatorNondeterminism,
+            DivergenceKind::PoolContamination,
+            DivergenceKind::SimFailure,
+            DivergenceKind::PredictorError,
+            DivergenceKind::PredictorMismatch,
+        ];
+        let names: Vec<_> = all.iter().map(|k| k.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+    }
+
+    #[test]
+    fn run_case_agrees_on_a_known_predict_exact_kernel() {
+        // add.u32 indep: tiny model carries the true simulated values,
+        // so all three paths must agree end to end.
+        let engine = Engine::new(AmpereConfig::a100());
+        let rows = crate::microbench::registry::table5();
+        let row = rows.iter().find(|r| r.name == "add.u32").unwrap();
+        let case = FuzzCase {
+            seed: 0,
+            family: super::super::gen::Family::Alu,
+            label: "add.u32".into(),
+            src: crate::microbench::alu::kernel_for(row, false),
+            predict_exact: true,
+        };
+        let cpi = run_case(&engine, &tiny_model(), &case).unwrap();
+        assert_eq!(cpi, 2);
+    }
+
+    #[test]
+    fn wrong_model_surfaces_as_predictor_mismatch() {
+        let engine = Engine::new(AmpereConfig::a100());
+        let mut model = tiny_model();
+        model.instructions.get_mut("add.u32").unwrap().cpi = 40;
+        let rows = crate::microbench::registry::table5();
+        let row = rows.iter().find(|r| r.name == "add.u32").unwrap();
+        let case = FuzzCase {
+            seed: 0,
+            family: super::super::gen::Family::Alu,
+            label: "add.u32".into(),
+            src: crate::microbench::alu::kernel_for(row, false),
+            predict_exact: true,
+        };
+        let d = run_case(&engine, &model, &case).unwrap_err();
+        assert_eq!(d.kind, DivergenceKind::PredictorMismatch, "{d:?}");
+    }
+
+    #[test]
+    fn bad_source_classifies_as_compile() {
+        let engine = Engine::new(AmpereConfig::a100());
+        let case = FuzzCase {
+            seed: 0,
+            family: super::super::gen::Family::Mixed,
+            label: "garbage".into(),
+            src: "definitely not ptx".into(),
+            predict_exact: false,
+        };
+        let d = run_case(&engine, &tiny_model(), &case).unwrap_err();
+        assert_eq!(d.kind, DivergenceKind::Compile);
+    }
+}

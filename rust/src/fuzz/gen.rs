@@ -1,0 +1,381 @@
+//! Grammar-driven, seeded PTX kernel generator.
+//!
+//! Each case derives deterministically from a single `u64` seed via
+//! [`Rng`]: the same seed always regenerates the same kernel, which is
+//! what makes reproducers replayable (`repro fuzz --seed <s> --cases 1`)
+//! and shrinking meaningful (regenerate at a smaller size budget, keep
+//! the smallest case that still diverges — see [`crate::fuzz::diff`]).
+//!
+//! Families:
+//!
+//! * [`Family::Alu`] / [`Family::AluDep`] — exactly the registry's
+//!   Table V measurement kernels (independent / dependent-chain forms,
+//!   via [`alu::kernel_for`]).  These are the **predictor-exact**
+//!   family: the oracle acceptance test pins static prediction == live
+//!   simulation for every one of them, so the differential harness
+//!   holds them to CPI equality, not just successful prediction.
+//! * [`Family::Mixed`] — random multi-op measurement windows drawn from
+//!   the registry grammar with valid-by-construction dataflow: every
+//!   source register is either initialised before the clock brackets or
+//!   an earlier in-window destination of the same register class, so
+//!   dependence chains arise organically and nothing reads garbage.
+//! * [`Family::Memory`] — global loads under random cache operators
+//!   (`.cv`/`.cg`/`.ca`), global stores, shared-memory traffic, and
+//!   optional dependent address chains (a load addressing through an
+//!   earlier load's value — the pointer-chase shape).
+//! * [`Family::MultiWindow`] — several clock windows in one kernel;
+//!   interior clock reads are themselves measured instructions (Table
+//!   V's `mov.u32 clock` row does the same).
+//! * [`Family::Wmma`] — Fig.-5 tensor-core kernels over a random dtype
+//!   and iteration count.
+//!
+//! Every generated kernel carries protocol clock brackets, so all three
+//! differential paths (pooled engine, fresh simulator, static
+//! predictor) see a well-defined measurement window.
+
+use crate::microbench::registry::{self, RegClass, Row};
+use crate::microbench::{alu, measurement_kernel, wmma, REG_DECLS};
+use crate::ptx::KernelSource;
+use crate::tensor::ALL_DTYPES;
+use crate::util::prng::Rng;
+
+/// Kernel family a case belongs to (drives what the differential
+/// harness may assume about it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Alu,
+    AluDep,
+    Mixed,
+    Memory,
+    MultiWindow,
+    Wmma,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Alu => "alu",
+            Family::AluDep => "alu-dep",
+            Family::Mixed => "mixed",
+            Family::Memory => "memory",
+            Family::MultiWindow => "multi-window",
+            Family::Wmma => "wmma",
+        }
+    }
+}
+
+pub const ALL_FAMILIES: [Family; 6] = [
+    Family::Alu,
+    Family::AluDep,
+    Family::Mixed,
+    Family::Memory,
+    Family::MultiWindow,
+    Family::Wmma,
+];
+
+/// One generated kernel.
+#[derive(Debug, Clone)]
+pub struct FuzzCase {
+    /// The seed this case regenerates from (shrinking re-derives from
+    /// it at smaller sizes).
+    pub seed: u64,
+    pub family: Family,
+    /// Human-readable description (instruction names drawn, dtype, …).
+    pub label: String,
+    /// The kernel source.
+    pub src: String,
+    /// Static prediction must equal live simulation *exactly* — the
+    /// contract the oracle acceptance test pins for registry kernels.
+    /// For the other families the harness only requires the predictor
+    /// to succeed and agree on the window size.
+    pub predict_exact: bool,
+}
+
+/// Default body-size budget (shrinking walks sizes 1..DEFAULT_SIZE).
+pub const DEFAULT_SIZE: u32 = 8;
+
+/// Seed of case `index` in a `--seed <base>` run.  Consecutive, so a
+/// failing case replays alone as
+/// `repro fuzz --seed <base+index> --cases 1`.
+pub fn case_seed(base: u64, index: u64) -> u64 {
+    base.wrapping_add(index)
+}
+
+/// Generate the case for `seed` at the given size budget.
+pub fn generate(seed: u64, size: u32) -> FuzzCase {
+    let mut rng = Rng::new(seed);
+    let size = size.max(1);
+    let family = *rng.pick(&ALL_FAMILIES);
+    let (label, src, predict_exact) = match family {
+        Family::Alu => gen_alu(&mut rng, false),
+        Family::AluDep => gen_alu(&mut rng, true),
+        Family::Mixed => gen_mixed(&mut rng, size),
+        Family::Memory => gen_memory(&mut rng, size),
+        Family::MultiWindow => gen_multi_window(&mut rng, size),
+        Family::Wmma => gen_wmma(&mut rng),
+    };
+    FuzzCase { seed, family, label, src, predict_exact }
+}
+
+// ---- alu / alu-dep ---------------------------------------------------
+
+fn gen_alu(rng: &mut Rng, dependent: bool) -> (String, String, bool) {
+    let rows = registry::table5();
+    let row: Row = if dependent {
+        let chainable: Vec<&Row> = rows.iter().filter(|r| alu::can_chain(r)).collect();
+        (*rng.pick(&chainable)).clone()
+    } else {
+        rng.pick(&rows).clone()
+    };
+    let label = if dependent {
+        format!("{} (dep)", row.name)
+    } else {
+        row.name.to_string()
+    };
+    let src = alu::kernel_for(&row, dependent);
+    (label, src, true)
+}
+
+// ---- mixed -----------------------------------------------------------
+
+fn class_slot(c: RegClass) -> usize {
+    match c {
+        RegClass::H => 0,
+        RegClass::R => 1,
+        RegClass::F => 2,
+        RegClass::Rd => 3,
+        RegClass::Fd => 4,
+        RegClass::P => 5,
+    }
+}
+
+const VALUE_CLASSES: [RegClass; 5] =
+    [RegClass::H, RegClass::R, RegClass::F, RegClass::Rd, RegClass::Fd];
+
+/// A source operand of class `c`: an initialised register (indices
+/// 5..=16 are covered by the init block below, exactly like
+/// `alu::init_lines`) or, half the time when one exists, an earlier
+/// in-window destination of the same class — forming a dependence chain.
+fn pick_src(rng: &mut Rng, written: &[Vec<String>; 6], c: RegClass) -> String {
+    let pool = &written[class_slot(c)];
+    if !pool.is_empty() && rng.bool() {
+        pool[rng.below(pool.len() as u64) as usize].clone()
+    } else {
+        format!("{}{}", c.prefix(), 5 + rng.below(12))
+    }
+}
+
+fn gen_mixed(rng: &mut Rng, size: u32) -> (String, String, bool) {
+    // The grammar: every registry row with operand placeholders.  The
+    // clock row is excluded (interior clock reads belong to the
+    // multi-window family), bar.warp.sync has no placeholders.
+    let rows: Vec<Row> = registry::table5()
+        .into_iter()
+        .filter(|r| r.template.contains("%A") && r.name != "mov.u32 clock")
+        .collect();
+
+    // Initialise every register bank the grammar can draw from, plus
+    // the predicates some templates read literally (selp's %p2).
+    let mut init: Vec<String> = Vec::new();
+    for c in VALUE_CLASSES {
+        for i in 5..17u32 {
+            init.push(c.init_line(i));
+        }
+    }
+    init.push(RegClass::P.init_line(1));
+    init.push(RegClass::P.init_line(2));
+
+    let k = 2 + rng.below(size as u64 + 1) as usize;
+    let mut written: [Vec<String>; 6] = Default::default();
+    let mut alloc = [0u32; 6];
+    let mut body: Vec<String> = Vec::new();
+    let mut names: Vec<&'static str> = Vec::new();
+    for _ in 0..k {
+        let row = rng.pick(&rows);
+        let di = class_slot(row.dst);
+        // Fresh destinations: 20.. for value classes (clock registers
+        // live at %rd60+), 3.. for predicates (%p<16>); both cycle well
+        // inside their declared banks.
+        let (base, cap) = if row.dst == RegClass::P { (3u32, 12u32) } else { (20, 36) };
+        let dst = format!("{}{}", row.dst.prefix(), base + alloc[di] % cap);
+        alloc[di] += 1;
+        let a = pick_src(rng, &written, row.src);
+        let b = pick_src(rng, &written, row.src);
+        let c = pick_src(rng, &written, row.src);
+        let e = pick_src(rng, &written, row.src);
+        body.push(
+            row.template
+                .replace("%D", &dst)
+                .replace("%A", &a)
+                .replace("%B", &b)
+                .replace("%C", &c)
+                .replace("%E", &e),
+        );
+        names.push(row.name);
+        written[di].push(dst);
+    }
+    let label = format!("mixed[{}]", names.join(","));
+    let src = measurement_kernel(&init.join("\n "), &body.join("\n "));
+    (label, src, false)
+}
+
+// ---- memory ----------------------------------------------------------
+
+fn gen_memory(rng: &mut Rng, size: u32) -> (String, String, bool) {
+    let k = 2 + (rng.below(size as u64).min(6)) as usize;
+    // Addresses are line-aligned immediates in the chase array's region;
+    // the shared symbol mirrors `measure_shared`'s declaration.
+    let mut init: Vec<String> = vec![".shared .align 8 .b8 fsh1[4096];".to_string()];
+    for i in 0..k {
+        let addr = 0x10_0000u64 + rng.below(512) * 128;
+        init.push(format!("mov.u64 %rd{}, {};", 20 + i, addr));
+    }
+    let mut body: Vec<String> = Vec::new();
+    let mut load_dsts: Vec<usize> = Vec::new();
+    let mut kinds: Vec<String> = Vec::new();
+    for i in 0..k {
+        match rng.below(4) {
+            0 | 1 => {
+                let cache = *rng.pick(&["cv", "cg", "ca"]);
+                // A third of the time (when possible) chase an earlier
+                // load's value — a dependent address chain through
+                // whatever the clean DRAM holds (zero), like the
+                // pointer-chase protocol without seeding.
+                let base = if !load_dsts.is_empty() && rng.below(3) == 0 {
+                    load_dsts[rng.below(load_dsts.len() as u64) as usize]
+                } else {
+                    20 + i
+                };
+                body.push(format!("ld.global.{cache}.u64 %rd{}, [%rd{}];", 40 + i, base));
+                load_dsts.push(40 + i);
+                kinds.push(format!("ld.{cache}"));
+            }
+            2 => {
+                body.push(format!("st.global.u64 [%rd{}], {};", 20 + i, rng.below(1000)));
+                kinds.push("st.global".to_string());
+            }
+            _ => {
+                let off = 8 * rng.below(16);
+                let sym = if off == 0 { "fsh1".to_string() } else { format!("fsh1+{off}") };
+                if rng.bool() {
+                    body.push(format!("ld.shared.u64 %rd{}, [{sym}];", 40 + i));
+                    kinds.push("ld.shared".to_string());
+                } else {
+                    body.push(format!("st.shared.u64 [{sym}], {};", rng.below(1000)));
+                    kinds.push("st.shared".to_string());
+                }
+            }
+        }
+    }
+    let label = format!("memory[{}]", kinds.join(","));
+    let src = measurement_kernel(&init.join("\n "), &body.join("\n "));
+    (label, src, false)
+}
+
+// ---- multi-window ----------------------------------------------------
+
+fn gen_multi_window(rng: &mut Rng, size: u32) -> (String, String, bool) {
+    const OPS: [&str; 6] = ["add.u32", "mul.lo.u32", "and.b32", "or.b32", "xor.b32", "min.u32"];
+    let windows = 2 + rng.below(3); // 2..=4 windows
+    let mut k = KernelSource::new("fuzz_windows");
+    k.param(".u64", "out");
+    k.line(REG_DECLS);
+    for i in 5..17u32 {
+        k.line(RegClass::R.init_line(i));
+    }
+    let mut dst = 20u64;
+    for w in 0..=windows {
+        k.line(format!("mov.u64 %rd{}, %clock64;", 30 + w));
+        if w == windows {
+            break;
+        }
+        let n = 1 + rng.below(size.min(4) as u64);
+        for _ in 0..n {
+            let op = *rng.pick(&OPS);
+            let a = if dst > 20 && rng.bool() {
+                20 + rng.below(dst - 20)
+            } else {
+                5 + rng.below(12)
+            };
+            let b = 5 + rng.below(12);
+            k.line(format!("{op} %r{dst}, %r{a}, %r{b};"));
+            dst += 1;
+        }
+    }
+    k.line("ret;");
+    (format!("multi-window[{windows} windows]"), k.render(), false)
+}
+
+// ---- wmma ------------------------------------------------------------
+
+fn gen_wmma(rng: &mut Rng) -> (String, String, bool) {
+    let d = *rng.pick(&ALL_DTYPES);
+    let iters = 1 + rng.below(3) as u32;
+    let src = wmma::fig5_kernel(d, iters);
+    (format!("wmma[{} x{iters}]", d.key()), src, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AmpereConfig;
+    use crate::ptx::parse_program;
+    use crate::sim::Simulator;
+    use crate::translate::translate_program;
+
+    #[test]
+    fn same_seed_same_kernel() {
+        for seed in 0..32u64 {
+            let a = generate(seed, DEFAULT_SIZE);
+            let b = generate(seed, DEFAULT_SIZE);
+            assert_eq!(a.src, b.src, "seed {seed}");
+            assert_eq!(a.family, b.family);
+            assert_eq!(a.predict_exact, b.predict_exact);
+        }
+    }
+
+    #[test]
+    fn all_families_reachable_and_alu_is_predict_exact() {
+        let mut seen = std::collections::BTreeSet::new();
+        for seed in 0..96u64 {
+            let c = generate(seed, DEFAULT_SIZE);
+            seen.insert(c.family.name());
+            match c.family {
+                Family::Alu | Family::AluDep => assert!(c.predict_exact, "{}", c.label),
+                _ => assert!(!c.predict_exact, "{}", c.label),
+            }
+        }
+        assert_eq!(seen.len(), ALL_FAMILIES.len(), "{seen:?}");
+    }
+
+    #[test]
+    fn generated_kernels_compile_and_keep_their_brackets() {
+        let cfg = AmpereConfig::small();
+        for seed in 0..24u64 {
+            let c = generate(seed, DEFAULT_SIZE);
+            let prog = parse_program(&c.src)
+                .unwrap_or_else(|e| panic!("{} (seed {seed}): {e}\n{}", c.label, c.src));
+            let tp = translate_program(&prog)
+                .unwrap_or_else(|e| panic!("{} (seed {seed}): {e}", c.label));
+            prog.validate().unwrap();
+            let mut sim = Simulator::new(cfg.clone());
+            let r = sim
+                .run(&prog, &tp, &[0x100000])
+                .unwrap_or_else(|e| panic!("{} (seed {seed}): {e}", c.label));
+            assert!(r.clock_reads.len() >= 2, "{}: lost brackets", c.label);
+        }
+    }
+
+    #[test]
+    fn shrinking_sizes_stay_valid() {
+        for seed in [3u64, 7, 11, 19] {
+            for size in 1..=DEFAULT_SIZE {
+                let c = generate(seed, size);
+                let prog = parse_program(&c.src)
+                    .unwrap_or_else(|e| panic!("{} size {size}: {e}", c.label));
+                translate_program(&prog)
+                    .unwrap_or_else(|e| panic!("{} size {size}: {e}", c.label));
+            }
+        }
+    }
+}

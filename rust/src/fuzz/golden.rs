@@ -1,0 +1,428 @@
+//! Golden conformance: Tables I–V and Fig. 4, rendered through the
+//! `report::*_json` builders and diffed cell by cell against the pinned
+//! snapshots in `tests/golden/`.
+//!
+//! A golden file is `{"table": <name>, "expect": <spec>, "aggregate":
+//! <optional>}` where `<spec>` mirrors the live JSON shape and every
+//! cell is one of:
+//!
+//! * a **number / string / bool** — exact match (numbers within 1e-9
+//!   relative, so float formatting round-trips are immaterial);
+//! * `{"min": a, "max": b}` — inclusive numeric range (the paper's
+//!   `a-b` cycle notation);
+//! * `{"within_rel": r, "of": x}` — relative tolerance band;
+//! * `{"contains": "s"}` — a string array (or string) must contain `s`;
+//! * `{"any": true}` — wildcard ("changes" in the paper's notation, or
+//!   cells pinned only through the aggregate floors).
+//!
+//! `aggregate` (Table V) pins the calibration baseline: minimum
+//! exact-grade rows, maximum Off rows, minimum exact-or-close percent.
+//!
+//! `repro conformance` checks; `repro conformance --update` regenerates
+//! every snapshot from a live run (exact pins; existing `aggregate`
+//! blocks are preserved) — review the diff before committing.  The
+//! registry itself is pinned by `registry_sass.txt` (one
+//! `name<TAB>paper-SASS` line per Table V row), so accidental renames or
+//! mapping drift fail loudly even without running a campaign.
+
+use crate::engine::Engine;
+use crate::microbench::{alu, insights, memory, registry, wmma};
+use crate::report;
+use crate::util::json::{parse, to_string_pretty, Value};
+
+/// The experiments under conformance, in report order.
+pub const TABLES: [&str; 6] = ["table1", "table2", "table3", "table4", "table5", "fig4"];
+
+/// The checked-in snapshot directory (compile-time repo root).
+pub fn default_dir() -> String {
+    format!("{}/tests/golden", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Render one experiment's live JSON on `engine`.
+pub fn live_json(engine: &Engine, table: &str) -> Result<Value, String> {
+    match table {
+        "table1" => Ok(report::table1_json(&alu::run_table1_with(engine)?)),
+        "table2" => Ok(report::table2_json(&alu::run_table2_with(engine)?)),
+        "table3" => Ok(report::table3_json(&wmma::run_table3_with(engine)?)),
+        "table4" => Ok(report::table4_json(&memory::run_table4_with(engine)?)),
+        "table5" => Ok(report::table5_json(&alu::run_table5_with(engine)?)),
+        "fig4" => Ok(report::fig4_json(&insights::fig4_with(engine)?)),
+        other => Err(format!("unknown conformance table {other:?}")),
+    }
+}
+
+/// Per-table outcome.
+#[derive(Debug, Clone)]
+pub struct TableReport {
+    pub table: String,
+    pub issues: Vec<String>,
+}
+
+impl TableReport {
+    pub fn pass(&self) -> bool {
+        self.issues.is_empty()
+    }
+}
+
+/// The whole conformance run.
+#[derive(Debug)]
+pub struct ConformanceReport {
+    pub tables: Vec<TableReport>,
+}
+
+impl ConformanceReport {
+    pub fn pass(&self) -> bool {
+        self.tables.iter().all(TableReport::pass)
+    }
+
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::from("== conformance (tests/golden) ==\n");
+        for t in &self.tables {
+            if t.pass() {
+                let _ = writeln!(out, "  {:<10} PASS", t.table);
+            } else {
+                let _ = writeln!(out, "  {:<10} FAIL ({} issue(s))", t.table, t.issues.len());
+                for i in &t.issues {
+                    let _ = writeln!(out, "    {i}");
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj().set("pass", self.pass()).set(
+            "tables",
+            Value::Arr(
+                self.tables
+                    .iter()
+                    .map(|t| {
+                        Value::obj().set("table", t.table.as_str()).set(
+                            "issues",
+                            Value::Arr(
+                                t.issues.iter().map(|i| Value::from(i.as_str())).collect(),
+                            ),
+                        )
+                    })
+                    .collect(),
+            ),
+        )
+    }
+}
+
+fn num_eq(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Diff one golden spec cell against the live value.
+pub fn check_value(spec: &Value, live: &Value, path: &str, issues: &mut Vec<String>) {
+    match spec {
+        Value::Obj(m) => {
+            if m.contains_key("any") {
+                return;
+            }
+            if m.contains_key("min") || m.contains_key("max") {
+                let v = match live.as_f64() {
+                    Some(v) => v,
+                    None => {
+                        issues.push(format!("{path}: expected a number, got {live:?}"));
+                        return;
+                    }
+                };
+                if let Some(lo) = m.get("min").and_then(Value::as_f64) {
+                    if v < lo {
+                        issues.push(format!("{path}: {v} below min {lo}"));
+                    }
+                }
+                if let Some(hi) = m.get("max").and_then(Value::as_f64) {
+                    if v > hi {
+                        issues.push(format!("{path}: {v} above max {hi}"));
+                    }
+                }
+                return;
+            }
+            if let (Some(rel), Some(of)) = (
+                m.get("within_rel").and_then(Value::as_f64),
+                m.get("of").and_then(Value::as_f64),
+            ) {
+                match live.as_f64() {
+                    Some(v) if (v - of).abs() <= rel * of.abs().max(1.0) => {}
+                    Some(v) => issues.push(format!(
+                        "{path}: {v} outside ±{}% of {of}",
+                        rel * 100.0
+                    )),
+                    None => issues.push(format!("{path}: expected a number, got {live:?}")),
+                }
+                return;
+            }
+            if let Some(needle) = m.get("contains").and_then(Value::as_str) {
+                let found = match live {
+                    Value::Str(s) => s.contains(needle),
+                    Value::Arr(a) => a
+                        .iter()
+                        .any(|e| e.as_str().map_or(false, |s| s.contains(needle))),
+                    _ => false,
+                };
+                if !found {
+                    issues.push(format!("{path}: {needle:?} not found in {live:?}"));
+                }
+                return;
+            }
+            // Plain object: every golden key must match in the live value
+            // (extra live keys are allowed — new fields don't break pins).
+            for (k, sub) in m {
+                match live.get(k) {
+                    Some(lv) => check_value(sub, lv, &format!("{path}.{k}"), issues),
+                    None => issues.push(format!("{path}.{k}: missing in live output")),
+                }
+            }
+        }
+        Value::Arr(rows) => match live.as_arr() {
+            Some(l) if l.len() == rows.len() => {
+                for (i, (s, v)) in rows.iter().zip(l).enumerate() {
+                    check_value(s, v, &format!("{path}[{i}]"), issues);
+                }
+            }
+            Some(l) => issues.push(format!(
+                "{path}: live has {} rows, golden has {}",
+                l.len(),
+                rows.len()
+            )),
+            None => issues.push(format!("{path}: expected an array, got {live:?}")),
+        },
+        Value::Num(n) => match live.as_f64() {
+            Some(v) if num_eq(*n, v) => {}
+            other => issues.push(format!("{path}: expected {n}, got {other:?}")),
+        },
+        Value::Str(s) => {
+            if live.as_str() != Some(s.as_str()) {
+                issues.push(format!("{path}: expected {s:?}, got {live:?}"));
+            }
+        }
+        Value::Bool(b) => {
+            if live.as_bool() != Some(*b) {
+                issues.push(format!("{path}: expected {b}, got {live:?}"));
+            }
+        }
+        Value::Null => {
+            if live != &Value::Null {
+                issues.push(format!("{path}: expected null, got {live:?}"));
+            }
+        }
+    }
+}
+
+/// Table V's aggregate floors over the live `grade` column.
+fn check_aggregate(agg: &Value, live: &Value, table: &str, issues: &mut Vec<String>) {
+    let rows = match live.as_arr() {
+        Some(r) => r,
+        None => {
+            issues.push(format!("{table}: aggregate requires an array table"));
+            return;
+        }
+    };
+    let grade_count = |want: &str| -> u64 {
+        rows.iter()
+            .filter(|r| r.get("grade").and_then(Value::as_str) == Some(want))
+            .count() as u64
+    };
+    let total = rows.len() as u64;
+    let exact = grade_count("exact");
+    let close = grade_count("close");
+    let off = grade_count("OFF");
+    if let Some(v) = agg.get("min_exact").and_then(Value::as_u64) {
+        if exact < v {
+            issues.push(format!("{table}: {exact} exact rows, aggregate floor is {v}"));
+        }
+    }
+    if let Some(v) = agg.get("max_off").and_then(Value::as_u64) {
+        if off > v {
+            issues.push(format!("{table}: {off} Off rows, aggregate ceiling is {v}"));
+        }
+    }
+    if let Some(v) = agg.get("min_exact_or_close_pct").and_then(Value::as_u64) {
+        if (exact + close) * 100 < total * v {
+            issues.push(format!(
+                "{table}: {exact} exact + {close} close of {total} below {v}%"
+            ));
+        }
+    }
+}
+
+/// Diff one golden file against one live table.
+pub fn check_table(name: &str, golden: &Value, live: &Value) -> TableReport {
+    let mut issues = Vec::new();
+    match golden.get("expect") {
+        Some(spec) => check_value(spec, live, name, &mut issues),
+        None => issues.push(format!("{name}: golden file has no \"expect\" value")),
+    }
+    if let Some(agg) = golden.get("aggregate") {
+        check_aggregate(agg, live, name, &mut issues);
+    }
+    TableReport { table: name.to_string(), issues }
+}
+
+/// The registry pin: every Table V row name and its paper SASS mapping,
+/// one tab-separated line per row (`tests/golden/registry_sass.txt`).
+pub fn registry_snapshot() -> String {
+    let mut out = String::new();
+    for r in registry::table5() {
+        out.push_str(r.name);
+        out.push('\t');
+        out.push_str(r.paper_sass);
+        out.push('\n');
+    }
+    out
+}
+
+fn check_registry(dir: &str) -> TableReport {
+    let path = format!("{dir}/registry_sass.txt");
+    let mut issues = Vec::new();
+    match std::fs::read_to_string(&path) {
+        Err(e) => issues.push(format!("read {path}: {e}")),
+        Ok(golden) => {
+            let live = registry_snapshot();
+            if golden != live {
+                for (i, (g, l)) in golden.lines().zip(live.lines()).enumerate() {
+                    if g != l {
+                        issues.push(format!(
+                            "registry line {}: golden {g:?} vs live {l:?}",
+                            i + 1
+                        ));
+                    }
+                }
+                let (gn, ln) = (golden.lines().count(), live.lines().count());
+                if gn != ln {
+                    issues.push(format!("registry: {gn} golden rows vs {ln} live rows"));
+                }
+                if issues.is_empty() {
+                    issues.push("registry snapshot differs only in whitespace".to_string());
+                }
+            }
+        }
+    }
+    TableReport { table: "registry".to_string(), issues }
+}
+
+/// Run the full conformance suite on `engine` against the snapshots in
+/// `dir`.  Infallible by design: a table whose experiment or snapshot
+/// fails becomes that table's issue (the other tables still report), so
+/// a CI failure always carries the full per-table picture.
+pub fn check(engine: &Engine, dir: &str) -> ConformanceReport {
+    let mut tables = vec![check_registry(dir)];
+    for t in TABLES {
+        let path = format!("{dir}/{t}.json");
+        let report = match std::fs::read_to_string(&path) {
+            Err(e) => TableReport {
+                table: t.to_string(),
+                issues: vec![format!(
+                    "read {path}: {e} (regenerate with `repro conformance --update`)"
+                )],
+            },
+            Ok(src) => match parse(&src) {
+                Err(e) => TableReport { table: t.to_string(), issues: vec![format!("{path}: {e}")] },
+                Ok(golden) => match live_json(engine, t) {
+                    Ok(live) => check_table(t, &golden, &live),
+                    Err(e) => TableReport {
+                        table: t.to_string(),
+                        issues: vec![format!("{t}: experiment failed to run: {e}")],
+                    },
+                },
+            },
+        };
+        tables.push(report);
+    }
+    ConformanceReport { tables }
+}
+
+/// Regenerate every snapshot from a live run.  Measured cells become
+/// exact pins; an existing `aggregate` block is carried over so the
+/// Table V calibration floors survive regeneration.  Returns the paths
+/// written.
+pub fn update(engine: &Engine, dir: &str) -> Result<Vec<String>, String> {
+    std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {dir}: {e}"))?;
+    let mut written = Vec::new();
+    for t in TABLES {
+        let live = live_json(engine, t)?;
+        let path = format!("{dir}/{t}.json");
+        let old_aggregate = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|s| parse(&s).ok())
+            .and_then(|v| v.get("aggregate").cloned());
+        let mut out = Value::obj().set("table", t).set("expect", live);
+        if let Some(agg) = old_aggregate {
+            out = out.set("aggregate", agg);
+        }
+        std::fs::write(&path, to_string_pretty(&out) + "\n")
+            .map_err(|e| format!("write {path}: {e}"))?;
+        written.push(path);
+    }
+    let path = format!("{dir}/registry_sass.txt");
+    std::fs::write(&path, registry_snapshot()).map_err(|e| format!("write {path}: {e}"))?;
+    written.push(path);
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn issues_for(spec: &str, live: &str) -> Vec<String> {
+        let mut issues = Vec::new();
+        check_value(&parse(spec).unwrap(), &parse(live).unwrap(), "t", &mut issues);
+        issues
+    }
+
+    #[test]
+    fn exact_range_rel_and_wildcard_cells() {
+        assert!(issues_for("5", "5").is_empty());
+        assert!(!issues_for("5", "6").is_empty());
+        assert!(issues_for("{\"min\": 2, \"max\": 18}", "10").is_empty());
+        assert!(!issues_for("{\"min\": 2, \"max\": 18}", "19").is_empty());
+        assert!(issues_for("{\"within_rel\": 0.06, \"of\": 290}", "300").is_empty());
+        assert!(!issues_for("{\"within_rel\": 0.01, \"of\": 290}", "300").is_empty());
+        assert!(issues_for("{\"any\": true}", "\"whatever\"").is_empty());
+        assert!(issues_for("\"IADD\"", "\"IADD\"").is_empty());
+        assert!(!issues_for("\"IADD\"", "\"FADD\"").is_empty());
+    }
+
+    #[test]
+    fn contains_object_and_array_cells() {
+        assert!(issues_for("{\"contains\": \"DEPBAR\"}", "[\"CS2R\", \"DEPBAR\"]").is_empty());
+        assert!(!issues_for("{\"contains\": \"DEPBAR\"}", "[\"CS2R\"]").is_empty());
+        // object walk: golden keys must match, extra live keys allowed
+        assert!(issues_for("{\"a\": 1}", "{\"a\": 1, \"b\": 2}").is_empty());
+        assert!(!issues_for("{\"a\": 1, \"c\": 3}", "{\"a\": 1}").is_empty());
+        // array length mismatch is one loud issue
+        let i = issues_for("[1, 2]", "[1]");
+        assert_eq!(i.len(), 1, "{i:?}");
+    }
+
+    #[test]
+    fn aggregate_floors() {
+        let live = parse(
+            "[{\"grade\": \"exact\"}, {\"grade\": \"exact\"}, {\"grade\": \"close\"}, {\"grade\": \"OFF\"}]",
+        )
+        .unwrap();
+        let mut issues = Vec::new();
+        check_aggregate(
+            &parse("{\"min_exact\": 2, \"max_off\": 1, \"min_exact_or_close_pct\": 75}").unwrap(),
+            &live,
+            "t5",
+            &mut issues,
+        );
+        assert!(issues.is_empty(), "{issues:?}");
+        let mut issues = Vec::new();
+        check_aggregate(&parse("{\"min_exact\": 3}").unwrap(), &live, "t5", &mut issues);
+        assert_eq!(issues.len(), 1);
+    }
+
+    #[test]
+    fn registry_snapshot_shape() {
+        let snap = registry_snapshot();
+        assert_eq!(snap.lines().count(), registry::table5().len());
+        assert!(snap.lines().all(|l| l.contains('\t')));
+        assert!(snap.contains("add.u32\tIADD\n"));
+    }
+}

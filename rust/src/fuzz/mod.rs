@@ -1,0 +1,34 @@
+//! Differential fuzzing + golden conformance: the adversarial
+//! correctness layer.
+//!
+//! The repo has three independent ways to cost a kernel — the engine's
+//! pooled simulator, a fresh [`Simulator`](crate::sim::Simulator), and
+//! the oracle's static predictor — but until this subsystem only the
+//! ~140 hand-written registry kernels ever exercised them.  Two pieces
+//! turn that from anecdotal into adversarial:
+//!
+//! * [`gen`] + [`diff`] — a grammar-driven, seeded PTX kernel generator
+//!   (mixed ALU/memory/WMMA/clock-window bodies with
+//!   valid-by-construction register dataflow) and a differential
+//!   harness running every generated kernel through all three paths,
+//!   classifying divergences (pool-reset contamination, translator
+//!   nondeterminism, predictor mismatch) and dumping a seed-minimized
+//!   reproducer `.ptx` + JSON report on failure.  CLI: `repro fuzz
+//!   --seed <s> --cases <n>`.
+//! * [`golden`] — the conformance suite: Tables I–V and Fig. 4 rendered
+//!   through the `report::*_json` builders and diffed against the
+//!   checked-in snapshots under `tests/golden/` with per-cell tolerance
+//!   specs (exact / range / "changes", per the paper's notation) plus
+//!   the registry name/SASS pin.  CLI: `repro conformance [--update]`.
+//!
+//! Both are deterministic end to end: a fuzz run replays from its seed,
+//! a conformance run from the snapshot files — so CI failures are
+//! always reproducible locally with one command.
+
+pub mod diff;
+pub mod gen;
+pub mod golden;
+
+pub use diff::{run as run_fuzz, Divergence, DivergenceKind, Failure, FuzzOutcome};
+pub use gen::{case_seed, generate, Family, FuzzCase, ALL_FAMILIES, DEFAULT_SIZE};
+pub use golden::{check as check_conformance, ConformanceReport};

@@ -38,11 +38,18 @@
 //!   dependence-aware static prediction of kernel cycles, and a
 //!   JSON-line TCP server with request batching, an LRU prediction
 //!   cache and live-simulation fallback (`repro serve`).
+//! * [`fuzz`] — the adversarial correctness layer: a seeded grammar
+//!   fuzzer over the PTX surface, a three-path differential harness
+//!   (pooled engine vs fresh simulator vs static predictor) with
+//!   divergence classification and seed-minimized reproducers, and the
+//!   golden conformance suite pinning Tables I–V + Fig. 4 against
+//!   `tests/golden/` snapshots (`repro fuzz` / `repro conformance`).
 //! * [`runtime`] — PJRT client loading the AOT JAX/Pallas artifacts; the
 //!   WMMA numerics oracle on the request path (python is build-time only).
 
 pub mod config;
 pub mod engine;
+pub mod fuzz;
 pub mod harness;
 pub mod memory;
 pub mod microbench;

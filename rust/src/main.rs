@@ -14,9 +14,12 @@
 //! repro extract-model       # distill the campaign into model JSON
 //! repro predict add.u32     # static prediction + live cross-check
 //! repro serve               # JSON-line TCP prediction service
+//! repro fuzz                # three-path differential fuzzing
+//! repro conformance         # golden-snapshot diff (tests/golden/)
 //!
 //! flags: --small (scaled caches), --json, --dependent, --faithful,
-//!        --model <path>, --out <path>, --port <n>
+//!        --model <path>, --out <path>, --port <n>, --seed <s>,
+//!        --cases <n>, --update
 //! ```
 
 use ampere_ubench::config::AmpereConfig;
@@ -25,7 +28,7 @@ use ampere_ubench::microbench::{alu, insights, memory, registry, wmma};
 use ampere_ubench::oracle::{serve, LatencyModel, LatencyOracle, Server};
 use ampere_ubench::tensor::{movm_plan, ALL_DTYPES};
 use ampere_ubench::util::json::{to_string_pretty, Value};
-use ampere_ubench::{harness, report, runtime};
+use ampere_ubench::{fuzz, harness, report, runtime};
 use std::sync::Arc;
 
 const USAGE: &str = "\
@@ -57,9 +60,33 @@ COMMANDS:
   serve [--model <path>] [--port <n>]
                         JSON-line TCP prediction service on
                         127.0.0.1:<port> (default 7845)
+  fuzz [--seed <s>] [--cases <n>] [--model <path>]
+                        differential fuzzing: every generated kernel
+                        runs through (a) the engine's pooled simulator,
+                        (b) a fresh simulator and (c) the oracle's
+                        static predictor; divergences are classified
+                        (pool contamination / translator nondeterminism
+                        / predictor mismatch), seed-minimized, and
+                        dumped as fuzz_repro_<seed>.ptx + .json.
+                        Defaults: --seed 1 --cases 100.  Replay one
+                        failing case: repro fuzz --seed <s> --cases 1
+                        (case seeds are base+index, printed on failure).
+  conformance [--update]
+                        diff Tables I-V + Fig. 4 (the report::*_json
+                        forms) and the registry name/SASS pin against
+                        the golden snapshots in tests/golden/ (per-cell
+                        exact / range / \"changes\" tolerances, plus the
+                        Table V calibration floors).  After an
+                        *intentional* behaviour change, regenerate with
+                        `repro conformance --update` and review the
+                        snapshot diff before committing (aggregate
+                        floors are preserved across --update).
 
---json applies to table1…table5, fig4, insights, extract-model and
-predict.
+--json applies to table1…table5, fig4, insights, extract-model,
+predict, fuzz and conformance.
+
+Property-based tests share the same seeds: FUZZ_CASES=<n> deepens every
+`util::prng::check` sweep (CI runs 200; local `cargo test` stays fast).
 
 SERVE WIRE PROTOCOL (one JSON value per line, both directions):
   request   {\"id\": 7, \"mode\": \"predict|simulate|check|stats|ping\",
@@ -77,9 +104,12 @@ struct Args {
     json: bool,
     faithful: bool,
     dependent: bool,
+    update: bool,
     model: Option<String>,
     out: Option<String>,
     port: Option<u16>,
+    seed: Option<u64>,
+    cases: Option<u64>,
     cmd: String,
     rest: Vec<String>,
 }
@@ -90,9 +120,12 @@ fn parse_args() -> Args {
         json: false,
         faithful: false,
         dependent: false,
+        update: false,
         model: None,
         out: None,
         port: None,
+        seed: None,
+        cases: None,
         cmd: String::new(),
         rest: Vec::new(),
     };
@@ -126,6 +159,23 @@ fn parse_args() -> Args {
                 }));
                 i += 1;
             }
+            "--seed" => {
+                let v = need_value(&argv, i);
+                a.seed = Some(v.parse().unwrap_or_else(|_| {
+                    eprintln!("--seed wants a u64, got {v:?}");
+                    std::process::exit(2);
+                }));
+                i += 1;
+            }
+            "--cases" => {
+                let v = need_value(&argv, i);
+                a.cases = Some(v.parse().unwrap_or_else(|_| {
+                    eprintln!("--cases wants a number, got {v:?}");
+                    std::process::exit(2);
+                }));
+                i += 1;
+            }
+            "--update" => a.update = true,
             "-h" | "--help" => {
                 print!("{USAGE}");
                 std::process::exit(0);
@@ -419,6 +469,61 @@ fn main() -> anyhow::Result<()> {
             println!("latency oracle serving on {}", server.local_addr()?);
             println!("protocol: one JSON request per line (array = batch); see `repro -h`");
             server.run()?;
+        }
+        "fuzz" => {
+            let model = load_or_extract(&args, &engine)?;
+            if let Some(mismatch) = model.geometry_mismatch(engine.cfg()) {
+                anyhow::bail!("{mismatch} (pass or drop --small to match the model)");
+            }
+            let seed = args.seed.unwrap_or(1);
+            let cases = args.cases.unwrap_or(100);
+            let outcome = fuzz::diff::run(&engine, &model, seed, cases);
+            if args.json {
+                println!("{}", to_string_pretty(&outcome.to_json()));
+            } else {
+                print!("{}", outcome.render());
+            }
+            if !outcome.failures.is_empty() {
+                for f in &outcome.failures {
+                    let (ptx, json) =
+                        fuzz::diff::dump_reproducer(".", f).map_err(anyhow::Error::msg)?;
+                    eprintln!(
+                        "reproducer: {ptx} + {json} (replay: {})",
+                        f.rerun_command()
+                    );
+                }
+                anyhow::bail!(
+                    "{} of {} fuzz cases diverged",
+                    outcome.failures.len(),
+                    cases
+                );
+            }
+        }
+        "conformance" => {
+            let dir = fuzz::golden::default_dir();
+            if args.update {
+                let written =
+                    fuzz::golden::update(&engine, &dir).map_err(anyhow::Error::msg)?;
+                for path in &written {
+                    println!("wrote {path}");
+                }
+                println!(
+                    "review the snapshot diff before committing (aggregate floors were preserved)"
+                );
+            } else {
+                let report = fuzz::golden::check(&engine, &dir);
+                if args.json {
+                    println!("{}", to_string_pretty(&report.to_json()));
+                } else {
+                    print!("{}", report.render());
+                }
+                if !report.pass() {
+                    anyhow::bail!(
+                        "conformance failed against {dir} (regenerate intentionally \
+                         changed tables with `repro conformance --update`)"
+                    );
+                }
+            }
         }
         "" => {
             print!("{USAGE}");

@@ -112,12 +112,21 @@ pub const REG_DECLS: &str = ".reg .b16 %h<64>; .reg .b32 %r<64>; .reg .b32 %f<64
      .reg .b64 %rd<64>; .reg .b64 %fd<64>; .reg .pred %p<16>;";
 
 /// Assemble a measurement kernel: init lines, clock, body, clock.
+/// Built on [`crate::ptx::KernelSource`] so every generator (registry
+/// expansion, fuzz grammar) prints the same protocol shape; the exact
+/// text is pinned by a `ptx::source` test because the kernel cache keys
+/// on it.
 pub fn measurement_kernel(init: &str, body: &str) -> String {
-    format!(
-        ".visible .entry ubench(.param .u64 out) {{\n {REG_DECLS}\n {init}\n \
-         mov.u64 %rd60, %clock64;\n {body}\n mov.u64 %rd61, %clock64;\n \
-         sub.s64 %rd62, %rd61, %rd60;\n ret;\n}}"
-    )
+    let mut k = crate::ptx::KernelSource::new("ubench");
+    k.param(".u64", "out");
+    k.line(REG_DECLS)
+        .line(init)
+        .line("mov.u64 %rd60, %clock64;")
+        .line(body)
+        .line("mov.u64 %rd61, %clock64;")
+        .line("sub.s64 %rd62, %rd61, %rd60;")
+        .line("ret;");
+    k.render()
 }
 
 /// Parameter block every measurement kernel runs with (the `out`

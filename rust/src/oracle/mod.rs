@@ -136,16 +136,7 @@ impl LatencyOracle {
     /// (`simulate`/`check`) would then disagree with the model on
     /// memory-touching kernels for a reason the caller can't see.
     pub fn config_mismatch(&self) -> Option<String> {
-        let mem = &self.engine.cfg().memory;
-        if (mem.l1_bytes as u64, mem.l2_bytes as u64) == (self.model.l1_bytes, self.model.l2_bytes)
-        {
-            None
-        } else {
-            Some(format!(
-                "model was extracted with L1/L2 = {}/{} bytes, engine has {}/{}",
-                self.model.l1_bytes, self.model.l2_bytes, mem.l1_bytes, mem.l2_bytes
-            ))
-        }
+        self.model.geometry_mismatch(self.engine.cfg())
     }
 
     pub fn engine(&self) -> &Engine {

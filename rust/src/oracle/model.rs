@@ -180,6 +180,23 @@ impl LatencyModel {
         })
     }
 
+    /// `Some(description)` when `cfg`'s cache geometry differs from the
+    /// config this model was extracted under (the knobs `--small`
+    /// changes) — shared by the oracle's startup check and the fuzz
+    /// harness, so a mismatched model fails fast everywhere instead of
+    /// surfacing as an unexplained prediction/simulation divergence.
+    pub fn geometry_mismatch(&self, cfg: &crate::config::AmpereConfig) -> Option<String> {
+        let mem = &cfg.memory;
+        if (mem.l1_bytes as u64, mem.l2_bytes as u64) == (self.l1_bytes, self.l2_bytes) {
+            None
+        } else {
+            Some(format!(
+                "model was extracted with L1/L2 = {}/{} bytes, engine has {}/{}",
+                self.l1_bytes, self.l2_bytes, mem.l1_bytes, mem.l2_bytes
+            ))
+        }
+    }
+
     /// Entry for a parsed instruction's display name.
     pub fn lookup(&self, key: &str) -> Option<&InstrEntry> {
         self.instructions.get(key)

@@ -15,9 +15,11 @@ pub mod ast;
 pub mod builder;
 pub mod lexer;
 pub mod parser;
+pub mod source;
 pub mod types;
 
 pub use ast::{Operand, PtxInstruction, PtxOp, PtxProgram, Reg, SpecialReg};
 pub use builder::KernelBuilder;
+pub use source::KernelSource;
 pub use parser::parse_program;
 pub use types::{CacheOp, Modifiers, PtxType, RoundMode, StateSpace};

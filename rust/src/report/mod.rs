@@ -287,6 +287,10 @@ pub fn fig4_json(f: &Fig4) -> Value {
             "sass_32bit",
             Value::Arr(f.sass_32bit.iter().map(|s| Value::from(s.as_str())).collect()),
         )
+        .set(
+            "sass_64bit",
+            Value::Arr(f.sass_64bit.iter().map(|s| Value::from(s.as_str())).collect()),
+        )
 }
 
 pub fn insights_json(i1: &Insight1, i2: &[SignPair], i3: &[Insight3]) -> Value {

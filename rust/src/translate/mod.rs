@@ -248,6 +248,13 @@ impl TranslatedProgram {
     pub fn sass_len(&self) -> usize {
         self.groups.iter().map(|g| g.instrs.len()).sum()
     }
+
+    /// Per-PTX-instruction mapping strings (Table V's format) — the
+    /// fingerprint the differential fuzzer compares across independent
+    /// translations of one source to pin translator determinism.
+    pub fn mappings(&self) -> Vec<String> {
+        self.groups.iter().map(|g| g.mapping()).collect()
+    }
 }
 
 /// Convenience: parse-and-translate helper used throughout the tests.

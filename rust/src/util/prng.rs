@@ -51,14 +51,38 @@ impl Rng {
     }
 }
 
+/// Effective sweep depth: `default`, deepened by the `FUZZ_CASES` env
+/// var.  Deepen-only (`max`), never shallower — CI exporting
+/// `FUZZ_CASES=200` must not silently *reduce* a property that already
+/// runs more cases locally.
+pub fn fuzz_cases(default: u64) -> u64 {
+    std::env::var("FUZZ_CASES")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map_or(default, |v| v.max(default))
+}
+
 /// Run a property over `n` seeded cases; on failure report the seed so
 /// the case replays deterministically.
+///
+/// The `FUZZ_CASES` env var deepens `n` globally (see [`fuzz_cases`]),
+/// so CI can run every property sweep deep (e.g. `FUZZ_CASES=500`)
+/// while local `cargo test -q` stays fast.  Seeds derive from the case
+/// index alone, so a failure found at any depth replays at that depth
+/// or deeper.
 pub fn check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, n: u64, f: F) {
+    let n = fuzz_cases(n);
     for case in 0..n {
         let seed = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case + 1);
         let mut rng = Rng::new(seed);
         if let Err(m) = f(&mut rng) {
-            panic!("property {name} failed (case {case}, seed {seed:#x}): {m}");
+            panic!(
+                "property {name} failed (case {case}, seed {seed:#x}): {m}\n  \
+                 replay: rerun with FUZZ_CASES>={} — fuzz-driven properties print \
+                 their own `repro fuzz --seed <s> --cases 1` command in the message \
+                 above",
+                case + 1
+            );
         }
     }
 }

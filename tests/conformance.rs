@@ -1,0 +1,48 @@
+//! Golden conformance: the paper's tables rendered via the
+//! `report::*_json` builders and diffed against the pinned snapshots in
+//! `tests/golden/` — the integration-level twin of the
+//! `repro conformance` CLI path — plus the registry name/SASS pin that
+//! makes accidental renames or mapping drift fail loudly.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::fuzz::golden;
+use ampere_ubench::microbench::registry;
+
+#[test]
+fn registry_names_and_sass_match_snapshot() {
+    let path = format!("{}/registry_sass.txt", golden::default_dir());
+    let snapshot = std::fs::read_to_string(&path).expect("checked-in registry snapshot");
+    assert_eq!(
+        snapshot,
+        golden::registry_snapshot(),
+        "registry drifted from tests/golden/registry_sass.txt — if the rename or \
+         mapping change is intentional, regenerate with `repro conformance --update` \
+         and review the diff"
+    );
+    assert_eq!(snapshot.lines().count(), registry::names().len());
+}
+
+#[test]
+fn golden_files_exist_and_parse() {
+    use ampere_ubench::util::json::parse;
+    let dir = golden::default_dir();
+    for t in golden::TABLES {
+        let path = format!("{dir}/{t}.json");
+        let src = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+        let v = parse(&src).unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert_eq!(v.get("table").and_then(|x| x.as_str()), Some(t), "{path}");
+        assert!(v.get("expect").is_some(), "{path} has no expect value");
+    }
+}
+
+#[test]
+fn conformance_passes_against_checked_in_goldens() {
+    // The acceptance gate: Tables I–V + Fig. 4 within the pinned
+    // per-cell tolerances and Table V's calibration floors.
+    let engine = Engine::new(AmpereConfig::small());
+    let report = golden::check(&engine, &golden::default_dir());
+    assert!(report.pass(), "{}", report.render());
+    // registry + 6 tables were all actually checked
+    assert_eq!(report.tables.len(), 1 + golden::TABLES.len());
+}

@@ -1,0 +1,195 @@
+//! Differential fuzzing over generated kernels — the integration-level
+//! twin of the `repro fuzz` CLI path.
+//!
+//! Covers the pool-reset invariant on *fuzz-generated* kernels (the
+//! engine's reset-byte-identical property extended beyond registry
+//! rows), translator determinism across independent compiles, and
+//! predictor self-consistency on the predictor-exact families.
+//!
+//! Depth scales with `FUZZ_CASES` (see `util::prng::check`).
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::fuzz::{diff, gen};
+use ampere_ubench::oracle::LatencyModel;
+use ampere_ubench::ptx::parse_program;
+use ampere_ubench::translate::translate_program;
+use ampere_ubench::util::prng::check;
+use std::sync::OnceLock;
+
+const PARAMS: &[u64] = &[0x100000];
+
+/// One extracted model shared by every test in this binary (extraction
+/// runs the full campaign once).
+fn model() -> &'static LatencyModel {
+    static MODEL: OnceLock<LatencyModel> = OnceLock::new();
+    MODEL.get_or_init(|| {
+        LatencyModel::extract(&Engine::new(AmpereConfig::small())).expect("extraction")
+    })
+}
+
+#[test]
+fn prop_generated_kernels_always_compile_and_run() {
+    let cfg = AmpereConfig::small();
+    check("fuzz-gen-valid", 40, |rng| {
+        let seed = rng.next_u64();
+        // Every error names the *generation* seed, so the failing kernel
+        // regenerates exactly via `repro fuzz --seed <seed> --cases 1`.
+        let ctx = |what: &str, case: &gen::FuzzCase| {
+            format!(
+                "{what} [{}] (replay: repro fuzz --seed {seed} --cases 1)",
+                case.label
+            )
+        };
+        let case = gen::generate(seed, gen::DEFAULT_SIZE);
+        let again = gen::generate(seed, gen::DEFAULT_SIZE);
+        if case.src != again.src {
+            return Err(ctx("generation is nondeterministic", &case));
+        }
+        let prog = parse_program(&case.src)
+            .map_err(|e| ctx(&format!("parse: {e}"), &case))?;
+        let tp = translate_program(&prog)
+            .map_err(|e| ctx(&format!("translate: {e}"), &case))?;
+        prog.validate()
+            .map_err(|e| ctx(&format!("validate: {e}"), &case))?;
+        let mut sim = ampere_ubench::sim::Simulator::new(cfg.clone());
+        let r = sim
+            .run(&prog, &tp, PARAMS)
+            .map_err(|e| ctx(&format!("run: {e}"), &case))?;
+        if r.clock_reads.len() < 2 {
+            return Err(ctx("lost its clock brackets", &case));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pool_reset_matches_fresh_for_generated_kernels() {
+    // The engine invariant, extended per the fuzz charter: after
+    // running ANY generated kernel, a reset pooled simulator must match
+    // a fresh one bit for bit — not just on registry rows.
+    let engine = Engine::with_workers(AmpereConfig::small(), 1);
+    check("fuzz-pool-reset", 25, |rng| {
+        let seed = rng.next_u64();
+        let case = gen::generate(seed, gen::DEFAULT_SIZE);
+        let ctx = |what: String| {
+            format!(
+                "{what} [{}] (replay: repro fuzz --seed {seed} --cases 1)",
+                case.label
+            )
+        };
+        let k = engine
+            .compile(&case.src)
+            .map_err(|e| ctx(format!("compile: {e}")))?;
+        // Dirty a pooled instance with the kernel (reset on drop)…
+        {
+            let mut sim = engine.simulator();
+            sim.run(&k.prog, &k.tp, PARAMS)
+                .map_err(|e| ctx(format!("dirtying run: {e}")))?;
+        }
+        // …then the recycled instance must equal a fresh build exactly.
+        let recycled = {
+            let mut sim = engine.simulator();
+            sim.run(&k.prog, &k.tp, PARAMS)
+                .map_err(|e| ctx(format!("recycled run: {e}")))?
+        };
+        let fresh = engine
+            .fresh_simulator()
+            .run(&k.prog, &k.tp, PARAMS)
+            .map_err(|e| ctx(format!("fresh run: {e}")))?;
+        if recycled != fresh {
+            return Err(ctx("recycled != fresh".to_string()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn differential_run_reports_zero_divergences() {
+    let engine = Engine::new(AmpereConfig::small());
+    let cases = ampere_ubench::util::prng::fuzz_cases(60);
+    let outcome = diff::run(&engine, model(), 1, cases);
+    assert_eq!(outcome.cases, cases);
+    assert!(outcome.failures.is_empty(), "{}", outcome.render());
+    assert!(
+        outcome.family_counts.len() >= 4,
+        "family spread too thin: {:?}",
+        outcome.family_counts
+    );
+    // The JSON report carries the pass verdict the CI artifact shows.
+    assert_eq!(
+        outcome.to_json().get("pass").and_then(|v| v.as_bool()),
+        Some(true)
+    );
+}
+
+#[test]
+fn predictor_path_is_live_not_vacuous() {
+    // Corrupt one model entry: a predictor-exact case measuring that
+    // instruction must now classify as PredictorMismatch — proving the
+    // third differential path actually gates.
+    let engine = Engine::new(AmpereConfig::small());
+    let mut bad = model().clone();
+    {
+        let e = bad.instructions.get_mut("add.u32").expect("model has add.u32");
+        e.cpi = 40;
+        e.dep_cpi = Some(41);
+    }
+    let mut hit = false;
+    for seed in 0..5000u64 {
+        let case = gen::generate(seed, gen::DEFAULT_SIZE);
+        if case.predict_exact && case.label.starts_with("add.u32") {
+            let d = diff::run_case(&engine, &bad, &case).expect_err("must diverge");
+            assert_eq!(d.kind, diff::DivergenceKind::PredictorMismatch, "{d:?}");
+            // And the same case against the honest model passes.
+            assert!(diff::run_case(&engine, model(), &case).is_ok());
+            hit = true;
+            break;
+        }
+    }
+    assert!(hit, "no add.u32 alu case found in 5000 seeds");
+}
+
+#[test]
+fn reproducer_dump_round_trips() {
+    // A forced failure dumps a .ptx that replays and a JSON report that
+    // names the divergence and the rerun command.
+    let engine = Engine::new(AmpereConfig::small());
+    let mut bad = model().clone();
+    bad.instructions.get_mut("add.u32").expect("add.u32").cpi = 40;
+    let mut target = None;
+    for seed in 0..5000u64 {
+        let c = gen::generate(seed, gen::DEFAULT_SIZE);
+        if c.predict_exact && c.label == "add.u32" {
+            target = Some((seed, c));
+            break;
+        }
+    }
+    let (seed, case) = target.expect("an add.u32 alu case");
+    let divergence = diff::run_case(&engine, &bad, &case).unwrap_err();
+    let failure = diff::Failure {
+        index: 0,
+        case_seed: seed,
+        original_len: case.src.len(),
+        case,
+        divergence,
+    };
+    let dir = std::env::temp_dir().join("fuzz_repro_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let dir = dir.to_str().unwrap();
+    let (ptx, json_path) = diff::dump_reproducer(dir, &failure).unwrap();
+    let src = std::fs::read_to_string(&ptx).unwrap();
+    assert!(parse_program(&src).is_ok(), "reproducer must replay");
+    let report =
+        ampere_ubench::util::json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+    assert_eq!(
+        report.get("kind").and_then(|v| v.as_str()),
+        Some("predictor-mismatch")
+    );
+    assert_eq!(
+        report.get("rerun").and_then(|v| v.as_str()),
+        Some(format!("repro fuzz --seed {seed} --cases 1").as_str())
+    );
+    let _ = std::fs::remove_file(&ptx);
+    let _ = std::fs::remove_file(&json_path);
+}

@@ -1,0 +1,114 @@
+//! Phase probes: where does a measurement actually spend its wall-clock
+//! time?  Consolidates the former ad-hoc `probe3.rs` (per-phase WMMA
+//! timing) and `perf_probe.rs` (Table V phase breakdown + raw simulated
+//! instruction throughput) into one documented binary.
+//!
+//! These are diagnostics, not assertions — they print timings for a
+//! human reading `--nocapture` output and are `#[ignore]`d so tier-1
+//! stays fast.  Run them with:
+//!
+//! ```text
+//! cargo test --release --test phase_probe -- --nocapture --ignored
+//! ```
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::microbench::{alu, registry};
+use ampere_ubench::ptx::parse_program;
+use ampere_ubench::sim::Simulator;
+use ampere_ubench::translate::translate_program;
+use std::time::Instant;
+
+/// Per-phase cost of one Fig.-5 WMMA measurement, per dtype: kernel
+/// generation, parse, translate, simulator construction, DRAM seeding,
+/// and the run itself.
+#[test]
+#[ignore]
+fn wmma_phase_breakdown() {
+    let cfg = AmpereConfig::a100();
+    for d in ampere_ubench::tensor::ALL_DTYPES {
+        let t = Instant::now();
+        let src = ampere_ubench::microbench::wmma::fig5_kernel(d, 8);
+        let t_gen = t.elapsed();
+        let t = Instant::now();
+        let prog = parse_program(&src).unwrap();
+        let t_parse = t.elapsed();
+        let t = Instant::now();
+        let tp = translate_program(&prog).unwrap();
+        let t_tr = t.elapsed();
+        let t = Instant::now();
+        let mut sim = Simulator::new(cfg.clone());
+        sim.trace = ampere_ubench::sass::TraceRecorder::disabled();
+        let t_new = t.elapsed();
+        let t = Instant::now();
+        for ch in 0..4u64 {
+            let base = 0x20_0000u64 + ch * 0x1_0000;
+            for i in 0..1024u64 {
+                sim.mem.dram.write(base + 4 * i, &(1.0f32).to_bits().to_le_bytes());
+            }
+        }
+        let t_seed = t.elapsed();
+        let t = Instant::now();
+        sim.run(&prog, &tp, &[0]).unwrap();
+        let t_run = t.elapsed();
+        println!(
+            "{:<10} gen {:?} parse {:?} tr {:?} new {:?} seed {:?} run {:?}",
+            d.key(),
+            t_gen,
+            t_parse,
+            t_tr,
+            t_new,
+            t_seed,
+            t_run
+        );
+    }
+}
+
+/// Average per-kernel cost of each Table V phase across the whole
+/// registry, plus raw simulated-SASS throughput on a long loop.
+#[test]
+#[ignore]
+fn table5_phase_breakdown() {
+    let cfg = AmpereConfig::a100();
+    let rows = registry::table5();
+    let srcs: Vec<String> = rows.iter().map(|r| alu::kernel_for(r, false)).collect();
+    let n = srcs.len() as f64;
+
+    let t = Instant::now();
+    let progs: Vec<_> = srcs.iter().map(|s| parse_program(s).unwrap()).collect();
+    println!("parse:     {:>8.1} µs/kernel", t.elapsed().as_micros() as f64 / n);
+
+    let t = Instant::now();
+    let tps: Vec<_> = progs.iter().map(|p| translate_program(p).unwrap()).collect();
+    println!("translate: {:>8.1} µs/kernel", t.elapsed().as_micros() as f64 / n);
+
+    let t = Instant::now();
+    let mut sims: Vec<_> = (0..progs.len()).map(|_| Simulator::new(cfg.clone())).collect();
+    println!("sim-new:   {:>8.1} µs/kernel", t.elapsed().as_micros() as f64 / n);
+
+    let t = Instant::now();
+    for ((p, tp), sim) in progs.iter().zip(&tps).zip(&mut sims) {
+        sim.run(p, tp, &[0x100000]).unwrap();
+    }
+    println!("sim-run:   {:>8.1} µs/kernel", t.elapsed().as_micros() as f64 / n);
+
+    // raw simulated-instruction throughput on a long loop
+    let src = format!(
+        ".visible .entry k() {{ {} mov.u64 %rd1, 0;\n$L:\n add.u64 %rd1, %rd1, 1;\n \
+         add.u32 %r1, %r2, 1;\n add.u32 %r3, %r4, 1;\n add.u32 %r5, %r6, 1;\n \
+         setp.lt.u64 %p1, %rd1, 1000000;\n @%p1 bra $L;\n ret; }}",
+        ampere_ubench::microbench::REG_DECLS
+    );
+    let p = parse_program(&src).unwrap();
+    let tp = translate_program(&p).unwrap();
+    let mut sim = Simulator::new(cfg.clone());
+    sim.trace = ampere_ubench::sass::TraceRecorder::disabled();
+    let t = Instant::now();
+    let r = sim.run(&p, &tp, &[]).unwrap();
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "loop:      {:.1} M SASS instr/s ({} instrs in {:.2}s)",
+        r.sass_instructions as f64 / secs / 1e6,
+        r.sass_instructions,
+        secs
+    );
+}
