@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Bench trajectory check: compare this run's BENCH_*.json against the
+previous successful main run's artifact.
+
+Usage: bench_delta.py <baseline_dir> <new_dir>
+
+Prints a median-delta table per bench file and exits non-zero when any
+series regressed by more than REGRESSION_PCT.  Series that appear on
+only one side (renamed/new benches) are reported but never fail the
+check, and a missing file on either side skips that file — the check
+must not brick CI when benches are added or reshaped.
+"""
+
+import json
+import os
+import sys
+
+REGRESSION_PCT = 25.0
+FILES = ("BENCH_campaign.json", "BENCH_oracle.json")
+
+
+def load_series(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {row["name"]: row for row in doc.get("results", [])}
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} <baseline_dir> <new_dir>")
+    base_dir, new_dir = sys.argv[1], sys.argv[2]
+    regressions = []
+
+    for name in FILES:
+        base_path = os.path.join(base_dir, name)
+        new_path = os.path.join(new_dir, name)
+        if not os.path.exists(base_path) or not os.path.exists(new_path):
+            print(f"{name}: missing on one side; skipping")
+            continue
+        base = load_series(base_path)
+        new = load_series(new_path)
+
+        print(f"\n== {name} — median delta vs previous main ==")
+        print(f"{'series':<40} {'prev (ms)':>12} {'now (ms)':>12} {'delta':>9}")
+        for series, row in new.items():
+            prev = base.get(series)
+            if prev is None:
+                print(f"{series:<40} {'(new series)':>12}")
+                continue
+            p, n = prev["median_ns"], row["median_ns"]
+            delta = (n - p) / p * 100.0 if p else 0.0
+            flag = ""
+            if delta > REGRESSION_PCT:
+                flag = "  REGRESSION"
+                regressions.append(f"{name}:{series} +{delta:.1f}%")
+            print(f"{series:<40} {p / 1e6:>12.2f} {n / 1e6:>12.2f} {delta:>8.1f}%{flag}")
+        for series in sorted(set(base) - set(new)):
+            print(f"{series:<40} {'(dropped)':>12}")
+
+    if regressions:
+        sys.exit(
+            "median regression >"
+            + f"{REGRESSION_PCT:.0f}% vs previous main: "
+            + ", ".join(regressions)
+        )
+    print(f"\nno series regressed by more than {REGRESSION_PCT:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,612 @@
+//! Architecture registry: named machine descriptions the whole stack is
+//! parameterized over.
+//!
+//! The paper measures one Ampere part, but its stated purpose is feeding
+//! performance models that track *architectures* — and the follow-on
+//! literature (Hopper: arXiv:2402.13499, Blackwell: arXiv:2507.10789)
+//! repeats the same methodology per generation.  An [`ArchSpec`] owns
+//! everything a generation pins down:
+//!
+//! * clock / SM / warp geometry and the per-pipe (per instruction class)
+//!   issue-occupancy and dependent-use latencies;
+//! * the per-level memory hierarchy (sizes, line sizes, service
+//!   latencies);
+//! * the WMMA capability table — which Table III dtypes the generation's
+//!   tensor cores support (Volta: fp16 only; Turing adds the integer
+//!   configs; Ampere adds bf16/tf32/fp64);
+//! * the SASS translation quirks ([`TranslationQuirks`]) the paper pins
+//!   through dynamic traces.
+//!
+//! Three presets ship built in: [`ArchSpec::ampere`] is byte-identical
+//! to the historical `AmpereConfig::a100()` (pinned by test — `repro
+//! --arch ampere <cmd>` and plain `repro <cmd>` are the same run);
+//! [`ArchSpec::volta`] and [`ArchSpec::turing`] are parameterized from
+//! the paper's cited predecessor studies (Jia et al.'s Volta/Turing
+//! dissections), calibrated the same way the Ampere defaults were.
+//! Custom specs load from JSON (`repro --arch my_chip.json …`); the
+//! schema is exactly [`ArchSpec::to_json`] and `repro arch show
+//! <name> --json` prints a valid starting point.
+//!
+//! [`get`] resolves a `--arch` value (preset name, alias, or JSON
+//! path); [`diff`] produces the field-level delta between two specs
+//! (`repro arch diff volta ampere` shows, among others, the WMMA dtype
+//! gap); `repro compare --arch a,b` runs whole campaigns per arch and
+//! tabulates measured deltas (see [`crate::report::compare`]).
+
+use crate::config::{AmpereConfig, Pipe, PipeTiming, TranslationQuirks, ALL_PIPES};
+use crate::tensor::{WmmaDtype, ALL_DTYPES};
+use crate::util::json::{parse, to_string_pretty, Value};
+
+/// Built-in preset names, in generation order.
+pub const BUILTIN: [&str; 3] = ["volta", "turing", "ampere"];
+
+/// A named, serializable machine description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchSpec {
+    /// Human-readable description (chip, product, provenance).
+    pub display: String,
+    /// The full machine config every layer threads.
+    pub config: AmpereConfig,
+}
+
+/// Stable JSON/CLI key for a pipe.
+fn pipe_key(p: Pipe) -> &'static str {
+    match p {
+        Pipe::Int => "int",
+        Pipe::Fma => "fma",
+        Pipe::Half => "half",
+        Pipe::Fp64 => "fp64",
+        Pipe::Sfu => "sfu",
+        Pipe::Lsu => "lsu",
+        Pipe::Tensor => "tensor",
+        Pipe::Uniform => "uniform",
+        Pipe::Control => "control",
+        Pipe::Special => "special",
+    }
+}
+
+fn pipe_mut(cfg: &mut AmpereConfig, p: Pipe) -> &mut PipeTiming {
+    match p {
+        Pipe::Int => &mut cfg.int_pipe,
+        Pipe::Fma => &mut cfg.fma_pipe,
+        Pipe::Half => &mut cfg.half_pipe,
+        Pipe::Fp64 => &mut cfg.fp64_pipe,
+        Pipe::Sfu => &mut cfg.sfu_pipe,
+        Pipe::Lsu => &mut cfg.lsu_pipe,
+        Pipe::Tensor => &mut cfg.tensor_pipe,
+        Pipe::Uniform => &mut cfg.uniform_pipe,
+        Pipe::Control => &mut cfg.control_pipe,
+        Pipe::Special => &mut cfg.special_pipe,
+    }
+}
+
+fn dtype_from_key(key: &str) -> Option<WmmaDtype> {
+    ALL_DTYPES.into_iter().find(|d| d.key() == key)
+}
+
+impl ArchSpec {
+    pub fn name(&self) -> &str {
+        &self.config.arch_name
+    }
+
+    /// Ampere GA100 — byte-identical to the historical
+    /// [`AmpereConfig::a100`] defaults (pinned by test), so the arch
+    /// registry changes nothing about existing runs.
+    pub fn ampere() -> ArchSpec {
+        ArchSpec {
+            display: "Ampere GA100 (A100-SXM4, the paper's testbed)".to_string(),
+            config: AmpereConfig::a100(),
+        }
+    }
+
+    /// Volta GV100 (V100-class), parameterized from the predecessor
+    /// literature the paper cites (Jia et al., "Dissecting the NVIDIA
+    /// Volta GPU Architecture via Microbenchmarking") and calibrated
+    /// under the same measurement protocol as the Ampere defaults.
+    pub fn volta() -> ArchSpec {
+        let mut c = AmpereConfig::a100();
+        c.arch_name = "volta".to_string();
+        c.sm_count = 80;
+        c.tensor.cores_per_sm = 8;
+        c.tensor.clock_hz = 1.530e9;
+        // First-generation tensor cores: fp16 inputs only.
+        c.wmma_dtypes = vec![WmmaDtype::F16F16, WmmaDtype::F16F32];
+        // Memory hierarchy (V100: 128 KiB unified L1, 6 MiB L2).
+        c.memory.l1_bytes = 128 * 1024;
+        c.memory.l2_bytes = 6 * 1024 * 1024;
+        c.memory.shared_bytes = 96 * 1024;
+        c.memory.l1_hit_latency = 28;
+        c.memory.l2_hit_latency = 193;
+        c.memory.dram_latency = 400;
+        c.memory.shared_load_latency = 19;
+        c.memory.shared_store_latency = 15;
+        // Packed-half path is a cycle slower than Ampere's.
+        c.half_pipe = PipeTiming::new(2, 4);
+        // §V-A's dependent-add pipe borrow and Insight 3's mov-folding
+        // are Ampere-toolchain observations.
+        c.quirks.dep_add_fma_alternation = false;
+        c.quirks.neg_abs_mov_folding = false;
+        ArchSpec { display: "Volta GV100 (Tesla V100-SXM2)".to_string(), config: c }
+    }
+
+    /// Turing TU104 (Tesla T4-class), parameterized from Jia et al.,
+    /// "Dissecting the NVIDIA Turing T4 GPU via Microbenchmarking",
+    /// calibrated like the other presets.
+    pub fn turing() -> ArchSpec {
+        let mut c = AmpereConfig::a100();
+        c.arch_name = "turing".to_string();
+        c.sm_count = 40;
+        c.tensor.cores_per_sm = 8;
+        c.tensor.clock_hz = 1.590e9;
+        // Second generation adds the integer configs; bf16/tf32/fp64
+        // arrive with Ampere.
+        c.wmma_dtypes = vec![
+            WmmaDtype::F16F16,
+            WmmaDtype::F16F32,
+            WmmaDtype::U8S32,
+            WmmaDtype::U4S32,
+        ];
+        c.memory.l1_bytes = 64 * 1024;
+        c.memory.l2_bytes = 4 * 1024 * 1024;
+        c.memory.shared_bytes = 64 * 1024;
+        c.memory.l1_hit_latency = 32;
+        c.memory.l2_hit_latency = 188;
+        c.memory.dram_latency = 350;
+        c.memory.shared_load_latency = 19;
+        c.memory.shared_store_latency = 15;
+        // TU104 keeps only 2 FP64 units per SM (1/32 rate): the fp64
+        // issue port is occupied far longer per warp instruction.
+        c.fp64_pipe = PipeTiming::new(16, 6);
+        c.quirks.dep_add_fma_alternation = false;
+        ArchSpec { display: "Turing TU104 (Tesla T4)".to_string(), config: c }
+    }
+
+    // ---- serialization (the custom-spec JSON schema) -----------------
+
+    pub fn to_json(&self) -> Value {
+        let c = &self.config;
+        let mut pipes = Value::obj();
+        for p in ALL_PIPES {
+            let t = c.pipe(p);
+            pipes = pipes.set(
+                pipe_key(p),
+                Value::obj().set("occupancy", t.occupancy).set("latency", t.latency),
+            );
+        }
+        let m = &c.memory;
+        Value::obj()
+            .set("name", c.arch_name.as_str())
+            .set("display", self.display.as_str())
+            .set("sm_count", c.sm_count as u64)
+            .set("clock_read_occupancy", c.clock_read_occupancy)
+            .set("cold_start_extra", c.cold_start_extra)
+            .set("depbar_stall", c.depbar_stall)
+            .set("pipes", pipes)
+            .set(
+                "memory",
+                Value::obj()
+                    .set("l1_bytes", m.l1_bytes)
+                    .set("l1_line", m.l1_line)
+                    .set("l1_assoc", m.l1_assoc)
+                    .set("l2_bytes", m.l2_bytes)
+                    .set("l2_line", m.l2_line)
+                    .set("l2_assoc", m.l2_assoc)
+                    .set("l1_hit_latency", m.l1_hit_latency)
+                    .set("l2_hit_latency", m.l2_hit_latency)
+                    .set("dram_latency", m.dram_latency)
+                    .set("shared_load_latency", m.shared_load_latency)
+                    .set("shared_store_latency", m.shared_store_latency)
+                    .set("shared_bytes", m.shared_bytes),
+            )
+            .set(
+                "tensor",
+                Value::obj()
+                    .set("cores_per_sm", c.tensor.cores_per_sm as u64)
+                    .set("clock_hz", c.tensor.clock_hz)
+                    .set("startup_cycles", c.tensor.startup_cycles),
+            )
+            .set(
+                "wmma",
+                Value::Arr(c.wmma_dtypes.iter().map(|d| Value::from(d.key())).collect()),
+            )
+            .set(
+                "quirks",
+                Value::obj()
+                    .set("dep_add_fma_alternation", c.quirks.dep_add_fma_alternation)
+                    .set("neg_abs_mov_folding", c.quirks.neg_abs_mov_folding)
+                    .set("clock32_depbar", c.quirks.clock32_depbar),
+            )
+    }
+
+    pub fn to_json_string(&self) -> String {
+        to_string_pretty(&self.to_json())
+    }
+
+    pub fn from_json(v: &Value) -> Result<ArchSpec, String> {
+        let need_u64 = |v: &Value, key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| format!("arch json: missing numeric field {key:?}"))
+        };
+        let need_bool = |v: &Value, key: &str| -> Result<bool, String> {
+            v.get(key)
+                .and_then(Value::as_bool)
+                .ok_or_else(|| format!("arch json: missing boolean field {key:?}"))
+        };
+        let name = v
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or("arch json: missing string field \"name\"")?
+            .to_string();
+        let display = v
+            .get("display")
+            .and_then(Value::as_str)
+            .unwrap_or(name.as_str())
+            .to_string();
+
+        // Every section below is required: a partial spec silently
+        // inheriting Ampere values would be a calibration foot-gun.
+        let mut c = AmpereConfig::a100();
+        c.arch_name = name;
+        c.sm_count = need_u64(v, "sm_count")? as u32;
+        c.clock_read_occupancy = need_u64(v, "clock_read_occupancy")?;
+        c.cold_start_extra = need_u64(v, "cold_start_extra")?;
+        c.depbar_stall = need_u64(v, "depbar_stall")?;
+
+        let pipes = v.get("pipes").ok_or("arch json: missing \"pipes\" object")?;
+        for p in ALL_PIPES {
+            let key = pipe_key(p);
+            let t = pipes
+                .get(key)
+                .ok_or_else(|| format!("arch json: pipes missing {key:?}"))?;
+            *pipe_mut(&mut c, p) =
+                PipeTiming::new(need_u64(t, "occupancy")?, need_u64(t, "latency")?);
+        }
+
+        let m = v.get("memory").ok_or("arch json: missing \"memory\" object")?;
+        c.memory.l1_bytes = need_u64(m, "l1_bytes")? as usize;
+        c.memory.l1_line = need_u64(m, "l1_line")? as usize;
+        c.memory.l1_assoc = need_u64(m, "l1_assoc")? as usize;
+        c.memory.l2_bytes = need_u64(m, "l2_bytes")? as usize;
+        c.memory.l2_line = need_u64(m, "l2_line")? as usize;
+        c.memory.l2_assoc = need_u64(m, "l2_assoc")? as usize;
+        c.memory.l1_hit_latency = need_u64(m, "l1_hit_latency")?;
+        c.memory.l2_hit_latency = need_u64(m, "l2_hit_latency")?;
+        c.memory.dram_latency = need_u64(m, "dram_latency")?;
+        c.memory.shared_load_latency = need_u64(m, "shared_load_latency")?;
+        c.memory.shared_store_latency = need_u64(m, "shared_store_latency")?;
+        c.memory.shared_bytes = need_u64(m, "shared_bytes")? as usize;
+
+        let t = v.get("tensor").ok_or("arch json: missing \"tensor\" object")?;
+        c.tensor.cores_per_sm = need_u64(t, "cores_per_sm")? as u32;
+        c.tensor.clock_hz = t
+            .get("clock_hz")
+            .and_then(Value::as_f64)
+            .ok_or("arch json: missing numeric field \"clock_hz\"")?;
+        c.tensor.startup_cycles = need_u64(t, "startup_cycles")?;
+
+        let wmma = v
+            .get("wmma")
+            .and_then(Value::as_arr)
+            .ok_or("arch json: missing \"wmma\" array")?;
+        c.wmma_dtypes = wmma
+            .iter()
+            .map(|d| {
+                d.as_str()
+                    .and_then(dtype_from_key)
+                    .ok_or_else(|| {
+                        format!(
+                            "arch json: unknown wmma dtype {d:?} (valid: {})",
+                            ALL_DTYPES.map(|x| x.key()).join(", ")
+                        )
+                    })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+
+        let q = v.get("quirks").ok_or("arch json: missing \"quirks\" object")?;
+        c.quirks = TranslationQuirks {
+            dep_add_fma_alternation: need_bool(q, "dep_add_fma_alternation")?,
+            neg_abs_mov_folding: need_bool(q, "neg_abs_mov_folding")?,
+            clock32_depbar: need_bool(q, "clock32_depbar")?,
+        };
+
+        Ok(ArchSpec { display, config: c })
+    }
+
+    pub fn from_json_str(s: &str) -> Result<ArchSpec, String> {
+        Self::from_json(&parse(s).map_err(|e| format!("arch json: {e}"))?)
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_json_string()).map_err(|e| format!("write {path}: {e}"))
+    }
+
+    pub fn load(path: &str) -> Result<ArchSpec, String> {
+        let s = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_json_str(&s).map_err(|e| format!("{path}: {e}"))
+    }
+
+    // ---- flattening (the `arch show` / `arch diff` surface) ----------
+
+    /// Flatten the spec into a deterministic `(field, value)` listing —
+    /// the same fixed schema for every spec, so [`diff`] can align
+    /// specs field by field.
+    pub fn flatten(&self) -> Vec<(String, String)> {
+        let c = &self.config;
+        let mut out: Vec<(String, String)> = vec![
+            ("name".into(), c.arch_name.clone()),
+            ("display".into(), self.display.clone()),
+            ("sm_count".into(), c.sm_count.to_string()),
+            ("clock_read_occupancy".into(), c.clock_read_occupancy.to_string()),
+            ("cold_start_extra".into(), c.cold_start_extra.to_string()),
+            ("depbar_stall".into(), c.depbar_stall.to_string()),
+        ];
+        for p in ALL_PIPES {
+            let t = c.pipe(p);
+            out.push((format!("pipe.{}.occupancy", pipe_key(p)), t.occupancy.to_string()));
+            out.push((format!("pipe.{}.latency", pipe_key(p)), t.latency.to_string()));
+        }
+        let m = &c.memory;
+        for (k, v) in [
+            ("memory.l1_bytes", m.l1_bytes as u64),
+            ("memory.l1_line", m.l1_line as u64),
+            ("memory.l1_assoc", m.l1_assoc as u64),
+            ("memory.l2_bytes", m.l2_bytes as u64),
+            ("memory.l2_line", m.l2_line as u64),
+            ("memory.l2_assoc", m.l2_assoc as u64),
+            ("memory.l1_hit_latency", m.l1_hit_latency),
+            ("memory.l2_hit_latency", m.l2_hit_latency),
+            ("memory.dram_latency", m.dram_latency),
+            ("memory.shared_load_latency", m.shared_load_latency),
+            ("memory.shared_store_latency", m.shared_store_latency),
+            ("memory.shared_bytes", m.shared_bytes as u64),
+        ] {
+            out.push((k.into(), v.to_string()));
+        }
+        out.push(("tensor.cores_per_sm".into(), c.tensor.cores_per_sm.to_string()));
+        out.push(("tensor.clock_hz".into(), format!("{:.0}", c.tensor.clock_hz)));
+        out.push(("tensor.startup_cycles".into(), c.tensor.startup_cycles.to_string()));
+        for d in ALL_DTYPES {
+            out.push((
+                format!("wmma.{}", d.key()),
+                if c.supports_wmma(d) { "yes" } else { "no" }.to_string(),
+            ));
+        }
+        out.push((
+            "quirks.dep_add_fma_alternation".into(),
+            c.quirks.dep_add_fma_alternation.to_string(),
+        ));
+        out.push((
+            "quirks.neg_abs_mov_folding".into(),
+            c.quirks.neg_abs_mov_folding.to_string(),
+        ));
+        out.push(("quirks.clock32_depbar".into(), c.quirks.clock32_depbar.to_string()));
+        out
+    }
+
+    /// `arch show`: the flattened spec as a printed table.
+    pub fn show_table(&self) -> String {
+        crate::report::render_table(
+            &format!("arch {} — {}", self.name(), self.display),
+            &["field", "value"],
+            &self
+                .flatten()
+                .into_iter()
+                .map(|(k, v)| vec![k, v])
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// All built-in presets, in [`BUILTIN`] order.
+pub fn list() -> Vec<ArchSpec> {
+    vec![ArchSpec::volta(), ArchSpec::turing(), ArchSpec::ampere()]
+}
+
+/// Canonical preset name for any accepted alias: product and chip
+/// names (`a100`/`v100`/`t4`/…) and the pre-registry `a100-sim` model
+/// tag all fold to their generation.  Unknown names pass through
+/// unchanged.  The single alias table — [`get`], the serving router's
+/// per-request `"arch"` field and the model's arch check all resolve
+/// through it.
+pub fn normalize(name: &str) -> &str {
+    match name {
+        "a100" | "a100-sim" | "ga100" => "ampere",
+        "v100" | "gv100" => "volta",
+        "t4" | "tu104" => "turing",
+        other => other,
+    }
+}
+
+/// Resolve a `--arch` value: a built-in preset name (with the product
+/// aliases the literature uses, via [`normalize`]), or a path to a
+/// custom-spec JSON file.
+pub fn get(name: &str) -> Result<ArchSpec, String> {
+    match normalize(name) {
+        "ampere" => Ok(ArchSpec::ampere()),
+        "volta" => Ok(ArchSpec::volta()),
+        "turing" => Ok(ArchSpec::turing()),
+        other => {
+            if other.ends_with(".json") || std::path::Path::new(other).is_file() {
+                ArchSpec::load(other)
+            } else {
+                Err(format!(
+                    "unknown architecture {other:?}; built-ins: {} (or pass a \
+                     custom-spec JSON path — `repro arch show ampere --json` \
+                     prints the schema)",
+                    BUILTIN.join(", ")
+                ))
+            }
+        }
+    }
+}
+
+/// One differing field between two specs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffRow {
+    pub field: String,
+    pub a: String,
+    pub b: String,
+}
+
+/// Field-level delta between two specs (fields equal in both are
+/// omitted).  Both flatten to the same fixed schema, so rows align by
+/// construction.
+pub fn diff(a: &ArchSpec, b: &ArchSpec) -> Vec<DiffRow> {
+    a.flatten()
+        .into_iter()
+        .zip(b.flatten())
+        .filter(|((_, va), (_, vb))| va != vb)
+        .map(|((field, va), (_, vb))| DiffRow { field, a: va, b: vb })
+        .collect()
+}
+
+/// `arch diff`: the delta as a printed table.
+pub fn diff_table(a: &ArchSpec, b: &ArchSpec) -> String {
+    let rows = diff(a, b);
+    if rows.is_empty() {
+        return format!("\narch {} and {} are identical\n", a.name(), b.name());
+    }
+    crate::report::render_table(
+        &format!("arch diff — {} vs {}", a.name(), b.name()),
+        &["field", a.name(), b.name()],
+        &rows
+            .into_iter()
+            .map(|r| vec![r.field, r.a, r.b])
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// `arch diff --json`.
+pub fn diff_json(a: &ArchSpec, b: &ArchSpec) -> Value {
+    Value::obj()
+        .set("a", a.name())
+        .set("b", b.name())
+        .set(
+            "differences",
+            Value::Arr(
+                diff(a, b)
+                    .into_iter()
+                    .map(|r| {
+                        Value::obj()
+                            .set("field", r.field)
+                            .set("a", r.a)
+                            .set("b", r.b)
+                    })
+                    .collect(),
+            ),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ampere_preset_is_the_legacy_default_config() {
+        // The byte-identity anchor: `--arch ampere` must change nothing.
+        assert_eq!(ArchSpec::ampere().config, AmpereConfig::a100());
+        assert_eq!(
+            ArchSpec::ampere().config.clone().into_small(),
+            AmpereConfig::small()
+        );
+    }
+
+    #[test]
+    fn presets_resolve_by_name_and_alias() {
+        for (alias, want) in [
+            ("ampere", "ampere"),
+            ("a100", "ampere"),
+            ("a100-sim", "ampere"),
+            ("volta", "volta"),
+            ("v100", "volta"),
+            ("turing", "turing"),
+            ("t4", "turing"),
+        ] {
+            assert_eq!(get(alias).unwrap().name(), want, "{alias}");
+        }
+        let err = get("hopper").unwrap_err();
+        assert!(err.contains("volta, turing, ampere"), "{err}");
+        assert_eq!(list().len(), BUILTIN.len());
+    }
+
+    #[test]
+    fn json_round_trip_is_identity_for_every_preset() {
+        for spec in list() {
+            let s = spec.to_json_string();
+            let back = ArchSpec::from_json_str(&s)
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name()));
+            assert_eq!(back, spec, "{}", spec.name());
+        }
+    }
+
+    #[test]
+    fn json_rejects_partial_specs() {
+        assert!(ArchSpec::from_json_str("{}").is_err());
+        assert!(ArchSpec::from_json_str("not json").is_err());
+        // Dropping a required section is an error, not silent Ampere
+        // inheritance.
+        let mut v = ArchSpec::turing().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.remove("memory");
+        }
+        let err = ArchSpec::from_json_str(&to_string_pretty(&v)).unwrap_err();
+        assert!(err.contains("memory"), "{err}");
+        // And an unknown wmma dtype names the valid keys.
+        let mut v = ArchSpec::turing().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.insert("wmma".into(), Value::Arr(vec![Value::from("f8_f8")]));
+        }
+        let err = ArchSpec::from_json_str(&to_string_pretty(&v)).unwrap_err();
+        assert!(err.contains("f16_f16"), "{err}");
+    }
+
+    #[test]
+    fn diff_shows_the_wmma_dtype_gap() {
+        let rows = diff(&ArchSpec::volta(), &ArchSpec::ampere());
+        let find = |field: &str| {
+            rows.iter()
+                .find(|r| r.field == field)
+                .unwrap_or_else(|| panic!("missing {field}: {rows:?}"))
+        };
+        // The generation gap: bf16/tf32/fp64/int WMMA are Ampere-only
+        // relative to Volta.
+        for d in ["bf16_f32", "tf32_f32", "f64_f64", "u8_s32", "u4_s32"] {
+            let r = find(&format!("wmma.{d}"));
+            assert_eq!((r.a.as_str(), r.b.as_str()), ("no", "yes"), "{d}");
+        }
+        // Both support fp16, so it is not a difference.
+        assert!(rows.iter().all(|r| r.field != "wmma.f16_f16"));
+        // Geometry differences surface too.
+        assert_eq!(find("sm_count").b, "108");
+        assert_eq!(find("memory.dram_latency").a, "400");
+        let rendered = diff_table(&ArchSpec::volta(), &ArchSpec::ampere());
+        assert!(rendered.contains("wmma.bf16_f32"), "{rendered}");
+
+        // Self-diff is empty.
+        assert!(diff(&ArchSpec::ampere(), &ArchSpec::ampere()).is_empty());
+        assert!(diff_table(&ArchSpec::ampere(), &ArchSpec::ampere()).contains("identical"));
+    }
+
+    #[test]
+    fn custom_spec_loads_from_a_file() {
+        let mut spec = ArchSpec::turing();
+        spec.config.arch_name = "my-turing".into();
+        spec.config.sm_count = 46;
+        let path = std::env::temp_dir().join("arch_custom_spec.json");
+        let path = path.to_str().unwrap();
+        spec.save(path).unwrap();
+        let loaded = get(path).unwrap();
+        assert_eq!(loaded, spec);
+        assert_eq!(loaded.name(), "my-turing");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn show_table_lists_every_field() {
+        let s = ArchSpec::turing().show_table();
+        for needle in ["sm_count", "pipe.fp64.occupancy", "memory.l2_bytes", "wmma.u4_s32"] {
+            assert!(s.contains(needle), "{needle} missing from:\n{s}");
+        }
+    }
+}

@@ -1,8 +1,13 @@
-//! Ampere (GA100 / A100) machine description.
+//! Machine description of the simulated SM.
 //!
-//! All architectural parameters of the simulated SM in one place, so the
-//! ablation benches can vary them.  Defaults are A100-class (whitepaper
-//! values where public, calibrated to the paper's measurements otherwise).
+//! All architectural parameters in one place, so the ablation benches can
+//! vary them and the [`crate::arch`] registry can instantiate whole
+//! presets (Volta / Turing / Ampere, or a custom JSON spec).  Defaults
+//! are A100-class (whitepaper values where public, calibrated to the
+//! paper's measurements otherwise); the struct keeps its historical
+//! `AmpereConfig` name — it is the machine-config type every layer
+//! already threads — but since the arch registry landed it describes
+//! *whichever* architecture it was built for (`arch_name`).
 
 
 /// Execution-pipe timing: `occupancy` is the issue-port reservation in
@@ -73,12 +78,44 @@ pub const ALL_PIPES: [Pipe; 10] = [
     Pipe::Special,
 ];
 
+/// Architecture-specific `ptxas` translation behaviours the paper pins
+/// through dynamic traces.  The Ampere defaults are the observations of
+/// §V-A / Insight 3 / Fig. 4; predecessor presets switch off what the
+/// literature only reports for Ampere.  Threaded from the machine config
+/// into [`crate::translate::Translator`] by the engine's kernel cache,
+/// so two engines over different architectures can never share (or
+/// cross-contaminate) translations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TranslationQuirks {
+    /// §V-A: a dependent `add.u32` chain alternates `IADD3` /
+    /// `IMAD.IADD` (the compiler borrows the FP pipe while the INT pipe
+    /// is busy).  Off: the chain stays `IADD3` on the INT pipe.
+    pub dep_add_fma_alternation: bool,
+    /// Insight 3: `neg.f32`/`abs.f32` fold into `IMAD.MOV.U32` when
+    /// their input was initialised by `mov`.  Off: always `FADD`.
+    pub neg_abs_mov_folding: bool,
+    /// Fig. 4a: the second 32-bit clock read of a measured pair is
+    /// guarded by a scheduling barrier (`DEPBAR` + `S2R`).  Off: 32-bit
+    /// clock reads stay barrier-free `CS2R.32`.
+    pub clock32_depbar: bool,
+}
+
+impl Default for TranslationQuirks {
+    fn default() -> Self {
+        Self {
+            dep_add_fma_alternation: true,
+            neg_abs_mov_folding: true,
+            clock32_depbar: true,
+        }
+    }
+}
+
 /// Memory-hierarchy geometry and service latencies.
 ///
 /// Latencies are *service* times at each level; the measured Table IV
 /// numbers emerge from the pointer-chase microbenchmark traversing the
 /// cache model (hit/miss decided by the actual cache state, not scripted).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MemoryConfig {
     /// L1 data cache per SM (A100: 192 KiB unified; data partition modeled).
     pub l1_bytes: usize,
@@ -122,7 +159,7 @@ impl Default for MemoryConfig {
 }
 
 /// Tensor-core unit parameters (Table III).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TensorConfig {
     /// TCs per SM (Ampere: 4).
     pub cores_per_sm: u32,
@@ -139,8 +176,12 @@ impl Default for TensorConfig {
 }
 
 /// Full machine description.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AmpereConfig {
+    /// Architecture identity (`ampere` / `volta` / `turing` / a custom
+    /// spec's name).  Campaigns, extracted models and the serving layer
+    /// key on it so cross-architecture numbers never silently mix.
+    pub arch_name: String,
     /// SM count (A100: 108 enabled of 128; paper's intro says "124" for
     /// the full GA100 die — we default to the A100 product's 108).
     pub sm_count: u32,
@@ -168,11 +209,19 @@ pub struct AmpereConfig {
     pub special_pipe: PipeTiming,
     pub memory: MemoryConfig,
     pub tensor: TensorConfig,
+    /// Architecture-specific translation behaviours (see
+    /// [`TranslationQuirks`]).
+    pub quirks: TranslationQuirks,
+    /// WMMA capability table: which Table III dtypes this generation's
+    /// tensor cores support, in `ALL_DTYPES` order (Volta: fp16 only;
+    /// Turing adds the integer configs; Ampere adds bf16/tf32/fp64).
+    pub wmma_dtypes: Vec<crate::tensor::WmmaDtype>,
 }
 
 impl Default for AmpereConfig {
     fn default() -> Self {
         Self {
+            arch_name: "ampere".to_string(),
             sm_count: 108,
             clock_read_occupancy: 2,
             cold_start_extra: 1,
@@ -190,6 +239,8 @@ impl Default for AmpereConfig {
             special_pipe: PipeTiming::new(2, 0),
             memory: MemoryConfig::default(),
             tensor: TensorConfig::default(),
+            quirks: TranslationQuirks::default(),
+            wmma_dtypes: crate::tensor::ALL_DTYPES.to_vec(),
         }
     }
 }
@@ -205,10 +256,22 @@ impl AmpereConfig {
     /// finish quickly.  The shared definition behind the CLI flag, CI,
     /// tests and benches.
     pub fn small() -> Self {
-        let mut c = Self::a100();
-        c.memory.l2_bytes = 512 * 1024;
-        c.memory.l1_bytes = 32 * 1024;
-        c
+        Self::a100().into_small()
+    }
+
+    /// Apply the `--small` cache scaling to any architecture's config
+    /// (the same knobs [`Self::small`] has always changed): identical
+    /// latencies and semantics, smaller L1/L2 arrays so warm
+    /// pointer-chase loops finish quickly.
+    pub fn into_small(mut self) -> Self {
+        self.memory.l2_bytes = 512 * 1024;
+        self.memory.l1_bytes = 32 * 1024;
+        self
+    }
+
+    /// Does this architecture's tensor core support the dtype?
+    pub fn supports_wmma(&self, d: crate::tensor::WmmaDtype) -> bool {
+        self.wmma_dtypes.contains(&d)
     }
 
     pub fn pipe(&self, pipe: Pipe) -> PipeTiming {
@@ -261,6 +324,29 @@ mod tests {
             let t = c.pipe(p);
             assert!(t.occupancy >= 1, "{p:?}");
         }
+    }
+
+    #[test]
+    fn ampere_defaults_carry_full_quirks_and_wmma_caps() {
+        let c = AmpereConfig::a100();
+        assert_eq!(c.arch_name, "ampere");
+        assert_eq!(c.quirks, TranslationQuirks::default());
+        assert!(c.quirks.dep_add_fma_alternation);
+        assert!(c.quirks.neg_abs_mov_folding);
+        assert!(c.quirks.clock32_depbar);
+        assert_eq!(c.wmma_dtypes, crate::tensor::ALL_DTYPES.to_vec());
+        assert!(c.supports_wmma(crate::tensor::WmmaDtype::Tf32F32));
+    }
+
+    #[test]
+    fn into_small_scales_any_config() {
+        let mut c = AmpereConfig::a100();
+        c.arch_name = "custom".into();
+        let s = c.clone().into_small();
+        assert_eq!(s.memory.l2_bytes, 512 * 1024);
+        assert_eq!(s.memory.l1_bytes, 32 * 1024);
+        assert_eq!(s.arch_name, "custom");
+        assert_eq!(s.quirks, c.quirks);
     }
 
     #[test]

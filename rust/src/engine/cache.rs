@@ -7,8 +7,9 @@
 //! pure — same source, same program — so each distinct kernel is
 //! compiled exactly once per engine and shared by `Arc` thereafter.
 
+use crate::config::TranslationQuirks;
 use crate::ptx::{parse_program, PtxProgram};
-use crate::translate::{translate_program, TranslatedProgram};
+use crate::translate::{translate_program_with, TranslatedProgram};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -33,16 +34,26 @@ pub struct CacheStats {
 /// The cache itself.  Keys are the full PTX source (content-addressed:
 /// the map hashes the text and equality-checks on collision, so two
 /// kernels share an entry iff their sources are byte-identical).
+/// Translation runs under one architecture's quirks per cache — the
+/// cache lives inside an [`Engine`](super::Engine) and the engine has
+/// exactly one machine config, so entries can never mix architectures.
 #[derive(Default)]
 pub struct KernelCache {
     map: Mutex<HashMap<String, Arc<CompiledKernel>>>,
+    quirks: TranslationQuirks,
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
 impl KernelCache {
+    /// Cache translating under the default (Ampere) quirks.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Cache translating under an explicit architecture's quirks.
+    pub fn with_quirks(quirks: TranslationQuirks) -> Self {
+        Self { quirks, ..Self::default() }
     }
 
     /// Fetch the compiled form of `src`, compiling at most once per
@@ -56,7 +67,8 @@ impl KernelCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let prog = parse_program(src).map_err(|e| format!("parse: {e}\n{src}"))?;
-        let tp = translate_program(&prog).map_err(|e| format!("translate: {e}"))?;
+        let tp = translate_program_with(&prog, self.quirks)
+            .map_err(|e| format!("translate: {e}"))?;
         let compiled = Arc::new(CompiledKernel { prog, tp });
         let mut map = self.map.lock().unwrap();
         let entry = map.entry(src.to_string()).or_insert(compiled);

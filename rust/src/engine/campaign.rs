@@ -9,7 +9,6 @@
 use super::Engine;
 use crate::harness::CampaignResult;
 use crate::microbench::{alu, insights, memory, registry, wmma};
-use crate::tensor::ALL_DTYPES;
 
 /// One row-level result, tagged with the experiment it belongs to.
 enum JobOut {
@@ -41,8 +40,9 @@ pub fn run(engine: &Engine) -> Result<CampaignResult, String> {
             alu::table2_row_with(engine, &row, paper_dep, paper_indep).map(JobOut::T2)
         }));
     }
-    // Table III: one job per WMMA dtype.
-    for d in ALL_DTYPES {
+    // Table III: one job per WMMA dtype the engine's architecture
+    // supports (the arch capability table, not the full Ampere list).
+    for d in engine.cfg().wmma_dtypes.clone() {
         jobs.push(Box::new(move || wmma::measure_with(engine, d).map(JobOut::T3)));
     }
     // Table IV: one job per memory level.

@@ -57,7 +57,7 @@ impl Engine {
     /// serial execution).
     pub fn with_workers(cfg: AmpereConfig, workers: usize) -> Self {
         Self {
-            cache: KernelCache::new(),
+            cache: KernelCache::with_quirks(cfg.quirks),
             pool: SimPool::new(cfg.clone()),
             cfg,
             workers: workers.max(1),
@@ -66,6 +66,15 @@ impl Engine {
 
     pub fn cfg(&self) -> &AmpereConfig {
         &self.cfg
+    }
+
+    /// The architecture this engine measures (`ampere` / `volta` / …).
+    /// One engine is always exactly one architecture: its kernel cache
+    /// translates under that architecture's quirks and its simulator
+    /// pool is built from that architecture's machine config, so two
+    /// arch campaigns can never cross-contaminate.
+    pub fn arch(&self) -> &str {
+        &self.cfg.arch_name
     }
 
     pub fn workers(&self) -> usize {

@@ -32,7 +32,7 @@ use crate::engine::Engine;
 use crate::microbench::{CLOCK_OVERHEAD, MEASUREMENT_PARAMS};
 use crate::oracle::{predict, LatencyModel};
 use crate::ptx::parse_program;
-use crate::translate::translate_program;
+use crate::translate::translate_program_with;
 use crate::util::json::{to_string_pretty, Value};
 use std::collections::BTreeMap;
 
@@ -117,6 +117,8 @@ impl Failure {
 /// Outcome of one fuzz run.
 #[derive(Debug)]
 pub struct FuzzOutcome {
+    /// Architecture the differential run executed under.
+    pub arch: String,
     pub base_seed: u64,
     pub cases: u64,
     /// Cases generated per family name.
@@ -136,7 +138,8 @@ impl FuzzOutcome {
             .join(", ");
         let _ = writeln!(
             out,
-            "fuzz: {} cases from seed {} ({families}) — {} divergence(s)",
+            "fuzz[{}]: {} cases from seed {} ({families}) — {} divergence(s)",
+            self.arch,
             self.cases,
             self.base_seed,
             self.failures.len()
@@ -162,6 +165,7 @@ impl FuzzOutcome {
             fams = fams.set(k, *v);
         }
         Value::obj()
+            .set("arch", self.arch.as_str())
             .set("seed", self.base_seed)
             .set("cases", self.cases)
             .set("families", fams)
@@ -191,7 +195,10 @@ pub fn run_case(
             format!("fresh parse failed where the cached compile succeeded: {e}"),
         )
     })?;
-    let tp2 = translate_program(&prog2).map_err(|e| {
+    // Same quirks as the engine's cache: the fresh stack re-translates
+    // under the *engine's architecture*, so a cross-arch run never
+    // masquerades as translator nondeterminism.
+    let tp2 = translate_program_with(&prog2, engine.cfg().quirks).map_err(|e| {
         Divergence::new(
             DivergenceKind::Compile,
             format!("fresh translation failed where the cached compile succeeded: {e}"),
@@ -293,7 +300,7 @@ fn shrink(
     kind: DivergenceKind,
 ) -> FuzzCase {
     for size in 1..gen::DEFAULT_SIZE {
-        let candidate = gen::generate(seed, size);
+        let candidate = gen::generate_for(seed, size, &engine.cfg().wmma_dtypes);
         // Size-insensitive families (alu, alu-dep, wmma) regenerate the
         // same kernel at every budget — don't re-simulate those.
         if candidate.src == original.src {
@@ -314,7 +321,10 @@ pub fn run(engine: &Engine, model: &LatencyModel, base_seed: u64, cases: u64) ->
     let mut failures = Vec::new();
     for index in 0..cases {
         let seed = gen::case_seed(base_seed, index);
-        let case = gen::generate(seed, gen::DEFAULT_SIZE);
+        // Arch-aware generation: the wmma family draws from the engine
+        // architecture's capability table (identical to the historical
+        // stream on Ampere, whose table is the full dtype list).
+        let case = gen::generate_for(seed, gen::DEFAULT_SIZE, &engine.cfg().wmma_dtypes);
         *family_counts.entry(case.family.name().to_string()).or_insert(0) += 1;
         if let Err(divergence) = run_case(engine, model, &case) {
             let minimized = shrink(engine, model, seed, &case, divergence.kind);
@@ -327,7 +337,13 @@ pub fn run(engine: &Engine, model: &LatencyModel, base_seed: u64, cases: u64) ->
             });
         }
     }
-    FuzzOutcome { base_seed, cases, family_counts, failures }
+    FuzzOutcome {
+        arch: engine.arch().to_string(),
+        base_seed,
+        cases,
+        family_counts,
+        failures,
+    }
 }
 
 /// Dump a failure's reproducer kernel + JSON report into `dir`.

@@ -36,7 +36,7 @@
 use crate::microbench::registry::{self, RegClass, Row};
 use crate::microbench::{alu, measurement_kernel, wmma, REG_DECLS};
 use crate::ptx::KernelSource;
-use crate::tensor::ALL_DTYPES;
+use crate::tensor::{WmmaDtype, ALL_DTYPES};
 use crate::util::prng::Rng;
 
 /// Kernel family a case belongs to (drives what the differential
@@ -101,18 +101,34 @@ pub fn case_seed(base: u64, index: u64) -> u64 {
     base.wrapping_add(index)
 }
 
-/// Generate the case for `seed` at the given size budget.
+/// Generate the case for `seed` at the given size budget, drawing WMMA
+/// dtypes from the full Ampere capability table (the historical
+/// behaviour; [`generate_for`] is the arch-aware form).
 pub fn generate(seed: u64, size: u32) -> FuzzCase {
+    generate_for(seed, size, &ALL_DTYPES)
+}
+
+/// Generate the case for `seed` at the given size budget, restricting
+/// the wmma family to `wmma_dtypes` (the target architecture's
+/// capability table, `cfg.wmma_dtypes`).  On Ampere the table is the
+/// full `ALL_DTYPES` list, so every seed regenerates byte-identically
+/// to [`generate`]; on Volta/Turing the wmma family only draws dtypes
+/// that generation's tensor core supports.  An empty table (a custom
+/// spec without tensor cores) degrades the wmma family to `mixed`.
+pub fn generate_for(seed: u64, size: u32, wmma_dtypes: &[WmmaDtype]) -> FuzzCase {
     let mut rng = Rng::new(seed);
     let size = size.max(1);
-    let family = *rng.pick(&ALL_FAMILIES);
+    let mut family = *rng.pick(&ALL_FAMILIES);
+    if family == Family::Wmma && wmma_dtypes.is_empty() {
+        family = Family::Mixed;
+    }
     let (label, src, predict_exact) = match family {
         Family::Alu => gen_alu(&mut rng, false),
         Family::AluDep => gen_alu(&mut rng, true),
         Family::Mixed => gen_mixed(&mut rng, size),
         Family::Memory => gen_memory(&mut rng, size),
         Family::MultiWindow => gen_multi_window(&mut rng, size),
-        Family::Wmma => gen_wmma(&mut rng),
+        Family::Wmma => gen_wmma(&mut rng, wmma_dtypes),
     };
     FuzzCase { seed, family, label, src, predict_exact }
 }
@@ -308,8 +324,8 @@ fn gen_multi_window(rng: &mut Rng, size: u32) -> (String, String, bool) {
 
 // ---- wmma ------------------------------------------------------------
 
-fn gen_wmma(rng: &mut Rng) -> (String, String, bool) {
-    let d = *rng.pick(&ALL_DTYPES);
+fn gen_wmma(rng: &mut Rng, dtypes: &[WmmaDtype]) -> (String, String, bool) {
+    let d = *rng.pick(dtypes);
     let iters = 1 + rng.below(3) as u32;
     let src = wmma::fig5_kernel(d, iters);
     (format!("wmma[{} x{iters}]", d.key()), src, false)
@@ -331,6 +347,36 @@ mod tests {
             assert_eq!(a.src, b.src, "seed {seed}");
             assert_eq!(a.family, b.family);
             assert_eq!(a.predict_exact, b.predict_exact);
+        }
+    }
+
+    #[test]
+    fn arch_capability_gates_the_wmma_family() {
+        // Full Ampere table: generate_for is byte-identical to generate.
+        for seed in 0..64u64 {
+            let a = generate(seed, DEFAULT_SIZE);
+            let b = generate_for(seed, DEFAULT_SIZE, &ALL_DTYPES);
+            assert_eq!(a.src, b.src, "seed {seed}");
+        }
+        // Restricted table: wmma cases only draw supported dtypes.
+        let volta = [WmmaDtype::F16F16, WmmaDtype::F16F32];
+        let mut saw_wmma = false;
+        for seed in 0..256u64 {
+            let c = generate_for(seed, DEFAULT_SIZE, &volta);
+            if c.family == Family::Wmma {
+                saw_wmma = true;
+                assert!(
+                    c.label.contains("f16_f16") || c.label.contains("f16_f32"),
+                    "{}",
+                    c.label
+                );
+            }
+        }
+        assert!(saw_wmma);
+        // Empty table: the wmma family degrades to mixed, never panics.
+        for seed in 0..64u64 {
+            let c = generate_for(seed, DEFAULT_SIZE, &[]);
+            assert_ne!(c.family, Family::Wmma);
         }
     }
 

@@ -13,8 +13,10 @@
 //!   harness running every generated kernel through all three paths,
 //!   classifying divergences (pool-reset contamination, translator
 //!   nondeterminism, predictor mismatch) and dumping a seed-minimized
-//!   reproducer `.ptx` + JSON report on failure.  CLI: `repro fuzz
-//!   --seed <s> --cases <n>`.
+//!   reproducer `.ptx` + JSON report on failure.  Differential runs are
+//!   arch-aware: `repro fuzz --arch <name>` fuzzes that architecture's
+//!   engine, and the wmma family only draws dtypes from its capability
+//!   table.  CLI: `repro fuzz --seed <s> --cases <n> [--arch <name>]`.
 //! * [`golden`] — the conformance suite: Tables I–V and Fig. 4 rendered
 //!   through the `report::*_json` builders and diffed against the
 //!   checked-in snapshots under `tests/golden/` with per-cell tolerance
@@ -30,5 +32,5 @@ pub mod gen;
 pub mod golden;
 
 pub use diff::{run as run_fuzz, Divergence, DivergenceKind, Failure, FuzzOutcome};
-pub use gen::{case_seed, generate, Family, FuzzCase, ALL_FAMILIES, DEFAULT_SIZE};
+pub use gen::{case_seed, generate, generate_for, Family, FuzzCase, ALL_FAMILIES, DEFAULT_SIZE};
 pub use golden::{check as check_conformance, ConformanceReport};

@@ -11,6 +11,11 @@
 //! per the substitution rule every hardware dependence is replaced by a
 //! from-scratch software substrate (see `DESIGN.md` §Substitutions):
 //!
+//! * [`arch`] — the architecture registry: named, serializable machine
+//!   descriptions ([`ArchSpec`]) with built-in Volta/Turing/Ampere
+//!   presets and custom-spec JSON loading; every layer below is
+//!   parameterized by the spec's machine config (`repro --arch …`,
+//!   `repro arch list/show/diff`, `repro compare --arch a,b`).
 //! * [`ptx`] — PTX ISA front-end: lexer, parser, AST, kernel builder.
 //! * [`sass`] — SASS ISA: opcodes, pipes, the per-opcode timing table.
 //! * [`translate`] — the context-sensitive PTX→SASS translating assembler
@@ -47,6 +52,7 @@
 //! * [`runtime`] — PJRT client loading the AOT JAX/Pallas artifacts; the
 //!   WMMA numerics oracle on the request path (python is build-time only).
 
+pub mod arch;
 pub mod config;
 pub mod engine;
 pub mod fuzz;
@@ -64,6 +70,7 @@ pub mod trace;
 pub mod translate;
 pub mod util;
 
+pub use arch::ArchSpec;
 pub use config::AmpereConfig;
 pub use engine::Engine;
 pub use oracle::{LatencyModel, LatencyOracle};

@@ -16,25 +16,35 @@
 //! repro serve               # JSON-line TCP prediction service
 //! repro fuzz                # three-path differential fuzzing
 //! repro conformance         # golden-snapshot diff (tests/golden/)
+//! repro arch list|show|diff # the architecture registry
+//! repro compare --arch a,b  # cross-architecture delta tables
 //!
 //! flags: --small (scaled caches), --json, --dependent, --faithful,
-//!        --model <path>, --out <path>, --port <n>, --seed <s>,
+//!        --arch <name|spec.json>, --model <path> (repeatable for
+//!        serve), --out <path>, --port <n>, --seed <s>,
 //!        --cases <n>, --update
 //! ```
 
+use ampere_ubench::arch::{self, ArchSpec};
 use ampere_ubench::config::AmpereConfig;
 use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::{alu, insights, memory, registry, wmma};
-use ampere_ubench::oracle::{serve, LatencyModel, LatencyOracle, Server};
+use ampere_ubench::oracle::{serve, LatencyModel, LatencyOracle, OracleSet, Server};
 use ampere_ubench::tensor::{movm_plan, ALL_DTYPES};
 use ampere_ubench::util::json::{to_string_pretty, Value};
 use ampere_ubench::{fuzz, harness, report, runtime};
 use std::sync::Arc;
 
 const USAGE: &str = "\
-repro — 'Demystifying the Nvidia Ampere Architecture' on a simulated A100
+repro — 'Demystifying the Nvidia Ampere Architecture' on a simulated GPU
 
-USAGE: repro [--small] [--json] <command> [args]
+USAGE: repro [--small] [--json] [--arch <name|spec.json>] <command> [args]
+
+--arch selects the machine every command measures: a built-in preset
+(ampere — the default, byte-identical to the paper's A100 runs; volta;
+turing — parameterized from the paper's cited predecessor studies), a
+product alias (a100/v100/t4), or a path to a custom-spec JSON file
+(`repro arch show ampere --json` prints the schema).
 
 COMMANDS:
   campaign              run the complete evaluation (all tables + figures)
@@ -47,6 +57,18 @@ COMMANDS:
   fig6-trace            Fig. 6: dynamic SASS of one TC instruction
   insights              Insights 1–3 (pipes, signedness, init style)
   movm                  MOVM layout rules (§V-C)
+  arch list             the built-in architecture presets
+  arch show <name|spec.json>
+                        one spec, field by field (--json: the custom-
+                        spec JSON schema, ready to edit and load back)
+  arch diff <a> <b>     field-level delta between two specs (--json)
+  compare --arch <a,b[,c…]>
+                        run the campaign once per architecture and
+                        print cross-arch delta tables: every Table V
+                        row's CPI per arch (Δ vs the first), Table IV
+                        per level, Table III per dtype ('-' where a
+                        generation lacks the dtype).  --json emits the
+                        same as compare_json.
   validate-oracle       sim TC numerics vs the PJRT/Pallas artifacts
   show-kernel <name> [--dependent]
                         print a generated microbenchmark kernel
@@ -57,9 +79,13 @@ COMMANDS:
                         static prediction from the model, cross-checked
                         against live simulation of the same kernel
                         (extracts a fresh model unless --model is given)
-  serve [--model <path>] [--port <n>]
+  serve [--model <path>]… [--port <n>]
                         JSON-line TCP prediction service on
-                        127.0.0.1:<port> (default 7845)
+                        127.0.0.1:<port> (default 7845).  --model may
+                        repeat: the server hosts one oracle per model
+                        (each on an engine matching that model's arch)
+                        and requests route by their \"arch\" field —
+                        absent means the first model.
   fuzz [--seed <s>] [--cases <n>] [--model <path>]
                         differential fuzzing: every generated kernel
                         runs through (a) the engine's pooled simulator,
@@ -83,7 +109,7 @@ COMMANDS:
                         floors are preserved across --update).
 
 --json applies to table1…table5, fig4, insights, extract-model,
-predict, fuzz and conformance.
+predict, fuzz, conformance, arch list/show/diff and compare.
 
 Property-based tests share the same seeds: FUZZ_CASES=<n> deepens every
 `util::prng::check` sweep (CI runs 200; local `cargo test` stays fast).
@@ -91,7 +117,7 @@ Property-based tests share the same seeds: FUZZ_CASES=<n> deepens every
 SERVE WIRE PROTOCOL (one JSON value per line, both directions):
   request   {\"id\": 7, \"mode\": \"predict|simulate|check|stats|ping\",
              \"kernel\": \"<PTX>\" | \"instr\": \"add.u32\",
-             \"dependent\": true}
+             \"dependent\": true, \"arch\": \"turing\"}
   batch     a JSON array of requests -> one array of responses, same
             order, fanned out across the worker pool
   response  {\"ok\": true, \"id\": 7, ...} — predict adds cpi/cycles/n/
@@ -105,7 +131,12 @@ struct Args {
     faithful: bool,
     dependent: bool,
     update: bool,
-    model: Option<String>,
+    /// `--arch`: preset name / alias / custom-spec JSON path; for
+    /// `compare`, a comma-separated list.
+    arch: Option<String>,
+    /// `--model`, repeatable: `serve` hosts all of them, everything
+    /// else takes exactly one.
+    models: Vec<String>,
     out: Option<String>,
     port: Option<u16>,
     seed: Option<u64>,
@@ -121,7 +152,8 @@ fn parse_args() -> Args {
         faithful: false,
         dependent: false,
         update: false,
-        model: None,
+        arch: None,
+        models: Vec::new(),
         out: None,
         port: None,
         seed: None,
@@ -143,8 +175,12 @@ fn parse_args() -> Args {
             "--json" => a.json = true,
             "--faithful" => a.faithful = true,
             "--dependent" => a.dependent = true,
+            "--arch" => {
+                a.arch = Some(need_value(&argv, i));
+                i += 1;
+            }
             "--model" => {
-                a.model = Some(need_value(&argv, i));
+                a.models.push(need_value(&argv, i));
                 i += 1;
             }
             "--out" => {
@@ -188,32 +224,76 @@ fn parse_args() -> Args {
     a
 }
 
-fn config(small: bool) -> AmpereConfig {
-    if small {
-        AmpereConfig::small()
-    } else {
-        AmpereConfig::a100()
+/// Resolve `--arch` (default `ampere`) and apply the `--small` cache
+/// scaling on top.
+fn config_for(arch: Option<&str>, small: bool) -> anyhow::Result<AmpereConfig> {
+    let spec = arch::get(arch.unwrap_or("ampere")).map_err(anyhow::Error::msg)?;
+    Ok(if small { spec.config.into_small() } else { spec.config })
+}
+
+/// Load the model from `--model` (exactly one for the single-model
+/// commands), or extract a fresh one on `engine` (the engine's own
+/// `--arch`).
+fn load_or_extract(args: &Args, engine: &Engine) -> anyhow::Result<LatencyModel> {
+    match args.models.as_slice() {
+        [path] => {
+            let m = LatencyModel::load(path).map_err(anyhow::Error::msg)?;
+            eprintln!(
+                "loaded model {path} (arch {}, {} instruction entries)",
+                m.arch,
+                m.instructions.len()
+            );
+            Ok(m)
+        }
+        [] => {
+            eprintln!(
+                "no --model given; extracting one (runs the full {} campaign)…",
+                engine.arch()
+            );
+            LatencyModel::extract(engine).map_err(anyhow::Error::msg)
+        }
+        many => anyhow::bail!(
+            "{} takes one --model, got {} (multi-model hosting is `serve`)",
+            args.cmd,
+            many.len()
+        ),
     }
 }
 
-/// Load the model from `--model`, or extract a fresh one on `engine`.
-fn load_or_extract(args: &Args, engine: &Engine) -> anyhow::Result<LatencyModel> {
-    match &args.model {
-        Some(path) => {
-            let m = LatencyModel::load(path).map_err(anyhow::Error::msg)?;
-            eprintln!("loaded model {path} ({} instruction entries)", m.instructions.len());
-            Ok(m)
-        }
-        None => {
-            eprintln!("no --model given; extracting one (runs the full campaign)…");
-            LatencyModel::extract(engine).map_err(anyhow::Error::msg)
-        }
-    }
+/// An engine matched to a loaded model: the model's architecture config
+/// with the extraction config's cache geometry, so `geometry_mismatch`
+/// holds by construction whether or not the model was `--small`.
+///
+/// Custom-spec models record only their arch *name*, which no preset
+/// resolves — for those the invocation's own `--arch <spec.json>`
+/// config is used when its name matches (`repro --arch my_chip.json
+/// serve --model m.json`).
+fn engine_for_model(m: &LatencyModel, cli_cfg: &AmpereConfig) -> anyhow::Result<Engine> {
+    let mut cfg = if cli_cfg.arch_name == m.arch_normalized() {
+        cli_cfg.clone()
+    } else {
+        arch::get(m.arch_normalized())
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "{e}\n(the model was extracted under a custom spec: pass that \
+                     spec via --arch <spec.json> so serve can rebuild its engine)"
+                )
+            })?
+            .config
+    };
+    cfg.memory.l1_bytes = m.l1_bytes as usize;
+    cfg.memory.l2_bytes = m.l2_bytes as usize;
+    Ok(Engine::new(cfg))
 }
 
 fn main() -> anyhow::Result<()> {
     let args = parse_args();
-    let cfg = config(args.small);
+    // `compare` reads --arch as a comma list and `arch` takes names as
+    // positionals; both build their own engines/specs below.
+    let cfg = match args.cmd.as_str() {
+        "compare" | "arch" => config_for(None, args.small)?,
+        _ => config_for(args.arch.as_deref(), args.small)?,
+    };
     // One engine per invocation: every command below shares its kernel
     // cache, simulator pool and row-level scheduler.
     let engine = Engine::new(cfg.clone());
@@ -351,7 +431,14 @@ fn main() -> anyhow::Result<()> {
         "extract-model" => {
             eprintln!("running the campaign to extract the latency model…");
             let model = LatencyModel::extract(&engine).map_err(anyhow::Error::msg)?;
-            let path = args.out.as_deref().unwrap_or("model_a100.json");
+            // Historical default for the Ampere testbed; other arches
+            // name their own file so models can't silently overwrite.
+            let default_path = if engine.arch() == "ampere" {
+                "model_a100.json".to_string()
+            } else {
+                format!("model_{}.json", engine.arch())
+            };
+            let path = args.out.as_deref().unwrap_or(&default_path);
             model.save(path).map_err(anyhow::Error::msg)?;
             let summary = format!(
                 "extracted {} instruction entries, {} memory levels, {} wmma dtypes -> {path}",
@@ -459,16 +546,146 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "serve" => {
-            let model = load_or_extract(&args, &engine)?;
-            let oracle = Arc::new(LatencyOracle::with_engine(model, engine));
-            if let Some(mismatch) = oracle.config_mismatch() {
-                anyhow::bail!("{mismatch} (pass or drop --small to match the model)");
-            }
+            // Multi-model hosting: every --model gets its own oracle
+            // over an engine matched to the model's architecture and
+            // extraction geometry; requests route by their "arch"
+            // field.  With no --model, extract one on this invocation's
+            // --arch engine (the historical single-model shape).
+            let set = if args.models.is_empty() {
+                let model = load_or_extract(&args, &engine)?;
+                let oracle = Arc::new(LatencyOracle::with_engine(model, engine));
+                if let Some(mismatch) = oracle.config_mismatch() {
+                    anyhow::bail!("{mismatch} (pass or drop --small to match the model)");
+                }
+                OracleSet::single(oracle)
+            } else {
+                let mut set: Option<OracleSet> = None;
+                for path in &args.models {
+                    let model = LatencyModel::load(path).map_err(anyhow::Error::msg)?;
+                    eprintln!(
+                        "loaded model {path} (arch {}, {} instruction entries)",
+                        model.arch,
+                        model.instructions.len()
+                    );
+                    let model_engine = engine_for_model(&model, &cfg)?;
+                    let oracle = Arc::new(LatencyOracle::with_engine(model, model_engine));
+                    if let Some(mismatch) = oracle.config_mismatch() {
+                        anyhow::bail!("{path}: {mismatch}");
+                    }
+                    match &mut set {
+                        None => set = Some(OracleSet::single(oracle)),
+                        Some(s) => s
+                            .insert(oracle)
+                            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?,
+                    }
+                }
+                set.expect("at least one --model")
+            };
+            println!(
+                "hosting models: {} (default: {})",
+                set.archs().join(", "),
+                set.default_arch()
+            );
             let port = args.port.unwrap_or(serve::DEFAULT_PORT);
-            let server = Server::bind(oracle, &format!("127.0.0.1:{port}"))?;
+            let server = Server::bind_set(set, &format!("127.0.0.1:{port}"))?;
             println!("latency oracle serving on {}", server.local_addr()?);
             println!("protocol: one JSON request per line (array = batch); see `repro -h`");
             server.run()?;
+        }
+        "arch" => {
+            match args.rest.first().map(String::as_str) {
+                None | Some("list") => {
+                    if args.json {
+                        let v = Value::Arr(
+                            arch::list()
+                                .iter()
+                                .map(|s| {
+                                    Value::obj()
+                                        .set("name", s.name())
+                                        .set("display", s.display.as_str())
+                                })
+                                .collect(),
+                        );
+                        println!("{}", to_string_pretty(&v));
+                    } else {
+                        println!("built-in architecture presets:");
+                        for s in arch::list() {
+                            println!("  {:<8} {}", s.name(), s.display);
+                        }
+                        println!(
+                            "custom: any JSON path works as --arch; \
+                             `repro arch show ampere --json` prints the schema"
+                        );
+                    }
+                }
+                Some("show") => {
+                    let name = args.rest.get(1).ok_or_else(|| {
+                        anyhow::anyhow!("usage: repro arch show <name|spec.json>")
+                    })?;
+                    let spec = arch::get(name).map_err(anyhow::Error::msg)?;
+                    if args.json {
+                        println!("{}", spec.to_json_string());
+                    } else {
+                        print!("{}", spec.show_table());
+                    }
+                }
+                Some("diff") => {
+                    let (a, b) = match (args.rest.get(1), args.rest.get(2)) {
+                        (Some(a), Some(b)) => (a, b),
+                        _ => anyhow::bail!("usage: repro arch diff <a> <b>"),
+                    };
+                    let a = arch::get(a).map_err(anyhow::Error::msg)?;
+                    let b = arch::get(b).map_err(anyhow::Error::msg)?;
+                    if args.json {
+                        println!("{}", to_string_pretty(&arch::diff_json(&a, &b)));
+                    } else {
+                        print!("{}", arch::diff_table(&a, &b));
+                    }
+                }
+                Some(other) => {
+                    anyhow::bail!("unknown arch subcommand {other:?} (list | show | diff)");
+                }
+            }
+        }
+        "compare" => {
+            let list = args.arch.as_deref().ok_or_else(|| {
+                anyhow::anyhow!("usage: repro compare --arch <a,b[,c…]> [--small] [--json]")
+            })?;
+            let names: Vec<&str> =
+                list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+            if names.len() < 2 {
+                anyhow::bail!("compare needs at least two architectures, got {list:?}");
+            }
+            let mut specs: Vec<ArchSpec> = Vec::new();
+            let mut campaigns = Vec::new();
+            for name in &names {
+                let spec = arch::get(name).map_err(anyhow::Error::msg)?;
+                let cfg = if args.small {
+                    spec.config.clone().into_small()
+                } else {
+                    spec.config.clone()
+                };
+                eprintln!("running the {} campaign…", spec.name());
+                let arch_engine = Engine::new(cfg);
+                campaigns
+                    .push(harness::run_campaign_with(&arch_engine).map_err(anyhow::Error::msg)?);
+                specs.push(spec);
+            }
+            let results: Vec<report::ArchResults<'_>> = specs
+                .iter()
+                .zip(&campaigns)
+                .map(|(s, c)| report::ArchResults {
+                    arch: s.name(),
+                    table5: c.table5.as_slice(),
+                    table4: c.table4.as_slice(),
+                    table3: c.table3.as_slice(),
+                })
+                .collect();
+            if args.json {
+                println!("{}", to_string_pretty(&report::compare_json(&results)));
+            } else {
+                print!("{}", report::compare(&results));
+            }
         }
         "fuzz" => {
             let model = load_or_extract(&args, &engine)?;

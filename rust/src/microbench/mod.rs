@@ -22,7 +22,7 @@ use crate::engine::Engine;
 use crate::ptx::parse_program;
 use crate::sass::TraceRecorder;
 use crate::sim::{RunResult, Simulator};
-use crate::translate::translate_program;
+use crate::translate::translate_program_with;
 
 /// Measured clock-read overhead (two consecutive CS2R), paper §IV-A.
 pub const CLOCK_OVERHEAD: u64 = 2;
@@ -190,7 +190,7 @@ pub fn run_measurement(
     dependent: bool,
 ) -> Result<Measurement, String> {
     let prog = parse_program(src).map_err(|e| format!("{name}: {e}\n{src}"))?;
-    let tp = translate_program(&prog).map_err(|e| format!("{name}: {e}"))?;
+    let tp = translate_program_with(&prog, cfg.quirks).map_err(|e| format!("{name}: {e}"))?;
     let mut sim = Simulator::new(cfg.clone());
     let r = sim
         .run(&prog, &tp, MEASUREMENT_PARAMS)

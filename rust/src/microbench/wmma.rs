@@ -13,8 +13,8 @@ use crate::config::AmpereConfig;
 use crate::engine::Engine;
 use crate::ptx::parse_program;
 use crate::sim::Simulator;
-use crate::tensor::{throughput, Throughput, WmmaDtype, ALL_DTYPES};
-use crate::translate::translate_program;
+use crate::tensor::{throughput, Throughput, WmmaDtype};
+use crate::translate::translate_program_with;
 
 pub const CHAINS: u32 = 4; // one per tensor core (Fig. 5 part 3)
 pub const ITERS: u32 = 8;
@@ -130,9 +130,20 @@ pub fn measure(cfg: &AmpereConfig, d: WmmaDtype) -> Result<WmmaResult, String> {
     measure_with(&Engine::new(cfg.clone()), d)
 }
 
-/// Measure one dtype on an engine.
+/// Measure one dtype on an engine.  The dtype must be in the engine
+/// architecture's WMMA capability table — Volta has no bf16/tf32/int
+/// configs to measure, and silently timing one anyway would report
+/// numbers the hardware generation cannot produce.
 pub fn measure_with(engine: &Engine, d: WmmaDtype) -> Result<WmmaResult, String> {
     let cfg = engine.cfg();
+    if !cfg.supports_wmma(d) {
+        return Err(format!(
+            "{}: dtype not supported by the {} tensor core (supported: {})",
+            d.key(),
+            cfg.arch_name,
+            cfg.wmma_dtypes.iter().map(|x| x.key()).collect::<Vec<_>>().join(", ")
+        ));
+    }
     let src = fig5_kernel(d, ITERS);
     let kernel = engine.compile(&src).map_err(|e| format!("{}: {e}", d.key()))?;
     let prog = &kernel.prog;
@@ -184,9 +195,14 @@ pub fn run_table3(cfg: &AmpereConfig) -> Result<Vec<WmmaResult>, String> {
     run_table3_with(&Engine::new(cfg.clone()))
 }
 
-/// Table III over an engine: one job per dtype.
+/// Table III over an engine: one job per dtype the engine's
+/// architecture supports (all seven on Ampere; Volta/Turing measure
+/// their generation's subset).
 pub fn run_table3_with(engine: &Engine) -> Result<Vec<WmmaResult>, String> {
-    let jobs: Vec<_> = ALL_DTYPES
+    let jobs: Vec<_> = engine
+        .cfg()
+        .wmma_dtypes
+        .clone()
         .into_iter()
         .map(|d| move || measure_with(engine, d))
         .collect();
@@ -210,7 +226,7 @@ pub fn fig6_trace(cfg: &AmpereConfig) -> Result<Vec<&'static str>, String> {
         super::REG_DECLS
     );
     let prog = parse_program(&src).map_err(|e| e.to_string())?;
-    let tp = translate_program(&prog).map_err(|e| e.to_string())?;
+    let tp = translate_program_with(&prog, cfg.quirks).map_err(|e| e.to_string())?;
     let mut sim = Simulator::new(cfg.clone());
     sim.run(&prog, &tp, &[0]).map_err(|e| e.to_string())?;
     Ok(sim.trace.mnemonics())

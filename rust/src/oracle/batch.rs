@@ -12,6 +12,7 @@
 //!   ordering, so batched clients can correlate by position as well as
 //!   by id).
 
+use super::serve::OracleSet;
 use super::LatencyOracle;
 use crate::microbench::{alu, registry};
 use crate::util::json::Value;
@@ -163,13 +164,19 @@ pub struct Request {
     pub instr: Option<String>,
     /// With `instr`: generate the dependent-chain variant.
     pub dependent: bool,
+    /// Which hosted architecture's model answers (a multi-model server
+    /// routes by it; absent → the default model).
+    pub arch: Option<String>,
 }
 
 /// Parse one JSON object into a [`Request`].
 pub fn parse_request(v: &Value) -> Result<Request, String> {
     let obj = v.as_obj().ok_or("request must be a JSON object")?;
     for key in obj.keys() {
-        if !matches!(key.as_str(), "id" | "mode" | "kernel" | "instr" | "dependent") {
+        if !matches!(
+            key.as_str(),
+            "id" | "mode" | "kernel" | "instr" | "dependent" | "arch"
+        ) {
             return Err(format!("unknown request field {key:?}"));
         }
     }
@@ -213,7 +220,8 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
                 .to_string(),
         );
     }
-    Ok(Request { id: v.get("id").cloned(), mode, kernel, instr, dependent })
+    let arch = string_field("arch")?;
+    Ok(Request { id: v.get("id").cloned(), mode, kernel, instr, dependent, arch })
 }
 
 /// Resolve the request's kernel source: raw PTX verbatim, or the
@@ -258,11 +266,13 @@ pub fn request_id(v: &Value) -> Option<Value> {
     v.get("id").cloned()
 }
 
-/// Serve one request.  Never panics outward: every failure becomes an
-/// `{"ok": false, "error": …, "id": …}` response (`id` from
-/// [`request_id`], echoed whether or not parsing succeeded).
+/// Serve one request against the hosted model set.  The request's
+/// optional `"arch"` field routes to the matching model (absent → the
+/// default).  Never panics outward: every failure — unknown arch
+/// included — becomes an `{"ok": false, "error": …, "id": …}` response
+/// (`id` from [`request_id`], echoed whether or not parsing succeeded).
 pub fn handle(
-    oracle: &LatencyOracle,
+    set: &OracleSet,
     id: Option<Value>,
     parsed: Result<Request, String>,
 ) -> Value {
@@ -270,17 +280,30 @@ pub fn handle(
         Ok(r) => r,
         Err(e) => return err_response(id.as_ref(), &e),
     };
-    match handle_inner(oracle, &req) {
+    let oracle = match set.resolve(req.arch.as_deref()) {
+        Ok(o) => o,
+        Err(e) => return err_response(req.id.as_ref(), &e),
+    };
+    match handle_inner(set, oracle, &req) {
         Ok(v) => v,
         Err(e) => err_response(req.id.as_ref(), &e),
     }
 }
 
-fn handle_inner(oracle: &LatencyOracle, req: &Request) -> Result<Value, String> {
+fn handle_inner(
+    set: &OracleSet,
+    oracle: &LatencyOracle,
+    req: &Request,
+) -> Result<Value, String> {
     let id = req.id.as_ref();
     match req.mode {
         Mode::Ping => Ok(ok_response(id, Mode::Ping).set("pong", true)),
-        Mode::Stats => Ok(ok_response(id, Mode::Stats).set("stats", oracle.stats_json())),
+        Mode::Stats => Ok(ok_response(id, Mode::Stats)
+            .set("stats", oracle.stats_json())
+            .set(
+                "archs",
+                Value::Arr(set.archs().into_iter().map(Value::from).collect()),
+            )),
         Mode::Predict => {
             let src = resolve_kernel(req)?;
             let (p, cached) = oracle.predict_cached(&src)?;
@@ -313,44 +336,51 @@ fn handle_inner(oracle: &LatencyOracle, req: &Request) -> Result<Value, String> 
 
 /// Serve a batch; responses come back in request order.
 ///
-/// Batches with real work — anything touching the simulator
+/// Batches with real work — anything touching a simulator
 /// (`simulate` / `check`), or predictions whose kernels are not yet
-/// cached (compile + dataflow on a miss) — fan out across the engine's
-/// worker pool.  Fully warm prediction batches run inline: a
-/// cache-served prediction is a hash lookup, far cheaper than
-/// scheduling it.
+/// cached in their target model's oracle (compile + dataflow on a
+/// miss) — fan out across the default oracle's engine worker pool
+/// (each job still runs against its own request's arch).  Fully warm
+/// prediction batches run inline: a cache-served prediction is a hash
+/// lookup, far cheaper than scheduling it.
 pub fn handle_batch(
-    oracle: &LatencyOracle,
+    set: &OracleSet,
     parsed: Vec<(Option<Value>, Result<Request, String>)>,
 ) -> Vec<Value> {
     let needs_pool = parsed.iter().any(|(_, p)| match p {
-        Ok(r) => match r.mode {
-            Mode::Simulate | Mode::Check => true,
-            // Probe without distorting hit stats.  Raw kernels are
-            // checked by borrow (no clone of a multi-KiB source);
-            // registry rows regenerate their µs-scale kernel once —
-            // noise next to a compile-on-miss.
-            Mode::Predict => match &r.kernel {
-                Some(src) => !oracle.is_prediction_cached(src),
-                None => resolve_kernel(r)
-                    .map(|src| !oracle.is_prediction_cached(&src))
-                    .unwrap_or(false),
-            },
-            Mode::Stats | Mode::Ping => false,
-        },
+        Ok(r) => {
+            // An unroutable arch answers inline with an error.
+            let Ok(oracle) = set.resolve(r.arch.as_deref()) else {
+                return false;
+            };
+            match r.mode {
+                Mode::Simulate | Mode::Check => true,
+                // Probe without distorting hit stats.  Raw kernels are
+                // checked by borrow (no clone of a multi-KiB source);
+                // registry rows regenerate their µs-scale kernel once —
+                // noise next to a compile-on-miss.
+                Mode::Predict => match &r.kernel {
+                    Some(src) => !oracle.is_prediction_cached(src),
+                    None => resolve_kernel(r)
+                        .map(|src| !oracle.is_prediction_cached(&src))
+                        .unwrap_or(false),
+                },
+                Mode::Stats | Mode::Ping => false,
+            }
+        }
         Err(_) => false,
     });
     if parsed.len() <= 1 || !needs_pool {
         return parsed
             .into_iter()
-            .map(|(id, p)| handle(oracle, id, p))
+            .map(|(id, p)| handle(set, id, p))
             .collect();
     }
     let jobs: Vec<_> = parsed
         .into_iter()
-        .map(|(id, p)| move || handle(oracle, id, p))
+        .map(|(id, p)| move || handle(set, id, p))
         .collect();
-    oracle.engine().run_all(jobs)
+    set.default_oracle().engine().run_all(jobs)
 }
 
 #[cfg(test)]
@@ -414,6 +444,15 @@ mod tests {
         // ping needs no kernel
         assert!(parse_request(&parse(r#"{"mode":"ping"}"#).unwrap()).is_ok());
 
+        // arch routes to a hosted model; absent means "default"
+        let r = parse_request(
+            &parse(r#"{"mode":"predict","instr":"add.u32","arch":"turing"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(r.arch.as_deref(), Some("turing"));
+        let r = parse_request(&parse(r#"{"mode":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(r.arch, None);
+
         for bad in [
             r#"{"mode":"predict"}"#,                        // no kernel
             r#"{"mode":"warp-drive","instr":"add.u32"}"#,   // unknown mode
@@ -424,6 +463,7 @@ mod tests {
             r#"{"instr":"add.u32","dependent":"true"}"#,    // wrong-typed flag
             r#"{"kernel":42}"#,                             // wrong-typed kernel
             r#"{"kernel":"x","dependent":true}"#,           // flag needs instr
+            r#"{"instr":"add.u32","arch":7}"#,              // wrong-typed arch
         ] {
             assert!(parse_request(&parse(bad).unwrap()).is_err(), "{bad}");
         }

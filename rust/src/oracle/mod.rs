@@ -16,7 +16,10 @@
 //! * [`batch`] — the LRU prediction cache (keyed by kernel hash) and
 //!   batch execution across the engine's worker pool;
 //! * [`serve`] — a `std::net::TcpListener` JSON-line protocol server
-//!   (no external deps) with protocol-level batching.
+//!   (no external deps) with protocol-level batching and multi-model
+//!   hosting: an [`OracleSet`] holds one oracle per architecture and
+//!   requests route by their `"arch"` field (`repro serve --model
+//!   ampere.json --model turing.json`).
 //!
 //! [`LatencyOracle`] ties them together: predictions are cache-served,
 //! `simulate` requests fall back to the engine's simulator pool, and
@@ -32,11 +35,11 @@ pub mod serve;
 pub use batch::{CacheCounters, LruCache, Mode, Request};
 pub use model::{InstrEntry, LatencyModel, WmmaEntry};
 pub use predict::{InstrPrediction, Prediction, Resolution};
-pub use serve::{Server, ServerHandle};
+pub use serve::{OracleSet, Server, ServerHandle};
 
 use crate::engine::{CompiledKernel, Engine};
 use crate::ptx::parse_program;
-use crate::translate::translate_program;
+use crate::translate::translate_program_with;
 use crate::util::json::Value;
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
@@ -164,7 +167,8 @@ impl LatencyOracle {
             }
         }
         let prog = parse_program(src).map_err(|e| format!("parse: {e}"))?;
-        let tp = translate_program(&prog).map_err(|e| format!("translate: {e}"))?;
+        let tp = translate_program_with(&prog, self.engine.cfg().quirks)
+            .map_err(|e| format!("translate: {e}"))?;
         let k = Arc::new(CompiledKernel { prog, tp });
         self.compiled
             .lock()

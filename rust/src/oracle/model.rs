@@ -71,7 +71,9 @@ pub struct WmmaEntry {
 /// The analytical performance model the oracle serves.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LatencyModel {
-    /// Machine the campaign ran on (`a100-sim`).
+    /// Architecture the campaign ran on (`ampere` / `volta` / `turing`
+    /// / a custom spec's name; pre-arch-registry models say `a100-sim`,
+    /// accepted as an alias of `ampere`).
     pub arch: String,
     /// Cache geometry of the extraction config — the knobs `--small`
     /// changes.  Recorded so a serving/predicting engine with a
@@ -167,7 +169,7 @@ impl LatencyModel {
         let default_cpi = cpis.get(cpis.len() / 2).copied().unwrap_or(4);
 
         Ok(LatencyModel {
-            arch: "a100-sim".to_string(),
+            arch: engine.cfg().arch_name.clone(),
             l1_bytes: engine.cfg().memory.l1_bytes as u64,
             l2_bytes: engine.cfg().memory.l2_bytes as u64,
             clock_overhead: CLOCK_OVERHEAD,
@@ -180,12 +182,29 @@ impl LatencyModel {
         })
     }
 
-    /// `Some(description)` when `cfg`'s cache geometry differs from the
-    /// config this model was extracted under (the knobs `--small`
-    /// changes) — shared by the oracle's startup check and the fuzz
-    /// harness, so a mismatched model fails fast everywhere instead of
-    /// surfacing as an unexplained prediction/simulation divergence.
+    /// The model's architecture with aliases folded to their canonical
+    /// preset name (`a100-sim` was the Ampere campaign before
+    /// architectures had names; see [`crate::arch::normalize`]).
+    pub fn arch_normalized(&self) -> &str {
+        crate::arch::normalize(&self.arch)
+    }
+
+    /// `Some(description)` when `cfg` is not the machine this model was
+    /// extracted under: a different *architecture* (a Volta model can't
+    /// predict a Turing engine's cycles — per-class latencies, memory
+    /// levels and WMMA capability all differ), or the same architecture
+    /// with different cache geometry (the knobs `--small` changes).
+    /// Shared by the oracle's startup check, the serving layer's
+    /// per-request routing and the fuzz harness, so a mismatched model
+    /// fails fast everywhere instead of surfacing as an unexplained
+    /// prediction/simulation divergence.
     pub fn geometry_mismatch(&self, cfg: &crate::config::AmpereConfig) -> Option<String> {
+        if self.arch_normalized() != cfg.arch_name {
+            return Some(format!(
+                "model was extracted for arch {:?}, engine is {:?}",
+                self.arch, cfg.arch_name
+            ));
+        }
         let mem = &cfg.memory;
         if (mem.l1_bytes as u64, mem.l2_bytes as u64) == (self.l1_bytes, self.l2_bytes) {
             None
@@ -425,7 +444,7 @@ pub(crate) fn tiny_model() -> LatencyModel {
             },
         );
         LatencyModel {
-            arch: "a100-sim".into(),
+            arch: "ampere".into(),
             l1_bytes: 128 * 1024,
             l2_bytes: 40 * 1024 * 1024,
             clock_overhead: 2,
@@ -464,6 +483,26 @@ mod tests {
         let s = to_string_pretty(&v);
         let err = LatencyModel::from_json_str(&s).unwrap_err();
         assert!(err.contains("memory"), "{err}");
+    }
+
+    #[test]
+    fn geometry_mismatch_rejects_cross_arch_use() {
+        let m = tiny_model();
+        let ampere = crate::config::AmpereConfig::a100();
+        assert!(m.geometry_mismatch(&ampere).is_none());
+
+        // Same geometry, different architecture: rejected by name.
+        let mut turing = ampere.clone();
+        turing.arch_name = "turing".into();
+        let err = m.geometry_mismatch(&turing).expect("cross-arch must be rejected");
+        assert!(err.contains("arch"), "{err}");
+        assert!(err.contains("turing"), "{err}");
+
+        // The pre-registry alias still matches an Ampere engine.
+        let mut legacy = tiny_model();
+        legacy.arch = "a100-sim".into();
+        assert_eq!(legacy.arch_normalized(), "ampere");
+        assert!(legacy.geometry_mismatch(&ampere).is_none());
     }
 
     #[test]

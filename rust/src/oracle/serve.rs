@@ -19,7 +19,9 @@
 //!  "mode": "predict",        predict | simulate | check | stats | ping
 //!  "kernel": "<PTX source>", raw kernel to analyse, or
 //!  "instr": "add.u32",       a Table V registry row name
-//!  "dependent": true}        with "instr": the dependent-chain variant
+//!  "dependent": true,        with "instr": the dependent-chain variant
+//!  "arch": "turing"}         route to a hosted model (multi-model
+//!                            serving; absent -> the default model)
 //! ```
 //!
 //! Responses always carry `"ok"`; failures are
@@ -39,6 +41,7 @@
 
 use super::{batch, LatencyOracle};
 use crate::util::json::{self, Value};
+use std::collections::BTreeMap;
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -51,16 +54,88 @@ pub const DEFAULT_PORT: u16 = 7845;
 /// Concurrent-connection cap (one OS thread per live connection).
 pub const MAX_CONNECTIONS: usize = 256;
 
+/// The hosted models, keyed by architecture.  One server can host
+/// several [`LatencyOracle`]s at once (`repro serve --model a.json
+/// --model b.json`); requests route by their `"arch"` field, with the
+/// first-inserted model as the default.  Each oracle keeps its own
+/// engine (kernel cache translated under its architecture's quirks,
+/// simulator pool built from its machine config), so hosted
+/// architectures can never cross-contaminate.
+pub struct OracleSet {
+    default_arch: String,
+    oracles: BTreeMap<String, Arc<LatencyOracle>>,
+}
+
+impl OracleSet {
+    /// A single-model set — the historical serving shape.
+    pub fn single(oracle: Arc<LatencyOracle>) -> OracleSet {
+        let arch = oracle.model().arch_normalized().to_string();
+        let mut oracles = BTreeMap::new();
+        oracles.insert(arch.clone(), oracle);
+        OracleSet { default_arch: arch, oracles }
+    }
+
+    /// Add another architecture's model.  The first insert (or the
+    /// `single` constructor's model) is the default route; hosting two
+    /// models for one architecture is an error.
+    pub fn insert(&mut self, oracle: Arc<LatencyOracle>) -> Result<(), String> {
+        let arch = oracle.model().arch_normalized().to_string();
+        if self.oracles.contains_key(&arch) {
+            return Err(format!("a model for arch {arch:?} is already hosted"));
+        }
+        self.oracles.insert(arch, oracle);
+        Ok(())
+    }
+
+    /// Hosted architectures, sorted; the default is marked by
+    /// [`Self::default_arch`].
+    pub fn archs(&self) -> Vec<String> {
+        self.oracles.keys().cloned().collect()
+    }
+
+    pub fn default_arch(&self) -> &str {
+        &self.default_arch
+    }
+
+    pub fn default_oracle(&self) -> &Arc<LatencyOracle> {
+        &self.oracles[&self.default_arch]
+    }
+
+    /// Route a request: no arch → the default model; otherwise the
+    /// hosted model for that architecture (product aliases and the
+    /// legacy `a100-sim` name fold via [`crate::arch::normalize`]), or
+    /// an error naming what *is* hosted.
+    pub fn resolve(&self, arch: Option<&str>) -> Result<&Arc<LatencyOracle>, String> {
+        let Some(arch) = arch else {
+            return Ok(self.default_oracle());
+        };
+        let arch = crate::arch::normalize(arch);
+        self.oracles.get(arch).ok_or_else(|| {
+            format!(
+                "no model hosted for arch {arch:?} (hosted: {}; default {})",
+                self.archs().join(", "),
+                self.default_arch
+            )
+        })
+    }
+}
+
 /// A bound-but-not-yet-serving oracle server.
 pub struct Server {
-    oracle: Arc<LatencyOracle>,
+    set: OracleSet,
     listener: TcpListener,
 }
 
 impl Server {
-    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral test port).
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral test port) with
+    /// a single hosted model.
     pub fn bind(oracle: Arc<LatencyOracle>, addr: &str) -> io::Result<Server> {
-        Ok(Server { oracle, listener: TcpListener::bind(addr)? })
+        Self::bind_set(OracleSet::single(oracle), addr)
+    }
+
+    /// Bind with a full model set (multi-architecture serving).
+    pub fn bind_set(set: OracleSet, addr: &str) -> io::Result<Server> {
+        Ok(Server { set, listener: TcpListener::bind(addr)? })
     }
 
     pub fn local_addr(&self) -> io::Result<SocketAddr> {
@@ -85,8 +160,10 @@ impl Server {
     }
 
     fn accept_loop(self, shutdown: Arc<AtomicBool>) {
+        let Server { set, listener } = self;
+        let set = Arc::new(set);
         let active = Arc::new(AtomicUsize::new(0));
-        for conn in self.listener.incoming() {
+        for conn in listener.incoming() {
             if shutdown.load(Ordering::SeqCst) {
                 break;
             }
@@ -109,10 +186,10 @@ impl Server {
                 continue;
             }
             let slot = SlotGuard(Arc::clone(&active));
-            let oracle = Arc::clone(&self.oracle);
+            let set = Arc::clone(&set);
             std::thread::spawn(move || {
                 let _slot = slot; // released on exit, panics included
-                let _ = serve_connection(&oracle, stream);
+                let _ = serve_connection(&set, stream);
             });
         }
     }
@@ -204,7 +281,7 @@ const MAX_REQUEST_BYTES: u64 = 8 * 1024 * 1024;
 /// byte becomes U+FFFD, fails JSON parsing, and earns an `ok:false`
 /// response — per the module contract, malformed input never tears the
 /// connection down (only real socket errors do).
-fn serve_connection(oracle: &LatencyOracle, stream: TcpStream) -> io::Result<()> {
+fn serve_connection(set: &OracleSet, stream: TcpStream) -> io::Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     let mut buf = Vec::new();
@@ -248,7 +325,7 @@ fn serve_connection(oracle: &LatencyOracle, stream: TcpStream) -> io::Result<()>
         if text.is_empty() {
             continue;
         }
-        let response = respond(oracle, text);
+        let response = respond(set, text);
         writer.write_all(json::to_string(&response).as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -256,8 +333,9 @@ fn serve_connection(oracle: &LatencyOracle, stream: TcpStream) -> io::Result<()>
 }
 
 /// One request line → one response value (object in, object out; array
-/// in, array out).
-pub fn respond(oracle: &LatencyOracle, text: &str) -> Value {
+/// in, array out).  Requests route to hosted models by their `"arch"`
+/// field (see [`OracleSet::resolve`]).
+pub fn respond(set: &OracleSet, text: &str) -> Value {
     match json::parse(text) {
         Err(e) => Value::obj().set("ok", false).set("error", format!("bad json: {e}")),
         Ok(Value::Arr(items)) => {
@@ -265,9 +343,9 @@ pub fn respond(oracle: &LatencyOracle, text: &str) -> Value {
                 .iter()
                 .map(|v| (batch::request_id(v), batch::parse_request(v)))
                 .collect();
-            Value::Arr(batch::handle_batch(oracle, parsed))
+            Value::Arr(batch::handle_batch(set, parsed))
         }
-        Ok(v) => batch::handle(oracle, batch::request_id(&v), batch::parse_request(&v)),
+        Ok(v) => batch::handle(set, batch::request_id(&v), batch::parse_request(&v)),
     }
 }
 
@@ -282,9 +360,13 @@ mod tests {
         LatencyOracle::with_engine(model::tiny_model(), Engine::new(AmpereConfig::a100()))
     }
 
+    fn set() -> OracleSet {
+        OracleSet::single(Arc::new(oracle()))
+    }
+
     #[test]
     fn respond_handles_objects_arrays_and_garbage() {
-        let o = oracle();
+        let o = set();
         let v = respond(&o, r#"{"mode":"ping","id":"x"}"#);
         assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
         assert_eq!(v.get("pong"), Some(&Value::Bool(true)));
@@ -305,6 +387,49 @@ mod tests {
 
         let v = respond(&o, "{{{{");
         assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+    }
+
+    #[test]
+    fn arch_field_routes_and_rejects_unhosted_models() {
+        let o = set();
+        assert_eq!(o.default_arch(), "ampere");
+        assert_eq!(o.archs(), vec!["ampere".to_string()]);
+
+        // Explicit arch matching the hosted model — including product
+        // aliases and the legacy model tag — is served normally.
+        for arch in ["ampere", "a100", "a100-sim"] {
+            let v = respond(
+                &o,
+                &format!(r#"{{"mode":"predict","instr":"add.u32","arch":"{arch}"}}"#),
+            );
+            assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{arch}: {v:?}");
+            assert_eq!(v.get("cpi").and_then(Value::as_u64), Some(2), "{arch}");
+        }
+
+        // An unhosted arch is an error response naming what is hosted —
+        // never the wrong model's numbers, and never a dropped batch.
+        let v = respond(
+            &o,
+            r#"[{"mode":"predict","instr":"add.u32","arch":"turing","id":1},{"mode":"ping","id":2}]"#,
+        );
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr[0].get("ok"), Some(&Value::Bool(false)));
+        let err = arr[0].get("error").and_then(Value::as_str).unwrap();
+        assert!(err.contains("turing") && err.contains("ampere"), "{err}");
+        assert_eq!(arr[0].get("id").and_then(Value::as_u64), Some(1));
+        assert_eq!(arr[1].get("ok"), Some(&Value::Bool(true)));
+
+        // stats lists the hosted archs.
+        let v = respond(&o, r#"{"mode":"stats"}"#);
+        assert_eq!(
+            v.get("archs").and_then(|a| a.idx(0)).and_then(Value::as_str),
+            Some("ampere")
+        );
+
+        // Two models for one arch cannot be hosted.
+        let mut multi = set();
+        let err = multi.insert(Arc::new(oracle())).unwrap_err();
+        assert!(err.contains("already hosted"), "{err}");
     }
 
     #[test]

@@ -199,12 +199,198 @@ pub fn insights(i1: &Insight1, i2: &[SignPair], i3: &[Insight3]) -> String {
     out
 }
 
+// ---- cross-architecture comparison (`repro compare --arch a,b`) -----
+
+use crate::util::json::Value;
+
+/// The per-arch results `compare`/`compare_json` tabulate: one
+/// campaign's Table V / Table IV / Table III rows per architecture, in
+/// `--arch` order.  Table V and Table IV rows align by construction
+/// (same registry, same level list, every architecture); Table III rows
+/// align by dtype key, absent where an architecture's WMMA capability
+/// table omits the dtype.
+pub struct ArchResults<'a> {
+    pub arch: &'a str,
+    pub table5: &'a [RowResult],
+    pub table4: &'a [MemResult],
+    pub table3: &'a [WmmaResult],
+}
+
+/// Deltas are reported against the first (baseline) architecture.
+fn delta(base: u64, other: u64) -> String {
+    let d = other as i64 - base as i64;
+    if d == 0 {
+        "=".to_string()
+    } else {
+        format!("{d:+}")
+    }
+}
+
+/// Cross-architecture delta tables: every Table V row's CPI per arch
+/// (with the signed delta vs the first arch), Table IV per level, and
+/// Table III per dtype ("-" where a generation lacks the dtype).
+pub fn compare(results: &[ArchResults<'_>]) -> String {
+    assert!(results.len() >= 2, "compare needs at least two architectures");
+    let base = &results[0];
+    let mut out = String::new();
+
+    let mut headers: Vec<String> = vec!["PTX".into()];
+    for r in results {
+        headers.push(format!("cyc@{}", r.arch));
+    }
+    for r in &results[1..] {
+        headers.push(format!("Δ {}", r.arch));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+
+    let rows: Vec<Vec<String>> = base
+        .table5
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            let mut cells = vec![row.name.clone()];
+            for r in results {
+                cells.push(r.table5[i].measured.cpi.to_string());
+            }
+            for r in &results[1..] {
+                cells.push(delta(row.measured.cpi, r.table5[i].measured.cpi));
+            }
+            cells
+        })
+        .collect();
+    out.push_str(&render_table(
+        &format!(
+            "Cross-arch Table V — CPI per instruction ({} rows, Δ vs {})",
+            base.table5.len(),
+            base.arch
+        ),
+        &header_refs,
+        &rows,
+    ));
+
+    let mem_headers: Vec<&str> = std::iter::once("Memory type")
+        .chain(results.iter().map(|r| r.arch))
+        .collect();
+    let mem_rows: Vec<Vec<String>> = base
+        .table4
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            let mut cells = vec![row.level.name().to_string()];
+            for r in results {
+                cells.push(r.table4[i].cpi.to_string());
+            }
+            cells
+        })
+        .collect();
+    out.push_str(&render_table("Cross-arch Table IV — memory latencies", &mem_headers, &mem_rows));
+
+    let wmma_headers: Vec<&str> = std::iter::once("dtype")
+        .chain(results.iter().map(|r| r.arch))
+        .collect();
+    let wmma_rows: Vec<Vec<String>> = crate::tensor::ALL_DTYPES
+        .iter()
+        .map(|d| {
+            let mut cells = vec![d.key().to_string()];
+            for r in results {
+                cells.push(
+                    r.table3
+                        .iter()
+                        .find(|w| w.dtype_key == d.key())
+                        .map(|w| format!("{} cyc", w.cycles))
+                        .unwrap_or_else(|| "-".to_string()),
+                );
+            }
+            cells
+        })
+        .collect();
+    out.push_str(&render_table(
+        "Cross-arch Table III — WMMA latency ('-' = dtype unsupported)",
+        &wmma_headers,
+        &wmma_rows,
+    ));
+    out
+}
+
+/// `repro compare --arch a,b --json`: one entry per Table V row with
+/// per-arch CPI and the signed delta vs the first arch, plus the
+/// memory-level and WMMA cross-tables.
+pub fn compare_json(results: &[ArchResults<'_>]) -> Value {
+    assert!(results.len() >= 2, "compare needs at least two architectures");
+    let base = &results[0];
+
+    let table5: Vec<Value> = base
+        .table5
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            let mut cpi = Value::obj();
+            for r in results {
+                cpi = cpi.set(r.arch, r.table5[i].measured.cpi);
+            }
+            let mut sass = Value::obj();
+            for r in results {
+                sass = sass.set(r.arch, r.table5[i].measured.mapping.as_str());
+            }
+            let mut deltas = Value::obj();
+            for r in &results[1..] {
+                deltas = deltas.set(
+                    r.arch,
+                    r.table5[i].measured.cpi as i64 - row.measured.cpi as i64,
+                );
+            }
+            Value::obj()
+                .set("name", row.name.as_str())
+                .set("cpi", cpi)
+                .set("sass", sass)
+                .set("delta", deltas)
+        })
+        .collect();
+
+    let table4: Vec<Value> = base
+        .table4
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            let mut cpi = Value::obj();
+            for r in results {
+                cpi = cpi.set(r.arch, r.table4[i].cpi);
+            }
+            Value::obj().set("level", row.level.name()).set("cpi", cpi)
+        })
+        .collect();
+
+    let wmma: Vec<Value> = crate::tensor::ALL_DTYPES
+        .iter()
+        .map(|d| {
+            let mut cycles = Value::obj();
+            for r in results {
+                let entry = r.table3.iter().find(|w| w.dtype_key == d.key());
+                cycles = cycles.set(
+                    r.arch,
+                    entry.map(|w| Value::from(w.cycles)).unwrap_or(Value::Null),
+                );
+            }
+            Value::obj().set("dtype", d.key()).set("cycles", cycles)
+        })
+        .collect();
+
+    Value::obj()
+        .set(
+            "archs",
+            Value::Arr(results.iter().map(|r| Value::from(r.arch)).collect()),
+        )
+        .set("baseline", base.arch)
+        .set("rows", base.table5.len())
+        .set("table5", Value::Arr(table5))
+        .set("table4", Value::Arr(table4))
+        .set("wmma", Value::Arr(wmma))
+}
+
 // ---- machine-readable (`--json`) forms ------------------------------
 //
 // One builder per experiment so `repro --json table1…table5 | insights`
 // and the oracle's model-extraction path share a single JSON shape.
-
-use crate::util::json::Value;
 
 pub fn table1_json(rows: &[Amortization]) -> Value {
     Value::Arr(

@@ -18,8 +18,16 @@
 //! * signed and unsigned variants map identically except `bfind`, `min`
 //!   and `max` (Insight 2).
 
+//! Which of these context-sensitive behaviours an architecture's
+//! `ptxas` actually exhibits is per-generation (§V-A and Insight 3 are
+//! Ampere observations): [`Translator::with_quirks`] takes the
+//! architecture's [`TranslationQuirks`] and the engine's kernel cache
+//! threads them from the machine config, so an `--arch volta` campaign
+//! translates with Volta's behaviours throughout.
+
 pub mod rules;
 
+use crate::config::TranslationQuirks;
 use crate::ptx::{Operand, PtxOp, PtxProgram, Reg};
 use crate::sass::{Effect, SassInstr};
 use std::fmt;
@@ -97,11 +105,19 @@ const DEP_WINDOW: u32 = 2;
 pub struct Translator<'p> {
     prog: &'p PtxProgram,
     next_temp: u32,
+    quirks: TranslationQuirks,
 }
 
 impl<'p> Translator<'p> {
+    /// Translator with the default (Ampere) quirks — the behaviour every
+    /// pre-arch-registry caller got.
     pub fn new(prog: &'p PtxProgram) -> Self {
-        Self { prog, next_temp: prog.reg_count() as u32 }
+        Self::with_quirks(prog, TranslationQuirks::default())
+    }
+
+    /// Translator with an explicit architecture's translation quirks.
+    pub fn with_quirks(prog: &'p PtxProgram, quirks: TranslationQuirks) -> Self {
+        Self { prog, next_temp: prog.reg_count() as u32, quirks }
     }
 
     /// Allocate a translation temporary register.
@@ -191,14 +207,28 @@ impl<'p> Translator<'p> {
                 .find_map(|o| o.as_reg())
                 .map(|r| init_style[r.0 as usize])
                 .unwrap_or(InitStyle::Unknown);
-            let ctx = Ctx { dependent, chain_parity: chain_run % 2 == 0, src_init };
+            // Architectures without the §V-A pipe-borrow keep dependent
+            // chains on the INT pipe (constant parity → always IADD3);
+            // without Insight-3 folding every producer looks arithmetic
+            // (src_init only drives the neg/abs fold rules).
+            let chain_parity = if self.quirks.dep_add_fma_alternation {
+                chain_run % 2 == 0
+            } else {
+                true
+            };
+            let src_init = if self.quirks.neg_abs_mov_folding {
+                src_init
+            } else {
+                InitStyle::Arith
+            };
+            let ctx = Ctx { dependent, chain_parity, src_init };
 
             // --- mapping ----------------------------------------------
             let mut instrs = rules::map_instruction(&mut self, ins, ctx)
                 .map_err(|message| TranslateError { ptx_idx: idx, message })?;
             // Fig. 4a: the second 32-bit clock read of a measured pair is
             // guarded by a scheduling barrier and demoted to S2R.
-            if barriered.contains(&(idx as u32)) {
+            if self.quirks.clock32_depbar && barriered.contains(&(idx as u32)) {
                 for i in instrs.iter_mut() {
                     if i.mnemonic == "CS2R.32" {
                         i.mnemonic = "S2R";
@@ -258,8 +288,18 @@ impl TranslatedProgram {
 }
 
 /// Convenience: parse-and-translate helper used throughout the tests.
+/// Translates with the default (Ampere) quirks.
 pub fn translate_program(prog: &PtxProgram) -> Result<TranslatedProgram, TranslateError> {
     Translator::new(prog).translate()
+}
+
+/// Translate under an explicit architecture's quirks — what the engine's
+/// kernel cache and every arch-aware path calls.
+pub fn translate_program_with(
+    prog: &PtxProgram,
+    quirks: TranslationQuirks,
+) -> Result<TranslatedProgram, TranslateError> {
+    Translator::with_quirks(prog, quirks).translate()
 }
 
 /// Group wiring structure: how a multi-instruction expansion's data flow
@@ -449,6 +489,65 @@ mod tests {
         assert!(
             pair.groups[2].instrs.iter().any(|i| i.effect == Effect::DepBar),
             "second 32-bit clock read must carry the scheduling barrier"
+        );
+    }
+
+    #[test]
+    fn quirks_gate_the_context_sensitive_mappings() {
+        let no_quirks = TranslationQuirks {
+            dep_add_fma_alternation: false,
+            neg_abs_mov_folding: false,
+            clock32_depbar: false,
+        };
+        let tr_q = |src: &str| {
+            translate_program_with(&parse_program(src).unwrap(), no_quirks).unwrap()
+        };
+
+        // Without the §V-A pipe borrow, a dependent chain is IADD3-only.
+        let p = tr_q(r#"
+.visible .entry k() {
+ .reg .b32 %r<20>;
+ add.u32 %r1, 6, 1;
+ add.u32 %r2, %r1, 7;
+ add.u32 %r3, %r2, 2;
+ add.u32 %r4, %r3, 2;
+ ret;
+}"#);
+        for g in &p.groups[1..4] {
+            assert_eq!(g.mapping(), "IADD3", "{:?}", p.mappings());
+        }
+
+        // Without Insight-3 folding, mov-initialised neg.f32 stays FADD.
+        let p = tr_q(r#"
+.visible .entry k() {
+ .reg .b32 %f<20>;
+ mov.f32 %f1, 3.5;
+ neg.f32 %f2, %f1;
+ ret;
+}"#);
+        assert_eq!(p.groups[1].mapping(), "FADD");
+
+        // Without the Fig. 4a barrier, a measured 32-bit pair stays
+        // barrier-free CS2R.32.
+        let p = tr_q(r#"
+.visible .entry k() {
+ .reg .b32 %r<9>;
+ mov.u32 %r1, %clock;
+ add.u32 %r5, 1, 2;
+ mov.u32 %r2, %clock;
+ sub.s32 %r3, %r2, %r1;
+ ret;
+}"#);
+        assert_eq!(p.groups[2].mapping(), "CS2R.32");
+
+        // And default quirks are exactly what `translate_program` uses.
+        let src = ".visible .entry k() { .reg .b64 %rd<9>; add.u64 %rd1, 1, 2; ret; }";
+        let prog = parse_program(src).unwrap();
+        assert_eq!(
+            translate_program(&prog).unwrap().mappings(),
+            translate_program_with(&prog, TranslationQuirks::default())
+                .unwrap()
+                .mappings()
         );
     }
 

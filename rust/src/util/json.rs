@@ -127,6 +127,11 @@ impl From<u32> for Value {
         Value::Num(n as f64)
     }
 }
+impl From<i64> for Value {
+    fn from(n: i64) -> Self {
+        Value::Num(n as f64)
+    }
+}
 impl From<bool> for Value {
     fn from(b: bool) -> Self {
         Value::Bool(b)

@@ -1,0 +1,179 @@
+//! Integration: the architecture registry end to end — the `ampere`
+//! preset's byte-identity with the historical config, WMMA capability
+//! gating through campaign and fuzzing, quirk threading through the
+//! engine's kernel cache, and the cross-architecture compare report.
+
+use ampere_ubench::arch::{self, ArchSpec};
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::microbench::{alu, registry, wmma};
+use ampere_ubench::util::json::Value;
+use ampere_ubench::{fuzz, harness, report};
+
+/// Acceptance anchor: `repro --arch ampere <cmd>` must be the same run
+/// as plain `repro <cmd>`.  The config is field-for-field identical,
+/// and the rendered Table V (the full 132-row sweep) is byte-identical.
+#[test]
+fn ampere_arch_table5_is_byte_identical_to_legacy() {
+    assert_eq!(arch::get("ampere").unwrap().config, AmpereConfig::a100());
+
+    let legacy = Engine::new(AmpereConfig::small());
+    let via_arch = Engine::new(arch::get("ampere").unwrap().config.into_small());
+    let a = report::table5(&alu::run_table5_with(&legacy).unwrap());
+    let b = report::table5(&alu::run_table5_with(&via_arch).unwrap());
+    assert_eq!(a, b, "--arch ampere must not change a byte of Table V");
+}
+
+#[test]
+fn volta_campaign_measures_only_its_wmma_dtypes() {
+    let spec = arch::get("volta").unwrap();
+    let engine = Engine::new(spec.config.clone().into_small());
+    let t3 = wmma::run_table3_with(&engine).unwrap();
+    let keys: Vec<&str> = t3.iter().map(|r| r.dtype_key).collect();
+    assert_eq!(keys, vec!["f16_f16", "f16_f32"], "first-gen tensor cores are fp16-only");
+
+    // Asking for an unsupported dtype is an error naming the capability
+    // table, not a fabricated measurement.
+    let err = wmma::measure_with(&engine, ampere_ubench::tensor::WmmaDtype::Tf32F32)
+        .unwrap_err();
+    assert!(err.contains("not supported"), "{err}");
+    assert!(err.contains("volta"), "{err}");
+}
+
+#[test]
+fn turing_engine_translates_under_its_own_quirks() {
+    // The §V-A IADD3/IMAD.IADD alternation is an Ampere behaviour; a
+    // Turing engine's kernel cache must translate dependent adds
+    // without the FP-pipe borrow.
+    let row = registry::table5()
+        .into_iter()
+        .find(|r| r.name == "add.u32")
+        .unwrap();
+    let dep_src = alu::kernel_for(&row, true);
+
+    let ampere = Engine::new(arch::get("ampere").unwrap().config);
+    let turing = Engine::new(arch::get("turing").unwrap().config);
+    let a = ampere.compile(&dep_src).unwrap();
+    let t = turing.compile(&dep_src).unwrap();
+    assert!(
+        a.tp.mappings().iter().any(|m| m == "IMAD.IADD"),
+        "{:?}",
+        a.tp.mappings()
+    );
+    assert!(
+        t.tp.mappings().iter().all(|m| m != "IMAD.IADD"),
+        "{:?}",
+        t.tp.mappings()
+    );
+}
+
+#[test]
+fn fuzzing_respects_the_arch_capability_table() {
+    // A Volta differential run must never generate a wmma case outside
+    // the Volta capability table — and must still pass its three paths.
+    let spec = arch::get("volta").unwrap();
+    let engine = Engine::new(spec.config.clone().into_small());
+    let model =
+        ampere_ubench::oracle::LatencyModel::extract(&engine).expect("volta extraction");
+    assert_eq!(model.arch, "volta");
+    assert_eq!(model.wmma.len(), 2, "model only carries supported dtypes");
+
+    let outcome = fuzz::diff::run(&engine, &model, 7, 40);
+    assert_eq!(outcome.arch, "volta");
+    assert!(
+        outcome.failures.is_empty(),
+        "volta differential run diverged: {}",
+        outcome.render()
+    );
+}
+
+/// Acceptance: `repro compare --arch ampere,turing --json` emits a
+/// per-row delta table covering every Table V row.
+#[test]
+fn compare_json_covers_every_table5_row() {
+    let specs = [arch::get("ampere").unwrap(), arch::get("turing").unwrap()];
+    let campaigns: Vec<_> = specs
+        .iter()
+        .map(|s| {
+            harness::run_campaign_blocking(s.config.clone().into_small())
+                .unwrap_or_else(|e| panic!("{}: {e}", s.name()))
+        })
+        .collect();
+    let results: Vec<report::ArchResults<'_>> = specs
+        .iter()
+        .zip(&campaigns)
+        .map(|(s, c)| report::ArchResults {
+            arch: s.name(),
+            table5: c.table5.as_slice(),
+            table4: c.table4.as_slice(),
+            table3: c.table3.as_slice(),
+        })
+        .collect();
+
+    let rows = registry::table5().len();
+    let v = report::compare_json(&results);
+    assert_eq!(v.get("rows").and_then(Value::as_u64), Some(rows as u64));
+    let t5 = v.get("table5").and_then(Value::as_arr).unwrap();
+    assert_eq!(t5.len(), rows, "every Table V row compared");
+    for row in t5 {
+        let cpi = row.get("cpi").unwrap();
+        assert!(cpi.get("ampere").and_then(Value::as_u64).is_some(), "{row:?}");
+        assert!(cpi.get("turing").and_then(Value::as_u64).is_some(), "{row:?}");
+        assert!(
+            row.get("delta").and_then(|d| d.get("turing")).is_some(),
+            "{row:?}"
+        );
+    }
+
+    // The architectures measurably differ: at least one row has a
+    // non-zero delta (Turing's fp64 port and memory latencies alone
+    // guarantee it), and the fp64 rows are slower on Turing.
+    let nonzero = t5
+        .iter()
+        .filter(|r| {
+            r.get("delta")
+                .and_then(|d| d.get("turing"))
+                .and_then(Value::as_f64)
+                .map(|d| d != 0.0)
+                .unwrap_or(false)
+        })
+        .count();
+    assert!(nonzero > 0, "ampere and turing measured identically?");
+    let add_f64 = t5
+        .iter()
+        .find(|r| r.get("name").and_then(Value::as_str) == Some("add.f64"))
+        .expect("add.f64 row");
+    let a = add_f64.get("cpi").unwrap().get("ampere").unwrap().as_u64().unwrap();
+    let t = add_f64.get("cpi").unwrap().get("turing").unwrap().as_u64().unwrap();
+    assert!(t > a, "Turing's 1/32-rate fp64 must be slower: {t} vs {a}");
+
+    // WMMA cross-table: bf16 measured on ampere, absent on turing.
+    let wmma_rows = v.get("wmma").and_then(Value::as_arr).unwrap();
+    let bf16 = wmma_rows
+        .iter()
+        .find(|r| r.get("dtype").and_then(Value::as_str) == Some("bf16_f32"))
+        .unwrap();
+    assert!(bf16.get("cycles").unwrap().get("ampere").unwrap().as_u64().is_some());
+    assert_eq!(bf16.get("cycles").unwrap().get("turing"), Some(&Value::Null));
+
+    // And the printed form renders every row plus the unsupported
+    // marker.
+    let printed = report::compare(&results);
+    assert!(printed.contains("add.f64"), "{printed}");
+    assert!(printed.contains("132 rows") || printed.contains(&format!("{rows} rows")));
+    assert!(printed.contains('-'), "unsupported dtypes print as '-'");
+}
+
+#[test]
+fn arch_spec_round_trips_and_diffs_through_the_cli_surface() {
+    // `arch show --json` output is a loadable custom spec.
+    let spec = ArchSpec::volta();
+    let reloaded = ArchSpec::from_json_str(&spec.to_json_string()).unwrap();
+    assert_eq!(reloaded, spec);
+
+    // `arch diff volta ampere` surfaces the WMMA dtype gap.
+    let table = arch::diff_table(&ArchSpec::volta(), &ArchSpec::ampere());
+    for needle in ["wmma.bf16_f32", "wmma.tf32_f32", "sm_count"] {
+        assert!(table.contains(needle), "{needle} missing:\n{table}");
+    }
+}

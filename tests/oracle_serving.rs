@@ -93,6 +93,51 @@ fn static_prediction_matches_live_sim_for_every_table5_row() {
 }
 
 #[test]
+fn cross_arch_model_use_is_rejected() {
+    // A model extracted on one architecture must refuse an engine built
+    // for another — before any prediction can silently mix numbers.
+    let m = model();
+    assert_eq!(m.arch, "ampere", "extraction records the engine's arch");
+    let turing = ampere_ubench::arch::get("turing").unwrap().config.into_small();
+    let err = m.geometry_mismatch(&turing).expect("turing engine must be rejected");
+    assert!(err.contains("turing"), "{err}");
+
+    // The oracle-level startup check fires on the same mismatch…
+    let o = LatencyOracle::with_engine(m.clone(), Engine::new(turing));
+    assert!(o.config_mismatch().is_some());
+
+    // …and same-arch use stays accepted (the baseline every other test
+    // in this file relies on).
+    assert!(m.geometry_mismatch(&AmpereConfig::small()).is_none());
+}
+
+#[test]
+fn server_routes_requests_by_arch() {
+    let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").expect("bind port 0");
+    let handle = server.spawn().expect("spawn");
+    let mut c = Client::connect(handle.addr());
+
+    // Explicit arch matching the hosted model answers normally.
+    let v = c.roundtrip(r#"{"mode":"predict","instr":"add.u32","arch":"ampere","id":1}"#);
+    assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{v:?}");
+
+    // An unhosted arch earns an error naming what is hosted.
+    let v = c.roundtrip(r#"{"mode":"predict","instr":"add.u32","arch":"volta","id":2}"#);
+    assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "{v:?}");
+    let err = v.get("error").and_then(Value::as_str).unwrap();
+    assert!(err.contains("volta") && err.contains("ampere"), "{err}");
+    assert_eq!(v.get("id").and_then(Value::as_u64), Some(2));
+
+    // stats advertises the hosted architectures.
+    let v = c.roundtrip(r#"{"mode":"stats"}"#);
+    let archs = v.get("archs").and_then(Value::as_arr).unwrap();
+    assert_eq!(archs.len(), 1);
+    assert_eq!(archs[0].as_str(), Some("ampere"));
+
+    handle.stop();
+}
+
+#[test]
 fn prediction_cache_serves_repeats_without_recomputing() {
     let o = oracle();
     let src = alu::kernel_for(&registry::find("add.u32").unwrap(), false);
