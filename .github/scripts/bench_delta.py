@@ -16,7 +16,7 @@ import os
 import sys
 
 REGRESSION_PCT = 25.0
-FILES = ("BENCH_campaign.json", "BENCH_oracle.json")
+FILES = ("BENCH_campaign.json", "BENCH_oracle.json", "BENCH_throughput.json")
 
 
 def load_series(path):

@@ -1,0 +1,39 @@
+//! Bench for the multi-warp throughput engine (ISSUE 5): the full
+//! sweep — every Table V registry row plus every supported WMMA dtype,
+//! each recorded once on the single-warp simulator and replayed at
+//! 1..32 resident warps — timed per built-in architecture, plus the
+//! warm-engine steady state where every kernel is cache-served and
+//! every simulator/scheduler pooled.
+//!
+//! Emits `BENCH_throughput.json` (runs/median/p95 per series) for the
+//! cross-PR trajectory check in `.github/scripts/bench_delta.py` and
+//! the nightly per-arch sweep artifact.
+
+use ampere_ubench::arch;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::microbench::throughput::{run_sweep_with, DEFAULT_WARP_COUNTS};
+use ampere_ubench::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::from_args("throughput");
+
+    for name in ["ampere", "volta", "turing"] {
+        let cfg = arch::get(name).expect("builtin preset").config.into_small();
+        let engine = Engine::new(cfg);
+        b.bench(&format!("throughput_sweep_{name}"), || {
+            let rows = run_sweep_with(black_box(&engine), &DEFAULT_WARP_COUNTS).unwrap();
+            assert!(rows.len() > 100, "sweep lost rows: {}", rows.len());
+            rows.len()
+        });
+    }
+
+    // Steady state: a warm ampere engine re-swept (kernels cached,
+    // simulators + warp schedulers recycled).
+    let engine = Engine::new(arch::get("ampere").unwrap().config.into_small());
+    run_sweep_with(&engine, &DEFAULT_WARP_COUNTS).unwrap();
+    b.bench("throughput_sweep_warm", || {
+        run_sweep_with(black_box(&engine), &DEFAULT_WARP_COUNTS).unwrap().len()
+    });
+
+    b.finish();
+}

@@ -170,7 +170,10 @@ impl ArchSpec {
             let t = c.pipe(p);
             pipes = pipes.set(
                 pipe_key(p),
-                Value::obj().set("occupancy", t.occupancy).set("latency", t.latency),
+                Value::obj()
+                    .set("occupancy", t.occupancy)
+                    .set("latency", t.latency)
+                    .set("ports", t.ports),
             );
         }
         let m = &c.memory;
@@ -181,6 +184,7 @@ impl ArchSpec {
             .set("clock_read_occupancy", c.clock_read_occupancy)
             .set("cold_start_extra", c.cold_start_extra)
             .set("depbar_stall", c.depbar_stall)
+            .set("issue_width", c.issue_width)
             .set("pipes", pipes)
             .set(
                 "memory",
@@ -252,6 +256,10 @@ impl ArchSpec {
         c.clock_read_occupancy = need_u64(v, "clock_read_occupancy")?;
         c.cold_start_extra = need_u64(v, "cold_start_extra")?;
         c.depbar_stall = need_u64(v, "depbar_stall")?;
+        // Throughput-scheduler knobs: optional with the neutral default
+        // of 1, so specs written before the multi-warp engine still load
+        // (1 is not an Ampere-specific value — every preset uses it).
+        c.issue_width = v.get("issue_width").and_then(Value::as_u64).unwrap_or(1);
 
         let pipes = v.get("pipes").ok_or("arch json: missing \"pipes\" object")?;
         for p in ALL_PIPES {
@@ -259,8 +267,11 @@ impl ArchSpec {
             let t = pipes
                 .get(key)
                 .ok_or_else(|| format!("arch json: pipes missing {key:?}"))?;
-            *pipe_mut(&mut c, p) =
-                PipeTiming::new(need_u64(t, "occupancy")?, need_u64(t, "latency")?);
+            *pipe_mut(&mut c, p) = PipeTiming::with_ports(
+                need_u64(t, "occupancy")?,
+                need_u64(t, "latency")?,
+                t.get("ports").and_then(Value::as_u64).unwrap_or(1),
+            );
         }
 
         let m = v.get("memory").ok_or("arch json: missing \"memory\" object")?;
@@ -340,11 +351,13 @@ impl ArchSpec {
             ("clock_read_occupancy".into(), c.clock_read_occupancy.to_string()),
             ("cold_start_extra".into(), c.cold_start_extra.to_string()),
             ("depbar_stall".into(), c.depbar_stall.to_string()),
+            ("issue_width".into(), c.issue_width.to_string()),
         ];
         for p in ALL_PIPES {
             let t = c.pipe(p);
             out.push((format!("pipe.{}.occupancy", pipe_key(p)), t.occupancy.to_string()));
             out.push((format!("pipe.{}.latency", pipe_key(p)), t.latency.to_string()));
+            out.push((format!("pipe.{}.ports", pipe_key(p)), t.ports.to_string()));
         }
         let m = &c.memory;
         for (k, v) in [
@@ -586,6 +599,27 @@ mod tests {
         // Self-diff is empty.
         assert!(diff(&ArchSpec::ampere(), &ArchSpec::ampere()).is_empty());
         assert!(diff_table(&ArchSpec::ampere(), &ArchSpec::ampere()).contains("identical"));
+    }
+
+    #[test]
+    fn throughput_knobs_round_trip_and_default_leniently() {
+        // Non-default port widths / issue width survive the JSON trip.
+        let mut spec = ArchSpec::ampere();
+        spec.config.arch_name = "wide".into();
+        spec.config.int_pipe.ports = 2;
+        spec.config.issue_width = 2;
+        let back = ArchSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back, spec);
+
+        // A spec written before the multi-warp engine (no issue_width
+        // field) still loads, with the neutral default of 1.
+        let mut v = ArchSpec::turing().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.remove("issue_width");
+        }
+        let loaded = ArchSpec::from_json_str(&to_string_pretty(&v)).unwrap();
+        assert_eq!(loaded.config.issue_width, 1);
+        assert!(loaded.flatten().iter().any(|(k, v)| k == "pipe.fp64.ports" && v == "1"));
     }
 
     #[test]

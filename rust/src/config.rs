@@ -32,11 +32,27 @@ pub struct PipeTiming {
     pub occupancy: u64,
     /// Issue-to-result latency (dependent-use distance).
     pub latency: u64,
+    /// Parallel issue ports of this pipe per SM sub-partition.  The
+    /// single-warp latency simulator never queues two instructions on
+    /// one pipe closer than `occupancy`, so one port is always enough
+    /// there; the multi-warp throughput scheduler
+    /// ([`crate::sim::throughput`]) arbitrates N resident warps over
+    /// these ports, so the pipe's peak issue rate is
+    /// `ports / occupancy` warp-instructions per cycle (e.g. Turing's
+    /// 1-port, occupancy-16 fp64 pipe is the paper-lineage "1/32 rate").
+    pub ports: u64,
 }
 
 impl PipeTiming {
     pub const fn new(occupancy: u64, latency: u64) -> Self {
-        Self { occupancy, latency }
+        Self { occupancy, latency, ports: 1 }
+    }
+
+    /// A pipe with more than one issue port (custom specs; every
+    /// built-in preset models the one port per sub-partition the
+    /// dissection literature reports).
+    pub const fn with_ports(occupancy: u64, latency: u64, ports: u64) -> Self {
+        Self { occupancy, latency, ports }
     }
 }
 
@@ -196,6 +212,13 @@ pub struct AmpereConfig {
     /// Stall cycles of the scheduling barrier ptxas inserts between
     /// 32-bit clock reads (Fig. 4a: CPI 13 vs 2) — SASS `DEPBAR`.
     pub depbar_stall: u64,
+    /// Warp-scheduler issue slots per cycle per SM sub-partition.  The
+    /// single-warp simulator's 1-cycle dispatch skew is this field's
+    /// value of 1; the multi-warp throughput scheduler enforces it
+    /// across *all* resident warps, so total issue rate can never
+    /// exceed `issue_width` instructions per cycle however many warps
+    /// are resident.
+    pub issue_width: u64,
     /// Per-pipe steady-state timings.
     pub int_pipe: PipeTiming,
     pub fma_pipe: PipeTiming,
@@ -226,6 +249,7 @@ impl Default for AmpereConfig {
             clock_read_occupancy: 2,
             cold_start_extra: 1,
             depbar_stall: 31,
+            issue_width: 1,
             // (occupancy, latency); occupancy = 32 / lanes-per-partition.
             int_pipe: PipeTiming::new(2, 4),
             fma_pipe: PipeTiming::new(2, 4),
@@ -347,6 +371,20 @@ mod tests {
         assert_eq!(s.memory.l1_bytes, 32 * 1024);
         assert_eq!(s.arch_name, "custom");
         assert_eq!(s.quirks, c.quirks);
+    }
+
+    #[test]
+    fn issue_ports_default_to_one_per_pipe() {
+        // The throughput scheduler's per-arch knobs: one scheduler slot
+        // per cycle, one issue port per pipe, unless a spec says more.
+        let c = AmpereConfig::default();
+        assert_eq!(c.issue_width, 1);
+        for p in ALL_PIPES {
+            assert_eq!(c.pipe(p).ports, 1, "{p:?}");
+        }
+        let wide = PipeTiming::with_ports(2, 4, 3);
+        assert_eq!(wide.ports, 3);
+        assert_eq!(PipeTiming::new(2, 4), PipeTiming::with_ports(2, 4, 1));
     }
 
     #[test]

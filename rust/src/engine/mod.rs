@@ -15,7 +15,9 @@
 //! * [`pool`] — simulator pool with reset-on-return
 //!   ([`Simulator::reset`](crate::sim::Simulator::reset) is pinned
 //!   byte-identical to a fresh instance by the `sim::core` equivalence
-//!   test), so runs reuse allocations instead of rebuilding them;
+//!   test), so runs reuse allocations instead of rebuilding them — plus
+//!   the analogous pool of multi-warp throughput schedulers
+//!   ([`WarpSchedulerPool`]) the throughput campaign checks out;
 //! * [`queue`] — fine-grained work queue scheduling every table *row*
 //!   across all cores with deterministic result ordering;
 //! * [`campaign`] — the full paper evaluation expressed as one batch of
@@ -32,7 +34,7 @@ pub mod pool;
 pub mod queue;
 
 pub use cache::{CacheStats, CompiledKernel, KernelCache};
-pub use pool::{PoolStats, PooledSim, SimPool};
+pub use pool::{PoolStats, PooledSim, PooledWarpScheduler, SimPool, WarpSchedulerPool};
 
 use crate::config::AmpereConfig;
 use std::sync::Arc;
@@ -44,6 +46,7 @@ pub struct Engine {
     cfg: AmpereConfig,
     cache: KernelCache,
     pool: SimPool,
+    warp_pool: WarpSchedulerPool,
     workers: usize,
 }
 
@@ -59,6 +62,7 @@ impl Engine {
         Self {
             cache: KernelCache::with_quirks(cfg.quirks),
             pool: SimPool::new(cfg.clone()),
+            warp_pool: WarpSchedulerPool::new(cfg.clone()),
             cfg,
             workers: workers.max(1),
         }
@@ -92,6 +96,13 @@ impl Engine {
         self.pool.checkout()
     }
 
+    /// Check a multi-warp throughput scheduler out of its pool (reset +
+    /// returned on drop) — throughput jobs on the work queue reuse
+    /// scheduler buffers exactly like simulators.
+    pub fn warp_scheduler(&self) -> PooledWarpScheduler<'_> {
+        self.warp_pool.checkout()
+    }
+
     /// A brand-new, never-pooled simulator over the engine's config —
     /// the reference instance the differential fuzzer compares pooled
     /// runs against (`Simulator::reset` is *supposed* to make these
@@ -116,6 +127,10 @@ impl Engine {
 
     pub fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
+    }
+
+    pub fn warp_pool_stats(&self) -> PoolStats {
+        self.warp_pool.stats()
     }
 }
 

@@ -10,7 +10,7 @@
 //! returns it for the next job.
 
 use crate::config::AmpereConfig;
-use crate::sim::Simulator;
+use crate::sim::{Simulator, WarpScheduler};
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -106,6 +106,84 @@ impl Drop for PooledSim<'_> {
     }
 }
 
+/// Pool of multi-warp [`WarpScheduler`]s, mirroring [`SimPool`]'s
+/// checkout/reset-on-return shape: throughput jobs on the work queue
+/// reuse scheduler buffers instead of reallocating them, and
+/// `WarpScheduler::run` is a pure function of its inputs, so pooled and
+/// fresh instances are indistinguishable (the fuzz harness's throughput
+/// family cross-checks exactly that).
+pub struct WarpSchedulerPool {
+    cfg: AmpereConfig,
+    idle: Mutex<Vec<WarpScheduler>>,
+    created: AtomicU64,
+    reused: AtomicU64,
+}
+
+impl WarpSchedulerPool {
+    pub fn new(cfg: AmpereConfig) -> Self {
+        Self {
+            cfg,
+            idle: Mutex::new(Vec::new()),
+            created: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+        }
+    }
+
+    pub fn checkout(&self) -> PooledWarpScheduler<'_> {
+        let recycled = self.idle.lock().unwrap().pop();
+        let sched = match recycled {
+            Some(s) => {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                self.created.fetch_add(1, Ordering::Relaxed);
+                WarpScheduler::new(&self.cfg)
+            }
+        };
+        PooledWarpScheduler { pool: self, sched: Some(sched) }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            created: self.created.load(Ordering::Relaxed),
+            reused: self.reused.load(Ordering::Relaxed),
+            idle: self.idle.lock().unwrap().len(),
+        }
+    }
+}
+
+/// RAII checkout guard for a pooled [`WarpScheduler`].
+pub struct PooledWarpScheduler<'a> {
+    pool: &'a WarpSchedulerPool,
+    sched: Option<WarpScheduler>,
+}
+
+impl Deref for PooledWarpScheduler<'_> {
+    type Target = WarpScheduler;
+
+    fn deref(&self) -> &WarpScheduler {
+        self.sched.as_ref().expect("scheduler present until drop")
+    }
+}
+
+impl DerefMut for PooledWarpScheduler<'_> {
+    fn deref_mut(&mut self) -> &mut WarpScheduler {
+        self.sched.as_mut().expect("scheduler present until drop")
+    }
+}
+
+impl Drop for PooledWarpScheduler<'_> {
+    fn drop(&mut self) {
+        if let Some(mut sched) = self.sched.take() {
+            sched.reset();
+            if let Ok(mut idle) = self.pool.idle.lock() {
+                idle.push(sched);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +221,35 @@ mod tests {
         };
         assert_eq!(first, second, "recycled run must equal the first");
         assert_eq!(pool.stats().created, 1);
+    }
+
+    #[test]
+    fn warp_scheduler_pool_recycles_and_stays_deterministic() {
+        use crate::sass::TraceRecorder;
+        use crate::sim::WarpTrace;
+
+        let cfg = AmpereConfig::a100();
+        let mut t = TraceRecorder::new();
+        t.record_issue(0, "CS2R", 2, 2, crate::config::Pipe::Special, 2, true);
+        t.record_issue(1, "IADD", 4, 8, crate::config::Pipe::Int, 2, false);
+        t.record_issue(2, "FADD", 6, 10, crate::config::Pipe::Fma, 2, false);
+        t.record_issue(3, "CS2R", 14, 14, crate::config::Pipe::Special, 2, true);
+        let wt = WarpTrace::from_trace(&t, &cfg).unwrap();
+
+        let pool = WarpSchedulerPool::new(cfg.clone());
+        let first = {
+            let mut s = pool.checkout();
+            s.run(&wt, 8)
+        };
+        let recycled = {
+            let mut s = pool.checkout();
+            s.run(&wt, 8)
+        };
+        let fresh = WarpScheduler::new(&cfg).run(&wt, 8);
+        assert_eq!(first, recycled, "recycled scheduler must match");
+        assert_eq!(first, fresh, "pooled must equal fresh");
+        let s = pool.stats();
+        assert_eq!((s.created, s.reused, s.idle), (1, 1, 1));
     }
 
     #[test]

@@ -20,7 +20,12 @@
 //!   leaked state through `reset`;
 //! * path 3 failing, or (on the predictor-exact families) disagreeing
 //!   with the measured CPI, is [`DivergenceKind::PredictorError`] /
-//!   [`DivergenceKind::PredictorMismatch`].
+//!   [`DivergenceKind::PredictorMismatch`];
+//! * on the `throughput` family the traces of paths 1 and 2 are
+//!   additionally distilled into multi-warp schedules and replayed on a
+//!   *pooled* vs. a *fresh* [`WarpScheduler`](crate::sim::WarpScheduler)
+//!   across the warp sweep — any disagreement is
+//!   [`DivergenceKind::ThroughputMismatch`].
 //!
 //! On failure the case is *seed-minimized* — regenerated at shrinking
 //! size budgets until the smallest kernel that still shows the same
@@ -51,6 +56,10 @@ pub enum DivergenceKind {
     PredictorError,
     /// Predictor-exact family: predicted CPI != measured CPI.
     PredictorMismatch,
+    /// Throughput family: warp traces distilled from the pooled and
+    /// fresh simulators differ, or a pooled multi-warp scheduler
+    /// replayed a trace differently from a fresh one.
+    ThroughputMismatch,
 }
 
 impl DivergenceKind {
@@ -62,6 +71,7 @@ impl DivergenceKind {
             DivergenceKind::SimFailure => "sim-failure",
             DivergenceKind::PredictorError => "predictor-error",
             DivergenceKind::PredictorMismatch => "predictor-mismatch",
+            DivergenceKind::ThroughputMismatch => "throughput-mismatch",
         }
     }
 }
@@ -259,6 +269,49 @@ pub fn run_case(
         ));
     }
 
+    // Throughput family: the fourth path.  Distill both simulators'
+    // traces into warp schedules (they must agree — gaps and port
+    // metadata included, a stricter check than the first-instruction
+    // mapping above) and replay them on a pooled scheduler vs. a fresh
+    // one across the warp sweep.
+    if case.family == gen::Family::Throughput {
+        let wt_pool = crate::sim::WarpTrace::from_trace(&pooled.trace, engine.cfg());
+        let wt_fresh = crate::sim::WarpTrace::from_trace(&fresh.trace, engine.cfg());
+        let (wt_pool, wt_fresh) = match (wt_pool, wt_fresh) {
+            (Ok(a), Ok(b)) => (a, b),
+            (Err(e), _) | (_, Err(e)) => {
+                return Err(Divergence::new(
+                    DivergenceKind::ThroughputMismatch,
+                    format!("warp-trace distillation failed: {e}"),
+                ))
+            }
+        };
+        if wt_pool != wt_fresh {
+            return Err(Divergence::new(
+                DivergenceKind::ThroughputMismatch,
+                format!(
+                    "warp traces differ: pooled Δ{} ({} steps) vs fresh Δ{} ({} steps)",
+                    wt_pool.delta_1w,
+                    wt_pool.steps.len(),
+                    wt_fresh.delta_1w,
+                    wt_fresh.steps.len()
+                ),
+            ));
+        }
+        let mut pooled_sched = engine.warp_scheduler();
+        let mut fresh_sched = crate::sim::WarpScheduler::new(engine.cfg());
+        for warps in [1u32, 3, 8, 32] {
+            let a = pooled_sched.run(&wt_pool, warps);
+            let b = fresh_sched.run(&wt_pool, warps);
+            if a != b {
+                return Err(Divergence::new(
+                    DivergenceKind::ThroughputMismatch,
+                    format!("{warps}-warp replay: pooled {a:?} vs fresh {b:?}"),
+                ));
+            }
+        }
+    }
+
     let n = body.len() as u64;
     let c = &r_pool.clock_reads;
     let cpi = if bracketed && c.len() >= 2 {
@@ -374,6 +427,7 @@ mod tests {
             DivergenceKind::SimFailure,
             DivergenceKind::PredictorError,
             DivergenceKind::PredictorMismatch,
+            DivergenceKind::ThroughputMismatch,
         ];
         let names: Vec<_> = all.iter().map(|k| k.name()).collect();
         let mut dedup = names.clone();
@@ -416,6 +470,23 @@ mod tests {
         };
         let d = run_case(&engine, &model, &case).unwrap_err();
         assert_eq!(d.kind, DivergenceKind::PredictorMismatch, "{d:?}");
+    }
+
+    #[test]
+    fn throughput_family_cases_pass_all_four_paths() {
+        let engine = Engine::new(AmpereConfig::a100());
+        let rows = crate::microbench::registry::table5();
+        let row = rows.iter().find(|r| r.name == "mul.lo.u32").unwrap();
+        let case = FuzzCase {
+            seed: 0,
+            family: super::super::gen::Family::Throughput,
+            label: "throughput[mul.lo.u32]".into(),
+            src: crate::microbench::alu::kernel_for(row, false),
+            predict_exact: false,
+        };
+        run_case(&engine, &tiny_model(), &case).unwrap();
+        // The scheduler pool was actually exercised.
+        assert!(engine.warp_pool_stats().created >= 1);
     }
 
     #[test]

@@ -5,6 +5,10 @@
 //! what makes reproducers replayable (`repro fuzz --seed <s> --cases 1`)
 //! and shrinking meaningful (regenerate at a smaller size budget, keep
 //! the smallest case that still diverges — see [`crate::fuzz::diff`]).
+//! The replay contract is *per build*: extending the grammar (a new
+//! family, new registry rows) reshuffles what a given seed draws, so
+//! replay a recorded reproducer against the revision that produced it
+//! (the dumped `.ptx` itself is the cross-version artifact).
 //!
 //! Families:
 //!
@@ -28,6 +32,9 @@
 //!   V's `mov.u32 clock` row does the same).
 //! * [`Family::Wmma`] — Fig.-5 tensor-core kernels over a random dtype
 //!   and iteration count.
+//! * [`Family::Throughput`] — `mixed`-shaped windows the harness
+//!   additionally distills into warp traces and replays on the
+//!   multi-warp throughput scheduler, pooled vs. fresh.
 //!
 //! Every generated kernel carries protocol clock brackets, so all three
 //! differential paths (pooled engine, fresh simulator, static
@@ -49,6 +56,12 @@ pub enum Family {
     Memory,
     MultiWindow,
     Wmma,
+    /// Mixed-grammar windows that the differential harness additionally
+    /// runs through the multi-warp throughput engine: the warp traces
+    /// distilled from the pooled and fresh simulators must agree, and a
+    /// pooled [`WarpScheduler`](crate::sim::WarpScheduler) must replay
+    /// them identically to a fresh one at every swept warp count.
+    Throughput,
 }
 
 impl Family {
@@ -60,17 +73,19 @@ impl Family {
             Family::Memory => "memory",
             Family::MultiWindow => "multi-window",
             Family::Wmma => "wmma",
+            Family::Throughput => "throughput",
         }
     }
 }
 
-pub const ALL_FAMILIES: [Family; 6] = [
+pub const ALL_FAMILIES: [Family; 7] = [
     Family::Alu,
     Family::AluDep,
     Family::Mixed,
     Family::Memory,
     Family::MultiWindow,
     Family::Wmma,
+    Family::Throughput,
 ];
 
 /// One generated kernel.
@@ -129,6 +144,12 @@ pub fn generate_for(seed: u64, size: u32, wmma_dtypes: &[WmmaDtype]) -> FuzzCase
         Family::Memory => gen_memory(&mut rng, size),
         Family::MultiWindow => gen_multi_window(&mut rng, size),
         Family::Wmma => gen_wmma(&mut rng, wmma_dtypes),
+        Family::Throughput => {
+            // Same straight-line bracketed grammar as `mixed` — the
+            // family differs in what the harness checks, not in shape.
+            let (label, src, _) = gen_mixed(&mut rng, size);
+            (label.replacen("mixed", "throughput", 1), src, false)
+        }
     };
     FuzzCase { seed, family, label, src, predict_exact }
 }

@@ -8,6 +8,7 @@
 //! ```text
 //! repro campaign            # everything (Tables I–V, Fig. 4, insights)
 //! repro table1 … table5     # one experiment
+//! repro throughput          # multi-warp achieved-IPC sweep
 //! repro fig4 | fig6-trace | insights | movm
 //! repro validate-oracle     # sim TC numerics vs PJRT/Pallas artifacts
 //! repro show-kernel add.u32 # print a generated microbenchmark kernel
@@ -22,13 +23,13 @@
 //! flags: --small (scaled caches), --json, --dependent, --faithful,
 //!        --arch <name|spec.json>, --model <path> (repeatable for
 //!        serve), --out <path>, --port <n>, --seed <s>,
-//!        --cases <n>, --update
+//!        --cases <n>, --warps <list>, --update
 //! ```
 
 use ampere_ubench::arch::{self, ArchSpec};
 use ampere_ubench::config::AmpereConfig;
 use ampere_ubench::engine::Engine;
-use ampere_ubench::microbench::{alu, insights, memory, registry, wmma};
+use ampere_ubench::microbench::{self, alu, insights, memory, registry, wmma};
 use ampere_ubench::oracle::{serve, LatencyModel, LatencyOracle, OracleSet, Server};
 use ampere_ubench::tensor::{movm_plan, ALL_DTYPES};
 use ampere_ubench::util::json::{to_string_pretty, Value};
@@ -53,6 +54,14 @@ COMMANDS:
   table3                Table III: tensor-core latency and throughput
   table4 [--faithful]   Table IV: memory latencies (pointer chasing)
   table5                Table V: full PTX→SASS mapping + cycles sweep
+  throughput [--warps <w1,w2,…>]
+                        multi-warp throughput: for every Table V row and
+                        supported WMMA dtype, replay the measured window
+                        at each resident-warp count (default
+                        1,2,4,8,16,32) on the deterministic round-robin
+                        warp scheduler and report achieved IPC, peak IPC
+                        and warps-to-saturation.  The 1-warp column's
+                        CPI is byte-identical to the latency path.
   fig4                  Fig. 4: 32- vs 64-bit clock registers
   fig6-trace            Fig. 6: dynamic SASS of one TC instruction
   insights              Insights 1–3 (pipes, signedness, init style)
@@ -67,8 +76,10 @@ COMMANDS:
                         print cross-arch delta tables: every Table V
                         row's CPI per arch (Δ vs the first), Table IV
                         per level, Table III per dtype ('-' where a
-                        generation lacks the dtype).  --json emits the
-                        same as compare_json.
+                        generation lacks the dtype), and the multi-warp
+                        throughput sweep's peak IPC / warps-to-
+                        saturation per arch (Δ in milli-IPC).  --json
+                        emits the same as compare_json.
   validate-oracle       sim TC numerics vs the PJRT/Pallas artifacts
   show-kernel <name> [--dependent]
                         print a generated microbenchmark kernel
@@ -108,21 +119,26 @@ COMMANDS:
                         snapshot diff before committing (aggregate
                         floors are preserved across --update).
 
---json applies to table1…table5, fig4, insights, extract-model,
-predict, fuzz, conformance, arch list/show/diff and compare.
+--json applies to table1…table5, throughput, fig4, insights,
+extract-model, predict, fuzz, conformance, arch list/show/diff and
+compare.
 
 Property-based tests share the same seeds: FUZZ_CASES=<n> deepens every
 `util::prng::check` sweep (CI runs 200; local `cargo test` stays fast).
 
 SERVE WIRE PROTOCOL (one JSON value per line, both directions):
-  request   {\"id\": 7, \"mode\": \"predict|simulate|check|stats|ping\",
+  request   {\"id\": 7,
+             \"mode\": \"predict|simulate|check|throughput|stats|ping\",
              \"kernel\": \"<PTX>\" | \"instr\": \"add.u32\",
              \"dependent\": true, \"arch\": \"turing\"}
   batch     a JSON array of requests -> one array of responses, same
             order, fanned out across the worker pool
   response  {\"ok\": true, \"id\": 7, ...} — predict adds cpi/cycles/n/
             unresolved/cached; simulate adds cpi/delta/n/mapping; check
-            adds predicted_cpi/simulated_cpi/matches
+            adds predicted_cpi/simulated_cpi/matches; throughput takes
+            \"instr\" (a registry row name or wmma dtype key) and adds
+            cpi_1w/peak_ipc_milli/peak_ipc/warps_to_peak/points — the
+            model's extracted multi-warp curve
 ";
 
 struct Args {
@@ -141,6 +157,9 @@ struct Args {
     port: Option<u16>,
     seed: Option<u64>,
     cases: Option<u64>,
+    /// `--warps`: comma-separated resident-warp counts for
+    /// `throughput` (default 1,2,4,8,16,32).
+    warps: Option<String>,
     cmd: String,
     rest: Vec<String>,
 }
@@ -158,6 +177,7 @@ fn parse_args() -> Args {
         port: None,
         seed: None,
         cases: None,
+        warps: None,
         cmd: String::new(),
         rest: Vec::new(),
     };
@@ -211,6 +231,10 @@ fn parse_args() -> Args {
                 }));
                 i += 1;
             }
+            "--warps" => {
+                a.warps = Some(need_value(&argv, i));
+                i += 1;
+            }
             "--update" => a.update = true,
             "-h" | "--help" => {
                 print!("{USAGE}");
@@ -229,6 +253,34 @@ fn parse_args() -> Args {
 fn config_for(arch: Option<&str>, small: bool) -> anyhow::Result<AmpereConfig> {
     let spec = arch::get(arch.unwrap_or("ampere")).map_err(anyhow::Error::msg)?;
     Ok(if small { spec.config.into_small() } else { spec.config })
+}
+
+/// Parse `--warps` (comma-separated resident-warp counts), defaulting
+/// to the standard sweep.
+fn warp_counts_for(warps: Option<&str>) -> anyhow::Result<Vec<u32>> {
+    let Some(list) = warps else {
+        return Ok(microbench::throughput::DEFAULT_WARP_COUNTS.to_vec());
+    };
+    let counts: Vec<u32> = list
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.parse::<u32>()
+                .map_err(|_| anyhow::anyhow!("--warps wants numbers, got {s:?}"))
+                .and_then(|w| {
+                    if (1..=1024).contains(&w) {
+                        Ok(w)
+                    } else {
+                        anyhow::bail!("--warps counts must be 1..=1024, got {w}")
+                    }
+                })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    if counts.is_empty() {
+        anyhow::bail!("--warps needs at least one count (e.g. --warps 1,4,16)");
+    }
+    Ok(counts)
 }
 
 /// Load the model from `--model` (exactly one for the single-model
@@ -354,6 +406,23 @@ fn main() -> anyhow::Result<()> {
                 println!("{}", to_string_pretty(&report::table5_json(&t)));
             } else {
                 println!("{}", report::table5(&t));
+            }
+        }
+        "throughput" => {
+            let counts = warp_counts_for(args.warps.as_deref())?;
+            let rows = microbench::throughput::run_sweep_with(&engine, &counts)
+                .map_err(anyhow::Error::msg)?;
+            if args.json {
+                println!("{}", to_string_pretty(&report::throughput_json(&rows)));
+            } else {
+                print!("{}", report::throughput(&rows));
+                let ws = engine.warp_pool_stats();
+                println!(
+                    "warp schedulers: {} created, {} reuses ({} workers)",
+                    ws.created,
+                    ws.reused,
+                    engine.workers()
+                );
             }
         }
         "fig4" => {
@@ -656,8 +725,10 @@ fn main() -> anyhow::Result<()> {
             if names.len() < 2 {
                 anyhow::bail!("compare needs at least two architectures, got {list:?}");
             }
+            let counts = warp_counts_for(args.warps.as_deref())?;
             let mut specs: Vec<ArchSpec> = Vec::new();
             let mut campaigns = Vec::new();
+            let mut sweeps = Vec::new();
             for name in &names {
                 let spec = arch::get(name).map_err(anyhow::Error::msg)?;
                 let cfg = if args.small {
@@ -669,16 +740,21 @@ fn main() -> anyhow::Result<()> {
                 let arch_engine = Engine::new(cfg);
                 campaigns
                     .push(harness::run_campaign_with(&arch_engine).map_err(anyhow::Error::msg)?);
+                sweeps.push(
+                    microbench::throughput::run_sweep_with(&arch_engine, &counts)
+                        .map_err(anyhow::Error::msg)?,
+                );
                 specs.push(spec);
             }
             let results: Vec<report::ArchResults<'_>> = specs
                 .iter()
-                .zip(&campaigns)
-                .map(|(s, c)| report::ArchResults {
+                .zip(campaigns.iter().zip(&sweeps))
+                .map(|(s, (c, t))| report::ArchResults {
                     arch: s.name(),
                     table5: c.table5.as_slice(),
                     table4: c.table4.as_slice(),
                     table3: c.table3.as_slice(),
+                    throughput: t.as_slice(),
                 })
                 .collect();
             if args.json {

@@ -15,6 +15,7 @@ pub mod alu;
 pub mod insights;
 pub mod memory;
 pub mod registry;
+pub mod throughput;
 pub mod wmma;
 
 use crate::config::AmpereConfig;

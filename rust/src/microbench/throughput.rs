@@ -1,0 +1,223 @@
+//! The multi-warp throughput campaign (`repro throughput`).
+//!
+//! For every Table V registry row (independent variant) and every WMMA
+//! dtype the architecture supports, this sweep:
+//!
+//! 1. runs the row's measurement kernel once on the engine's pooled
+//!    single-warp simulator (kernel served from the content-addressed
+//!    cache) and distills the measured window into a
+//!    [`WarpTrace`](crate::sim::WarpTrace);
+//! 2. replays it at each resident-warp count (default 1, 2, 4, …, 32)
+//!    on a pooled multi-warp [`WarpScheduler`](crate::sim::WarpScheduler);
+//! 3. reports achieved IPC per warp count, the peak, and
+//!    *warps-to-saturation* — the smallest swept count reaching ≥99% of
+//!    the peak.
+//!
+//! The 1-warp column's CPI equals the latency campaign's Table V CPI
+//! byte for byte (the replay anchor pinned by `tests/throughput.rs`),
+//! so the throughput tables extend the paper's data rather than
+//! re-measuring it.  Every job runs on the engine's row-level work
+//! queue, exactly like the latency campaign.
+
+use super::registry::{self, Row};
+use super::{alu, wmma, MEASUREMENT_PARAMS};
+use crate::config::AmpereConfig;
+use crate::engine::Engine;
+use crate::sim::WarpTrace;
+use crate::tensor::WmmaDtype;
+
+/// Default resident-warp sweep (powers of two through a full SM's
+/// worth of warps per sub-partition scheduler).
+pub const DEFAULT_WARP_COUNTS: [u32; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Achieved throughput at one resident-warp count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ThroughputPoint {
+    pub warps: u32,
+    /// Replay span in cycles (start to last closing marker/port idle).
+    pub cycles: u64,
+    /// PTX instructions completed across all warps.
+    pub instructions: u64,
+    /// Achieved IPC in integer milli-units.
+    pub ipc_milli: u64,
+}
+
+/// One instruction class's full warp sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThroughputRow {
+    /// Registry row name (`add.u32`) or WMMA dtype key (`f16_f16`).
+    pub name: String,
+    /// `"table5"` or `"wmma"`.
+    pub kind: &'static str,
+    /// Measured-window PTX instructions per warp (the protocol's *n*).
+    pub n: u64,
+    /// Single-warp CPI — byte-identical to the latency path.
+    pub cpi_1w: u64,
+    /// One point per swept warp count, in sweep order.
+    pub points: Vec<ThroughputPoint>,
+    /// Max achieved IPC over the sweep (milli-units).
+    pub peak_ipc_milli: u64,
+    /// Smallest swept warp count reaching ≥99% of the peak.
+    pub warps_to_peak: u32,
+}
+
+impl ThroughputRow {
+    pub fn peak_ipc(&self) -> f64 {
+        self.peak_ipc_milli as f64 / 1000.0
+    }
+}
+
+/// Sweep one kernel: record its window once, replay per warp count.
+pub fn measure_kernel_with(
+    engine: &Engine,
+    name: &str,
+    kind: &'static str,
+    src: &str,
+    warp_counts: &[u32],
+) -> Result<ThroughputRow, String> {
+    if warp_counts.is_empty() {
+        return Err(format!("{name}: empty warp-count sweep"));
+    }
+    let kernel = engine.compile(src).map_err(|e| format!("{name}: {e}"))?;
+    let trace = {
+        let mut sim = engine.simulator();
+        sim.run(&kernel.prog, &kernel.tp, MEASUREMENT_PARAMS)
+            .map_err(|e| format!("{name}: {e}"))?;
+        WarpTrace::from_trace(&sim.trace, engine.cfg()).map_err(|e| format!("{name}: {e}"))?
+    };
+    let mut sched = engine.warp_scheduler();
+    let points: Vec<ThroughputPoint> = warp_counts
+        .iter()
+        .map(|&w| {
+            let r = sched.run(&trace, w);
+            ThroughputPoint {
+                warps: r.warps,
+                cycles: r.cycles,
+                instructions: r.instructions,
+                ipc_milli: r.ipc_milli,
+            }
+        })
+        .collect();
+    let peak_ipc_milli = points.iter().map(|p| p.ipc_milli).max().unwrap_or(0);
+    // Smallest *count* (not first in sweep order — `--warps` accepts
+    // any order) reaching ≥99% of the peak.
+    let warps_to_peak = points
+        .iter()
+        .filter(|p| p.ipc_milli * 100 >= peak_ipc_milli * 99)
+        .map(|p| p.warps)
+        .min()
+        .unwrap_or(warp_counts[0]);
+    Ok(ThroughputRow {
+        name: name.to_string(),
+        kind,
+        n: trace.ptx_instrs,
+        cpi_1w: trace.cpi_1w,
+        points,
+        peak_ipc_milli,
+        warps_to_peak,
+    })
+}
+
+/// Sweep one Table V registry row (independent variant — the form whose
+/// CPI the paper tabulates).
+pub fn measure_row_with(
+    engine: &Engine,
+    row: &Row,
+    warp_counts: &[u32],
+) -> Result<ThroughputRow, String> {
+    measure_kernel_with(engine, row.name, "table5", &alu::kernel_for(row, false), warp_counts)
+}
+
+/// Sweep one WMMA dtype's Fig.-5 kernel (must be in the architecture's
+/// capability table, same contract as [`wmma::measure_with`]).
+pub fn measure_wmma_with(
+    engine: &Engine,
+    d: WmmaDtype,
+    warp_counts: &[u32],
+) -> Result<ThroughputRow, String> {
+    let cfg = engine.cfg();
+    if !cfg.supports_wmma(d) {
+        return Err(format!(
+            "{}: dtype not supported by the {} tensor core",
+            d.key(),
+            cfg.arch_name
+        ));
+    }
+    measure_kernel_with(
+        engine,
+        d.key(),
+        "wmma",
+        &wmma::fig5_kernel(d, wmma::ITERS),
+        warp_counts,
+    )
+}
+
+/// The full sweep: every registry row plus every supported WMMA dtype,
+/// one job per row on the engine's work queue, results in input order.
+pub fn run_sweep_with(
+    engine: &Engine,
+    warp_counts: &[u32],
+) -> Result<Vec<ThroughputRow>, String> {
+    type Job<'a> = Box<dyn FnOnce() -> Result<ThroughputRow, String> + Send + 'a>;
+    let mut jobs: Vec<Job<'_>> = Vec::new();
+    for row in registry::table5() {
+        jobs.push(Box::new(move || measure_row_with(engine, &row, warp_counts)));
+    }
+    for d in engine.cfg().wmma_dtypes.clone() {
+        jobs.push(Box::new(move || measure_wmma_with(engine, d, warp_counts)));
+    }
+    engine.run_all(jobs).into_iter().collect()
+}
+
+/// Transient-engine form of [`run_sweep_with`].
+pub fn run_sweep(cfg: &AmpereConfig, warp_counts: &[u32]) -> Result<Vec<ThroughputRow>, String> {
+    run_sweep_with(&Engine::new(cfg.clone()), warp_counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_u32_sweep_matches_the_latency_anchor_and_saturates() {
+        let engine = Engine::new(AmpereConfig::a100());
+        let rows = registry::table5();
+        let row = rows.iter().find(|r| r.name == "add.u32").unwrap();
+        let t = measure_row_with(&engine, row, &DEFAULT_WARP_COUNTS).unwrap();
+        assert_eq!(t.n, 3, "three protocol instances");
+        assert_eq!(t.cpi_1w, 2, "the paper's add.u32 CPI");
+        assert_eq!(t.points.len(), DEFAULT_WARP_COUNTS.len());
+        // Monotone, and saturating at the INT port rate (occ 2, one
+        // port → 0.5 IPC).
+        for pair in t.points.windows(2) {
+            assert!(pair[1].ipc_milli >= pair[0].ipc_milli, "{t:?}");
+        }
+        assert!((400..=500).contains(&t.peak_ipc_milli), "{}", t.peak_ipc_milli);
+        assert!(t.warps_to_peak >= 8, "one warp cannot saturate the pipe");
+    }
+
+    #[test]
+    fn wmma_sweep_respects_the_capability_table() {
+        let volta = crate::arch::ArchSpec::volta().config;
+        let engine = Engine::new(volta);
+        let err = measure_wmma_with(&engine, WmmaDtype::Tf32F32, &[1, 4]).unwrap_err();
+        assert!(err.contains("not supported"), "{err}");
+        let ok = measure_wmma_with(&engine, WmmaDtype::F16F16, &[1, 4]).unwrap();
+        assert_eq!(ok.kind, "wmma");
+        assert_eq!(ok.n, (wmma::CHAINS * wmma::ITERS) as u64);
+    }
+
+    #[test]
+    fn sweep_covers_registry_plus_wmma_in_order() {
+        let engine = Engine::new(AmpereConfig::small());
+        let counts = [1u32, 8];
+        let rows = run_sweep_with(&engine, &counts).unwrap();
+        let t5 = registry::table5();
+        assert_eq!(rows.len(), t5.len() + engine.cfg().wmma_dtypes.len());
+        for (r, reg) in rows.iter().zip(&t5) {
+            assert_eq!(r.name, reg.name, "registry order preserved");
+            assert_eq!(r.kind, "table5");
+        }
+        assert!(rows[t5.len()..].iter().all(|r| r.kind == "wmma"));
+    }
+}

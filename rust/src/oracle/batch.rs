@@ -134,6 +134,10 @@ pub enum Mode {
     /// Self-consistency: predict *and* simulate, report whether the
     /// CPIs agree.
     Check,
+    /// Multi-warp throughput curve from the model: peak IPC,
+    /// warps-to-saturation and the swept points for a registry row name
+    /// or WMMA dtype key (`"instr"`).
+    Throughput,
     /// Oracle / cache / engine statistics.
     Stats,
     Ping,
@@ -145,6 +149,7 @@ impl Mode {
             Mode::Predict => "predict",
             Mode::Simulate => "simulate",
             Mode::Check => "check",
+            Mode::Throughput => "throughput",
             Mode::Stats => "stats",
             Mode::Ping => "ping",
         }
@@ -195,6 +200,7 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
         None | Some("predict") => Mode::Predict,
         Some("simulate") => Mode::Simulate,
         Some("check") => Mode::Check,
+        Some("throughput") => Mode::Throughput,
         Some("stats") => Mode::Stats,
         Some("ping") => Mode::Ping,
         Some(other) => return Err(format!("unknown mode {other:?}")),
@@ -207,12 +213,30 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
     if kernel.is_none() && instr.is_none() && !matches!(mode, Mode::Stats | Mode::Ping) {
         return Err(format!("mode {:?} needs \"kernel\" or \"instr\"", mode.as_str()));
     }
+    if mode == Mode::Throughput && kernel.is_some() {
+        return Err(
+            "\"throughput\" serves the model's extracted curves; pass a registry row \
+             name or wmma dtype key via \"instr\", not a raw kernel"
+                .to_string(),
+        );
+    }
     let dependent = match v.get("dependent") {
         None => false,
         Some(d) => d
             .as_bool()
             .ok_or_else(|| "\"dependent\" must be a boolean".to_string())?,
     };
+    if dependent && mode == Mode::Throughput {
+        // The sweep measures the independent variant only; silently
+        // serving it for a dependent request would be the wrong curve
+        // with ok:true.  (An explicit `"dependent": false` is the same
+        // no-op default it is everywhere else.)
+        return Err(
+            "\"throughput\" curves are measured on the independent variant; \
+             \"dependent\": true does not apply"
+                .to_string(),
+        );
+    }
     if dependent && kernel.is_some() {
         return Err(
             "\"dependent\" only applies to \"instr\" requests (a raw kernel already \
@@ -331,6 +355,29 @@ fn handle_inner(
                 .set("simulated_cpi", c.simulated.cpi)
                 .set("matches", c.matches))
         }
+        Mode::Throughput => {
+            let name = req.instr.as_deref().ok_or("throughput requests take \"instr\"")?;
+            let e = oracle.model().throughput_entry(name)?;
+            Ok(ok_response(id, Mode::Throughput)
+                .set("name", name)
+                .set("kind", e.kind.as_str())
+                .set("n", e.n)
+                .set("cpi_1w", e.cpi_1w)
+                .set("peak_ipc_milli", e.peak_ipc_milli)
+                .set("peak_ipc", e.peak_ipc_milli as f64 / 1000.0)
+                .set("warps_to_peak", e.warps_to_peak)
+                .set(
+                    "points",
+                    Value::Arr(
+                        e.points
+                            .iter()
+                            .map(|(w, i)| {
+                                Value::obj().set("warps", *w).set("ipc_milli", *i)
+                            })
+                            .collect(),
+                    ),
+                ))
+        }
     }
 }
 
@@ -365,7 +412,9 @@ pub fn handle_batch(
                         .map(|src| !oracle.is_prediction_cached(&src))
                         .unwrap_or(false),
                 },
-                Mode::Stats | Mode::Ping => false,
+                // A throughput answer is a model lookup — cheaper than
+                // scheduling it.
+                Mode::Throughput | Mode::Stats | Mode::Ping => false,
             }
         }
         Err(_) => false,
@@ -464,8 +513,56 @@ mod tests {
             r#"{"kernel":42}"#,                             // wrong-typed kernel
             r#"{"kernel":"x","dependent":true}"#,           // flag needs instr
             r#"{"instr":"add.u32","arch":7}"#,              // wrong-typed arch
+            r#"{"mode":"throughput"}"#,                     // needs instr
+            r#"{"mode":"throughput","kernel":"x"}"#,        // no raw kernels
+            r#"{"mode":"throughput","instr":"add.u32","dependent":true}"#, // indep only
         ] {
             assert!(parse_request(&parse(bad).unwrap()).is_err(), "{bad}");
         }
+
+        let r = parse_request(
+            &parse(r#"{"mode":"throughput","instr":"add.u32"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(r.mode, Mode::Throughput);
+        // An explicit `"dependent": false` stays the no-op default it
+        // is for every other mode.
+        assert!(parse_request(
+            &parse(r#"{"mode":"throughput","instr":"add.u32","dependent":false}"#).unwrap()
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn throughput_mode_serves_the_model_curve() {
+        use crate::config::AmpereConfig;
+        use crate::engine::Engine;
+        use crate::oracle::{serve::OracleSet, LatencyOracle};
+        use std::sync::Arc;
+
+        let oracle = LatencyOracle::with_engine(
+            crate::oracle::model::tiny_model(),
+            Engine::new(AmpereConfig::a100()),
+        );
+        let set = OracleSet::single(Arc::new(oracle));
+        let v = crate::oracle::serve::respond(
+            &set,
+            r#"{"mode":"throughput","instr":"add.u32","id":5}"#,
+        );
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{v:?}");
+        assert_eq!(v.get("peak_ipc_milli").and_then(Value::as_u64), Some(480));
+        assert_eq!(v.get("warps_to_peak").and_then(Value::as_u64), Some(8));
+        assert_eq!(v.get("cpi_1w").and_then(Value::as_u64), Some(2));
+        assert_eq!(v.get("id").and_then(Value::as_u64), Some(5));
+        let points = v.get("points").and_then(Value::as_arr).unwrap();
+        assert_eq!(points.len(), 6);
+        assert_eq!(points[0].get("warps").and_then(Value::as_u64), Some(1));
+
+        // An entry outside the model is an error, not a fabrication.
+        let v = crate::oracle::serve::respond(
+            &set,
+            r#"{"mode":"throughput","instr":"div.u32"}"#,
+        );
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
     }
 }

@@ -33,7 +33,7 @@ pub mod predict;
 pub mod serve;
 
 pub use batch::{CacheCounters, LruCache, Mode, Request};
-pub use model::{InstrEntry, LatencyModel, WmmaEntry};
+pub use model::{InstrEntry, LatencyModel, ThroughputEntry, WmmaEntry};
 pub use predict::{InstrPrediction, Prediction, Resolution};
 pub use serve::{OracleSet, Server, ServerHandle};
 
@@ -323,7 +323,8 @@ impl LatencyOracle {
                     .set("arch", self.model.arch.as_str())
                     .set("instructions", self.model.instructions.len())
                     .set("memory_levels", self.model.memory.len())
-                    .set("wmma_dtypes", self.model.wmma.len()),
+                    .set("wmma_dtypes", self.model.wmma.len())
+                    .set("throughput_entries", self.model.throughput.len()),
             )
     }
 }

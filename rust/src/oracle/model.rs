@@ -13,6 +13,9 @@
 //!   deppable row), and the dynamic SASS mapping;
 //! * one latency per memory level (Table IV);
 //! * one [`WmmaEntry`] per tensor-core dtype (Table III);
+//! * one [`ThroughputEntry`] per registry row and supported WMMA dtype
+//!   — the multi-warp sweep's `(peak_ipc, warps_to_peak)` pair plus the
+//!   full achieved-IPC curve (the `"throughput"` wire mode's answers);
 //! * the protocol constants (clock overhead, instance count) and the
 //!   Table I cold-start curve.
 //!
@@ -53,6 +56,24 @@ pub struct InstrEntry {
     pub dep_cpi: Option<u64>,
     /// Dynamic SASS mapping (fallback lookup key).
     pub sass: String,
+}
+
+/// One instruction class's extracted multi-warp throughput curve: the
+/// `(peak_ipc, warps_to_peak)` pair the tentpole sweep measures, plus
+/// the full swept curve so serving can answer without re-simulation.
+/// IPC is integer milli-units throughout (exact JSON round-trip).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThroughputEntry {
+    /// `"table5"` or `"wmma"`.
+    pub kind: String,
+    /// Measured-window PTX instructions per warp.
+    pub n: u64,
+    /// Single-warp CPI (byte-identical to the latency path).
+    pub cpi_1w: u64,
+    pub peak_ipc_milli: u64,
+    pub warps_to_peak: u32,
+    /// `(warps, ipc_milli)` per swept count, in sweep order.
+    pub points: Vec<(u32, u64)>,
 }
 
 /// One tensor-core dtype's extracted timing (Table III).
@@ -96,13 +117,39 @@ pub struct LatencyModel {
     pub memory: BTreeMap<String, u64>,
     /// Per-dtype tensor-core entries keyed by `WmmaDtype::key()`.
     pub wmma: BTreeMap<String, WmmaEntry>,
+    /// Multi-warp throughput curves keyed by registry row name
+    /// (`add.u32`) or WMMA dtype key (`f16_f16`) — what the serving
+    /// layer's `"throughput"` mode answers from.  Empty in models saved
+    /// before the throughput engine (parsed leniently); re-extract to
+    /// populate.
+    pub throughput: BTreeMap<String, ThroughputEntry>,
 }
 
 impl LatencyModel {
-    /// Run the full campaign on `engine` and distill it into a model.
+    /// Run the full campaign on `engine` and distill it into a model,
+    /// including the multi-warp throughput sweep (the campaign tables
+    /// alone come from [`Self::from_campaign`]).
     pub fn extract(engine: &Engine) -> Result<LatencyModel, String> {
         let campaign = harness::run_campaign_with(engine)?;
-        Self::from_campaign(engine, &campaign)
+        let mut model = Self::from_campaign(engine, &campaign)?;
+        let sweep = crate::microbench::throughput::run_sweep_with(
+            engine,
+            &crate::microbench::throughput::DEFAULT_WARP_COUNTS,
+        )?;
+        for row in sweep {
+            model.throughput.insert(
+                row.name.clone(),
+                ThroughputEntry {
+                    kind: row.kind.to_string(),
+                    n: row.n,
+                    cpi_1w: row.cpi_1w,
+                    peak_ipc_milli: row.peak_ipc_milli,
+                    warps_to_peak: row.warps_to_peak,
+                    points: row.points.iter().map(|p| (p.warps, p.ipc_milli)).collect(),
+                },
+            );
+        }
+        Ok(model)
     }
 
     /// Distill an already-run campaign (the engine is still needed to
@@ -179,6 +226,25 @@ impl LatencyModel {
             instructions,
             memory,
             wmma,
+            throughput: BTreeMap::new(),
+        })
+    }
+
+    /// The throughput curve for a registry row name or WMMA dtype key,
+    /// or an error that says how to get one.
+    pub fn throughput_entry(&self, name: &str) -> Result<&ThroughputEntry, String> {
+        self.throughput.get(name).ok_or_else(|| {
+            if self.throughput.is_empty() {
+                "model carries no throughput table (extracted before the multi-warp \
+                 engine); re-run `repro extract-model`"
+                    .to_string()
+            } else {
+                format!(
+                    "no throughput entry for {name:?} ({} entries; registry row names \
+                     and wmma dtype keys are valid)",
+                    self.throughput.len()
+                )
+            }
         })
     }
 
@@ -257,6 +323,29 @@ impl LatencyModel {
                     .set("theoretical_tops", e.theoretical_tops),
             );
         }
+        let mut throughput = BTreeMap::new();
+        for (k, e) in &self.throughput {
+            throughput.insert(
+                k.clone(),
+                Value::obj()
+                    .set("kind", e.kind.as_str())
+                    .set("n", e.n)
+                    .set("cpi_1w", e.cpi_1w)
+                    .set("peak_ipc_milli", e.peak_ipc_milli)
+                    .set("warps_to_peak", e.warps_to_peak)
+                    .set(
+                        "points",
+                        Value::Arr(
+                            e.points
+                                .iter()
+                                .map(|(w, i)| {
+                                    Value::Arr(vec![Value::from(*w), Value::from(*i)])
+                                })
+                                .collect(),
+                        ),
+                    ),
+            );
+        }
         Value::obj()
             .set("arch", self.arch.as_str())
             .set(
@@ -275,6 +364,7 @@ impl LatencyModel {
             .set("instructions", Value::Obj(instrs))
             .set("memory", Value::Obj(mem))
             .set("wmma", Value::Obj(wmma))
+            .set("throughput", Value::Obj(throughput))
     }
 
     pub fn to_json_string(&self) -> String {
@@ -352,6 +442,40 @@ impl LatencyModel {
             );
         }
 
+        // Lenient: models saved before the throughput engine have no
+        // "throughput" object and load with an empty map (the serving
+        // layer's throughput mode then points at re-extraction).
+        let mut throughput = BTreeMap::new();
+        if let Some(tmap) = v.get("throughput").and_then(Value::as_obj) {
+            for (key, e) in tmap {
+                let points = e
+                    .get("points")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| format!("model json: bad throughput points for {key}"))?
+                    .iter()
+                    .map(|p| {
+                        let w = p.idx(0).and_then(Value::as_u64);
+                        let i = p.idx(1).and_then(Value::as_u64);
+                        match (w, i) {
+                            (Some(w), Some(i)) => Ok((w as u32, i)),
+                            _ => Err(format!("model json: bad throughput point in {key}")),
+                        }
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                throughput.insert(
+                    key.clone(),
+                    ThroughputEntry {
+                        kind: need_str(e, "kind")?,
+                        n: need_u64(e, "n")?,
+                        cpi_1w: need_u64(e, "cpi_1w")?,
+                        peak_ipc_milli: need_u64(e, "peak_ipc_milli")?,
+                        warps_to_peak: need_u64(e, "warps_to_peak")? as u32,
+                        points,
+                    },
+                );
+            }
+        }
+
         let config = v
             .get("config")
             .ok_or("model json: missing config object")?;
@@ -373,6 +497,7 @@ impl LatencyModel {
             instructions,
             memory,
             wmma,
+            throughput,
         })
     }
 
@@ -443,6 +568,18 @@ pub(crate) fn tiny_model() -> LatencyModel {
                 theoretical_tops: 312.0,
             },
         );
+        let mut throughput = BTreeMap::new();
+        throughput.insert(
+            "add.u32".to_string(),
+            ThroughputEntry {
+                kind: "table5".into(),
+                n: 3,
+                cpi_1w: 2,
+                peak_ipc_milli: 480,
+                warps_to_peak: 8,
+                points: vec![(1, 300), (2, 375), (4, 440), (8, 480), (16, 480), (32, 480)],
+            },
+        );
         LatencyModel {
             arch: "ampere".into(),
             l1_bytes: 128 * 1024,
@@ -454,6 +591,7 @@ pub(crate) fn tiny_model() -> LatencyModel {
             instructions,
             memory,
             wmma,
+            throughput,
         }
 }
 
@@ -503,6 +641,33 @@ mod tests {
         legacy.arch = "a100-sim".into();
         assert_eq!(legacy.arch_normalized(), "ampere");
         assert!(legacy.geometry_mismatch(&ampere).is_none());
+    }
+
+    #[test]
+    fn throughput_entries_round_trip_and_miss_helpfully() {
+        let m = tiny_model();
+        let e = m.throughput_entry("add.u32").unwrap();
+        assert_eq!((e.peak_ipc_milli, e.warps_to_peak), (480, 8));
+        assert_eq!(e.points.len(), 6);
+
+        // Full JSON identity including the curve.
+        let back = LatencyModel::from_json_str(&m.to_json_string()).unwrap();
+        assert_eq!(back, m);
+
+        // Unknown name: error names the lookup space.
+        let err = m.throughput_entry("warp.drive").unwrap_err();
+        assert!(err.contains("registry row names"), "{err}");
+
+        // A pre-throughput model (no "throughput" object) still loads,
+        // and its lookup error points at re-extraction.
+        let mut v = m.to_json();
+        if let Value::Obj(map) = &mut v {
+            map.remove("throughput");
+        }
+        let legacy = LatencyModel::from_json_str(&to_string_pretty(&v)).unwrap();
+        assert!(legacy.throughput.is_empty());
+        let err = legacy.throughput_entry("add.u32").unwrap_err();
+        assert!(err.contains("extract-model"), "{err}");
     }
 
     #[test]

@@ -16,9 +16,11 @@
 //!
 //! ```text
 //! {"id": 7,                  echoed verbatim in the response
-//!  "mode": "predict",        predict | simulate | check | stats | ping
+//!  "mode": "predict",        predict | simulate | check | throughput |
+//!                            stats | ping
 //!  "kernel": "<PTX source>", raw kernel to analyse, or
-//!  "instr": "add.u32",       a Table V registry row name
+//!  "instr": "add.u32",       a Table V registry row name (for
+//!                            "throughput" also a wmma dtype key)
 //!  "dependent": true,        with "instr": the dependent-chain variant
 //!  "arch": "turing"}         route to a hosted model (multi-model
 //!                            serving; absent -> the default model)
@@ -28,7 +30,10 @@
 //! `{"ok": false, "error": "…", "id": …}` and never tear down the
 //! connection.  `predict` responses add `cpi`, `cycles`, `n`,
 //! `unresolved` and `cached`; `simulate` adds `cpi`, `delta`, `n`,
-//! `mapping`; `check` adds `predicted_cpi`, `simulated_cpi`, `matches`.
+//! `mapping`; `check` adds `predicted_cpi`, `simulated_cpi`, `matches`;
+//! `throughput` adds `cpi_1w`, `peak_ipc_milli`, `peak_ipc`,
+//! `warps_to_peak` and the swept `points` (the model's extracted
+//! multi-warp curve — see `repro throughput` for the live sweep).
 //!
 //! ## Threading
 //!

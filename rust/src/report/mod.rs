@@ -4,6 +4,7 @@
 use crate::microbench::alu::{Amortization, DepIndep, RowResult};
 use crate::microbench::insights::{Fig4, Insight1, Insight3, SignPair};
 use crate::microbench::memory::MemResult;
+use crate::microbench::throughput::ThroughputRow;
 use crate::microbench::wmma::WmmaResult;
 use crate::microbench::MatchGrade;
 use std::fmt::Write;
@@ -156,6 +157,53 @@ pub fn table5(rows: &[RowResult]) -> String {
     )
 }
 
+/// Render an integer milli-IPC value as a fixed-point decimal
+/// (`500 → "0.500"`): the sweep stores IPC in exact integer milli-units
+/// so text, JSON, the oracle model and `compare` all agree bit for bit.
+pub fn ipc_milli(m: u64) -> String {
+    format!("{}.{:03}", m / 1000, m % 1000)
+}
+
+/// `repro throughput`: achieved IPC per resident-warp count for every
+/// registry row and supported WMMA dtype, plus the saturation summary.
+pub fn throughput(rows: &[ThroughputRow]) -> String {
+    let counts: Vec<u32> = rows
+        .first()
+        .map(|r| r.points.iter().map(|p| p.warps).collect())
+        .unwrap_or_default();
+    let mut headers: Vec<String> =
+        vec!["instr".into(), "kind".into(), "n".into(), "CPI@1w".into()];
+    for w in &counts {
+        headers.push(format!("IPC@{w}w"));
+    }
+    headers.push("peak IPC".into());
+    headers.push("warps@peak".into());
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut cells = vec![
+                r.name.clone(),
+                r.kind.to_string(),
+                r.n.to_string(),
+                r.cpi_1w.to_string(),
+            ];
+            for p in &r.points {
+                cells.push(ipc_milli(p.ipc_milli));
+            }
+            cells.push(ipc_milli(r.peak_ipc_milli));
+            cells.push(r.warps_to_peak.to_string());
+            cells
+        })
+        .collect();
+    render_table(
+        &format!("Throughput — achieved IPC vs resident warps ({} rows)", rows.len()),
+        &header_refs,
+        &body,
+    )
+}
+
 pub fn fig4(f: &Fig4) -> String {
     render_table(
         "Fig. 4 — clock register width",
@@ -214,6 +262,10 @@ pub struct ArchResults<'a> {
     pub table5: &'a [RowResult],
     pub table4: &'a [MemResult],
     pub table3: &'a [WmmaResult],
+    /// Multi-warp throughput sweep rows (aligned across architectures
+    /// by row *name*, since capability tables differ).  Pass an empty
+    /// slice to omit the cross-arch IPC table.
+    pub throughput: &'a [ThroughputRow],
 }
 
 /// Deltas are reported against the first (baseline) architecture.
@@ -309,6 +361,63 @@ pub fn compare(results: &[ArchResults<'_>]) -> String {
         &wmma_headers,
         &wmma_rows,
     ));
+
+    if results.iter().all(|r| !r.throughput.is_empty()) {
+        let mut tp_headers: Vec<String> = vec!["instr".into()];
+        for r in results {
+            tp_headers.push(format!("peak IPC@{}", r.arch));
+        }
+        for r in &results[1..] {
+            tp_headers.push(format!("Δm {}", r.arch));
+        }
+        for r in results {
+            tp_headers.push(format!("w@peak {}", r.arch));
+        }
+        let tp_header_refs: Vec<&str> = tp_headers.iter().map(String::as_str).collect();
+        let tp_rows: Vec<Vec<String>> = base
+            .throughput
+            .iter()
+            .map(|row| {
+                let find = |r: &ArchResults<'_>| {
+                    r.throughput.iter().find(|t| t.name == row.name)
+                };
+                let mut cells = vec![row.name.clone()];
+                for r in results {
+                    cells.push(
+                        find(r)
+                            .map(|t| ipc_milli(t.peak_ipc_milli))
+                            .unwrap_or_else(|| "-".to_string()),
+                    );
+                }
+                for r in &results[1..] {
+                    cells.push(
+                        find(r)
+                            .map(|t| {
+                                let d = t.peak_ipc_milli as i64 - row.peak_ipc_milli as i64;
+                                if d == 0 { "=".to_string() } else { format!("{d:+}") }
+                            })
+                            .unwrap_or_else(|| "-".to_string()),
+                    );
+                }
+                for r in results {
+                    cells.push(
+                        find(r)
+                            .map(|t| t.warps_to_peak.to_string())
+                            .unwrap_or_else(|| "-".to_string()),
+                    );
+                }
+                cells
+            })
+            .collect();
+        out.push_str(&render_table(
+            &format!(
+                "Cross-arch throughput — peak IPC & warps-to-saturation (Δ in milli-IPC vs {})",
+                base.arch
+            ),
+            &tp_header_refs,
+            &tp_rows,
+        ));
+    }
     out
 }
 
@@ -375,6 +484,48 @@ pub fn compare_json(results: &[ArchResults<'_>]) -> Value {
         })
         .collect();
 
+    // Cross-arch IPC deltas, aligned by row name (empty sweeps → []).
+    let throughput: Vec<Value> = if results.iter().all(|r| !r.throughput.is_empty()) {
+        base.throughput
+            .iter()
+            .map(|row| {
+                let mut peak = Value::obj();
+                let mut warps = Value::obj();
+                let mut deltas = Value::obj();
+                for r in results {
+                    let entry = r.throughput.iter().find(|t| t.name == row.name);
+                    peak = peak.set(
+                        r.arch,
+                        entry.map(|t| Value::from(t.peak_ipc_milli)).unwrap_or(Value::Null),
+                    );
+                    warps = warps.set(
+                        r.arch,
+                        entry.map(|t| Value::from(t.warps_to_peak)).unwrap_or(Value::Null),
+                    );
+                }
+                for r in &results[1..] {
+                    let entry = r.throughput.iter().find(|t| t.name == row.name);
+                    deltas = deltas.set(
+                        r.arch,
+                        entry
+                            .map(|t| {
+                                Value::from(t.peak_ipc_milli as i64 - row.peak_ipc_milli as i64)
+                            })
+                            .unwrap_or(Value::Null),
+                    );
+                }
+                Value::obj()
+                    .set("name", row.name.as_str())
+                    .set("kind", row.kind)
+                    .set("peak_ipc_milli", peak)
+                    .set("warps_to_peak", warps)
+                    .set("delta_milli", deltas)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
     Value::obj()
         .set(
             "archs",
@@ -385,6 +536,7 @@ pub fn compare_json(results: &[ArchResults<'_>]) -> Value {
         .set("table5", Value::Arr(table5))
         .set("table4", Value::Arr(table4))
         .set("wmma", Value::Arr(wmma))
+        .set("throughput", Value::Arr(throughput))
 }
 
 // ---- machine-readable (`--json`) forms ------------------------------
@@ -465,6 +617,38 @@ pub fn table5_json(rows: &[RowResult]) -> Value {
     )
 }
 
+pub fn throughput_json(rows: &[ThroughputRow]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                Value::obj()
+                    .set("name", r.name.as_str())
+                    .set("kind", r.kind)
+                    .set("n", r.n)
+                    .set("cpi_1w", r.cpi_1w)
+                    .set("peak_ipc_milli", r.peak_ipc_milli)
+                    .set("peak_ipc", r.peak_ipc())
+                    .set("warps_to_peak", r.warps_to_peak)
+                    .set(
+                        "points",
+                        Value::Arr(
+                            r.points
+                                .iter()
+                                .map(|p| {
+                                    Value::obj()
+                                        .set("warps", p.warps)
+                                        .set("cycles", p.cycles)
+                                        .set("instructions", p.instructions)
+                                        .set("ipc_milli", p.ipc_milli)
+                                })
+                                .collect(),
+                        ),
+                    )
+            })
+            .collect(),
+    )
+}
+
 pub fn fig4_json(f: &Fig4) -> Value {
     Value::obj()
         .set("cpi_32bit", f.cpi_32bit)
@@ -540,6 +724,39 @@ mod tests {
     fn grade_strings() {
         assert_eq!(grade_str(MatchGrade::Exact), "exact");
         assert_eq!(grade_str(MatchGrade::Off), "OFF");
+    }
+
+    #[test]
+    fn throughput_rendering_and_json_share_the_milli_encoding() {
+        use crate::microbench::throughput::{ThroughputPoint, ThroughputRow};
+        assert_eq!(ipc_milli(500), "0.500");
+        assert_eq!(ipc_milli(1000), "1.000");
+        assert_eq!(ipc_milli(62), "0.062");
+
+        let rows = vec![ThroughputRow {
+            name: "add.u32".into(),
+            kind: "table5",
+            n: 3,
+            cpi_1w: 2,
+            points: vec![
+                ThroughputPoint { warps: 1, cycles: 10, instructions: 3, ipc_milli: 300 },
+                ThroughputPoint { warps: 8, cycles: 50, instructions: 24, ipc_milli: 480 },
+            ],
+            peak_ipc_milli: 480,
+            warps_to_peak: 8,
+        }];
+        let text = throughput(&rows);
+        for needle in ["IPC@1w", "IPC@8w", "0.300", "0.480", "add.u32", "warps@peak"] {
+            assert!(text.contains(needle), "{needle} missing:\n{text}");
+        }
+        let v = throughput_json(&rows);
+        let row = v.idx(0).unwrap();
+        assert_eq!(row.get("peak_ipc_milli").unwrap().as_u64(), Some(480));
+        assert_eq!(row.get("warps_to_peak").unwrap().as_u64(), Some(8));
+        assert_eq!(
+            row.get("points").unwrap().idx(1).unwrap().get("ipc_milli").unwrap().as_u64(),
+            Some(480)
+        );
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! (Fig. 4's barrier, Fig. 6's NOP/warp-sync).
 
 
+use crate::config::Pipe;
+
 /// One dynamically executed SASS instruction.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEntry {
@@ -21,6 +23,14 @@ pub struct TraceEntry {
     pub issued: u64,
     /// Cycle its result became visible (issue + latency).
     pub retired: u64,
+    /// Execution pipe the instruction issued on.
+    pub pipe: Pipe,
+    /// Issue-port occupancy charged (occupancy overrides applied) — what
+    /// the multi-warp throughput replay reserves the port for.
+    pub occupancy: u64,
+    /// Clock-register read (CS2R/S2R)?  The throughput replay locates
+    /// the protocol's measurement window by these markers.
+    pub is_clock: bool,
 }
 
 /// Append-only trace recorder with bounded memory: long-running loops
@@ -48,7 +58,27 @@ impl TraceRecorder {
         Self { entries: Vec::new(), cap: Some(cap), enabled: true, seq: 0 }
     }
 
+    /// Record one issued instruction with neutral scheduling metadata
+    /// (clock reads inferred from the mnemonic) — the pre-throughput
+    /// entry point, kept for analysis-side callers that only inspect
+    /// mnemonics and times.  The simulator records through
+    /// [`Self::record_issue`] with the real pipe/occupancy.
     pub fn record(&mut self, ptx_idx: u32, mnemonic: &'static str, issued: u64, retired: u64) {
+        let is_clock = mnemonic.starts_with("CS2R") || mnemonic == "S2R";
+        self.record_issue(ptx_idx, mnemonic, issued, retired, Pipe::Special, 1, is_clock);
+    }
+
+    /// Record one issued instruction with full scheduling metadata.
+    pub fn record_issue(
+        &mut self,
+        ptx_idx: u32,
+        mnemonic: &'static str,
+        issued: u64,
+        retired: u64,
+        pipe: Pipe,
+        occupancy: u64,
+        is_clock: bool,
+    ) {
         let seq = self.seq;
         self.seq += 1;
         if !self.enabled {
@@ -59,7 +89,16 @@ impl TraceRecorder {
                 self.entries.remove(0);
             }
         }
-        self.entries.push(TraceEntry { seq, ptx_idx, mnemonic, issued, retired });
+        self.entries.push(TraceEntry {
+            seq,
+            ptx_idx,
+            mnemonic,
+            issued,
+            retired,
+            pipe,
+            occupancy,
+            is_clock,
+        });
     }
 
     pub fn entries(&self) -> &[TraceEntry] {
@@ -120,6 +159,23 @@ mod tests {
         assert_eq!(t.mapping_for(4), "IADD3");
         assert_eq!(t.mapping_for(9), "");
         assert_eq!(t.dynamic_count(), 4);
+    }
+
+    #[test]
+    fn record_issue_keeps_scheduling_metadata() {
+        let mut t = TraceRecorder::new();
+        t.record_issue(0, "CS2R", 0, 0, Pipe::Special, 2, true);
+        t.record_issue(1, "IADD", 2, 6, Pipe::Int, 2, false);
+        t.record_issue(2, "HMMA.16816.F16", 4, 12, Pipe::Tensor, 8, false);
+        let e = t.entries();
+        assert!(e[0].is_clock && !e[1].is_clock);
+        assert_eq!((e[1].pipe, e[1].occupancy), (Pipe::Int, 2));
+        assert_eq!((e[2].pipe, e[2].occupancy), (Pipe::Tensor, 8));
+        // The legacy entry point infers clock reads from the mnemonic.
+        t.record(3, "CS2R.32", 6, 6);
+        t.record(4, "FADD", 8, 12);
+        let e = t.entries();
+        assert!(e[3].is_clock && !e[4].is_clock);
     }
 
     #[test]

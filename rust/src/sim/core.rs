@@ -238,7 +238,8 @@ impl Simulator {
                         }
                     }
                     Effect::Exit => {
-                        self.trace.record(group.ptx_idx, s.mnemonic, t, t + lat);
+                        self.trace
+                            .record_issue(group.ptx_idx, s.mnemonic, t, t + lat, p, occ, false);
                         last_issue = t;
                         break 'outer;
                     }
@@ -250,7 +251,15 @@ impl Simulator {
                     }
                 }
 
-                self.trace.record(group.ptx_idx, s.mnemonic, t, t + lat);
+                self.trace.record_issue(
+                    group.ptx_idx,
+                    s.mnemonic,
+                    t,
+                    t + lat,
+                    p,
+                    occ,
+                    s.effect == Effect::ClockRead,
+                );
                 pipe_free[pi] = t + occ;
                 last_issue = t;
                 last_gap = if matches!(s.class, SassClass::Cs2r | SassClass::S2r) {

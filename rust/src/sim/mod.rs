@@ -22,8 +22,17 @@
 //!    which is what makes the measured Δ include the last instruction's
 //!    latency, reproducing Tables I/II exactly under
 //!    `CPI = floor((Δ − 2) / n)`.
+//!
+//! A third half arrived with the throughput engine:
+//! * [`throughput`] — the deterministic *multi-warp* scheduler: N
+//!   resident warps replaying a recorded single-warp issue schedule
+//!   round-robin over per-pipe issue ports, reporting achieved IPC vs.
+//!   warp count.  The 1-warp replay is byte-identical to the latency
+//!   path by construction (pinned over the whole Table V registry).
 
 pub mod core;
 pub mod exec;
+pub mod throughput;
 
 pub use self::core::{RunResult, Simulator};
+pub use self::throughput::{ThroughputRun, WarpScheduler, WarpTrace};

@@ -92,21 +92,28 @@ fn fuzzing_respects_the_arch_capability_table() {
 #[test]
 fn compare_json_covers_every_table5_row() {
     let specs = [arch::get("ampere").unwrap(), arch::get("turing").unwrap()];
-    let campaigns: Vec<_> = specs
+    let runs: Vec<_> = specs
         .iter()
         .map(|s| {
-            harness::run_campaign_blocking(s.config.clone().into_small())
-                .unwrap_or_else(|e| panic!("{}: {e}", s.name()))
+            let engine = Engine::new(s.config.clone().into_small());
+            let campaign = harness::run_campaign_with(&engine)
+                .unwrap_or_else(|e| panic!("{}: {e}", s.name()));
+            // The cross-arch IPC table: a small two-point sweep keeps
+            // the test fast while exercising the alignment-by-name path.
+            let sweep = ampere_ubench::microbench::throughput::run_sweep_with(&engine, &[1, 16])
+                .unwrap_or_else(|e| panic!("{} sweep: {e}", s.name()));
+            (campaign, sweep)
         })
         .collect();
     let results: Vec<report::ArchResults<'_>> = specs
         .iter()
-        .zip(&campaigns)
-        .map(|(s, c)| report::ArchResults {
+        .zip(&runs)
+        .map(|(s, (c, t))| report::ArchResults {
             arch: s.name(),
             table5: c.table5.as_slice(),
             table4: c.table4.as_slice(),
             table3: c.table3.as_slice(),
+            throughput: t.as_slice(),
         })
         .collect();
 
@@ -155,6 +162,39 @@ fn compare_json_covers_every_table5_row() {
         .unwrap();
     assert!(bf16.get("cycles").unwrap().get("ampere").unwrap().as_u64().is_some());
     assert_eq!(bf16.get("cycles").unwrap().get("turing"), Some(&Value::Null));
+
+    // Cross-arch IPC deltas: every base sweep row appears, and Turing's
+    // occupancy-16 fp64 port caps add.f64 peak IPC below Ampere's.
+    let tp = v.get("throughput").and_then(Value::as_arr).unwrap();
+    assert_eq!(
+        tp.len(),
+        registry::table5().len() + specs[0].config.wmma_dtypes.len(),
+        "one IPC row per registry row + ampere wmma dtype"
+    );
+    let f64_row = tp
+        .iter()
+        .find(|r| r.get("name").and_then(Value::as_str) == Some("add.f64"))
+        .expect("add.f64 IPC row");
+    let peak = f64_row.get("peak_ipc_milli").unwrap();
+    let a = peak.get("ampere").unwrap().as_u64().unwrap();
+    let t = peak.get("turing").unwrap().as_u64().unwrap();
+    assert!(
+        t < a,
+        "Turing's 1/32-rate fp64 port must cap peak IPC: {t} vs {a}"
+    );
+    assert!(
+        f64_row.get("delta_milli").and_then(|d| d.get("turing")).is_some(),
+        "{f64_row:?}"
+    );
+    // bf16 WMMA exists on ampere only → null on turing, by name.
+    let bf16_tp = tp
+        .iter()
+        .find(|r| r.get("name").and_then(Value::as_str) == Some("bf16_f32"))
+        .unwrap();
+    assert_eq!(
+        bf16_tp.get("peak_ipc_milli").unwrap().get("turing"),
+        Some(&Value::Null)
+    );
 
     // And the printed form renders every row plus the unsupported
     // marker.

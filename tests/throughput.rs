@@ -1,0 +1,219 @@
+//! Integration: the multi-warp throughput engine end to end — the
+//! 1-warp byte-identity anchor against the latency path over every
+//! Table V registry row, IPC monotonicity, determinism across engines
+//! and pool reuse, per-arch port-width effects, and the oracle's
+//! `"throughput"` serving mode agreeing with live simulation.
+
+use ampere_ubench::arch;
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::microbench::throughput::{run_sweep_with, ThroughputRow, DEFAULT_WARP_COUNTS};
+use ampere_ubench::microbench::{alu, registry};
+use ampere_ubench::oracle::{LatencyModel, LatencyOracle, Server};
+use ampere_ubench::util::json::{self, Value};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, OnceLock};
+
+/// One sweep shared by the read-only tests in this binary.
+fn sweep() -> &'static Vec<ThroughputRow> {
+    static SWEEP: OnceLock<Vec<ThroughputRow>> = OnceLock::new();
+    SWEEP.get_or_init(|| {
+        run_sweep_with(&Engine::new(AmpereConfig::small()), &DEFAULT_WARP_COUNTS)
+            .expect("throughput sweep")
+    })
+}
+
+/// Acceptance anchor: the 1-warp throughput replay reports the same CPI
+/// as the existing latency simulation for all 132 Table V rows — the
+/// property that lets every golden/conformance/fuzz gate keep passing.
+#[test]
+fn one_warp_cpi_is_byte_identical_to_the_latency_path_for_all_rows() {
+    let engine = Engine::new(AmpereConfig::small());
+    let latency = alu::run_table5_with(&engine).expect("latency Table V");
+    let rows = sweep();
+    let t5 = registry::table5();
+    assert_eq!(rows.len(), t5.len() + engine.cfg().wmma_dtypes.len());
+    let mut checked = 0;
+    for ((t, reg), lat) in rows.iter().zip(&t5).zip(&latency) {
+        assert_eq!(t.name, reg.name, "sweep order matches the registry");
+        assert_eq!(
+            t.cpi_1w, lat.measured.cpi,
+            "{}: throughput 1-warp CPI {} vs latency CPI {}",
+            t.name, t.cpi_1w, lat.measured.cpi
+        );
+        assert_eq!(t.n, 3, "{}: three protocol instances", t.name);
+        checked += 1;
+    }
+    assert_eq!(checked, t5.len(), "all registry rows pinned");
+}
+
+#[test]
+fn ipc_is_monotone_nondecreasing_in_warp_count_for_every_row() {
+    for row in sweep() {
+        assert_eq!(row.points.len(), DEFAULT_WARP_COUNTS.len(), "{}", row.name);
+        for pair in row.points.windows(2) {
+            assert!(
+                pair[1].ipc_milli >= pair[0].ipc_milli,
+                "{}: IPC fell from {} ({} warps) to {} ({} warps)",
+                row.name,
+                pair[0].ipc_milli,
+                pair[0].warps,
+                pair[1].ipc_milli,
+                pair[1].warps
+            );
+        }
+        let max = row.points.iter().map(|p| p.ipc_milli).max().unwrap();
+        assert_eq!(row.peak_ipc_milli, max, "{}", row.name);
+        assert!(
+            DEFAULT_WARP_COUNTS.contains(&row.warps_to_peak),
+            "{}: warps_to_peak {} outside the sweep",
+            row.name,
+            row.warps_to_peak
+        );
+        // Saturation point really is within 1% of the peak.
+        let at = row
+            .points
+            .iter()
+            .find(|p| p.warps == row.warps_to_peak)
+            .unwrap();
+        assert!(at.ipc_milli * 100 >= row.peak_ipc_milli * 99, "{}", row.name);
+    }
+}
+
+#[test]
+fn sweep_is_deterministic_across_engines_and_pool_reuse() {
+    let engine = Engine::new(AmpereConfig::small());
+    let first = run_sweep_with(&engine, &DEFAULT_WARP_COUNTS).unwrap();
+    // Second sweep on the same engine: kernels cache-served, simulators
+    // and warp schedulers recycled — results must not move.
+    let second = run_sweep_with(&engine, &DEFAULT_WARP_COUNTS).unwrap();
+    assert_eq!(first, second, "pooled rerun must be identical");
+    assert!(
+        engine.warp_pool_stats().reused > 0,
+        "second sweep must reuse pooled schedulers: {:?}",
+        engine.warp_pool_stats()
+    );
+    // And a completely fresh engine agrees too.
+    assert_eq!(first, *sweep(), "independent engines must agree");
+}
+
+#[test]
+fn port_widths_and_occupancies_shape_saturation_per_arch() {
+    // add.u32: one INT port, occupancy 2 → peak 0.5 IPC, not reachable
+    // by a single warp.
+    let add = sweep().iter().find(|r| r.name == "add.u32").unwrap();
+    assert!((400..=500).contains(&add.peak_ipc_milli), "{add:?}");
+    assert!(add.warps_to_peak > 1, "one warp cannot saturate INT");
+
+    // Doubling the INT ports in a custom spec raises the ceiling — the
+    // ArchSpec field drives the scheduler.
+    let mut wide = AmpereConfig::small();
+    wide.arch_name = "wide-int".into();
+    wide.int_pipe.ports = 2;
+    wide.issue_width = 2;
+    let engine = Engine::new(wide);
+    let rows = registry::table5();
+    let row = rows.iter().find(|r| r.name == "add.u32").unwrap();
+    let wide_row = ampere_ubench::microbench::throughput::measure_row_with(
+        &engine,
+        row,
+        &DEFAULT_WARP_COUNTS,
+    )
+    .unwrap();
+    assert!(
+        wide_row.peak_ipc_milli > add.peak_ipc_milli + 200,
+        "2 ports must lift the peak: {} vs {}",
+        wide_row.peak_ipc_milli,
+        add.peak_ipc_milli
+    );
+
+    // Turing's occupancy-16 fp64 port (the once-dead config field) caps
+    // add.f64 throughput well below Ampere's occupancy-4 pipe.
+    let turing = Engine::new(arch::get("turing").unwrap().config.into_small());
+    let f64_row = rows.iter().find(|r| r.name == "add.f64").unwrap();
+    let t = ampere_ubench::microbench::throughput::measure_row_with(
+        &turing,
+        f64_row,
+        &DEFAULT_WARP_COUNTS,
+    )
+    .unwrap();
+    let a = sweep().iter().find(|r| r.name == "add.f64").unwrap();
+    assert!(
+        t.peak_ipc_milli < a.peak_ipc_milli,
+        "turing fp64 peak {} must trail ampere {}",
+        t.peak_ipc_milli,
+        a.peak_ipc_milli
+    );
+}
+
+/// Acceptance: the model's extracted `"throughput"` entries — and the
+/// serving layer's answers — agree with live multi-warp simulation.
+#[test]
+fn oracle_throughput_mode_agrees_with_live_simulation() {
+    let engine = Engine::new(AmpereConfig::small());
+    let model = LatencyModel::extract(&engine).expect("extraction");
+    let live = sweep();
+    assert_eq!(
+        model.throughput.len(),
+        live.len(),
+        "one model entry per swept row"
+    );
+    for row in live {
+        let e = model
+            .throughput_entry(&row.name)
+            .unwrap_or_else(|err| panic!("{}: {err}", row.name));
+        assert_eq!(e.cpi_1w, row.cpi_1w, "{}", row.name);
+        assert_eq!(e.peak_ipc_milli, row.peak_ipc_milli, "{}", row.name);
+        assert_eq!(e.warps_to_peak, row.warps_to_peak, "{}", row.name);
+        let points: Vec<(u32, u64)> =
+            row.points.iter().map(|p| (p.warps, p.ipc_milli)).collect();
+        assert_eq!(e.points, points, "{}", row.name);
+    }
+
+    // The model round-trips through JSON with the curves intact.
+    let back = LatencyModel::from_json_str(&model.to_json_string()).unwrap();
+    assert_eq!(back, model);
+
+    // And over the wire: one request per class of interest.
+    let oracle = LatencyOracle::with_engine(model, Engine::new(AmpereConfig::small()));
+    let server = Server::bind(Arc::new(oracle), "127.0.0.1:0").expect("bind");
+    let handle = server.spawn().expect("spawn");
+    let stream = TcpStream::connect(handle.addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut stream = stream;
+    for name in ["add.u32", "add.f64", "f16_f16"] {
+        let expect = live.iter().find(|r| r.name == name).unwrap();
+        writeln!(
+            stream,
+            r#"{{"mode":"throughput","instr":"{name}","id":1}}"#
+        )
+        .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{name}: {v:?}");
+        assert_eq!(
+            v.get("peak_ipc_milli").and_then(Value::as_u64),
+            Some(expect.peak_ipc_milli),
+            "{name}"
+        );
+        assert_eq!(
+            v.get("warps_to_peak").and_then(Value::as_u64),
+            Some(expect.warps_to_peak as u64),
+            "{name}"
+        );
+        assert_eq!(
+            v.get("cpi_1w").and_then(Value::as_u64),
+            Some(expect.cpi_1w),
+            "{name}"
+        );
+    }
+    // Unknown names answer with an error, not a number.
+    writeln!(stream, r#"{{"mode":"throughput","instr":"warp.drive"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+    handle.stop();
+}
