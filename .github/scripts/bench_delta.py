@@ -16,7 +16,12 @@ import os
 import sys
 
 REGRESSION_PCT = 25.0
-FILES = ("BENCH_campaign.json", "BENCH_oracle.json", "BENCH_throughput.json")
+FILES = (
+    "BENCH_campaign.json",
+    "BENCH_oracle.json",
+    "BENCH_throughput.json",
+    "BENCH_serve.json",
+)
 
 
 def load_series(path):

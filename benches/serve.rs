@@ -1,0 +1,50 @@
+//! Bench for the sharded serving stack — the acceptance workload for
+//! the serve PR: the binary frame protocol must carry warm predict
+//! batches at ≥ 2× the JSON-line QPS at 64 connections, recorded in
+//! `BENCH_serve.json` alongside p50/p99 roundtrip latency for every
+//! {json, binary} × {1, 8, 64} cell.
+//!
+//! The workload is `oracle::loadgen`'s: a real loopback server, warm
+//! predict batches of 32 requests over 16 distinct measurement kernels,
+//! fully prewarmed before the first timed roundtrip.  `--quick` trims
+//! the per-cell sampling window for CI smoke; the acceptance ratio is
+//! asserted either way.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::oracle::{loadgen, LatencyModel, LatencyOracle};
+use std::sync::Arc;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    eprintln!("extracting latency model (one scaled-cache campaign)…");
+    let engine = Engine::new(AmpereConfig::small());
+    let model = LatencyModel::extract(&engine).expect("model extraction");
+    let oracle = Arc::new(LatencyOracle::with_engine(model, engine));
+
+    let cfg = loadgen::LoadgenConfig {
+        secs_per_cell: if quick { 0.8 } else { 2.5 },
+        ..loadgen::LoadgenConfig::default()
+    };
+    let cells = loadgen::run_loopback(oracle, &cfg).expect("loadgen sweep");
+
+    print!("{}", loadgen::render(&cells));
+    loadgen::write_bench_json("BENCH_serve.json", &cells).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json ({} cells)", cells.len());
+
+    let qps = |mode: &str, conns: usize| -> f64 {
+        cells
+            .iter()
+            .find(|c| c.mode.as_str() == mode && c.conns == conns)
+            .unwrap_or_else(|| panic!("missing {mode} x{conns} cell"))
+            .qps
+    };
+    let ratio = qps("binary", 64) / qps("json", 64);
+    println!("binary vs json warm-batch throughput at 64 connections: {ratio:.2}x");
+    assert!(
+        ratio >= 2.0,
+        "acceptance: binary-mode warm-batch throughput must be >= 2x the \
+         JSON-line path at 64 connections (got {ratio:.2}x)"
+    );
+}

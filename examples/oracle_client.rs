@@ -1,8 +1,10 @@
 //! Oracle client: stand a latency-oracle server up on a loopback port
-//! and query it over the JSON-line wire protocol.
+//! and query it over the wire protocol — JSON lines by default, the
+//! length-prefixed binary framing with `--binary`.
 //!
 //! ```bash
 //! cargo run --release --example oracle_client
+//! cargo run --release --example oracle_client -- --binary
 //! # or, reusing a model extracted by `repro --small extract-model`
 //! # (the example's engine runs the scaled-cache config, and the model
 //! # must match it — a full-config model_a100.json is rejected):
@@ -11,16 +13,21 @@
 //!
 //! Walks the whole protocol: single predictions (cold then cache-hit),
 //! a fanned-out batch, a live simulation, a self-consistency check, and
-//! the stats endpoint.
+//! the stats endpoint.  Both framings carry the same values: what
+//! `--binary` prints is the decoded frame re-serialized canonically,
+//! byte-identical to the JSON-mode line for the same request.
 
 use ampere_ubench::config::AmpereConfig;
 use ampere_ubench::engine::Engine;
-use ampere_ubench::oracle::{LatencyModel, LatencyOracle, Server};
+use ampere_ubench::oracle::{wire, LatencyModel, LatencyOracle, Server};
+use ampere_ubench::util::json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
+    let binary = std::env::args().any(|a| a == "--binary");
+
     // 1. An oracle: load the model if the operator extracted one,
     //    otherwise run the campaign here.
     let engine = Engine::new(AmpereConfig::small());
@@ -49,21 +56,38 @@ fn main() -> anyhow::Result<()> {
     let server = Server::bind(oracle, "127.0.0.1:0")?;
     let addr = server.local_addr()?;
     let handle = server.spawn()?;
-    println!("server up on {addr}\n");
+    println!(
+        "server up on {addr} ({} framing)\n",
+        if binary { "binary-frame" } else { "JSON-line" }
+    );
 
-    // 3. A plain TCP client.
+    // 3. A plain TCP client.  In binary mode every request string is
+    //    parsed and re-sent as one length-prefixed frame, and the
+    //    response frame is decoded and canonically re-serialized — the
+    //    printed line is byte-identical to what JSON mode prints.
     let mut stream = TcpStream::connect(addr)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     // Every request in this walkthrough must succeed — CI runs this
     // example as the serving smoke test, so an ok:false anywhere is a
     // regression, not output to shrug at.
     let mut ask = |req: &str| -> anyhow::Result<String> {
-        writeln!(stream, "{req}")?;
-        let mut line = String::new();
-        if reader.read_line(&mut line)? == 0 {
-            anyhow::bail!("server closed the connection while answering: {req}");
-        }
-        let line = line.trim().to_string();
+        let line = if binary {
+            let v = json::parse(req).map_err(anyhow::Error::msg)?;
+            stream.write_all(&wire::encode_frame(&v))?;
+            match wire::read_frame(&mut reader)? {
+                wire::FrameRead::Frame(payload) => {
+                    json::to_string(&wire::decode_value(&payload).map_err(anyhow::Error::msg)?)
+                }
+                other => anyhow::bail!("expected a response frame, got {other:?}: {req}"),
+            }
+        } else {
+            writeln!(stream, "{req}")?;
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed the connection while answering: {req}");
+            }
+            line.trim().to_string()
+        };
         if line.contains("\"ok\":false") {
             anyhow::bail!("request failed: {req}\nresponse: {line}");
         }

@@ -14,7 +14,8 @@
 //! repro show-kernel add.u32 # print a generated microbenchmark kernel
 //! repro extract-model       # distill the campaign into model JSON
 //! repro predict add.u32     # static prediction + live cross-check
-//! repro serve               # JSON-line TCP prediction service
+//! repro serve               # JSON-line / binary-frame TCP service
+//! repro loadgen             # hammer a loopback server, BENCH_serve.json
 //! repro fuzz                # three-path differential fuzzing
 //! repro conformance         # golden-snapshot diff (tests/golden/)
 //! repro arch list|show|diff # the architecture registry
@@ -23,14 +24,16 @@
 //! flags: --small (scaled caches), --json, --dependent, --faithful,
 //!        --arch <name|spec.json>, --model <path> (repeatable for
 //!        serve), --out <path>, --port <n>, --seed <s>,
-//!        --cases <n>, --warps <list>, --update
+//!        --cases <n>, --warps <list>, --update, and for loadgen
+//!        --secs <f>, --conns <list>, --wire json|binary|both,
+//!        --batch <n>
 //! ```
 
 use ampere_ubench::arch::{self, ArchSpec};
 use ampere_ubench::config::AmpereConfig;
 use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::{self, alu, insights, memory, registry, wmma};
-use ampere_ubench::oracle::{serve, LatencyModel, LatencyOracle, OracleSet, Server};
+use ampere_ubench::oracle::{loadgen, serve, LatencyModel, LatencyOracle, OracleSet, Server};
 use ampere_ubench::tensor::{movm_plan, ALL_DTYPES};
 use ampere_ubench::util::json::{to_string_pretty, Value};
 use ampere_ubench::{fuzz, harness, report, runtime};
@@ -91,12 +94,29 @@ COMMANDS:
                         against live simulation of the same kernel
                         (extracts a fresh model unless --model is given)
   serve [--model <path>]… [--port <n>]
-                        JSON-line TCP prediction service on
-                        127.0.0.1:<port> (default 7845).  --model may
-                        repeat: the server hosts one oracle per model
-                        (each on an engine matching that model's arch)
-                        and requests route by their \"arch\" field —
-                        absent means the first model.
+                        TCP prediction service on 127.0.0.1:<port>
+                        (default 7845), speaking JSON lines or binary
+                        frames per connection (the first byte decides —
+                        see SERVE WIRE PROTOCOL).  --model may repeat:
+                        the server hosts one oracle per model (each on
+                        an engine matching that model's arch) and
+                        requests route by their \"arch\" field — absent
+                        means the first model.  Accepts on one shard
+                        per core (up to 8); admission is a bounded
+                        queue, not a hard reject (BACKPRESSURE below).
+  loadgen [--model <path>] [--secs <f>] [--conns <l>] [--wire <m>]
+          [--batch <n>] [--out <path>]
+                        spin up a loopback server on this invocation's
+                        model (extracting one when --model is absent),
+                        prewarm it, and hammer warm predict batches
+                        over every --wire mode (json|binary|both,
+                        default both) × --conns count (comma list,
+                        default 1,8,64) for --secs per cell (default
+                        2.0) at --batch requests per roundtrip
+                        (default 32).  Prints a QPS / p50 / p99 table
+                        (--json: the BENCH document) and writes it to
+                        --out (default BENCH_serve.json, the file
+                        bench_delta.py gates).
   fuzz [--seed <s>] [--cases <n>] [--model <path>]
                         differential fuzzing: every generated kernel
                         runs through (a) the engine's pooled simulator,
@@ -126,19 +146,54 @@ compare.
 Property-based tests share the same seeds: FUZZ_CASES=<n> deepens every
 `util::prng::check` sweep (CI runs 200; local `cargo test` stays fast).
 
-SERVE WIRE PROTOCOL (one JSON value per line, both directions):
+SERVE WIRE PROTOCOL — the first byte of a connection picks the framing
+(0xB1 = binary frames, anything else = JSON lines); both framings carry
+the same request/response values and a connection never switches:
+
+JSON lines (one JSON value per line, both directions):
   request   {\"id\": 7,
-             \"mode\": \"predict|simulate|check|throughput|stats|ping\",
+             \"mode\": \"predict|simulate|check|throughput|stats|ping|
+                       reload\",
              \"kernel\": \"<PTX>\" | \"instr\": \"add.u32\",
              \"dependent\": true, \"arch\": \"turing\"}
   batch     a JSON array of requests -> one array of responses, same
-            order, fanned out across the worker pool
+            order, fanned out across the worker pool (fully-warm
+            predict batches answer inline off the sharded cache)
   response  {\"ok\": true, \"id\": 7, ...} — predict adds cpi/cycles/n/
             unresolved/cached; simulate adds cpi/delta/n/mapping; check
             adds predicted_cpi/simulated_cpi/matches; throughput takes
             \"instr\" (a registry row name or wmma dtype key) and adds
             cpi_1w/peak_ipc_milli/peak_ipc/warps_to_peak/points — the
             model's extracted multi-warp curve
+  reload    {\"mode\": \"reload\", \"model\": \"<server-side path>\"}
+            atomically swaps the hosted model whose arch matches the
+            file (in-flight requests finish on the old model; new
+            connections and later requests see the new one).  The file
+            must host an already-served arch with matching cache
+            geometry, or the reload is rejected and the old model
+            keeps serving.  Adds arch/instructions/reloads on success.
+
+Binary frames (same values, length-prefixed):
+  frame     0xB1, u32 LE payload length (8 MiB max — same bound as a
+            JSON line), then the payload: one value as tagged fields —
+            0x00 null / 0x01 false / 0x02 true / 0x03 u64 LE /
+            0x04 i64 LE / 0x05 f64 LE bits / 0x06 string (u32 LE byte
+            length + UTF-8) / 0x07 array (u32 LE count, then elements)
+            / 0x08 object (u32 LE count, then untagged-key/value
+            pairs).  Responses to binary connections come back as
+            frames; decoded values match the JSON answers byte-for-
+            byte after canonical re-serialization.  A malformed
+            payload answers with an error frame and the connection
+            stays up; a bad magic or oversized length declaration
+            answers with an error frame, then the connection closes
+            (the stream can no longer be trusted to re-frame).
+
+BACKPRESSURE: each connection takes a slot (256) before serving; when
+all slots are busy it waits in a bounded admission queue (512 deep) up
+to 2s.  Deadline expiry or a full queue answers one JSON error line
+(\"ok\": false, \"error\": \"server at connection capacity…\") and closes —
+JSON even for would-be binary clients, since admission precedes the
+first byte of the stream.
 ";
 
 struct Args {
@@ -160,6 +215,14 @@ struct Args {
     /// `--warps`: comma-separated resident-warp counts for
     /// `throughput` (default 1,2,4,8,16,32).
     warps: Option<String>,
+    /// `--secs`: loadgen sampling time per cell, seconds.
+    secs: Option<f64>,
+    /// `--conns`: comma-separated loadgen connection counts.
+    conns: Option<String>,
+    /// `--wire`: loadgen framing sweep — json | binary | both.
+    wire: Option<String>,
+    /// `--batch`: loadgen predict requests per roundtrip.
+    batch: Option<u64>,
     cmd: String,
     rest: Vec<String>,
 }
@@ -178,6 +241,10 @@ fn parse_args() -> Args {
         seed: None,
         cases: None,
         warps: None,
+        secs: None,
+        conns: None,
+        wire: None,
+        batch: None,
         cmd: String::new(),
         rest: Vec::new(),
     };
@@ -235,6 +302,30 @@ fn parse_args() -> Args {
                 a.warps = Some(need_value(&argv, i));
                 i += 1;
             }
+            "--secs" => {
+                let v = need_value(&argv, i);
+                a.secs = Some(v.parse().unwrap_or_else(|_| {
+                    eprintln!("--secs wants a number of seconds, got {v:?}");
+                    std::process::exit(2);
+                }));
+                i += 1;
+            }
+            "--conns" => {
+                a.conns = Some(need_value(&argv, i));
+                i += 1;
+            }
+            "--wire" => {
+                a.wire = Some(need_value(&argv, i));
+                i += 1;
+            }
+            "--batch" => {
+                let v = need_value(&argv, i);
+                a.batch = Some(v.parse().unwrap_or_else(|_| {
+                    eprintln!("--batch wants a number, got {v:?}");
+                    std::process::exit(2);
+                }));
+                i += 1;
+            }
             "--update" => a.update = true,
             "-h" | "--help" => {
                 print!("{USAGE}");
@@ -281,6 +372,56 @@ fn warp_counts_for(warps: Option<&str>) -> anyhow::Result<Vec<u32>> {
         anyhow::bail!("--warps needs at least one count (e.g. --warps 1,4,16)");
     }
     Ok(counts)
+}
+
+/// Assemble the loadgen sweep from `--secs` / `--conns` / `--wire` /
+/// `--batch`, defaulting to the `BENCH_serve.json` cells
+/// ({json, binary} × {1, 8, 64}, 2s, batch 32).
+fn loadgen_config(args: &Args) -> anyhow::Result<loadgen::LoadgenConfig> {
+    let mut cfg = loadgen::LoadgenConfig::default();
+    if let Some(secs) = args.secs {
+        if !(0.05..=600.0).contains(&secs) {
+            anyhow::bail!("--secs must be 0.05..=600, got {secs}");
+        }
+        cfg.secs_per_cell = secs;
+    }
+    if let Some(list) = args.conns.as_deref() {
+        let counts: Vec<usize> = list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--conns wants numbers, got {s:?}"))
+                    .and_then(|c| {
+                        if (1..=1024).contains(&c) {
+                            Ok(c)
+                        } else {
+                            anyhow::bail!("--conns counts must be 1..=1024, got {c}")
+                        }
+                    })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        if counts.is_empty() {
+            anyhow::bail!("--conns needs at least one count (e.g. --conns 1,8,64)");
+        }
+        cfg.conns = counts;
+    }
+    if let Some(wire) = args.wire.as_deref() {
+        cfg.modes = match wire {
+            "json" => vec![loadgen::WireMode::Json],
+            "binary" => vec![loadgen::WireMode::Binary],
+            "both" => vec![loadgen::WireMode::Json, loadgen::WireMode::Binary],
+            other => anyhow::bail!("--wire takes json | binary | both, got {other:?}"),
+        };
+    }
+    if let Some(batch) = args.batch {
+        if !(1..=4096).contains(&batch) {
+            anyhow::bail!("--batch must be 1..=4096, got {batch}");
+        }
+        cfg.batch = batch as usize;
+    }
+    Ok(cfg)
 }
 
 /// Load the model from `--model` (exactly one for the single-model
@@ -658,8 +799,36 @@ fn main() -> anyhow::Result<()> {
             let port = args.port.unwrap_or(serve::DEFAULT_PORT);
             let server = Server::bind_set(set, &format!("127.0.0.1:{port}"))?;
             println!("latency oracle serving on {}", server.local_addr()?);
-            println!("protocol: one JSON request per line (array = batch); see `repro -h`");
+            println!(
+                "protocol: JSON lines or binary frames, picked by the first byte \
+                 (array/batch, hot reload, bounded admission); see `repro -h`"
+            );
             server.run()?;
+        }
+        "loadgen" => {
+            let model = load_or_extract(&args, &engine)?;
+            let oracle = Arc::new(LatencyOracle::with_engine(model, engine));
+            if let Some(mismatch) = oracle.config_mismatch() {
+                anyhow::bail!("{mismatch} (pass or drop --small to match the model)");
+            }
+            let cfg = loadgen_config(&args)?;
+            eprintln!(
+                "loadgen: {} mode(s) x {} connection count(s), {:.1}s per cell, \
+                 batch {}…",
+                cfg.modes.len(),
+                cfg.conns.len(),
+                cfg.secs_per_cell,
+                cfg.batch
+            );
+            let cells = loadgen::run_loopback(oracle, &cfg).map_err(anyhow::Error::msg)?;
+            if args.json {
+                println!("{}", to_string_pretty(&loadgen::bench_json(&cells)));
+            } else {
+                print!("{}", loadgen::render(&cells));
+            }
+            let out = args.out.as_deref().unwrap_or("BENCH_serve.json");
+            loadgen::write_bench_json(out, &cells).map_err(anyhow::Error::msg)?;
+            eprintln!("wrote {out} ({} cells)", cells.len());
         }
         "arch" => {
             match args.rest.first().map(String::as_str) {

@@ -1,23 +1,29 @@
-//! Request batching and the LRU prediction cache.
+//! Request batching and the prediction caches.
 //!
-//! * [`LruCache`] — the oracle's prediction cache, keyed by kernel hash.
-//!   Plain `HashMap` + recency deque with hit/miss/eviction counters;
-//!   move-to-back is a linear scan, which is far below measurement noise
-//!   at serving cache sizes (≤ a few thousand entries of `u64` keys).
+//! * [`ShardedLru`] — the oracle's warm-path prediction cache, keyed by
+//!   kernel hash.  Sharded reader–writer design: a warm hit takes one
+//!   shared read latch on its shard plus two relaxed atomics, so fully
+//!   warm batches never contend with each other or with extractions on
+//!   other shards (the serving hot path).
+//! * [`LruCache`] — the single-lock LRU kept for the bounded
+//!   compiled-kernel cache (compilation dominates there; exact global
+//!   recency matters more than latch-free hits).
 //! * [`Request`] / [`parse_request`] — one wire-protocol request
-//!   (see [`super::serve`] for the framing: one JSON value per line,
-//!   a JSON *array* is a batch).
+//!   (see [`super::serve`] for the framing: one JSON value per line or
+//!   per binary frame, a JSON *array* is a batch).
 //! * [`handle_batch`] — runs a batch across the engine's worker pool
 //!   and returns responses in request order (the queue's deterministic
 //!   ordering, so batched clients can correlate by position as well as
 //!   by id).
 
-use super::serve::OracleSet;
+use super::serve::{OracleSet, SharedOracleSet};
 use super::LatencyOracle;
 use crate::microbench::{alu, registry};
 use crate::util::json::Value;
 use std::collections::{HashMap, VecDeque};
 use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 /// Cache observability counters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -124,6 +130,146 @@ impl<K: Eq + Hash + Clone, V: Clone> LruCache<K, V> {
     }
 }
 
+/// Shard count for [`ShardedLru`].  A power of two comfortably above
+/// typical worker parallelism; the key is a SipHash output, so the low
+/// bits spread entries evenly.
+pub const WARM_CACHE_SHARDS: usize = 16;
+
+/// The warm-path prediction cache: [`WARM_CACHE_SHARDS`] independent
+/// shards, each a `HashMap` behind its own `RwLock`, with recency kept
+/// as per-entry atomic stamps off a per-shard atomic clock.
+///
+/// A warm hit takes a *shared* read latch on one shard and touches two
+/// relaxed atomics (stamp + hit counter) — concurrent hits never
+/// serialize, on the same shard or across shards, and a cold extraction
+/// filling one shard cannot block hits on the other fifteen.  Writes
+/// (insert + approximate-LRU eviction by minimum stamp) take the
+/// shard's exclusive latch, which is exactly the compile-on-miss path
+/// where lock cost is noise.
+///
+/// Like the oracle's previous single-mutex cache, entries carry their
+/// full source and every hit equality-checks it: a crafted 64-bit hash
+/// collision degrades to a miss, never to another kernel's numbers.
+#[derive(Debug)]
+pub struct ShardedLru<V> {
+    shards: Vec<RwLock<WarmShard<V>>>,
+    cap_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+#[derive(Debug)]
+struct WarmShard<V> {
+    map: HashMap<u64, WarmEntry<V>>,
+    /// Per-shard recency clock; entries stamp themselves on every hit.
+    clock: AtomicU64,
+}
+
+#[derive(Debug)]
+struct WarmEntry<V> {
+    src: Arc<str>,
+    val: V,
+    stamp: AtomicU64,
+}
+
+impl<V: Clone> ShardedLru<V> {
+    /// Total capacity `cap`, rounded up to a whole number of entries
+    /// per shard.
+    pub fn new(cap: usize) -> ShardedLru<V> {
+        let cap_per_shard = cap.div_ceil(WARM_CACHE_SHARDS).max(1);
+        let shards = (0..WARM_CACHE_SHARDS)
+            .map(|_| {
+                RwLock::new(WarmShard { map: HashMap::new(), clock: AtomicU64::new(0) })
+            })
+            .collect();
+        ShardedLru {
+            shards,
+            cap_per_shard,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &RwLock<WarmShard<V>> {
+        &self.shards[(key as usize) % self.shards.len()]
+    }
+
+    /// Look up under the shared latch, refreshing the entry's recency
+    /// stamp on a hit.  `src` must match the stored source exactly — a
+    /// hash collision is counted as the miss it really is.
+    pub fn get(&self, key: u64, src: &str) -> Option<V> {
+        let shard = self.shard(key).read().unwrap();
+        match shard.map.get(&key) {
+            Some(e) if e.src.as_ref() == src => {
+                let now = shard.clock.fetch_add(1, Ordering::Relaxed) + 1;
+                e.stamp.store(now, Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.val.clone())
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Stats-neutral presence probe (no counters, no recency refresh) —
+    /// the batch dispatcher's lookahead.
+    pub fn contains(&self, key: u64, src: &str) -> bool {
+        let shard = self.shard(key).read().unwrap();
+        matches!(shard.map.get(&key), Some(e) if e.src.as_ref() == src)
+    }
+
+    /// Insert (or replace) under the exclusive latch, evicting the
+    /// oldest-stamped entry when the shard overflows.
+    pub fn put(&self, key: u64, src: Arc<str>, val: V) {
+        let mut shard = self.shard(key).write().unwrap();
+        let stamp = shard.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        shard
+            .map
+            .insert(key, WarmEntry { src, val, stamp: AtomicU64::new(stamp) });
+        if shard.map.len() > self.cap_per_shard {
+            let victim = shard
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp.load(Ordering::Relaxed))
+                .map(|(k, _)| *k);
+            if let Some(k) = victim {
+                shard.map.remove(&k);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap_per_shard * self.shards.len()
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.write().unwrap().map.clear();
+        }
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Request mode over the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
@@ -141,6 +287,9 @@ pub enum Mode {
     /// Oracle / cache / engine statistics.
     Stats,
     Ping,
+    /// Atomically swap a hosted model for a freshly loaded one (live
+    /// servers only — see [`SharedOracleSet::reload_from_path`]).
+    Reload,
 }
 
 impl Mode {
@@ -152,6 +301,7 @@ impl Mode {
             Mode::Throughput => "throughput",
             Mode::Stats => "stats",
             Mode::Ping => "ping",
+            Mode::Reload => "reload",
         }
     }
 }
@@ -172,6 +322,8 @@ pub struct Request {
     /// Which hosted architecture's model answers (a multi-model server
     /// routes by it; absent → the default model).
     pub arch: Option<String>,
+    /// With mode `reload`: server-side path of the model JSON to load.
+    pub model: Option<String>,
 }
 
 /// Parse one JSON object into a [`Request`].
@@ -180,7 +332,7 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
     for key in obj.keys() {
         if !matches!(
             key.as_str(),
-            "id" | "mode" | "kernel" | "instr" | "dependent" | "arch"
+            "id" | "mode" | "kernel" | "instr" | "dependent" | "arch" | "model"
         ) {
             return Err(format!("unknown request field {key:?}"));
         }
@@ -203,14 +355,33 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
         Some("throughput") => Mode::Throughput,
         Some("stats") => Mode::Stats,
         Some("ping") => Mode::Ping,
+        Some("reload") => Mode::Reload,
         Some(other) => return Err(format!("unknown mode {other:?}")),
     };
     let kernel = string_field("kernel")?;
     let instr = string_field("instr")?;
+    let model = string_field("model")?;
+    if model.is_some() && mode != Mode::Reload {
+        return Err("\"model\" only applies to \"reload\" requests".to_string());
+    }
+    if mode == Mode::Reload {
+        if model.is_none() {
+            return Err(
+                "mode \"reload\" needs \"model\" (server-side path of the model JSON)"
+                    .to_string(),
+            );
+        }
+        if kernel.is_some() || instr.is_some() {
+            return Err("\"reload\" takes only \"model\", not a kernel".to_string());
+        }
+    }
     if kernel.is_some() && instr.is_some() {
         return Err("request carries both \"kernel\" and \"instr\"".to_string());
     }
-    if kernel.is_none() && instr.is_none() && !matches!(mode, Mode::Stats | Mode::Ping) {
+    if kernel.is_none()
+        && instr.is_none()
+        && !matches!(mode, Mode::Stats | Mode::Ping | Mode::Reload)
+    {
         return Err(format!("mode {:?} needs \"kernel\" or \"instr\"", mode.as_str()));
     }
     if mode == Mode::Throughput && kernel.is_some() {
@@ -237,7 +408,7 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
                 .to_string(),
         );
     }
-    if dependent && kernel.is_some() {
+    if dependent && (kernel.is_some() || mode == Mode::Reload) {
         return Err(
             "\"dependent\" only applies to \"instr\" requests (a raw kernel already \
              fixes its own dependence structure)"
@@ -245,7 +416,17 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
         );
     }
     let arch = string_field("arch")?;
-    Ok(Request { id: v.get("id").cloned(), mode, kernel, instr, dependent, arch })
+    if arch.is_some() && mode == Mode::Reload {
+        // The model file records its own architecture and reload routes
+        // by it; accepting a second arch field would invite silently
+        // swapping the wrong model.
+        return Err(
+            "\"reload\" routes by the arch recorded in the model file; \"arch\" does \
+             not apply"
+                .to_string(),
+        );
+    }
+    Ok(Request { id: v.get("id").cloned(), mode, kernel, instr, dependent, arch, model })
 }
 
 /// Resolve the request's kernel source: raw PTX verbatim, or the
@@ -290,13 +471,31 @@ pub fn request_id(v: &Value) -> Option<Value> {
     v.get("id").cloned()
 }
 
+/// The serving context one request is answered under: the model-set
+/// snapshot the request resolved against, plus (on a live server) the
+/// shared slot hot `reload` swaps.  `respond(set, …)` callers without a
+/// live server pass `shared: None` and get a clean error for `reload`.
+#[derive(Clone, Copy)]
+pub struct ServeCtx<'a> {
+    pub set: &'a OracleSet,
+    pub shared: Option<&'a SharedOracleSet>,
+}
+
+impl<'a> ServeCtx<'a> {
+    /// A fixed-set context (no hot reload) — the historical `respond`
+    /// shape.
+    pub fn fixed(set: &'a OracleSet) -> ServeCtx<'a> {
+        ServeCtx { set, shared: None }
+    }
+}
+
 /// Serve one request against the hosted model set.  The request's
 /// optional `"arch"` field routes to the matching model (absent → the
 /// default).  Never panics outward: every failure — unknown arch
 /// included — becomes an `{"ok": false, "error": …, "id": …}` response
 /// (`id` from [`request_id`], echoed whether or not parsing succeeded).
 pub fn handle(
-    set: &OracleSet,
+    ctx: ServeCtx<'_>,
     id: Option<Value>,
     parsed: Result<Request, String>,
 ) -> Value {
@@ -304,29 +503,46 @@ pub fn handle(
         Ok(r) => r,
         Err(e) => return err_response(id.as_ref(), &e),
     };
-    let oracle = match set.resolve(req.arch.as_deref()) {
+    let oracle = match ctx.set.resolve(req.arch.as_deref()) {
         Ok(o) => o,
         Err(e) => return err_response(req.id.as_ref(), &e),
     };
-    match handle_inner(set, oracle, &req) {
+    match handle_inner(ctx, oracle, &req) {
         Ok(v) => v,
         Err(e) => err_response(req.id.as_ref(), &e),
     }
 }
 
 fn handle_inner(
-    set: &OracleSet,
+    ctx: ServeCtx<'_>,
     oracle: &LatencyOracle,
     req: &Request,
 ) -> Result<Value, String> {
     let id = req.id.as_ref();
     match req.mode {
         Mode::Ping => Ok(ok_response(id, Mode::Ping).set("pong", true)),
+        Mode::Reload => {
+            let path = req.model.as_deref().ok_or("reload requests take \"model\"")?;
+            let shared = ctx.shared.ok_or(
+                "reload is only available on a live server (this context serves a \
+                 fixed model set)",
+            )?;
+            let summary = shared.reload_from_path(path)?;
+            // The swap is already visible to *new* request lines; this
+            // line's batch keeps its snapshot (no torn reads mid-batch).
+            Ok(ok_response(id, Mode::Reload)
+                .set("arch", summary.arch.as_str())
+                .set("instructions", summary.instructions)
+                .set("reloads", summary.reloads))
+        }
+        // `stats` deliberately stays byte-identical to the pre-sharding
+        // server (no reload counter here — the `reload` response carries
+        // it): existing JSON-mode clients are pinned on these bytes.
         Mode::Stats => Ok(ok_response(id, Mode::Stats)
             .set("stats", oracle.stats_json())
             .set(
                 "archs",
-                Value::Arr(set.archs().into_iter().map(Value::from).collect()),
+                Value::Arr(ctx.set.archs().into_iter().map(Value::from).collect()),
             )),
         Mode::Predict => {
             let src = resolve_kernel(req)?;
@@ -391,13 +607,13 @@ fn handle_inner(
 /// prediction batches run inline: a cache-served prediction is a hash
 /// lookup, far cheaper than scheduling it.
 pub fn handle_batch(
-    set: &OracleSet,
+    ctx: ServeCtx<'_>,
     parsed: Vec<(Option<Value>, Result<Request, String>)>,
 ) -> Vec<Value> {
     let needs_pool = parsed.iter().any(|(_, p)| match p {
         Ok(r) => {
             // An unroutable arch answers inline with an error.
-            let Ok(oracle) = set.resolve(r.arch.as_deref()) else {
+            let Ok(oracle) = ctx.set.resolve(r.arch.as_deref()) else {
                 return false;
             };
             match r.mode {
@@ -413,8 +629,8 @@ pub fn handle_batch(
                         .unwrap_or(false),
                 },
                 // A throughput answer is a model lookup — cheaper than
-                // scheduling it.
-                Mode::Throughput | Mode::Stats | Mode::Ping => false,
+                // scheduling it; reload is a swap, not simulator work.
+                Mode::Throughput | Mode::Stats | Mode::Ping | Mode::Reload => false,
             }
         }
         Err(_) => false,
@@ -422,14 +638,14 @@ pub fn handle_batch(
     if parsed.len() <= 1 || !needs_pool {
         return parsed
             .into_iter()
-            .map(|(id, p)| handle(set, id, p))
+            .map(|(id, p)| handle(ctx, id, p))
             .collect();
     }
     let jobs: Vec<_> = parsed
         .into_iter()
-        .map(|(id, p)| move || handle(set, id, p))
+        .map(|(id, p)| move || handle(ctx, id, p))
         .collect();
-    set.default_oracle().engine().run_all(jobs)
+    ctx.set.default_oracle().engine().run_all(jobs)
 }
 
 #[cfg(test)]
@@ -479,6 +695,63 @@ mod tests {
     }
 
     #[test]
+    fn sharded_lru_hits_misses_collisions_and_eviction() {
+        // Two entries per shard; keys 1, 1+16, 1+32 all land on shard 1.
+        let c: ShardedLru<u64> = ShardedLru::new(2 * WARM_CACHE_SHARDS);
+        assert_eq!(c.cap(), 2 * WARM_CACHE_SHARDS);
+        let (k1, k2, k3) =
+            (1u64, 1 + WARM_CACHE_SHARDS as u64, 1 + 2 * WARM_CACHE_SHARDS as u64);
+
+        assert_eq!(c.get(k1, "a"), None, "cold lookup misses");
+        c.put(k1, Arc::from("a"), 10);
+        assert_eq!(c.get(k1, "a"), Some(10));
+        assert!(c.contains(k1, "a") && !c.contains(k1, "b"));
+
+        // A hash collision (same key, different source) is a miss, never
+        // another kernel's value.
+        assert_eq!(c.get(k1, "b"), None);
+
+        c.put(k2, Arc::from("b"), 20);
+        assert_eq!(c.get(k2, "b"), Some(20));
+        assert_eq!(c.get(k1, "a"), Some(10), "k1 now most recent");
+        c.put(k3, Arc::from("c"), 30); // shard overflows: k2 is oldest
+        assert_eq!(c.get(k2, "b"), None, "k2 evicted by stamp order");
+        assert_eq!(c.get(k1, "a"), Some(10), "recency protected k1");
+        assert_eq!(c.get(k3, "c"), Some(30));
+
+        let s = c.counters();
+        assert_eq!(s.hits, 5);
+        assert_eq!(s.misses, 3, "cold + collision + evicted");
+        assert_eq!(s.evictions, 1);
+        assert_eq!(c.len(), 2, "shard 1 holds the two survivors");
+
+        c.clear();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn sharded_lru_concurrent_warm_hits_are_consistent() {
+        let c: Arc<ShardedLru<u64>> = Arc::new(ShardedLru::new(64));
+        for k in 0..8u64 {
+            c.put(k, Arc::from(format!("src{k}").as_str()), k * 100);
+        }
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for round in 0..200 {
+                        let k = round % 8;
+                        assert_eq!(c.get(k, &format!("src{k}")), Some(k * 100));
+                    }
+                });
+            }
+        });
+        let s = c.counters();
+        assert_eq!(s.hits, 4 * 200);
+        assert_eq!(s.misses, 0);
+    }
+
+    #[test]
     fn request_parsing_and_validation() {
         let r = parse_request(&parse(r#"{"mode":"predict","instr":"add.u32","id":7}"#).unwrap())
             .unwrap();
@@ -516,6 +789,12 @@ mod tests {
             r#"{"mode":"throughput"}"#,                     // needs instr
             r#"{"mode":"throughput","kernel":"x"}"#,        // no raw kernels
             r#"{"mode":"throughput","instr":"add.u32","dependent":true}"#, // indep only
+            r#"{"mode":"reload"}"#,                         // needs model
+            r#"{"mode":"reload","model":7}"#,               // wrong-typed model
+            r#"{"mode":"reload","model":"m.json","instr":"add.u32"}"#, // no kernels
+            r#"{"mode":"reload","model":"m.json","arch":"ampere"}"#,   // arch n/a
+            r#"{"mode":"reload","model":"m.json","dependent":true}"#,  // flag n/a
+            r#"{"mode":"predict","instr":"add.u32","model":"m.json"}"#, // reload-only
         ] {
             assert!(parse_request(&parse(bad).unwrap()).is_err(), "{bad}");
         }

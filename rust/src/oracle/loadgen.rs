@@ -1,0 +1,385 @@
+//! Loopback load generator for the serving stack (`repro loadgen`,
+//! `benches/serve.rs`).
+//!
+//! Spins up a real [`Server`](super::Server) on `127.0.0.1:0`, prewarms
+//! the prediction cache with the exact batch the cells replay, then
+//! hammers it over {json, binary} × {1, 8, 64 connections} (the
+//! defaults — both axes are configurable).  Every connection replays
+//! the same fully-warm predict batch, so the measurement isolates the
+//! serving stack itself: wire codec, cache hit path, per-connection
+//! loop — not model computation.
+//!
+//! Each cell reports sustained QPS (requests per second — *requests*,
+//! not roundtrips: one roundtrip carries a whole batch) and p50/p99
+//! roundtrip latency.  [`write_bench_json`] emits `BENCH_serve.json`
+//! in the same `{"bench", "results": [{"name", "median_ns", …}]}`
+//! shape the other `BENCH_*` files use, so
+//! `.github/scripts/bench_delta.py` gates serve latency regressions
+//! like any other benchmark.
+//!
+//! Clients fully validate the first response on every connection, then
+//! switch to framing-only reads — symmetric across both wire modes, so
+//! client-side decode cost doesn't tilt the json-vs-binary comparison
+//! (the server does identical per-request work regardless).
+
+use super::serve::Server;
+use super::{wire, LatencyOracle};
+use crate::microbench::measurement_kernel;
+use crate::util::json::{self, Value};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Which framing a load-generator connection speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireMode {
+    Json,
+    Binary,
+}
+
+impl WireMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WireMode::Json => "json",
+            WireMode::Binary => "binary",
+        }
+    }
+}
+
+/// Load-generator knobs (`repro loadgen` flags map onto these).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Connection counts to sweep (one cell per mode × count).
+    pub conns: Vec<usize>,
+    /// Wire modes to sweep.
+    pub modes: Vec<WireMode>,
+    /// Sampling time per cell, seconds.
+    pub secs_per_cell: f64,
+    /// Predict requests per roundtrip (one line / one frame).
+    pub batch: usize,
+    /// Distinct kernel sources cycled through the batch (spreads load
+    /// across cache shards like a real client mix would).
+    pub distinct_kernels: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            conns: vec![1, 8, 64],
+            modes: vec![WireMode::Json, WireMode::Binary],
+            secs_per_cell: 2.0,
+            batch: 32,
+            distinct_kernels: 16,
+        }
+    }
+}
+
+/// One mode × connection-count measurement.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub mode: WireMode,
+    pub conns: usize,
+    /// Whole-batch roundtrips completed across all connections.
+    pub roundtrips: u64,
+    /// Individual requests answered (`roundtrips × batch`).
+    pub requests: u64,
+    pub elapsed_ns: u64,
+    /// Sustained requests per second.
+    pub qps: f64,
+    /// Roundtrip latency percentiles (one roundtrip = one batch).
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+impl CellResult {
+    /// Series name in `BENCH_serve.json`: `json_c64`, `binary_c1`, …
+    pub fn name(&self) -> String {
+        format!("{}_c{}", self.mode.as_str(), self.conns)
+    }
+}
+
+/// The warm workload: realistic measurement kernels (clock brackets,
+/// multi-line bodies — a few hundred bytes of PTX each, which is
+/// exactly what makes JSON text parsing expensive relative to binary
+/// decoding), distinct per index.
+pub fn warm_kernels(n: usize) -> Vec<String> {
+    (0..n.max(1))
+        .map(|i| {
+            let imm = i as u64 + 1;
+            measurement_kernel(
+                "add.u32 %r5, 1, 2; add.u32 %r6, 3, 4; add.u32 %r7, 5, 6;",
+                &format!(
+                    "add.u32 %r20, %r5, {imm};\n add.u32 %r21, %r6, {imm};\n \
+                     add.u32 %r22, %r7, {imm};"
+                ),
+            )
+        })
+        .collect()
+}
+
+/// The batch request every roundtrip replays, as a value tree (encoded
+/// once per wire mode, outside the timed loop).
+fn batch_value(kernels: &[String], batch: usize) -> Value {
+    Value::Arr(
+        (0..batch)
+            .map(|i| {
+                Value::obj()
+                    .set("mode", "predict")
+                    .set("kernel", kernels[i % kernels.len()].as_str())
+                    .set("id", i as u64)
+            })
+            .collect(),
+    )
+}
+
+/// Run the full sweep against a freshly spawned loopback server.
+pub fn run_loopback(
+    oracle: Arc<LatencyOracle>,
+    cfg: &LoadgenConfig,
+) -> Result<Vec<CellResult>, String> {
+    let server =
+        Server::bind(oracle, "127.0.0.1:0").map_err(|e| format!("bind: {e}"))?;
+    let addr = server.local_addr().map_err(|e| e.to_string())?;
+    let handle = server.spawn().map_err(|e| format!("spawn: {e}"))?;
+
+    let kernels = warm_kernels(cfg.distinct_kernels);
+    let request = batch_value(&kernels, cfg.batch.max(1));
+    let mut json_bytes = json::to_string(&request).into_bytes();
+    json_bytes.push(b'\n');
+    let frame_bytes = wire::encode_frame(&request);
+
+    // Prewarm: one roundtrip of the exact cell payload compiles and
+    // caches every kernel the cells will touch, so every timed
+    // roundtrip is a pure warm hit.
+    {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("prewarm: {e}"))?;
+        let mut reader =
+            BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+        let mut writer = stream;
+        writer.write_all(&json_bytes).map_err(|e| format!("prewarm send: {e}"))?;
+        let mut line = String::new();
+        reader.read_line(&mut line).map_err(|e| format!("prewarm recv: {e}"))?;
+        validate_batch_text(&line, cfg.batch.max(1)).map_err(|e| format!("prewarm: {e}"))?;
+    }
+
+    let mut cells = Vec::new();
+    for &mode in &cfg.modes {
+        let payload: &[u8] = match mode {
+            WireMode::Json => &json_bytes,
+            WireMode::Binary => &frame_bytes,
+        };
+        for &conns in &cfg.conns {
+            cells.push(run_cell(addr, mode, conns, payload, cfg)?);
+        }
+    }
+    handle.stop();
+    Ok(cells)
+}
+
+fn run_cell(
+    addr: SocketAddr,
+    mode: WireMode,
+    conns: usize,
+    payload: &[u8],
+    cfg: &LoadgenConfig,
+) -> Result<CellResult, String> {
+    let conns = conns.max(1);
+    let batch = cfg.batch.max(1);
+    let deadline = Duration::from_secs_f64(cfg.secs_per_cell.max(0.05));
+    let started = Instant::now();
+    let per_conn: Result<Vec<Vec<u64>>, String> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|_| s.spawn(move || client_loop(addr, mode, payload, batch, started, deadline)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err("loadgen client panicked".to_string()))
+            })
+            .collect()
+    });
+    let elapsed = started.elapsed();
+    let mut lats: Vec<u64> = per_conn?.into_iter().flatten().collect();
+    if lats.is_empty() {
+        return Err(format!(
+            "{} x{} completed zero roundtrips in {:.2}s",
+            mode.as_str(),
+            conns,
+            elapsed.as_secs_f64()
+        ));
+    }
+    lats.sort_unstable();
+    let roundtrips = lats.len() as u64;
+    let requests = roundtrips * batch as u64;
+    Ok(CellResult {
+        mode,
+        conns,
+        roundtrips,
+        requests,
+        elapsed_ns: elapsed.as_nanos() as u64,
+        qps: requests as f64 / elapsed.as_secs_f64(),
+        p50_ns: lats[lats.len() / 2],
+        p99_ns: lats[(lats.len() * 99 / 100).min(lats.len() - 1)],
+    })
+}
+
+fn client_loop(
+    addr: SocketAddr,
+    mode: WireMode,
+    payload: &[u8],
+    batch: usize,
+    started: Instant,
+    deadline: Duration,
+) -> Result<Vec<u64>, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    let mut writer = stream;
+    let mut lats = Vec::new();
+    let mut line = String::new();
+    let mut first = true;
+    while started.elapsed() < deadline {
+        let t = Instant::now();
+        writer.write_all(payload).map_err(|e| format!("send: {e}"))?;
+        match mode {
+            WireMode::Json => {
+                line.clear();
+                if reader.read_line(&mut line).map_err(|e| format!("recv: {e}"))? == 0 {
+                    return Err("server closed the connection".to_string());
+                }
+                if first {
+                    validate_batch_text(&line, batch)?;
+                }
+            }
+            WireMode::Binary => {
+                match wire::read_frame(&mut reader).map_err(|e| format!("recv: {e}"))? {
+                    wire::FrameRead::Frame(p) => {
+                        if first {
+                            let v = wire::decode_value(&p)?;
+                            validate_batch_value(&v, batch)?;
+                        }
+                    }
+                    other => return Err(format!("unexpected frame read: {other:?}")),
+                }
+            }
+        }
+        first = false;
+        lats.push(t.elapsed().as_nanos() as u64);
+    }
+    Ok(lats)
+}
+
+fn validate_batch_text(line: &str, batch: usize) -> Result<(), String> {
+    let v = json::parse(line.trim()).map_err(|e| format!("bad response json: {e}"))?;
+    validate_batch_value(&v, batch)
+}
+
+fn validate_batch_value(v: &Value, batch: usize) -> Result<(), String> {
+    let arr = v.as_arr().ok_or("batch response must be an array")?;
+    if arr.len() != batch {
+        return Err(format!("batch answered {} of {batch} slots", arr.len()));
+    }
+    for (i, r) in arr.iter().enumerate() {
+        if r.get("ok") != Some(&Value::Bool(true)) {
+            return Err(format!("slot {i} failed: {r:?}"));
+        }
+    }
+    Ok(())
+}
+
+/// The `BENCH_serve.json` document (also `repro loadgen --json`).
+/// `median_ns` carries p50 roundtrip latency — the field
+/// `bench_delta.py` diffs — alongside the QPS and p99 series.
+pub fn bench_json(cells: &[CellResult]) -> Value {
+    Value::obj().set("bench", "serve").set(
+        "results",
+        Value::Arr(
+            cells
+                .iter()
+                .map(|c| {
+                    Value::obj()
+                        .set("name", c.name())
+                        .set("mode", c.mode.as_str())
+                        .set("conns", c.conns)
+                        .set("iters", c.roundtrips)
+                        .set("requests", c.requests)
+                        .set("elapsed_ns", c.elapsed_ns)
+                        .set("qps", c.qps)
+                        .set("median_ns", c.p50_ns)
+                        .set("p99_ns", c.p99_ns)
+                })
+                .collect(),
+        ),
+    )
+}
+
+/// Write [`bench_json`] to `path`.
+pub fn write_bench_json(path: &str, cells: &[CellResult]) -> Result<(), String> {
+    std::fs::write(path, json::to_string_pretty(&bench_json(cells)))
+        .map_err(|e| format!("write {path}: {e}"))
+}
+
+/// Human-readable sweep table.
+pub fn render(cells: &[CellResult]) -> String {
+    let mut out = String::from(
+        "mode    conns        qps    p50(us)    p99(us)   requests\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "{:<7} {:>5} {:>10.0} {:>10.1} {:>10.1} {:>10}\n",
+            c.mode.as_str(),
+            c.conns,
+            c.qps,
+            c.p50_ns as f64 / 1e3,
+            c.p99_ns as f64 / 1e3,
+            c.requests,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AmpereConfig;
+    use crate::engine::Engine;
+    use crate::oracle::model;
+
+    #[test]
+    fn quick_sweep_produces_nonzero_cells_in_both_modes() {
+        let oracle = Arc::new(LatencyOracle::with_engine(
+            model::tiny_model(),
+            Engine::new(AmpereConfig::a100()),
+        ));
+        let cfg = LoadgenConfig {
+            conns: vec![2],
+            modes: vec![WireMode::Json, WireMode::Binary],
+            secs_per_cell: 0.2,
+            batch: 4,
+            distinct_kernels: 4,
+        };
+        let cells = run_loopback(oracle, &cfg).expect("loadgen sweep");
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].name(), "json_c2");
+        assert_eq!(cells[1].name(), "binary_c2");
+        for c in &cells {
+            assert!(c.qps > 0.0, "{}: zero qps", c.name());
+            assert!(c.requests >= c.roundtrips, "{}: request accounting", c.name());
+            assert!(c.p50_ns > 0 && c.p50_ns <= c.p99_ns, "{}: percentiles", c.name());
+        }
+
+        let doc = bench_json(&cells);
+        assert_eq!(doc.get("bench").and_then(Value::as_str), Some("serve"));
+        let rows = doc.get("results").and_then(Value::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in rows {
+            for key in ["name", "median_ns", "qps", "p99_ns"] {
+                assert!(row.get(key).is_some(), "missing {key}");
+            }
+        }
+        let table = render(&cells);
+        assert!(table.contains("json") && table.contains("binary"), "{table}");
+    }
+}

@@ -13,13 +13,18 @@
 //!   the model: measurement-window detection, a dataflow pass for
 //!   dependent-chain classification, instruction classes resolved
 //!   through display names and the translator's SASS mappings;
-//! * [`batch`] — the LRU prediction cache (keyed by kernel hash) and
-//!   batch execution across the engine's worker pool;
-//! * [`serve`] — a `std::net::TcpListener` JSON-line protocol server
-//!   (no external deps) with protocol-level batching and multi-model
-//!   hosting: an [`OracleSet`] holds one oracle per architecture and
-//!   requests route by their `"arch"` field (`repro serve --model
-//!   ampere.json --model turing.json`).
+//! * [`batch`] — the sharded warm-path prediction cache (keyed by
+//!   kernel hash) and batch execution across the engine's worker pool;
+//! * [`serve`] — a `std::net::TcpListener` protocol server (no external
+//!   deps) with sharded accept loops, two wire modes (JSON lines and
+//!   length-prefixed binary frames, negotiated by the first byte),
+//!   bounded-queue backpressure, hot model reload, protocol-level
+//!   batching and multi-model hosting: an [`OracleSet`] holds one
+//!   oracle per architecture and requests route by their `"arch"` field
+//!   (`repro serve --model ampere.json --model turing.json`);
+//! * [`wire`] — the binary frame codec both sides of the socket share;
+//! * [`loadgen`] — the loopback load generator behind `repro loadgen`
+//!   and `benches/serve.rs` (`BENCH_serve.json`).
 //!
 //! [`LatencyOracle`] ties them together: predictions are cache-served,
 //! `simulate` requests fall back to the engine's simulator pool, and
@@ -28,14 +33,16 @@
 //! over every Table V row).
 
 pub mod batch;
+pub mod loadgen;
 pub mod model;
 pub mod predict;
 pub mod serve;
+pub mod wire;
 
-pub use batch::{CacheCounters, LruCache, Mode, Request};
+pub use batch::{CacheCounters, LruCache, Mode, Request, ServeCtx, ShardedLru};
 pub use model::{InstrEntry, LatencyModel, ThroughputEntry, WmmaEntry};
 pub use predict::{InstrPrediction, Prediction, Resolution};
-pub use serve::{OracleSet, Server, ServerHandle};
+pub use serve::{OracleSet, Server, ServerHandle, SharedOracleSet};
 
 use crate::engine::{CompiledKernel, Engine};
 use crate::ptx::parse_program;
@@ -93,22 +100,24 @@ pub struct OracleStats {
 }
 
 /// The oracle: an extracted [`LatencyModel`], the [`Engine`] it falls
-/// back to for live simulation, and the LRU prediction cache.
+/// back to for live simulation, and the sharded prediction cache.
 ///
 /// Shared by reference across server worker threads (`&LatencyOracle`
-/// is `Sync`: the cache sits behind a mutex, the engine behind its own
-/// internal locks).
+/// is `Sync`: the warm cache is sharded reader–writer, the compiled
+/// cache sits behind a mutex, the engine behind its own internal
+/// locks).
 pub struct LatencyOracle {
     model: LatencyModel,
     engine: Engine,
     /// Predictions cached behind `Arc` so a warm hit clones a pointer,
-    /// not the per-instruction breakdown.  Entries carry the full
-    /// source: the map key is a bare 64-bit hash (cheap borrowed
-    /// lookups), so every hit equality-checks the source — a crafted
-    /// hash collision degrades to a miss, never to another kernel's
-    /// numbers (the same guarantee the engine's content-addressed
-    /// `KernelCache` gives).
-    cache: Mutex<LruCache<u64, (Arc<str>, Arc<Prediction>)>>,
+    /// not the per-instruction breakdown.  Sharded ([`ShardedLru`]) so
+    /// fully warm batches never serialize on a cache latch.  Entries
+    /// carry the full source: the map key is a bare 64-bit hash (cheap
+    /// borrowed lookups), so every hit equality-checks the source — a
+    /// crafted hash collision degrades to a miss, never to another
+    /// kernel's numbers (the same guarantee the engine's
+    /// content-addressed `KernelCache` gives).
+    cache: ShardedLru<Arc<Prediction>>,
     /// Bounded parse+translate cache for client kernels (see
     /// [`COMPILED_CACHE_CAP`]); same collision-checked layout.
     compiled: Mutex<LruCache<u64, (Arc<str>, Arc<CompiledKernel>)>>,
@@ -123,7 +132,7 @@ impl LatencyOracle {
         Self {
             model,
             engine,
-            cache: Mutex::new(LruCache::new(DEFAULT_CACHE_CAP)),
+            cache: ShardedLru::new(DEFAULT_CACHE_CAP),
             compiled: Mutex::new(LruCache::new(COMPILED_CACHE_CAP)),
             predictions: AtomicU64::new(0),
             simulations: AtomicU64::new(0),
@@ -185,25 +194,16 @@ impl LatencyOracle {
     }
 
     /// Cache-served prediction keyed by kernel hash.  Returns the
-    /// prediction and whether it was a cache hit.
+    /// prediction and whether it was a cache hit.  The warm path takes
+    /// one shared shard latch — concurrent warm batches never serialize
+    /// here (hash collisions are counted as misses inside the cache).
     pub fn predict_cached(&self, src: &str) -> Result<(Arc<Prediction>, bool), String> {
         let key = Self::kernel_hash(src);
-        {
-            let mut cache = self.cache.lock().unwrap();
-            if let Some((stored, p)) = cache.get(&key) {
-                if stored.as_ref() == src {
-                    return Ok((p, true));
-                }
-                // Hash collision: count it as the miss it really is and
-                // recompute (the put below replaces the colliding entry).
-                cache.reclassify_hit_as_miss();
-            }
+        if let Some(p) = self.cache.get(key, src) {
+            return Ok((p, true));
         }
         let p = Arc::new(self.predict_src(src)?);
-        self.cache
-            .lock()
-            .unwrap()
-            .put(key, (Arc::from(src), Arc::clone(&p)));
+        self.cache.put(key, Arc::from(src), Arc::clone(&p));
         Ok((p, false))
     }
 
@@ -211,10 +211,7 @@ impl LatencyOracle {
     /// hit/miss counted, no recency refresh) — the batch dispatcher's
     /// probe.
     pub fn is_prediction_cached(&self, src: &str) -> bool {
-        matches!(
-            self.cache.lock().unwrap().peek_value(&Self::kernel_hash(src)),
-            Some((stored, _)) if stored.as_ref() == src
-        )
+        self.cache.contains(Self::kernel_hash(src), src)
     }
 
     /// Live simulation under the measurement protocol: *n* is derived
@@ -266,16 +263,15 @@ impl LatencyOracle {
     }
 
     pub fn clear_cache(&self) {
-        self.cache.lock().unwrap().clear();
+        self.cache.clear();
     }
 
     pub fn stats(&self) -> OracleStats {
-        let cache = self.cache.lock().unwrap();
         let compiled = self.compiled.lock().unwrap();
         OracleStats {
-            cache: cache.counters(),
-            cache_len: cache.len(),
-            cache_cap: cache.cap(),
+            cache: self.cache.counters(),
+            cache_len: self.cache.len(),
+            cache_cap: self.cache.cap(),
             compiled: compiled.counters(),
             compiled_len: compiled.len(),
             predictions: self.predictions.load(Ordering::Relaxed),

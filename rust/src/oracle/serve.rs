@@ -1,15 +1,30 @@
-//! JSON-line TCP serving for the latency oracle.
+//! TCP serving for the latency oracle: sharded accept loops, two wire
+//! modes, bounded-queue backpressure, hot model reload.
 //!
 //! ## Wire protocol
 //!
-//! One JSON value per `\n`-terminated line, both directions.
+//! Two modes share one port; the **first byte** a client sends picks
+//! one for the whole connection:
 //!
-//! * A JSON **object** is a single request; the response is a single
-//!   object on one line.
+//! * **JSON lines** (any first byte other than [`wire::MAGIC`]) — one
+//!   JSON value per `\n`-terminated line, both directions.  The
+//!   historical protocol, unchanged.
+//! * **Binary frames** (first byte `0xB1`) — length-prefixed frames
+//!   carrying the *same* value trees in the tagged encoding of
+//!   [`super::wire`], both directions.  A binary request decodes to
+//!   exactly what the equivalent JSON line parses to, so the two modes
+//!   answer byte-for-byte identically after canonical serialization —
+//!   binary just skips the text parsing on the hot path.
+//!
+//! In either mode:
+//!
+//! * A JSON **object** (or one framed object) is a single request; the
+//!   response is a single object.
 //! * A JSON **array** of objects is a *batch*: the server answers with
-//!   one array, same order, on one line.  Batches containing
-//!   `simulate`/`check` work fan out across the engine's worker pool;
-//!   pure-prediction batches are served inline from the cache.
+//!   one array, same order.  Batches containing `simulate`/`check`
+//!   work fan out across the engine's worker pool; fully warm
+//!   prediction batches are served inline from the sharded cache
+//!   (shared-latch hits — no lock contention between warm batches).
 //!
 //! Request fields (all optional but mode-dependent — see
 //! [`super::batch::parse_request`]):
@@ -17,13 +32,14 @@
 //! ```text
 //! {"id": 7,                  echoed verbatim in the response
 //!  "mode": "predict",        predict | simulate | check | throughput |
-//!                            stats | ping
+//!                            stats | ping | reload
 //!  "kernel": "<PTX source>", raw kernel to analyse, or
 //!  "instr": "add.u32",       a Table V registry row name (for
 //!                            "throughput" also a wmma dtype key)
 //!  "dependent": true,        with "instr": the dependent-chain variant
-//!  "arch": "turing"}         route to a hosted model (multi-model
+//!  "arch": "turing",         route to a hosted model (multi-model
 //!                            serving; absent -> the default model)
+//!  "model": "new.json"}      with "reload": server-side path to load
 //! ```
 //!
 //! Responses always carry `"ok"`; failures are
@@ -32,32 +48,75 @@
 //! `unresolved` and `cached`; `simulate` adds `cpi`, `delta`, `n`,
 //! `mapping`; `check` adds `predicted_cpi`, `simulated_cpi`, `matches`;
 //! `throughput` adds `cpi_1w`, `peak_ipc_milli`, `peak_ipc`,
-//! `warps_to_peak` and the swept `points` (the model's extracted
-//! multi-warp curve — see `repro throughput` for the live sweep).
+//! `warps_to_peak` and the swept `points`; `reload` adds `arch`,
+//! `instructions` and the server's `reloads` counter.
+//!
+//! ## Hot reload
+//!
+//! `{"mode": "reload", "model": "<path>"}` loads a model JSON from the
+//! server's filesystem (reload is an operator command — the default
+//! CLI binding is loopback) and atomically swaps the hosted
+//! [`OracleSet`] behind an [`Arc`]: requests already being answered
+//! keep the set they resolved against (no torn reads), every later
+//! request line sees the new model, and no connection is dropped.  A
+//! reload is *validated* first: the file must parse, its architecture
+//! must already be hosted, and its L1/L2 geometry must match the
+//! engine the old model ran against — a mismatch is rejected with the
+//! `geometry_mismatch` error and the old model keeps serving.
+//!
+//! ## Backpressure
+//!
+//! Beyond [`MAX_CONNECTIONS`] live connections, new connections *wait*
+//! in a bounded admission queue ([`ACCEPT_QUEUE_DEPTH`] waiters) for up
+//! to [`ACCEPT_QUEUE_DEADLINE`]; only a full queue or an expired
+//! deadline earns the one-line error response.  Because rejection
+//! happens before the first byte is read (mode negotiation never ran),
+//! backpressure errors are always a JSON line, in both wire modes.
 //!
 //! ## Threading
 //!
-//! One accept loop, one thread per live connection (capped at
-//! [`MAX_CONNECTIONS`]; excess connections get a one-line error), and
-//! per-batch fan-out on the shared engine's work queue (scoped threads
-//! per batch — the same execution model the campaign uses).  All
-//! connections share one [`LatencyOracle`] — one prediction cache, one
-//! bounded compiled-kernel cache, one simulator pool.
+//! N accept shards ([`Server::shards`], one cloned listener handle
+//! each — the kernel load-balances `accept` across them), one thread
+//! per admitted connection, and per-batch fan-out on the shared
+//! engine's work queue (scoped threads per batch — the same execution
+//! model the campaign uses).  All connections share one
+//! [`SharedOracleSet`]: one sharded prediction cache, one bounded
+//! compiled-kernel cache, one simulator pool per hosted model.
 
-use super::{batch, LatencyOracle};
+use super::{batch, wire, LatencyOracle};
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Default CLI serving port (`repro serve`).
 pub const DEFAULT_PORT: u16 = 7845;
 
 /// Concurrent-connection cap (one OS thread per live connection).
 pub const MAX_CONNECTIONS: usize = 256;
+
+/// Bounded admission queue: connections past [`MAX_CONNECTIONS`] wait
+/// here (each a parked thread) instead of being turned away.
+pub const ACCEPT_QUEUE_DEPTH: usize = 512;
+
+/// How long a queued connection waits for a slot before the one-line
+/// backpressure error.
+pub const ACCEPT_QUEUE_DEADLINE: Duration = Duration::from_secs(2);
+
+/// Upper bound on accept shards (`available_parallelism` below it).
+pub const MAX_ACCEPT_SHARDS: usize = 8;
+
+/// Accept-shard count for this machine.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(1, MAX_ACCEPT_SHARDS)
+}
 
 /// The hosted models, keyed by architecture.  One server can host
 /// several [`LatencyOracle`]s at once (`repro serve --model a.json
@@ -123,12 +182,182 @@ impl OracleSet {
             )
         })
     }
+
+    /// The same set with one architecture's oracle replaced — the
+    /// reload building block (cheap: clones `Arc`s, not oracles).
+    fn with_replaced(&self, arch: &str, oracle: Arc<LatencyOracle>) -> OracleSet {
+        let mut oracles = self.oracles.clone();
+        oracles.insert(arch.to_string(), oracle);
+        OracleSet { default_arch: self.default_arch.clone(), oracles }
+    }
+}
+
+/// What a successful reload reports back over the wire.
+#[derive(Debug, Clone)]
+pub struct ReloadSummary {
+    pub arch: String,
+    pub instructions: usize,
+    /// Total successful reloads on this server, this one included.
+    pub reloads: u64,
+}
+
+/// The live, swappable model set: connections grab an
+/// `Arc<OracleSet>` snapshot per request line, `reload` swaps the slot
+/// atomically under a write latch.  In-flight requests finish against
+/// their snapshot — a reload can never tear a batch.
+pub struct SharedOracleSet {
+    current: RwLock<Arc<OracleSet>>,
+    /// Serializes whole reload operations (validate → build → swap) so
+    /// two concurrent reloads can't lose each other's swap.
+    reload_gate: Mutex<()>,
+    reloads: AtomicU64,
+}
+
+impl SharedOracleSet {
+    pub fn new(set: OracleSet) -> SharedOracleSet {
+        SharedOracleSet {
+            current: RwLock::new(Arc::new(set)),
+            reload_gate: Mutex::new(()),
+            reloads: AtomicU64::new(0),
+        }
+    }
+
+    /// The current snapshot; hold the `Arc`, not the latch.
+    pub fn current(&self) -> Arc<OracleSet> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// Successful reloads so far.
+    pub fn reloads(&self) -> u64 {
+        self.reloads.load(Ordering::Relaxed)
+    }
+
+    /// Load a model JSON and atomically swap it in for its
+    /// architecture.  Validation before any swap: the file must load,
+    /// its arch must already be hosted (reload replaces, it does not
+    /// add routes), and its cache geometry must match the engine the
+    /// outgoing model ran against — the documented
+    /// `geometry_mismatch` rejection, so `simulate`/`check` stay
+    /// meaningful across a swap.  On any error the old model keeps
+    /// serving untouched.
+    pub fn reload_from_path(&self, path: &str) -> Result<ReloadSummary, String> {
+        let _gate = self.reload_gate.lock().unwrap();
+        let model = super::LatencyModel::load(path)?;
+        let arch = model.arch_normalized().to_string();
+        let set = self.current();
+        let Some(old) = set.oracles.get(&arch) else {
+            return Err(format!(
+                "reload replaces an already-hosted architecture; no model hosted for \
+                 arch {arch:?} (hosted: {})",
+                set.archs().join(", ")
+            ));
+        };
+        if let Some(mismatch) = model.geometry_mismatch(old.engine().cfg()) {
+            return Err(format!("reload rejected: {mismatch}"));
+        }
+        let engine = crate::engine::Engine::new(old.engine().cfg().clone());
+        let instructions = model.instructions.len();
+        let oracle = Arc::new(LatencyOracle::with_engine(model, engine));
+        let next = Arc::new(set.with_replaced(&arch, oracle));
+        *self.current.write().unwrap() = next;
+        let reloads = self.reloads.fetch_add(1, Ordering::Relaxed) + 1;
+        Ok(ReloadSummary { arch, instructions, reloads })
+    }
+}
+
+/// Outcome of asking the admission controller for a connection slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Admit {
+    Granted,
+    TimedOut,
+    QueueFull,
+}
+
+/// Bounded-queue admission: up to `cap` connections are live, up to
+/// `queue_depth` more wait (each a parked thread) for a freed slot
+/// until their deadline.  Replaces the old reject-at-capacity policy —
+/// a short burst now queues instead of erroring.
+struct Admission {
+    state: Mutex<AdmissionState>,
+    freed: Condvar,
+    cap: usize,
+    queue_depth: usize,
+}
+
+struct AdmissionState {
+    active: usize,
+    waiting: usize,
+}
+
+impl Admission {
+    fn new(cap: usize, queue_depth: usize) -> Admission {
+        Admission {
+            state: Mutex::new(AdmissionState { active: 0, waiting: 0 }),
+            freed: Condvar::new(),
+            cap,
+            queue_depth,
+        }
+    }
+
+    fn acquire(&self, deadline: Duration) -> Admit {
+        let mut st = self.state.lock().unwrap();
+        if st.active < self.cap {
+            st.active += 1;
+            return Admit::Granted;
+        }
+        if st.waiting >= self.queue_depth {
+            return Admit::QueueFull;
+        }
+        st.waiting += 1;
+        let start = Instant::now();
+        loop {
+            let Some(left) = deadline.checked_sub(start.elapsed()) else {
+                st.waiting -= 1;
+                return Admit::TimedOut;
+            };
+            let (guard, _) = self.freed.wait_timeout(st, left).unwrap();
+            st = guard;
+            if st.active < self.cap {
+                st.active += 1;
+                st.waiting -= 1;
+                return Admit::Granted;
+            }
+        }
+    }
+
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.active = st.active.saturating_sub(1);
+        drop(st);
+        self.freed.notify_one();
+    }
+
+    /// Park until a slot frees (or `max_wait`) without claiming one —
+    /// the accept loop's stall when `accept` itself fails.
+    fn wait_for_capacity(&self, max_wait: Duration) {
+        let st = self.state.lock().unwrap();
+        if st.active < self.cap {
+            return;
+        }
+        let _ = self.freed.wait_timeout(st, max_wait).unwrap();
+    }
+}
+
+/// Releases the connection's admission slot when its thread ends,
+/// unwinding included, and wakes one queued waiter.
+struct SlotGuard(Arc<Admission>);
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.0.release();
+    }
 }
 
 /// A bound-but-not-yet-serving oracle server.
 pub struct Server {
-    set: OracleSet,
+    shared: Arc<SharedOracleSet>,
     listener: TcpListener,
+    shards: usize,
 }
 
 impl Server {
@@ -140,82 +369,140 @@ impl Server {
 
     /// Bind with a full model set (multi-architecture serving).
     pub fn bind_set(set: OracleSet, addr: &str) -> io::Result<Server> {
-        Ok(Server { set, listener: TcpListener::bind(addr)? })
+        Ok(Server {
+            shared: Arc::new(SharedOracleSet::new(set)),
+            listener: TcpListener::bind(addr)?,
+            shards: default_shards(),
+        })
     }
 
     pub fn local_addr(&self) -> io::Result<SocketAddr> {
         self.listener.local_addr()
     }
 
-    /// Serve forever on the calling thread (the CLI path).
+    /// Accept-shard count this server will run.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The live model set — `reload` swaps it; embedders can too.
+    pub fn shared(&self) -> Arc<SharedOracleSet> {
+        Arc::clone(&self.shared)
+    }
+
+    /// Serve forever on the calling thread (the CLI path): start every
+    /// shard, then wait on them.
     pub fn run(self) -> io::Result<()> {
         let never = Arc::new(AtomicBool::new(false));
-        self.accept_loop(never);
+        for handle in self.start(never)? {
+            let _ = handle.join();
+        }
         Ok(())
     }
 
-    /// Serve on a background thread; the returned handle stops the
-    /// accept loop (tests, examples, benches).
+    /// Serve on background threads; the returned handle stops the
+    /// accept shards (tests, examples, benches).
     pub fn spawn(self) -> io::Result<ServerHandle> {
         let addr = self.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let flag = Arc::clone(&shutdown);
-        let join = std::thread::spawn(move || self.accept_loop(flag));
-        Ok(ServerHandle { addr, shutdown, join: Some(join) })
+        let shards = self.shards;
+        let joins = self.start(Arc::clone(&shutdown))?;
+        Ok(ServerHandle { addr, shutdown, shards, joins })
     }
 
-    fn accept_loop(self, shutdown: Arc<AtomicBool>) {
-        let Server { set, listener } = self;
-        let set = Arc::new(set);
-        let active = Arc::new(AtomicUsize::new(0));
-        for conn in listener.incoming() {
-            if shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            let Ok(stream) = conn else {
-                // Persistent accept errors (EMFILE when the fd limit is
-                // hit, etc.) must not busy-spin the accept thread while
-                // it waits for connection threads to release fds.
-                std::thread::sleep(std::time::Duration::from_millis(50));
-                continue;
-            };
-            // Responses are one small line each; don't let Nagle hold
-            // them back against the client's next request.
-            let _ = stream.set_nodelay(true);
-            // One thread per connection, capped: beyond the cap a
-            // client gets a one-line error instead of an unbounded
-            // thread pile-up.
-            if active.fetch_add(1, Ordering::SeqCst) >= MAX_CONNECTIONS {
-                active.fetch_sub(1, Ordering::SeqCst);
-                reject_at_capacity(stream);
-                continue;
-            }
-            let slot = SlotGuard(Arc::clone(&active));
-            let set = Arc::clone(&set);
-            std::thread::spawn(move || {
-                let _slot = slot; // released on exit, panics included
-                let _ = serve_connection(&set, stream);
-            });
+    fn start(self, shutdown: Arc<AtomicBool>) -> io::Result<Vec<JoinHandle<()>>> {
+        let Server { shared, listener, shards } = self;
+        let admission = Arc::new(Admission::new(MAX_CONNECTIONS, ACCEPT_QUEUE_DEPTH));
+        let mut joins = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            // One cloned listener handle per shard: all block in
+            // `accept` on the same socket and the kernel hands each
+            // ready connection to exactly one of them.
+            let listener = listener.try_clone()?;
+            let shared = Arc::clone(&shared);
+            let admission = Arc::clone(&admission);
+            let shutdown = Arc::clone(&shutdown);
+            joins.push(std::thread::spawn(move || {
+                accept_shard(&listener, &shared, &admission, &shutdown)
+            }));
         }
+        Ok(joins)
     }
 }
 
-/// Turn an over-capacity connection away with the documented one-line
-/// error.  The client has usually pipelined a request already; closing
-/// with those bytes unread makes the kernel RST the socket and destroy
-/// the error in flight, so drain briefly (bounded, short timeout)
-/// before dropping.
-fn reject_at_capacity(stream: TcpStream) {
-    let err = Value::obj()
-        .set("ok", false)
-        .set("error", "server at connection capacity, retry later");
-    let mut writer = BufWriter::new(&stream);
+fn accept_shard(
+    listener: &TcpListener,
+    shared: &Arc<SharedOracleSet>,
+    admission: &Arc<Admission>,
+    shutdown: &AtomicBool,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Persistent accept errors (EMFILE when the fd limit is
+                // hit, etc.) must not busy-spin the accept thread while
+                // it waits for connection threads to release fds — park
+                // on the admission condvar (bounded, so a shutdown or a
+                // transient error can't strand the shard) instead of
+                // the old fixed sleep-poll.
+                admission.wait_for_capacity(Duration::from_millis(100));
+                continue;
+            }
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // Responses are one small line/frame each; don't let Nagle hold
+        // them back against the client's next request.
+        let _ = stream.set_nodelay(true);
+        let shared = Arc::clone(shared);
+        let admission = Arc::clone(admission);
+        // Admission happens *on the connection's own thread* so a full
+        // house parks the newcomer in the bounded queue without ever
+        // blocking the accept shard.
+        std::thread::spawn(move || match admission.acquire(ACCEPT_QUEUE_DEADLINE) {
+            Admit::Granted => {
+                let _slot = SlotGuard(admission); // released on exit, panics included
+                let _ = serve_connection(&shared, stream);
+            }
+            Admit::TimedOut => reject(
+                &stream,
+                "server at connection capacity (admission deadline expired), retry later",
+            ),
+            Admit::QueueFull => reject(
+                &stream,
+                "server at connection capacity (admission queue full), retry later",
+            ),
+        });
+    }
+}
+
+/// Turn a connection away with the documented one-line error.  This
+/// runs before mode negotiation (no byte has been read), so the error
+/// is always a JSON line — binary clients must treat a `{` first byte
+/// as a backpressure rejection.  The client has usually pipelined a
+/// request already; closing with those bytes unread makes the kernel
+/// RST the socket and destroy the error in flight, so drain briefly
+/// (bounded, short timeout) before dropping.
+fn reject(stream: &TcpStream, message: &str) {
+    let err = Value::obj().set("ok", false).set("error", message);
+    let mut writer = BufWriter::new(stream);
     let _ = writer.write_all(json::to_string(&err).as_bytes());
     let _ = writer.write_all(b"\n");
     let _ = writer.flush();
     drop(writer);
-    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
-    let mut reader = &stream;
+    drain_briefly(stream);
+}
+
+/// Bounded, short-timeout drain of unread receive data before close —
+/// see [`reject`] for why (RST would destroy the response in flight).
+fn drain_briefly(stream: &TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut reader = stream;
     let mut sink = [0u8; 8192];
     let mut drained = 0usize;
     loop {
@@ -231,22 +518,13 @@ fn reject_at_capacity(stream: TcpStream) {
     }
 }
 
-/// Decrements the live-connection count when a connection thread ends,
-/// unwinding included.
-struct SlotGuard(Arc<AtomicUsize>);
-
-impl Drop for SlotGuard {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
-    }
-}
-
 /// Handle for a spawned server; stopping is idempotent and also runs on
 /// drop.
 pub struct ServerHandle {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    join: Option<JoinHandle<()>>,
+    shards: usize,
+    joins: Vec<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -254,17 +532,23 @@ impl ServerHandle {
         self.addr
     }
 
-    /// Stop accepting and join the accept loop.  Connections already in
-    /// flight finish on their own threads.
+    /// Stop accepting and join every accept shard.  Connections already
+    /// in flight finish on their own threads.
     pub fn stop(mut self) {
         self.stop_impl();
     }
 
     fn stop_impl(&mut self) {
-        if let Some(join) = self.join.take() {
-            self.shutdown.store(true, Ordering::SeqCst);
-            // Wake the blocking accept with a throwaway connection.
+        if self.joins.is_empty() {
+            return;
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake each blocking accept with a throwaway connection; every
+        // shard consumes at most one before seeing the flag and exiting.
+        for _ in 0..self.shards {
             let _ = TcpStream::connect(self.addr);
+        }
+        for join in self.joins.drain(..) {
             let _ = join.join();
         }
     }
@@ -277,18 +561,43 @@ impl Drop for ServerHandle {
 }
 
 /// Largest accepted request line.  A 64-kernel batch is ~0.5 MiB; the
-/// cap bounds memory against a stream that never sends a newline.
+/// cap bounds memory against a stream that never sends a newline.  The
+/// binary mode's [`wire::MAX_FRAME_BYTES`] mirrors it.
 const MAX_REQUEST_BYTES: u64 = 8 * 1024 * 1024;
 
-/// One client connection: read a line, answer a line, until EOF.
+/// One client connection: peek the first byte to pick the wire mode,
+/// then loop request → response until EOF.
+fn serve_connection(shared: &SharedOracleSet, stream: TcpStream) -> io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let writer = BufWriter::new(stream);
+    // Mode negotiation: peek without consuming.  0xB1 can't start a
+    // JSON document (it isn't even valid UTF-8), so the historical
+    // JSON-line clients land in their mode untouched.
+    let first = {
+        let buf = reader.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(()); // closed before the first byte
+        }
+        buf[0]
+    };
+    if first == wire::MAGIC {
+        serve_binary(shared, reader, writer)
+    } else {
+        serve_json(shared, reader, writer)
+    }
+}
+
+/// JSON-line mode: read a line, answer a line, until EOF.
 ///
 /// Lines are read as raw bytes and converted lossily: a stray non-UTF-8
 /// byte becomes U+FFFD, fails JSON parsing, and earns an `ok:false`
 /// response — per the module contract, malformed input never tears the
 /// connection down (only real socket errors do).
-fn serve_connection(set: &OracleSet, stream: TcpStream) -> io::Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+fn serve_json(
+    shared: &SharedOracleSet,
+    mut reader: BufReader<TcpStream>,
+    mut writer: BufWriter<TcpStream>,
+) -> io::Result<()> {
     let mut buf = Vec::new();
     loop {
         buf.clear();
@@ -309,7 +618,7 @@ fn serve_connection(set: &OracleSet, stream: TcpStream) -> io::Result<()> {
             // RST, which would destroy the error response in flight.
             let _ = reader
                 .get_ref()
-                .set_read_timeout(Some(std::time::Duration::from_millis(200)));
+                .set_read_timeout(Some(Duration::from_millis(200)));
             let mut sink = [0u8; 8192];
             let mut drained = 0u64;
             loop {
@@ -330,27 +639,111 @@ fn serve_connection(set: &OracleSet, stream: TcpStream) -> io::Result<()> {
         if text.is_empty() {
             continue;
         }
-        let response = respond(set, text);
+        let response = respond_shared(shared, text);
         writer.write_all(json::to_string(&response).as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
     }
 }
 
-/// One request line → one response value (object in, object out; array
-/// in, array out).  Requests route to hosted models by their `"arch"`
-/// field (see [`OracleSet::resolve`]).
+/// Binary-frame mode: read a frame, answer a frame, until EOF.
+///
+/// Hardening parity with the JSON path: an oversized declared length is
+/// answered once and the connection closed (the analog of the 8 MiB
+/// line-cap hangup); an undecodable payload — unknown tag, truncation,
+/// trailing bytes, over-deep nesting — earns an error *frame* and the
+/// connection lives on; non-UTF-8 string bytes decode lossily and fail
+/// field validation, never the connection.
+fn serve_binary(
+    shared: &SharedOracleSet,
+    mut reader: BufReader<TcpStream>,
+    mut writer: BufWriter<TcpStream>,
+) -> io::Result<()> {
+    loop {
+        match wire::read_frame(&mut reader)? {
+            wire::FrameRead::Eof => return Ok(()),
+            wire::FrameRead::BadMagic(byte) => {
+                // The stream has desynchronized — without the length
+                // prefix there is no way back to a frame boundary, so
+                // answer once and hang up (the oversized-line analog).
+                let err = Value::obj().set("ok", false).set(
+                    "error",
+                    format!("bad frame magic 0x{byte:02x} (stream desynchronized)"),
+                );
+                wire::write_value_frame(&mut writer, &err)?;
+                writer.flush()?;
+                drain_briefly(reader.get_ref());
+                return Ok(());
+            }
+            wire::FrameRead::TooLarge(len) => {
+                let err = Value::obj().set("ok", false).set(
+                    "error",
+                    format!(
+                        "frame of {len} bytes exceeds the {} byte limit",
+                        wire::MAX_FRAME_BYTES
+                    ),
+                );
+                wire::write_value_frame(&mut writer, &err)?;
+                writer.flush()?;
+                drain_briefly(reader.get_ref());
+                return Ok(());
+            }
+            wire::FrameRead::Frame(payload) => {
+                let response = match wire::decode_value(&payload) {
+                    Err(e) => Value::obj()
+                        .set("ok", false)
+                        .set("error", format!("bad frame payload: {e}")),
+                    Ok(v) => {
+                        let set = shared.current();
+                        let ctx = batch::ServeCtx { set: &set, shared: Some(shared) };
+                        respond_value(ctx, &v)
+                    }
+                };
+                wire::write_value_frame(&mut writer, &response)?;
+                writer.flush()?;
+            }
+        }
+    }
+}
+
+/// One request line → one response value against a *fixed* model set
+/// (object in, object out; array in, array out).  Requests route to
+/// hosted models by their `"arch"` field (see [`OracleSet::resolve`]);
+/// `reload` answers with an error in this context — it needs a live
+/// server's [`SharedOracleSet`] (see [`respond_shared`]).
 pub fn respond(set: &OracleSet, text: &str) -> Value {
+    respond_text(batch::ServeCtx::fixed(set), text)
+}
+
+/// One request line → one response value against a live, swappable
+/// model set: the request resolves against the current snapshot, and
+/// `reload` is available.
+pub fn respond_shared(shared: &SharedOracleSet, text: &str) -> Value {
+    let set = shared.current();
+    respond_text(batch::ServeCtx { set: &set, shared: Some(shared) }, text)
+}
+
+fn respond_text(ctx: batch::ServeCtx<'_>, text: &str) -> Value {
     match json::parse(text) {
         Err(e) => Value::obj().set("ok", false).set("error", format!("bad json: {e}")),
-        Ok(Value::Arr(items)) => {
+        Ok(v) => respond_value(ctx, &v),
+    }
+}
+
+/// One already-parsed request value → one response value — the shared
+/// core both wire modes dispatch into (which is *why* the two modes
+/// answer identically: by the time a request reaches here its framing
+/// is gone).
+pub fn respond_value(ctx: batch::ServeCtx<'_>, v: &Value) -> Value {
+    match v {
+        Value::Arr(items) => {
             let parsed = items
                 .iter()
-                .map(|v| (batch::request_id(v), batch::parse_request(v)))
+                .map(|item| (batch::request_id(item), batch::parse_request(item)))
                 .collect();
-            Value::Arr(batch::handle_batch(set, parsed))
+            Value::Arr(batch::handle_batch(ctx, parsed))
         }
-        Ok(v) => batch::handle(set, batch::request_id(&v), batch::parse_request(&v)),
+        v => batch::handle(ctx, batch::request_id(v), batch::parse_request(v)),
     }
 }
 
@@ -439,9 +832,10 @@ mod tests {
 
     #[test]
     fn spawned_server_stops_cleanly_even_unused() {
-        // stop() must join the accept loop without hanging, and dropping
-        // an already-stopped handle must be a no-op.
+        // stop() must join every accept shard without hanging, and
+        // dropping an already-stopped handle must be a no-op.
         let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").unwrap();
+        assert!(server.shards() >= 1);
         let handle = server.spawn().unwrap();
         assert_ne!(handle.addr().port(), 0, "ephemeral port was assigned");
         handle.stop();
@@ -449,5 +843,99 @@ mod tests {
         // A second server can be spun up and torn down via Drop alone.
         let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").unwrap();
         let _handle = server.spawn().unwrap();
+    }
+
+    #[test]
+    fn admission_grants_queues_and_times_out() {
+        let a = Arc::new(Admission::new(1, 1));
+        assert_eq!(a.acquire(Duration::from_millis(5)), Admit::Granted);
+        // House full, queue empty: a second caller waits out its
+        // deadline.
+        assert_eq!(a.acquire(Duration::from_millis(5)), Admit::TimedOut);
+
+        // Park one patient waiter, filling the queue…
+        let waiter = {
+            let a = Arc::clone(&a);
+            std::thread::spawn(move || a.acquire(Duration::from_secs(10)))
+        };
+        while a.state.lock().unwrap().waiting == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // …so the next caller bounces off the depth bound immediately.
+        assert_eq!(a.acquire(Duration::from_millis(5)), Admit::QueueFull);
+        // Freeing the slot admits the queued waiter.
+        a.release();
+        assert_eq!(waiter.join().unwrap(), Admit::Granted);
+        a.release();
+        assert_eq!(a.acquire(Duration::from_millis(5)), Admit::Granted);
+    }
+
+    #[test]
+    fn reload_swaps_validates_and_reports() {
+        let shared = SharedOracleSet::new(set());
+
+        // reload is refused on a fixed-set respond().
+        let v = respond(&set(), r#"{"mode":"reload","model":"x.json"}"#);
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+        assert!(
+            v.get("error").and_then(Value::as_str).unwrap().contains("live server"),
+            "{v:?}"
+        );
+
+        // A bad path errors and swaps nothing.
+        let v = respond_shared(&shared, r#"{"mode":"reload","model":"/nonexistent/m.json"}"#);
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(shared.reloads(), 0);
+
+        // A live swap: bump add.u32 and watch predictions move.
+        let before = respond_shared(&shared, r#"{"mode":"predict","instr":"add.u32"}"#);
+        assert_eq!(before.get("cpi").and_then(Value::as_u64), Some(2));
+        let mut bumped = model::tiny_model();
+        {
+            let e = bumped.instructions.get_mut("add.u32").expect("add.u32 entry");
+            e.cpi += 5;
+            if let Some(d) = e.dep_cpi.as_mut() {
+                *d += 5;
+            }
+        }
+        let path = std::env::temp_dir().join("serve_reload_unit.json");
+        let path = path.to_str().unwrap().to_string();
+        bumped.save(&path).unwrap();
+        let v = respond_shared(&shared, &format!(r#"{{"mode":"reload","model":"{path}"}}"#));
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{v:?}");
+        assert_eq!(v.get("arch").and_then(Value::as_str), Some("ampere"));
+        assert_eq!(v.get("reloads").and_then(Value::as_u64), Some(1));
+        let after = respond_shared(&shared, r#"{"mode":"predict","instr":"add.u32"}"#);
+        assert_eq!(after.get("cpi").and_then(Value::as_u64), Some(7));
+        assert_eq!(shared.reloads(), 1);
+
+        // Geometry mismatch: documented rejection, old model keeps
+        // serving.
+        let mut wrong = model::tiny_model();
+        wrong.l1_bytes += 1;
+        let wrong_path = std::env::temp_dir().join("serve_reload_unit_wrong.json");
+        let wrong_path = wrong_path.to_str().unwrap().to_string();
+        wrong.save(&wrong_path).unwrap();
+        let v = respond_shared(&shared, &format!(r#"{{"mode":"reload","model":"{wrong_path}"}}"#));
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+        let err = v.get("error").and_then(Value::as_str).unwrap();
+        assert!(err.contains("reload rejected"), "{err}");
+        let still = respond_shared(&shared, r#"{"mode":"predict","instr":"add.u32"}"#);
+        assert_eq!(still.get("cpi").and_then(Value::as_u64), Some(7));
+
+        // An unhosted arch in the file: refused by name.
+        let mut alien = model::tiny_model();
+        alien.arch = "turing".to_string();
+        let alien_path = std::env::temp_dir().join("serve_reload_unit_alien.json");
+        let alien_path = alien_path.to_str().unwrap().to_string();
+        alien.save(&alien_path).unwrap();
+        let v = respond_shared(&shared, &format!(r#"{{"mode":"reload","model":"{alien_path}"}}"#));
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+        let err = v.get("error").and_then(Value::as_str).unwrap();
+        assert!(err.contains("already-hosted") && err.contains("ampere"), "{err}");
+
+        for p in [&path, &wrong_path, &alien_path] {
+            let _ = std::fs::remove_file(p);
+        }
     }
 }

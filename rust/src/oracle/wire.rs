@@ -1,0 +1,393 @@
+//! Length-prefixed binary framing for the oracle wire protocol.
+//!
+//! The serving stack speaks two wire modes over the same port (see
+//! [`super::serve`]): the historical JSON-line mode and this compact
+//! binary mode.  The first byte a client sends disambiguates — no JSON
+//! document can begin with [`MAGIC`] (`0xB1`, invalid UTF-8 lead byte),
+//! so existing JSON clients keep working unchanged.
+//!
+//! ## Frame layout (both directions)
+//!
+//! ```text
+//! +--------+-----------------+------------------+
+//! | 0xB1   | len: u32 LE     | payload (len B)  |
+//! +--------+-----------------+------------------+
+//! ```
+//!
+//! `len` counts payload bytes only and is capped at [`MAX_FRAME_BYTES`]
+//! (the same 8 MiB bound the JSON path puts on a request line).  The
+//! payload is one *value* in the tagged encoding below — the same value
+//! tree a JSON line would carry, so a binary request is exactly a JSON
+//! request minus the text parsing, and the two modes answer
+//! byte-for-byte identically once decoded.
+//!
+//! ## Payload encoding
+//!
+//! One byte of tag, then the tag-specific body.  Numbers keep the JSON
+//! model (`f64`), with whole values sent as integers so the common case
+//! (ids, CPIs, cycle counts) is a fixed 9-byte field:
+//!
+//! ```text
+//! 0x00  null
+//! 0x01  false
+//! 0x02  true
+//! 0x03  u64 LE            (whole numbers 0 ..= 2^53)
+//! 0x04  i64 LE            (whole negative numbers -2^53 ..= -1)
+//! 0x05  f64 LE bits       (everything else)
+//! 0x06  string            u32 LE byte length + UTF-8 bytes
+//! 0x07  array             u32 LE element count + elements
+//! 0x08  object            u32 LE pair count + (string key, value)*
+//! ```
+//!
+//! Object keys are encoded *without* a tag byte (they can only be
+//! strings).  Non-UTF-8 string bytes decode lossily to U+FFFD — parity
+//! with the JSON path's lossy line read, so a stray byte degrades to a
+//! field-level error response, never a dropped connection.  Decoding is
+//! strict about shape: unknown tags, truncated bodies, bytes past the
+//! end of the value, and nesting deeper than [`MAX_DEPTH`] are all
+//! errors the server answers with an error frame.
+
+use crate::util::json::Value;
+use std::io::{self, BufRead, Read, Write};
+
+/// First byte of every frame; also the mode-negotiation byte (a JSON
+/// request can never start with it).
+pub const MAGIC: u8 = 0xB1;
+
+/// Largest accepted frame payload — parity with the JSON path's 8 MiB
+/// request-line cap, and the same bound applies to responses.
+pub const MAX_FRAME_BYTES: u32 = 8 * 1024 * 1024;
+
+/// Maximum value-tree nesting depth accepted by the decoder.  Bounds
+/// stack use against a crafted deeply-nested payload; real requests are
+/// at most three levels (batch → request → id).
+pub const MAX_DEPTH: usize = 64;
+
+/// Whole numbers up to 2^53 round-trip exactly through `f64`, so the
+/// integer wire tags stay lossless.
+const MAX_EXACT_WHOLE: f64 = 9_007_199_254_740_992.0;
+
+const TAG_NULL: u8 = 0x00;
+const TAG_FALSE: u8 = 0x01;
+const TAG_TRUE: u8 = 0x02;
+const TAG_U64: u8 = 0x03;
+const TAG_I64: u8 = 0x04;
+const TAG_F64: u8 = 0x05;
+const TAG_STR: u8 = 0x06;
+const TAG_ARR: u8 = 0x07;
+const TAG_OBJ: u8 = 0x08;
+
+/// Encode one value as a frame *payload* (no magic/length header).
+pub fn encode_value(v: &Value) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    encode_into(v, &mut out);
+    out
+}
+
+/// Encode one value as a complete frame: magic byte, length prefix,
+/// payload — ready to write to the socket in one call.
+pub fn encode_frame(v: &Value) -> Vec<u8> {
+    let payload = encode_value(v);
+    let mut out = Vec::with_capacity(payload.len() + 5);
+    out.push(MAGIC);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn encode_into(v: &Value, out: &mut Vec<u8>) {
+    match v {
+        Value::Null => out.push(TAG_NULL),
+        Value::Bool(false) => out.push(TAG_FALSE),
+        Value::Bool(true) => out.push(TAG_TRUE),
+        Value::Num(n) => {
+            let n = *n;
+            if n.fract() == 0.0 && (0.0..=MAX_EXACT_WHOLE).contains(&n) {
+                out.push(TAG_U64);
+                out.extend_from_slice(&(n as u64).to_le_bytes());
+            } else if n.fract() == 0.0 && (-MAX_EXACT_WHOLE..0.0).contains(&n) {
+                out.push(TAG_I64);
+                out.extend_from_slice(&(n as i64).to_le_bytes());
+            } else {
+                out.push(TAG_F64);
+                out.extend_from_slice(&n.to_bits().to_le_bytes());
+            }
+        }
+        Value::Str(s) => {
+            out.push(TAG_STR);
+            encode_str_body(s, out);
+        }
+        Value::Arr(items) => {
+            out.push(TAG_ARR);
+            out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for item in items {
+                encode_into(item, out);
+            }
+        }
+        Value::Obj(map) => {
+            out.push(TAG_OBJ);
+            out.extend_from_slice(&(map.len() as u32).to_le_bytes());
+            for (k, item) in map {
+                encode_str_body(k, out);
+                encode_into(item, out);
+            }
+        }
+    }
+}
+
+fn encode_str_body(s: &str, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Decode one frame payload into a value.  Strict: the whole buffer
+/// must be exactly one value — trailing bytes are an error, as is any
+/// truncation, unknown tag, or over-deep nesting.
+pub fn decode_value(buf: &[u8]) -> Result<Value, String> {
+    let mut r = Reader { buf, pos: 0 };
+    let v = r.value(0)?;
+    if r.pos != buf.len() {
+        return Err(format!(
+            "{} trailing bytes after the value",
+            buf.len() - r.pos
+        ));
+    }
+    Ok(v)
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&end| end <= self.buf.len())
+            .ok_or_else(|| format!("truncated {what} at byte {}", self.pos))?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u32le(&mut self, what: &str) -> Result<u32, String> {
+        let b = self.bytes(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn fixed8(&mut self, what: &str) -> Result<[u8; 8], String> {
+        let b = self.bytes(8, what)?;
+        Ok([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    }
+
+    fn string(&mut self, what: &str) -> Result<String, String> {
+        let len = self.u32le(what)? as usize;
+        let bytes = self.bytes(len, what)?;
+        // Lossy, like the JSON path's line read: a stray byte becomes
+        // U+FFFD and fails *validation*, not the connection.
+        Ok(String::from_utf8_lossy(bytes).into_owned())
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Value, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} levels"));
+        }
+        let tag = self.bytes(1, "value tag")?[0];
+        match tag {
+            TAG_NULL => Ok(Value::Null),
+            TAG_FALSE => Ok(Value::Bool(false)),
+            TAG_TRUE => Ok(Value::Bool(true)),
+            TAG_U64 => Ok(Value::Num(u64::from_le_bytes(self.fixed8("u64")?) as f64)),
+            TAG_I64 => Ok(Value::Num(i64::from_le_bytes(self.fixed8("i64")?) as f64)),
+            TAG_F64 => Ok(Value::Num(f64::from_bits(u64::from_le_bytes(
+                self.fixed8("f64")?,
+            )))),
+            TAG_STR => Ok(Value::Str(self.string("string")?)),
+            TAG_ARR => {
+                let count = self.u32le("array header")?;
+                // No pre-allocation from the untrusted count: a 5-byte
+                // frame claiming 2^32 elements must fail on truncation,
+                // not allocate first.
+                let mut items = Vec::new();
+                for _ in 0..count {
+                    items.push(self.value(depth + 1)?);
+                }
+                Ok(Value::Arr(items))
+            }
+            TAG_OBJ => {
+                let count = self.u32le("object header")?;
+                let mut map = std::collections::BTreeMap::new();
+                for _ in 0..count {
+                    let k = self.string("object key")?;
+                    let v = self.value(depth + 1)?;
+                    map.insert(k, v);
+                }
+                Ok(Value::Obj(map))
+            }
+            other => Err(format!("unknown value tag 0x{other:02x}")),
+        }
+    }
+}
+
+/// Outcome of reading one frame off the socket.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete payload (already length-checked).
+    Frame(Vec<u8>),
+    /// Clean close before any frame byte.
+    Eof,
+    /// The next byte was not [`MAGIC`] — the stream has desynchronized.
+    BadMagic(u8),
+    /// Declared length exceeds [`MAX_FRAME_BYTES`]; the payload was
+    /// *not* consumed.
+    TooLarge(u32),
+}
+
+/// Read one frame.  Protocol-level problems (bad magic, oversized
+/// declaration) come back as `Ok(FrameRead::…)` so the caller can
+/// answer before hanging up; only real socket failures are `Err`.
+pub fn read_frame<R: BufRead>(r: &mut R) -> io::Result<FrameRead> {
+    let mut magic = [0u8; 1];
+    if r.read(&mut magic)? == 0 {
+        return Ok(FrameRead::Eof);
+    }
+    if magic[0] != MAGIC {
+        return Ok(FrameRead::BadMagic(magic[0]));
+    }
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME_BYTES {
+        return Ok(FrameRead::TooLarge(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(FrameRead::Frame(payload))
+}
+
+/// Write one value as a frame.
+pub fn write_value_frame<W: Write>(w: &mut W, v: &Value) -> io::Result<()> {
+    w.write_all(&encode_frame(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn roundtrip(v: &Value) -> Value {
+        decode_value(&encode_value(v)).expect("decode")
+    }
+
+    #[test]
+    fn every_tag_round_trips() {
+        let v = Value::obj()
+            .set("null", Value::Null)
+            .set("t", true)
+            .set("f", false)
+            .set("zero", 0u64)
+            .set("big", 1u64 << 52)
+            .set("neg", -42i64)
+            .set("frac", 2.5)
+            .set("s", "kernel \"src\"\nline 2")
+            .set("empty", "")
+            .set(
+                "arr",
+                Value::Arr(vec![Value::Null, Value::from(7u64), Value::from("x")]),
+            )
+            .set("obj", Value::obj().set("inner", 1u64));
+        assert_eq!(roundtrip(&v), v);
+        // …and agrees with the JSON text form byte-for-byte after
+        // canonical serialization (the equivalence the server promises).
+        assert_eq!(json::to_string(&roundtrip(&v)), json::to_string(&v));
+    }
+
+    #[test]
+    fn numbers_use_the_expected_tags() {
+        assert_eq!(encode_value(&Value::from(7u64))[0], TAG_U64);
+        assert_eq!(encode_value(&Value::from(-7i64))[0], TAG_I64);
+        assert_eq!(encode_value(&Value::from(0.5))[0], TAG_F64);
+        // Past the exact-whole range integers fall back to f64 bits.
+        assert_eq!(encode_value(&Value::Num(1e300))[0], TAG_F64);
+        for v in [
+            Value::from(7u64),
+            Value::from(-7i64),
+            Value::from(0.5),
+            Value::Num(1e300),
+            Value::Num(MAX_EXACT_WHOLE),
+        ] {
+            assert_eq!(roundtrip(&v), v, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn non_utf8_strings_decode_lossily() {
+        // A string body carrying invalid UTF-8 decodes to U+FFFD —
+        // parity with the JSON path's from_utf8_lossy line read.
+        let mut buf = vec![TAG_STR];
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[0xFF, 0xFE]);
+        let v = decode_value(&buf).unwrap();
+        assert_eq!(v, Value::from("\u{FFFD}\u{FFFD}"));
+    }
+
+    #[test]
+    fn malformed_payloads_are_errors_not_panics() {
+        // empty
+        assert!(decode_value(&[]).is_err());
+        // unknown tag
+        assert!(decode_value(&[0x3F]).unwrap_err().contains("unknown value tag"));
+        // truncated string body
+        let mut buf = vec![TAG_STR];
+        buf.extend_from_slice(&4u32.to_le_bytes());
+        buf.push(b'a');
+        assert!(decode_value(&buf).unwrap_err().contains("truncated"));
+        // trailing bytes after a complete value
+        assert!(decode_value(&[TAG_TRUE, 0x00]).unwrap_err().contains("trailing"));
+        // huge claimed array count on a tiny buffer: truncation, not an
+        // allocation
+        let mut buf = vec![TAG_ARR];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_value(&buf).is_err());
+        // nesting bomb
+        let mut buf = Vec::new();
+        for _ in 0..(MAX_DEPTH + 2) {
+            buf.push(TAG_ARR);
+            buf.extend_from_slice(&1u32.to_le_bytes());
+        }
+        buf.push(TAG_NULL);
+        assert!(decode_value(&buf).unwrap_err().contains("nesting"));
+    }
+
+    #[test]
+    fn frame_reader_handles_eof_magic_and_size() {
+        use std::io::BufReader;
+
+        let v = Value::obj().set("mode", "ping");
+        let mut wire = encode_frame(&v);
+        wire.extend_from_slice(&encode_frame(&Value::from(1u64)));
+        let mut r = BufReader::new(&wire[..]);
+        match read_frame(&mut r).unwrap() {
+            FrameRead::Frame(p) => assert_eq!(decode_value(&p).unwrap(), v),
+            other => panic!("{other:?}"),
+        }
+        match read_frame(&mut r).unwrap() {
+            FrameRead::Frame(p) => assert_eq!(decode_value(&p).unwrap(), Value::from(1u64)),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(read_frame(&mut r).unwrap(), FrameRead::Eof));
+
+        let mut r = BufReader::new(&b"{\"mode\":\"ping\"}\n"[..]);
+        assert!(matches!(read_frame(&mut r).unwrap(), FrameRead::BadMagic(b'{')));
+
+        let mut oversized = vec![MAGIC];
+        oversized.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        let mut r = BufReader::new(&oversized[..]);
+        assert!(matches!(
+            read_frame(&mut r).unwrap(),
+            FrameRead::TooLarge(n) if n == MAX_FRAME_BYTES + 1
+        ));
+    }
+}

@@ -1,16 +1,20 @@
 //! Integration: the latency-oracle subsystem end to end — model
 //! extraction, JSON round-trip, static-vs-live self-consistency over
 //! the full Table V registry, and the loopback TCP serving path with
-//! concurrent clients.
+//! concurrent clients over both framings (JSON lines and binary
+//! frames), hot model reload under live traffic, and the pinned
+//! JSON-mode byte protocol.
 
 use ampere_ubench::config::AmpereConfig;
 use ampere_ubench::engine::Engine;
 use ampere_ubench::microbench::{alu, registry};
-use ampere_ubench::oracle::{LatencyModel, LatencyOracle, Server};
+use ampere_ubench::oracle::{wire, LatencyModel, LatencyOracle, Server};
 use ampere_ubench::util::json::{self, Value};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
 
 /// One extracted model shared by every test in this binary (extraction
 /// runs the full campaign once).
@@ -165,10 +169,59 @@ impl Client {
     }
 
     fn roundtrip(&mut self, request: &str) -> Value {
+        json::parse(&self.roundtrip_raw(request)).expect("response is JSON")
+    }
+
+    /// The raw response line exactly as the server wrote it (minus the
+    /// line terminator) — for pinning bytes, not just values.
+    fn roundtrip_raw(&mut self, request: &str) -> String {
         writeln!(self.stream, "{request}").expect("send");
         let mut line = String::new();
-        self.reader.read_line(&mut line).expect("receive");
-        json::parse(line.trim()).expect("response is JSON")
+        let n = self.reader.read_line(&mut line).expect("receive");
+        assert!(n > 0, "server closed the connection");
+        line.trim().to_string()
+    }
+}
+
+// ---- binary framing --------------------------------------------------
+
+/// A binary frame around a handcrafted payload — tests drive the wire
+/// format below the [`wire::encode_frame`] level.
+fn raw_frame(payload: &[u8]) -> Vec<u8> {
+    let mut f = vec![wire::MAGIC];
+    f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    f.extend_from_slice(payload);
+    f
+}
+
+struct BinClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl BinClient {
+    fn connect(addr: std::net::SocketAddr) -> BinClient {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        BinClient { stream, reader }
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) {
+        self.stream.write_all(bytes).expect("send");
+    }
+
+    fn read_value(&mut self) -> Value {
+        match wire::read_frame(&mut self.reader).expect("read frame") {
+            wire::FrameRead::Frame(payload) => {
+                wire::decode_value(&payload).expect("decode response frame")
+            }
+            other => panic!("expected a response frame, got {other:?}"),
+        }
+    }
+
+    fn roundtrip(&mut self, request: &Value) -> Value {
+        self.send_raw(&wire::encode_frame(request));
+        self.read_value()
     }
 }
 
@@ -239,6 +292,378 @@ fn loopback_server_concurrent_clients_deterministic_responses() {
             });
         }
     });
+
+    handle.stop();
+}
+
+/// Acceptance: both framings carry the same values — the decoded binary
+/// response equals the parsed JSON response, and its canonical
+/// re-serialization reproduces the JSON line byte for byte.  (`stats`
+/// is excluded: its counters drift between the two captures.)
+#[test]
+fn binary_and_json_answers_are_byte_identical() {
+    let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").expect("bind port 0");
+    let handle = server.spawn().expect("spawn");
+
+    let mul_src = alu::kernel_for(&registry::find("mul.lo.u32").unwrap(), false);
+    let batch = Value::Arr(vec![
+        Value::obj().set("mode", "predict").set("instr", "add.u32").set("id", 0_u64),
+        Value::obj().set("mode", "predict").set("kernel", mul_src.as_str()).set("id", 1_u64),
+        Value::obj().set("mode", "check").set("instr", "add.f64").set("id", 2_u64),
+        Value::obj().set("mode", "simulate").set("instr", "add.u32").set("id", 3_u64),
+        Value::obj().set("mode", "warp-drive").set("id", 4_u64),
+        Value::obj().set("mode", "ping").set("id", 5_u64),
+    ]);
+    let line = json::to_string(&batch);
+
+    // Prewarm over JSON so both captures below answer `cached:true`.
+    let mut jc = Client::connect(handle.addr());
+    jc.roundtrip(&line);
+    let json_line = jc.roundtrip_raw(&line);
+
+    let mut bc = BinClient::connect(handle.addr());
+    let bin_value = bc.roundtrip(&batch);
+
+    assert_eq!(
+        bin_value,
+        json::parse(&json_line).expect("json response parses"),
+        "framings answered different values"
+    );
+    assert_eq!(
+        json::to_string(&bin_value),
+        json_line,
+        "canonical serialization of the binary answer must reproduce the JSON bytes"
+    );
+    handle.stop();
+}
+
+/// Acceptance: `reload` swaps the model under live traffic — 4 clients
+/// (2 JSON, 2 binary) stream predict batches across the swap with zero
+/// dropped connections and no torn reads (every slot of a batch answers
+/// from one model snapshot), and post-reload predictions come from the
+/// new model.  A geometry-mismatched file is rejected with the
+/// documented error and the connection survives.
+#[test]
+fn hot_reload_swaps_model_under_live_traffic() {
+    const BATCH: usize = 4;
+    let base = model().lookup("add.u32").expect("add.u32 in model").cpi;
+    let new_cpi = base + 5;
+
+    let mut bumped = model().clone();
+    {
+        let e = bumped.instructions.get_mut("add.u32").expect("add.u32 entry");
+        e.cpi += 5;
+        if let Some(d) = e.dep_cpi.as_mut() {
+            *d += 5;
+        }
+    }
+    let bumped_path = std::env::temp_dir().join("oracle_serving_reload_bumped.json");
+    let bumped_path = bumped_path.to_str().unwrap().to_string();
+    bumped.save(&bumped_path).unwrap();
+
+    let mut wrong = model().clone();
+    wrong.l1_bytes += 1;
+    let wrong_path = std::env::temp_dir().join("oracle_serving_reload_wrong.json");
+    let wrong_path = wrong_path.to_str().unwrap().to_string();
+    wrong.save(&wrong_path).unwrap();
+
+    let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").expect("bind port 0");
+    let handle = server.spawn().expect("spawn");
+    let addr = handle.addr();
+
+    let batch = Value::Arr(
+        (0..BATCH)
+            .map(|i| {
+                Value::obj().set("mode", "predict").set("instr", "add.u32").set("id", i as u64)
+            })
+            .collect(),
+    );
+
+    // One line/frame resolves against one model snapshot, so every slot
+    // of a batch must report the same CPI even mid-swap.
+    let check = |v: &Value| -> u64 {
+        let arr = v.as_arr().expect("batch response is an array");
+        assert_eq!(arr.len(), BATCH);
+        let cpi = arr[0].get("cpi").and_then(Value::as_u64).expect("cpi");
+        for (i, r) in arr.iter().enumerate() {
+            assert_eq!(r.get("ok"), Some(&Value::Bool(true)), "slot {i}: {r:?}");
+            assert_eq!(
+                r.get("cpi").and_then(Value::as_u64),
+                Some(cpi),
+                "torn read: one batch answered from two models: {v:?}"
+            );
+        }
+        assert!(cpi == base || cpi == new_cpi, "cpi {cpi} matches neither model");
+        cpi
+    };
+
+    let total = AtomicU64::new(0);
+    let fired = AtomicBool::new(false);
+
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(|| {
+                let mut c = Client::connect(addr);
+                let line = json::to_string(&batch);
+                let deadline = Instant::now() + Duration::from_secs(30);
+                loop {
+                    let cpi = check(&c.roundtrip(&line));
+                    total.fetch_add(1, Ordering::Relaxed);
+                    if fired.load(Ordering::Acquire) && cpi == new_cpi {
+                        break;
+                    }
+                    assert!(Instant::now() < deadline, "reload never became visible (json)");
+                }
+            });
+            s.spawn(|| {
+                let mut c = BinClient::connect(addr);
+                let deadline = Instant::now() + Duration::from_secs(30);
+                loop {
+                    let cpi = check(&c.roundtrip(&batch));
+                    total.fetch_add(1, Ordering::Relaxed);
+                    if fired.load(Ordering::Acquire) && cpi == new_cpi {
+                        break;
+                    }
+                    assert!(Instant::now() < deadline, "reload never became visible (binary)");
+                }
+            });
+        }
+        s.spawn(|| {
+            // Fire the swap only once real traffic is in flight.
+            while total.load(Ordering::Relaxed) < 12 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let mut c = Client::connect(addr);
+            let v = c.roundtrip(&format!(r#"{{"mode":"reload","model":"{bumped_path}"}}"#));
+            fired.store(true, Ordering::Release);
+            assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{v:?}");
+            assert_eq!(v.get("arch").and_then(Value::as_str), Some("ampere"));
+            assert_eq!(v.get("reloads").and_then(Value::as_u64), Some(1));
+        });
+    });
+
+    // A fresh connection predicts off the new model.
+    let mut c = Client::connect(addr);
+    let v = c.roundtrip(r#"{"mode":"predict","instr":"add.u32"}"#);
+    assert_eq!(v.get("cpi").and_then(Value::as_u64), Some(new_cpi), "{v:?}");
+
+    // Geometry mismatch: documented rejection, the connection survives,
+    // and the bumped model keeps serving.
+    let v = c.roundtrip(&format!(r#"{{"mode":"reload","model":"{wrong_path}"}}"#));
+    assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+    assert!(
+        v.get("error").and_then(Value::as_str).unwrap().contains("reload rejected"),
+        "{v:?}"
+    );
+    let v = c.roundtrip(r#"{"mode":"ping"}"#);
+    assert_eq!(v.get("pong"), Some(&Value::Bool(true)));
+    let v = c.roundtrip(r#"{"mode":"predict","instr":"add.u32"}"#);
+    assert_eq!(v.get("cpi").and_then(Value::as_u64), Some(new_cpi));
+
+    // A missing file errors without touching the hosted model.
+    let v = c.roundtrip(r#"{"mode":"reload","model":"/nonexistent/m.json"}"#);
+    assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+
+    handle.stop();
+    for p in [&bumped_path, &wrong_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// Acceptance: the binary path matches the JSON path's input hardening —
+/// one shared table of JSON-valid-but-invalid requests answers
+/// identically over both framings with the connection intact, plus the
+/// malformed inputs only one framing can express (unparseable text;
+/// raw broken payloads, non-UTF-8 strings, oversized and desynced
+/// frames).
+#[test]
+fn malformed_input_parity_across_wire_modes() {
+    let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").expect("bind port 0");
+    let handle = server.spawn().expect("spawn");
+    let mut jc = Client::connect(handle.addr());
+    let mut bc = BinClient::connect(handle.addr());
+    let ping = Value::obj().set("mode", "ping");
+
+    let cases = [
+        r#"{"mode":"predict"}"#,
+        r#"{"mode":"warp-drive","instr":"add.u32"}"#,
+        r#"{"instr":"add.u32","kernel":"x"}"#,
+        r#"{"instr":"add.u32","typo":1}"#,
+        r#"[1,2]"#,
+        r#"42"#,
+        r#"{"mode":true,"instr":"add.u32"}"#,
+        r#"{"mode":"predict","instr":"add.u32","dependent":"yes"}"#,
+        r#"{"kernel":42}"#,
+        r#"{"mode":"reload","model":7}"#,
+        r#"{"mode":"reload"}"#,
+        r#"{"mode":"predict","instr":"add.u32","model":"m.json"}"#,
+    ];
+    for case in cases {
+        let request = json::parse(case).expect("table cases are valid JSON");
+        let jr = jc.roundtrip(case);
+        let br = bc.roundtrip(&request);
+        assert_eq!(jr, br, "framings disagree on {case}");
+        match &jr {
+            Value::Arr(slots) => {
+                for r in slots {
+                    assert_eq!(r.get("ok"), Some(&Value::Bool(false)), "{case}: {r:?}");
+                }
+            }
+            v => assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "{case}: {v:?}"),
+        }
+        // Neither connection dropped.
+        assert_eq!(jc.roundtrip(r#"{"mode":"ping"}"#).get("pong"), Some(&Value::Bool(true)));
+        assert_eq!(bc.roundtrip(&ping).get("pong"), Some(&Value::Bool(true)));
+    }
+
+    // JSON-only garbage: text no frame can carry still answers a line.
+    for garbage in ["this is not json", r#"{"mode":"#, "}{"] {
+        let v = jc.roundtrip(garbage);
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "{garbage}");
+        assert!(
+            v.get("error").and_then(Value::as_str).unwrap().contains("bad json"),
+            "{garbage}: {v:?}"
+        );
+        assert_eq!(jc.roundtrip(r#"{"mode":"ping"}"#).get("pong"), Some(&Value::Bool(true)));
+    }
+
+    // Binary-only: broken payloads answer an error frame and the
+    // connection stays up.
+    for (payload, what) in [
+        (&[0x3f_u8][..], "unknown tag"),
+        (&[0x06, 4, 0, 0, 0, b'a'][..], "truncated string"),
+        (&[0x02, 0x00][..], "trailing byte after true"),
+    ] {
+        bc.send_raw(&raw_frame(payload));
+        let v = bc.read_value();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "{what}");
+        assert!(
+            v.get("error").and_then(Value::as_str).unwrap().contains("bad frame payload"),
+            "{what}: {v:?}"
+        );
+        assert_eq!(bc.roundtrip(&ping).get("pong"), Some(&Value::Bool(true)), "{what}");
+    }
+
+    // A non-UTF-8 kernel string decodes lossily and answers an ordinary
+    // error — never a dropped connection.
+    let push_raw_str = |out: &mut Vec<u8>, bytes: &[u8]| {
+        out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(bytes);
+    };
+    let mut payload = vec![0x08_u8, 2, 0, 0, 0];
+    push_raw_str(&mut payload, b"kernel");
+    payload.push(0x06);
+    push_raw_str(&mut payload, &[0xff, 0xfe]);
+    push_raw_str(&mut payload, b"mode");
+    payload.push(0x06);
+    push_raw_str(&mut payload, b"predict");
+    bc.send_raw(&raw_frame(&payload));
+    let v = bc.read_value();
+    assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "{v:?}");
+    assert_eq!(bc.roundtrip(&ping).get("pong"), Some(&Value::Bool(true)));
+
+    // An oversized declared length answers once, then the connection
+    // closes (the stream cannot re-frame).
+    let mut oversized = vec![wire::MAGIC];
+    oversized.extend_from_slice(&(wire::MAX_FRAME_BYTES + 1).to_le_bytes());
+    bc.send_raw(&oversized);
+    let v = bc.read_value();
+    assert!(
+        v.get("error").and_then(Value::as_str).unwrap().contains("exceeds"),
+        "{v:?}"
+    );
+    match wire::read_frame(&mut bc.reader) {
+        Ok(wire::FrameRead::Eof) | Err(_) => {}
+        other => panic!("connection should close after an oversized header: {other:?}"),
+    }
+
+    // A desynchronized stream (bad magic mid-connection): one terminal
+    // error frame, then close.
+    let mut bc2 = BinClient::connect(handle.addr());
+    assert_eq!(bc2.roundtrip(&ping).get("pong"), Some(&Value::Bool(true)));
+    bc2.send_raw(&[0x00]);
+    let v = bc2.read_value();
+    assert!(
+        v.get("error").and_then(Value::as_str).unwrap().contains("bad frame magic"),
+        "{v:?}"
+    );
+    match wire::read_frame(&mut bc2.reader) {
+        Ok(wire::FrameRead::Eof) | Err(_) => {}
+        other => panic!("connection should close after desync: {other:?}"),
+    }
+
+    handle.stop();
+}
+
+/// Acceptance: the 1-connection JSON-mode byte protocol is pinned —
+/// existing clients parse these exact lines, so the sharded server must
+/// reproduce them byte for byte (literal pins for the stable lines,
+/// computed pins through the same canonical serializer for the
+/// model-dependent ones).
+#[test]
+fn single_connection_json_protocol_is_pinned_byte_for_byte() {
+    let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").expect("bind port 0");
+    let handle = server.spawn().expect("spawn");
+    let mut c = Client::connect(handle.addr());
+
+    assert_eq!(
+        c.roundtrip_raw(r#"{"mode":"ping","id":"x"}"#),
+        r#"{"id":"x","mode":"ping","ok":true,"pong":true}"#
+    );
+    assert_eq!(
+        c.roundtrip_raw(r#"{"mode":"nope","id":9}"#),
+        r#"{"error":"unknown mode \"nope\"","id":9,"ok":false}"#
+    );
+    assert_eq!(
+        c.roundtrip_raw(r#"[{"mode":"ping","id":0},{"mode":"ping","id":1}]"#),
+        concat!(
+            r#"[{"id":0,"mode":"ping","ok":true,"pong":true},"#,
+            r#"{"id":1,"mode":"ping","ok":true,"pong":true}]"#
+        )
+    );
+
+    // Computed pins: the full predict/simulate key sets under canonical
+    // sorted-key serialization, cold then warm.
+    let o = oracle();
+    let src = alu::kernel_for(&registry::find("add.u32").unwrap(), false);
+    let (p, _) = o.predict_cached(&src).unwrap();
+    let expect_predict = |id: u64, cached: bool| {
+        json::to_string(
+            &Value::obj()
+                .set("ok", true)
+                .set("mode", "predict")
+                .set("id", id)
+                .set("cpi", p.cpi)
+                .set("cycles", p.cycles)
+                .set("n", p.n)
+                .set("unresolved", p.unresolved)
+                .set("cached", cached),
+        )
+    };
+    assert_eq!(
+        c.roundtrip_raw(r#"{"mode":"predict","instr":"add.u32","id":1}"#),
+        expect_predict(1, false)
+    );
+    assert_eq!(
+        c.roundtrip_raw(r#"{"mode":"predict","instr":"add.u32","id":2}"#),
+        expect_predict(2, true)
+    );
+
+    let s = o.simulate(&src).unwrap();
+    let expect_sim = json::to_string(
+        &Value::obj()
+            .set("ok", true)
+            .set("mode", "simulate")
+            .set("id", 3_u64)
+            .set("cpi", s.cpi)
+            .set("delta", s.delta)
+            .set("n", s.n)
+            .set("mapping", s.mapping.as_str()),
+    );
+    assert_eq!(
+        c.roundtrip_raw(r#"{"mode":"simulate","instr":"add.u32","id":3}"#),
+        expect_sim
+    );
 
     handle.stop();
 }
