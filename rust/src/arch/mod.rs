@@ -33,12 +33,20 @@
 //! gap); `repro compare --arch a,b` runs whole campaigns per arch and
 //! tabulates measured deltas (see [`crate::report::compare`]).
 
-use crate::config::{AmpereConfig, Pipe, PipeTiming, TranslationQuirks, ALL_PIPES};
+use crate::config::{
+    AmpereConfig, FamilyTiming, NextGenConfig, Pipe, PipeTiming, TranslationQuirks, WgmmaFlavor,
+    ALL_PIPES,
+};
 use crate::tensor::{WmmaDtype, ALL_DTYPES};
 use crate::util::json::{parse, to_string_pretty, Value};
 
 /// Built-in preset names, in generation order.
-pub const BUILTIN: [&str; 3] = ["volta", "turing", "ampere"];
+pub const BUILTIN: [&str; 5] = ["volta", "turing", "ampere", "hopper", "blackwell"];
+
+/// The next-gen family keys, in [`NextGenConfig`] field order (the JSON
+/// schema, `flatten`, the latency model and the compare table all use
+/// these same strings).
+pub const NEXTGEN_FAMILIES: [&str; 4] = ["cp_async", "tma", "wgmma", "dsmem"];
 
 /// A named, serializable machine description.
 #[derive(Debug, Clone, PartialEq)]
@@ -126,6 +134,8 @@ impl ArchSpec {
         // are Ampere-toolchain observations.
         c.quirks.dep_add_fma_alternation = false;
         c.quirks.neg_abs_mov_folding = false;
+        // Pre-Ampere: none of the async instruction families exist.
+        c.nextgen = NextGenConfig::none();
         ArchSpec { display: "Volta GV100 (Tesla V100-SXM2)".to_string(), config: c }
     }
 
@@ -158,7 +168,68 @@ impl ArchSpec {
         // issue port is occupied far longer per warp instruction.
         c.fp64_pipe = PipeTiming::new(16, 6);
         c.quirks.dep_add_fma_alternation = false;
+        // Pre-Ampere: no async-copy family (LDGSTS arrives with sm_80).
+        c.nextgen = NextGenConfig::none();
         ArchSpec { display: "Turing TU104 (Tesla T4)".to_string(), config: c }
+    }
+
+    /// Hopper GH100 (H100-SXM5), parameterized from the successor study
+    /// that repeats the paper's methodology on sm_90 (Luo et al.,
+    /// "Benchmarking and Dissecting the Nvidia Hopper GPU Architecture",
+    /// arXiv:2402.13499) and calibrated under the same protocol.
+    pub fn hopper() -> ArchSpec {
+        let mut c = AmpereConfig::a100();
+        c.arch_name = "hopper".to_string();
+        c.sm_count = 132;
+        c.tensor.clock_hz = 1.830e9;
+        // Memory hierarchy (H100: 256 KiB L1, 50 MiB L2, 228 KiB SMEM).
+        c.memory.l1_bytes = 256 * 1024;
+        c.memory.l2_bytes = 50 * 1024 * 1024;
+        c.memory.shared_bytes = 228 * 1024;
+        c.memory.l2_hit_latency = 273;
+        c.memory.dram_latency = 650;
+        c.memory.shared_load_latency = 29;
+        c.memory.shared_store_latency = 23;
+        // sm_90's full async surface: faster LDGSTS than Ampere, the
+        // TMA bulk-tensor engine, warpgroup MMA (HGMMA at warpgroup
+        // granularity) and DSMEM cluster access.
+        c.nextgen = NextGenConfig {
+            cp_async: Some(FamilyTiming::new(2, 48)),
+            tma: Some(FamilyTiming::new(4, 190)),
+            wgmma: Some(FamilyTiming::new(16, 32)),
+            dsmem: Some(FamilyTiming::new(2, 49)),
+            wgmma_flavor: WgmmaFlavor::Hgmma,
+        };
+        ArchSpec { display: "Hopper GH100 (H100-SXM5)".to_string(), config: c }
+    }
+
+    /// Blackwell GB100 (B200-class), parameterized from the sm_100
+    /// instruction-latency study (Jarmusch et al., arXiv:2507.10789),
+    /// calibrated like the other presets.
+    pub fn blackwell() -> ArchSpec {
+        let mut c = AmpereConfig::a100();
+        c.arch_name = "blackwell".to_string();
+        c.sm_count = 148;
+        c.tensor.clock_hz = 1.665e9;
+        // B200: 256 KiB L1, 126 MiB L2 (one die's partition view),
+        // 228 KiB SMEM carry-over from Hopper.
+        c.memory.l1_bytes = 256 * 1024;
+        c.memory.l2_bytes = 126 * 1024 * 1024;
+        c.memory.shared_bytes = 228 * 1024;
+        c.memory.l2_hit_latency = 286;
+        c.memory.dram_latency = 600;
+        c.memory.shared_load_latency = 30;
+        c.memory.shared_store_latency = 24;
+        // The async families carry forward with tightened latencies;
+        // warpgroup MMA retires through the tcgen05 tensor-memory path.
+        c.nextgen = NextGenConfig {
+            cp_async: Some(FamilyTiming::new(2, 44)),
+            tma: Some(FamilyTiming::new(4, 170)),
+            wgmma: Some(FamilyTiming::new(16, 28)),
+            dsmem: Some(FamilyTiming::new(2, 42)),
+            wgmma_flavor: WgmmaFlavor::Tcgen05,
+        };
+        ArchSpec { display: "Blackwell GB100 (B200)".to_string(), config: c }
     }
 
     // ---- serialization (the custom-spec JSON schema) -----------------
@@ -220,6 +291,21 @@ impl ArchSpec {
                     .set("neg_abs_mov_folding", c.quirks.neg_abs_mov_folding)
                     .set("clock32_depbar", c.quirks.clock32_depbar),
             )
+            .set("nextgen", {
+                let mut ng = Value::obj();
+                for key in NEXTGEN_FAMILIES {
+                    ng = ng.set(
+                        key,
+                        match c.nextgen.family(key) {
+                            Some(t) => Value::obj()
+                                .set("occupancy", t.occupancy)
+                                .set("latency", t.latency),
+                            None => Value::Null,
+                        },
+                    );
+                }
+                ng.set("wgmma_flavor", c.nextgen.wgmma_flavor.key())
+            })
     }
 
     pub fn to_json_string(&self) -> String {
@@ -321,6 +407,31 @@ impl ArchSpec {
             clock32_depbar: need_bool(q, "clock32_depbar")?,
         };
 
+        // Next-gen families load *leniently*: a spec written before the
+        // family table existed describes a machine without the families
+        // (absent ≠ inherit-Ampere — an arch must opt in explicitly).
+        c.nextgen = crate::config::NextGenConfig::none();
+        if let Some(ng) = v.get("nextgen") {
+            for key in NEXTGEN_FAMILIES {
+                match ng.get(key) {
+                    None | Some(Value::Null) => {}
+                    Some(t) => {
+                        *c.nextgen.family_mut(key).unwrap() = Some(FamilyTiming::new(
+                            need_u64(t, "occupancy")
+                                .map_err(|e| format!("{e} (in nextgen.{key})"))?,
+                            need_u64(t, "latency")
+                                .map_err(|e| format!("{e} (in nextgen.{key})"))?,
+                        ));
+                    }
+                }
+            }
+            if let Some(f) = ng.get("wgmma_flavor").and_then(Value::as_str) {
+                c.nextgen.wgmma_flavor = WgmmaFlavor::from_key(f).ok_or_else(|| {
+                    format!("arch json: unknown wgmma_flavor {f:?} (valid: hgmma, tcgen05)")
+                })?;
+            }
+        }
+
         Ok(ArchSpec { display, config: c })
     }
 
@@ -394,6 +505,15 @@ impl ArchSpec {
             c.quirks.neg_abs_mov_folding.to_string(),
         ));
         out.push(("quirks.clock32_depbar".into(), c.quirks.clock32_depbar.to_string()));
+        for key in NEXTGEN_FAMILIES {
+            let (occ, lat) = match c.nextgen.family(key) {
+                Some(t) => (t.occupancy.to_string(), t.latency.to_string()),
+                None => ("-".to_string(), "-".to_string()),
+            };
+            out.push((format!("nextgen.{key}.occupancy"), occ));
+            out.push((format!("nextgen.{key}.latency"), lat));
+        }
+        out.push(("nextgen.wgmma_flavor".into(), c.nextgen.wgmma_flavor.key().to_string()));
         out
     }
 
@@ -413,7 +533,13 @@ impl ArchSpec {
 
 /// All built-in presets, in [`BUILTIN`] order.
 pub fn list() -> Vec<ArchSpec> {
-    vec![ArchSpec::volta(), ArchSpec::turing(), ArchSpec::ampere()]
+    vec![
+        ArchSpec::volta(),
+        ArchSpec::turing(),
+        ArchSpec::ampere(),
+        ArchSpec::hopper(),
+        ArchSpec::blackwell(),
+    ]
 }
 
 /// Canonical preset name for any accepted alias: product and chip
@@ -427,6 +553,8 @@ pub fn normalize(name: &str) -> &str {
         "a100" | "a100-sim" | "ga100" => "ampere",
         "v100" | "gv100" => "volta",
         "t4" | "tu104" => "turing",
+        "h100" | "gh100" => "hopper",
+        "b200" | "gb100" | "gb200" => "blackwell",
         other => other,
     }
 }
@@ -439,6 +567,8 @@ pub fn get(name: &str) -> Result<ArchSpec, String> {
         "ampere" => Ok(ArchSpec::ampere()),
         "volta" => Ok(ArchSpec::volta()),
         "turing" => Ok(ArchSpec::turing()),
+        "hopper" => Ok(ArchSpec::hopper()),
+        "blackwell" => Ok(ArchSpec::blackwell()),
         other => {
             if other.ends_with(".json") || std::path::Path::new(other).is_file() {
                 ArchSpec::load(other)
@@ -535,12 +665,85 @@ mod tests {
             ("v100", "volta"),
             ("turing", "turing"),
             ("t4", "turing"),
+            ("hopper", "hopper"),
+            ("h100", "hopper"),
+            ("gh100", "hopper"),
+            ("blackwell", "blackwell"),
+            ("b200", "blackwell"),
+            ("gb200", "blackwell"),
         ] {
             assert_eq!(get(alias).unwrap().name(), want, "{alias}");
         }
-        let err = get("hopper").unwrap_err();
-        assert!(err.contains("volta, turing, ampere"), "{err}");
+        let err = get("kepler").unwrap_err();
+        assert!(err.contains("volta, turing, ampere, hopper, blackwell"), "{err}");
         assert_eq!(list().len(), BUILTIN.len());
+    }
+
+    #[test]
+    fn nextgen_capability_tables_follow_the_generations() {
+        use crate::config::WgmmaFlavor;
+        // Pre-Ampere: nothing.  Ampere: cp.async only.  Hopper adds
+        // TMA + wgmma + DSMEM; Blackwell keeps them with tightened
+        // latencies and the tcgen05 lowering.
+        for name in ["volta", "turing"] {
+            let ng = get(name).unwrap().config.nextgen;
+            for key in NEXTGEN_FAMILIES {
+                assert!(ng.family(key).is_none(), "{name} must lack {key}");
+            }
+        }
+        let amp = ArchSpec::ampere().config.nextgen;
+        assert_eq!(amp.cp_async.map(|t| (t.occupancy, t.latency)), Some((2, 52)));
+        assert!(amp.tma.is_none() && amp.wgmma.is_none() && amp.dsmem.is_none());
+
+        let hop = ArchSpec::hopper().config.nextgen;
+        for key in NEXTGEN_FAMILIES {
+            assert!(hop.family(key).is_some(), "hopper must support {key}");
+        }
+        assert_eq!(hop.wgmma_flavor, WgmmaFlavor::Hgmma);
+
+        let bw = ArchSpec::blackwell().config.nextgen;
+        assert_eq!(bw.wgmma_flavor, WgmmaFlavor::Tcgen05);
+        for key in NEXTGEN_FAMILIES {
+            let (h, b) = (hop.family(key).unwrap(), bw.family(key).unwrap());
+            assert!(
+                b.latency <= h.latency,
+                "{key}: blackwell {} must not regress hopper {}",
+                b.latency,
+                h.latency
+            );
+        }
+    }
+
+    #[test]
+    fn nextgen_section_round_trips_and_loads_leniently() {
+        // Dropping the whole section is NOT an error (pre-family specs
+        // stay loadable) — it means "no families", not "inherit Ampere".
+        let mut v = ArchSpec::ampere().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.remove("nextgen");
+        }
+        let loaded = ArchSpec::from_json_str(&to_string_pretty(&v)).unwrap();
+        assert!(loaded.config.nextgen.cp_async.is_none());
+
+        // A malformed family entry IS an error naming the path.
+        let raw = ArchSpec::hopper()
+            .to_json_string()
+            .replace("\"latency\": 190", "\"latency\": \"fast\"");
+        let err = ArchSpec::from_json_str(&raw).unwrap_err();
+        assert!(err.contains("nextgen.tma"), "{err}");
+
+        // And the flattened diff surfaces the family gap.
+        let rows = diff(&ArchSpec::ampere(), &ArchSpec::hopper());
+        let find = |field: &str| {
+            rows.iter()
+                .find(|r| r.field == field)
+                .unwrap_or_else(|| panic!("missing {field}: {rows:?}"))
+        };
+        assert_eq!(find("nextgen.tma.latency").a, "-");
+        assert_eq!(find("nextgen.tma.latency").b, "190");
+        assert_eq!(find("nextgen.cp_async.latency").a, "52");
+        let bw = diff(&ArchSpec::hopper(), &ArchSpec::blackwell());
+        assert!(bw.iter().any(|r| r.field == "nextgen.wgmma_flavor" && r.b == "tcgen05"));
     }
 
     #[test]

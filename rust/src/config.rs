@@ -126,6 +126,128 @@ impl Default for TranslationQuirks {
     }
 }
 
+/// Issue/latency parameters of one post-Ampere instruction family
+/// (async copy, TMA, warpgroup MMA, distributed shared memory).
+/// `occupancy` is the issue-port reservation charged at issue,
+/// `latency` is issue-to-completion — for the asynchronous families
+/// that completion is retired through a commit/wait group, not a
+/// register scoreboard (see `sim::core`'s pending-group channels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FamilyTiming {
+    pub occupancy: u64,
+    pub latency: u64,
+}
+
+impl FamilyTiming {
+    pub const fn new(occupancy: u64, latency: u64) -> Self {
+        Self { occupancy, latency }
+    }
+}
+
+/// Which SASS flavour a generation's warpgroup MMA lowers to: Hopper
+/// issues `HGMMA` from the warpgroup, Blackwell retargets the tensor
+/// memory path (`TCGEN05.MMA`, Jarmusch et al. §IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WgmmaFlavor {
+    Hgmma,
+    Tcgen05,
+}
+
+impl WgmmaFlavor {
+    /// Stable JSON/CLI key.
+    pub fn key(self) -> &'static str {
+        match self {
+            WgmmaFlavor::Hgmma => "hgmma",
+            WgmmaFlavor::Tcgen05 => "tcgen05",
+        }
+    }
+
+    pub fn from_key(s: &str) -> Option<Self> {
+        match s {
+            "hgmma" => Some(WgmmaFlavor::Hgmma),
+            "tcgen05" => Some(WgmmaFlavor::Tcgen05),
+            _ => None,
+        }
+    }
+}
+
+/// Post-Ampere instruction-family capability table: `None` means the
+/// architecture lacks the family and the translator rejects its PTX.
+///
+/// The default is the *Ampere* capability set — `cp.async` (LDGSTS)
+/// arrived with sm_80, everything else is Hopper+ — so
+/// `AmpereConfig::default()` keeps describing the paper's testbed
+/// exactly.  Cited parameters: Luo et al. (arXiv 2402.13499) for
+/// Hopper, Jarmusch et al. (arXiv 2507.10789) for Blackwell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NextGenConfig {
+    /// `cp.async` global→shared copy (SASS LDGSTS): latency is
+    /// issue-to-group-completion for an L1-resident line.
+    pub cp_async: Option<FamilyTiming>,
+    /// TMA bulk tensor load (SASS UTMALDG): descriptor-driven block
+    /// copy, completion through the same async-group channel.
+    pub tma: Option<FamilyTiming>,
+    /// Warpgroup MMA (HGMMA / TCGEN05.MMA): charged on the tensor pipe
+    /// at warpgroup granularity, accumulate is asynchronous.
+    pub wgmma: Option<FamilyTiming>,
+    /// Distributed shared memory — `ld/st.shared::cluster` (SASS
+    /// LDS.CLUSTER): synchronous, remote-SM latency.
+    pub dsmem: Option<FamilyTiming>,
+    /// SASS lowering of the wgmma family on this generation.
+    pub wgmma_flavor: WgmmaFlavor,
+}
+
+impl Default for NextGenConfig {
+    fn default() -> Self {
+        // Ampere: LDGSTS exists (§V-era sm_80 ISA); the copy completes
+        // at L1-hit latency + shared-store service on the LSU pipe.
+        Self {
+            cp_async: Some(FamilyTiming::new(2, 52)),
+            tma: None,
+            wgmma: None,
+            dsmem: None,
+            wgmma_flavor: WgmmaFlavor::Hgmma,
+        }
+    }
+}
+
+impl NextGenConfig {
+    /// Look a family up by its stable string key (the JSON schema, the
+    /// flattened diff, the latency model and the compare table all key
+    /// on these).
+    pub fn family(&self, key: &str) -> Option<FamilyTiming> {
+        match key {
+            "cp_async" => self.cp_async,
+            "tma" => self.tma,
+            "wgmma" => self.wgmma,
+            "dsmem" => self.dsmem,
+            _ => None,
+        }
+    }
+
+    /// Mutable slot for a family key (`None` for unknown keys).
+    pub fn family_mut(&mut self, key: &str) -> Option<&mut Option<FamilyTiming>> {
+        match key {
+            "cp_async" => Some(&mut self.cp_async),
+            "tma" => Some(&mut self.tma),
+            "wgmma" => Some(&mut self.wgmma),
+            "dsmem" => Some(&mut self.dsmem),
+            _ => None,
+        }
+    }
+
+    /// Pre-sm_80 generations: no next-gen family at all.
+    pub const fn none() -> Self {
+        Self {
+            cp_async: None,
+            tma: None,
+            wgmma: None,
+            dsmem: None,
+            wgmma_flavor: WgmmaFlavor::Hgmma,
+        }
+    }
+}
+
 /// Memory-hierarchy geometry and service latencies.
 ///
 /// Latencies are *service* times at each level; the measured Table IV
@@ -239,6 +361,10 @@ pub struct AmpereConfig {
     /// tensor cores support, in `ALL_DTYPES` order (Volta: fp16 only;
     /// Turing adds the integer configs; Ampere adds bf16/tf32/fp64).
     pub wmma_dtypes: Vec<crate::tensor::WmmaDtype>,
+    /// Post-Ampere instruction-family capability/timing table (see
+    /// [`NextGenConfig`]).  Threaded into the translator alongside
+    /// `quirks` so unavailable families are rejected at compile time.
+    pub nextgen: NextGenConfig,
 }
 
 impl Default for AmpereConfig {
@@ -265,6 +391,7 @@ impl Default for AmpereConfig {
             tensor: TensorConfig::default(),
             quirks: TranslationQuirks::default(),
             wmma_dtypes: crate::tensor::ALL_DTYPES.to_vec(),
+            nextgen: NextGenConfig::default(),
         }
     }
 }
@@ -385,6 +512,24 @@ mod tests {
         let wide = PipeTiming::with_ports(2, 4, 3);
         assert_eq!(wide.ports, 3);
         assert_eq!(PipeTiming::new(2, 4), PipeTiming::with_ports(2, 4, 1));
+    }
+
+    #[test]
+    fn nextgen_default_is_the_ampere_capability_set() {
+        // sm_80 has LDGSTS; TMA / wgmma / DSMEM are Hopper+.  Keeping
+        // the default Ampere-shaped is what preserves
+        // `a100() == default()` byte-identity across the arch registry.
+        let ng = NextGenConfig::default();
+        assert!(ng.cp_async.is_some());
+        assert!(ng.tma.is_none());
+        assert!(ng.wgmma.is_none());
+        assert!(ng.dsmem.is_none());
+        assert_eq!(ng.wgmma_flavor, WgmmaFlavor::Hgmma);
+        assert_eq!(AmpereConfig::a100().nextgen, ng);
+
+        let pre = NextGenConfig::none();
+        assert!(pre.cp_async.is_none() && pre.tma.is_none());
+        assert!(pre.wgmma.is_none() && pre.dsmem.is_none());
     }
 
     #[test]

@@ -7,9 +7,9 @@
 //! pure — same source, same program — so each distinct kernel is
 //! compiled exactly once per engine and shared by `Arc` thereafter.
 
-use crate::config::TranslationQuirks;
+use crate::config::{NextGenConfig, TranslationQuirks};
 use crate::ptx::{parse_program, PtxProgram};
-use crate::translate::{translate_program_with, TranslatedProgram};
+use crate::translate::{translate_program_for, TranslatedProgram};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -41,6 +41,7 @@ pub struct CacheStats {
 pub struct KernelCache {
     map: Mutex<HashMap<String, Arc<CompiledKernel>>>,
     quirks: TranslationQuirks,
+    nextgen: NextGenConfig,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -51,9 +52,16 @@ impl KernelCache {
         Self::default()
     }
 
-    /// Cache translating under an explicit architecture's quirks.
+    /// Cache translating under an explicit architecture's quirks (and
+    /// the default Ampere next-gen capability table).
     pub fn with_quirks(quirks: TranslationQuirks) -> Self {
         Self { quirks, ..Self::default() }
+    }
+
+    /// Cache translating under the full per-arch compile surface:
+    /// quirks *and* the next-gen instruction-family table.
+    pub fn for_arch(quirks: TranslationQuirks, nextgen: NextGenConfig) -> Self {
+        Self { quirks, nextgen, ..Self::default() }
     }
 
     /// Fetch the compiled form of `src`, compiling at most once per
@@ -67,7 +75,7 @@ impl KernelCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let prog = parse_program(src).map_err(|e| format!("parse: {e}\n{src}"))?;
-        let tp = translate_program_with(&prog, self.quirks)
+        let tp = translate_program_for(&prog, self.quirks, self.nextgen)
             .map_err(|e| format!("translate: {e}"))?;
         let compiled = Arc::new(CompiledKernel { prog, tp });
         let mut map = self.map.lock().unwrap();

@@ -60,7 +60,7 @@ impl Engine {
     /// serial execution).
     pub fn with_workers(cfg: AmpereConfig, workers: usize) -> Self {
         Self {
-            cache: KernelCache::with_quirks(cfg.quirks),
+            cache: KernelCache::for_arch(cfg.quirks, cfg.nextgen),
             pool: SimPool::new(cfg.clone()),
             warp_pool: WarpSchedulerPool::new(cfg.clone()),
             cfg,

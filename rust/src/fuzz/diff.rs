@@ -37,7 +37,7 @@ use crate::engine::Engine;
 use crate::microbench::{CLOCK_OVERHEAD, MEASUREMENT_PARAMS};
 use crate::oracle::{predict, LatencyModel};
 use crate::ptx::parse_program;
-use crate::translate::translate_program_with;
+use crate::translate::translate_program_for;
 use crate::util::json::{to_string_pretty, Value};
 use std::collections::BTreeMap;
 
@@ -208,7 +208,7 @@ pub fn run_case(
     // Same quirks as the engine's cache: the fresh stack re-translates
     // under the *engine's architecture*, so a cross-arch run never
     // masquerades as translator nondeterminism.
-    let tp2 = translate_program_with(&prog2, engine.cfg().quirks).map_err(|e| {
+    let tp2 = translate_program_for(&prog2, engine.cfg().quirks, engine.cfg().nextgen).map_err(|e| {
         Divergence::new(
             DivergenceKind::Compile,
             format!("fresh translation failed where the cached compile succeeded: {e}"),
@@ -353,7 +353,12 @@ fn shrink(
     kind: DivergenceKind,
 ) -> FuzzCase {
     for size in 1..gen::DEFAULT_SIZE {
-        let candidate = gen::generate_for(seed, size, &engine.cfg().wmma_dtypes);
+        let candidate = gen::generate_for_arch(
+            seed,
+            size,
+            &engine.cfg().wmma_dtypes,
+            &engine.cfg().nextgen,
+        );
         // Size-insensitive families (alu, alu-dep, wmma) regenerate the
         // same kernel at every budget — don't re-simulate those.
         if candidate.src == original.src {
@@ -374,10 +379,16 @@ pub fn run(engine: &Engine, model: &LatencyModel, base_seed: u64, cases: u64) ->
     let mut failures = Vec::new();
     for index in 0..cases {
         let seed = gen::case_seed(base_seed, index);
-        // Arch-aware generation: the wmma family draws from the engine
-        // architecture's capability table (identical to the historical
-        // stream on Ampere, whose table is the full dtype list).
-        let case = gen::generate_for(seed, gen::DEFAULT_SIZE, &engine.cfg().wmma_dtypes);
+        // Arch-aware generation: the wmma and nextgen families draw
+        // from the engine architecture's capability tables (identical
+        // to the historical stream on Ampere, whose wmma table is the
+        // full dtype list and whose async table is the default).
+        let case = gen::generate_for_arch(
+            seed,
+            gen::DEFAULT_SIZE,
+            &engine.cfg().wmma_dtypes,
+            &engine.cfg().nextgen,
+        );
         *family_counts.entry(case.family.name().to_string()).or_insert(0) += 1;
         if let Err(divergence) = run_case(engine, model, &case) {
             let minimized = shrink(engine, model, seed, &case, divergence.kind);

@@ -35,11 +35,18 @@
 //! * [`Family::Throughput`] — `mixed`-shaped windows the harness
 //!   additionally distills into warp traces and replays on the
 //!   multi-warp throughput scheduler, pooled vs. fresh.
+//! * [`Family::NextGen`] — post-Ampere async families drawn from the
+//!   target architecture's capability table
+//!   ([`NextGenConfig`]): `cp.async` / TMA / `wgmma` issue bursts with
+//!   valid commit/wait dataflow, and DSMEM cluster traffic.  Degrades
+//!   to `mixed` when the table is empty (Volta/Turing).
 //!
 //! Every generated kernel carries protocol clock brackets, so all three
 //! differential paths (pooled engine, fresh simulator, static
 //! predictor) see a well-defined measurement window.
 
+use crate::config::NextGenConfig;
+use crate::isa;
 use crate::microbench::registry::{self, RegClass, Row};
 use crate::microbench::{alu, measurement_kernel, wmma, REG_DECLS};
 use crate::ptx::KernelSource;
@@ -62,6 +69,11 @@ pub enum Family {
     /// pooled [`WarpScheduler`](crate::sim::WarpScheduler) must replay
     /// them identically to a fresh one at every swept warp count.
     Throughput,
+    /// Post-Ampere async instruction families (`cp.async` / TMA /
+    /// `wgmma` / DSMEM), drawn only from the target architecture's
+    /// capability table with valid-by-construction commit/wait
+    /// dataflow.
+    NextGen,
 }
 
 impl Family {
@@ -74,11 +86,12 @@ impl Family {
             Family::MultiWindow => "multi-window",
             Family::Wmma => "wmma",
             Family::Throughput => "throughput",
+            Family::NextGen => "nextgen",
         }
     }
 }
 
-pub const ALL_FAMILIES: [Family; 7] = [
+pub const ALL_FAMILIES: [Family; 8] = [
     Family::Alu,
     Family::AluDep,
     Family::Mixed,
@@ -86,6 +99,7 @@ pub const ALL_FAMILIES: [Family; 7] = [
     Family::MultiWindow,
     Family::Wmma,
     Family::Throughput,
+    Family::NextGen,
 ];
 
 /// One generated kernel.
@@ -125,16 +139,37 @@ pub fn generate(seed: u64, size: u32) -> FuzzCase {
 
 /// Generate the case for `seed` at the given size budget, restricting
 /// the wmma family to `wmma_dtypes` (the target architecture's
-/// capability table, `cfg.wmma_dtypes`).  On Ampere the table is the
+/// capability table, `cfg.wmma_dtypes`) and the nextgen family to the
+/// default (Ampere) async-family table.  On Ampere the table is the
 /// full `ALL_DTYPES` list, so every seed regenerates byte-identically
 /// to [`generate`]; on Volta/Turing the wmma family only draws dtypes
 /// that generation's tensor core supports.  An empty table (a custom
 /// spec without tensor cores) degrades the wmma family to `mixed`.
 pub fn generate_for(seed: u64, size: u32, wmma_dtypes: &[WmmaDtype]) -> FuzzCase {
+    generate_for_arch(seed, size, wmma_dtypes, &NextGenConfig::default())
+}
+
+/// The fully arch-aware form: `nextgen` is the target architecture's
+/// async-family capability table (`cfg.nextgen`).  The nextgen family
+/// only draws families the table carries — `cp.async` alone on Ampere,
+/// all four on Hopper/Blackwell — and degrades to `mixed` on
+/// architectures with none (Volta/Turing), exactly like the wmma
+/// family with an empty dtype table.
+pub fn generate_for_arch(
+    seed: u64,
+    size: u32,
+    wmma_dtypes: &[WmmaDtype],
+    nextgen: &NextGenConfig,
+) -> FuzzCase {
     let mut rng = Rng::new(seed);
     let size = size.max(1);
     let mut family = *rng.pick(&ALL_FAMILIES);
     if family == Family::Wmma && wmma_dtypes.is_empty() {
+        family = Family::Mixed;
+    }
+    if family == Family::NextGen
+        && !isa::REGISTRY.iter().any(|f| nextgen.family(f.key).is_some())
+    {
         family = Family::Mixed;
     }
     let (label, src, predict_exact) = match family {
@@ -150,6 +185,7 @@ pub fn generate_for(seed: u64, size: u32, wmma_dtypes: &[WmmaDtype]) -> FuzzCase
             let (label, src, _) = gen_mixed(&mut rng, size);
             (label.replacen("mixed", "throughput", 1), src, false)
         }
+        Family::NextGen => gen_nextgen(&mut rng, size, nextgen),
     };
     FuzzCase { seed, family, label, src, predict_exact }
 }
@@ -343,6 +379,85 @@ fn gen_multi_window(rng: &mut Rng, size: u32) -> (String, String, bool) {
     (format!("multi-window[{windows} windows]"), k.render(), false)
 }
 
+// ---- nextgen ---------------------------------------------------------
+
+/// A burst of one available post-Ampere family with valid commit/wait
+/// dataflow: async families issue 1..=3 instances, seal them with
+/// `commit_group` and (usually) drain with `wait_group 0`; the
+/// synchronous DSMEM family mixes cluster loads and stores.  Offsets
+/// stay inside the declared staging buffer, so nothing reads out of
+/// bounds on any simulator path.
+fn gen_nextgen(rng: &mut Rng, size: u32, ng: &NextGenConfig) -> (String, String, bool) {
+    let avail: Vec<&isa::FamilyInfo> = isa::REGISTRY
+        .iter()
+        .filter(|f| ng.family(f.key).is_some())
+        .collect();
+    let fam = *rng.pick(&avail);
+    let init = ".shared .align 16 .b8 fng[512];\nld.param.u64 %rd50, [out];";
+    let k = 1 + rng.below(size.min(3) as u64) as usize;
+    // Skipping the drain is valid (the group stays sealed past the
+    // window) and exercises the issue-only path a third of the time.
+    let drain = fam.is_async && rng.below(3) != 0;
+    let mut body: Vec<String> = Vec::new();
+    match fam.key {
+        "cp_async" => {
+            for i in 0..k {
+                body.push(format!(
+                    "cp.async.ca.shared.global [fng + {}], [%rd50 + {}], 16;",
+                    16 * i,
+                    16 * i
+                ));
+            }
+            body.push("cp.async.commit_group;".to_string());
+            if drain {
+                body.push("cp.async.wait_group 0;".to_string());
+            }
+        }
+        "tma" => {
+            for i in 0..k {
+                body.push(format!(
+                    "cp.async.bulk.tensor.shared.global [fng + {}], [%rd50 + {}];",
+                    128 * i,
+                    128 * i
+                ));
+            }
+            body.push("cp.async.commit_group;".to_string());
+            if drain {
+                body.push("cp.async.wait_group 0;".to_string());
+            }
+        }
+        "wgmma" => {
+            for i in 0..k {
+                body.push(format!(
+                    "wgmma.mma_async.sync.aligned.m64n64k16.f32.f16.f16 \
+                     {{%f{}}}, {{%f{}}}, {{%f{}}};",
+                    20 + i,
+                    1 + 2 * i,
+                    2 + 2 * i
+                ));
+            }
+            body.push("wgmma.commit_group;".to_string());
+            if drain {
+                body.push("wgmma.wait_group 0;".to_string());
+            }
+        }
+        "dsmem" => {
+            for i in 0..k {
+                let off = 8 * rng.below(16);
+                let sym = if off == 0 { "fng".to_string() } else { format!("fng + {off}") };
+                if rng.bool() {
+                    body.push(format!("ld.shared.cluster.u64 %rd{}, [{sym}];", 40 + i));
+                } else {
+                    body.push(format!("st.shared.cluster.u64 [{sym}], {};", rng.below(1000)));
+                }
+            }
+        }
+        other => unreachable!("family {other:?} has no generator"),
+    }
+    let label = format!("nextgen[{} x{k}{}]", fam.key, if drain { " drained" } else { "" });
+    (label, measurement_kernel(init, &body.join("\n ")), false)
+}
+
 // ---- wmma ------------------------------------------------------------
 
 fn gen_wmma(rng: &mut Rng, dtypes: &[WmmaDtype]) -> (String, String, bool) {
@@ -373,11 +488,15 @@ mod tests {
 
     #[test]
     fn arch_capability_gates_the_wmma_family() {
-        // Full Ampere table: generate_for is byte-identical to generate.
+        // Full Ampere table: generate_for (and the fully arch-aware
+        // form under the default Ampere nextgen table) is
+        // byte-identical to generate.
         for seed in 0..64u64 {
             let a = generate(seed, DEFAULT_SIZE);
             let b = generate_for(seed, DEFAULT_SIZE, &ALL_DTYPES);
+            let c = generate_for_arch(seed, DEFAULT_SIZE, &ALL_DTYPES, &NextGenConfig::default());
             assert_eq!(a.src, b.src, "seed {seed}");
+            assert_eq!(a.src, c.src, "seed {seed}");
         }
         // Restricted table: wmma cases only draw supported dtypes.
         let volta = [WmmaDtype::F16F16, WmmaDtype::F16F32];
@@ -401,10 +520,43 @@ mod tests {
         }
     }
 
+    /// The nextgen family draws only what the target's capability table
+    /// carries: cp.async alone on the Ampere default, all four families
+    /// on Hopper; an empty table (Volta/Turing) degrades to `mixed`.
+    #[test]
+    fn arch_capability_gates_the_nextgen_family() {
+        use crate::arch::ArchSpec;
+        for seed in 0..256u64 {
+            let c = generate(seed, DEFAULT_SIZE);
+            if c.family == Family::NextGen {
+                assert!(c.label.contains("cp_async"), "{}", c.label);
+            }
+        }
+        let hopper = ArchSpec::hopper().config;
+        let mut keys = std::collections::BTreeSet::new();
+        for seed in 0..512u64 {
+            let c = generate_for_arch(seed, DEFAULT_SIZE, &hopper.wmma_dtypes, &hopper.nextgen);
+            if c.family == Family::NextGen {
+                let key = c.label["nextgen[".len()..].split(' ').next().unwrap().to_string();
+                keys.insert(key);
+            }
+        }
+        assert_eq!(
+            keys.iter().map(String::as_str).collect::<Vec<_>>(),
+            vec!["cp_async", "dsmem", "tma", "wgmma"],
+            "hopper draws the full registry"
+        );
+        let volta = ArchSpec::volta().config;
+        for seed in 0..128u64 {
+            let c = generate_for_arch(seed, DEFAULT_SIZE, &volta.wmma_dtypes, &volta.nextgen);
+            assert_ne!(c.family, Family::NextGen, "{}", c.label);
+        }
+    }
+
     #[test]
     fn all_families_reachable_and_alu_is_predict_exact() {
         let mut seen = std::collections::BTreeSet::new();
-        for seed in 0..96u64 {
+        for seed in 0..160u64 {
             let c = generate(seed, DEFAULT_SIZE);
             seen.insert(c.family.name());
             match c.family {

@@ -1,0 +1,323 @@
+//! Next-gen ISA subsystem: the post-Ampere instruction families as a
+//! first-class registry plus their measurement campaign.
+//!
+//! The paper's protocol (§IV-A) measures the *synchronous* Ampere ISA.
+//! The successor literature repeats it per generation — Luo et al.
+//! (arXiv:2402.13499) on Hopper, Jarmusch et al. (arXiv:2507.10789) on
+//! Blackwell — where the interesting instructions are *asynchronous*:
+//!
+//! * `cp.async` (SASS `LDGSTS`, sm_80+) — global→shared copy that
+//!   bypasses the register file and retires through commit/wait groups;
+//! * `cp.async.bulk.tensor` (SASS `UTMALDG`, sm_90+) — the TMA engine's
+//!   descriptor-driven bulk tensor load, same group channel;
+//! * `wgmma.mma_async` (SASS `HGMMA` / `TCGEN05.MMA`, sm_90+) —
+//!   warpgroup MMA with asynchronous accumulate, its own group channel;
+//! * `ld/st.shared.cluster` (SASS `LDS.CLUSTER`, sm_90+) — distributed
+//!   shared memory across a thread-block cluster, synchronous but
+//!   remote.
+//!
+//! Asynchronous completion needs a two-sided protocol, so each family
+//! is characterised by **two** numbers instead of the paper's one:
+//!
+//! * **issue CPI** — clocks around n independent issues *without* a
+//!   wait: what the instruction costs the issue port while the copy/MMA
+//!   runs in the background;
+//! * **completion cycles** — clocks around one issue + `commit_group` +
+//!   `wait_group 0`: the full issue-to-data latency a dependent
+//!   consumer pays.
+//!
+//! Availability is per-architecture ([`NextGenConfig`]): a family the
+//! arch lacks reports `available: false` and measures nothing — the
+//! same shape `repro compare` renders as `-` across generations.
+
+use crate::arch::NEXTGEN_FAMILIES;
+use crate::config::NextGenConfig;
+use crate::engine::Engine;
+use crate::microbench::{measurement_kernel, run_measurement_with, INSTANCES};
+use crate::util::json::Value;
+
+/// Static description of one next-gen family (registry row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FamilyInfo {
+    /// Stable key (`cp_async` / `tma` / `wgmma` / `dsmem`) — matches
+    /// [`NextGenConfig::family`] and the arch JSON schema.
+    pub key: &'static str,
+    /// The PTX mnemonic under test.
+    pub ptx: &'static str,
+    /// Human-readable description for tables/docs.
+    pub display: &'static str,
+    /// Earliest compute capability with the family.
+    pub since: &'static str,
+    /// Does the family retire through a commit/wait group channel
+    /// (false: synchronous, scoreboard-retired)?
+    pub is_async: bool,
+}
+
+/// The registry, in [`NEXTGEN_FAMILIES`] order.
+pub const REGISTRY: [FamilyInfo; 4] = [
+    FamilyInfo {
+        key: "cp_async",
+        ptx: "cp.async.ca.shared.global",
+        display: "async global->shared copy (LDGSTS)",
+        since: "sm_80",
+        is_async: true,
+    },
+    FamilyInfo {
+        key: "tma",
+        ptx: "cp.async.bulk.tensor",
+        display: "TMA bulk tensor load (UTMALDG)",
+        since: "sm_90",
+        is_async: true,
+    },
+    FamilyInfo {
+        key: "wgmma",
+        ptx: "wgmma.mma_async",
+        display: "warpgroup MMA, async accumulate",
+        since: "sm_90",
+        is_async: true,
+    },
+    FamilyInfo {
+        key: "dsmem",
+        ptx: "ld.shared.cluster",
+        display: "distributed shared memory (cluster)",
+        since: "sm_90",
+        is_async: false,
+    },
+];
+
+/// Registry row for `key`.
+pub fn family_info(key: &str) -> Option<&'static FamilyInfo> {
+    REGISTRY.iter().find(|f| f.key == key)
+}
+
+/// One family measured on one architecture.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NextGenMeasurement {
+    /// Registry key.
+    pub family: String,
+    /// PTX mnemonic under test.
+    pub ptx: String,
+    /// Does this architecture's capability table have the family?
+    pub available: bool,
+    /// Per-issue cost with completion overlapped (async families only;
+    /// the synchronous DSMEM family reports `None`).
+    pub issue_cpi: Option<u64>,
+    /// Full issue-to-data cycles through `wait_group 0` (async) or the
+    /// dependent-use latency (DSMEM).
+    pub completion: Option<u64>,
+    /// Dynamic SASS mapping of the measured instruction.
+    pub mapping: Option<String>,
+}
+
+impl NextGenMeasurement {
+    fn unavailable(info: &FamilyInfo) -> Self {
+        Self {
+            family: info.key.to_string(),
+            ptx: info.ptx.to_string(),
+            available: false,
+            issue_cpi: None,
+            completion: None,
+            mapping: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let opt = |v: Option<u64>| v.map(Value::from).unwrap_or(Value::Null);
+        Value::obj()
+            .set("family", self.family.as_str())
+            .set("ptx", self.ptx.as_str())
+            .set("available", self.available)
+            .set("issue_cpi", opt(self.issue_cpi))
+            .set("completion", opt(self.completion))
+            .set(
+                "mapping",
+                self.mapping
+                    .as_deref()
+                    .map(Value::from)
+                    .unwrap_or(Value::Null),
+            )
+    }
+}
+
+/// Kernel preamble shared by the family benchmarks: the staging shared
+/// buffer plus the global source pointer (`out` is the protocol's never-
+/// dereferenced parameter — here it doubles as the copy source, read-only).
+const NG_INIT: &str = ".shared .align 16 .b8 shNG[512];\nld.param.u64 %rd50, [out];";
+
+/// Bodies of the two protocol kernels for a family: `(issue, complete)`.
+/// `issue` runs [`INSTANCES`] independent instances with no wait —
+/// measuring pure issue cost; `complete` runs one instance through
+/// `commit_group` + `wait_group 0` — measuring issue-to-data.  The
+/// synchronous DSMEM family has no issue kernel.
+fn family_bodies(key: &str) -> (Option<String>, String) {
+    match key {
+        "cp_async" => (
+            Some(
+                "cp.async.ca.shared.global [shNG], [%rd50], 16;\n\
+                 cp.async.ca.shared.global [shNG + 16], [%rd50 + 16], 16;\n\
+                 cp.async.ca.shared.global [shNG + 32], [%rd50 + 32], 16;\n\
+                 cp.async.commit_group;"
+                    .to_string(),
+            ),
+            "cp.async.ca.shared.global [shNG], [%rd50], 16;\n\
+             cp.async.commit_group;\n\
+             cp.async.wait_group 0;"
+                .to_string(),
+        ),
+        "tma" => (
+            Some(
+                "cp.async.bulk.tensor.shared.global [shNG], [%rd50];\n\
+                 cp.async.bulk.tensor.shared.global [shNG + 128], [%rd50 + 128];\n\
+                 cp.async.bulk.tensor.shared.global [shNG + 256], [%rd50 + 256];\n\
+                 cp.async.commit_group;"
+                    .to_string(),
+            ),
+            "cp.async.bulk.tensor.shared.global [shNG], [%rd50];\n\
+             cp.async.commit_group;\n\
+             cp.async.wait_group 0;"
+                .to_string(),
+        ),
+        "wgmma" => (
+            Some(
+                "wgmma.mma_async.sync.aligned.m64n64k16.f32.f16.f16 {%f10}, {%f1}, {%f2};\n\
+                 wgmma.mma_async.sync.aligned.m64n64k16.f32.f16.f16 {%f11}, {%f3}, {%f4};\n\
+                 wgmma.mma_async.sync.aligned.m64n64k16.f32.f16.f16 {%f12}, {%f5}, {%f6};\n\
+                 wgmma.commit_group;"
+                    .to_string(),
+            ),
+            "wgmma.mma_async.sync.aligned.m64n64k16.f32.f16.f16 {%f10}, {%f1}, {%f2};\n\
+             wgmma.commit_group;\n\
+             wgmma.wait_group 0;"
+                .to_string(),
+        ),
+        "dsmem" => (None, "ld.shared.cluster.u64 %rd10, [shNG];".to_string()),
+        other => panic!("unknown next-gen family {other:?}"),
+    }
+}
+
+/// Measure one family on the engine's architecture.  Returns the
+/// unavailable row (no numbers) when the arch's table lacks the family.
+pub fn measure_family_with(
+    engine: &Engine,
+    key: &str,
+) -> Result<NextGenMeasurement, String> {
+    let info = family_info(key).ok_or_else(|| format!("unknown next-gen family {key:?}"))?;
+    if engine.cfg().nextgen.family(key).is_none() {
+        return Ok(NextGenMeasurement::unavailable(info));
+    }
+    let (issue_body, complete_body) = family_bodies(key);
+
+    let issue_cpi = match issue_body {
+        None => None,
+        Some(body) => {
+            let src = measurement_kernel(NG_INIT, &body);
+            let m = run_measurement_with(engine, &src, INSTANCES, info.ptx, false)?;
+            Some(m.cpi)
+        }
+    };
+
+    let src = measurement_kernel(NG_INIT, &complete_body);
+    let m = run_measurement_with(engine, &src, 1, info.ptx, true)?;
+
+    Ok(NextGenMeasurement {
+        family: info.key.to_string(),
+        ptx: info.ptx.to_string(),
+        available: true,
+        issue_cpi,
+        completion: Some(m.delta.saturating_sub(crate::microbench::CLOCK_OVERHEAD)),
+        mapping: Some(m.mapping),
+    })
+}
+
+/// The full next-gen campaign: every registry family on the engine's
+/// architecture, in registry order.  Unavailable families come back as
+/// `available: false` rows so cross-arch tables stay rectangular.
+pub fn run_families_with(engine: &Engine) -> Result<Vec<NextGenMeasurement>, String> {
+    NEXTGEN_FAMILIES
+        .into_iter()
+        .map(|key| measure_family_with(engine, key))
+        .collect()
+}
+
+/// The capability table summarised for docs/CLI: which families `cfg`
+/// has, with their timings.
+pub fn availability(ng: &NextGenConfig) -> Vec<(&'static str, Option<(u64, u64)>)> {
+    REGISTRY
+        .iter()
+        .map(|f| (f.key, ng.family(f.key).map(|t| (t.occupancy, t.latency))))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchSpec;
+    use crate::config::AmpereConfig;
+
+    #[test]
+    fn registry_matches_the_config_key_set() {
+        assert_eq!(REGISTRY.len(), NEXTGEN_FAMILIES.len());
+        for (f, key) in REGISTRY.iter().zip(NEXTGEN_FAMILIES) {
+            assert_eq!(f.key, key, "registry order must match NEXTGEN_FAMILIES");
+            assert!(family_info(key).is_some());
+        }
+        assert!(family_info("warp_specialize").is_none());
+    }
+
+    #[test]
+    fn ampere_measures_cp_async_and_skips_the_rest() {
+        let engine = Engine::new(AmpereConfig::a100());
+        let rows = run_families_with(&engine).unwrap();
+        assert_eq!(rows.len(), 4);
+
+        let cp = &rows[0];
+        assert!(cp.available);
+        // Issue is cheap (occupancy-bound), completion pays the full
+        // ~52-cycle copy latency.
+        assert!(cp.issue_cpi.unwrap() <= 8, "{cp:?}");
+        let done = cp.completion.unwrap();
+        assert!((50..=62).contains(&done), "{cp:?}");
+        assert_eq!(cp.mapping.as_deref(), Some("LDGSTS.E.128"));
+
+        for row in &rows[1..] {
+            assert!(!row.available, "{row:?}");
+            assert_eq!(row.completion, None);
+        }
+    }
+
+    #[test]
+    fn hopper_measures_every_family() {
+        let engine = Engine::new(ArchSpec::hopper().config);
+        let rows = run_families_with(&engine).unwrap();
+        assert!(rows.iter().all(|r| r.available), "{rows:?}");
+
+        let by_key = |k: &str| rows.iter().find(|r| r.family == k).unwrap();
+        let tma = by_key("tma");
+        assert!(
+            (188..=205).contains(&tma.completion.unwrap()),
+            "TMA completion must track the 190-cycle table: {tma:?}"
+        );
+        assert_eq!(by_key("wgmma").mapping.as_deref(), Some("HGMMA"));
+        let ds = by_key("dsmem");
+        assert_eq!(ds.issue_cpi, None, "DSMEM is synchronous");
+        assert_eq!(ds.completion, Some(49), "{ds:?}");
+    }
+
+    #[test]
+    fn blackwell_lowers_wgmma_to_tcgen05() {
+        let engine = Engine::new(ArchSpec::blackwell().config);
+        let row = measure_family_with(&engine, "wgmma").unwrap();
+        assert_eq!(row.mapping.as_deref(), Some("TCGEN05.MMA"));
+        // Tightened vs Hopper's 32-cycle table.
+        assert!(row.completion.unwrap() <= 40, "{row:?}");
+    }
+
+    #[test]
+    fn availability_mirrors_the_capability_table() {
+        let ng = ArchSpec::volta().config.nextgen;
+        assert!(availability(&ng).iter().all(|(_, t)| t.is_none()));
+        let ng = ArchSpec::hopper().config.nextgen;
+        let rows = availability(&ng);
+        assert_eq!(rows[1], ("tma", Some((4, 190))));
+    }
+}

@@ -33,6 +33,10 @@
 //! * [`trace`] — dynamic SASS trace capture (the PPT-GPU tool analogue).
 //! * [`microbench`] — the paper's actual contribution: the microbenchmark
 //!   generators + measurement protocol.
+//! * [`isa`] — the next-gen ISA subsystem: registry + two-sided (issue /
+//!   completion) measurement campaign for the post-Ampere instruction
+//!   families (`cp.async`, TMA, `wgmma`, DSMEM) across the Hopper and
+//!   Blackwell presets.
 //! * [`engine`] — the campaign execution engine: content-addressed
 //!   kernel cache (each distinct PTX source parses/translates once),
 //!   simulator pool with cheap reset-on-return, and a fine-grained work
@@ -73,6 +77,7 @@ pub mod config;
 pub mod engine;
 pub mod fuzz;
 pub mod harness;
+pub mod isa;
 pub mod memory;
 pub mod microbench;
 pub mod oracle;

@@ -36,7 +36,7 @@ use ampere_ubench::microbench::{self, alu, insights, memory, registry, wmma};
 use ampere_ubench::oracle::{loadgen, serve, LatencyModel, LatencyOracle, OracleSet, Server};
 use ampere_ubench::tensor::{movm_plan, ALL_DTYPES};
 use ampere_ubench::util::json::{to_string_pretty, Value};
-use ampere_ubench::{fuzz, harness, report, runtime};
+use ampere_ubench::{fuzz, harness, isa, report, runtime};
 use std::sync::Arc;
 
 const USAGE: &str = "\
@@ -46,9 +46,21 @@ USAGE: repro [--small] [--json] [--arch <name|spec.json>] <command> [args]
 
 --arch selects the machine every command measures: a built-in preset
 (ampere — the default, byte-identical to the paper's A100 runs; volta;
-turing — parameterized from the paper's cited predecessor studies), a
-product alias (a100/v100/t4), or a path to a custom-spec JSON file
+turing — parameterized from the paper's cited predecessor studies;
+hopper and blackwell — the successor generations per Luo et al.,
+arXiv:2402.13499, and Jarmusch et al., arXiv:2507.10789), a product
+alias (a100/v100/t4/h100/b200), or a path to a custom-spec JSON file
 (`repro arch show ampere --json` prints the schema).
+
+Post-Ampere instruction families (cp.async / TMA bulk tensor / wgmma /
+distributed shared memory) are gated per arch by the spec's `nextgen`
+capability table: ampere carries cp.async only, hopper and blackwell
+all four, volta/turing none.  Each family measures an issue CPI (cost
+at the issue port, completion overlapped) and completion cycles
+(issue→data through commit_group/wait_group 0); `compare` renders '-'
+where a generation lacks a family, e.g.:
+
+  repro compare --arch ampere,volta,turing,hopper,blackwell --json
 
 COMMANDS:
   campaign              run the complete evaluation (all tables + figures)
@@ -79,9 +91,11 @@ COMMANDS:
                         print cross-arch delta tables: every Table V
                         row's CPI per arch (Δ vs the first), Table IV
                         per level, Table III per dtype ('-' where a
-                        generation lacks the dtype), and the multi-warp
+                        generation lacks the dtype), the multi-warp
                         throughput sweep's peak IPC / warps-to-
-                        saturation per arch (Δ in milli-IPC).  --json
+                        saturation per arch (Δ in milli-IPC), and the
+                        next-gen ISA families' issue CPI / completion
+                        cycles per arch ('-' where absent).  --json
                         emits the same as compare_json.
   validate-oracle       sim TC numerics vs the PJRT/Pallas artifacts
   show-kernel <name> [--dependent]
@@ -152,8 +166,8 @@ the same request/response values and a connection never switches:
 
 JSON lines (one JSON value per line, both directions):
   request   {\"id\": 7,
-             \"mode\": \"predict|simulate|check|throughput|stats|ping|
-                       reload\",
+             \"mode\": \"predict|simulate|check|throughput|stats|
+                       metrics|ping|reload\",
              \"kernel\": \"<PTX>\" | \"instr\": \"add.u32\",
              \"dependent\": true, \"arch\": \"turing\"}
   batch     a JSON array of requests -> one array of responses, same
@@ -172,6 +186,14 @@ JSON lines (one JSON value per line, both directions):
             must host an already-served arch with matching cache
             geometry, or the reload is rejected and the old model
             keeps serving.  Adds arch/instructions/reloads on success.
+  metrics   {\"mode\": \"metrics\"} — serving-layer observability beyond
+            the byte-pinned \"stats\": warm_shards (per-shard hit/miss/
+            eviction/entry counts of the prediction cache — a skewed
+            shard is a key-distribution bug the aggregate hides),
+            admission_waits (connections that parked in the admission
+            queue) and reload_generation (successful reloads); the two
+            server-level numbers are null when no live server backs
+            the context.
 
 Binary frames (same values, length-prefixed):
   frame     0xB1, u32 LE payload length (8 MiB max — same bound as a
@@ -898,6 +920,7 @@ fn main() -> anyhow::Result<()> {
             let mut specs: Vec<ArchSpec> = Vec::new();
             let mut campaigns = Vec::new();
             let mut sweeps = Vec::new();
+            let mut nextgens = Vec::new();
             for name in &names {
                 let spec = arch::get(name).map_err(anyhow::Error::msg)?;
                 let cfg = if args.small {
@@ -913,17 +936,21 @@ fn main() -> anyhow::Result<()> {
                     microbench::throughput::run_sweep_with(&arch_engine, &counts)
                         .map_err(anyhow::Error::msg)?,
                 );
+                nextgens.push(
+                    isa::run_families_with(&arch_engine).map_err(anyhow::Error::msg)?,
+                );
                 specs.push(spec);
             }
             let results: Vec<report::ArchResults<'_>> = specs
                 .iter()
-                .zip(campaigns.iter().zip(&sweeps))
-                .map(|(s, (c, t))| report::ArchResults {
+                .zip(campaigns.iter().zip(sweeps.iter().zip(&nextgens)))
+                .map(|(s, (c, (t, ng)))| report::ArchResults {
                     arch: s.name(),
                     table5: c.table5.as_slice(),
                     table4: c.table4.as_slice(),
                     table3: c.table3.as_slice(),
                     throughput: t.as_slice(),
+                    nextgen: ng.as_slice(),
                 })
                 .collect();
             if args.json {

@@ -23,7 +23,7 @@ use crate::engine::Engine;
 use crate::ptx::parse_program;
 use crate::sass::TraceRecorder;
 use crate::sim::{RunResult, Simulator};
-use crate::translate::translate_program_with;
+use crate::translate::translate_program_for;
 
 /// Measured clock-read overhead (two consecutive CS2R), paper §IV-A.
 pub const CLOCK_OVERHEAD: u64 = 2;
@@ -191,7 +191,7 @@ pub fn run_measurement(
     dependent: bool,
 ) -> Result<Measurement, String> {
     let prog = parse_program(src).map_err(|e| format!("{name}: {e}\n{src}"))?;
-    let tp = translate_program_with(&prog, cfg.quirks).map_err(|e| format!("{name}: {e}"))?;
+    let tp = translate_program_for(&prog, cfg.quirks, cfg.nextgen).map_err(|e| format!("{name}: {e}"))?;
     let mut sim = Simulator::new(cfg.clone());
     let r = sim
         .run(&prog, &tp, MEASUREMENT_PARAMS)

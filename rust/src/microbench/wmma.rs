@@ -14,7 +14,7 @@ use crate::engine::Engine;
 use crate::ptx::parse_program;
 use crate::sim::Simulator;
 use crate::tensor::{throughput, Throughput, WmmaDtype};
-use crate::translate::translate_program_with;
+use crate::translate::translate_program_for;
 
 pub const CHAINS: u32 = 4; // one per tensor core (Fig. 5 part 3)
 pub const ITERS: u32 = 8;
@@ -226,7 +226,7 @@ pub fn fig6_trace(cfg: &AmpereConfig) -> Result<Vec<&'static str>, String> {
         super::REG_DECLS
     );
     let prog = parse_program(&src).map_err(|e| e.to_string())?;
-    let tp = translate_program_with(&prog, cfg.quirks).map_err(|e| e.to_string())?;
+    let tp = translate_program_for(&prog, cfg.quirks, cfg.nextgen).map_err(|e| e.to_string())?;
     let mut sim = Simulator::new(cfg.clone());
     sim.run(&prog, &tp, &[0]).map_err(|e| e.to_string())?;
     Ok(sim.trace.mnemonics())

@@ -154,9 +154,6 @@ pub const WARM_CACHE_SHARDS: usize = 16;
 pub struct ShardedLru<V> {
     shards: Vec<RwLock<WarmShard<V>>>,
     cap_per_shard: usize,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
 }
 
 #[derive(Debug)]
@@ -164,6 +161,12 @@ struct WarmShard<V> {
     map: HashMap<u64, WarmEntry<V>>,
     /// Per-shard recency clock; entries stamp themselves on every hit.
     clock: AtomicU64,
+    /// Counters live per shard (the `"metrics"` wire mode reports them
+    /// shard by shard — a skewed shard is a key-distribution bug the
+    /// aggregate would hide); [`ShardedLru::counters`] sums them.
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 #[derive(Debug)]
@@ -180,16 +183,16 @@ impl<V: Clone> ShardedLru<V> {
         let cap_per_shard = cap.div_ceil(WARM_CACHE_SHARDS).max(1);
         let shards = (0..WARM_CACHE_SHARDS)
             .map(|_| {
-                RwLock::new(WarmShard { map: HashMap::new(), clock: AtomicU64::new(0) })
+                RwLock::new(WarmShard {
+                    map: HashMap::new(),
+                    clock: AtomicU64::new(0),
+                    hits: AtomicU64::new(0),
+                    misses: AtomicU64::new(0),
+                    evictions: AtomicU64::new(0),
+                })
             })
             .collect();
-        ShardedLru {
-            shards,
-            cap_per_shard,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-        }
+        ShardedLru { shards, cap_per_shard }
     }
 
     fn shard(&self, key: u64) -> &RwLock<WarmShard<V>> {
@@ -205,11 +208,11 @@ impl<V: Clone> ShardedLru<V> {
             Some(e) if e.src.as_ref() == src => {
                 let now = shard.clock.fetch_add(1, Ordering::Relaxed) + 1;
                 e.stamp.store(now, Ordering::Relaxed);
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                shard.hits.fetch_add(1, Ordering::Relaxed);
                 Some(e.val.clone())
             }
             _ => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                shard.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
@@ -238,7 +241,7 @@ impl<V: Clone> ShardedLru<V> {
                 .map(|(k, _)| *k);
             if let Some(k) = victim {
                 shard.map.remove(&k);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+                shard.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -261,12 +264,38 @@ impl<V: Clone> ShardedLru<V> {
         }
     }
 
+    /// Aggregate counters across every shard (the historical `stats`
+    /// shape).
     pub fn counters(&self) -> CacheCounters {
-        CacheCounters {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+        let mut total = CacheCounters::default();
+        for c in self.shard_counters() {
+            total.hits += c.hits;
+            total.misses += c.misses;
+            total.evictions += c.evictions;
         }
+        total
+    }
+
+    /// Per-shard counters in shard order — the `"metrics"` wire mode's
+    /// answer (with per-shard occupancy alongside, see
+    /// [`Self::shard_lens`]).
+    pub fn shard_counters(&self) -> Vec<CacheCounters> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let shard = s.read().unwrap();
+                CacheCounters {
+                    hits: shard.hits.load(Ordering::Relaxed),
+                    misses: shard.misses.load(Ordering::Relaxed),
+                    evictions: shard.evictions.load(Ordering::Relaxed),
+                }
+            })
+            .collect()
+    }
+
+    /// Per-shard entry counts in shard order.
+    pub fn shard_lens(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.read().unwrap().map.len()).collect()
     }
 }
 
@@ -286,6 +315,10 @@ pub enum Mode {
     Throughput,
     /// Oracle / cache / engine statistics.
     Stats,
+    /// Serving-layer observability beyond `stats` (which is byte-pinned
+    /// for existing clients): per-shard warm-cache counters and
+    /// occupancy, admission-queue waits and the reload generation.
+    Metrics,
     Ping,
     /// Atomically swap a hosted model for a freshly loaded one (live
     /// servers only — see [`SharedOracleSet::reload_from_path`]).
@@ -300,6 +333,7 @@ impl Mode {
             Mode::Check => "check",
             Mode::Throughput => "throughput",
             Mode::Stats => "stats",
+            Mode::Metrics => "metrics",
             Mode::Ping => "ping",
             Mode::Reload => "reload",
         }
@@ -354,6 +388,7 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
         Some("check") => Mode::Check,
         Some("throughput") => Mode::Throughput,
         Some("stats") => Mode::Stats,
+        Some("metrics") => Mode::Metrics,
         Some("ping") => Mode::Ping,
         Some("reload") => Mode::Reload,
         Some(other) => return Err(format!("unknown mode {other:?}")),
@@ -380,7 +415,7 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
     }
     if kernel.is_none()
         && instr.is_none()
-        && !matches!(mode, Mode::Stats | Mode::Ping | Mode::Reload)
+        && !matches!(mode, Mode::Stats | Mode::Metrics | Mode::Ping | Mode::Reload)
     {
         return Err(format!("mode {:?} needs \"kernel\" or \"instr\"", mode.as_str()));
     }
@@ -544,6 +579,37 @@ fn handle_inner(
                 "archs",
                 Value::Arr(ctx.set.archs().into_iter().map(Value::from).collect()),
             )),
+        // `metrics` is where new observability accrues: per-shard
+        // warm-cache counters (a skewed shard is a key-distribution bug
+        // the aggregate hides), admission-queue waits and the reload
+        // generation.  The server-level numbers are null on a fixed-set
+        // context (no live server behind the call).
+        Mode::Metrics => {
+            let counters = oracle.warm_shard_counters();
+            let lens = oracle.warm_shard_lens();
+            let shards: Vec<Value> = counters
+                .iter()
+                .zip(&lens)
+                .map(|(c, len)| {
+                    Value::obj()
+                        .set("hits", c.hits)
+                        .set("misses", c.misses)
+                        .set("evictions", c.evictions)
+                        .set("entries", *len as u64)
+                })
+                .collect();
+            let server_num = |n: Option<u64>| n.map(Value::from).unwrap_or(Value::Null);
+            Ok(ok_response(id, Mode::Metrics)
+                .set("warm_shards", Value::Arr(shards))
+                .set(
+                    "admission_waits",
+                    server_num(ctx.shared.map(SharedOracleSet::admission_waits)),
+                )
+                .set(
+                    "reload_generation",
+                    server_num(ctx.shared.map(SharedOracleSet::reloads)),
+                ))
+        }
         Mode::Predict => {
             let src = resolve_kernel(req)?;
             let (p, cached) = oracle.predict_cached(&src)?;
@@ -629,8 +695,10 @@ pub fn handle_batch(
                         .unwrap_or(false),
                 },
                 // A throughput answer is a model lookup — cheaper than
-                // scheduling it; reload is a swap, not simulator work.
-                Mode::Throughput | Mode::Stats | Mode::Ping | Mode::Reload => false,
+                // scheduling it; reload is a swap, not simulator work;
+                // metrics/stats read counters.
+                Mode::Throughput | Mode::Stats | Mode::Metrics | Mode::Ping
+                | Mode::Reload => false,
             }
         }
         Err(_) => false,

@@ -40,13 +40,13 @@ pub mod serve;
 pub mod wire;
 
 pub use batch::{CacheCounters, LruCache, Mode, Request, ServeCtx, ShardedLru};
-pub use model::{InstrEntry, LatencyModel, ThroughputEntry, WmmaEntry};
+pub use model::{InstrEntry, LatencyModel, NextGenEntry, ThroughputEntry, WmmaEntry};
 pub use predict::{InstrPrediction, Prediction, Resolution};
 pub use serve::{OracleSet, Server, ServerHandle, SharedOracleSet};
 
 use crate::engine::{CompiledKernel, Engine};
 use crate::ptx::parse_program;
-use crate::translate::translate_program_with;
+use crate::translate::translate_program_for;
 use crate::util::json::Value;
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
@@ -176,7 +176,7 @@ impl LatencyOracle {
             }
         }
         let prog = parse_program(src).map_err(|e| format!("parse: {e}"))?;
-        let tp = translate_program_with(&prog, self.engine.cfg().quirks)
+        let tp = translate_program_for(&prog, self.engine.cfg().quirks, self.engine.cfg().nextgen)
             .map_err(|e| format!("translate: {e}"))?;
         let k = Arc::new(CompiledKernel { prog, tp });
         self.compiled
@@ -264,6 +264,18 @@ impl LatencyOracle {
 
     pub fn clear_cache(&self) {
         self.cache.clear();
+    }
+
+    /// Per-shard warm-cache counters, in shard order (the `metrics`
+    /// wire mode reports them individually — a skewed shard is a
+    /// key-distribution bug the aggregate in [`Self::stats`] hides).
+    pub fn warm_shard_counters(&self) -> Vec<batch::CacheCounters> {
+        self.cache.shard_counters()
+    }
+
+    /// Current entry count of each warm-cache shard, in shard order.
+    pub fn warm_shard_lens(&self) -> Vec<usize> {
+        self.cache.shard_lens()
     }
 
     pub fn stats(&self) -> OracleStats {

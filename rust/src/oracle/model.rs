@@ -76,6 +76,24 @@ pub struct ThroughputEntry {
     pub points: Vec<(u32, u64)>,
 }
 
+/// One next-gen instruction family's extracted timing (the two-sided
+/// async protocol: issue cost with completion overlapped, plus full
+/// issue-to-data cycles through `wait_group 0`).  Only families the
+/// extraction architecture *has* get entries — `repro compare` renders
+/// the rest as `-`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NextGenEntry {
+    /// PTX mnemonic under test (`cp.async.ca.shared.global`, …).
+    pub ptx: String,
+    /// Per-issue CPI with completion overlapped (`None` for the
+    /// synchronous DSMEM family).
+    pub issue_cpi: Option<u64>,
+    /// Issue-to-data cycles through the commit/wait channel.
+    pub completion: u64,
+    /// Dynamic SASS mapping (`LDGSTS.E.128`, `HGMMA`, …).
+    pub sass: String,
+}
+
 /// One tensor-core dtype's extracted timing (Table III).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WmmaEntry {
@@ -123,6 +141,12 @@ pub struct LatencyModel {
     /// before the throughput engine (parsed leniently); re-extract to
     /// populate.
     pub throughput: BTreeMap<String, ThroughputEntry>,
+    /// Next-gen instruction-family timings keyed by family key
+    /// (`cp_async`, `tma`, `wgmma`, `dsmem`) — only families the
+    /// extraction architecture has.  Empty in models saved before the
+    /// next-gen ISA subsystem (parsed leniently); re-extract to
+    /// populate.
+    pub nextgen: BTreeMap<String, NextGenEntry>,
 }
 
 impl LatencyModel {
@@ -146,6 +170,23 @@ impl LatencyModel {
                     peak_ipc_milli: row.peak_ipc_milli,
                     warps_to_peak: row.warps_to_peak,
                     points: row.points.iter().map(|p| (p.warps, p.ipc_milli)).collect(),
+                },
+            );
+        }
+        for row in crate::isa::run_families_with(engine)? {
+            if !row.available {
+                continue;
+            }
+            let completion = row
+                .completion
+                .ok_or_else(|| format!("{}: available family measured no completion", row.family))?;
+            model.nextgen.insert(
+                row.family.to_string(),
+                NextGenEntry {
+                    ptx: row.ptx.to_string(),
+                    issue_cpi: row.issue_cpi,
+                    completion,
+                    sass: row.mapping.unwrap_or_default(),
                 },
             );
         }
@@ -227,6 +268,25 @@ impl LatencyModel {
             memory,
             wmma,
             throughput: BTreeMap::new(),
+            nextgen: BTreeMap::new(),
+        })
+    }
+
+    /// The next-gen family entry for a family key, or an error that
+    /// says how to get one.
+    pub fn nextgen_entry(&self, family: &str) -> Result<&NextGenEntry, String> {
+        self.nextgen.get(family).ok_or_else(|| {
+            if self.nextgen.is_empty() {
+                "model carries no next-gen family table (extracted before the next-gen \
+                 ISA subsystem, or on an architecture without any family); re-run \
+                 `repro extract-model`"
+                    .to_string()
+            } else {
+                format!(
+                    "no next-gen entry for {family:?} (this model has: {})",
+                    self.nextgen.keys().cloned().collect::<Vec<_>>().join(", ")
+                )
+            }
         })
     }
 
@@ -346,6 +406,18 @@ impl LatencyModel {
                     ),
             );
         }
+        let mut nextgen = BTreeMap::new();
+        for (k, e) in &self.nextgen {
+            let issue = e.issue_cpi.map(Value::from).unwrap_or(Value::Null);
+            nextgen.insert(
+                k.clone(),
+                Value::obj()
+                    .set("ptx", e.ptx.as_str())
+                    .set("issue_cpi", issue)
+                    .set("completion", e.completion)
+                    .set("sass", e.sass.as_str()),
+            );
+        }
         Value::obj()
             .set("arch", self.arch.as_str())
             .set(
@@ -365,6 +437,7 @@ impl LatencyModel {
             .set("memory", Value::Obj(mem))
             .set("wmma", Value::Obj(wmma))
             .set("throughput", Value::Obj(throughput))
+            .set("nextgen", Value::Obj(nextgen))
     }
 
     pub fn to_json_string(&self) -> String {
@@ -476,6 +549,32 @@ impl LatencyModel {
             }
         }
 
+        // Lenient for the same reason: models saved before the next-gen
+        // ISA subsystem have no "nextgen" object and load with an empty
+        // map (the lookup error then points at re-extraction).
+        let mut nextgen = BTreeMap::new();
+        if let Some(nmap) = v.get("nextgen").and_then(Value::as_obj) {
+            for (key, e) in nmap {
+                let issue_cpi = match e.get("issue_cpi") {
+                    Some(Value::Null) | None => None,
+                    Some(d) => Some(
+                        d.as_u64()
+                            .ok_or_else(|| format!("model json: bad issue_cpi for {key}"))?,
+                    ),
+                };
+                nextgen.insert(
+                    key.clone(),
+                    NextGenEntry {
+                        ptx: need_str(e, "ptx")?,
+                        issue_cpi,
+                        completion: need_u64(e, "completion")
+                            .map_err(|err| format!("{err} (in nextgen.{key})"))?,
+                        sass: need_str(e, "sass")?,
+                    },
+                );
+            }
+        }
+
         let config = v
             .get("config")
             .ok_or("model json: missing config object")?;
@@ -498,6 +597,7 @@ impl LatencyModel {
             memory,
             wmma,
             throughput,
+            nextgen,
         })
     }
 
@@ -580,6 +680,16 @@ pub(crate) fn tiny_model() -> LatencyModel {
                 points: vec![(1, 300), (2, 375), (4, 440), (8, 480), (16, 480), (32, 480)],
             },
         );
+        let mut nextgen = BTreeMap::new();
+        nextgen.insert(
+            "cp_async".to_string(),
+            NextGenEntry {
+                ptx: "cp.async.ca.shared.global".into(),
+                issue_cpi: Some(2),
+                completion: 54,
+                sass: "LDGSTS.E.128".into(),
+            },
+        );
         LatencyModel {
             arch: "ampere".into(),
             l1_bytes: 128 * 1024,
@@ -592,6 +702,7 @@ pub(crate) fn tiny_model() -> LatencyModel {
             memory,
             wmma,
             throughput,
+            nextgen,
         }
 }
 
@@ -668,6 +779,54 @@ mod tests {
         assert!(legacy.throughput.is_empty());
         let err = legacy.throughput_entry("add.u32").unwrap_err();
         assert!(err.contains("extract-model"), "{err}");
+    }
+
+    #[test]
+    fn nextgen_entries_round_trip_and_legacy_models_load_leniently() {
+        let m = tiny_model();
+        let e = m.nextgen_entry("cp_async").unwrap();
+        assert_eq!((e.issue_cpi, e.completion), (Some(2), 54));
+        assert_eq!(e.sass, "LDGSTS.E.128");
+
+        // Full JSON identity including the family table (and the Null
+        // issue_cpi side, via a DSMEM-shaped entry).
+        let mut with_dsmem = m.clone();
+        with_dsmem.nextgen.insert(
+            "dsmem".to_string(),
+            NextGenEntry {
+                ptx: "ld.shared.cluster".into(),
+                issue_cpi: None,
+                completion: 49,
+                sass: "LDS.CLUSTER".into(),
+            },
+        );
+        let back = LatencyModel::from_json_str(&with_dsmem.to_json_string()).unwrap();
+        assert_eq!(back, with_dsmem);
+
+        // Unknown family: error lists what the model does carry.
+        let err = m.nextgen_entry("tma").unwrap_err();
+        assert!(err.contains("cp_async"), "{err}");
+
+        // The pre-PR fixture shape — a model JSON with no "nextgen"
+        // object, exactly what every model saved before this subsystem
+        // looks like — still loads, with an empty family table whose
+        // lookup error points at re-extraction.
+        let mut v = m.to_json();
+        if let Value::Obj(map) = &mut v {
+            map.remove("nextgen");
+        }
+        let legacy = LatencyModel::from_json_str(&to_string_pretty(&v)).unwrap();
+        assert!(legacy.nextgen.is_empty());
+        let err = legacy.nextgen_entry("cp_async").unwrap_err();
+        assert!(err.contains("extract-model"), "{err}");
+
+        // Malformed (as opposed to missing) entries are still rejected,
+        // with the family named.
+        let bad = m
+            .to_json_string()
+            .replace("\"completion\": 54", "\"completion\": \"warp9\"");
+        let err = LatencyModel::from_json_str(&bad).unwrap_err();
+        assert!(err.contains("nextgen.cp_async"), "{err}");
     }
 
     #[test]

@@ -42,6 +42,8 @@ pub enum Resolution {
     Memory,
     /// Tensor-core table (dtype from the fragment types).
     Wmma,
+    /// Next-gen family table (`cp.async`/TMA/`wgmma`/DSMEM timings).
+    NextGen,
     /// Nothing matched — costed at the model's default CPI.
     Default,
 }
@@ -53,6 +55,7 @@ impl Resolution {
             Resolution::Sass => "sass",
             Resolution::Memory => "memory",
             Resolution::Wmma => "wmma",
+            Resolution::NextGen => "nextgen",
             Resolution::Default => "default",
         }
     }
@@ -236,6 +239,43 @@ fn resolve(
                 None => (model.default_cpi, None, Resolution::Default),
             }
         }
+        // Next-gen async families: the issue side costs the per-issue
+        // CPI, the wait pays the full issue-to-data completion (an
+        // upper bound — overlap with intervening work is a dynamic
+        // effect the static pass does not model), commits are
+        // bookkeeping.  Translation already rejected these on arches
+        // without the family; `Default` here means the *model* predates
+        // the family table.
+        PtxOp::CpAsync | PtxOp::TmaLoad | PtxOp::WgmmaMma => {
+            let fam = match ins.op {
+                PtxOp::TmaLoad => "tma",
+                PtxOp::WgmmaMma => "wgmma",
+                _ => "cp_async",
+            };
+            match model.nextgen.get(fam) {
+                Some(e) => (e.issue_cpi.unwrap_or(1), None, Resolution::NextGen),
+                None => (model.default_cpi, None, Resolution::Default),
+            }
+        }
+        PtxOp::CpAsyncCommit | PtxOp::WgmmaCommit => (1, None, Resolution::NextGen),
+        PtxOp::CpAsyncWait => {
+            // The copy group channel is shared by cp.async and TMA;
+            // prefer the plain-copy timing, fall back to TMA-only arches.
+            match model.nextgen.get("cp_async").or_else(|| model.nextgen.get("tma")) {
+                Some(e) => (e.completion, None, Resolution::NextGen),
+                None => (model.default_cpi, None, Resolution::Default),
+            }
+        }
+        PtxOp::WgmmaWait => match model.nextgen.get("wgmma") {
+            Some(e) => (e.completion, None, Resolution::NextGen),
+            None => (model.default_cpi, None, Resolution::Default),
+        },
+        // DSMEM: a cluster-remote shared access costs the interconnect
+        // latency, not the local shared-memory row.
+        PtxOp::Ld | PtxOp::St if ins.mods.cluster => match model.nextgen.get("dsmem") {
+            Some(e) => (e.completion, None, Resolution::NextGen),
+            None => (model.default_cpi, None, Resolution::Default),
+        },
         PtxOp::Ld | PtxOp::St => match model.memory.get(memory_key(ins)) {
             Some(lat) => (*lat, None, Resolution::Memory),
             None => (model.default_cpi, None, Resolution::Default),
@@ -436,6 +476,35 @@ mod tests {
         let tp = translate_program(&prog).unwrap();
         let err = predict(&model(), &prog, &tp).unwrap_err();
         assert!(err.contains("measured clock window"), "{err}");
+    }
+
+    #[test]
+    fn nextgen_async_ops_resolve_through_the_family_table() {
+        let src = measurement_kernel(
+            ".shared .align 16 .b8 sh[64];\nld.param.u64 %rd1, [out];",
+            "cp.async.ca.shared.global [sh], [%rd1], 16;\n\
+             cp.async.commit_group;\n\
+             cp.async.wait_group 0;",
+        );
+        let p = predict_src(&src);
+        assert_eq!(p.n, 3);
+        assert!(
+            p.per_instr.iter().all(|i| i.resolution == Resolution::NextGen),
+            "{p:?}"
+        );
+        // Issue CPI (2) + commit bookkeeping (1) + the wait paying the
+        // full 54-cycle completion, plus the clock-bracket overhead.
+        assert_eq!(p.cycles, 2 + 2 + 1 + 54);
+        assert_eq!(p.unresolved, 0);
+
+        // A model without the family table (pre-subsystem file) still
+        // predicts, through the default-CPI fallback.
+        let prog = parse_program(&src).unwrap();
+        let tp = translate_program(&prog).unwrap();
+        let mut legacy = model();
+        legacy.nextgen.clear();
+        let p = predict(&legacy, &prog, &tp).unwrap();
+        assert_eq!(p.unresolved, 2, "issue + wait fall back; commit stays fixed");
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! ```text
 //! {"id": 7,                  echoed verbatim in the response
 //!  "mode": "predict",        predict | simulate | check | throughput |
-//!                            stats | ping | reload
+//!                            stats | metrics | ping | reload
 //!  "kernel": "<PTX source>", raw kernel to analyse, or
 //!  "instr": "add.u32",       a Table V registry row name (for
 //!                            "throughput" also a wmma dtype key)
@@ -49,7 +49,11 @@
 //! `mapping`; `check` adds `predicted_cpi`, `simulated_cpi`, `matches`;
 //! `throughput` adds `cpi_1w`, `peak_ipc_milli`, `peak_ipc`,
 //! `warps_to_peak` and the swept `points`; `reload` adds `arch`,
-//! `instructions` and the server's `reloads` counter.
+//! `instructions` and the server's `reloads` counter.  `stats` is
+//! byte-pinned for existing clients; `metrics` is where new
+//! observability accrues — per-shard warm-cache counters
+//! (`warm_shards`), `admission_waits` (connections that parked in the
+//! admission queue) and `reload_generation`.
 //!
 //! ## Hot reload
 //!
@@ -211,6 +215,10 @@ pub struct SharedOracleSet {
     /// two concurrent reloads can't lose each other's swap.
     reload_gate: Mutex<()>,
     reloads: AtomicU64,
+    /// Connections that found the house full and parked in the bounded
+    /// admission queue (granted or not) — the `metrics` wire mode
+    /// reports this so operators see queuing before deadlines expire.
+    admission_waits: AtomicU64,
 }
 
 impl SharedOracleSet {
@@ -219,6 +227,7 @@ impl SharedOracleSet {
             current: RwLock::new(Arc::new(set)),
             reload_gate: Mutex::new(()),
             reloads: AtomicU64::new(0),
+            admission_waits: AtomicU64::new(0),
         }
     }
 
@@ -230,6 +239,11 @@ impl SharedOracleSet {
     /// Successful reloads so far.
     pub fn reloads(&self) -> u64 {
         self.reloads.load(Ordering::Relaxed)
+    }
+
+    /// Connections that had to park in the admission queue so far.
+    pub fn admission_waits(&self) -> u64 {
+        self.admission_waits.load(Ordering::Relaxed)
     }
 
     /// Load a model JSON and atomically swap it in for its
@@ -299,7 +313,9 @@ impl Admission {
         }
     }
 
-    fn acquire(&self, deadline: Duration) -> Admit {
+    /// `waits` counts every connection that had to park (whether it is
+    /// later granted or times out) — surfaced by the `metrics` mode.
+    fn acquire(&self, deadline: Duration, waits: &AtomicU64) -> Admit {
         let mut st = self.state.lock().unwrap();
         if st.active < self.cap {
             st.active += 1;
@@ -309,6 +325,7 @@ impl Admission {
             return Admit::QueueFull;
         }
         st.waiting += 1;
+        waits.fetch_add(1, Ordering::Relaxed);
         let start = Instant::now();
         loop {
             let Some(left) = deadline.checked_sub(start.elapsed()) else {
@@ -464,7 +481,9 @@ fn accept_shard(
         // Admission happens *on the connection's own thread* so a full
         // house parks the newcomer in the bounded queue without ever
         // blocking the accept shard.
-        std::thread::spawn(move || match admission.acquire(ACCEPT_QUEUE_DEADLINE) {
+        std::thread::spawn(move || match admission
+            .acquire(ACCEPT_QUEUE_DEADLINE, &shared.admission_waits)
+        {
             Admit::Granted => {
                 let _slot = SlotGuard(admission); // released on exit, panics included
                 let _ = serve_connection(&shared, stream);
@@ -848,26 +867,69 @@ mod tests {
     #[test]
     fn admission_grants_queues_and_times_out() {
         let a = Arc::new(Admission::new(1, 1));
-        assert_eq!(a.acquire(Duration::from_millis(5)), Admit::Granted);
+        let waits = Arc::new(AtomicU64::new(0));
+        assert_eq!(a.acquire(Duration::from_millis(5), &waits), Admit::Granted);
+        assert_eq!(waits.load(Ordering::Relaxed), 0, "no queue, no wait counted");
         // House full, queue empty: a second caller waits out its
         // deadline.
-        assert_eq!(a.acquire(Duration::from_millis(5)), Admit::TimedOut);
+        assert_eq!(a.acquire(Duration::from_millis(5), &waits), Admit::TimedOut);
+        assert_eq!(waits.load(Ordering::Relaxed), 1, "a timed-out park still counts");
 
         // Park one patient waiter, filling the queue…
         let waiter = {
             let a = Arc::clone(&a);
-            std::thread::spawn(move || a.acquire(Duration::from_secs(10)))
+            let waits = Arc::clone(&waits);
+            std::thread::spawn(move || a.acquire(Duration::from_secs(10), &waits))
         };
         while a.state.lock().unwrap().waiting == 0 {
             std::thread::sleep(Duration::from_millis(1));
         }
-        // …so the next caller bounces off the depth bound immediately.
-        assert_eq!(a.acquire(Duration::from_millis(5)), Admit::QueueFull);
+        // …so the next caller bounces off the depth bound immediately
+        // (a bounce never parked, so it is not a wait).
+        assert_eq!(a.acquire(Duration::from_millis(5), &waits), Admit::QueueFull);
+        assert_eq!(waits.load(Ordering::Relaxed), 2);
         // Freeing the slot admits the queued waiter.
         a.release();
         assert_eq!(waiter.join().unwrap(), Admit::Granted);
         a.release();
-        assert_eq!(a.acquire(Duration::from_millis(5)), Admit::Granted);
+        assert_eq!(a.acquire(Duration::from_millis(5), &waits), Admit::Granted);
+        assert_eq!(waits.load(Ordering::Relaxed), 2, "granted-immediately never counts");
+    }
+
+    /// Satellite: the `metrics` mode — per-shard warm-cache counters
+    /// always; admission/reload counters only when a live server
+    /// context backs the request (null on a fixed set).
+    #[test]
+    fn metrics_reports_shard_counters_and_server_generation() {
+        let v = respond(&set(), r#"{"mode":"metrics"}"#);
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{v:?}");
+        assert_eq!(v.get("mode").and_then(Value::as_str), Some("metrics"));
+        assert_eq!(v.get("admission_waits"), Some(&Value::Null));
+        assert_eq!(v.get("reload_generation"), Some(&Value::Null));
+        let shards = v.get("warm_shards").and_then(Value::as_arr).unwrap();
+        assert_eq!(shards.len(), batch::WARM_CACHE_SHARDS);
+
+        // A live shared set: a cold predict lands one miss in exactly
+        // one shard, repeating it one hit in the same shard.
+        let shared = SharedOracleSet::new(set());
+        for _ in 0..2 {
+            let p = respond_shared(&shared, r#"{"mode":"predict","instr":"add.u32"}"#);
+            assert_eq!(p.get("ok"), Some(&Value::Bool(true)), "{p:?}");
+        }
+        let v = respond_shared(&shared, r#"{"mode":"metrics"}"#);
+        assert_eq!(v.get("admission_waits").and_then(Value::as_u64), Some(0));
+        assert_eq!(v.get("reload_generation").and_then(Value::as_u64), Some(0));
+        let shards = v.get("warm_shards").and_then(Value::as_arr).unwrap();
+        let sum = |key: &str| -> u64 {
+            shards
+                .iter()
+                .map(|s| s.get(key).and_then(Value::as_u64).unwrap())
+                .sum()
+        };
+        assert_eq!(sum("misses"), 1, "{shards:?}");
+        assert_eq!(sum("hits"), 1, "{shards:?}");
+        assert_eq!(sum("evictions"), 0);
+        assert_eq!(sum("entries"), 1, "one cached prediction lives in one shard");
     }
 
     #[test]

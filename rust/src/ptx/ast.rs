@@ -138,6 +138,24 @@ pub enum PtxOp {
     Exit,
     // Tensor core
     Wmma(WmmaOp),
+    // Post-Ampere families (sm_80+/sm_90+; see `config::NextGenConfig`).
+    /// `cp.async.ca.shared.global [dst], [src], bytes` — async
+    /// global→shared copy, retired through commit/wait groups.
+    CpAsync,
+    /// `cp.async.commit_group` — seal the open async-copy group.
+    CpAsyncCommit,
+    /// `cp.async.wait_group N` — stall until ≤ N groups outstanding.
+    CpAsyncWait,
+    /// `cp.async.bulk.tensor.shared.global [dst], [src], bytes` —
+    /// TMA-style bulk tensor load into shared memory.
+    TmaLoad,
+    /// `wgmma.mma_async.sync.aligned.mMnNkK.dtype.atype.btype d,a,b` —
+    /// warpgroup MMA with asynchronous accumulate.
+    WgmmaMma,
+    /// `wgmma.commit_group` — seal the open wgmma group.
+    WgmmaCommit,
+    /// `wgmma.wait_group N` — stall until ≤ N wgmma groups outstanding.
+    WgmmaWait,
 }
 
 impl PtxOp {
@@ -206,6 +224,13 @@ impl PtxOp {
             Wmma(WmmaOp::LoadC) => "wmma.load.c",
             Wmma(WmmaOp::Mma) => "wmma.mma",
             Wmma(WmmaOp::Store) => "wmma.store.d",
+            CpAsync => "cp.async",
+            CpAsyncCommit => "cp.async.commit_group",
+            CpAsyncWait => "cp.async.wait_group",
+            TmaLoad => "cp.async.bulk.tensor",
+            WgmmaMma => "wgmma.mma_async",
+            WgmmaCommit => "wgmma.commit_group",
+            WgmmaWait => "wgmma.wait_group",
         }
     }
 
@@ -278,7 +303,8 @@ impl PtxInstruction {
     /// Register this instruction writes, if any.
     pub fn dst_reg(&self) -> Option<Reg> {
         match (self.op, &self.dst) {
-            (PtxOp::St, _) => None, // store's "dst" is a memory operand
+            // Stores and async copies "write" memory, not a register.
+            (PtxOp::St | PtxOp::CpAsync | PtxOp::TmaLoad, _) => None,
             (_, Some(Operand::Reg(r))) => Some(*r),
             _ => None,
         }
@@ -290,6 +316,9 @@ impl PtxInstruction {
         use std::fmt::Write;
         if self.mods.space != super::types::StateSpace::Generic {
             let _ = write!(s, ".{}", self.mods.space);
+        }
+        if self.mods.cluster {
+            s.push_str(".cluster");
         }
         if self.mods.cache != super::types::CacheOp::Default {
             let _ = write!(s, ".{}", self.mods.cache);

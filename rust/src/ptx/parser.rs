@@ -396,6 +396,8 @@ impl Parser {
             "ret" => PtxOp::Ret,
             "exit" => PtxOp::Exit,
             "wmma" => self.decode_wmma_head(suffixes)?,
+            "cp" => self.decode_cp_head(suffixes)?,
+            "wgmma" => self.decode_wgmma_head(suffixes)?,
             other => return self.err(format!("unknown mnemonic {other}")),
         };
 
@@ -409,6 +411,21 @@ impl Parser {
                 _ if matches!(ins.op, PtxOp::Wmma(_))
                     && (s == "a" || s == "b" || s == "c" || s == "d"
                         || s == "load" || s == "store" || s == "mma") => {}
+                // next-gen structural suffixes already consumed by the
+                // cp/wgmma head decoders
+                _ if matches!(
+                    ins.op,
+                    PtxOp::CpAsync | PtxOp::CpAsyncCommit | PtxOp::CpAsyncWait | PtxOp::TmaLoad
+                ) && (s == "async"
+                    || s == "bulk"
+                    || s == "tensor"
+                    || s == "commit_group"
+                    || s == "wait_group") => {}
+                _ if matches!(
+                    ins.op,
+                    PtxOp::WgmmaMma | PtxOp::WgmmaCommit | PtxOp::WgmmaWait
+                ) && (s == "mma_async" || s == "commit_group" || s == "wait_group") => {}
+                "cluster" => ins.mods.cluster = true,
                 "sync" => {
                     ins.mods.sync = true;
                     // `bar.warp.sync` special form:
@@ -477,6 +494,11 @@ impl Parser {
                 ins.ty = Some(types[0]);
                 ins.ty2 = Some(types[1]);
             }
+            3 if ins.op == PtxOp::WgmmaMma => {
+                // wgmma.mma_async d.a.b fragment types (accumulate = d)
+                ins.wmma_types = Some([types[0], types[1], types[2], types[0]]);
+                ins.ty = Some(types[1]); // input dtype drives timing class
+            }
             4 => {
                 // wmma.mma d.a.b.c fragment types
                 ins.wmma_types = Some([types[0], types[1], types[2], types[3]]);
@@ -500,6 +522,30 @@ impl Parser {
             (Some("mma"), _) => Ok(PtxOp::Wmma(WmmaOp::Mma)),
             (Some("store"), _) => Ok(PtxOp::Wmma(WmmaOp::Store)),
             _ => self.err(format!("bad wmma form {suffixes:?}")),
+        }
+    }
+
+    fn decode_cp_head(&mut self, suffixes: &[String]) -> Result<PtxOp, ParseError> {
+        // cp.async.{ca,cg}.shared.global, cp.async.commit_group,
+        // cp.async.wait_group N, cp.async.bulk.tensor.shared.global.
+        if suffixes.first().map(String::as_str) != Some("async") {
+            return self.err(format!("bad cp form {suffixes:?}"));
+        }
+        match suffixes.get(1).map(String::as_str) {
+            Some("commit_group") => Ok(PtxOp::CpAsyncCommit),
+            Some("wait_group") => Ok(PtxOp::CpAsyncWait),
+            Some("bulk") => Ok(PtxOp::TmaLoad),
+            Some(_) => Ok(PtxOp::CpAsync),
+            None => self.err("bare cp.async needs a cache/space form"),
+        }
+    }
+
+    fn decode_wgmma_head(&mut self, suffixes: &[String]) -> Result<PtxOp, ParseError> {
+        match suffixes.first().map(String::as_str) {
+            Some("mma_async") => Ok(PtxOp::WgmmaMma),
+            Some("commit_group") => Ok(PtxOp::WgmmaCommit),
+            Some("wait_group") => Ok(PtxOp::WgmmaWait),
+            _ => self.err(format!("bad wgmma form {suffixes:?}")),
         }
     }
 
@@ -627,12 +673,13 @@ impl Parser {
             return Ok(());
         }
         match ins.op {
-            PtxOp::St | PtxOp::Wmma(WmmaOp::Store) => {
-                // st [addr], value — dst is the memory operand.
+            PtxOp::St | PtxOp::Wmma(WmmaOp::Store) | PtxOp::CpAsync | PtxOp::TmaLoad => {
+                // st/cp [addr], ... — dst is the memory operand.
                 ins.dst = Some(ops.remove(0));
                 ins.srcs = ops;
             }
-            PtxOp::Bra => {
+            PtxOp::Bra | PtxOp::CpAsyncWait | PtxOp::WgmmaWait => {
+                // branch target / outstanding-group count are sources.
                 ins.srcs = ops;
             }
             _ => {
@@ -815,6 +862,67 @@ $Mem_load:
         let t = mma.wmma_types.unwrap();
         assert_eq!(t[0], PtxType::F32);
         assert_eq!(t[1], PtxType::F16);
+    }
+
+    #[test]
+    fn parses_cp_async_family() {
+        let src = r#"
+.visible .entry k()
+{
+ .reg .b64 %rd<10>;
+ .shared .align 16 .b8 shMem1[1024];
+ mov.u64 %rd1, 4096;
+ cp.async.ca.shared.global [shMem1], [%rd1], 16;
+ cp.async.bulk.tensor.shared.global [shMem1+128], [%rd1], 256;
+ cp.async.commit_group;
+ cp.async.wait_group 0;
+ ret;
+}
+"#;
+        let p = parse_program(src).unwrap();
+        let cp = p.instrs.iter().find(|i| i.op == PtxOp::CpAsync).unwrap();
+        assert!(matches!(cp.dst, Some(Operand::SymMem { sym: 0, offset: 0 })));
+        assert_eq!(cp.mods.cache, CacheOp::Ca);
+        assert_eq!(cp.dst_reg(), None, "async copy writes memory, not a register");
+        assert_eq!(cp.srcs.last(), Some(&Operand::Imm(16)));
+        let tma = p.instrs.iter().find(|i| i.op == PtxOp::TmaLoad).unwrap();
+        assert!(matches!(tma.dst, Some(Operand::SymMem { sym: 0, offset: 128 })));
+        let wait = p.instrs.iter().find(|i| i.op == PtxOp::CpAsyncWait).unwrap();
+        assert_eq!(wait.srcs, vec![Operand::Imm(0)]);
+        assert!(p.instrs.iter().any(|i| i.op == PtxOp::CpAsyncCommit));
+    }
+
+    #[test]
+    fn parses_wgmma_and_dsmem() {
+        let src = r#"
+.visible .entry k()
+{
+ .reg .b32 %r<32>;
+ .reg .b64 %rd<10>;
+ .shared .align 8 .b8 shMem1[1024];
+ wgmma.mma_async.sync.aligned.m64n64k16.f32.f16.f16 {%r0}, {%r8}, {%r16};
+ wgmma.commit_group;
+ wgmma.wait_group 0;
+ ld.shared.cluster.u64 %rd2, [shMem1];
+ st.shared.cluster.u64 [shMem1+8], %rd2;
+ ret;
+}
+"#;
+        let p = parse_program(src).unwrap();
+        let mma = &p.instrs[0];
+        assert_eq!(mma.op, PtxOp::WgmmaMma);
+        assert_eq!(mma.wmma_shape, Some((64, 64, 16)));
+        let t = mma.wmma_types.unwrap();
+        assert_eq!((t[0], t[1], t[2]), (PtxType::F32, PtxType::F16, PtxType::F16));
+        assert!(mma.mods.sync && mma.mods.aligned);
+        assert_eq!(p.instrs[1].op, PtxOp::WgmmaCommit);
+        assert_eq!(p.instrs[2].op, PtxOp::WgmmaWait);
+        assert_eq!(p.instrs[2].srcs, vec![Operand::Imm(0)]);
+        let ld = p.instrs.iter().find(|i| i.op == PtxOp::Ld).unwrap();
+        assert!(ld.mods.cluster, "DSMEM load carries the cluster modifier");
+        assert_eq!(ld.display_name(), "ld.shared.cluster.u64");
+        let st = p.instrs.iter().find(|i| i.op == PtxOp::St).unwrap();
+        assert!(st.mods.cluster);
     }
 
     #[test]

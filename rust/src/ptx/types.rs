@@ -279,6 +279,9 @@ pub struct Modifiers {
     /// `.sync.aligned` on wmma/bar.
     pub sync: bool,
     pub aligned: bool,
+    /// `.cluster` on ld/st.shared — distributed shared memory (remote
+    /// SM within the thread-block cluster, sm_90+).
+    pub cluster: bool,
 }
 
 #[cfg(test)]

@@ -266,6 +266,10 @@ pub struct ArchResults<'a> {
     /// by row *name*, since capability tables differ).  Pass an empty
     /// slice to omit the cross-arch IPC table.
     pub throughput: &'a [ThroughputRow],
+    /// Next-gen family measurements (aligned by family key; a family an
+    /// architecture lacks comes back `available: false` and renders as
+    /// "-").  Pass an empty slice to omit the cross-arch family table.
+    pub nextgen: &'a [crate::isa::NextGenMeasurement],
 }
 
 /// Deltas are reported against the first (baseline) architecture.
@@ -418,6 +422,40 @@ pub fn compare(results: &[ArchResults<'_>]) -> String {
             &tp_rows,
         ));
     }
+
+    if results.iter().all(|r| !r.nextgen.is_empty()) {
+        let mut ng_headers: Vec<String> = vec!["family".into(), "PTX".into()];
+        for r in results {
+            ng_headers.push(format!("issue@{}", r.arch));
+        }
+        for r in results {
+            ng_headers.push(format!("done@{}", r.arch));
+        }
+        let ng_header_refs: Vec<&str> = ng_headers.iter().map(String::as_str).collect();
+        let opt = |v: Option<u64>| v.map(|c| c.to_string()).unwrap_or_else(|| "-".to_string());
+        let ng_rows: Vec<Vec<String>> = base
+            .nextgen
+            .iter()
+            .map(|row| {
+                let find = |r: &ArchResults<'_>| {
+                    r.nextgen.iter().find(|m| m.family == row.family)
+                };
+                let mut cells = vec![row.family.clone(), row.ptx.clone()];
+                for r in results {
+                    cells.push(opt(find(r).and_then(|m| m.issue_cpi)));
+                }
+                for r in results {
+                    cells.push(opt(find(r).and_then(|m| m.completion)));
+                }
+                cells
+            })
+            .collect();
+        out.push_str(&render_table(
+            "Cross-arch next-gen ISA — issue CPI & completion cycles ('-' = family absent)",
+            &ng_header_refs,
+            &ng_rows,
+        ));
+    }
     out
 }
 
@@ -526,6 +564,41 @@ pub fn compare_json(results: &[ArchResults<'_>]) -> Value {
         Vec::new()
     };
 
+    // Cross-arch next-gen family table, aligned by family key; an arch
+    // without the family answers null for every number (empty slices →
+    // []).
+    let nextgen: Vec<Value> = if results.iter().all(|r| !r.nextgen.is_empty()) {
+        base.nextgen
+            .iter()
+            .map(|row| {
+                let mut issue = Value::obj();
+                let mut done = Value::obj();
+                let mut sass = Value::obj();
+                for r in results {
+                    let entry = r.nextgen.iter().find(|m| m.family == row.family);
+                    let opt = |v: Option<u64>| v.map(Value::from).unwrap_or(Value::Null);
+                    issue = issue.set(r.arch, opt(entry.and_then(|m| m.issue_cpi)));
+                    done = done.set(r.arch, opt(entry.and_then(|m| m.completion)));
+                    sass = sass.set(
+                        r.arch,
+                        entry
+                            .and_then(|m| m.mapping.as_deref())
+                            .map(Value::from)
+                            .unwrap_or(Value::Null),
+                    );
+                }
+                Value::obj()
+                    .set("family", row.family.as_str())
+                    .set("ptx", row.ptx.as_str())
+                    .set("issue_cpi", issue)
+                    .set("completion", done)
+                    .set("sass", sass)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
     Value::obj()
         .set(
             "archs",
@@ -537,6 +610,7 @@ pub fn compare_json(results: &[ArchResults<'_>]) -> Value {
         .set("table4", Value::Arr(table4))
         .set("wmma", Value::Arr(wmma))
         .set("throughput", Value::Arr(throughput))
+        .set("nextgen", Value::Arr(nextgen))
 }
 
 // ---- machine-readable (`--json`) forms ------------------------------

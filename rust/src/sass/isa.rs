@@ -45,6 +45,25 @@ pub enum Effect {
     Movm,
     /// Kernel end.
     Exit,
+    /// Async copy issue (LDGSTS / UTMALDG): performs the copy, enqueues
+    /// completion at `t + latency` on the open async-copy group instead
+    /// of the register scoreboard.
+    AsyncCopy,
+    /// `cp.async.commit_group` — seal the open async-copy group.
+    AsyncCommit,
+    /// `cp.async.wait_group N` — stall issue until ≤ N sealed
+    /// async-copy groups remain outstanding (N from the first
+    /// immediate operand of the PTX instruction).
+    AsyncWait,
+    /// Warpgroup MMA issue (HGMMA / TCGEN05.MMA): charged on the tensor
+    /// pipe, completion enqueued on the wgmma group channel; the
+    /// accumulate is asynchronous, so issue never stalls on sources.
+    WgmmaIssue,
+    /// `wgmma.commit_group` — seal the open wgmma group.
+    WgmmaCommit,
+    /// `wgmma.wait_group N` — stall issue until ≤ N sealed wgmma
+    /// groups remain outstanding.
+    WgmmaWait,
 }
 
 /// Timing classes — one per SASS opcode family of Table V.
@@ -98,6 +117,14 @@ pub enum SassClass {
     Mma,
     /// MOVM.16.MT88 operand transpose.
     Movm,
+    /// LDGSTS — `cp.async` global→shared copy (LSU pipe; timing from
+    /// the arch's next-gen family table).
+    LdgSts,
+    /// UTMALDG — TMA bulk tensor load (LSU pipe, descriptor-driven).
+    Tma,
+    /// HGMMA / TCGEN05.MMA — warpgroup MMA (tensor pipe at warpgroup
+    /// granularity).
+    Wgmma,
 }
 
 impl SassClass {
@@ -116,6 +143,8 @@ impl SassClass {
             Depbar | Control => Pipe::Control,
             Memory => Pipe::Lsu,
             Mma | Movm => Pipe::Tensor,
+            LdgSts | Tma => Pipe::Lsu,
+            Wgmma => Pipe::Tensor,
         }
     }
 
@@ -160,6 +189,25 @@ impl SassClass {
             Control => (cfg.control_pipe.occupancy, cfg.control_pipe.latency),
             Mma => (cfg.tensor_pipe.occupancy, cfg.tensor_pipe.latency),
             Movm => (cfg.tensor_pipe.occupancy, cfg.tensor_pipe.latency),
+            // Next-gen family timings come from the arch capability
+            // table; the translator rejects these classes on arches
+            // whose entry is `None`, so the LSU/tensor fallback only
+            // backstops hand-built SassInstrs in tests.
+            LdgSts => cfg
+                .nextgen
+                .cp_async
+                .map(|t| (t.occupancy, t.latency))
+                .unwrap_or((cfg.lsu_pipe.occupancy, cfg.lsu_pipe.latency)),
+            Tma => cfg
+                .nextgen
+                .tma
+                .map(|t| (t.occupancy, t.latency))
+                .unwrap_or((cfg.lsu_pipe.occupancy, cfg.lsu_pipe.latency)),
+            Wgmma => cfg
+                .nextgen
+                .wgmma
+                .map(|t| (t.occupancy, t.latency))
+                .unwrap_or((cfg.tensor_pipe.occupancy, cfg.tensor_pipe.latency)),
         }
     }
 }
@@ -278,6 +326,21 @@ mod tests {
         assert_eq!(i.timing(&cfg), (8, 8));
         let j = SassInstr::new("IADD3", SassClass::IntAlu);
         assert_eq!(j.timing(&cfg), (2, 4));
+    }
+
+    #[test]
+    fn nextgen_classes_read_the_family_table() {
+        use crate::config::FamilyTiming;
+        let mut cfg = AmpereConfig::default();
+        // Ampere default: cp.async present, wgmma absent → fallback.
+        let (occ, lat) = SassClass::LdgSts.timing(&cfg);
+        assert_eq!((occ, lat), (2, 52));
+        assert_eq!(SassClass::Wgmma.timing(&cfg), (8, 8), "tensor-pipe fallback");
+        assert_eq!(SassClass::LdgSts.pipe(), Pipe::Lsu);
+        assert_eq!(SassClass::Tma.pipe(), Pipe::Lsu);
+        assert_eq!(SassClass::Wgmma.pipe(), Pipe::Tensor);
+        cfg.nextgen.wgmma = Some(FamilyTiming::new(16, 32));
+        assert_eq!(SassClass::Wgmma.timing(&cfg), (16, 32));
     }
 
     #[test]

@@ -60,6 +60,18 @@ fn pipe_idx(p: Pipe) -> usize {
     ALL_PIPES.iter().position(|q| *q == p).unwrap()
 }
 
+/// `*.wait_group N` — how many sealed groups may stay outstanding (the
+/// first immediate operand; a bare wait drains everything).
+fn wait_group_n(ins: &PtxInstruction) -> usize {
+    ins.srcs
+        .iter()
+        .find_map(|o| match o {
+            Operand::Imm(n) => Some((*n).max(0) as usize),
+            _ => None,
+        })
+        .unwrap_or(0)
+}
+
 /// Default dynamic SASS instruction budget per `run`.
 pub const DEFAULT_FUEL: u64 = 500_000_000;
 
@@ -128,6 +140,18 @@ impl Simulator {
         let mut sass_count: u64 = 0;
         let mut ptx_count: u64 = 0;
 
+        // Async-channel bookkeeping (next-gen families).  Copies issued
+        // by cp.async / TMA complete in the background: their completion
+        // times collect in `copy_pending` until a commit_group seals them
+        // into one group, and only a wait_group instruction stalls issue
+        // on sealed groups — the warp keeps issuing ALU work in between.
+        // wgmma has the identical commit/wait structure on its own
+        // channel (warpgroup MMA with async accumulate).
+        let mut copy_pending: Vec<u64> = Vec::new();
+        let mut copy_sealed: Vec<u64> = Vec::new();
+        let mut wg_pending: Vec<u64> = Vec::new();
+        let mut wg_sealed: Vec<u64> = Vec::new();
+
         let mut pc: usize = 0;
         'outer: while pc < prog.instrs.len() {
             let ins = &prog.instrs[pc];
@@ -151,8 +175,14 @@ impl Simulator {
                 let mut t = (last_issue + last_gap.max(1))
                     .max(pipe_free[pi])
                     .max(issue_floor);
-                for r in s.reads() {
-                    t = t.max(ready[r.0 as usize]);
+                // wgmma reads its accumulator asynchronously (the MMA
+                // retires through the commit/wait channel, not the
+                // register scoreboard), so issue does not stall on
+                // source readiness.
+                if s.effect != Effect::WgmmaIssue {
+                    for r in s.reads() {
+                        t = t.max(ready[r.0 as usize]);
+                    }
                 }
                 if matches!(s.class, SassClass::Cs2r | SassClass::S2r) {
                     // clock reads serialize with pipe drain (see mod.rs)
@@ -243,6 +273,39 @@ impl Simulator {
                         last_issue = t;
                         break 'outer;
                     }
+                    Effect::AsyncCopy => {
+                        // Functional: the bytes land in shared memory now;
+                        // timing: completion goes on the copy channel, not
+                        // the scoreboard (nor `drain` — a clock read does
+                        // not wait for in-flight async copies).
+                        self.do_async_copy(ins, params, &mut regs, &shared_bases);
+                        copy_pending.push(t + lat);
+                    }
+                    Effect::AsyncCommit => {
+                        let done = copy_pending.drain(..).fold(t, u64::max);
+                        copy_sealed.push(done);
+                    }
+                    Effect::AsyncWait => {
+                        let n = wait_group_n(ins);
+                        while copy_sealed.len() > n {
+                            let done = copy_sealed.remove(0);
+                            issue_floor = issue_floor.max(done);
+                        }
+                    }
+                    Effect::WgmmaIssue => {
+                        wg_pending.push(t + lat);
+                    }
+                    Effect::WgmmaCommit => {
+                        let done = wg_pending.drain(..).fold(t, u64::max);
+                        wg_sealed.push(done);
+                    }
+                    Effect::WgmmaWait => {
+                        let n = wait_group_n(ins);
+                        while wg_sealed.len() > n {
+                            let done = wg_sealed.remove(0);
+                            issue_floor = issue_floor.max(done);
+                        }
+                    }
                     Effect::None | Effect::WarpSync | Effect::Movm => {
                         if let Some(d) = s.dst {
                             ready[d.0 as usize] = t + lat;
@@ -280,6 +343,46 @@ impl Simulator {
             regs: regs[..prog.reg_count()].to_vec(),
             clock_reads,
         })
+    }
+
+    /// Functional half of `cp.async` / `cp.async.bulk.tensor`: move the
+    /// group's bytes global→shared immediately (the architectural state
+    /// must match a synchronous copy); the *timing* completion is what
+    /// rides the async channel in `run`.
+    fn do_async_copy(
+        &mut self,
+        ins: &PtxInstruction,
+        params: &[u64],
+        regs: &mut [u64],
+        shared_bases: &[u64],
+    ) {
+        let (dst_addr, src_addr) = {
+            let mut dummy = HashMap::new();
+            let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+            let d = ins.dst.as_ref().and_then(|o| exec::effective_address(&st, o)).unwrap_or(0);
+            let s = ins
+                .srcs
+                .iter()
+                .find_map(|o| exec::effective_address(&st, o))
+                .unwrap_or(0);
+            (d, s)
+        };
+        // cp.async's trailing immediate is the copy size (4/8/16); TMA
+        // boxes default to one 128-byte line.
+        let bytes = ins
+            .srcs
+            .iter()
+            .find_map(|o| match o {
+                Operand::Imm(n) => Some((*n).clamp(1, 256) as u64),
+                _ => None,
+            })
+            .unwrap_or(if ins.op == PtxOp::TmaLoad { 128 } else { 16 });
+        let mut off = 0u64;
+        while off < bytes {
+            let (v, _, _) = self.mem.load_global(src_addr + off, 64, ins.mods.cache);
+            self.mem.store_shared(dst_addr + off, 64, v);
+            off += 8;
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -344,7 +447,16 @@ impl Simulator {
                     let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
                     addr_op.and_then(|o| exec::effective_address(&st, o)).unwrap_or(0)
                 };
-                let (v, lat, _) = self.mem.load_shared(addr, size);
+                let (v, mut lat, _) = self.mem.load_shared(addr, size);
+                // DSMEM: `.cluster` reads a peer block's shared memory
+                // over the cluster interconnect — slower than local SMEM.
+                // The translator already rejected `.cluster` on arches
+                // whose table lacks the family.
+                if ins.mods.cluster {
+                    if let Some(t) = self.cfg.nextgen.dsmem {
+                        lat = t.latency;
+                    }
+                }
                 (v, lat)
             }
             _ => {
@@ -412,7 +524,15 @@ impl Simulator {
             (addr, value)
         };
         match ins.mods.space {
-            StateSpace::Shared => self.mem.store_shared(addr, size, value),
+            StateSpace::Shared => {
+                let completion = self.mem.store_shared(addr, size, value);
+                if ins.mods.cluster {
+                    if let Some(t) = self.cfg.nextgen.dsmem {
+                        return t.latency;
+                    }
+                }
+                completion
+            }
             _ => self.mem.store_global(addr, size, value, ins.mods.cache),
         }
     }
@@ -707,5 +827,145 @@ $L:
         let m = measured_cpi(mixed, 4);
         let s = measured_cpi(same, 4);
         assert!(m <= s, "mixed {m} should not exceed same-pipe {s}");
+    }
+
+    #[test]
+    fn cp_async_overlaps_issue_and_wait_exposes_completion() {
+        // Ampere's async-copy family: issuing a cp.async costs only its
+        // occupancy; the full copy latency surfaces at wait_group, and a
+        // clock read does NOT wait for in-flight copies.
+        let overlapped = r#"
+.visible .entry k(.param .u64 p0) {
+ .reg .b32 %r<9>;
+ .reg .b64 %rd<9>;
+ .shared .align 16 .b8 sh[256];
+ ld.param.u64 %rd1, [p0];
+ mov.u64 %rd7, %clock64;
+ cp.async.ca.shared.global [sh], [%rd1], 16;
+ cp.async.commit_group;
+ add.u32 %r1, %r8, 1;
+ add.u32 %r2, %r7, 2;
+ cp.async.wait_group 0;
+ mov.u64 %rd8, %clock64;
+ ret;
+}"#;
+        let no_wait = r#"
+.visible .entry k(.param .u64 p0) {
+ .reg .b32 %r<9>;
+ .reg .b64 %rd<9>;
+ .shared .align 16 .b8 sh[256];
+ ld.param.u64 %rd1, [p0];
+ mov.u64 %rd7, %clock64;
+ cp.async.ca.shared.global [sh], [%rd1], 16;
+ cp.async.commit_group;
+ add.u32 %r1, %r8, 1;
+ add.u32 %r2, %r7, 2;
+ mov.u64 %rd8, %clock64;
+ ret;
+}"#;
+        let measure = |src: &str| {
+            let prog = parse_program(src).unwrap();
+            let tp = translate_program(&prog).unwrap();
+            let mut sim = Simulator::a100();
+            let r = sim.run(&prog, &tp, &[0x1000]).unwrap();
+            r.clock_reads[1] - r.clock_reads[0]
+        };
+        let waited = measure(overlapped);
+        let unwaited = measure(no_wait);
+        assert!(
+            (50..=62).contains(&waited),
+            "wait_group must expose the ~52-cycle copy latency, got {waited}"
+        );
+        assert!(
+            unwaited < 20,
+            "without a wait the copy must stay off the critical path, got {unwaited}"
+        );
+    }
+
+    #[test]
+    fn cp_async_actually_moves_the_bytes() {
+        let src = r#"
+.visible .entry k(.param .u64 p0) {
+ .reg .b64 %rd<9>;
+ .shared .align 16 .b8 sh[256];
+ ld.param.u64 %rd1, [p0];
+ cp.async.ca.shared.global [sh], [%rd1], 16;
+ cp.async.commit_group;
+ cp.async.wait_group 0;
+ ld.shared.u64 %rd3, [sh];
+ ld.shared.u64 %rd4, [sh + 8];
+ ret;
+}"#;
+        let prog = parse_program(src).unwrap();
+        let tp = translate_program(&prog).unwrap();
+        let mut sim = Simulator::a100();
+        sim.mem.dram.write_u64(0x1000, 0xDEAD_BEEF_CAFE_F00D);
+        sim.mem.dram.write_u64(0x1008, 0x1234_5678_9ABC_DEF0);
+        let r = sim.run(&prog, &tp, &[0x1000]).unwrap();
+        assert_eq!(r.reg(&prog, "%rd3"), Some(0xDEAD_BEEF_CAFE_F00D));
+        assert_eq!(r.reg(&prog, "%rd4"), Some(0x1234_5678_9ABC_DEF0));
+    }
+
+    #[test]
+    fn dsmem_cluster_access_pays_the_interconnect_latency() {
+        use crate::config::FamilyTiming;
+        use crate::translate::translate_program_for;
+        // Local SMEM load is 23 cycles (Table IV); a `.cluster` load
+        // crosses the DSMEM interconnect at the arch's dsmem latency.
+        let src = ".visible .entry k() { .reg .b64 %rd<9>; .shared .align 8 .b8 sh[1024]; \
+             mov.u64 %rd1, %clock64; ld.shared.cluster.u64 %rd3, [sh]; \
+             mov.u64 %rd2, %clock64; ret; }";
+        let prog = parse_program(src).unwrap();
+
+        // Default (Ampere) table has no DSMEM: clean translate error.
+        let err = translate_program(&prog).unwrap_err();
+        assert!(
+            err.message.contains("distributed-shared-memory"),
+            "unexpected error: {}",
+            err.message
+        );
+
+        let mut cfg = AmpereConfig::a100();
+        cfg.nextgen.dsmem = Some(FamilyTiming::new(2, 49));
+        let tp = translate_program_for(&prog, cfg.quirks, cfg.nextgen).unwrap();
+        let mut sim = Simulator::new(cfg);
+        let r = sim.run(&prog, &tp, &[]).unwrap();
+        assert_eq!(r.clock_reads[1] - r.clock_reads[0] - 2, 49);
+    }
+
+    #[test]
+    fn wgmma_retires_through_its_own_channel() {
+        use crate::config::FamilyTiming;
+        use crate::translate::translate_program_for;
+        let src = r#"
+.visible .entry k() {
+ .reg .b64 %rd<9>;
+ .reg .b32 %f<9>;
+ mov.u64 %rd1, %clock64;
+ wgmma.mma_async.sync.aligned.m64n64k16.f32.f16.f16 {%f1}, {%f2}, {%f3};
+ wgmma.commit_group;
+ wgmma.wait_group 0;
+ mov.u64 %rd2, %clock64;
+ ret;
+}"#;
+        let prog = parse_program(src).unwrap();
+
+        let err = translate_program(&prog).unwrap_err();
+        assert!(
+            err.message.contains("warpgroup-MMA"),
+            "unexpected error: {}",
+            err.message
+        );
+
+        let mut cfg = AmpereConfig::a100();
+        cfg.nextgen.wgmma = Some(FamilyTiming::new(16, 32));
+        let tp = translate_program_for(&prog, cfg.quirks, cfg.nextgen).unwrap();
+        let mut sim = Simulator::new(cfg);
+        let r = sim.run(&prog, &tp, &[]).unwrap();
+        let delta = r.clock_reads[1] - r.clock_reads[0];
+        assert!(
+            (32..=44).contains(&delta),
+            "wait must expose the 32-cycle wgmma latency, got {delta}"
+        );
     }
 }

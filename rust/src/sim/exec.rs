@@ -411,6 +411,15 @@ pub fn eval(prog: &PtxProgram, ins: &PtxInstruction, st: &mut ExecState) -> Outc
         }
         // Memory / control / wmma handled by core:
         PtxOp::Ld | PtxOp::St | PtxOp::Bar | PtxOp::BarWarpSync | PtxOp::Ret | PtxOp::Exit => None,
+        // Next-gen async families: data movement and group tracking are
+        // the core's job (Effect::AsyncCopy etc.), nothing to eval here.
+        PtxOp::CpAsync
+        | PtxOp::CpAsyncCommit
+        | PtxOp::CpAsyncWait
+        | PtxOp::TmaLoad
+        | PtxOp::WgmmaMma
+        | PtxOp::WgmmaCommit
+        | PtxOp::WgmmaWait => None,
         PtxOp::Wmma(w) => {
             eval_wmma(prog, ins, w, st);
             None

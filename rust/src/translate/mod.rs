@@ -27,7 +27,7 @@
 
 pub mod rules;
 
-use crate::config::TranslationQuirks;
+use crate::config::{NextGenConfig, TranslationQuirks};
 use crate::ptx::{Operand, PtxOp, PtxProgram, Reg};
 use crate::sass::{Effect, SassInstr};
 use std::fmt;
@@ -106,6 +106,7 @@ pub struct Translator<'p> {
     prog: &'p PtxProgram,
     next_temp: u32,
     quirks: TranslationQuirks,
+    nextgen: NextGenConfig,
 }
 
 impl<'p> Translator<'p> {
@@ -115,9 +116,27 @@ impl<'p> Translator<'p> {
         Self::with_quirks(prog, TranslationQuirks::default())
     }
 
-    /// Translator with an explicit architecture's translation quirks.
+    /// Translator with an explicit architecture's translation quirks
+    /// (and the default Ampere next-gen capability set).
     pub fn with_quirks(prog: &'p PtxProgram, quirks: TranslationQuirks) -> Self {
-        Self { prog, next_temp: prog.reg_count() as u32, quirks }
+        Self::for_arch(prog, quirks, NextGenConfig::default())
+    }
+
+    /// Translator with the full per-arch compile surface: translation
+    /// quirks *and* the next-gen instruction-family capability table —
+    /// what the engine's kernel cache threads from the machine config.
+    pub fn for_arch(
+        prog: &'p PtxProgram,
+        quirks: TranslationQuirks,
+        nextgen: NextGenConfig,
+    ) -> Self {
+        Self { prog, next_temp: prog.reg_count() as u32, quirks, nextgen }
+    }
+
+    /// The architecture's next-gen family capability table (rules use it
+    /// to reject `cp.async`/TMA/wgmma/DSMEM on arches lacking them).
+    pub fn nextgen(&self) -> &NextGenConfig {
+        &self.nextgen
     }
 
     /// Allocate a translation temporary register.
@@ -300,6 +319,16 @@ pub fn translate_program_with(
     quirks: TranslationQuirks,
 ) -> Result<TranslatedProgram, TranslateError> {
     Translator::with_quirks(prog, quirks).translate()
+}
+
+/// Translate under an architecture's quirks *and* next-gen capability
+/// table — the full per-arch compile path (kernel cache, oracle, fuzz).
+pub fn translate_program_for(
+    prog: &PtxProgram,
+    quirks: TranslationQuirks,
+    nextgen: NextGenConfig,
+) -> Result<TranslatedProgram, TranslateError> {
+    Translator::for_arch(prog, quirks, nextgen).translate()
 }
 
 /// Group wiring structure: how a multi-instruction expansion's data flow

@@ -457,12 +457,23 @@ pub fn map_instruction(
         }
         (PtxOp::Ld, _) => {
             let d = dst.ok_or("ld needs dst")?;
-            let mn = match (ins.mods.space, ins.mods.cache) {
-                (StateSpace::Shared, _) => "LDS",
-                (StateSpace::Param, _) => "LDC",
-                (_, CacheOp::Cv) => "LDG.E.STRONG.SYS",
-                (_, CacheOp::Cg) => "LDG.E.STRONG.GPU",
-                _ => "LDG.E",
+            let mn = if ins.mods.cluster {
+                // Distributed shared memory: remote-SM access within the
+                // thread-block cluster (sm_90+).
+                tr.nextgen().dsmem.ok_or_else(|| {
+                    "ld.shared.cluster needs the distributed-shared-memory family \
+                     (sm_90+); this architecture's next-gen table lacks it"
+                        .to_string()
+                })?;
+                "LDS.CLUSTER"
+            } else {
+                match (ins.mods.space, ins.mods.cache) {
+                    (StateSpace::Shared, _) => "LDS",
+                    (StateSpace::Param, _) => "LDC",
+                    (_, CacheOp::Cv) => "LDG.E.STRONG.SYS",
+                    (_, CacheOp::Cg) => "LDG.E.STRONG.GPU",
+                    _ => "LDG.E",
+                }
             };
             let mut i = si(mn, Memory).dst(d).effect(Effect::Load);
             for s in srcs.iter().take(4) {
@@ -471,12 +482,21 @@ pub fn map_instruction(
             return Ok(one(i));
         }
         (PtxOp::St, _) => {
-            let mn = match ins.mods.space {
-                StateSpace::Shared => "STS",
-                _ => match ins.mods.cache {
-                    CacheOp::Wt => "STG.E.STRONG.SYS",
-                    _ => "STG.E",
-                },
+            let mn = if ins.mods.cluster {
+                tr.nextgen().dsmem.ok_or_else(|| {
+                    "st.shared.cluster needs the distributed-shared-memory family \
+                     (sm_90+); this architecture's next-gen table lacks it"
+                        .to_string()
+                })?;
+                "STS.CLUSTER"
+            } else {
+                match ins.mods.space {
+                    StateSpace::Shared => "STS",
+                    _ => match ins.mods.cache {
+                        CacheOp::Wt => "STG.E.STRONG.SYS",
+                        _ => "STG.E",
+                    },
+                }
             };
             let mut i = si(mn, Memory).effect(Effect::Store);
             if let Some(Operand::Mem { base, .. }) = ins.dst {
@@ -507,6 +527,91 @@ pub fn map_instruction(
 
         // ---------------- tensor core ---------------------------------
         (PtxOp::Wmma(w), _) => return tensor::translate_wmma(tr, ins, w, dst, &srcs),
+
+        // ---------------- next-gen families (sm_80+ / sm_90+) ---------
+        // Availability is per-arch (`NextGenConfig`); an absent family is
+        // a clean translate error naming the capability, never a
+        // fabricated mapping.  Timings are charged at sim time through
+        // the class (`SassClass::timing` reads `cfg.nextgen`).
+        (PtxOp::CpAsync, _) => {
+            tr.nextgen().cp_async.ok_or_else(|| {
+                "cp.async needs the async-copy family (sm_80+); this \
+                 architecture's next-gen table lacks it"
+                    .to_string()
+            })?;
+            let mn = match ins.mods.cache {
+                CacheOp::Cg => "LDGSTS.E.BYPASS.128",
+                _ => "LDGSTS.E.128",
+            };
+            let mut i = si(mn, LdgSts).effect(Effect::AsyncCopy);
+            for s in srcs.iter().take(4) {
+                i = i.src(*s);
+            }
+            return Ok(one(i));
+        }
+        (PtxOp::TmaLoad, _) => {
+            tr.nextgen().tma.ok_or_else(|| {
+                "cp.async.bulk.tensor needs the TMA family (sm_90+); this \
+                 architecture's next-gen table lacks it"
+                    .to_string()
+            })?;
+            let mut i = si("UTMALDG.2D", Tma).effect(Effect::AsyncCopy);
+            for s in srcs.iter().take(4) {
+                i = i.src(*s);
+            }
+            return Ok(one(i));
+        }
+        (PtxOp::CpAsyncCommit, _) => {
+            tr.nextgen().cp_async.or(tr.nextgen().tma).ok_or_else(|| {
+                "cp.async.commit_group needs the async-copy or TMA family; this \
+                 architecture's next-gen table lacks both"
+                    .to_string()
+            })?;
+            return Ok(one(si("LDGDEPBAR", Control).effect(Effect::AsyncCommit)));
+        }
+        (PtxOp::CpAsyncWait, _) => {
+            tr.nextgen().cp_async.or(tr.nextgen().tma).ok_or_else(|| {
+                "cp.async.wait_group needs the async-copy or TMA family; this \
+                 architecture's next-gen table lacks both"
+                    .to_string()
+            })?;
+            return Ok(one(si("DEPBAR.LE.SB0", Control).effect(Effect::AsyncWait)));
+        }
+        (PtxOp::WgmmaMma, _) => {
+            tr.nextgen().wgmma.ok_or_else(|| {
+                "wgmma.mma_async needs the warpgroup-MMA family (sm_90+); this \
+                 architecture's next-gen table lacks it"
+                    .to_string()
+            })?;
+            let mn = match tr.nextgen().wgmma_flavor {
+                crate::config::WgmmaFlavor::Hgmma => "HGMMA",
+                crate::config::WgmmaFlavor::Tcgen05 => "TCGEN05.MMA",
+            };
+            let mut i = si(mn, Wgmma).effect(Effect::WgmmaIssue);
+            if let Some(d) = dst {
+                i = i.dst(d);
+            }
+            for s in srcs.iter().take(4) {
+                i = i.src(*s);
+            }
+            return Ok(one(i));
+        }
+        (PtxOp::WgmmaCommit, _) => {
+            tr.nextgen().wgmma.ok_or_else(|| {
+                "wgmma.commit_group needs the warpgroup-MMA family (sm_90+); this \
+                 architecture's next-gen table lacks it"
+                    .to_string()
+            })?;
+            return Ok(one(si("WARPGROUP.ARRIVE", Control).effect(Effect::WgmmaCommit)));
+        }
+        (PtxOp::WgmmaWait, _) => {
+            tr.nextgen().wgmma.ok_or_else(|| {
+                "wgmma.wait_group needs the warpgroup-MMA family (sm_90+); this \
+                 architecture's next-gen table lacks it"
+                    .to_string()
+            })?;
+            return Ok(one(si("WARPGROUP.DEPBAR.LE", Control).effect(Effect::WgmmaWait)));
+        }
 
         (op, t) => {
             return Err(format!(

@@ -87,6 +87,28 @@ fn fuzzing_respects_the_arch_capability_table() {
     );
 }
 
+/// Acceptance: a 200-case differential run on each new preset reports
+/// zero divergences, with the nextgen family actually drawn — the
+/// predictor, both simulator paths and the translator agree on
+/// `cp.async`/TMA/wgmma/DSMEM kernels end to end.
+#[test]
+fn hopper_and_blackwell_fuzz_clean_including_the_nextgen_family() {
+    for name in ["hopper", "blackwell"] {
+        let spec = arch::get(name).unwrap();
+        let engine = Engine::new(spec.config.clone().into_small());
+        let model = ampere_ubench::oracle::LatencyModel::extract(&engine)
+            .unwrap_or_else(|e| panic!("{name} extraction: {e}"));
+        assert_eq!(model.nextgen.len(), 4, "{name} model carries every family");
+        let outcome = fuzz::diff::run(&engine, &model, 11, 200);
+        assert!(outcome.failures.is_empty(), "{name}: {}", outcome.render());
+        assert!(
+            outcome.family_counts.contains_key("nextgen"),
+            "{name} stream never drew the nextgen family: {:?}",
+            outcome.family_counts
+        );
+    }
+}
+
 /// Acceptance: `repro compare --arch ampere,turing --json` emits a
 /// per-row delta table covering every Table V row.
 #[test]
@@ -102,18 +124,21 @@ fn compare_json_covers_every_table5_row() {
             // the test fast while exercising the alignment-by-name path.
             let sweep = ampere_ubench::microbench::throughput::run_sweep_with(&engine, &[1, 16])
                 .unwrap_or_else(|e| panic!("{} sweep: {e}", s.name()));
-            (campaign, sweep)
+            let nextgen = ampere_ubench::isa::run_families_with(&engine)
+                .unwrap_or_else(|e| panic!("{} nextgen: {e}", s.name()));
+            (campaign, sweep, nextgen)
         })
         .collect();
     let results: Vec<report::ArchResults<'_>> = specs
         .iter()
         .zip(&runs)
-        .map(|(s, (c, t))| report::ArchResults {
+        .map(|(s, (c, t, ng))| report::ArchResults {
             arch: s.name(),
             table5: c.table5.as_slice(),
             table4: c.table4.as_slice(),
             table3: c.table3.as_slice(),
             throughput: t.as_slice(),
+            nextgen: ng.as_slice(),
         })
         .collect();
 
@@ -196,12 +221,32 @@ fn compare_json_covers_every_table5_row() {
         Some(&Value::Null)
     );
 
+    // Next-gen families: ampere has cp.async numbers, turing answers
+    // null for every family — the rows stay so the table is rectangular.
+    let ng = v.get("nextgen").and_then(Value::as_arr).unwrap();
+    assert_eq!(ng.len(), 4, "one row per registry family");
+    let cp = ng
+        .iter()
+        .find(|r| r.get("family").and_then(Value::as_str) == Some("cp_async"))
+        .unwrap();
+    assert!(
+        cp.get("completion").unwrap().get("ampere").unwrap().as_u64().is_some(),
+        "{cp:?}"
+    );
+    assert_eq!(cp.get("completion").unwrap().get("turing"), Some(&Value::Null));
+    assert_eq!(
+        cp.get("sass").unwrap().get("ampere").and_then(Value::as_str),
+        Some("LDGSTS.E.128")
+    );
+
     // And the printed form renders every row plus the unsupported
     // marker.
     let printed = report::compare(&results);
     assert!(printed.contains("add.f64"), "{printed}");
     assert!(printed.contains("132 rows") || printed.contains(&format!("{rows} rows")));
     assert!(printed.contains('-'), "unsupported dtypes print as '-'");
+    assert!(printed.contains("Cross-arch next-gen ISA"), "{printed}");
+    assert!(printed.contains("cp.async.ca.shared.global"), "{printed}");
 }
 
 #[test]
@@ -216,4 +261,37 @@ fn arch_spec_round_trips_and_diffs_through_the_cli_surface() {
     for needle in ["wmma.bf16_f32", "wmma.tf32_f32", "sm_count"] {
         assert!(table.contains(needle), "{needle} missing:\n{table}");
     }
+}
+
+/// Satellite: the CLI surface covers the next-gen section — `arch diff
+/// ampere hopper` flattens the family table, `arch show --json` output
+/// for the new presets is a loadable custom spec, and partial specs are
+/// still rejected with the missing field named.
+#[test]
+fn arch_cli_surface_carries_the_nextgen_section() {
+    for name in ["hopper", "blackwell"] {
+        let spec = arch::get(name).unwrap();
+        let reloaded = ArchSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(reloaded, spec, "{name} show --json must round-trip");
+    }
+
+    // The flattened diff names the family fields ampere lacks ('-' on
+    // the a side) and the one it shares with a different number.
+    let table = arch::diff_table(&ArchSpec::ampere(), &ArchSpec::hopper());
+    for needle in [
+        "nextgen.tma.latency",
+        "nextgen.tma.occupancy",
+        "nextgen.wgmma.occupancy",
+        "nextgen.dsmem.latency",
+        "nextgen.cp_async.latency",
+    ] {
+        assert!(table.contains(needle), "{needle} missing:\n{table}");
+    }
+
+    // A spec stripped of a required field is rejected, not defaulted.
+    let broken = ArchSpec::hopper()
+        .to_json_string()
+        .replace("\"sm_count\"", "\"sm_count_gone\"");
+    let err = ArchSpec::from_json_str(&broken).unwrap_err();
+    assert!(err.contains("sm_count"), "{err}");
 }
