@@ -21,6 +21,7 @@ FILES = (
     "BENCH_oracle.json",
     "BENCH_throughput.json",
     "BENCH_serve.json",
+    "BENCH_gemm.json",
 )
 
 

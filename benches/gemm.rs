@@ -1,0 +1,22 @@
+//! Bench for the whole-kernel GEMM prediction sweep: every tile kernel
+//! (FMA fallback + each supported WMMA dtype × shape) is simulated live
+//! and statically resolved through the protocol replay.  This times the
+//! control-flow hot path — branch issue, predicated squash, and the
+//! replay's concrete loop execution — end to end.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::microbench::gemm;
+use ampere_ubench::util::bench::{black_box, Bench};
+
+fn main() {
+    let engine = Engine::new(AmpereConfig::a100());
+    let model = gemm::replay_model(engine.cfg());
+    let mut b = Bench::from_args("gemm");
+    b.bench("gemm_sweep", || {
+        let rows = gemm::run_sweep_with(black_box(&engine), black_box(&model)).unwrap();
+        assert!(rows.iter().all(|r| r.matches), "GEMM prediction diverged");
+        rows
+    });
+    b.finish();
+}

@@ -256,6 +256,12 @@ impl ArchSpec {
             .set("cold_start_extra", c.cold_start_extra)
             .set("depbar_stall", c.depbar_stall)
             .set("issue_width", c.issue_width)
+            .set(
+                "control_flow",
+                Value::obj()
+                    .set("branch_taken_extra", c.branch_taken_extra)
+                    .set("predicated_skip_occupancy", c.predicated_skip_occupancy),
+            )
             .set("pipes", pipes)
             .set(
                 "memory",
@@ -346,6 +352,20 @@ impl ArchSpec {
         // of 1, so specs written before the multi-warp engine still load
         // (1 is not an Ampere-specific value — every preset uses it).
         c.issue_width = v.get("issue_width").and_then(Value::as_u64).unwrap_or(1);
+        // Branch/predication timing: optional with the zero-impact
+        // defaults, so specs written before the control-flow extension
+        // still load (0/1 are not Ampere-specific — every preset uses
+        // them).
+        c.branch_taken_extra = 0;
+        c.predicated_skip_occupancy = 1;
+        if let Some(cf) = v.get("control_flow") {
+            if let Some(x) = cf.get("branch_taken_extra").and_then(Value::as_u64) {
+                c.branch_taken_extra = x;
+            }
+            if let Some(x) = cf.get("predicated_skip_occupancy").and_then(Value::as_u64) {
+                c.predicated_skip_occupancy = x;
+            }
+        }
 
         let pipes = v.get("pipes").ok_or("arch json: missing \"pipes\" object")?;
         for p in ALL_PIPES {
@@ -463,6 +483,14 @@ impl ArchSpec {
             ("cold_start_extra".into(), c.cold_start_extra.to_string()),
             ("depbar_stall".into(), c.depbar_stall.to_string()),
             ("issue_width".into(), c.issue_width.to_string()),
+            (
+                "control_flow.branch_taken_extra".into(),
+                c.branch_taken_extra.to_string(),
+            ),
+            (
+                "control_flow.predicated_skip_occupancy".into(),
+                c.predicated_skip_occupancy.to_string(),
+            ),
         ];
         for p in ALL_PIPES {
             let t = c.pipe(p);
@@ -823,6 +851,31 @@ mod tests {
         let loaded = ArchSpec::from_json_str(&to_string_pretty(&v)).unwrap();
         assert_eq!(loaded.config.issue_width, 1);
         assert!(loaded.flatten().iter().any(|(k, v)| k == "pipe.fp64.ports" && v == "1"));
+    }
+
+    #[test]
+    fn control_flow_timing_round_trips_and_defaults_leniently() {
+        // Non-default branch/predication timing survives the JSON trip.
+        let mut spec = ArchSpec::ampere();
+        spec.config.arch_name = "branchy".into();
+        spec.config.branch_taken_extra = 3;
+        spec.config.predicated_skip_occupancy = 2;
+        let back = ArchSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back, spec);
+        assert!(back
+            .flatten()
+            .iter()
+            .any(|(k, v)| k == "control_flow.branch_taken_extra" && v == "3"));
+
+        // A spec written before the control-flow extension (no section)
+        // still loads, with the zero-impact defaults.
+        let mut v = ArchSpec::turing().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.remove("control_flow");
+        }
+        let loaded = ArchSpec::from_json_str(&to_string_pretty(&v)).unwrap();
+        assert_eq!(loaded.config.branch_taken_extra, 0);
+        assert_eq!(loaded.config.predicated_skip_occupancy, 1);
     }
 
     #[test]

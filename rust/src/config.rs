@@ -341,6 +341,17 @@ pub struct AmpereConfig {
     /// exceed `issue_width` instructions per cycle however many warps
     /// are resident.
     pub issue_width: u64,
+    /// Extra pipeline-refill cycles a *taken* branch charges before the
+    /// next instruction may issue (a fall-through branch pays only the
+    /// control pipe's occupancy).  0 on every built-in preset — the
+    /// single-warp protocol never resolves a refill penalty distinct
+    /// from BRA's own occupancy — but per-arch specs can calibrate it.
+    pub branch_taken_extra: u64,
+    /// Issue-slot cycles a predicated-off (`@%p` false) instruction
+    /// still occupies.  A squashed instruction is charged at issue
+    /// only: no result latency, no register write, no pipe reservation
+    /// beyond this slot.
+    pub predicated_skip_occupancy: u64,
     /// Per-pipe steady-state timings.
     pub int_pipe: PipeTiming,
     pub fma_pipe: PipeTiming,
@@ -376,6 +387,8 @@ impl Default for AmpereConfig {
             cold_start_extra: 1,
             depbar_stall: 31,
             issue_width: 1,
+            branch_taken_extra: 0,
+            predicated_skip_occupancy: 1,
             // (occupancy, latency); occupancy = 32 / lanes-per-partition.
             int_pipe: PipeTiming::new(2, 4),
             fma_pipe: PipeTiming::new(2, 4),
@@ -530,6 +543,17 @@ mod tests {
         let pre = NextGenConfig::none();
         assert!(pre.cp_async.is_none() && pre.tma.is_none());
         assert!(pre.wgmma.is_none() && pre.dsmem.is_none());
+    }
+
+    #[test]
+    fn branch_predication_defaults_are_zero_impact() {
+        // Straight-line byte-identity: a taken branch pays nothing
+        // beyond the control pipe's occupancy by default, and a
+        // squashed (predicated-off) instruction holds exactly its one
+        // issue slot.  Custom specs may calibrate both per arch.
+        let c = AmpereConfig::a100();
+        assert_eq!(c.branch_taken_extra, 0);
+        assert_eq!(c.predicated_skip_occupancy, 1);
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //! 2. **a fresh stack** — an independent parse + translate of the same
 //!    source, simulated on a never-pooled [`Simulator`] built from the
 //!    same config;
-//! 3. **the static predictor** — [`predict::predict`] against an
-//!    extracted [`LatencyModel`].
+//! 3. **the static predictor** — [`predict::predict_for`] against an
+//!    extracted [`LatencyModel`] (looped kernels resolve through the
+//!    protocol replay, and the `loop` family is predictor-exact: zero
+//!    divergence tolerated against the live clock delta).
 //!
 //! Divergences are classified so a failure names the broken layer:
 //!
@@ -320,8 +322,10 @@ pub fn run_case(
         r_pool.cycles / n
     };
 
-    // Path 3: the static predictor.
-    match predict::predict(model, &kernel.prog, &kernel.tp) {
+    // Path 3: the static predictor.  The engine config rides along so
+    // looped kernels (the `loop` family) resolve through the protocol
+    // replay instead of erroring on the straight-line check.
+    match predict::predict_for(model, &kernel.prog, &kernel.tp, Some(engine.cfg())) {
         Err(e) => Err(Divergence::new(DivergenceKind::PredictorError, e)),
         Ok(p) => {
             if p.n != n {
@@ -498,6 +502,33 @@ mod tests {
         run_case(&engine, &tiny_model(), &case).unwrap();
         // The scheduler pool was actually exercised.
         assert!(engine.warp_pool_stats().created >= 1);
+    }
+
+    #[test]
+    fn loop_family_is_predictor_exact_end_to_end() {
+        // The acceptance contract: zero divergence between the protocol
+        // replay and live simulation on every generated looped kernel.
+        // The replay never consults the per-instruction tables, so the
+        // tiny model suffices.
+        let engine = Engine::new(AmpereConfig::a100());
+        let model = tiny_model();
+        let mut saw = 0u32;
+        for seed in 0..64u64 {
+            let case = gen::generate_for_arch(
+                seed,
+                gen::DEFAULT_SIZE,
+                &engine.cfg().wmma_dtypes,
+                &engine.cfg().nextgen,
+            );
+            if case.family != gen::Family::Loop {
+                continue;
+            }
+            saw += 1;
+            let cpi = run_case(&engine, &model, &case)
+                .unwrap_or_else(|d| panic!("{} (seed {seed}): {d:?}", case.label));
+            assert!(cpi >= 1, "{}", case.label);
+        }
+        assert!(saw >= 2, "only {saw} loop cases in 64 seeds");
     }
 
     #[test]

@@ -40,6 +40,12 @@
 //!   ([`NextGenConfig`]): `cp.async` / TMA / `wgmma` issue bursts with
 //!   valid commit/wait dataflow, and DSMEM cluster traffic.  Degrades
 //!   to `mixed` when the table is empty (Volta/Turing).
+//! * [`Family::Loop`] — counted loops *through* the measured window:
+//!   a label, a randomly guarded ALU body, and a `setp`/`@%p bra`
+//!   back-edge over 2–9 trips.  Control registers are written only by
+//!   the fixed scaffolding, so trip counts are exact by construction
+//!   and the family is **predictor-exact** through the protocol
+//!   replay.
 //!
 //! Every generated kernel carries protocol clock brackets, so all three
 //! differential paths (pooled engine, fresh simulator, static
@@ -74,6 +80,12 @@ pub enum Family {
     /// capability table with valid-by-construction commit/wait
     /// dataflow.
     NextGen,
+    /// Counted loops *through* the measured window with optionally
+    /// predicated body instructions.  Loop-control registers are
+    /// written only by the fixed counter/`setp` pair, so every trip
+    /// count is statically known — these are **predictor-exact**: the
+    /// protocol replay must reproduce live simulation bit for bit.
+    Loop,
 }
 
 impl Family {
@@ -87,11 +99,12 @@ impl Family {
             Family::Wmma => "wmma",
             Family::Throughput => "throughput",
             Family::NextGen => "nextgen",
+            Family::Loop => "loop",
         }
     }
 }
 
-pub const ALL_FAMILIES: [Family; 8] = [
+pub const ALL_FAMILIES: [Family; 9] = [
     Family::Alu,
     Family::AluDep,
     Family::Mixed,
@@ -100,6 +113,7 @@ pub const ALL_FAMILIES: [Family; 8] = [
     Family::Wmma,
     Family::Throughput,
     Family::NextGen,
+    Family::Loop,
 ];
 
 /// One generated kernel.
@@ -186,6 +200,7 @@ pub fn generate_for_arch(
             (label.replacen("mixed", "throughput", 1), src, false)
         }
         Family::NextGen => gen_nextgen(&mut rng, size, nextgen),
+        Family::Loop => gen_loop(&mut rng, size),
     };
     FuzzCase { seed, family, label, src, predict_exact }
 }
@@ -458,6 +473,57 @@ fn gen_nextgen(rng: &mut Rng, size: u32, ng: &NextGenConfig) -> (String, String,
     (label, measurement_kernel(init, &body.join("\n ")), false)
 }
 
+// ---- loop ------------------------------------------------------------
+
+/// A counted loop through the measured window with (sometimes)
+/// predicated body instructions.  Loop-control state — the `%rd20`
+/// counter and the `%p9` back-edge predicate — is written only by the
+/// fixed `add`/`setp` pair at the bottom of the loop, and body
+/// instructions write scratch registers exclusively, so trip counts are
+/// statically known and the dataflow is valid by construction.  Body
+/// guards come from a `setp` over the counter itself (`%p8`, true on
+/// exactly one trip), exercising both the squash path and the
+/// guard-ready scoreboard wait.
+fn gen_loop(rng: &mut Rng, size: u32) -> (String, String, bool) {
+    const OPS32: [&str; 5] = ["add.u32", "mul.lo.u32", "and.b32", "or.b32", "xor.b32"];
+    let mut init: Vec<String> = Vec::new();
+    for i in 5..17u32 {
+        init.push(RegClass::R.init_line(i));
+    }
+    init.push("mov.u64 %rd20, 0;".to_string());
+    let trips = 2 + rng.below(8); // 2..=9 trips
+    let nbody = 1 + rng.below(size.min(4) as u64) as usize;
+    // The body predicate flips on exactly one (random) trip.
+    let flip = rng.below(trips);
+    let mut body: Vec<String> = vec![
+        "$FL:".to_string(),
+        format!("setp.eq.u64 %p8, %rd20, {flip};"),
+    ];
+    let mut guards = 0u32;
+    for i in 0..nbody {
+        let guard = match rng.below(3) {
+            0 => "",
+            1 => {
+                guards += 1;
+                "@%p8 "
+            }
+            _ => {
+                guards += 1;
+                "@!%p8 "
+            }
+        };
+        let op = *rng.pick(&OPS32);
+        let a = 5 + rng.below(12);
+        let b = 5 + rng.below(12);
+        body.push(format!("{guard}{op} %r{}, %r{a}, %r{b};", 30 + i as u32));
+    }
+    body.push("add.u64 %rd20, %rd20, 1;".to_string());
+    body.push(format!("setp.lt.u64 %p9, %rd20, {trips};"));
+    body.push("@%p9 bra $FL;".to_string());
+    let label = format!("loop[trips={trips},body={nbody},guarded={guards}]");
+    (label, measurement_kernel(&init.join("\n "), &body.join("\n ")), true)
+}
+
 // ---- wmma ------------------------------------------------------------
 
 fn gen_wmma(rng: &mut Rng, dtypes: &[WmmaDtype]) -> (String, String, bool) {
@@ -556,15 +622,45 @@ mod tests {
     #[test]
     fn all_families_reachable_and_alu_is_predict_exact() {
         let mut seen = std::collections::BTreeSet::new();
-        for seed in 0..160u64 {
+        for seed in 0..256u64 {
             let c = generate(seed, DEFAULT_SIZE);
             seen.insert(c.family.name());
             match c.family {
-                Family::Alu | Family::AluDep => assert!(c.predict_exact, "{}", c.label),
+                Family::Alu | Family::AluDep | Family::Loop => {
+                    assert!(c.predict_exact, "{}", c.label)
+                }
                 _ => assert!(!c.predict_exact, "{}", c.label),
             }
         }
         assert_eq!(seen.len(), ALL_FAMILIES.len(), "{seen:?}");
+    }
+
+    #[test]
+    fn loop_kernels_loop_through_the_window_and_stay_valid() {
+        let cfg = AmpereConfig::small();
+        let mut saw = 0u32;
+        for seed in 0..96u64 {
+            let c = generate(seed, DEFAULT_SIZE);
+            if c.family != Family::Loop {
+                continue;
+            }
+            saw += 1;
+            let prog = parse_program(&c.src)
+                .unwrap_or_else(|e| panic!("{} (seed {seed}): {e}\n{}", c.label, c.src));
+            let tp = translate_program(&prog).unwrap();
+            let mut sim = Simulator::new(cfg.clone());
+            let r = sim.run(&prog, &tp, &[0x100000]).unwrap();
+            assert_eq!(r.clock_reads.len(), 2, "{}: brackets must survive", c.label);
+            // The loop re-executes: dynamic PTX count exceeds the static
+            // program length.
+            assert!(
+                r.ptx_instructions > prog.instrs.len() as u64,
+                "{}: body must re-execute",
+                c.label
+            );
+            assert!(c.predict_exact, "{}", c.label);
+        }
+        assert!(saw >= 2, "only {saw} loop cases in 96 seeds");
     }
 
     #[test]

@@ -1,6 +1,6 @@
-//! Golden conformance: Tables I–V and Fig. 4, rendered through the
-//! `report::*_json` builders and diffed cell by cell against the pinned
-//! snapshots in `tests/golden/`.
+//! Golden conformance: Tables I–V, Fig. 4 and the whole-kernel GEMM
+//! sweep, rendered through the `report::*_json` builders and diffed
+//! cell by cell against the pinned snapshots in `tests/golden/`.
 //!
 //! A golden file is `{"table": <name>, "expect": <spec>, "aggregate":
 //! <optional>}` where `<spec>` mirrors the live JSON shape and every
@@ -26,12 +26,13 @@
 //! mapping drift fail loudly even without running a campaign.
 
 use crate::engine::Engine;
-use crate::microbench::{alu, insights, memory, registry, wmma};
+use crate::microbench::{alu, gemm, insights, memory, registry, wmma};
 use crate::report;
 use crate::util::json::{parse, to_string_pretty, Value};
 
 /// The experiments under conformance, in report order.
-pub const TABLES: [&str; 6] = ["table1", "table2", "table3", "table4", "table5", "fig4"];
+pub const TABLES: [&str; 7] =
+    ["table1", "table2", "table3", "table4", "table5", "fig4", "gemm"];
 
 /// The checked-in snapshot directory (compile-time repo root).
 pub fn default_dir() -> String {
@@ -47,6 +48,13 @@ pub fn live_json(engine: &Engine, table: &str) -> Result<Value, String> {
         "table4" => Ok(report::table4_json(&memory::run_table4_with(engine)?)),
         "table5" => Ok(report::table5_json(&alu::run_table5_with(engine)?)),
         "fig4" => Ok(report::fig4_json(&insights::fig4_with(engine)?)),
+        // Whole-kernel GEMM: the replay model carries only the protocol
+        // constants, so the snapshot pins simulated == predicted cycles
+        // without needing a calibration campaign.
+        "gemm" => {
+            let model = gemm::replay_model(engine.cfg());
+            Ok(report::gemm_json(&gemm::run_sweep_with(engine, &model)?))
+        }
         other => Err(format!("unknown conformance table {other:?}")),
     }
 }

@@ -9,6 +9,7 @@
 //! repro campaign            # everything (Tables I–V, Fig. 4, insights)
 //! repro table1 … table5     # one experiment
 //! repro throughput          # multi-warp achieved-IPC sweep
+//! repro gemm                # whole-kernel GEMM: simulated vs predicted
 //! repro fig4 | fig6-trace | insights | movm
 //! repro validate-oracle     # sim TC numerics vs PJRT/Pallas artifacts
 //! repro show-kernel add.u32 # print a generated microbenchmark kernel
@@ -77,6 +78,15 @@ COMMANDS:
                         warp scheduler and report achieved IPC, peak IPC
                         and warps-to-saturation.  The 1-warp column's
                         CPI is byte-identical to the latency path.
+  gemm                  whole-kernel GEMM prediction: tiled shared-
+                        memory GEMM kernels (an FMA fallback tile plus
+                        one kernel per supported WMMA dtype × shape,
+                        KTILES counted loop trips each) are simulated
+                        live and statically resolved by the predictor's
+                        protocol replay; the table reports both cycle
+                        counts per kernel and fails unless every row
+                        matches exactly.  Exercises the control-flow
+                        PTX dialect end to end (see CONTROL FLOW).
   fig4                  Fig. 4: 32- vs 64-bit clock registers
   fig6-trace            Fig. 6: dynamic SASS of one TC instruction
   insights              Insights 1–3 (pipes, signedness, init style)
@@ -142,9 +152,16 @@ COMMANDS:
                         Defaults: --seed 1 --cases 100.  Replay one
                         failing case: repro fuzz --seed <s> --cases 1
                         (case seeds are base+index, printed on failure).
+                        Families: alu, alu-dep, mixed, memory,
+                        multi-window, wmma, throughput, nextgen, and
+                        loop — seeded counted loops through the
+                        measured window with predicated bodies; loop
+                        cases are predictor-exact (the protocol replay
+                        must match the live clock delta bit for bit).
   conformance [--update]
-                        diff Tables I-V + Fig. 4 (the report::*_json
-                        forms) and the registry name/SASS pin against
+                        diff Tables I-V, Fig. 4 + the GEMM sweep (the
+                        report::*_json forms) and the registry
+                        name/SASS pin against
                         the golden snapshots in tests/golden/ (per-cell
                         exact / range / \"changes\" tolerances, plus the
                         Table V calibration floors).  After an
@@ -153,9 +170,21 @@ COMMANDS:
                         snapshot diff before committing (aggregate
                         floors are preserved across --update).
 
---json applies to table1…table5, throughput, fig4, insights,
+--json applies to table1…table5, throughput, gemm, fig4, insights,
 extract-model, predict, fuzz, conformance, arch list/show/diff and
 compare.
+
+CONTROL FLOW — the PTX dialect the parser accepts now includes labels
+(`$LOOP:` on its own line), `bra` / `bra.uni` to a label, `setp.<cmp>.
+<type> %p, a, b` predicate definitions, and guarded instructions
+(`@%p add.u32 …` / `@!%p add.u32 …`).  The simulator executes taken
+and fall-through branches with bounded trip counts (predicated-off
+instructions charge issue-only), and the static predictor resolves
+counted loops by concretely replaying the kernel under the protocol
+(params fixed, registers zero-initialised), so prediction stays pinned
+equal to live simulation on looped kernels — `predict`, `check`, the
+`gemm` command/wire mode and the `loop` fuzz family all ride this
+path.
 
 Property-based tests share the same seeds: FUZZ_CASES=<n> deepens every
 `util::prng::check` sweep (CI runs 200; local `cargo test` stays fast).
@@ -166,7 +195,7 @@ the same request/response values and a connection never switches:
 
 JSON lines (one JSON value per line, both directions):
   request   {\"id\": 7,
-             \"mode\": \"predict|simulate|check|throughput|stats|
+             \"mode\": \"predict|simulate|check|throughput|gemm|stats|
                        metrics|ping|reload\",
              \"kernel\": \"<PTX>\" | \"instr\": \"add.u32\",
              \"dependent\": true, \"arch\": \"turing\"}
@@ -178,7 +207,10 @@ JSON lines (one JSON value per line, both directions):
             adds predicted_cpi/simulated_cpi/matches; throughput takes
             \"instr\" (a registry row name or wmma dtype key) and adds
             cpi_1w/peak_ipc_milli/peak_ipc/warps_to_peak/points — the
-            model's extracted multi-warp curve
+            model's extracted multi-warp curve; gemm takes no kernel
+            and adds rows (the whole-kernel sweep: per tile kernel the
+            simulated and replay-predicted cycles plus the match bit,
+            served from the hosted model's engine)
   reload    {\"mode\": \"reload\", \"model\": \"<server-side path>\"}
             atomically swaps the hosted model whose arch matches the
             file (in-flight requests finish on the old model; new
@@ -585,6 +617,24 @@ fn main() -> anyhow::Result<()> {
                     ws.created,
                     ws.reused,
                     engine.workers()
+                );
+            }
+        }
+        "gemm" => {
+            let model = microbench::gemm::replay_model(&cfg);
+            let rows = microbench::gemm::run_sweep_with(&engine, &model)
+                .map_err(anyhow::Error::msg)?;
+            if args.json {
+                println!("{}", to_string_pretty(&report::gemm_json(&rows)));
+            } else {
+                print!("{}", report::gemm(&rows));
+            }
+            if let Some(bad) = rows.iter().find(|r| !r.matches) {
+                anyhow::bail!(
+                    "{}: predicted {} != simulated {}",
+                    bad.label,
+                    bad.predicted_cycles,
+                    bad.sim_cycles
                 );
             }
         }

@@ -1,0 +1,271 @@
+//! Whole-kernel GEMM prediction — the CPI tables turned into a cost
+//! model for kernels users actually run.
+//!
+//! Each sweep point is a tiled GEMM inner loop: stage an A/B tile slice
+//! through shared memory, multiply-accumulate (a `wmma.mma` tile per
+//! supported dtype × shape, or an FMA accumulator chain as the
+//! tensor-core-free fallback), advance the tile pointers, and branch
+//! back under a counted `setp`/`@%p bra` — all inside the paper's clock
+//! brackets.  The kernel is *simulated live* and *statically predicted*
+//! (the [`predict`] protocol replay resolves the counted loop), and the
+//! row reports both cycle counts plus whether they agree.  The sweep is
+//! the acceptance surface for the control-flow stack: every row must
+//! match exactly.
+//!
+//! The replay consults the model only for its clock-read overhead, so
+//! [`replay_model`] builds one straight from the config — no extraction
+//! campaign needed to predict a looped kernel.
+
+use super::wmma::{frag_ty, ptx_types};
+use super::{CLOCK_OVERHEAD, INSTANCES, MEASUREMENT_PARAMS, REG_DECLS};
+use crate::config::AmpereConfig;
+use crate::engine::Engine;
+use crate::oracle::predict;
+use crate::oracle::LatencyModel;
+use crate::tensor::WmmaDtype;
+use std::collections::BTreeMap;
+
+/// k-tiles (loop trips) every sweep kernel executes.
+pub const KTILES: u64 = 4;
+
+/// One sweep point: a tiled GEMM kernel, simulated and predicted.
+#[derive(Debug, Clone)]
+pub struct GemmRow {
+    /// `wmma[f16_f16 m16n16k16]` / `fma[f32 m8n8k8]`.
+    pub label: String,
+    /// Dtype key (`f16_f16`, …) or `f32` for the FMA fallback.
+    pub dtype: String,
+    pub m: u32,
+    pub n: u32,
+    pub k: u32,
+    /// Loop trips (k-dimension tiles).
+    pub ktiles: u64,
+    /// Live simulation: first-to-last clock delta.
+    pub sim_cycles: u64,
+    /// Static prediction through the protocol replay.
+    pub predicted_cycles: u64,
+    /// The acceptance bit: predicted == simulated, exactly.
+    pub matches: bool,
+    /// Dynamic SASS instructions the replay resolved.
+    pub replayed_sass: u64,
+}
+
+/// A model sufficient for the protocol replay, built from the config
+/// alone.  Looped-kernel prediction is a property of the architecture's
+/// timing model, not of an extracted campaign — only the clock-read
+/// overhead (a protocol constant) is consulted.
+pub fn replay_model(cfg: &AmpereConfig) -> LatencyModel {
+    LatencyModel {
+        arch: cfg.arch_name.clone(),
+        l1_bytes: cfg.memory.l1_bytes as u64,
+        l2_bytes: cfg.memory.l2_bytes as u64,
+        clock_overhead: CLOCK_OVERHEAD,
+        instances: INSTANCES,
+        cold_start_cpi: Vec::new(),
+        default_cpi: 4,
+        instructions: BTreeMap::new(),
+        memory: BTreeMap::new(),
+        wmma: BTreeMap::new(),
+        throughput: BTreeMap::new(),
+        nextgen: BTreeMap::new(),
+    }
+}
+
+/// The tensor-core tile kernel: per k-tile, stage A/B slices through
+/// shared memory, load fragments, `wmma.mma`-accumulate, advance the
+/// global pointers, loop.  Accumulator load sits before the opening
+/// clock, the `wmma.store.d` epilogue after the closing one, so the
+/// measured window is exactly the k-loop.
+pub fn wmma_gemm_kernel(d: WmmaDtype, shape: (u32, u32, u32), ktiles: u64) -> String {
+    let (m, n, k) = shape;
+    let types = ptx_types(d);
+    let (fin, facc) = frag_ty(d);
+    let layout = if d == WmmaDtype::U4S32 { "row.col" } else { "row.row" };
+    format!(
+        ".visible .entry gemm_wmma(.param .u64 out) {{\n {REG_DECLS}\n \
+         .shared .align 16 .b8 sha[2048];\n \
+         .shared .align 16 .b8 shb[2048];\n \
+         mov.u64 %rd10, 2097152;\n \
+         mov.u64 %rd11, 3145728;\n \
+         mov.u64 %rd12, 4194304;\n \
+         mov.u64 %rd20, 0;\n \
+         wmma.load.c.sync.aligned.row.m{m}n{n}k{k}.{facc} {{%r32}}, [%rd12];\n \
+         mov.u64 %rd60, %clock64;\n \
+         $KT:\n \
+         ld.global.ca.u64 %rd40, [%rd10];\n \
+         st.shared.u64 [sha], %rd40;\n \
+         ld.global.ca.u64 %rd41, [%rd11];\n \
+         st.shared.u64 [shb], %rd41;\n \
+         wmma.load.a.sync.aligned.row.m{m}n{n}k{k}.{fin} {{%r30}}, [%rd10];\n \
+         wmma.load.b.sync.aligned.col.m{m}n{n}k{k}.{fin} {{%r31}}, [%rd11];\n \
+         wmma.mma.sync.aligned.{layout}.m{m}n{n}k{k}.{types} {{%r32}}, {{%r30}}, {{%r31}}, {{%r32}};\n \
+         add.u64 %rd10, %rd10, 256;\n \
+         add.u64 %rd11, %rd11, 256;\n \
+         add.u64 %rd20, %rd20, 1;\n \
+         setp.lt.u64 %p1, %rd20, {ktiles};\n \
+         @%p1 bra $KT;\n \
+         mov.u64 %rd61, %clock64;\n \
+         wmma.store.d.sync.aligned.row.m{m}n{n}k{k}.{facc} [%rd12], {{%r32}};\n \
+         ret;\n}}"
+    )
+}
+
+/// The FMA fallback tile kernel: same staging loop, with an `unroll`-
+/// deep `mad.rn.f32` accumulator bank as the inner product (maps to
+/// FFMA — a Table V row — so the pipe model is exercised, not just the
+/// memory system).
+pub fn fma_gemm_kernel(tile: (u32, u32, u32), unroll: u32, ktiles: u64) -> String {
+    let (m, n, k) = tile;
+    let mut init: Vec<String> = Vec::new();
+    for i in 5..13u32 {
+        init.push(format!("add.f32 %f{i}, 1.25, {}.5;", i % 7));
+    }
+    let mut body: Vec<String> = Vec::new();
+    for u in 0..unroll {
+        body.push(format!(
+            "mad.rn.f32 %f{}, %f{}, %f{}, %f{};",
+            30 + u,
+            5 + (u % 8),
+            5 + ((u + 3) % 8),
+            30 + u
+        ));
+    }
+    format!(
+        ".visible .entry gemm_fma_m{m}n{n}k{k}(.param .u64 out) {{\n {REG_DECLS}\n \
+         .shared .align 16 .b8 sha[2048];\n \
+         {}\n \
+         mov.u64 %rd10, 2097152;\n \
+         mov.u64 %rd11, 4194304;\n \
+         mov.u64 %rd20, 0;\n \
+         mov.u64 %rd60, %clock64;\n \
+         $KT:\n \
+         ld.global.ca.u64 %rd40, [%rd10];\n \
+         st.shared.u64 [sha], %rd40;\n \
+         ld.shared.u64 %rd41, [sha];\n \
+         {}\n \
+         add.u64 %rd10, %rd10, 128;\n \
+         add.u64 %rd20, %rd20, 1;\n \
+         setp.lt.u64 %p1, %rd20, {ktiles};\n \
+         @%p1 bra $KT;\n \
+         mov.u64 %rd61, %clock64;\n \
+         st.global.u64 [%rd11], 42;\n \
+         ret;\n}}",
+        init.join("\n "),
+        body.join("\n ")
+    )
+}
+
+fn measure(
+    engine: &Engine,
+    model: &LatencyModel,
+    src: &str,
+    kind: &str,
+    dtype: &str,
+    shape: (u32, u32, u32),
+    ktiles: u64,
+) -> Result<GemmRow, String> {
+    let (m, n, k) = shape;
+    let label = format!("{kind}[{dtype} m{m}n{n}k{k}]");
+    let kernel = engine.compile(src).map_err(|e| format!("{label}: {e}"))?;
+    let mut sim = engine.simulator();
+    let r = sim
+        .run(&kernel.prog, &kernel.tp, MEASUREMENT_PARAMS)
+        .map_err(|e| format!("{label}: {e}"))?;
+    if r.clock_reads.len() < 2 {
+        return Err(format!("{label}: kernel lost its clock brackets"));
+    }
+    let c = &r.clock_reads;
+    let sim_cycles = c[c.len() - 1] - c[0];
+    let p = predict::predict_for(model, &kernel.prog, &kernel.tp, Some(engine.cfg()))
+        .map_err(|e| format!("{label}: {e}"))?;
+    Ok(GemmRow {
+        label,
+        dtype: dtype.to_string(),
+        m,
+        n,
+        k,
+        ktiles,
+        sim_cycles,
+        predicted_cycles: p.cycles,
+        matches: p.cycles == sim_cycles,
+        replayed_sass: p.replayed_sass.unwrap_or(0),
+    })
+}
+
+/// The sweep: two FMA fallback tiles (every architecture) plus one
+/// kernel per dtype × shape in the engine architecture's WMMA
+/// capability table.
+pub fn run_sweep_with(engine: &Engine, model: &LatencyModel) -> Result<Vec<GemmRow>, String> {
+    let mut rows = Vec::new();
+    for (tile, unroll) in [((8u32, 8u32, 8u32), 4u32), ((16, 16, 16), 8)] {
+        let src = fma_gemm_kernel(tile, unroll, KTILES);
+        rows.push(measure(engine, model, &src, "fma", "f32", tile, KTILES)?);
+    }
+    for d in engine.cfg().wmma_dtypes.clone() {
+        for shape in d.supported_shapes() {
+            let src = wmma_gemm_kernel(d, shape, KTILES);
+            rows.push(measure(engine, model, &src, "wmma", d.key(), shape, KTILES)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Transient-engine form of [`run_sweep_with`], with the config-derived
+/// replay model.
+pub fn run_sweep(cfg: &AmpereConfig) -> Result<Vec<GemmRow>, String> {
+    let engine = Engine::new(cfg.clone());
+    let model = replay_model(cfg);
+    run_sweep_with(&engine, &model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_row_predicts_exactly() {
+        // The tentpole contract: static prediction == live simulation on
+        // every GEMM sweep point, bit for bit.
+        let rows = run_sweep(&AmpereConfig::a100()).unwrap();
+        assert!(rows.len() >= 5, "{} rows", rows.len());
+        for r in &rows {
+            assert!(
+                r.matches,
+                "{}: predicted {} != simulated {}",
+                r.label, r.predicted_cycles, r.sim_cycles
+            );
+            assert!(r.sim_cycles > 0, "{}", r.label);
+            assert!(r.replayed_sass > 0, "{}: replay resolved no SASS", r.label);
+        }
+    }
+
+    #[test]
+    fn both_inner_loop_flavours_are_swept() {
+        let rows = run_sweep(&AmpereConfig::a100()).unwrap();
+        assert!(rows.iter().any(|r| r.label.starts_with("fma[")));
+        assert!(rows.iter().any(|r| r.label.starts_with("wmma[")));
+        // Every dtype in the capability table got at least one row.
+        for d in AmpereConfig::a100().wmma_dtypes {
+            assert!(
+                rows.iter().any(|r| r.dtype == d.key()),
+                "{} missing",
+                d.key()
+            );
+        }
+    }
+
+    #[test]
+    fn ktile_count_scales_the_measured_window() {
+        let cfg = AmpereConfig::a100();
+        let engine = Engine::new(cfg.clone());
+        let model = replay_model(&cfg);
+        let mut deltas = Vec::new();
+        for ktiles in [2u64, 4, 8] {
+            let src = fma_gemm_kernel((8, 8, 8), 4, ktiles);
+            let row = measure(&engine, &model, &src, "fma", "f32", (8, 8, 8), ktiles).unwrap();
+            assert!(row.matches, "ktiles={ktiles}");
+            deltas.push(row.sim_cycles);
+        }
+        assert!(deltas[0] < deltas[1] && deltas[1] < deltas[2], "{deltas:?}");
+    }
+}

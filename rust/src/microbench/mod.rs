@@ -12,6 +12,7 @@
 //! 5. read the dynamic SASS trace and record the mapping (Table V).
 
 pub mod alu;
+pub mod gemm;
 pub mod insights;
 pub mod memory;
 pub mod registry;

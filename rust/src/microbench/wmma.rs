@@ -36,7 +36,7 @@ pub struct WmmaResult {
     pub paper_theoretical_tops: f64,
 }
 
-fn ptx_types(d: WmmaDtype) -> &'static str {
+pub(crate) fn ptx_types(d: WmmaDtype) -> &'static str {
     match d {
         WmmaDtype::F16F16 => "f16.f16.f16.f16",
         WmmaDtype::F16F32 => "f32.f16.f16.f32",
@@ -48,7 +48,7 @@ fn ptx_types(d: WmmaDtype) -> &'static str {
     }
 }
 
-fn frag_ty(d: WmmaDtype) -> (&'static str, &'static str) {
+pub(crate) fn frag_ty(d: WmmaDtype) -> (&'static str, &'static str) {
     // (input fragment type suffix, accumulator type suffix)
     match d {
         WmmaDtype::F16F16 => ("f16", "f16"),

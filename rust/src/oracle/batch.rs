@@ -313,6 +313,12 @@ pub enum Mode {
     /// warps-to-saturation and the swept points for a registry row name
     /// or WMMA dtype key (`"instr"`).
     Throughput,
+    /// The whole-kernel GEMM sweep on the routed model's engine: every
+    /// tile kernel simulated live and resolved through the predictor's
+    /// protocol replay, with the per-kernel match verdicts.  Takes no
+    /// kernel — the sweep is generated from the engine architecture's
+    /// capability table.
+    Gemm,
     /// Oracle / cache / engine statistics.
     Stats,
     /// Serving-layer observability beyond `stats` (which is byte-pinned
@@ -332,6 +338,7 @@ impl Mode {
             Mode::Simulate => "simulate",
             Mode::Check => "check",
             Mode::Throughput => "throughput",
+            Mode::Gemm => "gemm",
             Mode::Stats => "stats",
             Mode::Metrics => "metrics",
             Mode::Ping => "ping",
@@ -387,6 +394,7 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
         Some("simulate") => Mode::Simulate,
         Some("check") => Mode::Check,
         Some("throughput") => Mode::Throughput,
+        Some("gemm") => Mode::Gemm,
         Some("stats") => Mode::Stats,
         Some("metrics") => Mode::Metrics,
         Some("ping") => Mode::Ping,
@@ -413,9 +421,19 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
     if kernel.is_some() && instr.is_some() {
         return Err("request carries both \"kernel\" and \"instr\"".to_string());
     }
+    if mode == Mode::Gemm && (kernel.is_some() || instr.is_some()) {
+        return Err(
+            "\"gemm\" sweeps kernels generated from the engine architecture's \
+             capability table; it takes neither \"kernel\" nor \"instr\""
+                .to_string(),
+        );
+    }
     if kernel.is_none()
         && instr.is_none()
-        && !matches!(mode, Mode::Stats | Mode::Metrics | Mode::Ping | Mode::Reload)
+        && !matches!(
+            mode,
+            Mode::Stats | Mode::Metrics | Mode::Ping | Mode::Reload | Mode::Gemm
+        )
     {
         return Err(format!("mode {:?} needs \"kernel\" or \"instr\"", mode.as_str()));
     }
@@ -443,7 +461,7 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
                 .to_string(),
         );
     }
-    if dependent && (kernel.is_some() || mode == Mode::Reload) {
+    if dependent && (kernel.is_some() || mode == Mode::Reload || mode == Mode::Gemm) {
         return Err(
             "\"dependent\" only applies to \"instr\" requests (a raw kernel already \
              fixes its own dependence structure)"
@@ -660,6 +678,14 @@ fn handle_inner(
                     ),
                 ))
         }
+        Mode::Gemm => {
+            let rows =
+                crate::microbench::gemm::run_sweep_with(oracle.engine(), oracle.model())?;
+            let matches = rows.iter().all(|r| r.matches);
+            Ok(ok_response(id, Mode::Gemm)
+                .set("rows", crate::report::gemm_json(&rows))
+                .set("matches", matches))
+        }
     }
 }
 
@@ -683,7 +709,9 @@ pub fn handle_batch(
                 return false;
             };
             match r.mode {
-                Mode::Simulate | Mode::Check => true,
+                // A gemm sweep runs a full simulate+replay per tile
+                // kernel — real simulator work.
+                Mode::Simulate | Mode::Check | Mode::Gemm => true,
                 // Probe without distorting hit stats.  Raw kernels are
                 // checked by borrow (no clone of a multi-KiB source);
                 // registry rows regenerate their µs-scale kernel once —
@@ -834,6 +862,10 @@ mod tests {
         // ping needs no kernel
         assert!(parse_request(&parse(r#"{"mode":"ping"}"#).unwrap()).is_ok());
 
+        // gemm sweeps engine-generated kernels — bare request is valid
+        let r = parse_request(&parse(r#"{"mode":"gemm","id":9}"#).unwrap()).unwrap();
+        assert_eq!(r.mode, Mode::Gemm);
+
         // arch routes to a hosted model; absent means "default"
         let r = parse_request(
             &parse(r#"{"mode":"predict","instr":"add.u32","arch":"turing"}"#).unwrap(),
@@ -863,6 +895,9 @@ mod tests {
             r#"{"mode":"reload","model":"m.json","arch":"ampere"}"#,   // arch n/a
             r#"{"mode":"reload","model":"m.json","dependent":true}"#,  // flag n/a
             r#"{"mode":"predict","instr":"add.u32","model":"m.json"}"#, // reload-only
+            r#"{"mode":"gemm","kernel":"x"}"#,              // sweep is generated
+            r#"{"mode":"gemm","instr":"add.u32"}"#,         // sweep is generated
+            r#"{"mode":"gemm","dependent":true}"#,          // flag n/a
         ] {
             assert!(parse_request(&parse(bad).unwrap()).is_err(), "{bad}");
         }

@@ -186,11 +186,14 @@ impl LatencyOracle {
         Ok(k)
     }
 
-    /// Predict without consulting the prediction cache.
+    /// Predict without consulting the prediction cache.  The engine's
+    /// machine config rides along, so looped kernels resolve through
+    /// the protocol replay ([`predict::predict_for`]) instead of being
+    /// rejected.
     pub fn predict_src(&self, src: &str) -> Result<Prediction, String> {
         let kernel = self.compile(src)?;
         self.predictions.fetch_add(1, Ordering::Relaxed);
-        predict::predict(&self.model, &kernel.prog, &kernel.tp)
+        predict::predict_for(&self.model, &kernel.prog, &kernel.tp, Some(self.engine.cfg()))
     }
 
     /// Cache-served prediction keyed by kernel hash.  Returns the
@@ -216,18 +219,23 @@ impl LatencyOracle {
 
     /// Live simulation under the measurement protocol: *n* is derived
     /// from the kernel's own clock brackets, so arbitrary protocol
-    /// kernels (not just registry rows) simulate correctly — provided
-    /// the measured window is straight-line (loops belong outside the
-    /// brackets, as in the paper's own warm loops; a loop *through* the
-    /// window would divide a dynamic delta by a static count and is
-    /// rejected instead of served wrong).
+    /// kernels (not just registry rows) simulate correctly.  Bracketed
+    /// kernels may loop *through* the window — the clock delta is
+    /// dynamic truth and *n* stays the protocol's static window size,
+    /// matching how the replay-backed predictor reports looped kernels.
+    /// Unbracketed kernels with control flow are still rejected: without
+    /// brackets the static count is the only *n* available.
     pub fn simulate(&self, src: &str) -> Result<SimulatedRun, String> {
         let kernel = self.compile(src)?;
         let (body, bracketed) = predict::measured_body(&kernel.prog);
         if body.is_empty() {
             return Err("kernel has no measurable instructions".to_string());
         }
-        predict::check_straight_line(&kernel.prog, &body, bracketed)?;
+        if let Err(e) = predict::check_straight_line(&kernel.prog, &body, bracketed) {
+            if !bracketed {
+                return Err(e);
+            }
+        }
         self.simulations.fetch_add(1, Ordering::Relaxed);
         let mut sim = self.engine.simulator();
         let r = sim
@@ -383,6 +391,24 @@ mod tests {
         assert_eq!(c.predicted.cpi, 2);
         assert_eq!(c.simulated.mapping, "IADD");
         assert_eq!(o.stats().simulations, 1);
+    }
+
+    #[test]
+    fn cross_check_agrees_on_a_looped_kernel() {
+        // A counted loop through the measured window: the predictor's
+        // protocol replay and the live simulator must report the same
+        // clock delta (the PR's predictor==sim acceptance contract).
+        let o = oracle();
+        let src = ".visible .entry k() {\n .reg .b64 %rd<9>; .reg .pred %p<4>;\n \
+             mov.u64 %rd2, 0;\n \
+             mov.u64 %rd5, %clock64;\n \
+             $L:\n add.u64 %rd2, %rd2, 1;\n setp.lt.u64 %p1, %rd2, 12;\n @%p1 bra $L;\n \
+             mov.u64 %rd6, %clock64;\n ret;\n}";
+        let c = o.cross_check(src).unwrap();
+        assert!(c.matches, "{c:?}");
+        assert_eq!(c.predicted.cycles, c.simulated.delta);
+        assert_eq!(c.predicted.n, 3, "n is the static window size");
+        assert!(c.predicted.replayed_sass.is_some());
     }
 
     #[test]

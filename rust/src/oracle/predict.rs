@@ -22,11 +22,27 @@
 //!
 //! Predictions are *steady-state*: Table I's cold-start amortisation is
 //! carried in the model (`cold_start_cpi`) but not applied per kernel.
+//!
+//! Kernels whose measured window contains (or is targeted by) branches
+//! cannot use the per-instruction table walk — the window re-executes,
+//! so static costs would divide a dynamic delta by a static count.  When
+//! the caller supplies the machine config ([`predict_for`]), those
+//! kernels are resolved by the **protocol replay** instead: a faithful
+//! mirror of the simulator's issue-timing recurrence, with the
+//! loop-control dataflow executed concretely.  Registers start at zero
+//! and the measurement protocol fixes the parameter vector, so every
+//! trip count and predicate is statically known — the replay is exact
+//! by construction, which is what pins prediction equal to live
+//! simulation on the `loop` fuzz family.
 
 use super::model::LatencyModel;
+use crate::config::{AmpereConfig, ALL_PIPES};
+use crate::memory::MemorySystem;
 use crate::ptx::ast::WmmaOp;
-use crate::ptx::{Operand, PtxInstruction, PtxOp, PtxProgram, SpecialReg};
+use crate::ptx::{Operand, PtxInstruction, PtxOp, PtxProgram, PtxType, SpecialReg};
 use crate::ptx::{CacheOp, StateSpace};
+use crate::sass::{Effect, SassClass};
+use crate::sim::exec::{self, ExecState};
 use crate::tensor::WmmaDtype;
 use crate::translate::TranslatedProgram;
 use std::collections::HashMap;
@@ -90,6 +106,10 @@ pub struct Prediction {
     /// Instructions that fell through to the default cost.
     pub unresolved: usize,
     pub per_instr: Vec<InstrPrediction>,
+    /// Dynamic SASS instruction count when the protocol replay resolved
+    /// a looped kernel; `None` on the straight-line table-walk path
+    /// (where per-instruction costs are meaningful instead).
+    pub replayed_sass: Option<u64>,
 }
 
 /// Does this instruction read a clock special register?
@@ -293,10 +313,27 @@ fn resolve(
 }
 
 /// Predict the measured cycles of a parsed + translated kernel.
+///
+/// Model-only entry point: looped windows are rejected (there is no
+/// machine config to replay them against) — see [`predict_for`].
 pub fn predict(
     model: &LatencyModel,
     prog: &PtxProgram,
     tp: &TranslatedProgram,
+) -> Result<Prediction, String> {
+    predict_for(model, prog, tp, None)
+}
+
+/// Predict with the full per-arch surface.  When `cfg` carries the
+/// machine timing tables, bracketed kernels whose measured window
+/// contains (or is targeted by) branches are statically resolved by the
+/// protocol replay; without a config they are rejected exactly as
+/// [`predict`] always has.
+pub fn predict_for(
+    model: &LatencyModel,
+    prog: &PtxProgram,
+    tp: &TranslatedProgram,
+    cfg: Option<&AmpereConfig>,
 ) -> Result<Prediction, String> {
     if prog.instrs.len() != tp.groups.len() {
         return Err("translation does not match program".to_string());
@@ -305,7 +342,12 @@ pub fn predict(
     if body.is_empty() {
         return Err("kernel has no measurable instructions".to_string());
     }
-    check_straight_line(prog, &body, bracketed)?;
+    if let Err(e) = check_straight_line(prog, &body, bracketed) {
+        return match (bracketed, cfg) {
+            (true, Some(cfg)) => replay_loops(model, prog, tp, cfg, body.len() as u64),
+            _ => Err(e),
+        };
+    }
 
     // Dataflow pass: mark dependent-chain membership within the window.
     // An edge exists when an instruction reads a register another
@@ -359,7 +401,318 @@ pub fn predict(
         bracketed,
         unresolved,
         per_instr,
+        replayed_sass: None,
     })
+}
+
+/// Upper bound on dynamic SASS instructions the protocol replay retires
+/// before declaring a kernel unresolvable — a termination guard far
+/// above any protocol-shaped loop, far below the simulator's fuel.
+const REPLAY_FUEL: u64 = 2_000_000;
+
+/// Statically resolve a looped kernel by replaying the measurement
+/// protocol over the machine config: the issue-timing recurrence
+/// (in-order dispatch, per-pipe occupancy, RAW scoreboard, pipe drain,
+/// cold-start, predicated-skip charging, taken-branch refill) is
+/// mirrored instruction for instruction, and the functional dataflow is
+/// executed concretely so every `setp`/`bra` decision resolves at
+/// predict time.  Families whose completion rides an asynchronous
+/// channel (`cp.async` / TMA / `wgmma`) are not replayed — their overlap
+/// with intervening work is a dynamic effect this pass refuses to guess.
+fn replay_loops(
+    model: &LatencyModel,
+    prog: &PtxProgram,
+    tp: &TranslatedProgram,
+    cfg: &AmpereConfig,
+    n: u64,
+) -> Result<Prediction, String> {
+    let params: &[u64] = crate::microbench::MEASUREMENT_PARAMS;
+    let mut mem = MemorySystem::new(&cfg.memory);
+    let nregs = tp.reg_slots as usize;
+    let mut regs = vec![0u64; nregs];
+    let mut ready = vec![0u64; nregs];
+    let shared_bases: Vec<u64> = prog.shared_syms.iter().map(|(_, off, _)| *off).collect();
+    let mut fragments = HashMap::new();
+
+    let mut pipe_free = [0u64; ALL_PIPES.len()];
+    let mut pipe_cold = [true; ALL_PIPES.len()];
+    let mut last_issue: u64 = 0;
+    let mut last_gap: u64 = 0;
+    let mut drain: u64 = 0;
+    let mut issue_floor: u64 = 0;
+    let mut clocks: Vec<u64> = Vec::new();
+    let mut sass_count: u64 = 0;
+
+    let pipe_idx =
+        |p: crate::config::Pipe| ALL_PIPES.iter().position(|q| *q == p).unwrap();
+
+    let mut pc: usize = 0;
+    'outer: while pc < prog.instrs.len() {
+        let ins = &prog.instrs[pc];
+        let group = &tp.groups[pc];
+        let mut next_pc = pc + 1;
+
+        let guard_off = match ins.guard {
+            Some((g, want)) if ins.op != PtxOp::Bra => {
+                (regs[g.0 as usize] & 1 == 1) != want
+            }
+            _ => false,
+        };
+
+        for s in &group.instrs {
+            sass_count += 1;
+            if sass_count > REPLAY_FUEL {
+                return Err(format!(
+                    "loop did not terminate within the replay budget of \
+                     {REPLAY_FUEL} SASS instructions"
+                ));
+            }
+            let pi = pipe_idx(s.pipe());
+            let (occ, mut lat) = s.timing(cfg);
+
+            let mut t = (last_issue + last_gap.max(1))
+                .max(pipe_free[pi])
+                .max(issue_floor);
+            if s.effect != Effect::WgmmaIssue {
+                for r in s.reads() {
+                    t = t.max(ready[r.0 as usize]);
+                }
+            }
+            if let Some((g, _)) = ins.guard {
+                t = t.max(ready[g.0 as usize]);
+            }
+            if matches!(s.class, SassClass::Cs2r | SassClass::S2r) {
+                t = t.max(drain);
+            }
+
+            if guard_off {
+                pipe_free[pi] = t + cfg.predicated_skip_occupancy;
+                last_issue = t;
+                last_gap = 1;
+                continue;
+            }
+
+            if pipe_cold[pi] {
+                lat += cfg.cold_start_extra;
+                pipe_cold[pi] = false;
+            }
+
+            match s.effect {
+                Effect::ClockRead => {
+                    if let Some(d) = s.dst {
+                        let v = if ins.ty == Some(PtxType::U32) {
+                            t & 0xFFFF_FFFF
+                        } else {
+                            t
+                        };
+                        regs[d.0 as usize] = v;
+                        ready[d.0 as usize] = t;
+                    }
+                    clocks.push(t);
+                }
+                Effect::DepBar => {
+                    issue_floor = t.max(drain) + cfg.depbar_stall;
+                }
+                Effect::Load => {
+                    let (value, mlat) =
+                        replay_load(&mut mem, cfg, ins, params, &mut regs, &shared_bases);
+                    lat = mlat;
+                    if let Some(d) = s.dst {
+                        regs[d.0 as usize] = value;
+                        ready[d.0 as usize] = t + lat;
+                        drain = drain.max(t + lat);
+                    }
+                }
+                Effect::Store => {
+                    let completion =
+                        replay_store(&mut mem, cfg, ins, params, &mut regs, &shared_bases);
+                    drain = drain.max(t + completion);
+                }
+                Effect::Branch => {
+                    let mut est = ExecState {
+                        regs: &mut regs,
+                        params,
+                        shared_bases: &shared_bases,
+                        fragments: &mut fragments,
+                    };
+                    let out = exec::eval(prog, ins, &mut est);
+                    if let Some(target) = out.branch_to {
+                        next_pc = target as usize;
+                        issue_floor = issue_floor.max(t + cfg.branch_taken_extra);
+                    }
+                }
+                Effect::EvalPtx | Effect::MmaTile => {
+                    if s.effect == Effect::EvalPtx {
+                        let mut est = ExecState {
+                            regs: &mut regs,
+                            params,
+                            shared_bases: &shared_bases,
+                            fragments: &mut fragments,
+                        };
+                        exec::eval(prog, ins, &mut est);
+                    }
+                    if let Some(d) = s.dst {
+                        ready[d.0 as usize] = t + lat;
+                        drain = drain.max(t + lat);
+                    }
+                }
+                Effect::Exit => {
+                    break 'outer;
+                }
+                Effect::AsyncCopy
+                | Effect::AsyncCommit
+                | Effect::AsyncWait
+                | Effect::WgmmaIssue
+                | Effect::WgmmaCommit
+                | Effect::WgmmaWait => {
+                    return Err(
+                        "async-channel instruction inside a looped kernel; the \
+                         replay only resolves the synchronous families"
+                            .to_string(),
+                    );
+                }
+                Effect::None | Effect::WarpSync | Effect::Movm => {
+                    if let Some(d) = s.dst {
+                        ready[d.0 as usize] = t + lat;
+                        drain = drain.max(t + lat);
+                    }
+                }
+            }
+
+            pipe_free[pi] = t + occ;
+            last_issue = t;
+            last_gap = if matches!(s.class, SassClass::Cs2r | SassClass::S2r) {
+                occ
+            } else {
+                1
+            };
+        }
+
+        pc = next_pc;
+    }
+
+    if clocks.len() < 2 {
+        return Err("looped kernel never reached its closing clock bracket".to_string());
+    }
+    let delta = clocks[clocks.len() - 1] - clocks[0];
+    let total = delta.saturating_sub(model.clock_overhead);
+    Ok(Prediction {
+        n,
+        cycles: delta,
+        cpi: total / n,
+        bracketed: true,
+        unresolved: 0,
+        per_instr: Vec::new(),
+        replayed_sass: Some(sass_count),
+    })
+}
+
+/// Timing-and-value mirror of the simulator's load path (minus the WMMA
+/// fragment side table, whose contents never influence timing).
+fn replay_load(
+    mem: &mut MemorySystem,
+    cfg: &AmpereConfig,
+    ins: &PtxInstruction,
+    params: &[u64],
+    regs: &mut [u64],
+    shared_bases: &[u64],
+) -> (u64, u64) {
+    let addr_op = ins.srcs.first();
+    let size = ins.ty.map(|t| t.bits()).unwrap_or(64);
+    let mut dummy = HashMap::new();
+    if let PtxOp::Wmma(_) = ins.op {
+        let addr = {
+            let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+            addr_op
+                .and_then(|o| {
+                    exec::effective_address(&st, o)
+                        .or_else(|| o.as_reg().map(|r| st.regs[r.0 as usize]))
+                })
+                .unwrap_or(0)
+        };
+        let (_, lat, _) = mem.load_global(addr, 64, ins.mods.cache);
+        return (0, lat);
+    }
+    match ins.mods.space {
+        StateSpace::Param => {
+            let v = match addr_op {
+                Some(Operand::Param(p)) => params.get(*p as usize).copied().unwrap_or(0),
+                _ => 0,
+            };
+            (v, cfg.memory.l1_hit_latency)
+        }
+        StateSpace::Shared => {
+            let addr = {
+                let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+                addr_op.and_then(|o| exec::effective_address(&st, o)).unwrap_or(0)
+            };
+            let (v, mut lat, _) = mem.load_shared(addr, size);
+            if ins.mods.cluster {
+                if let Some(t) = cfg.nextgen.dsmem {
+                    lat = t.latency;
+                }
+            }
+            (v, lat)
+        }
+        _ => {
+            let addr = {
+                let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+                addr_op.and_then(|o| exec::effective_address(&st, o)).unwrap_or(0)
+            };
+            let (v, lat, _) = mem.load_global(addr, size, ins.mods.cache);
+            (v, lat)
+        }
+    }
+}
+
+/// Timing-and-value mirror of the simulator's store path (the WMMA
+/// fragment store keeps its timing; the fragment bytes are not moved).
+fn replay_store(
+    mem: &mut MemorySystem,
+    cfg: &AmpereConfig,
+    ins: &PtxInstruction,
+    params: &[u64],
+    regs: &mut [u64],
+    shared_bases: &[u64],
+) -> u64 {
+    let size = ins.ty.map(|t| t.bits()).unwrap_or(64);
+    let mut dummy = HashMap::new();
+    if let PtxOp::Wmma(WmmaOp::Store) = ins.op {
+        let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+        let addr = ins
+            .dst
+            .as_ref()
+            .and_then(|o| exec::effective_address(&st, o))
+            .unwrap_or(0);
+        return mem.store_global(addr, 0, 0, ins.mods.cache);
+    }
+    let (addr, value) = {
+        let st = ExecState { regs, params, shared_bases, fragments: &mut dummy };
+        let addr = ins
+            .dst
+            .as_ref()
+            .and_then(|o| exec::effective_address(&st, o))
+            .unwrap_or(0);
+        let ty = ins.ty.unwrap_or(PtxType::B64);
+        let value = ins
+            .srcs
+            .first()
+            .map(|o| exec::operand_value(&st, o, ty))
+            .unwrap_or(0);
+        (addr, value)
+    };
+    match ins.mods.space {
+        StateSpace::Shared => {
+            let completion = mem.store_shared(addr, size, value);
+            if ins.mods.cluster {
+                if let Some(t) = cfg.nextgen.dsmem {
+                    return t.latency;
+                }
+            }
+            completion
+        }
+        _ => mem.store_global(addr, size, value, ins.mods.cache),
+    }
 }
 
 #[cfg(test)]
@@ -476,6 +829,34 @@ mod tests {
         let tp = translate_program(&prog).unwrap();
         let err = predict(&model(), &prog, &tp).unwrap_err();
         assert!(err.contains("measured clock window"), "{err}");
+    }
+
+    #[test]
+    fn counted_loops_resolve_exactly_via_replay() {
+        // The same loop-through-the-window kernel that plain `predict`
+        // rejects: with the machine config the protocol replay resolves
+        // it, and its clock delta must equal live simulation exactly.
+        let loop_inside = ".visible .entry k() {\n .reg .b64 %rd<9>; .reg .pred %p<4>;\n \
+             mov.u64 %rd2, 0;\n \
+             mov.u64 %rd5, %clock64;\n \
+             $L:\n add.u64 %rd2, %rd2, 1;\n setp.lt.u64 %p1, %rd2, 8;\n @%p1 bra $L;\n \
+             mov.u64 %rd6, %clock64;\n ret;\n}";
+        let prog = parse_program(loop_inside).unwrap();
+        let tp = translate_program(&prog).unwrap();
+        let cfg = AmpereConfig::a100();
+        let p = predict_for(&model(), &prog, &tp, Some(&cfg)).unwrap();
+
+        let mut sim = crate::sim::Simulator::new(cfg);
+        let r = sim
+            .run(&prog, &tp, crate::microbench::MEASUREMENT_PARAMS)
+            .unwrap();
+        let delta = r.clock_reads[r.clock_reads.len() - 1] - r.clock_reads[0];
+
+        assert_eq!(p.cycles, delta, "replay must equal live simulation");
+        assert_eq!(p.n, 3, "n stays the static window size");
+        assert_eq!(p.cpi, delta.saturating_sub(2) / 3);
+        assert!(p.replayed_sass.is_some(), "must go through the replay path");
+        assert!(p.per_instr.is_empty(), "replay has no per-instruction walk");
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! ```text
 //! {"id": 7,                  echoed verbatim in the response
 //!  "mode": "predict",        predict | simulate | check | throughput |
-//!                            stats | metrics | ping | reload
+//!                            gemm | stats | metrics | ping | reload
 //!  "kernel": "<PTX source>", raw kernel to analyse, or
 //!  "instr": "add.u32",       a Table V registry row name (for
 //!                            "throughput" also a wmma dtype key)
@@ -48,7 +48,10 @@
 //! `unresolved` and `cached`; `simulate` adds `cpi`, `delta`, `n`,
 //! `mapping`; `check` adds `predicted_cpi`, `simulated_cpi`, `matches`;
 //! `throughput` adds `cpi_1w`, `peak_ipc_milli`, `peak_ipc`,
-//! `warps_to_peak` and the swept `points`; `reload` adds `arch`,
+//! `warps_to_peak` and the swept `points`; `gemm` (no kernel — the
+//! whole-kernel GEMM sweep on the routed model's engine) adds `rows`
+//! (per tile kernel: simulated vs replay-predicted cycles and the
+//! match bit) and the aggregate `matches`; `reload` adds `arch`,
 //! `instructions` and the server's `reloads` counter.  `stats` is
 //! byte-pinned for existing clients; `metrics` is where new
 //! observability accrues — per-shard warm-cache counters

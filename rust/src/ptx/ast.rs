@@ -320,6 +320,9 @@ impl PtxInstruction {
         if self.mods.cluster {
             s.push_str(".cluster");
         }
+        if self.mods.uni {
+            s.push_str(".uni");
+        }
         if self.mods.cache != super::types::CacheOp::Default {
             let _ = write!(s, ".{}", self.mods.cache);
         }

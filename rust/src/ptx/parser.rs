@@ -435,6 +435,7 @@ impl Parser {
                     }
                 }
                 "warp" => {}
+                "uni" => ins.mods.uni = true,
                 "aligned" => ins.mods.aligned = true,
                 "row" | "col" => {
                     let row = s == "row";
@@ -793,6 +794,48 @@ $Mem_load:
         let bra = p.instrs.iter().find(|i| i.op == PtxOp::Bra).unwrap();
         assert_eq!(bra.srcs, vec![Operand::Target(1)]);
         assert!(bra.guard.is_some());
+    }
+
+    #[test]
+    fn parses_uniform_branch_and_predicated_body() {
+        let src = r#"
+.visible .entry k()
+{
+ .reg .b64 %rd<10>;
+ .reg .pred %p<4>;
+ mov.u64 %rd1, 0;
+$Top:
+ setp.lt.u64 %p2, %rd1, 4;
+ @%p2 add.u64 %rd2, %rd2, 7;
+ @!%p2 add.u64 %rd3, %rd3, 9;
+ add.u64 %rd1, %rd1, 1;
+ setp.lt.u64 %p1, %rd1, 8;
+ @%p1 bra.uni $Top;
+ bra.uni $Done;
+$Done:
+ ret;
+}
+"#;
+        let p = parse_program(src).unwrap();
+        let bras: Vec<_> = p.instrs.iter().filter(|i| i.op == PtxOp::Bra).collect();
+        assert_eq!(bras.len(), 2);
+        assert!(bras.iter().all(|b| b.mods.uni), "both branches carry .uni");
+        assert_eq!(bras[0].srcs, vec![Operand::Target(1)]);
+        assert_eq!(bras[0].display_name(), "bra.uni");
+        // Guard polarity: @%p is (reg, true), @!%p is (reg, false).
+        let guarded: Vec<_> = p
+            .instrs
+            .iter()
+            .filter(|i| i.op == PtxOp::Add && i.guard.is_some())
+            .collect();
+        assert_eq!(guarded.len(), 2);
+        assert_eq!(guarded[0].guard.unwrap().1, true);
+        assert_eq!(guarded[1].guard.unwrap().1, false);
+        // A guard never perturbs the model lookup key.
+        assert_eq!(guarded[0].display_name(), "add.u64");
+        // Forward branch to $Done resolved through the fixup pass
+        // ($Done marks the `ret` at index 8).
+        assert_eq!(bras[1].srcs, vec![Operand::Target(8)]);
     }
 
     #[test]

@@ -282,6 +282,8 @@ pub struct Modifiers {
     /// `.cluster` on ld/st.shared — distributed shared memory (remote
     /// SM within the thread-block cluster, sm_90+).
     pub cluster: bool,
+    /// `.uni` on bra — the branch is warp-uniform (non-divergent).
+    pub uni: bool,
 }
 
 #[cfg(test)]

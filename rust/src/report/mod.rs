@@ -2,6 +2,7 @@
 //! to the published values, plus a shape-match summary for EXPERIMENTS.md.
 
 use crate::microbench::alu::{Amortization, DepIndep, RowResult};
+use crate::microbench::gemm::GemmRow;
 use crate::microbench::insights::{Fig4, Insight1, Insight3, SignPair};
 use crate::microbench::memory::MemResult;
 use crate::microbench::throughput::ThroughputRow;
@@ -157,7 +158,41 @@ pub fn table5(rows: &[RowResult]) -> String {
     )
 }
 
-/// Render an integer milli-IPC value as a fixed-point decimal
+/// `repro gemm`: the whole-kernel prediction sweep — live simulation vs
+/// the protocol replay per tile kernel, with the exact-match verdict.
+pub fn gemm(rows: &[GemmRow]) -> String {
+    let mut body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                r.dtype.clone(),
+                format!("{}x{}x{}", r.m, r.n, r.k),
+                r.ktiles.to_string(),
+                r.sim_cycles.to_string(),
+                r.predicted_cycles.to_string(),
+                r.replayed_sass.to_string(),
+                if r.matches { "exact" } else { "MISMATCH" }.to_string(),
+            ]
+        })
+        .collect();
+    let exact = rows.iter().filter(|r| r.matches).count();
+    body.push(vec![
+        format!("[{} kernels]", rows.len()),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        format!("{exact}/{} exact", rows.len()),
+    ]);
+    render_table(
+        "GEMM — whole-kernel cycles, simulated vs predicted",
+        &["kernel", "dtype", "tile", "ktiles", "sim", "predicted", "sass", "verdict"],
+        &body,
+    )
+}
 /// (`500 → "0.500"`): the sweep stores IPC in exact integer milli-units
 /// so text, JSON, the oracle model and `compare` all agree bit for bit.
 pub fn ipc_milli(m: u64) -> String {
@@ -723,6 +758,26 @@ pub fn throughput_json(rows: &[ThroughputRow]) -> Value {
     )
 }
 
+pub fn gemm_json(rows: &[GemmRow]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                Value::obj()
+                    .set("label", r.label.as_str())
+                    .set("dtype", r.dtype.as_str())
+                    .set("m", r.m)
+                    .set("n", r.n)
+                    .set("k", r.k)
+                    .set("ktiles", r.ktiles)
+                    .set("sim_cycles", r.sim_cycles)
+                    .set("predicted_cycles", r.predicted_cycles)
+                    .set("replayed_sass", r.replayed_sass)
+                    .set("match", r.matches)
+            })
+            .collect(),
+    )
+}
+
 pub fn fig4_json(f: &Fig4) -> Value {
     Value::obj()
         .set("cpi_32bit", f.cpi_32bit)
@@ -831,6 +886,32 @@ mod tests {
             row.get("points").unwrap().idx(1).unwrap().get("ipc_milli").unwrap().as_u64(),
             Some(480)
         );
+    }
+
+    #[test]
+    fn gemm_rendering_and_json_agree_on_the_verdict() {
+        let rows = vec![GemmRow {
+            label: "wmma[f16_f16 m16n16k16]".into(),
+            dtype: "f16_f16".into(),
+            m: 16,
+            n: 16,
+            k: 16,
+            ktiles: 4,
+            sim_cycles: 420,
+            predicted_cycles: 420,
+            matches: true,
+            replayed_sass: 96,
+        }];
+        let text = gemm(&rows);
+        for needle in ["16x16x16", "420", "exact", "1/1 exact", "wmma[f16_f16 m16n16k16]"] {
+            assert!(text.contains(needle), "{needle} missing:\n{text}");
+        }
+        let v = gemm_json(&rows);
+        let row = v.idx(0).unwrap();
+        assert_eq!(row.get("sim_cycles").unwrap().as_u64(), Some(420));
+        assert_eq!(row.get("predicted_cycles").unwrap().as_u64(), Some(420));
+        assert_eq!(row.get("match").unwrap().as_bool(), Some(true));
+        assert_eq!(row.get("replayed_sass").unwrap().as_u64(), Some(96));
     }
 
     #[test]

@@ -159,6 +159,17 @@ impl Simulator {
             ptx_count += 1;
             let mut next_pc = pc + 1;
 
+            // Predicated-off group (`@%p` false on a non-branch): every
+            // SASS instruction in it is squashed at issue.  `bra` is
+            // excluded — its own Branch effect resolves the predicate
+            // (taken vs fall-through).
+            let guard_off = match ins.guard {
+                Some((g, want)) if ins.op != PtxOp::Bra => {
+                    (regs[g.0 as usize] & 1 == 1) != want
+                }
+                _ => false,
+            };
+
             for (gi, s) in group.instrs.iter().enumerate() {
                 sass_count += 1;
                 if sass_count > self.fuel {
@@ -184,9 +195,35 @@ impl Simulator {
                         t = t.max(ready[r.0 as usize]);
                     }
                 }
+                // A guarded group cannot issue before its predicate
+                // resolves (the guard register is a scoreboard source
+                // even when the SASS expansion does not read it).
+                if let Some((g, _)) = ins.guard {
+                    t = t.max(ready[g.0 as usize]);
+                }
                 if matches!(s.class, SassClass::Cs2r | SassClass::S2r) {
                     // clock reads serialize with pipe drain (see mod.rs)
                     t = t.max(drain);
+                }
+
+                if guard_off {
+                    // Squashed: the instruction occupies an issue slot
+                    // but produces nothing — no result latency, no
+                    // register write, no pipe reservation beyond the
+                    // configured skip slot.
+                    self.trace.record_issue(
+                        group.ptx_idx,
+                        s.mnemonic,
+                        t,
+                        t,
+                        p,
+                        self.cfg.predicated_skip_occupancy,
+                        false,
+                    );
+                    pipe_free[pi] = t + self.cfg.predicated_skip_occupancy;
+                    last_issue = t;
+                    last_gap = 1;
+                    continue;
                 }
 
                 // cold-pipe start-up
@@ -250,6 +287,11 @@ impl Simulator {
                         let out = exec::eval(prog, ins, &mut est);
                         if let Some(target) = out.branch_to {
                             next_pc = target as usize;
+                            // A taken branch pays the configured refill
+                            // penalty before the target may issue (0 on
+                            // every built-in preset, so the floor never
+                            // binds there — the next issue is ≥ t + 1).
+                            issue_floor = issue_floor.max(t + self.cfg.branch_taken_extra);
                         }
                     }
                     Effect::EvalPtx | Effect::MmaTile => {
@@ -694,6 +736,66 @@ $L:
         let (prog, r) = run(src);
         assert_eq!(r.reg(&prog, "%rd1"), Some(10));
         assert!(r.ptx_instructions > 25, "loop body must re-execute");
+    }
+
+    #[test]
+    fn predicated_off_instructions_charge_issue_only() {
+        // A squashed (@%p false) body costs one issue slot per
+        // instruction; an executed one pays the dependent-chain latency.
+        let run_delta = |pred_src: &str| {
+            let src = format!(
+                ".visible .entry k() {{ .reg .b64 %rd<9>; .reg .b64 %fd<9>; .reg .pred %p<4>; \
+                 {pred_src} \
+                 mov.u64 %rd1, %clock64; \
+                 @%p1 add.f64 %fd1, %fd9, %fd8; \
+                 @%p1 add.f64 %fd2, %fd1, %fd8; \
+                 @%p1 add.f64 %fd3, %fd2, %fd8; \
+                 mov.u64 %rd2, %clock64; ret; }}"
+            );
+            let (_, r) = run(&src);
+            r.clock_reads[1] - r.clock_reads[0]
+        };
+        let taken = run_delta("setp.eq.u64 %p1, 1, 1;");
+        let skipped = run_delta("setp.eq.u64 %p1, 1, 2;");
+        assert!(
+            skipped < taken,
+            "squashed body ({skipped}) must be cheaper than executed ({taken})"
+        );
+        assert_eq!(
+            skipped,
+            2 + 3,
+            "squashed body = clock overhead + one issue slot per instruction"
+        );
+    }
+
+    #[test]
+    fn branch_taken_extra_taxes_taken_branches_only() {
+        let src = r#"
+.visible .entry k() {
+ .reg .b64 %rd<9>;
+ .reg .pred %p<2>;
+ mov.u64 %rd1, 0;
+$L:
+ add.u64 %rd1, %rd1, 1;
+ setp.lt.u64 %p1, %rd1, 10;
+ @%p1 bra $L;
+ ret;
+}"#;
+        let prog = parse_program(src).unwrap();
+        let tp = translate_program(&prog).unwrap();
+        let base = Simulator::a100().run(&prog, &tp, &[]).unwrap();
+
+        let mut cfg = AmpereConfig::a100();
+        cfg.branch_taken_extra = 7;
+        let taxed = Simulator::new(cfg).run(&prog, &tp, &[]).unwrap();
+
+        assert_eq!(taxed.reg(&prog, "%rd1"), Some(10), "semantics unchanged");
+        assert!(
+            taxed.cycles > base.cycles,
+            "9 taken back-edges must pay the refill penalty ({} vs {})",
+            taxed.cycles,
+            base.cycles
+        );
     }
 
     #[test]

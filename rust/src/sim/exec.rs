@@ -114,6 +114,13 @@ pub fn effective_address(st: &ExecState, o: &Operand) -> Option<u64> {
 /// destination register.  Memory/branch/clock are handled by `core`
 /// (they need timing state); everything else lands here.
 pub fn eval(prog: &PtxProgram, ins: &PtxInstruction, st: &mut ExecState) -> Outcome {
+    // A false guard squashes everything except `bra`, whose own arm
+    // resolves the predicate (taken vs fall-through).
+    if let Some((g, want)) = ins.guard {
+        if ins.op != PtxOp::Bra && (st.regs[g.0 as usize] & 1 == 1) != want {
+            return Outcome::default();
+        }
+    }
     let ty = ins.ty.unwrap_or(PtxType::B32);
     let bits = ty.bits();
     let get = |st: &ExecState, i: usize| -> u64 {
@@ -677,6 +684,15 @@ mod tests {
             "mov.b32 %r1, 0xABCD; bfe.u32 %r2, %r1, 4, 8; \
              mov.b32 %r3, 0; bfi.b32 %r4, 0xF, %r3, 4, 4;",
             &[("%r2", 0xBC), ("%r4", 0xF0)],
+        );
+    }
+
+    #[test]
+    fn false_guard_squashes_the_write() {
+        run_lines(
+            "mov.u32 %r1, 7; setp.eq.u32 %p1, 1, 2; @%p1 add.u32 %r1, %r1, 5; \
+             setp.eq.u32 %p2, 1, 1; @%p2 add.u32 %r1, %r1, 1; @!%p1 add.u32 %r1, %r1, 10;",
+            &[("%r1", 18)],
         );
     }
 

@@ -1,0 +1,168 @@
+//! Control-flow property surface: the loop-aware execution stack pinned
+//! end to end.
+//!
+//! * counted-loop cycle cost is linear in the trip count (warm trips
+//!   all cost the same);
+//! * predicated-off bodies charge exactly one issue slot per squashed
+//!   instruction — nothing else;
+//! * every branch-free Table V registry kernel predicts byte-identically
+//!   through `predict` and the cfg-aware `predict_for` (the control-flow
+//!   extension must not perturb the straight-line path);
+//! * static prediction equals live simulation on 200 generated
+//!   loop-family kernels — zero divergences.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::fuzz::{diff, gen};
+use ampere_ubench::microbench::{alu, gemm, registry};
+use ampere_ubench::oracle::predict;
+
+/// Simulated measured-window delta (closing minus opening clock read).
+fn window_cycles(engine: &Engine, src: &str) -> u64 {
+    let kernel = engine.compile(src).unwrap();
+    let mut sim = engine.simulator();
+    let r = sim.run(&kernel.prog, &kernel.tp, &[0x100000]).unwrap();
+    assert!(r.clock_reads.len() >= 2, "kernel lost its clock brackets");
+    r.clock_reads[r.clock_reads.len() - 1] - r.clock_reads[0]
+}
+
+/// Same window, through the static predictor's protocol replay.
+fn predicted_cycles(engine: &Engine, src: &str) -> u64 {
+    let kernel = engine.compile(src).unwrap();
+    let model = gemm::replay_model(engine.cfg());
+    let p = predict::predict_for(&model, &kernel.prog, &kernel.tp, Some(engine.cfg()))
+        .unwrap();
+    p.cycles
+}
+
+fn counted_loop(trips: u64) -> String {
+    format!(
+        ".visible .entry k(.param .u64 out) {{\n \
+         .reg .b32 %r<40>;\n \
+         .reg .b64 %rd<70>;\n \
+         .reg .pred %p<4>;\n \
+         mov.u64 %rd20, 0;\n \
+         mov.u64 %rd60, %clock64;\n \
+         $L:\n \
+         add.u32 %r30, %r5, %r6;\n \
+         add.u32 %r31, %r7, %r8;\n \
+         add.u64 %rd20, %rd20, 1;\n \
+         setp.lt.u64 %p1, %rd20, {trips};\n \
+         @%p1 bra $L;\n \
+         mov.u64 %rd61, %clock64;\n \
+         ret;\n}}"
+    )
+}
+
+#[test]
+fn trip_count_scales_cycles_linearly() {
+    let engine = Engine::new(AmpereConfig::a100());
+    let c3 = window_cycles(&engine, &counted_loop(3));
+    let c5 = window_cycles(&engine, &counted_loop(5));
+    let c7 = window_cycles(&engine, &counted_loop(7));
+    assert!(c3 < c5 && c5 < c7, "{c3} {c5} {c7}");
+    // Cold-start effects are confined to trip one, which all three runs
+    // share — so each extra pair of warm trips costs the same.
+    assert_eq!(c5 - c3, c7 - c5, "warm trips must cost a constant");
+    // And the static replay agrees with the live run at every count.
+    for trips in [3, 5, 7] {
+        let src = counted_loop(trips);
+        assert_eq!(
+            predicted_cycles(&engine, &src),
+            window_cycles(&engine, &src),
+            "trips={trips}"
+        );
+    }
+}
+
+fn squashed_body(guarded: usize) -> String {
+    let body: Vec<String> = (0..guarded)
+        .map(|i| format!("@%p1 add.u32 %r{}, %r5, %r6;", 30 + i))
+        .collect();
+    format!(
+        ".visible .entry k(.param .u64 out) {{\n \
+         .reg .b32 %r<40>;\n \
+         .reg .b64 %rd<70>;\n \
+         .reg .pred %p<4>;\n \
+         mov.u64 %rd1, 0;\n \
+         setp.lt.u64 %p1, %rd1, 0;\n \
+         mov.u64 %rd60, %clock64;\n \
+         {}\n \
+         mov.u64 %rd61, %clock64;\n \
+         ret;\n}}",
+        body.join("\n ")
+    )
+}
+
+#[test]
+fn predicated_off_bodies_charge_issue_only() {
+    let engine = Engine::new(AmpereConfig::a100());
+    // %rd1 < 0 is always false: every guarded instruction squashes.  A
+    // squashed instruction occupies one issue slot and nothing else, so
+    // the window is the clock overhead plus one cycle per instruction.
+    for guarded in [3usize, 5, 8] {
+        let cycles = window_cycles(&engine, &squashed_body(guarded));
+        assert_eq!(
+            cycles,
+            2 + guarded as u64,
+            "{guarded} squashed instructions must cost issue slots only"
+        );
+    }
+    // Flipping the guard on (0 < 1) makes the same body strictly dearer.
+    let on = squashed_body(5).replace("setp.lt.u64 %p1, %rd1, 0;", "setp.lt.u64 %p1, %rd1, 1;");
+    assert!(
+        window_cycles(&engine, &on) > window_cycles(&engine, &squashed_body(5)),
+        "executed body must out-cost the squashed one"
+    );
+}
+
+#[test]
+fn straight_line_registry_rows_unchanged_by_the_cfg_aware_predictor() {
+    let engine = Engine::new(AmpereConfig::a100());
+    let model = gemm::replay_model(engine.cfg());
+    let rows = registry::table5();
+    assert!(rows.len() >= 100, "registry shrank to {} rows", rows.len());
+    for row in &rows {
+        let src = alu::kernel_for(row, false);
+        let kernel = engine.compile(&src).unwrap_or_else(|e| panic!("{}: {e}", row.name));
+        let a = predict::predict(&model, &kernel.prog, &kernel.tp)
+            .unwrap_or_else(|e| panic!("{}: {e}", row.name));
+        let b = predict::predict_for(&model, &kernel.prog, &kernel.tp, Some(engine.cfg()))
+            .unwrap_or_else(|e| panic!("{}: {e}", row.name));
+        // Branch-free kernels must take the table-walk path in both
+        // calls and agree field for field.
+        assert_eq!(a.replayed_sass, None, "{}", row.name);
+        assert_eq!(b.replayed_sass, None, "{}", row.name);
+        assert_eq!(a.n, b.n, "{}", row.name);
+        assert_eq!(a.cycles, b.cycles, "{}", row.name);
+        assert_eq!(a.cpi, b.cpi, "{}", row.name);
+        assert_eq!(a.bracketed, b.bracketed, "{}", row.name);
+        assert_eq!(a.unresolved, b.unresolved, "{}", row.name);
+        assert_eq!(a.per_instr.len(), b.per_instr.len(), "{}", row.name);
+    }
+}
+
+#[test]
+fn two_hundred_loop_kernels_predict_with_zero_divergences() {
+    let engine = Engine::new(AmpereConfig::a100());
+    let model = gemm::replay_model(engine.cfg());
+    let mut checked = 0u32;
+    let mut seed = 0u64;
+    while checked < 200 {
+        assert!(seed < 20_000, "loop family too rare: {checked} cases in {seed} seeds");
+        let case = gen::generate_for_arch(
+            seed,
+            gen::DEFAULT_SIZE,
+            &engine.cfg().wmma_dtypes,
+            &engine.cfg().nextgen,
+        );
+        seed += 1;
+        if case.family != gen::Family::Loop {
+            continue;
+        }
+        let cpi = diff::run_case(&engine, &model, &case)
+            .unwrap_or_else(|d| panic!("seed {}: {d:?}", case.seed));
+        assert!(cpi >= 1, "seed {}", case.seed);
+        checked += 1;
+    }
+}

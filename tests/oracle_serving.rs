@@ -595,6 +595,91 @@ fn malformed_input_parity_across_wire_modes() {
     handle.stop();
 }
 
+/// Acceptance: the `gemm` wire mode serves the whole-kernel sweep —
+/// every tile kernel simulated live on the serving engine and resolved
+/// through the predictor's protocol replay, with per-row verdicts and
+/// the aggregate `matches` bit all true.
+#[test]
+fn gemm_wire_mode_serves_the_sweep_with_exact_predictions() {
+    let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").expect("bind port 0");
+    let handle = server.spawn().expect("spawn");
+    let mut c = Client::connect(handle.addr());
+
+    let v = c.roundtrip(r#"{"mode":"gemm","id":11}"#);
+    assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{v:?}");
+    assert_eq!(v.get("mode").and_then(Value::as_str), Some("gemm"));
+    assert_eq!(v.get("id").and_then(Value::as_u64), Some(11));
+    assert_eq!(v.get("matches"), Some(&Value::Bool(true)), "{v:?}");
+    let rows = v.get("rows").and_then(Value::as_arr).expect("rows array");
+    assert!(rows.len() >= 5, "{} rows", rows.len());
+    for r in rows {
+        assert_eq!(r.get("match"), Some(&Value::Bool(true)), "{r:?}");
+        let sim = r.get("sim_cycles").and_then(Value::as_u64).expect("sim_cycles");
+        let pred = r.get("predicted_cycles").and_then(Value::as_u64).expect("predicted");
+        assert_eq!(sim, pred, "{r:?}");
+        assert!(sim > 0, "{r:?}");
+    }
+    // Both inner-loop flavours crossed the wire.
+    let label = |r: &Value| r.get("label").and_then(Value::as_str).unwrap().to_string();
+    assert!(rows.iter().any(|r| label(r).starts_with("fma[")));
+    assert!(rows.iter().any(|r| label(r).starts_with("wmma[")));
+
+    // A kernel payload on gemm is a validation error, connection intact.
+    let v = c.roundtrip(r#"{"mode":"gemm","kernel":"x"}"#);
+    assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "{v:?}");
+    assert_eq!(c.roundtrip(r#"{"mode":"ping"}"#).get("pong"), Some(&Value::Bool(true)));
+
+    handle.stop();
+}
+
+/// Acceptance: prediction == simulation on looped kernels when the
+/// model answers from disk — the save/load round-trip must preserve
+/// everything the protocol replay consumes.
+#[test]
+fn saved_model_predicts_looped_kernels_exactly() {
+    let path = std::env::temp_dir().join("oracle_serving_loop_model.json");
+    let path = path.to_str().unwrap();
+    model().save(path).unwrap();
+    let loaded = LatencyModel::load(path).unwrap();
+    let _ = std::fs::remove_file(path);
+
+    let engine = Engine::new(AmpereConfig::small());
+    let mut loops = 0u32;
+    let mut seed = 0u64;
+    while loops < 24 {
+        assert!(seed < 4_000, "loop family too rare: {loops} in {seed} seeds");
+        let case = ampere_ubench::fuzz::gen::generate_for_arch(
+            seed,
+            ampere_ubench::fuzz::gen::DEFAULT_SIZE,
+            &engine.cfg().wmma_dtypes,
+            &engine.cfg().nextgen,
+        );
+        seed += 1;
+        if case.family != ampere_ubench::fuzz::gen::Family::Loop {
+            continue;
+        }
+        let kernel = engine.compile(&case.src).unwrap();
+        let mut sim = engine.simulator();
+        let r = sim.run(&kernel.prog, &kernel.tp, &[0x100000]).unwrap();
+        let sim_cycles =
+            r.clock_reads[r.clock_reads.len() - 1] - r.clock_reads[0];
+        let p = ampere_ubench::oracle::predict::predict_for(
+            &loaded,
+            &kernel.prog,
+            &kernel.tp,
+            Some(engine.cfg()),
+        )
+        .unwrap_or_else(|e| panic!("seed {}: {e}", case.seed));
+        assert_eq!(
+            p.cycles, sim_cycles,
+            "seed {}: saved-model prediction diverged",
+            case.seed
+        );
+        assert!(p.replayed_sass.is_some(), "seed {}: not replayed", case.seed);
+        loops += 1;
+    }
+}
+
 /// Acceptance: the 1-connection JSON-mode byte protocol is pinned —
 /// existing clients parse these exact lines, so the sharded server must
 /// reproduce them byte for byte (literal pins for the stable lines,
