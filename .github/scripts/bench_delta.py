@@ -22,6 +22,7 @@ FILES = (
     "BENCH_throughput.json",
     "BENCH_serve.json",
     "BENCH_gemm.json",
+    "BENCH_mlp.json",
 )
 
 

@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Docs link check: every relative markdown link and every `rust/src/...`
+(or `docs/...`, `tests/...`, `benches/...`, `.github/...`) path mentioned
+in the given markdown files must exist in the checkout.
+
+Usage: doc_links.py <file.md> [more.md ...]
+
+External links (http/https/mailto) and intra-page anchors are ignored.
+Exits non-zero listing every dangling reference.
+"""
+
+import os
+import re
+import sys
+
+# [text](target) markdown links, minus images' leading "!".
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+# Back-ticked repo paths: `rust/src/sim/throughput.rs`, `docs/WIRE.md`, ...
+PATH_RE = re.compile(
+    r"`((?:rust/src|docs|tests|benches|examples|vendor|\.github)/[A-Za-z0-9_./-]+)`"
+)
+
+
+def check_file(md_path):
+    bad = []
+    base = os.path.dirname(md_path)
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(resolved):
+            bad.append(f"{md_path}: link target {target!r} -> {resolved} missing")
+
+    for path in PATH_RE.findall(text):
+        # Trailing `/` marks a directory reference; `...` elisions and
+        # glob-ish mentions are skipped.
+        if "*" in path or "..." in path:
+            continue
+        if not os.path.exists(path.rstrip("/")):
+            bad.append(f"{md_path}: path reference `{path}` missing from the tree")
+
+    return bad
+
+
+def main():
+    if len(sys.argv) < 2:
+        sys.exit(f"usage: {sys.argv[0]} <file.md> [more.md ...]")
+    failures = []
+    for md in sys.argv[1:]:
+        failures.extend(check_file(md))
+    for f in failures:
+        print(f)
+    if failures:
+        sys.exit(f"{len(failures)} dangling doc reference(s)")
+    print(f"all references resolve across {len(sys.argv) - 1} file(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+//! Bench for the memory-level-parallelism engine (ISSUE 9): the full
+//! per-level saturation sweep — each Table IV pointer-chase anchor
+//! measured live, then the analytic curve derived per swept degree —
+//! timed per built-in architecture, plus the warm-engine steady state
+//! and the pure analytic curve construction (no simulation at all).
+//!
+//! Emits `BENCH_mlp.json` (runs/median/p95 per series) for the
+//! cross-PR trajectory check in `.github/scripts/bench_delta.py`.
+
+use ampere_ubench::arch;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::microbench::mlp::{run_mlp_sweep_with, saturation_row};
+use ampere_ubench::sim::ALL_MEM_LEVELS;
+use ampere_ubench::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::from_args("mlp");
+
+    for name in ["ampere", "hopper"] {
+        let cfg = arch::get(name).expect("builtin preset").config.into_small();
+        let engine = Engine::new(cfg);
+        b.bench(&format!("mlp_sweep_{name}"), || {
+            let rows = run_mlp_sweep_with(black_box(&engine)).unwrap();
+            assert_eq!(rows.len(), ALL_MEM_LEVELS.len());
+            rows.len()
+        });
+    }
+
+    // Steady state: a warm ampere engine re-swept (anchor kernels
+    // cache-served, simulators pooled).
+    let engine = Engine::new(arch::get("ampere").unwrap().config.into_small());
+    run_mlp_sweep_with(&engine).unwrap();
+    b.bench("mlp_sweep_warm", || {
+        run_mlp_sweep_with(black_box(&engine)).unwrap().len()
+    });
+
+    // The analytic half alone: per-level curve construction from a
+    // fixed anchor, no simulator in the loop.
+    let memory = arch::get("ampere").unwrap().config.memory;
+    b.bench("mlp_curve_analytic", || {
+        let mut knees = 0u64;
+        for level in ALL_MEM_LEVELS {
+            let row = saturation_row(black_box(level), black_box(290), &memory);
+            knees += row.knee_mlp as u64;
+        }
+        knees
+    });
+
+    b.finish();
+}

@@ -128,6 +128,11 @@ impl ArchSpec {
         c.memory.dram_latency = 400;
         c.memory.shared_load_latency = 19;
         c.memory.shared_store_latency = 15;
+        // Per-SM bandwidth ceilings (Jia et al.'s V100 sustained-rate
+        // measurements, scaled per SM): half Ampere's L1 path.
+        c.memory.l1_bytes_per_cycle = 64;
+        c.memory.l2_bytes_per_cycle = 48;
+        c.memory.dram_bytes_per_cycle = 24;
         // Packed-half path is a cycle slower than Ampere's.
         c.half_pipe = PipeTiming::new(2, 4);
         // §V-A's dependent-add pipe borrow and Insight 3's mov-folding
@@ -164,6 +169,11 @@ impl ArchSpec {
         c.memory.dram_latency = 350;
         c.memory.shared_load_latency = 19;
         c.memory.shared_store_latency = 15;
+        // T4 is a bandwidth-lean part: 64 B/cycle L1, GDDR6 behind a
+        // narrower per-SM slice.
+        c.memory.l1_bytes_per_cycle = 64;
+        c.memory.l2_bytes_per_cycle = 32;
+        c.memory.dram_bytes_per_cycle = 16;
         // TU104 keeps only 2 FP64 units per SM (1/32 rate): the fp64
         // issue port is occupied far longer per warp instruction.
         c.fp64_pipe = PipeTiming::new(16, 6);
@@ -190,6 +200,9 @@ impl ArchSpec {
         c.memory.dram_latency = 650;
         c.memory.shared_load_latency = 29;
         c.memory.shared_store_latency = 23;
+        // Hopper widens L2 and HBM3 per-SM bandwidth (Luo et al. §IV).
+        c.memory.l2_bytes_per_cycle = 96;
+        c.memory.dram_bytes_per_cycle = 48;
         // sm_90's full async surface: faster LDGSTS than Ampere, the
         // TMA bulk-tensor engine, warpgroup MMA (HGMMA at warpgroup
         // granularity) and DSMEM cluster access.
@@ -220,6 +233,10 @@ impl ArchSpec {
         c.memory.dram_latency = 600;
         c.memory.shared_load_latency = 30;
         c.memory.shared_store_latency = 24;
+        // HBM3e doubles Ampere's per-SM DRAM rate; L2 matches the L1
+        // line rate (Jarmusch et al.'s sustained-bandwidth tables).
+        c.memory.l2_bytes_per_cycle = 128;
+        c.memory.dram_bytes_per_cycle = 64;
         // The async families carry forward with tightened latencies;
         // warpgroup MMA retires through the tcgen05 tensor-memory path.
         c.nextgen = NextGenConfig {
@@ -277,7 +294,13 @@ impl ArchSpec {
                     .set("dram_latency", m.dram_latency)
                     .set("shared_load_latency", m.shared_load_latency)
                     .set("shared_store_latency", m.shared_store_latency)
-                    .set("shared_bytes", m.shared_bytes),
+                    .set("shared_bytes", m.shared_bytes)
+                    .set("sector_bytes", m.sector_bytes)
+                    .set("l1_bytes_per_cycle", m.l1_bytes_per_cycle)
+                    .set("l2_bytes_per_cycle", m.l2_bytes_per_cycle)
+                    .set("dram_bytes_per_cycle", m.dram_bytes_per_cycle)
+                    .set("shared_banks", m.shared_banks)
+                    .set("shared_bank_bytes", m.shared_bank_bytes),
             )
             .set(
                 "tensor",
@@ -393,6 +416,20 @@ impl ArchSpec {
         c.memory.shared_load_latency = need_u64(m, "shared_load_latency")?;
         c.memory.shared_store_latency = need_u64(m, "shared_store_latency")?;
         c.memory.shared_bytes = need_u64(m, "shared_bytes")? as usize;
+        // Bandwidth / sector / bank fields load *leniently* with the
+        // A100-calibrated defaults, so spec files (and models) written
+        // before the MLP engine still load — same pattern as
+        // `issue_width` and the control-flow section.  They never enter
+        // the single-warp latency path, so a legacy spec's measured
+        // tables are unchanged by the defaults.
+        let lenient = |key: &str, dflt: u64| m.get(key).and_then(Value::as_u64).unwrap_or(dflt);
+        let d = crate::config::MemoryConfig::default();
+        c.memory.sector_bytes = lenient("sector_bytes", d.sector_bytes);
+        c.memory.l1_bytes_per_cycle = lenient("l1_bytes_per_cycle", d.l1_bytes_per_cycle);
+        c.memory.l2_bytes_per_cycle = lenient("l2_bytes_per_cycle", d.l2_bytes_per_cycle);
+        c.memory.dram_bytes_per_cycle = lenient("dram_bytes_per_cycle", d.dram_bytes_per_cycle);
+        c.memory.shared_banks = lenient("shared_banks", d.shared_banks);
+        c.memory.shared_bank_bytes = lenient("shared_bank_bytes", d.shared_bank_bytes);
 
         let t = v.get("tensor").ok_or("arch json: missing \"tensor\" object")?;
         c.tensor.cores_per_sm = need_u64(t, "cores_per_sm")? as u32;
@@ -512,6 +549,12 @@ impl ArchSpec {
             ("memory.shared_load_latency", m.shared_load_latency),
             ("memory.shared_store_latency", m.shared_store_latency),
             ("memory.shared_bytes", m.shared_bytes as u64),
+            ("memory.sector_bytes", m.sector_bytes),
+            ("memory.l1_bytes_per_cycle", m.l1_bytes_per_cycle),
+            ("memory.l2_bytes_per_cycle", m.l2_bytes_per_cycle),
+            ("memory.dram_bytes_per_cycle", m.dram_bytes_per_cycle),
+            ("memory.shared_banks", m.shared_banks),
+            ("memory.shared_bank_bytes", m.shared_bank_bytes),
         ] {
             out.push((k.into(), v.to_string()));
         }
@@ -851,6 +894,58 @@ mod tests {
         let loaded = ArchSpec::from_json_str(&to_string_pretty(&v)).unwrap();
         assert_eq!(loaded.config.issue_width, 1);
         assert!(loaded.flatten().iter().any(|(k, v)| k == "pipe.fp64.ports" && v == "1"));
+    }
+
+    #[test]
+    fn bandwidth_fields_round_trip_and_default_leniently() {
+        // Non-default bandwidth/bank values survive the JSON trip.
+        let mut spec = ArchSpec::ampere();
+        spec.config.arch_name = "fat-pipe".into();
+        spec.config.memory.l2_bytes_per_cycle = 256;
+        spec.config.memory.shared_banks = 16;
+        let back = ArchSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back, spec);
+        assert!(back
+            .flatten()
+            .iter()
+            .any(|(k, v)| k == "memory.l2_bytes_per_cycle" && v == "256"));
+
+        // A spec written before the MLP engine — its memory object has
+        // none of the bandwidth fields — still loads, with the
+        // A100-calibrated defaults.
+        let mut v = ArchSpec::turing().to_json();
+        if let Some(m) = v.get("memory").cloned() {
+            if let Value::Obj(mut mem) = m {
+                for k in [
+                    "sector_bytes",
+                    "l1_bytes_per_cycle",
+                    "l2_bytes_per_cycle",
+                    "dram_bytes_per_cycle",
+                    "shared_banks",
+                    "shared_bank_bytes",
+                ] {
+                    mem.remove(k);
+                }
+                if let Value::Obj(top) = &mut v {
+                    top.insert("memory".into(), Value::Obj(mem));
+                }
+            }
+        }
+        let loaded = ArchSpec::from_json_str(&to_string_pretty(&v)).unwrap();
+        let d = crate::config::MemoryConfig::default();
+        assert_eq!(loaded.config.memory.sector_bytes, d.sector_bytes);
+        assert_eq!(loaded.config.memory.l1_bytes_per_cycle, d.l1_bytes_per_cycle);
+        assert_eq!(loaded.config.memory.shared_banks, d.shared_banks);
+        // The strict fields are still strict.
+        assert_eq!(loaded.config.memory.l2_bytes, 4 * 1024 * 1024);
+
+        // And the flattened diff surfaces per-generation bandwidth.
+        let rows = diff(&ArchSpec::ampere(), &ArchSpec::hopper());
+        let r = rows
+            .iter()
+            .find(|r| r.field == "memory.dram_bytes_per_cycle")
+            .expect("bandwidth must flatten");
+        assert_eq!((r.a.as_str(), r.b.as_str()), ("32", "48"));
     }
 
     #[test]

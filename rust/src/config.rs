@@ -248,11 +248,17 @@ impl NextGenConfig {
     }
 }
 
-/// Memory-hierarchy geometry and service latencies.
+/// Memory-hierarchy geometry, service latencies and — since the MLP
+/// engine — per-level bandwidth ceilings.
 ///
 /// Latencies are *service* times at each level; the measured Table IV
 /// numbers emerge from the pointer-chase microbenchmark traversing the
 /// cache model (hit/miss decided by the actual cache state, not scripted).
+/// The bandwidth fields never enter the single-warp latency path: they
+/// bound how fast the multi-warp throughput scheduler
+/// ([`crate::sim::throughput`]) and the MLP saturation sweep
+/// ([`crate::microbench::mlp`]) can *overlap* accesses, so Table IV
+/// stays byte-identical whatever values they take.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MemoryConfig {
     /// L1 data cache per SM (A100: 192 KiB unified; data partition modeled).
@@ -275,6 +281,21 @@ pub struct MemoryConfig {
     pub shared_store_latency: u64,
     /// Shared memory size per SM (A100: up to 164 KiB).
     pub shared_bytes: usize,
+    /// Memory-transaction sector size in bytes (the unit one lane's
+    /// access occupies a level's return path; NVIDIA: 32 B sectors on
+    /// every generation this registry models).
+    pub sector_bytes: u64,
+    /// L1 return bandwidth per SM, bytes/cycle (A100: a full 128 B line
+    /// per cycle).
+    pub l1_bytes_per_cycle: u64,
+    /// L2 bandwidth per SM slice, bytes/cycle.
+    pub l2_bytes_per_cycle: u64,
+    /// DRAM bandwidth per SM, bytes/cycle.
+    pub dram_bytes_per_cycle: u64,
+    /// Shared-memory banks per SM (32 on every generation modeled).
+    pub shared_banks: u64,
+    /// Bytes one bank serves per cycle (4 B words).
+    pub shared_bank_bytes: u64,
 }
 
 impl Default for MemoryConfig {
@@ -292,6 +313,12 @@ impl Default for MemoryConfig {
             shared_load_latency: 23,
             shared_store_latency: 19,
             shared_bytes: 164 * 1024,
+            sector_bytes: 32,
+            l1_bytes_per_cycle: 128,
+            l2_bytes_per_cycle: 64,
+            dram_bytes_per_cycle: 32,
+            shared_banks: 32,
+            shared_bank_bytes: 4,
         }
     }
 }
@@ -554,6 +581,24 @@ mod tests {
         let c = AmpereConfig::a100();
         assert_eq!(c.branch_taken_extra, 0);
         assert_eq!(c.predicated_skip_occupancy, 1);
+    }
+
+    #[test]
+    fn bandwidth_defaults_are_a100_and_small_leaves_them_alone() {
+        // The MLP engine's knobs: one 32 B sector per lane, a full line
+        // per cycle out of L1, 32 × 4 B shared banks.  `--small` scales
+        // only the cache arrays — bandwidth ceilings are measured
+        // quantities, like the latencies.
+        let c = AmpereConfig::a100();
+        assert_eq!(c.memory.sector_bytes, 32);
+        assert_eq!(c.memory.l1_bytes_per_cycle, 128);
+        assert_eq!(c.memory.l2_bytes_per_cycle, 64);
+        assert_eq!(c.memory.dram_bytes_per_cycle, 32);
+        assert_eq!((c.memory.shared_banks, c.memory.shared_bank_bytes), (32, 4));
+        let s = AmpereConfig::small();
+        assert_eq!(s.memory.l1_bytes_per_cycle, c.memory.l1_bytes_per_cycle);
+        assert_eq!(s.memory.dram_bytes_per_cycle, c.memory.dram_bytes_per_cycle);
+        assert_eq!(s.memory.shared_banks, c.memory.shared_banks);
     }
 
     #[test]

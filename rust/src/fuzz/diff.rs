@@ -23,7 +23,8 @@
 //! * path 3 failing, or (on the predictor-exact families) disagreeing
 //!   with the measured CPI, is [`DivergenceKind::PredictorError`] /
 //!   [`DivergenceKind::PredictorMismatch`];
-//! * on the `throughput` family the traces of paths 1 and 2 are
+//! * on the `throughput` and `strided` families the traces of paths 1
+//!   and 2 are
 //!   additionally distilled into multi-warp schedules and replayed on a
 //!   *pooled* vs. a *fresh* [`WarpScheduler`](crate::sim::WarpScheduler)
 //!   across the warp sweep — any disagreement is
@@ -271,12 +272,15 @@ pub fn run_case(
         ));
     }
 
-    // Throughput family: the fourth path.  Distill both simulators'
-    // traces into warp schedules (they must agree — gaps and port
-    // metadata included, a stricter check than the first-instruction
-    // mapping above) and replay them on a pooled scheduler vs. a fresh
-    // one across the warp sweep.
-    if case.family == gen::Family::Throughput {
+    // Throughput and strided families: the fourth path.  Distill both
+    // simulators' traces into warp schedules (they must agree — gaps,
+    // port and memory-level metadata included, a stricter check than
+    // the first-instruction mapping above) and replay them on a pooled
+    // scheduler vs. a fresh one across the warp sweep.  Strided cases
+    // put real LSU steps through the per-level bandwidth channels and
+    // the bank-conflict serialization, so the memory accounting itself
+    // is differentially pinned.
+    if matches!(case.family, gen::Family::Throughput | gen::Family::Strided) {
         let wt_pool = crate::sim::WarpTrace::from_trace(&pooled.trace, engine.cfg());
         let wt_fresh = crate::sim::WarpTrace::from_trace(&fresh.trace, engine.cfg());
         let (wt_pool, wt_fresh) = match (wt_pool, wt_fresh) {
@@ -501,6 +505,35 @@ mod tests {
         };
         run_case(&engine, &tiny_model(), &case).unwrap();
         // The scheduler pool was actually exercised.
+        assert!(engine.warp_pool_stats().created >= 1);
+    }
+
+    /// Generated strided cases survive all four paths — including the
+    /// multi-warp replay whose memory channels and bank-conflict
+    /// serialization they exist to exercise.
+    #[test]
+    fn strided_family_cases_pass_all_four_paths() {
+        let engine = Engine::new(AmpereConfig::a100());
+        let model = tiny_model();
+        let mut saw = 0u32;
+        for seed in 0..128u64 {
+            let case = gen::generate_for_arch(
+                seed,
+                gen::DEFAULT_SIZE,
+                &engine.cfg().wmma_dtypes,
+                &engine.cfg().nextgen,
+            );
+            if case.family != super::super::gen::Family::Strided {
+                continue;
+            }
+            saw += 1;
+            run_case(&engine, &model, &case)
+                .unwrap_or_else(|d| panic!("{} (seed {seed}): {d:?}", case.label));
+            if saw >= 4 {
+                break;
+            }
+        }
+        assert!(saw >= 1, "no strided cases in 128 seeds");
         assert!(engine.warp_pool_stats().created >= 1);
     }
 

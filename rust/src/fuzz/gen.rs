@@ -35,6 +35,12 @@
 //! * [`Family::Throughput`] — `mixed`-shaped windows the harness
 //!   additionally distills into warp traces and replays on the
 //!   multi-warp throughput scheduler, pooled vs. fresh.
+//! * [`Family::Strided`] — line-aligned strided global walks plus
+//!   shared-memory accesses at a random word stride (the bank-conflict
+//!   shape: conflict degree is `gcd(stride % 32, 32)` — see
+//!   [`crate::microbench::mlp::bank_conflict_ways`]).  The harness
+//!   replays these on the throughput scheduler too, pooled vs. fresh,
+//!   so the memory-channel accounting is differentially pinned.
 //! * [`Family::NextGen`] — post-Ampere async families drawn from the
 //!   target architecture's capability table
 //!   ([`NextGenConfig`]): `cp.async` / TMA / `wgmma` issue bursts with
@@ -75,6 +81,14 @@ pub enum Family {
     /// pooled [`WarpScheduler`](crate::sim::WarpScheduler) must replay
     /// them identically to a fresh one at every swept warp count.
     Throughput,
+    /// Strided and bank-conflicting memory windows: line-aligned
+    /// global loads walking a random line stride, plus shared-memory
+    /// traffic at a random word stride whose conflict degree follows
+    /// the `gcd(stride % 32, 32)` rule.  Replayed on the multi-warp
+    /// throughput scheduler pooled vs. fresh, exactly like
+    /// [`Family::Throughput`], so the per-level memory channels and
+    /// the bank-conflict serialization are differentially checked.
+    Strided,
     /// Post-Ampere async instruction families (`cp.async` / TMA /
     /// `wgmma` / DSMEM), drawn only from the target architecture's
     /// capability table with valid-by-construction commit/wait
@@ -98,13 +112,14 @@ impl Family {
             Family::MultiWindow => "multi-window",
             Family::Wmma => "wmma",
             Family::Throughput => "throughput",
+            Family::Strided => "strided",
             Family::NextGen => "nextgen",
             Family::Loop => "loop",
         }
     }
 }
 
-pub const ALL_FAMILIES: [Family; 9] = [
+pub const ALL_FAMILIES: [Family; 10] = [
     Family::Alu,
     Family::AluDep,
     Family::Mixed,
@@ -112,6 +127,7 @@ pub const ALL_FAMILIES: [Family; 9] = [
     Family::MultiWindow,
     Family::Wmma,
     Family::Throughput,
+    Family::Strided,
     Family::NextGen,
     Family::Loop,
 ];
@@ -199,6 +215,7 @@ pub fn generate_for_arch(
             let (label, src, _) = gen_mixed(&mut rng, size);
             (label.replacen("mixed", "throughput", 1), src, false)
         }
+        Family::Strided => gen_strided(&mut rng, size),
         Family::NextGen => gen_nextgen(&mut rng, size, nextgen),
         Family::Loop => gen_loop(&mut rng, size),
     };
@@ -356,6 +373,59 @@ fn gen_memory(rng: &mut Rng, size: u32) -> (String, String, bool) {
         }
     }
     let label = format!("memory[{}]", kinds.join(","));
+    let src = measurement_kernel(&init.join("\n "), &body.join("\n "));
+    (label, src, false)
+}
+
+// ---- strided ---------------------------------------------------------
+
+/// Independent line-aligned global loads walking a random line stride
+/// (the MLP shape: no address depends on an earlier load), interleaved
+/// with shared-memory accesses at a random word stride.  The shared
+/// stride is drawn from the powers of two that exercise every conflict
+/// degree the `gcd(stride % 32, 32)` rule can produce — 1 (clean),
+/// 2/4/8/16 (partial) and 32 (worst-case full serialization) — and all
+/// offsets stay inside the declared 4 KiB buffer.
+fn gen_strided(rng: &mut Rng, size: u32) -> (String, String, bool) {
+    let k = 2 + (rng.below(size as u64).min(6)) as usize;
+    let line_stride = 1 + rng.below(8); // global walk, in 128 B lines
+    let stride_words = [1u64, 2, 4, 8, 16, 32][rng.below(6) as usize];
+    let ways = crate::microbench::mlp::bank_conflict_ways(stride_words);
+    let base = 0x10_0000u64 + rng.below(64) * 128;
+    let mut init: Vec<String> = vec![".shared .align 8 .b8 fsh1[4096];".to_string()];
+    for i in 0..k {
+        init.push(format!(
+            "mov.u64 %rd{}, {};",
+            20 + i,
+            base + i as u64 * line_stride * 128
+        ));
+    }
+    let mut body: Vec<String> = Vec::new();
+    let mut kinds: Vec<String> = Vec::new();
+    for i in 0..k {
+        if rng.bool() {
+            let cache = *rng.pick(&["cv", "cg", "ca"]);
+            body.push(format!("ld.global.{cache}.u64 %rd{}, [%rd{}];", 40 + i, 20 + i));
+            kinds.push(format!("ld.{cache}"));
+        } else {
+            // 8-byte accesses like every other shared-memory kernel in
+            // the tree; the word stride still walks the bank pattern
+            // (offset = stride in 4 B bank words, kept 8-aligned).
+            let off = (i as u64 * stride_words * 8) % 4096;
+            let sym = if off == 0 { "fsh1".to_string() } else { format!("fsh1+{off}") };
+            if rng.bool() {
+                body.push(format!("ld.shared.u64 %rd{}, [{sym}];", 40 + i));
+                kinds.push("ld.shared".to_string());
+            } else {
+                body.push(format!("st.shared.u64 [{sym}], {};", rng.below(1000)));
+                kinds.push("st.shared".to_string());
+            }
+        }
+    }
+    let label = format!(
+        "strided[lines={line_stride},words={stride_words},ways={ways}:{}]",
+        kinds.join(",")
+    );
     let src = measurement_kernel(&init.join("\n "), &body.join("\n "));
     (label, src, false)
 }
@@ -661,6 +731,40 @@ mod tests {
             assert!(c.predict_exact, "{}", c.label);
         }
         assert!(saw >= 2, "only {saw} loop cases in 96 seeds");
+    }
+
+    /// Strided cases stay valid PTX, keep their brackets, and always
+    /// carry a conflict degree the gcd rule can produce.
+    #[test]
+    fn strided_kernels_compile_and_carry_a_legal_conflict_degree() {
+        let cfg = AmpereConfig::small();
+        let mut saw = 0u32;
+        for seed in 0..128u64 {
+            let c = generate(seed, DEFAULT_SIZE);
+            if c.family != Family::Strided {
+                continue;
+            }
+            saw += 1;
+            assert!(!c.predict_exact, "{}", c.label);
+            let ways: u64 = c.label["strided[".len()..]
+                .split("ways=")
+                .nth(1)
+                .and_then(|s| s.split(':').next())
+                .and_then(|s| s.parse().ok())
+                .unwrap_or_else(|| panic!("no ways in {}", c.label));
+            assert!(
+                matches!(ways, 1 | 2 | 4 | 8 | 16 | 32),
+                "{}: illegal conflict degree {ways}",
+                c.label
+            );
+            let prog = parse_program(&c.src)
+                .unwrap_or_else(|e| panic!("{} (seed {seed}): {e}\n{}", c.label, c.src));
+            let tp = translate_program(&prog).unwrap();
+            let mut sim = Simulator::new(cfg.clone());
+            let r = sim.run(&prog, &tp, &[0x100000]).unwrap();
+            assert!(r.clock_reads.len() >= 2, "{}: lost brackets", c.label);
+        }
+        assert!(saw >= 2, "only {saw} strided cases in 128 seeds");
     }
 
     #[test]

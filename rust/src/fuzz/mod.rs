@@ -8,8 +8,8 @@
 //! turn that from anecdotal into adversarial:
 //!
 //! * [`gen`] + [`diff`] — a grammar-driven, seeded PTX kernel generator
-//!   (mixed ALU/memory/WMMA/clock-window bodies with
-//!   valid-by-construction register dataflow) and a differential
+//!   (mixed ALU/memory/strided bank-conflict/WMMA/clock-window bodies
+//!   with valid-by-construction register dataflow) and a differential
 //!   harness running every generated kernel through all three paths,
 //!   classifying divergences (pool-reset contamination, translator
 //!   nondeterminism, predictor mismatch) and dumping a seed-minimized

@@ -24,15 +24,19 @@
 //!   occupancy/latency, scoreboard, clock registers, pipe-drain
 //!   semantics — plus the deterministic multi-warp throughput scheduler
 //!   ([`sim::throughput`]): N resident warps round-robin over per-pipe
-//!   issue ports, achieved IPC vs. warp count, 1-warp replay
-//!   byte-identical to the latency path (`repro throughput`).
+//!   issue ports — now also charging per-level memory bandwidth
+//!   (sector-granular) and shared-memory bank conflicts — achieved IPC
+//!   vs. warp count, 1-warp replay byte-identical to the latency path
+//!   (`repro throughput`).
 //! * [`memory`] — global/L2/L1/shared memory hierarchy with `.cv/.cg/.ca`
 //!   cache-operator semantics (Table IV's latencies *emerge* from hits).
 //! * [`tensor`] — tensor-core model: WMMA shape→SASS decomposition, MOVM
 //!   layout rules, latency & throughput (Table III).
 //! * [`trace`] — dynamic SASS trace capture (the PPT-GPU tool analogue).
 //! * [`microbench`] — the paper's actual contribution: the microbenchmark
-//!   generators + measurement protocol.
+//!   generators + measurement protocol, including the latency-vs-MLP
+//!   saturation sweep ([`microbench::mlp`]) that turns Table IV point
+//!   latencies into per-arch bandwidth curves (`repro mlp`).
 //! * [`isa`] — the next-gen ISA subsystem: registry + two-sided (issue /
 //!   completion) measurement campaign for the post-Ampere instruction
 //!   families (`cp.async`, TMA, `wgmma`, DSMEM) across the Hopper and
@@ -59,6 +63,11 @@
 //!   `tests/golden/` snapshots (`repro fuzz` / `repro conformance`).
 //! * [`runtime`] — PJRT client loading the AOT JAX/Pallas artifacts; the
 //!   WMMA numerics oracle on the request path (python is build-time only).
+//!
+//! Rendered documentation lives in `docs/`: `docs/ARCHITECTURE.md` (the
+//! subsystem map and table/figure index), `docs/USAGE.md` (the CLI
+//! reference, compiled into `repro help` verbatim) and `docs/WIRE.md`
+//! (the serving wire protocol, both framings).
 
 // Clippy runs blocking in CI (`cargo clippy --release -- -D warnings`).
 // The allows below are deliberate structural choices, not unfixed

@@ -9,6 +9,7 @@
 //! repro campaign            # everything (Tables I–V, Fig. 4, insights)
 //! repro table1 … table5     # one experiment
 //! repro throughput          # multi-warp achieved-IPC sweep
+//! repro mlp                 # latency-vs-MLP saturation curves per level
 //! repro gemm                # whole-kernel GEMM: simulated vs predicted
 //! repro fig4 | fig6-trace | insights | movm
 //! repro validate-oracle     # sim TC numerics vs PJRT/Pallas artifacts
@@ -40,215 +41,10 @@ use ampere_ubench::util::json::{to_string_pretty, Value};
 use ampere_ubench::{fuzz, harness, isa, report, runtime};
 use std::sync::Arc;
 
-const USAGE: &str = "\
-repro — 'Demystifying the Nvidia Ampere Architecture' on a simulated GPU
-
-USAGE: repro [--small] [--json] [--arch <name|spec.json>] <command> [args]
-
---arch selects the machine every command measures: a built-in preset
-(ampere — the default, byte-identical to the paper's A100 runs; volta;
-turing — parameterized from the paper's cited predecessor studies;
-hopper and blackwell — the successor generations per Luo et al.,
-arXiv:2402.13499, and Jarmusch et al., arXiv:2507.10789), a product
-alias (a100/v100/t4/h100/b200), or a path to a custom-spec JSON file
-(`repro arch show ampere --json` prints the schema).
-
-Post-Ampere instruction families (cp.async / TMA bulk tensor / wgmma /
-distributed shared memory) are gated per arch by the spec's `nextgen`
-capability table: ampere carries cp.async only, hopper and blackwell
-all four, volta/turing none.  Each family measures an issue CPI (cost
-at the issue port, completion overlapped) and completion cycles
-(issue→data through commit_group/wait_group 0); `compare` renders '-'
-where a generation lacks a family, e.g.:
-
-  repro compare --arch ampere,volta,turing,hopper,blackwell --json
-
-COMMANDS:
-  campaign              run the complete evaluation (all tables + figures)
-  table1                Table I: CPI vs number of instructions
-  table2                Table II: dependent vs independent CPI
-  table3                Table III: tensor-core latency and throughput
-  table4 [--faithful]   Table IV: memory latencies (pointer chasing)
-  table5                Table V: full PTX→SASS mapping + cycles sweep
-  throughput [--warps <w1,w2,…>]
-                        multi-warp throughput: for every Table V row and
-                        supported WMMA dtype, replay the measured window
-                        at each resident-warp count (default
-                        1,2,4,8,16,32) on the deterministic round-robin
-                        warp scheduler and report achieved IPC, peak IPC
-                        and warps-to-saturation.  The 1-warp column's
-                        CPI is byte-identical to the latency path.
-  gemm                  whole-kernel GEMM prediction: tiled shared-
-                        memory GEMM kernels (an FMA fallback tile plus
-                        one kernel per supported WMMA dtype × shape,
-                        KTILES counted loop trips each) are simulated
-                        live and statically resolved by the predictor's
-                        protocol replay; the table reports both cycle
-                        counts per kernel and fails unless every row
-                        matches exactly.  Exercises the control-flow
-                        PTX dialect end to end (see CONTROL FLOW).
-  fig4                  Fig. 4: 32- vs 64-bit clock registers
-  fig6-trace            Fig. 6: dynamic SASS of one TC instruction
-  insights              Insights 1–3 (pipes, signedness, init style)
-  movm                  MOVM layout rules (§V-C)
-  arch list             the built-in architecture presets
-  arch show <name|spec.json>
-                        one spec, field by field (--json: the custom-
-                        spec JSON schema, ready to edit and load back)
-  arch diff <a> <b>     field-level delta between two specs (--json)
-  compare --arch <a,b[,c…]>
-                        run the campaign once per architecture and
-                        print cross-arch delta tables: every Table V
-                        row's CPI per arch (Δ vs the first), Table IV
-                        per level, Table III per dtype ('-' where a
-                        generation lacks the dtype), the multi-warp
-                        throughput sweep's peak IPC / warps-to-
-                        saturation per arch (Δ in milli-IPC), and the
-                        next-gen ISA families' issue CPI / completion
-                        cycles per arch ('-' where absent).  --json
-                        emits the same as compare_json.
-  validate-oracle       sim TC numerics vs the PJRT/Pallas artifacts
-  show-kernel <name> [--dependent]
-                        print a generated microbenchmark kernel
-  extract-model [--out <path>]
-                        run the campaign once and write the latency
-                        model as JSON (default model_a100.json)
-  predict <instr|file.ptx> [--dependent] [--model <path>]
-                        static prediction from the model, cross-checked
-                        against live simulation of the same kernel
-                        (extracts a fresh model unless --model is given)
-  serve [--model <path>]… [--port <n>]
-                        TCP prediction service on 127.0.0.1:<port>
-                        (default 7845), speaking JSON lines or binary
-                        frames per connection (the first byte decides —
-                        see SERVE WIRE PROTOCOL).  --model may repeat:
-                        the server hosts one oracle per model (each on
-                        an engine matching that model's arch) and
-                        requests route by their \"arch\" field — absent
-                        means the first model.  Accepts on one shard
-                        per core (up to 8); admission is a bounded
-                        queue, not a hard reject (BACKPRESSURE below).
-  loadgen [--model <path>] [--secs <f>] [--conns <l>] [--wire <m>]
-          [--batch <n>] [--out <path>]
-                        spin up a loopback server on this invocation's
-                        model (extracting one when --model is absent),
-                        prewarm it, and hammer warm predict batches
-                        over every --wire mode (json|binary|both,
-                        default both) × --conns count (comma list,
-                        default 1,8,64) for --secs per cell (default
-                        2.0) at --batch requests per roundtrip
-                        (default 32).  Prints a QPS / p50 / p99 table
-                        (--json: the BENCH document) and writes it to
-                        --out (default BENCH_serve.json, the file
-                        bench_delta.py gates).
-  fuzz [--seed <s>] [--cases <n>] [--model <path>]
-                        differential fuzzing: every generated kernel
-                        runs through (a) the engine's pooled simulator,
-                        (b) a fresh simulator and (c) the oracle's
-                        static predictor; divergences are classified
-                        (pool contamination / translator nondeterminism
-                        / predictor mismatch), seed-minimized, and
-                        dumped as fuzz_repro_<seed>.ptx + .json.
-                        Defaults: --seed 1 --cases 100.  Replay one
-                        failing case: repro fuzz --seed <s> --cases 1
-                        (case seeds are base+index, printed on failure).
-                        Families: alu, alu-dep, mixed, memory,
-                        multi-window, wmma, throughput, nextgen, and
-                        loop — seeded counted loops through the
-                        measured window with predicated bodies; loop
-                        cases are predictor-exact (the protocol replay
-                        must match the live clock delta bit for bit).
-  conformance [--update]
-                        diff Tables I-V, Fig. 4 + the GEMM sweep (the
-                        report::*_json forms) and the registry
-                        name/SASS pin against
-                        the golden snapshots in tests/golden/ (per-cell
-                        exact / range / \"changes\" tolerances, plus the
-                        Table V calibration floors).  After an
-                        *intentional* behaviour change, regenerate with
-                        `repro conformance --update` and review the
-                        snapshot diff before committing (aggregate
-                        floors are preserved across --update).
-
---json applies to table1…table5, throughput, gemm, fig4, insights,
-extract-model, predict, fuzz, conformance, arch list/show/diff and
-compare.
-
-CONTROL FLOW — the PTX dialect the parser accepts now includes labels
-(`$LOOP:` on its own line), `bra` / `bra.uni` to a label, `setp.<cmp>.
-<type> %p, a, b` predicate definitions, and guarded instructions
-(`@%p add.u32 …` / `@!%p add.u32 …`).  The simulator executes taken
-and fall-through branches with bounded trip counts (predicated-off
-instructions charge issue-only), and the static predictor resolves
-counted loops by concretely replaying the kernel under the protocol
-(params fixed, registers zero-initialised), so prediction stays pinned
-equal to live simulation on looped kernels — `predict`, `check`, the
-`gemm` command/wire mode and the `loop` fuzz family all ride this
-path.
-
-Property-based tests share the same seeds: FUZZ_CASES=<n> deepens every
-`util::prng::check` sweep (CI runs 200; local `cargo test` stays fast).
-
-SERVE WIRE PROTOCOL — the first byte of a connection picks the framing
-(0xB1 = binary frames, anything else = JSON lines); both framings carry
-the same request/response values and a connection never switches:
-
-JSON lines (one JSON value per line, both directions):
-  request   {\"id\": 7,
-             \"mode\": \"predict|simulate|check|throughput|gemm|stats|
-                       metrics|ping|reload\",
-             \"kernel\": \"<PTX>\" | \"instr\": \"add.u32\",
-             \"dependent\": true, \"arch\": \"turing\"}
-  batch     a JSON array of requests -> one array of responses, same
-            order, fanned out across the worker pool (fully-warm
-            predict batches answer inline off the sharded cache)
-  response  {\"ok\": true, \"id\": 7, ...} — predict adds cpi/cycles/n/
-            unresolved/cached; simulate adds cpi/delta/n/mapping; check
-            adds predicted_cpi/simulated_cpi/matches; throughput takes
-            \"instr\" (a registry row name or wmma dtype key) and adds
-            cpi_1w/peak_ipc_milli/peak_ipc/warps_to_peak/points — the
-            model's extracted multi-warp curve; gemm takes no kernel
-            and adds rows (the whole-kernel sweep: per tile kernel the
-            simulated and replay-predicted cycles plus the match bit,
-            served from the hosted model's engine)
-  reload    {\"mode\": \"reload\", \"model\": \"<server-side path>\"}
-            atomically swaps the hosted model whose arch matches the
-            file (in-flight requests finish on the old model; new
-            connections and later requests see the new one).  The file
-            must host an already-served arch with matching cache
-            geometry, or the reload is rejected and the old model
-            keeps serving.  Adds arch/instructions/reloads on success.
-  metrics   {\"mode\": \"metrics\"} — serving-layer observability beyond
-            the byte-pinned \"stats\": warm_shards (per-shard hit/miss/
-            eviction/entry counts of the prediction cache — a skewed
-            shard is a key-distribution bug the aggregate hides),
-            admission_waits (connections that parked in the admission
-            queue) and reload_generation (successful reloads); the two
-            server-level numbers are null when no live server backs
-            the context.
-
-Binary frames (same values, length-prefixed):
-  frame     0xB1, u32 LE payload length (8 MiB max — same bound as a
-            JSON line), then the payload: one value as tagged fields —
-            0x00 null / 0x01 false / 0x02 true / 0x03 u64 LE /
-            0x04 i64 LE / 0x05 f64 LE bits / 0x06 string (u32 LE byte
-            length + UTF-8) / 0x07 array (u32 LE count, then elements)
-            / 0x08 object (u32 LE count, then untagged-key/value
-            pairs).  Responses to binary connections come back as
-            frames; decoded values match the JSON answers byte-for-
-            byte after canonical re-serialization.  A malformed
-            payload answers with an error frame and the connection
-            stays up; a bad magic or oversized length declaration
-            answers with an error frame, then the connection closes
-            (the stream can no longer be trusted to re-frame).
-
-BACKPRESSURE: each connection takes a slot (256) before serving; when
-all slots are busy it waits in a bounded admission queue (512 deep) up
-to 2s.  Deadline expiry or a full queue answers one JSON error line
-(\"ok\": false, \"error\": \"server at connection capacity…\") and closes —
-JSON even for would-be binary clients, since admission precedes the
-first byte of the stream.
-";
+/// The CLI help text, maintained as rendered documentation in
+/// `docs/USAGE.md` and compiled in verbatim so `repro -h` and the docs
+/// tree can never drift apart.
+const USAGE: &str = include_str!("../../docs/USAGE.md");
 
 struct Args {
     small: bool,
@@ -620,6 +416,15 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+        "mlp" => {
+            let rows =
+                microbench::mlp::run_mlp_sweep_with(&engine).map_err(anyhow::Error::msg)?;
+            if args.json {
+                println!("{}", to_string_pretty(&report::mlp_json(&rows)));
+            } else {
+                print!("{}", report::mlp(&rows));
+            }
+        }
         "gemm" => {
             let model = microbench::gemm::replay_model(&cfg);
             let rows = microbench::gemm::run_sweep_with(&engine, &model)
@@ -970,6 +775,7 @@ fn main() -> anyhow::Result<()> {
             let mut specs: Vec<ArchSpec> = Vec::new();
             let mut campaigns = Vec::new();
             let mut sweeps = Vec::new();
+            let mut mlps = Vec::new();
             let mut nextgens = Vec::new();
             for name in &names {
                 let spec = arch::get(name).map_err(anyhow::Error::msg)?;
@@ -986,6 +792,10 @@ fn main() -> anyhow::Result<()> {
                     microbench::throughput::run_sweep_with(&arch_engine, &counts)
                         .map_err(anyhow::Error::msg)?,
                 );
+                mlps.push(
+                    microbench::mlp::run_mlp_sweep_with(&arch_engine)
+                        .map_err(anyhow::Error::msg)?,
+                );
                 nextgens.push(
                     isa::run_families_with(&arch_engine).map_err(anyhow::Error::msg)?,
                 );
@@ -993,13 +803,14 @@ fn main() -> anyhow::Result<()> {
             }
             let results: Vec<report::ArchResults<'_>> = specs
                 .iter()
-                .zip(campaigns.iter().zip(sweeps.iter().zip(&nextgens)))
-                .map(|(s, (c, (t, ng)))| report::ArchResults {
+                .zip(campaigns.iter().zip(sweeps.iter().zip(mlps.iter().zip(&nextgens))))
+                .map(|(s, (c, (t, (m, ng))))| report::ArchResults {
                     arch: s.name(),
                     table5: c.table5.as_slice(),
                     table4: c.table4.as_slice(),
                     table3: c.table3.as_slice(),
                     throughput: t.as_slice(),
+                    mlp: m.as_slice(),
                     nextgen: ng.as_slice(),
                 })
                 .collect();

@@ -1,0 +1,246 @@
+//! Latency-vs-MLP sweep: Table IV's point latencies extended into
+//! per-level *saturation curves*.
+//!
+//! The paper measures each memory level with a fully dependent pointer
+//! chase — memory-level parallelism (MLP) of exactly 1, so the per
+//! access cost *is* the latency.  Real kernels keep K independent
+//! accesses in flight, and by Little's law the effective per-access
+//! cost then falls toward the level's *service* time (its bandwidth
+//! reciprocal):
+//!
+//! ```text
+//! per_access(K) = service + (latency − service) / K
+//! ```
+//!
+//! — at K = 1 the full latency (the Table IV anchor, measured live on
+//! the simulator through [`memory::measure_level_with`]); as K → ∞ the
+//! bandwidth ceiling `1 / service` from the spec's
+//! [`MemoryConfig`](crate::config::MemoryConfig) bandwidth fields (the
+//! same [`mem_service_cycles`] the multi-warp scheduler charges).  The
+//! curve is computed in integer milli-cycles, so it is exactly
+//! reproducible across the model, the serving layer and `repro
+//! compare`, and *provably* monotone non-increasing in K.
+//!
+//! The knee ([`MlpRow::knee_mlp`]) is the first swept degree achieving
+//! at least half the ceiling — `K ≥ latency/service − 1` — the
+//! occupancy a kernel needs before the level stops being
+//! latency-bound.  Shared memory additionally carries the bank
+//! conflict model: [`bank_conflict_ways`] maps a word stride to its
+//! serialization factor (`gcd(stride, 32)`, the paper's 32-bank
+//! layout; worst case 32×).
+
+use super::memory::{self, Level};
+use crate::config::{AmpereConfig, MemoryConfig};
+use crate::engine::Engine;
+use crate::sim::{mem_service_cycles, MemLevel, MemStep, ALL_MEM_LEVELS};
+
+/// The swept in-flight degrees: powers of two up to a full warp's
+/// worth of outstanding accesses.
+pub const DEFAULT_MLP_DEGREES: [u32; 6] = [1, 2, 4, 8, 16, 32];
+
+/// One point of a saturation curve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MlpPoint {
+    /// In-flight independent accesses.
+    pub mlp: u32,
+    /// Effective cost per access at this degree, in milli-cycles.
+    pub per_access_milli: u64,
+}
+
+impl MlpPoint {
+    /// Achieved bandwidth in milli-accesses-per-cycle.
+    pub fn bw_milli(&self) -> u64 {
+        1_000_000 / self.per_access_milli.max(1)
+    }
+}
+
+/// One memory level's saturation curve.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MlpRow {
+    /// The bandwidth-modelled level.
+    pub level: MemLevel,
+    /// Measured MLP = 1 latency — the live Table IV anchor.
+    pub latency: u64,
+    /// Per-access service cost in cycles from the spec's bandwidth
+    /// fields (the curve's asymptote is `1000 / service` milli
+    /// accesses per cycle).
+    pub service: u64,
+    /// Bandwidth ceiling in milli-accesses-per-cycle.
+    pub peak_bw_milli: u64,
+    /// First swept degree reaching ≥ half the ceiling (the largest
+    /// swept degree if the level never saturates within the sweep).
+    pub knee_mlp: u32,
+    /// The curve over [`DEFAULT_MLP_DEGREES`].
+    pub points: Vec<MlpPoint>,
+}
+
+impl Level {
+    /// The bandwidth-modelled level this Table IV row anchors.  Loads
+    /// and stores share the shared-memory channel.
+    pub fn mlp_level(self) -> MemLevel {
+        match self {
+            Level::Global => MemLevel::Global,
+            Level::L2 => MemLevel::L2,
+            Level::L1 => MemLevel::L1,
+            Level::SharedLoad | Level::SharedStore => MemLevel::Shared,
+        }
+    }
+}
+
+/// The Table IV row that anchors each bandwidth level's curve (shared
+/// memory anchors on the *load* latency, like the paper's Fig. 3).
+fn anchor(level: MemLevel) -> Level {
+    match level {
+        MemLevel::Global => Level::Global,
+        MemLevel::L2 => Level::L2,
+        MemLevel::L1 => Level::L1,
+        MemLevel::Shared => Level::SharedLoad,
+    }
+}
+
+/// Effective per-access cost (milli-cycles) at in-flight degree `mlp`:
+/// `service + (latency − service)/mlp`, integer milli arithmetic.
+/// Monotone non-increasing in `mlp` by construction.
+pub fn per_access_milli(latency: u64, service: u64, mlp: u32) -> u64 {
+    let service = service.max(1);
+    service * 1000 + latency.saturating_sub(service) * 1000 / mlp.max(1) as u64
+}
+
+/// Build one level's saturation curve from its measured anchor latency
+/// and the spec's bandwidth fields.
+pub fn saturation_row(level: MemLevel, latency: u64, m: &MemoryConfig) -> MlpRow {
+    let service = mem_service_cycles(m, MemStep { level, conflict_ways: 1 });
+    let points: Vec<MlpPoint> = DEFAULT_MLP_DEGREES
+        .iter()
+        .map(|&mlp| MlpPoint { mlp, per_access_milli: per_access_milli(latency, service, mlp) })
+        .collect();
+    let peak_bw_milli = 1_000_000 / (service.max(1) * 1000);
+    // Half the ceiling ⇔ per_access ≤ 2·service.
+    let knee_mlp = points
+        .iter()
+        .find(|p| p.per_access_milli <= 2 * service.max(1) * 1000)
+        .map(|p| p.mlp)
+        .unwrap_or_else(|| points.last().map(|p| p.mlp).unwrap_or(1));
+    MlpRow { level, latency, service, peak_bw_milli, knee_mlp, points }
+}
+
+/// Shared-memory bank-conflict serialization factor for a warp whose
+/// lanes access consecutive elements `stride` 4-byte words apart: with
+/// 32 banks, lane *i* hits bank `i·stride mod 32`, so `gcd(stride, 32)`
+/// lanes collide per bank.  Stride 0 (all lanes on one address) is the
+/// hardware's broadcast case — conflict free.
+pub fn bank_conflict_ways(stride_words: u64) -> u64 {
+    if stride_words == 0 {
+        return 1;
+    }
+    // gcd with the bank count; both arguments nonzero here.
+    let (mut a, mut b) = (stride_words % 32, 32u64);
+    if a == 0 {
+        return 32;
+    }
+    while b != 0 {
+        let t = b;
+        b = a % b;
+        a = t;
+    }
+    a
+}
+
+/// The full sweep (transient engine; see [`run_mlp_sweep_with`]).
+pub fn run_mlp_sweep(cfg: &AmpereConfig) -> Result<Vec<MlpRow>, String> {
+    run_mlp_sweep_with(&Engine::new(cfg.clone()))
+}
+
+/// Measure every level's MLP = 1 anchor live (one engine job per
+/// level, exactly the Table IV protocol), then extend each into its
+/// analytic saturation curve.  Row order follows [`ALL_MEM_LEVELS`].
+pub fn run_mlp_sweep_with(engine: &Engine) -> Result<Vec<MlpRow>, String> {
+    let jobs: Vec<_> = ALL_MEM_LEVELS
+        .into_iter()
+        .map(|level| move || memory::measure_level_with(engine, anchor(level)))
+        .collect();
+    let anchors: Vec<_> = engine
+        .run_all(jobs)
+        .into_iter()
+        .collect::<Result<Vec<_>, String>>()?;
+    let m = &engine.cfg().memory;
+    Ok(ALL_MEM_LEVELS
+        .into_iter()
+        .zip(anchors)
+        .map(|(level, res)| saturation_row(level, res.cpi, m))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_is_anchored_and_monotone() {
+        let m = MemoryConfig::default();
+        for level in ALL_MEM_LEVELS {
+            let lat = anchor(level).paper_cycles();
+            let row = saturation_row(level, lat, &m);
+            assert_eq!(
+                row.points[0].per_access_milli,
+                lat * 1000,
+                "{}: MLP=1 must equal the anchor exactly",
+                level.key()
+            );
+            for w in row.points.windows(2) {
+                assert!(
+                    w[1].per_access_milli <= w[0].per_access_milli,
+                    "{}: curve must not rise: {:?}",
+                    level.key(),
+                    row.points
+                );
+            }
+            assert!(row.points.last().unwrap().bw_milli() <= row.peak_bw_milli);
+        }
+    }
+
+    #[test]
+    fn a100_knees_match_littles_law() {
+        // K ≥ latency/service − 1: Global 290/32−1 ≈ 8.1 → 16;
+        // L2 200/16−1 = 11.5 → 16; L1 33/8−1 ≈ 3.1 → 4;
+        // shared 23/1−1 = 22 → 32.
+        let m = MemoryConfig::default();
+        let knee = |level: MemLevel| {
+            saturation_row(level, anchor(level).paper_cycles(), &m).knee_mlp
+        };
+        assert_eq!(knee(MemLevel::Global), 16);
+        assert_eq!(knee(MemLevel::L2), 16);
+        assert_eq!(knee(MemLevel::L1), 4);
+        assert_eq!(knee(MemLevel::Shared), 32);
+    }
+
+    #[test]
+    fn bank_conflicts_follow_the_gcd_rule() {
+        assert_eq!(bank_conflict_ways(1), 1); // consecutive words
+        assert_eq!(bank_conflict_ways(2), 2); // float2-style
+        assert_eq!(bank_conflict_ways(8), 8);
+        assert_eq!(bank_conflict_ways(32), 32); // column access: worst case
+        assert_eq!(bank_conflict_ways(33), 1); // padded column: conflict free
+        assert_eq!(bank_conflict_ways(0), 1); // broadcast
+        assert_eq!(bank_conflict_ways(48), 16);
+    }
+
+    #[test]
+    fn live_sweep_anchors_on_the_measured_table4_latencies() {
+        let engine = Engine::new(AmpereConfig::small());
+        let rows = run_mlp_sweep_with(&engine).unwrap();
+        assert_eq!(rows.len(), ALL_MEM_LEVELS.len());
+        let t4 = memory::run_table4_with(&engine).unwrap();
+        for row in &rows {
+            let anchor_cpi = t4
+                .iter()
+                .find(|r| r.level == anchor(row.level))
+                .unwrap()
+                .cpi;
+            assert_eq!(row.latency, anchor_cpi, "{} anchor drifted", row.level.key());
+            assert_eq!(row.points[0].per_access_milli, anchor_cpi * 1000);
+            assert!(row.points.len() == DEFAULT_MLP_DEGREES.len());
+            assert!(row.service >= 1 && row.knee_mlp >= 1);
+        }
+    }
+}

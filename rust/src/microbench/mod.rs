@@ -15,6 +15,7 @@ pub mod alu;
 pub mod gemm;
 pub mod insights;
 pub mod memory;
+pub mod mlp;
 pub mod registry;
 pub mod throughput;
 pub mod wmma;

@@ -313,6 +313,11 @@ pub enum Mode {
     /// warps-to-saturation and the swept points for a registry row name
     /// or WMMA dtype key (`"instr"`).
     Throughput,
+    /// Latency-vs-MLP saturation curve from the model for a memory
+    /// level key (`"instr"`: `l1` / `l2` / `global` / `shared`):
+    /// anchor latency, service cost, bandwidth ceiling, knee and the
+    /// full per-access curve.
+    Mlp,
     /// The whole-kernel GEMM sweep on the routed model's engine: every
     /// tile kernel simulated live and resolved through the predictor's
     /// protocol replay, with the per-kernel match verdicts.  Takes no
@@ -338,6 +343,7 @@ impl Mode {
             Mode::Simulate => "simulate",
             Mode::Check => "check",
             Mode::Throughput => "throughput",
+            Mode::Mlp => "mlp",
             Mode::Gemm => "gemm",
             Mode::Stats => "stats",
             Mode::Metrics => "metrics",
@@ -394,6 +400,7 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
         Some("simulate") => Mode::Simulate,
         Some("check") => Mode::Check,
         Some("throughput") => Mode::Throughput,
+        Some("mlp") => Mode::Mlp,
         Some("gemm") => Mode::Gemm,
         Some("stats") => Mode::Stats,
         Some("metrics") => Mode::Metrics,
@@ -444,6 +451,13 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
                 .to_string(),
         );
     }
+    if mode == Mode::Mlp && kernel.is_some() {
+        return Err(
+            "\"mlp\" serves the model's extracted saturation curves; pass a memory \
+             level key (l1, l2, global, shared) via \"instr\", not a raw kernel"
+                .to_string(),
+        );
+    }
     let dependent = match v.get("dependent") {
         None => false,
         Some(d) => d
@@ -457,6 +471,15 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
         // no-op default it is everywhere else.)
         return Err(
             "\"throughput\" curves are measured on the independent variant; \
+             \"dependent\": true does not apply"
+                .to_string(),
+        );
+    }
+    if dependent && mode == Mode::Mlp {
+        // The curve's whole point is varying the independence degree —
+        // a "dependent" MLP request is a contradiction in terms.
+        return Err(
+            "\"mlp\" curves sweep the independence degree themselves; \
              \"dependent\": true does not apply"
                 .to_string(),
         );
@@ -678,6 +701,29 @@ fn handle_inner(
                     ),
                 ))
         }
+        Mode::Mlp => {
+            let level = req.instr.as_deref().ok_or(
+                "mlp requests take \"instr\" (a memory level key: l1, l2, global, shared)",
+            )?;
+            let e = oracle.model().mlp_entry(level)?;
+            Ok(ok_response(id, Mode::Mlp)
+                .set("level", level)
+                .set("latency", e.latency)
+                .set("service", e.service)
+                .set("peak_bw_milli", e.peak_bw_milli)
+                .set("knee_mlp", e.knee_mlp)
+                .set(
+                    "points",
+                    Value::Arr(
+                        e.points
+                            .iter()
+                            .map(|(m, c)| {
+                                Value::obj().set("mlp", *m).set("per_access_milli", *c)
+                            })
+                            .collect(),
+                    ),
+                ))
+        }
         Mode::Gemm => {
             let rows =
                 crate::microbench::gemm::run_sweep_with(oracle.engine(), oracle.model())?;
@@ -722,11 +768,11 @@ pub fn handle_batch(
                         .map(|src| !oracle.is_prediction_cached(&src))
                         .unwrap_or(false),
                 },
-                // A throughput answer is a model lookup — cheaper than
-                // scheduling it; reload is a swap, not simulator work;
-                // metrics/stats read counters.
-                Mode::Throughput | Mode::Stats | Mode::Metrics | Mode::Ping
-                | Mode::Reload => false,
+                // A throughput or mlp answer is a model lookup —
+                // cheaper than scheduling it; reload is a swap, not
+                // simulator work; metrics/stats read counters.
+                Mode::Throughput | Mode::Mlp | Mode::Stats | Mode::Metrics
+                | Mode::Ping | Mode::Reload => false,
             }
         }
         Err(_) => false,
@@ -898,6 +944,9 @@ mod tests {
             r#"{"mode":"gemm","kernel":"x"}"#,              // sweep is generated
             r#"{"mode":"gemm","instr":"add.u32"}"#,         // sweep is generated
             r#"{"mode":"gemm","dependent":true}"#,          // flag n/a
+            r#"{"mode":"mlp"}"#,                            // needs instr
+            r#"{"mode":"mlp","kernel":"x"}"#,               // no raw kernels
+            r#"{"mode":"mlp","instr":"global","dependent":true}"#, // flag n/a
         ] {
             assert!(parse_request(&parse(bad).unwrap()).is_err(), "{bad}");
         }
@@ -907,6 +956,9 @@ mod tests {
         )
         .unwrap();
         assert_eq!(r.mode, Mode::Throughput);
+        let r = parse_request(&parse(r#"{"mode":"mlp","instr":"global"}"#).unwrap()).unwrap();
+        assert_eq!(r.mode, Mode::Mlp);
+        assert_eq!(r.instr.as_deref(), Some("global"));
         // An explicit `"dependent": false` stays the no-op default it
         // is for every other mode.
         assert!(parse_request(
@@ -946,5 +998,45 @@ mod tests {
             r#"{"mode":"throughput","instr":"div.u32"}"#,
         );
         assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+    }
+
+    #[test]
+    fn mlp_mode_serves_the_model_curve() {
+        use crate::config::AmpereConfig;
+        use crate::engine::Engine;
+        use crate::oracle::{serve::OracleSet, LatencyOracle};
+        use std::sync::Arc;
+
+        let oracle = LatencyOracle::with_engine(
+            crate::oracle::model::tiny_model(),
+            Engine::new(AmpereConfig::a100()),
+        );
+        let set = OracleSet::single(Arc::new(oracle));
+        let v = crate::oracle::serve::respond(
+            &set,
+            r#"{"mode":"mlp","instr":"global","id":11}"#,
+        );
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{v:?}");
+        assert_eq!(v.get("level").and_then(Value::as_str), Some("global"));
+        assert_eq!(v.get("latency").and_then(Value::as_u64), Some(290));
+        assert_eq!(v.get("service").and_then(Value::as_u64), Some(32));
+        assert_eq!(v.get("knee_mlp").and_then(Value::as_u64), Some(16));
+        assert_eq!(v.get("id").and_then(Value::as_u64), Some(11));
+        let points = v.get("points").and_then(Value::as_arr).unwrap();
+        assert_eq!(points.len(), 6);
+        assert_eq!(points[0].get("mlp").and_then(Value::as_u64), Some(1));
+        assert_eq!(
+            points[0].get("per_access_milli").and_then(Value::as_u64),
+            Some(290_000),
+            "MLP=1 serves the Table IV anchor exactly"
+        );
+
+        // An unknown level is an error naming the valid keys.
+        let v = crate::oracle::serve::respond(&set, r#"{"mode":"mlp","instr":"texture"}"#);
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+        assert!(
+            v.get("error").and_then(Value::as_str).unwrap().contains("global"),
+            "{v:?}"
+        );
     }
 }

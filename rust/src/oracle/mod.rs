@@ -40,7 +40,7 @@ pub mod serve;
 pub mod wire;
 
 pub use batch::{CacheCounters, LruCache, Mode, Request, ServeCtx, ShardedLru};
-pub use model::{InstrEntry, LatencyModel, NextGenEntry, ThroughputEntry, WmmaEntry};
+pub use model::{InstrEntry, LatencyModel, MlpEntry, NextGenEntry, ThroughputEntry, WmmaEntry};
 pub use predict::{InstrPrediction, Prediction, Resolution};
 pub use serve::{OracleSet, Server, ServerHandle, SharedOracleSet};
 

@@ -16,6 +16,9 @@
 //! * one [`ThroughputEntry`] per registry row and supported WMMA dtype
 //!   — the multi-warp sweep's `(peak_ipc, warps_to_peak)` pair plus the
 //!   full achieved-IPC curve (the `"throughput"` wire mode's answers);
+//! * one [`MlpEntry`] per bandwidth-modelled memory level — the
+//!   latency-vs-MLP saturation curve anchored on the live Table IV
+//!   measurement (the `"mlp"` wire mode's answers);
 //! * the protocol constants (clock overhead, instance count) and the
 //!   Table I cold-start curve.
 //!
@@ -74,6 +77,37 @@ pub struct ThroughputEntry {
     pub warps_to_peak: u32,
     /// `(warps, ipc_milli)` per swept count, in sweep order.
     pub points: Vec<(u32, u64)>,
+}
+
+/// One memory level's extracted latency-vs-MLP saturation curve (see
+/// [`crate::microbench::mlp`]): the measured MLP = 1 anchor, the
+/// spec-derived service cost, and the full per-access curve in integer
+/// milli-cycles (exact JSON round-trip).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpEntry {
+    /// Measured MLP = 1 latency — the live Table IV anchor.
+    pub latency: u64,
+    /// Per-access channel service cost in cycles.
+    pub service: u64,
+    /// Bandwidth ceiling in milli-accesses-per-cycle.
+    pub peak_bw_milli: u64,
+    /// First swept degree reaching ≥ half the ceiling.
+    pub knee_mlp: u32,
+    /// `(mlp, per_access_milli)` per swept degree, in sweep order.
+    pub points: Vec<(u32, u64)>,
+}
+
+impl MlpEntry {
+    /// Distill a sweep row into its model entry.
+    pub fn from_row(row: &crate::microbench::mlp::MlpRow) -> MlpEntry {
+        MlpEntry {
+            latency: row.latency,
+            service: row.service,
+            peak_bw_milli: row.peak_bw_milli,
+            knee_mlp: row.knee_mlp,
+            points: row.points.iter().map(|p| (p.mlp, p.per_access_milli)).collect(),
+        }
+    }
 }
 
 /// One next-gen instruction family's extracted timing (the two-sided
@@ -141,6 +175,12 @@ pub struct LatencyModel {
     /// before the throughput engine (parsed leniently); re-extract to
     /// populate.
     pub throughput: BTreeMap<String, ThroughputEntry>,
+    /// Latency-vs-MLP saturation curves keyed by
+    /// [`MemLevel::key`](crate::sim::MemLevel::key) (`l1` / `l2` /
+    /// `global` / `shared`) — what the serving layer's `"mlp"` mode
+    /// answers from.  Empty in models saved before the MLP engine
+    /// (parsed leniently); re-extract to populate.
+    pub mlp: BTreeMap<String, MlpEntry>,
     /// Next-gen instruction-family timings keyed by family key
     /// (`cp_async`, `tma`, `wgmma`, `dsmem`) — only families the
     /// extraction architecture has.  Empty in models saved before the
@@ -172,6 +212,11 @@ impl LatencyModel {
                     points: row.points.iter().map(|p| (p.warps, p.ipc_milli)).collect(),
                 },
             );
+        }
+        for row in crate::microbench::mlp::run_mlp_sweep_with(engine)? {
+            model
+                .mlp
+                .insert(row.level.key().to_string(), MlpEntry::from_row(&row));
         }
         for row in crate::isa::run_families_with(engine)? {
             if !row.available {
@@ -268,7 +313,25 @@ impl LatencyModel {
             memory,
             wmma,
             throughput: BTreeMap::new(),
+            mlp: BTreeMap::new(),
             nextgen: BTreeMap::new(),
+        })
+    }
+
+    /// The saturation curve for a memory-level key (`l1` / `l2` /
+    /// `global` / `shared`), or an error that says how to get one.
+    pub fn mlp_entry(&self, level: &str) -> Result<&MlpEntry, String> {
+        self.mlp.get(level).ok_or_else(|| {
+            if self.mlp.is_empty() {
+                "model carries no MLP table (extracted before the memory-level-\
+                 parallelism engine); re-run `repro extract-model`"
+                    .to_string()
+            } else {
+                format!(
+                    "no MLP entry for {level:?} (levels: {})",
+                    self.mlp.keys().cloned().collect::<Vec<_>>().join(", ")
+                )
+            }
         })
     }
 
@@ -406,6 +469,28 @@ impl LatencyModel {
                     ),
             );
         }
+        let mut mlp = BTreeMap::new();
+        for (k, e) in &self.mlp {
+            mlp.insert(
+                k.clone(),
+                Value::obj()
+                    .set("latency", e.latency)
+                    .set("service", e.service)
+                    .set("peak_bw_milli", e.peak_bw_milli)
+                    .set("knee_mlp", e.knee_mlp)
+                    .set(
+                        "points",
+                        Value::Arr(
+                            e.points
+                                .iter()
+                                .map(|(m, c)| {
+                                    Value::Arr(vec![Value::from(*m), Value::from(*c)])
+                                })
+                                .collect(),
+                        ),
+                    ),
+            );
+        }
         let mut nextgen = BTreeMap::new();
         for (k, e) in &self.nextgen {
             let issue = e.issue_cpi.map(Value::from).unwrap_or(Value::Null);
@@ -437,6 +522,7 @@ impl LatencyModel {
             .set("memory", Value::Obj(mem))
             .set("wmma", Value::Obj(wmma))
             .set("throughput", Value::Obj(throughput))
+            .set("mlp", Value::Obj(mlp))
             .set("nextgen", Value::Obj(nextgen))
     }
 
@@ -549,6 +635,40 @@ impl LatencyModel {
             }
         }
 
+        // Lenient for the same reason: models saved before the MLP
+        // engine have no "mlp" object and load with an empty map (the
+        // lookup error then points at re-extraction).
+        let mut mlp = BTreeMap::new();
+        if let Some(mmap) = v.get("mlp").and_then(Value::as_obj) {
+            for (key, e) in mmap {
+                let points = e
+                    .get("points")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| format!("model json: bad mlp points for {key}"))?
+                    .iter()
+                    .map(|p| {
+                        let m = p.idx(0).and_then(Value::as_u64);
+                        let c = p.idx(1).and_then(Value::as_u64);
+                        match (m, c) {
+                            (Some(m), Some(c)) => Ok((m as u32, c)),
+                            _ => Err(format!("model json: bad mlp point in {key}")),
+                        }
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                mlp.insert(
+                    key.clone(),
+                    MlpEntry {
+                        latency: need_u64(e, "latency")
+                            .map_err(|err| format!("{err} (in mlp.{key})"))?,
+                        service: need_u64(e, "service")?,
+                        peak_bw_milli: need_u64(e, "peak_bw_milli")?,
+                        knee_mlp: need_u64(e, "knee_mlp")? as u32,
+                        points,
+                    },
+                );
+            }
+        }
+
         // Lenient for the same reason: models saved before the next-gen
         // ISA subsystem have no "nextgen" object and load with an empty
         // map (the lookup error then points at re-extraction).
@@ -597,6 +717,7 @@ impl LatencyModel {
             memory,
             wmma,
             throughput,
+            mlp,
             nextgen,
         })
     }
@@ -690,6 +811,17 @@ pub(crate) fn tiny_model() -> LatencyModel {
                 sass: "LDGSTS.E.128".into(),
             },
         );
+        let mut mlp = BTreeMap::new();
+        let mem_defaults = crate::config::MemoryConfig::default();
+        for (level, lat) in [
+            (crate::sim::MemLevel::Global, 290u64),
+            (crate::sim::MemLevel::L2, 200),
+            (crate::sim::MemLevel::L1, 33),
+            (crate::sim::MemLevel::Shared, 23),
+        ] {
+            let row = crate::microbench::mlp::saturation_row(level, lat, &mem_defaults);
+            mlp.insert(level.key().to_string(), MlpEntry::from_row(&row));
+        }
         LatencyModel {
             arch: "ampere".into(),
             l1_bytes: 128 * 1024,
@@ -702,6 +834,7 @@ pub(crate) fn tiny_model() -> LatencyModel {
             memory,
             wmma,
             throughput,
+            mlp,
             nextgen,
         }
 }
@@ -779,6 +912,42 @@ mod tests {
         assert!(legacy.throughput.is_empty());
         let err = legacy.throughput_entry("add.u32").unwrap_err();
         assert!(err.contains("extract-model"), "{err}");
+    }
+
+    #[test]
+    fn mlp_entries_round_trip_and_miss_helpfully() {
+        let m = tiny_model();
+        let e = m.mlp_entry("global").unwrap();
+        assert_eq!((e.latency, e.service), (290, 32));
+        assert_eq!(e.points.len(), 6);
+        assert_eq!(e.points[0], (1, 290_000), "MLP=1 is the Table IV anchor");
+        assert!(e.points.windows(2).all(|w| w[1].1 <= w[0].1));
+
+        // Full JSON identity including the curves.
+        let back = LatencyModel::from_json_str(&m.to_json_string()).unwrap();
+        assert_eq!(back, m);
+
+        // Unknown level: error lists the model's levels.
+        let err = m.mlp_entry("texture").unwrap_err();
+        assert!(err.contains("global"), "{err}");
+
+        // A pre-MLP model (no "mlp" object) still loads, and its
+        // lookup error points at re-extraction.
+        let mut v = m.to_json();
+        if let Value::Obj(map) = &mut v {
+            map.remove("mlp");
+        }
+        let legacy = LatencyModel::from_json_str(&to_string_pretty(&v)).unwrap();
+        assert!(legacy.mlp.is_empty());
+        let err = legacy.mlp_entry("global").unwrap_err();
+        assert!(err.contains("extract-model"), "{err}");
+
+        // Malformed entries are rejected with the level named.
+        let bad = m
+            .to_json_string()
+            .replace("\"latency\": 290", "\"latency\": \"chasm\"");
+        let err = LatencyModel::from_json_str(&bad).unwrap_err();
+        assert!(err.contains("mlp.global"), "{err}");
     }
 
     #[test]

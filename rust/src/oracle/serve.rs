@@ -32,10 +32,12 @@
 //! ```text
 //! {"id": 7,                  echoed verbatim in the response
 //!  "mode": "predict",        predict | simulate | check | throughput |
-//!                            gemm | stats | metrics | ping | reload
+//!                            mlp | gemm | stats | metrics | ping | reload
 //!  "kernel": "<PTX source>", raw kernel to analyse, or
 //!  "instr": "add.u32",       a Table V registry row name (for
-//!                            "throughput" also a wmma dtype key)
+//!                            "throughput" also a wmma dtype key; for
+//!                            "mlp" a memory level key: l1 | l2 |
+//!                            global | shared)
 //!  "dependent": true,        with "instr": the dependent-chain variant
 //!  "arch": "turing",         route to a hosted model (multi-model
 //!                            serving; absent -> the default model)
@@ -48,7 +50,9 @@
 //! `unresolved` and `cached`; `simulate` adds `cpi`, `delta`, `n`,
 //! `mapping`; `check` adds `predicted_cpi`, `simulated_cpi`, `matches`;
 //! `throughput` adds `cpi_1w`, `peak_ipc_milli`, `peak_ipc`,
-//! `warps_to_peak` and the swept `points`; `gemm` (no kernel — the
+//! `warps_to_peak` and the swept `points`; `mlp` adds `level`,
+//! `latency`, `service`, `peak_bw_milli`, `knee_mlp` and the swept
+//! `points` (`mlp`, `per_access_milli`); `gemm` (no kernel — the
 //! whole-kernel GEMM sweep on the routed model's engine) adds `rows`
 //! (per tile kernel: simulated vs replay-predicted cycles and the
 //! match bit) and the aggregate `matches`; `reload` adds `arch`,

@@ -5,6 +5,7 @@ use crate::microbench::alu::{Amortization, DepIndep, RowResult};
 use crate::microbench::gemm::GemmRow;
 use crate::microbench::insights::{Fig4, Insight1, Insight3, SignPair};
 use crate::microbench::memory::MemResult;
+use crate::microbench::mlp::MlpRow;
 use crate::microbench::throughput::ThroughputRow;
 use crate::microbench::wmma::WmmaResult;
 use crate::microbench::MatchGrade;
@@ -239,6 +240,50 @@ pub fn throughput(rows: &[ThroughputRow]) -> String {
     )
 }
 
+/// `repro mlp`: per-level latency-vs-MLP saturation curves — the
+/// measured Table IV anchor, the spec-derived service cost, the
+/// bandwidth ceiling and the per-access cost at every swept degree
+/// (milli-cycle integers, rendered through the same exact encoding as
+/// IPC).
+pub fn mlp(rows: &[MlpRow]) -> String {
+    let degrees: Vec<u32> = rows
+        .first()
+        .map(|r| r.points.iter().map(|p| p.mlp).collect())
+        .unwrap_or_default();
+    let mut headers: Vec<String> = vec![
+        "level".into(),
+        "latency".into(),
+        "service".into(),
+        "peak bw".into(),
+        "knee".into(),
+    ];
+    for d in &degrees {
+        headers.push(format!("cyc@{d}"));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut cells = vec![
+                r.level.key().to_string(),
+                r.latency.to_string(),
+                r.service.to_string(),
+                ipc_milli(r.peak_bw_milli),
+                r.knee_mlp.to_string(),
+            ];
+            for p in &r.points {
+                cells.push(ipc_milli(p.per_access_milli));
+            }
+            cells
+        })
+        .collect();
+    render_table(
+        "MLP — per-access cycles vs memory-level parallelism (bw in accesses/cycle)",
+        &header_refs,
+        &body,
+    )
+}
+
 pub fn fig4(f: &Fig4) -> String {
     render_table(
         "Fig. 4 — clock register width",
@@ -305,6 +350,10 @@ pub struct ArchResults<'a> {
     /// architecture lacks comes back `available: false` and renders as
     /// "-").  Pass an empty slice to omit the cross-arch family table.
     pub nextgen: &'a [crate::isa::NextGenMeasurement],
+    /// Latency-vs-MLP saturation rows (aligned by level key; a level an
+    /// architecture lacks renders as "-"/null).  Pass an empty slice to
+    /// omit the cross-arch bandwidth table.
+    pub mlp: &'a [MlpRow],
 }
 
 /// Deltas are reported against the first (baseline) architecture.
@@ -458,6 +507,58 @@ pub fn compare(results: &[ArchResults<'_>]) -> String {
         ));
     }
 
+    if results.iter().all(|r| !r.mlp.is_empty()) {
+        let mut mlp_headers: Vec<String> = vec!["level".into()];
+        for r in results {
+            mlp_headers.push(format!("lat@{}", r.arch));
+        }
+        for r in results {
+            mlp_headers.push(format!("bw@{}", r.arch));
+        }
+        for r in results {
+            mlp_headers.push(format!("knee@{}", r.arch));
+        }
+        let mlp_header_refs: Vec<&str> = mlp_headers.iter().map(String::as_str).collect();
+        let mlp_rows: Vec<Vec<String>> = base
+            .mlp
+            .iter()
+            .map(|row| {
+                let find = |r: &ArchResults<'_>| {
+                    r.mlp.iter().find(|m| m.level == row.level)
+                };
+                let mut cells = vec![row.level.key().to_string()];
+                for r in results {
+                    cells.push(
+                        find(r)
+                            .map(|m| m.latency.to_string())
+                            .unwrap_or_else(|| "-".to_string()),
+                    );
+                }
+                for r in results {
+                    cells.push(
+                        find(r)
+                            .map(|m| ipc_milli(m.peak_bw_milli))
+                            .unwrap_or_else(|| "-".to_string()),
+                    );
+                }
+                for r in results {
+                    cells.push(
+                        find(r)
+                            .map(|m| m.knee_mlp.to_string())
+                            .unwrap_or_else(|| "-".to_string()),
+                    );
+                }
+                cells
+            })
+            .collect();
+        out.push_str(&render_table(
+            "Cross-arch MLP — anchor latency, bandwidth ceiling (accesses/cycle) & \
+             saturation knee ('-' = level absent)",
+            &mlp_header_refs,
+            &mlp_rows,
+        ));
+    }
+
     if results.iter().all(|r| !r.nextgen.is_empty()) {
         let mut ng_headers: Vec<String> = vec!["family".into(), "PTX".into()];
         for r in results {
@@ -599,6 +700,41 @@ pub fn compare_json(results: &[ArchResults<'_>]) -> Value {
         Vec::new()
     };
 
+    // Cross-arch bandwidth/saturation table, aligned by level key; an
+    // arch without the level answers null (empty slices → []).
+    let mlp: Vec<Value> = if results.iter().all(|r| !r.mlp.is_empty()) {
+        base.mlp
+            .iter()
+            .map(|row| {
+                let mut lat = Value::obj();
+                let mut bw = Value::obj();
+                let mut knee = Value::obj();
+                for r in results {
+                    let entry = r.mlp.iter().find(|m| m.level == row.level);
+                    lat = lat.set(
+                        r.arch,
+                        entry.map(|m| Value::from(m.latency)).unwrap_or(Value::Null),
+                    );
+                    bw = bw.set(
+                        r.arch,
+                        entry.map(|m| Value::from(m.peak_bw_milli)).unwrap_or(Value::Null),
+                    );
+                    knee = knee.set(
+                        r.arch,
+                        entry.map(|m| Value::from(m.knee_mlp)).unwrap_or(Value::Null),
+                    );
+                }
+                Value::obj()
+                    .set("level", row.level.key())
+                    .set("latency", lat)
+                    .set("peak_bw_milli", bw)
+                    .set("knee_mlp", knee)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
     // Cross-arch next-gen family table, aligned by family key; an arch
     // without the family answers null for every number (empty slices →
     // []).
@@ -645,6 +781,7 @@ pub fn compare_json(results: &[ArchResults<'_>]) -> Value {
         .set("table4", Value::Arr(table4))
         .set("wmma", Value::Arr(wmma))
         .set("throughput", Value::Arr(throughput))
+        .set("mlp", Value::Arr(mlp))
         .set("nextgen", Value::Arr(nextgen))
 }
 
@@ -749,6 +886,35 @@ pub fn throughput_json(rows: &[ThroughputRow]) -> Value {
                                         .set("cycles", p.cycles)
                                         .set("instructions", p.instructions)
                                         .set("ipc_milli", p.ipc_milli)
+                                })
+                                .collect(),
+                        ),
+                    )
+            })
+            .collect(),
+    )
+}
+
+pub fn mlp_json(rows: &[MlpRow]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                Value::obj()
+                    .set("level", r.level.key())
+                    .set("latency", r.latency)
+                    .set("service", r.service)
+                    .set("peak_bw_milli", r.peak_bw_milli)
+                    .set("knee_mlp", r.knee_mlp)
+                    .set(
+                        "points",
+                        Value::Arr(
+                            r.points
+                                .iter()
+                                .map(|p| {
+                                    Value::obj()
+                                        .set("mlp", p.mlp)
+                                        .set("per_access_milli", p.per_access_milli)
+                                        .set("bw_milli", p.bw_milli())
                                 })
                                 .collect(),
                         ),
@@ -886,6 +1052,34 @@ mod tests {
             row.get("points").unwrap().idx(1).unwrap().get("ipc_milli").unwrap().as_u64(),
             Some(480)
         );
+    }
+
+    #[test]
+    fn mlp_rendering_and_json_share_the_milli_encoding() {
+        use crate::config::MemoryConfig;
+        use crate::microbench::mlp::saturation_row;
+        use crate::sim::MemLevel;
+
+        let m = MemoryConfig::default();
+        let rows = vec![
+            saturation_row(MemLevel::Global, 290, &m),
+            saturation_row(MemLevel::Shared, 23, &m),
+        ];
+        let text = mlp(&rows);
+        for needle in ["level", "global", "shared", "cyc@1", "cyc@32", "290.000", "knee"] {
+            assert!(text.contains(needle), "{needle} missing:\n{text}");
+        }
+
+        let v = mlp_json(&rows);
+        let row = v.idx(0).unwrap();
+        assert_eq!(row.get("level").unwrap().as_str(), Some("global"));
+        assert_eq!(row.get("latency").unwrap().as_u64(), Some(290));
+        assert_eq!(row.get("service").unwrap().as_u64(), Some(32));
+        let p0 = row.get("points").unwrap().idx(0).unwrap();
+        assert_eq!(p0.get("mlp").unwrap().as_u64(), Some(1));
+        assert_eq!(p0.get("per_access_milli").unwrap().as_u64(), Some(290_000));
+        // bandwidth is the reciprocal in milli-accesses/cycle
+        assert_eq!(p0.get("bw_milli").unwrap().as_u64(), Some(1_000_000 / 290_000));
     }
 
     #[test]

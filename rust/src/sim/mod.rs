@@ -26,13 +26,19 @@
 //! A third half arrived with the throughput engine:
 //! * [`throughput`] — the deterministic *multi-warp* scheduler: N
 //!   resident warps replaying a recorded single-warp issue schedule
-//!   round-robin over per-pipe issue ports, reporting achieved IPC vs.
-//!   warp count.  The 1-warp replay is byte-identical to the latency
-//!   path by construction (pinned over the whole Table V registry).
+//!   round-robin over per-pipe issue ports **and per-level memory
+//!   bandwidth channels** (with shared-memory bank-conflict
+//!   serialization), reporting achieved IPC vs. warp count.  The
+//!   1-warp replay is byte-identical to the latency path by
+//!   construction (pinned over the whole Table V registry) — memory
+//!   channels charge only under multi-warp contention.
 
 pub mod core;
 pub mod exec;
 pub mod throughput;
 
 pub use self::core::{RunResult, Simulator};
-pub use self::throughput::{ThroughputRun, WarpScheduler, WarpTrace};
+pub use self::throughput::{
+    mem_service_cycles, MemLevel, MemStep, ThroughputRun, WarpScheduler, WarpTrace,
+    ALL_MEM_LEVELS,
+};

@@ -38,6 +38,24 @@
 //! this for every Table V registry row, which is what lets the existing
 //! golden/conformance/fuzz gates keep passing unchanged.
 //!
+//! ## Memory-level parallelism
+//!
+//! Beyond issue ports, memory instructions contend for per-level
+//! *bandwidth*: each [`MemLevel`] owns one service channel whose cost
+//! per warp access derives from the spec's
+//! [`MemoryConfig`](crate::config::MemoryConfig) bandwidth fields
+//! (`32 lanes × sector_bytes ÷ <level>_bytes_per_cycle`, see
+//! [`mem_service_cycles`]), and shared-memory accesses additionally
+//! serialize by their bank-conflict factor
+//! ([`MemStep::conflict_ways`] — 32-way conflict = 32× service, the
+//! paper's worst case).  [`WarpTrace::from_trace`] classifies every
+//! LSU window instruction into its level from the recorded mnemonic
+//! and result latency, and [`WarpScheduler::run`] charges the channel
+//! **only when more than one warp is resident** — with one warp the
+//! recorded gaps already contain the full memory latency, so charging
+//! service again would double-count and break the 1-warp anchor.  The
+//! anchor therefore stays byte-identical by construction.
+//!
 //! ## Reported metric
 //!
 //! IPC is counted in *PTX* instructions (the unit the paper's CPI
@@ -50,12 +68,122 @@
 //! (reports, the oracle model, the serving layer, `repro compare`)
 //! round-trips them exactly.
 
-use crate::config::{AmpereConfig, Pipe, ALL_PIPES};
+use crate::config::{AmpereConfig, MemoryConfig, Pipe, ALL_PIPES};
 use crate::sass::TraceRecorder;
 use std::collections::VecDeque;
 
 fn pipe_idx(p: Pipe) -> usize {
     ALL_PIPES.iter().position(|q| *q == p).unwrap()
+}
+
+/// A memory level whose bandwidth the multi-warp replay models as one
+/// shared service channel.  The latency side (Table IV) distinguishes
+/// shared loads from shared stores; for bandwidth both draw on the
+/// same banked SRAM, so they share the [`MemLevel::Shared`] channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemLevel {
+    /// L1 data cache hits.
+    L1,
+    /// L2 cache hits (L1 miss).
+    L2,
+    /// DRAM / global memory (both cache levels missed or bypassed).
+    Global,
+    /// Shared memory (banked SRAM; loads and stores).
+    Shared,
+}
+
+/// Every bandwidth-modelled level, in report order.
+pub const ALL_MEM_LEVELS: [MemLevel; 4] = [
+    MemLevel::L1,
+    MemLevel::L2,
+    MemLevel::Global,
+    MemLevel::Shared,
+];
+
+impl MemLevel {
+    /// Stable wire/model key — used by `LatencyModel`'s `mlp` section,
+    /// the oracle's `"mlp"` mode and `repro compare`.
+    pub fn key(self) -> &'static str {
+        match self {
+            MemLevel::L1 => "l1",
+            MemLevel::L2 => "l2",
+            MemLevel::Global => "global",
+            MemLevel::Shared => "shared",
+        }
+    }
+
+    /// Inverse of [`MemLevel::key`].
+    pub fn from_key(key: &str) -> Option<MemLevel> {
+        ALL_MEM_LEVELS.iter().copied().find(|l| l.key() == key)
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            MemLevel::L1 => 0,
+            MemLevel::L2 => 1,
+            MemLevel::Global => 2,
+            MemLevel::Shared => 3,
+        }
+    }
+}
+
+/// Memory-hierarchy classification of one LSU window instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemStep {
+    /// The level whose channel the access occupies.
+    pub level: MemLevel,
+    /// Shared-memory bank-conflict serialization factor: 1 is conflict
+    /// free, 32 means all lanes hit one bank and the access replays 32
+    /// times (the paper's worst case).  Always 1 for cache/DRAM levels
+    /// — sector coalescing is captured by `sector_bytes` instead.
+    pub conflict_ways: u64,
+}
+
+/// Cycles `step`'s level channel is busy serving one warp access.
+///
+/// Cache/DRAM levels: a warp touches `32 × sector_bytes` bytes, the
+/// level drains `<level>_bytes_per_cycle` of them per cycle.  Shared
+/// memory: the banked SRAM delivers `shared_banks × shared_bank_bytes`
+/// bytes per cycle against a 128-byte (32 lanes × 4 B) warp access,
+/// then replays `conflict_ways` times.  Defaults give 8 (L1), 16 (L2),
+/// 32 (DRAM) and `1 × conflict_ways` (shared) on the A100 spec.
+pub fn mem_service_cycles(m: &MemoryConfig, step: MemStep) -> u64 {
+    let base = level_base_cycles(m, step.level);
+    match step.level {
+        MemLevel::Shared => base * step.conflict_ways.max(1),
+        _ => base,
+    }
+}
+
+fn level_base_cycles(m: &MemoryConfig, level: MemLevel) -> u64 {
+    let warp_bytes = 32 * m.sector_bytes.max(1);
+    let per = |bpc: u64| (warp_bytes / bpc.max(1)).max(1);
+    match level {
+        MemLevel::L1 => per(m.l1_bytes_per_cycle),
+        MemLevel::L2 => per(m.l2_bytes_per_cycle),
+        MemLevel::Global => per(m.dram_bytes_per_cycle),
+        MemLevel::Shared => {
+            let row = m.shared_banks.max(1) * m.shared_bank_bytes.max(1);
+            ((128 + row - 1) / row).max(1)
+        }
+    }
+}
+
+fn classify_lsu(mnemonic: &str, result_latency: u64, m: &MemoryConfig) -> MemStep {
+    // Shared memory is recognizable from the opcode; cache level is
+    // not encoded in SASS, so it is recovered from the recorded result
+    // latency against the spec's own per-level hit latencies (a cold
+    // extra only pushes the latency *up*, never below its level).
+    let level = if mnemonic.starts_with("LDS") || mnemonic.starts_with("STS") {
+        MemLevel::Shared
+    } else if result_latency >= m.dram_latency {
+        MemLevel::Global
+    } else if result_latency >= m.l2_hit_latency {
+        MemLevel::L2
+    } else {
+        MemLevel::L1
+    };
+    MemStep { level, conflict_ways: 1 }
 }
 
 /// One window instruction of a warp's recorded issue schedule.
@@ -70,6 +198,10 @@ pub struct TraceStep {
     /// dependencies, result latencies, memory service times and
     /// cold-start effects.
     pub gap: u64,
+    /// Memory-level classification for LSU instructions (`None` for
+    /// compute pipes).  Drives the multi-warp bandwidth charge; the
+    /// 1-warp replay ignores it.
+    pub mem: Option<MemStep>,
 }
 
 /// A warp's distilled issue schedule for one measured clock window.
@@ -115,10 +247,20 @@ impl WarpTrace {
         let mut ptx_instrs = 0u64;
         let mut prev_ptx = None;
         for e in window {
+            let mem = if e.pipe == Pipe::Lsu {
+                Some(classify_lsu(
+                    e.mnemonic,
+                    e.retired.saturating_sub(e.issued),
+                    &cfg.memory,
+                ))
+            } else {
+                None
+            };
             steps.push(TraceStep {
                 pipe: e.pipe,
                 occupancy: e.occupancy,
                 gap: e.issued - prev,
+                mem,
             });
             prev = e.issued;
             if prev_ptx != Some(e.ptx_idx) {
@@ -162,6 +304,12 @@ pub struct WarpScheduler {
     /// Per-pipe, per-port next-free times.
     port_free: Vec<Vec<u64>>,
     issue_width: usize,
+    /// Per-[`MemLevel`] base service cost in cycles for one warp
+    /// access (the Shared entry is the per-conflict-way cost),
+    /// precomputed from the spec's bandwidth fields.
+    mem_service: [u64; 4],
+    /// Per-[`MemLevel`] next-free time of the level's service channel.
+    mem_free: [u64; 4],
     // Reusable per-run state.
     prev_issue: Vec<u64>,
     step: Vec<usize>,
@@ -174,9 +322,15 @@ impl WarpScheduler {
             .iter()
             .map(|p| vec![0u64; cfg.pipe(*p).ports.max(1) as usize])
             .collect();
+        let mut mem_service = [0u64; 4];
+        for level in ALL_MEM_LEVELS {
+            mem_service[level.idx()] = level_base_cycles(&cfg.memory, level);
+        }
         Self {
             port_free,
             issue_width: cfg.issue_width.max(1) as usize,
+            mem_service,
+            mem_free: [0; 4],
             prev_issue: Vec::new(),
             step: Vec::new(),
             recent: VecDeque::new(),
@@ -192,6 +346,7 @@ impl WarpScheduler {
                 *t = 0;
             }
         }
+        self.mem_free = [0; 4];
         self.prev_issue.clear();
         self.step.clear();
         self.recent.clear();
@@ -208,6 +363,12 @@ impl WarpScheduler {
         self.reset();
         self.prev_issue.resize(w, 0);
         self.step.resize(w, 0);
+
+        // Memory bandwidth binds only under contention: the single-warp
+        // gaps already carry the full memory latency, so charging the
+        // channel again with one warp would double-count — and would
+        // break the 1-warp anchor's byte-identity with the latency path.
+        let mlp_active = w > 1;
 
         let mut remaining = w * steps.len();
         let mut last_warp = w - 1; // the round-robin scan starts at warp 0
@@ -233,7 +394,14 @@ impl WarpScheduler {
                     .copied()
                     .min()
                     .unwrap_or(0);
-                let t = (self.prev_issue[wi] + st.gap).max(port_min).max(sched_free);
+                let mem_min = match st.mem {
+                    Some(ms) if mlp_active => self.mem_free[ms.level.idx()],
+                    _ => 0,
+                };
+                let t = (self.prev_issue[wi] + st.gap)
+                    .max(port_min)
+                    .max(sched_free)
+                    .max(mem_min);
                 if t < best_t {
                     best_t = t;
                     best_w = wi;
@@ -249,6 +417,18 @@ impl WarpScheduler {
                 }
             }
             ports[pi] = best_t + st.occupancy;
+            // Occupy the level's service channel (bank conflicts
+            // multiply the shared-memory service time).
+            if mlp_active {
+                if let Some(ms) = st.mem {
+                    let li = ms.level.idx();
+                    let service = match ms.level {
+                        MemLevel::Shared => self.mem_service[li] * ms.conflict_ways.max(1),
+                        _ => self.mem_service[li],
+                    };
+                    self.mem_free[li] = best_t + service;
+                }
+            }
             // Consume a scheduler slot.
             self.recent.push_back(best_t);
             if self.recent.len() > self.issue_width {
@@ -267,7 +447,8 @@ impl WarpScheduler {
             .flat_map(|p| p.iter().copied())
             .max()
             .unwrap_or(0);
-        let cycles = last_marker.max(port_drain).max(1);
+        let mem_drain = self.mem_free.iter().copied().max().unwrap_or(0);
+        let cycles = last_marker.max(port_drain).max(mem_drain).max(1);
         let instructions = w as u64 * trace.ptx_instrs;
         ThroughputRun {
             warps: w as u32,
@@ -398,6 +579,120 @@ mod tests {
         assert_eq!(wt.ptx_instrs, 3);
         assert_eq!(wt.cpi_1w, (delta - 2) / 3);
         assert_eq!(wt.cpi_1w, 2, "add.u32 indep CPI is the paper's 2");
+    }
+
+    #[test]
+    fn lsu_steps_are_classified_into_their_memory_level() {
+        let cfg = AmpereConfig::a100();
+        let mut t = TraceRecorder::new();
+        t.record_issue(0, "CS2R", 2, 2, Pipe::Special, 2, true);
+        t.record_issue(1, "LDS", 4, 27, Pipe::Lsu, 2, false); // shared load
+        t.record_issue(2, "STS", 6, 25, Pipe::Lsu, 2, false); // shared store
+        t.record_issue(3, "LDG.E", 8, 41, Pipe::Lsu, 2, false); // 33 → L1
+        t.record_issue(4, "LDG.E", 10, 210, Pipe::Lsu, 2, false); // 200 → L2
+        t.record_issue(5, "LDG.E.STRONG", 12, 302, Pipe::Lsu, 2, false); // 290 → DRAM
+        t.record_issue(6, "IADD", 14, 18, Pipe::Int, 2, false);
+        t.record_issue(7, "CS2R", 320, 320, Pipe::Special, 2, true);
+        let wt = WarpTrace::from_trace(&t, &cfg).unwrap();
+        let levels: Vec<_> = wt.steps.iter().map(|s| s.mem.map(|m| m.level)).collect();
+        assert_eq!(
+            levels,
+            vec![
+                Some(MemLevel::Shared),
+                Some(MemLevel::Shared),
+                Some(MemLevel::L1),
+                Some(MemLevel::L2),
+                Some(MemLevel::Global),
+                None,
+            ]
+        );
+        assert!(wt
+            .steps
+            .iter()
+            .filter_map(|s| s.mem)
+            .all(|m| m.conflict_ways == 1));
+    }
+
+    #[test]
+    fn service_cycles_follow_the_spec_bandwidths() {
+        let m = crate::config::MemoryConfig::default();
+        let one = |level| mem_service_cycles(&m, MemStep { level, conflict_ways: 1 });
+        // 32 lanes × 32 B sectors = 1024 B per warp access.
+        assert_eq!(one(MemLevel::L1), 1024 / 128);
+        assert_eq!(one(MemLevel::L2), 1024 / 64);
+        assert_eq!(one(MemLevel::Global), 1024 / 32);
+        // Conflict-free shared: 32 banks × 4 B cover the 128-byte
+        // access in one cycle; a full 32-way conflict replays 32×.
+        assert_eq!(one(MemLevel::Shared), 1);
+        let worst = MemStep { level: MemLevel::Shared, conflict_ways: 32 };
+        assert_eq!(mem_service_cycles(&m, worst), 32 * one(MemLevel::Shared));
+    }
+
+    /// A synthetic memory-bound trace: `n` back-to-back accesses to one
+    /// level per warp, issue-wise independent (gap 1).
+    fn mem_trace(n: usize, level: MemLevel, ways: u64) -> WarpTrace {
+        let steps = vec![
+            TraceStep {
+                pipe: Pipe::Lsu,
+                occupancy: 2,
+                gap: 1,
+                mem: Some(MemStep { level, conflict_ways: ways }),
+            };
+            n
+        ];
+        WarpTrace {
+            steps,
+            closing_gap: 1,
+            ptx_instrs: n as u64,
+            delta_1w: n as u64 + 2,
+            cpi_1w: 1,
+        }
+    }
+
+    #[test]
+    fn memory_channel_binds_only_under_contention() {
+        let cfg = AmpereConfig::a100();
+        let mut s = WarpScheduler::new(&cfg);
+        // One warp: the channel is never charged — identical to a trace
+        // with no memory classification at all.
+        let with_mem = s.run(&mem_trace(8, MemLevel::Global, 1), 1);
+        let mut blank = mem_trace(8, MemLevel::Global, 1);
+        for st in &mut blank.steps {
+            st.mem = None;
+        }
+        assert_eq!(with_mem, s.run(&blank, 1));
+        // Many warps: DRAM's 32-cycle service per access dominates.
+        // 16 warps × 8 accesses × 32 cycles ≥ 4096 cycles of channel
+        // time, far above the issue-limited schedule of the blank trace.
+        let bound = s.run(&mem_trace(8, MemLevel::Global, 1), 16);
+        let unbound = s.run(&blank, 16);
+        assert!(bound.cycles >= 16 * 8 * 32, "channel time must floor the run");
+        assert!(unbound.cycles < bound.cycles);
+    }
+
+    #[test]
+    fn worst_case_bank_conflict_serializes_32x() {
+        let cfg = AmpereConfig::a100();
+        let mut s = WarpScheduler::new(&cfg);
+        let clean = s.run(&mem_trace(8, MemLevel::Shared, 1), 8);
+        let conflicted = s.run(&mem_trace(8, MemLevel::Shared, 32), 8);
+        // The conflicted run is channel-bound: 8 warps × 8 accesses ×
+        // 32 cycles each.
+        assert!(conflicted.cycles >= 8 * 8 * 32);
+        assert!(
+            conflicted.cycles >= clean.cycles * 8,
+            "32-way conflicts must serialize hard: {} vs {}",
+            conflicted.cycles,
+            clean.cycles
+        );
+    }
+
+    #[test]
+    fn level_keys_round_trip() {
+        for level in ALL_MEM_LEVELS {
+            assert_eq!(MemLevel::from_key(level.key()), Some(level));
+        }
+        assert_eq!(MemLevel::from_key("texture"), None);
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Integration: the memory-level-parallelism engine end to end — the
+//! 1-warp byte-identity anchor after the scheduler grew per-level
+//! bandwidth channels, saturation-curve monotonicity across all five
+//! built-in presets, the 32× worst-case bank-conflict serialization,
+//! model ↔ serve ↔ live agreement for the `"mlp"` wire mode, lenient
+//! loading of pre-MLP model JSON, and the Table IV latency pin staying
+//! invariant under the new bandwidth fields.
+
+use ampere_ubench::arch;
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::microbench::mlp::{
+    bank_conflict_ways, run_mlp_sweep_with, MlpRow, DEFAULT_MLP_DEGREES,
+};
+use ampere_ubench::microbench::throughput::run_sweep_with;
+use ampere_ubench::microbench::{alu, memory, registry};
+use ampere_ubench::oracle::{LatencyModel, LatencyOracle, Server};
+use ampere_ubench::sim::{mem_service_cycles, MemLevel, MemStep, ALL_MEM_LEVELS};
+use ampere_ubench::util::json::{self, Value};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// Acceptance anchor: with the memory channels in the scheduler, the
+/// 1-warp throughput replay still reports the same CPI as the latency
+/// simulation for every Table V row — single-warp gaps already carry
+/// the full latency, so the bandwidth model must charge nothing.
+#[test]
+fn one_warp_replay_stays_byte_identical_with_memory_channels() {
+    let engine = Engine::new(AmpereConfig::small());
+    let latency = alu::run_table5_with(&engine).expect("latency Table V");
+    let rows = run_sweep_with(&engine, &[1]).expect("1-warp sweep");
+    let t5 = registry::table5();
+    let mut checked = 0;
+    for ((t, reg), lat) in rows.iter().zip(&t5).zip(&latency) {
+        assert_eq!(t.name, reg.name, "sweep order matches the registry");
+        assert_eq!(
+            t.cpi_1w, lat.measured.cpi,
+            "{}: throughput 1-warp CPI {} vs latency CPI {}",
+            t.name, t.cpi_1w, lat.measured.cpi
+        );
+        let p = &t.points[0];
+        assert_eq!(p.warps, 1, "{}", t.name);
+        checked += 1;
+    }
+    assert_eq!(checked, t5.len(), "all registry rows pinned");
+}
+
+fn assert_curves_well_formed(arch_name: &str, rows: &[MlpRow]) {
+    assert_eq!(rows.len(), ALL_MEM_LEVELS.len(), "{arch_name}");
+    for row in rows {
+        let key = row.level.key();
+        assert_eq!(row.points.len(), DEFAULT_MLP_DEGREES.len(), "{arch_name}/{key}");
+        // MLP = 1 is exactly the measured anchor.
+        assert_eq!(
+            row.points[0].per_access_milli,
+            row.latency * 1000,
+            "{arch_name}/{key}: MLP=1 must equal the anchor latency"
+        );
+        // Monotone non-increasing per-access cost — more parallelism
+        // never makes an access slower.
+        for w in row.points.windows(2) {
+            assert!(
+                w[1].per_access_milli <= w[0].per_access_milli,
+                "{arch_name}/{key}: curve rose: {:?}",
+                row.points
+            );
+        }
+        // Achieved bandwidth never exceeds the ceiling, and the knee is
+        // a swept degree.
+        assert!(
+            row.points.last().unwrap().bw_milli() <= row.peak_bw_milli,
+            "{arch_name}/{key}"
+        );
+        assert!(DEFAULT_MLP_DEGREES.contains(&row.knee_mlp), "{arch_name}/{key}");
+        assert!(row.service >= 1, "{arch_name}/{key}");
+    }
+}
+
+/// Every built-in preset produces well-formed, monotone saturation
+/// curves for all four bandwidth-modelled levels.
+#[test]
+fn saturation_curves_are_monotone_for_all_five_presets() {
+    for name in ["ampere", "volta", "turing", "hopper", "blackwell"] {
+        let cfg = arch::get(name).expect("builtin preset").config.into_small();
+        let engine = Engine::new(cfg);
+        let rows = run_mlp_sweep_with(&engine).expect("mlp sweep");
+        assert_curves_well_formed(name, &rows);
+    }
+    // The successor generations carry wider L2/DRAM paths, so their
+    // ceilings must beat Ampere's.
+    let bw = |name: &str, level: MemLevel| {
+        let cfg = arch::get(name).unwrap().config;
+        mem_service_cycles(&cfg.memory, MemStep { level, conflict_ways: 1 })
+    };
+    assert!(bw("hopper", MemLevel::Global) < bw("ampere", MemLevel::Global));
+    assert!(bw("blackwell", MemLevel::L2) < bw("ampere", MemLevel::L2));
+    assert!(bw("turing", MemLevel::L2) > bw("ampere", MemLevel::L2));
+}
+
+/// The paper's 32-bank layout: a stride-32 (column) access pattern
+/// serializes a warp to exactly 32× the conflict-free service cost, and
+/// the conflict degree follows `gcd(stride % 32, 32)`.
+#[test]
+fn worst_case_bank_conflict_serializes_exactly_32x() {
+    let m = AmpereConfig::a100().memory;
+    let clean = mem_service_cycles(&m, MemStep { level: MemLevel::Shared, conflict_ways: 1 });
+    let worst = mem_service_cycles(&m, MemStep { level: MemLevel::Shared, conflict_ways: 32 });
+    assert_eq!(worst, 32 * clean, "32-way conflict must serialize 32x");
+    assert_eq!(bank_conflict_ways(32), 32, "column stride: full conflict");
+    assert_eq!(bank_conflict_ways(33), 1, "padded column: conflict free");
+    assert_eq!(bank_conflict_ways(0), 1, "broadcast: conflict free");
+    for stride in 1..=64u64 {
+        let ways = bank_conflict_ways(stride);
+        assert!(
+            matches!(ways, 1 | 2 | 4 | 8 | 16 | 32),
+            "stride {stride}: illegal degree {ways}"
+        );
+        let cost = mem_service_cycles(&m, MemStep {
+            level: MemLevel::Shared,
+            conflict_ways: ways,
+        });
+        assert_eq!(cost, ways * clean, "stride {stride}");
+    }
+}
+
+/// Acceptance: the extracted model's `mlp` section, the serving layer's
+/// `"mlp"` wire mode, and live simulation agree exactly — and a model
+/// written before the section existed still loads (leniently) and
+/// explains what re-extraction would add.
+#[test]
+fn model_serve_and_live_agree_and_legacy_models_load_leniently() {
+    let engine = Engine::new(AmpereConfig::small());
+    let live = run_mlp_sweep_with(&engine).expect("live sweep");
+    let model = LatencyModel::extract(&engine).expect("extraction");
+    assert_eq!(model.mlp.len(), live.len(), "one model entry per level");
+    for row in &live {
+        let e = model
+            .mlp_entry(row.level.key())
+            .unwrap_or_else(|err| panic!("{}: {err}", row.level.key()));
+        assert_eq!(e.latency, row.latency, "{}", row.level.key());
+        assert_eq!(e.service, row.service, "{}", row.level.key());
+        assert_eq!(e.peak_bw_milli, row.peak_bw_milli, "{}", row.level.key());
+        assert_eq!(e.knee_mlp, row.knee_mlp, "{}", row.level.key());
+        let points: Vec<(u32, u64)> =
+            row.points.iter().map(|p| (p.mlp, p.per_access_milli)).collect();
+        assert_eq!(e.points, points, "{}", row.level.key());
+    }
+
+    // Lenient legacy load: strip the whole section and the model still
+    // parses; the lookup error tells the user how to get the curves.
+    let mut doc = json::parse(&model.to_json_string()).unwrap();
+    if let Value::Obj(map) = &mut doc {
+        assert!(map.remove("mlp").is_some(), "serialized model carries mlp");
+    }
+    let legacy = LatencyModel::from_json_str(&json::to_string_pretty(&doc)).unwrap();
+    assert!(legacy.mlp.is_empty());
+    let err = legacy.mlp_entry("global").unwrap_err();
+    assert!(err.contains("extract-model"), "unhelpful error: {err}");
+
+    // Over the wire: one request per level, byte-agreeing with live.
+    let oracle = LatencyOracle::with_engine(model, Engine::new(AmpereConfig::small()));
+    let server = Server::bind(Arc::new(oracle), "127.0.0.1:0").expect("bind");
+    let handle = server.spawn().expect("spawn");
+    let stream = TcpStream::connect(handle.addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut stream = stream;
+    for row in &live {
+        let key = row.level.key();
+        writeln!(stream, r#"{{"mode":"mlp","instr":"{key}","id":3}}"#).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{key}: {v:?}");
+        assert_eq!(v.get("level").and_then(Value::as_str), Some(key));
+        assert_eq!(v.get("latency").and_then(Value::as_u64), Some(row.latency), "{key}");
+        assert_eq!(
+            v.get("knee_mlp").and_then(Value::as_u64),
+            Some(row.knee_mlp as u64),
+            "{key}"
+        );
+        let points = v.get("points").and_then(Value::as_arr).unwrap();
+        assert_eq!(points.len(), row.points.len(), "{key}");
+        for (wire, live_p) in points.iter().zip(&row.points) {
+            assert_eq!(
+                wire.get("mlp").and_then(Value::as_u64),
+                Some(live_p.mlp as u64),
+                "{key}"
+            );
+            assert_eq!(
+                wire.get("per_access_milli").and_then(Value::as_u64),
+                Some(live_p.per_access_milli),
+                "{key}"
+            );
+        }
+    }
+    // Unknown levels answer with an error naming the valid keys.
+    writeln!(stream, r#"{{"mode":"mlp","instr":"texture"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+    assert!(
+        v.get("error").and_then(Value::as_str).unwrap_or("").contains("global"),
+        "{v:?}"
+    );
+    handle.stop();
+}
+
+/// Satellite pin: growing `MemoryConfig` bandwidth fields must not move
+/// a single Table IV latency — the pointer chase is MLP = 1 by
+/// construction, where bandwidth never binds.  Golden snapshots and the
+/// benches stay byte-identical as a corollary.
+#[test]
+fn table4_latencies_are_invariant_under_bandwidth_fields() {
+    let base_cfg = AmpereConfig::small();
+    let baseline = memory::run_table4_with(&Engine::new(base_cfg.clone())).unwrap();
+
+    let mut warped = base_cfg;
+    warped.memory.sector_bytes = 64;
+    warped.memory.l1_bytes_per_cycle = 1;
+    warped.memory.l2_bytes_per_cycle = 1;
+    warped.memory.dram_bytes_per_cycle = 1;
+    warped.memory.shared_banks = 16;
+    warped.memory.shared_bank_bytes = 8;
+    let after = memory::run_table4_with(&Engine::new(warped)).unwrap();
+
+    assert_eq!(baseline.len(), after.len());
+    for (a, b) in baseline.iter().zip(&after) {
+        assert_eq!(a.level, b.level);
+        assert_eq!(a.cpi, b.cpi, "{}: latency moved with bandwidth fields", a.level.name());
+        assert_eq!(a.loads, b.loads, "{}", a.level.name());
+    }
+}
