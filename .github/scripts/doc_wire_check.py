@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Doc-drift check for the serving surface (sibling of doc_links.py).
+
+Two invariants, both extracted from the source of truth so the check
+cannot itself drift:
+
+1. every wire ``Mode`` the server parses (the ``Some("…") => Mode::…``
+   arms of ``parse_request`` in ``rust/src/oracle/batch.rs``) must be
+   documented in ``docs/WIRE.md``;
+2. every CLI subcommand dispatched by ``rust/src/main.rs`` (the
+   top-level ``"…" =>`` match arms) must be documented in
+   ``docs/USAGE.md``.
+
+A new mode or subcommand without docs — or a doc rename that orphans
+one — fails CI with the missing names listed.
+
+Usage: doc_wire_check.py  (run from the repo root)
+"""
+
+import re
+import sys
+
+BATCH_RS = "rust/src/oracle/batch.rs"
+MAIN_RS = "rust/src/main.rs"
+WIRE_MD = "docs/WIRE.md"
+USAGE_MD = "docs/USAGE.md"
+
+# `Some("predict") => Mode::Predict,` arms in parse_request.
+MODE_ARM_RE = re.compile(r'Some\("([a-z0-9_-]+)"\)\s*=>\s*Mode::')
+# Top-level subcommand arms of `match args.cmd.as_str()` — exactly one
+# match-arm indent level deep inside main(), e.g. `        "serve" =>`.
+CMD_ARM_RE = re.compile(r'^        "([a-z0-9-]+)" =>', re.MULTILINE)
+
+
+def read(path):
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def main():
+    failures = []
+
+    modes = sorted(set(MODE_ARM_RE.findall(read(BATCH_RS))))
+    if len(modes) < 10:
+        failures.append(
+            f"{BATCH_RS}: found only {len(modes)} wire modes {modes} — "
+            "the parse_request extraction regex is probably stale"
+        )
+    wire_md = read(WIRE_MD)
+    for mode in modes:
+        # A mode counts as documented when it appears as a backticked
+        # token (`predict`) anywhere in WIRE.md.
+        if f"`{mode}`" not in wire_md and f"`{mode} " not in wire_md:
+            failures.append(f"{WIRE_MD}: wire mode `{mode}` is undocumented")
+
+    cmds = sorted(set(CMD_ARM_RE.findall(read(MAIN_RS))))
+    if len(cmds) < 15:
+        failures.append(
+            f"{MAIN_RS}: found only {len(cmds)} subcommands {cmds} — "
+            "the match-arm extraction regex is probably stale"
+        )
+    usage_md = read(USAGE_MD)
+    for cmd in cmds:
+        # USAGE.md is plain help text, not markdown — a subcommand
+        # counts as documented when its name starts a word anywhere.
+        if not re.search(rf"(?m)(?:^|\s){re.escape(cmd)}\b", usage_md):
+            failures.append(f"{USAGE_MD}: subcommand '{cmd}' is undocumented")
+
+    for f in failures:
+        print(f)
+    if failures:
+        sys.exit(f"{len(failures)} serving doc-drift failure(s)")
+    print(
+        f"doc drift clean: {len(modes)} wire modes in {WIRE_MD}, "
+        f"{len(cmds)} subcommands in {USAGE_MD}"
+    )
+
+
+if __name__ == "__main__":
+    main()

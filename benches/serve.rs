@@ -1,13 +1,21 @@
-//! Bench for the sharded serving stack — the acceptance workload for
-//! the serve PR: the binary frame protocol must carry warm predict
-//! batches at ≥ 2× the JSON-line QPS at 64 connections, recorded in
-//! `BENCH_serve.json` alongside p50/p99 roundtrip latency for every
-//! {json, binary} × {1, 8, 64} cell.
+//! Bench for the event-driven serving stack — the acceptance workload
+//! for the serve PRs, recorded in `BENCH_serve.json` with p50/p99
+//! roundtrip latency and sustained QPS for every cell:
 //!
-//! The workload is `oracle::loadgen`'s: a real loopback server, warm
-//! predict batches of 32 requests over 16 distinct measurement kernels,
-//! fully prewarmed before the first timed roundtrip.  `--quick` trims
-//! the per-cell sampling window for CI smoke; the acceptance ratio is
+//! * **warm** (`json_c64`, `binary_c64`, …) — one batch in flight per
+//!   connection; the binary frame protocol must carry warm predict
+//!   batches at ≥ 2× the JSON-line QPS at 64 connections;
+//! * **pipelined** (`binary_p16_c64`, …) — 16 batches in flight per
+//!   connection over the reactor's pipelined decode path; the binary
+//!   pipelined cell must also clear 2× the depth-1 JSON baseline;
+//! * **trace** (`binary_default_c64`, …) — the checked-in
+//!   `benches/serve_mix.json` request mix (predict/simulate/
+//!   throughput/mlp/gemm), the realistic-workload series.
+//!
+//! The workload is `oracle::loadgen`'s: a real loopback server, batches
+//! of 32 requests over 16 distinct measurement kernels, fully
+//! prewarmed before the first timed roundtrip.  `--quick` trims the
+//! per-cell sampling window for CI smoke; the acceptance ratios are
 //! asserted either way.
 
 use ampere_ubench::config::AmpereConfig;
@@ -23,8 +31,11 @@ fn main() {
     let model = LatencyModel::extract(&engine).expect("model extraction");
     let oracle = Arc::new(LatencyOracle::with_engine(model, engine));
 
+    let trace = loadgen::RequestMix::from_trace_json(include_str!("serve_mix.json"))
+        .expect("benches/serve_mix.json parses");
     let cfg = loadgen::LoadgenConfig {
         secs_per_cell: if quick { 0.8 } else { 2.5 },
+        trace: Some(trace),
         ..loadgen::LoadgenConfig::default()
     };
     let cells = loadgen::run_loopback(oracle, &cfg).expect("loadgen sweep");
@@ -33,18 +44,34 @@ fn main() {
     loadgen::write_bench_json("BENCH_serve.json", &cells).expect("write BENCH_serve.json");
     println!("wrote BENCH_serve.json ({} cells)", cells.len());
 
-    let qps = |mode: &str, conns: usize| -> f64 {
+    let qps = |name: &str| -> f64 {
         cells
             .iter()
-            .find(|c| c.mode.as_str() == mode && c.conns == conns)
-            .unwrap_or_else(|| panic!("missing {mode} x{conns} cell"))
+            .find(|c| c.name() == name)
+            .unwrap_or_else(|| panic!("missing {name} cell"))
             .qps
     };
-    let ratio = qps("binary", 64) / qps("json", 64);
+    let ratio = qps("binary_c64") / qps("json_c64");
     println!("binary vs json warm-batch throughput at 64 connections: {ratio:.2}x");
     assert!(
         ratio >= 2.0,
         "acceptance: binary-mode warm-batch throughput must be >= 2x the \
          JSON-line path at 64 connections (got {ratio:.2}x)"
+    );
+    let piped = qps("binary_p16_c64") / qps("json_c64");
+    println!("pipelined binary vs depth-1 json at 64 connections: {piped:.2}x");
+    assert!(
+        piped >= 2.0,
+        "acceptance: pipelined binary throughput must be >= 2x the depth-1 \
+         JSON-line path at 64 connections (got {piped:.2}x)"
+    );
+    let trace_cell = cells
+        .iter()
+        .find(|c| c.name() == "binary_default_c64")
+        .expect("trace series in sweep");
+    println!(
+        "trace mix \"default\" at 64 connections: {:.0} qps, p99 {:.1}us",
+        trace_cell.qps,
+        trace_cell.p99_ns as f64 / 1e3
     );
 }

@@ -28,7 +28,7 @@
 //!        serve), --out <path>, --port <n>, --seed <s>,
 //!        --cases <n>, --warps <list>, --update, and for loadgen
 //!        --secs <f>, --conns <list>, --wire json|binary|both,
-//!        --batch <n>
+//!        --batch <n>, --depth <n>, --trace <mix.json>
 //! ```
 
 use ampere_ubench::arch::{self, ArchSpec};
@@ -73,6 +73,12 @@ struct Args {
     wire: Option<String>,
     /// `--batch`: loadgen predict requests per roundtrip.
     batch: Option<u64>,
+    /// `--depth`: loadgen batches in flight per connection (pipelined
+    /// series); 1 disables pipelining.
+    depth: Option<u64>,
+    /// `--trace`: path of a recorded request-mix JSON replayed as an
+    /// extra loadgen series (see docs/USAGE.md for the schema).
+    trace: Option<String>,
     cmd: String,
     rest: Vec<String>,
 }
@@ -95,6 +101,8 @@ fn parse_args() -> Args {
         conns: None,
         wire: None,
         batch: None,
+        depth: None,
+        trace: None,
         cmd: String::new(),
         rest: Vec::new(),
     };
@@ -176,6 +184,18 @@ fn parse_args() -> Args {
                 }));
                 i += 1;
             }
+            "--depth" => {
+                let v = need_value(&argv, i);
+                a.depth = Some(v.parse().unwrap_or_else(|_| {
+                    eprintln!("--depth wants a number, got {v:?}");
+                    std::process::exit(2);
+                }));
+                i += 1;
+            }
+            "--trace" => {
+                a.trace = Some(need_value(&argv, i));
+                i += 1;
+            }
             "--update" => a.update = true,
             "-h" | "--help" => {
                 print!("{USAGE}");
@@ -225,8 +245,9 @@ fn warp_counts_for(warps: Option<&str>) -> anyhow::Result<Vec<u32>> {
 }
 
 /// Assemble the loadgen sweep from `--secs` / `--conns` / `--wire` /
-/// `--batch`, defaulting to the `BENCH_serve.json` cells
-/// ({json, binary} × {1, 8, 64}, 2s, batch 32).
+/// `--batch` / `--depth` / `--trace`, defaulting to the
+/// `BENCH_serve.json` cells ({json, binary} × {1, 8, 64}, 2s, batch
+/// 32, pipeline depth 16, no trace).
 fn loadgen_config(args: &Args) -> anyhow::Result<loadgen::LoadgenConfig> {
     let mut cfg = loadgen::LoadgenConfig::default();
     if let Some(secs) = args.secs {
@@ -270,6 +291,22 @@ fn loadgen_config(args: &Args) -> anyhow::Result<loadgen::LoadgenConfig> {
             anyhow::bail!("--batch must be 1..=4096, got {batch}");
         }
         cfg.batch = batch as usize;
+    }
+    if let Some(depth) = args.depth {
+        // The server parks reads past MAX_PIPELINE_DEPTH in-flight
+        // frames, so a deeper client window only measures its own
+        // queueing.
+        if !(1..=64).contains(&depth) {
+            anyhow::bail!("--depth must be 1..=64, got {depth}");
+        }
+        cfg.pipeline_depth = depth as usize;
+    }
+    if let Some(path) = args.trace.as_deref() {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("--trace {path}: {e}"))?;
+        let mix = loadgen::RequestMix::from_trace_json(&text)
+            .map_err(|e| anyhow::anyhow!("--trace {path}: {e}"))?;
+        cfg.trace = Some(mix);
     }
     Ok(cfg)
 }
@@ -689,13 +726,26 @@ fn main() -> anyhow::Result<()> {
                 anyhow::bail!("{mismatch} (pass or drop --small to match the model)");
             }
             let cfg = loadgen_config(&args)?;
+            let mut series = 1;
+            if cfg.pipeline_depth > 1 {
+                series += 1;
+            }
+            if cfg.trace.is_some() {
+                series += 1;
+            }
             eprintln!(
-                "loadgen: {} mode(s) x {} connection count(s), {:.1}s per cell, \
-                 batch {}…",
+                "loadgen: {} series x {} mode(s) x {} connection count(s), \
+                 {:.1}s per cell, batch {}, depth {}{}…",
+                series,
                 cfg.modes.len(),
                 cfg.conns.len(),
                 cfg.secs_per_cell,
-                cfg.batch
+                cfg.batch,
+                cfg.pipeline_depth,
+                match &cfg.trace {
+                    Some(mix) => format!(", trace mix {:?}", mix.name()),
+                    None => String::new(),
+                }
             );
             let cells = loadgen::run_loopback(oracle, &cfg).map_err(anyhow::Error::msg)?;
             if args.json {

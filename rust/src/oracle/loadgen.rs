@@ -2,12 +2,23 @@
 //! `benches/serve.rs`).
 //!
 //! Spins up a real [`Server`](super::Server) on `127.0.0.1:0`, prewarms
-//! the prediction cache with the exact batch the cells replay, then
+//! the prediction cache with the exact batches the cells replay, then
 //! hammers it over {json, binary} × {1, 8, 64 connections} (the
-//! defaults — both axes are configurable).  Every connection replays
-//! the same fully-warm predict batch, so the measurement isolates the
-//! serving stack itself: wire codec, cache hit path, per-connection
-//! loop — not model computation.
+//! defaults — both axes are configurable).  Three series share one
+//! client code path (the [`RequestMix`] builder plus one pipelining
+//! knob), so their numbers are directly comparable:
+//!
+//! * **warm** (`json_c64`, …) — the historical cells: every roundtrip
+//!   replays the same fully-warm predict batch with exactly one batch
+//!   in flight, isolating the serving stack (wire codec, cache hit
+//!   path, per-connection loop — not model computation);
+//! * **pipelined** (`binary_p16_c64`, …) — the same warm batch with
+//!   [`LoadgenConfig::pipeline_depth`] batches in flight per
+//!   connection, the workload the reactor's pipelining exists for;
+//! * **trace** (`binary_default_c64`, …) — a recorded request mix
+//!   ([`RequestMix::from_trace_json`], `repro loadgen --trace
+//!   mix.json`) spanning predict/simulate/throughput/mlp/gemm instead
+//!   of the uniform warm batch.
 //!
 //! Each cell reports sustained QPS (requests per second — *requests*,
 //! not roundtrips: one roundtrip carries a whole batch) and p50/p99
@@ -23,9 +34,10 @@
 //! (the server does identical per-request work regardless).
 
 use super::serve::Server;
-use super::{wire, LatencyOracle};
+use super::{batch, wire, LatencyOracle};
 use crate::microbench::measurement_kernel;
 use crate::util::json::{self, Value};
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
@@ -47,20 +59,207 @@ impl WireMode {
     }
 }
 
+/// One weighted request template of a [`RequestMix`].
+#[derive(Debug, Clone)]
+struct MixEntry {
+    weight: u64,
+    template: Value,
+}
+
+/// A named, weighted request mix — the one batch builder behind the
+/// bench cells, the CI loadgen smoke and `--trace` replay.
+///
+/// [`RequestMix::batch_value`] deals templates into batch slots with
+/// deterministic smooth weighted round-robin (heavier templates appear
+/// proportionally more often, interleaved rather than clumped), swaps
+/// the `"$kernel"` placeholder for a warm kernel cycled by slot index,
+/// and ids each slot with its index.  Same mix + same kernels → the
+/// same batch, byte for byte.
+#[derive(Debug, Clone)]
+pub struct RequestMix {
+    name: String,
+    batch: usize,
+    entries: Vec<MixEntry>,
+}
+
+impl RequestMix {
+    /// The historical uniform workload: a batch of warm `predict`
+    /// requests over cycled kernels.
+    pub fn warm_predict(batch: usize) -> RequestMix {
+        RequestMix {
+            name: "warm".to_string(),
+            batch: batch.max(1),
+            entries: vec![MixEntry {
+                weight: 1,
+                template: Value::obj().set("mode", "predict").set("kernel", "$kernel"),
+            }],
+        }
+    }
+
+    /// Parse a recorded request-mix trace (see `docs/USAGE.md` for the
+    /// schema):
+    ///
+    /// ```json
+    /// {"name": "default", "batch": 32, "mix": [
+    ///   {"weight": 24, "request": {"mode": "predict", "kernel": "$kernel"}},
+    ///   {"weight": 1,  "request": {"mode": "gemm"}}]}
+    /// ```
+    ///
+    /// Every template is validated against the server's own
+    /// `parse_request` at load time, so schema drift fails here with a
+    /// field-level error instead of mid-benchmark.
+    pub fn from_trace_json(text: &str) -> Result<RequestMix, String> {
+        let doc = json::parse(text).map_err(|e| format!("trace: bad json: {e}"))?;
+        let obj = doc.as_obj().ok_or("trace: document must be a JSON object")?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "name" | "batch" | "mix") {
+                return Err(format!("trace: unknown field {key:?}"));
+            }
+        }
+        let name = doc
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or("trace: \"name\" must be a string")?
+            .to_string();
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        {
+            return Err(format!(
+                "trace: name {name:?} must be non-empty [A-Za-z0-9_] (it lands in \
+                 BENCH_serve.json series names)"
+            ));
+        }
+        let batch = match doc.get("batch") {
+            None => 32,
+            Some(b) => {
+                let b = b.as_u64().ok_or("trace: \"batch\" must be a whole number")?;
+                if b == 0 || b > 1024 {
+                    return Err("trace: \"batch\" must be 1..=1024".to_string());
+                }
+                b as usize
+            }
+        };
+        let mix = doc
+            .get("mix")
+            .and_then(Value::as_arr)
+            .ok_or("trace: \"mix\" must be an array of {weight, request} entries")?;
+        if mix.is_empty() {
+            return Err("trace: \"mix\" must not be empty".to_string());
+        }
+        let mut entries = Vec::with_capacity(mix.len());
+        for (i, e) in mix.iter().enumerate() {
+            let eobj = e
+                .as_obj()
+                .ok_or_else(|| format!("trace: mix[{i}] must be an object"))?;
+            for key in eobj.keys() {
+                if !matches!(key.as_str(), "weight" | "request") {
+                    return Err(format!("trace: mix[{i}]: unknown field {key:?}"));
+                }
+            }
+            let weight = e
+                .get("weight")
+                .and_then(Value::as_u64)
+                .ok_or_else(|| format!("trace: mix[{i}]: \"weight\" must be a whole number"))?;
+            if weight == 0 || weight > 1_000_000 {
+                return Err(format!("trace: mix[{i}]: \"weight\" must be 1..=1000000"));
+            }
+            let template = e
+                .get("request")
+                .cloned()
+                .ok_or_else(|| format!("trace: mix[{i}]: missing \"request\""))?;
+            if template.as_obj().is_none() {
+                return Err(format!("trace: mix[{i}]: \"request\" must be an object"));
+            }
+            if let Err(err) =
+                batch::parse_request(&instantiate(&template, "stub kernel", i as u64))
+            {
+                return Err(format!("trace: mix[{i}]: invalid request template: {err}"));
+            }
+            entries.push(MixEntry { weight, template });
+        }
+        Ok(RequestMix { name, batch, entries })
+    }
+
+    /// The mix name (labels trace-driven bench series).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Requests per roundtrip.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Build one batch request: `batch` slots dealt by smooth weighted
+    /// round-robin over the templates, kernels cycled by slot index.
+    pub fn batch_value(&self, kernels: &[String]) -> Value {
+        let total: i64 = self.entries.iter().map(|e| e.weight as i64).sum();
+        let mut current = vec![0i64; self.entries.len()];
+        Value::Arr(
+            (0..self.batch)
+                .map(|i| {
+                    for (c, e) in current.iter_mut().zip(&self.entries) {
+                        *c += e.weight as i64;
+                    }
+                    let pick = current
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, c)| **c)
+                        .map(|(j, _)| j)
+                        .expect("non-empty mix");
+                    current[pick] -= total;
+                    let kernel = kernels
+                        .get(i % kernels.len().max(1))
+                        .map(String::as_str)
+                        .unwrap_or("");
+                    instantiate(&self.entries[pick].template, kernel, i as u64)
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Clone a template into a concrete slot request: `"$kernel"` string
+/// fields become `kernel`, and an `"id"` of the slot index is added
+/// unless the template pins its own.
+fn instantiate(template: &Value, kernel: &str, id: u64) -> Value {
+    let Some(obj) = template.as_obj() else {
+        return template.clone();
+    };
+    let mut out = Value::obj();
+    for (k, v) in obj {
+        let v = if v.as_str() == Some("$kernel") { Value::from(kernel) } else { v.clone() };
+        out = out.set(k.as_str(), v);
+    }
+    if obj.get("id").is_none() {
+        out = out.set("id", id);
+    }
+    out
+}
+
 /// Load-generator knobs (`repro loadgen` flags map onto these).
 #[derive(Debug, Clone)]
 pub struct LoadgenConfig {
-    /// Connection counts to sweep (one cell per mode × count).
+    /// Connection counts to sweep (one cell per series × mode × count).
     pub conns: Vec<usize>,
     /// Wire modes to sweep.
     pub modes: Vec<WireMode>,
     /// Sampling time per cell, seconds.
     pub secs_per_cell: f64,
-    /// Predict requests per roundtrip (one line / one frame).
+    /// Predict requests per roundtrip (one line / one frame) in the
+    /// warm series.
     pub batch: usize,
     /// Distinct kernel sources cycled through the batch (spreads load
     /// across cache shards like a real client mix would).
     pub distinct_kernels: usize,
+    /// Batches in flight per connection for the pipelined series
+    /// (`{mode}_p{depth}_c{n}` cells); 0 or 1 skips the series.  Kept
+    /// modest so the outstanding responses stay well under socket
+    /// buffer sizes even against the thread-per-connection fallback
+    /// backend.
+    pub pipeline_depth: usize,
+    /// Recorded request mix replayed as an extra series
+    /// (`{mode}_{mixname}_c{n}` cells); `None` skips it.
+    pub trace: Option<RequestMix>,
 }
 
 impl Default for LoadgenConfig {
@@ -71,15 +270,23 @@ impl Default for LoadgenConfig {
             secs_per_cell: 2.0,
             batch: 32,
             distinct_kernels: 16,
+            pipeline_depth: 16,
+            trace: None,
         }
     }
 }
 
-/// One mode × connection-count measurement.
+/// One series × mode × connection-count measurement.
 #[derive(Debug, Clone)]
 pub struct CellResult {
     pub mode: WireMode,
     pub conns: usize,
+    /// Batches in flight per connection (1 = the classic
+    /// send-one-read-one loop).
+    pub depth: usize,
+    /// Mix name for trace-driven cells; `None` for the built-in warm
+    /// series (whose names stay pinned to the historical form).
+    pub mix: Option<String>,
     /// Whole-batch roundtrips completed across all connections.
     pub roundtrips: u64,
     /// Individual requests answered (`roundtrips × batch`).
@@ -87,15 +294,26 @@ pub struct CellResult {
     pub elapsed_ns: u64,
     /// Sustained requests per second.
     pub qps: f64,
-    /// Roundtrip latency percentiles (one roundtrip = one batch).
+    /// Roundtrip latency percentiles (one roundtrip = one batch; at
+    /// depth > 1 this includes queueing behind the window).
     pub p50_ns: u64,
     pub p99_ns: u64,
 }
 
 impl CellResult {
-    /// Series name in `BENCH_serve.json`: `json_c64`, `binary_c1`, …
+    /// Series name in `BENCH_serve.json`: `json_c64` (warm),
+    /// `binary_p16_c64` (pipelined), `binary_default_c64` (trace
+    /// `default`), ….
     pub fn name(&self) -> String {
-        format!("{}_c{}", self.mode.as_str(), self.conns)
+        let mut name = self.mode.as_str().to_string();
+        if let Some(mix) = &self.mix {
+            name.push('_');
+            name.push_str(mix);
+        }
+        if self.depth > 1 {
+            name.push_str(&format!("_p{}", self.depth));
+        }
+        format!("{name}_c{}", self.conns)
     }
 }
 
@@ -118,19 +336,14 @@ pub fn warm_kernels(n: usize) -> Vec<String> {
         .collect()
 }
 
-/// The batch request every roundtrip replays, as a value tree (encoded
-/// once per wire mode, outside the timed loop).
-fn batch_value(kernels: &[String], batch: usize) -> Value {
-    Value::Arr(
-        (0..batch)
-            .map(|i| {
-                Value::obj()
-                    .set("mode", "predict")
-                    .set("kernel", kernels[i % kernels.len()].as_str())
-                    .set("id", i as u64)
-            })
-            .collect(),
-    )
+/// One series' batch, encoded once per wire mode outside every timed
+/// loop.
+struct Prepared {
+    json: Vec<u8>,
+    frame: Vec<u8>,
+    batch: usize,
+    depth: usize,
+    mix: Option<String>,
 }
 
 /// Run the full sweep against a freshly spawned loopback server.
@@ -144,53 +357,85 @@ pub fn run_loopback(
     let handle = server.spawn().map_err(|e| format!("spawn: {e}"))?;
 
     let kernels = warm_kernels(cfg.distinct_kernels);
-    let request = batch_value(&kernels, cfg.batch.max(1));
-    let mut json_bytes = json::to_string(&request).into_bytes();
-    json_bytes.push(b'\n');
-    let frame_bytes = wire::encode_frame(&request);
+    let warm = RequestMix::warm_predict(cfg.batch.max(1));
+    let mut series: Vec<(&RequestMix, usize, Option<String>)> = vec![(&warm, 1, None)];
+    if cfg.pipeline_depth > 1 {
+        series.push((&warm, cfg.pipeline_depth, None));
+    }
+    if let Some(trace) = &cfg.trace {
+        series.push((trace, 1, Some(trace.name().to_string())));
+    }
+    let prepared: Vec<Prepared> = series
+        .into_iter()
+        .map(|(mix, depth, label)| {
+            let request = mix.batch_value(&kernels);
+            let mut json_bytes = json::to_string(&request).into_bytes();
+            json_bytes.push(b'\n');
+            Prepared {
+                frame: wire::encode_frame(&request),
+                json: json_bytes,
+                batch: mix.batch(),
+                depth,
+                mix: label,
+            }
+        })
+        .collect();
 
-    // Prewarm: one roundtrip of the exact cell payload compiles and
-    // caches every kernel the cells will touch, so every timed
+    // Prewarm: one roundtrip of each distinct cell payload compiles
+    // and caches every kernel the cells will touch, so every timed
     // roundtrip is a pure warm hit.
-    {
-        let stream = TcpStream::connect(addr).map_err(|e| format!("prewarm: {e}"))?;
-        let mut reader =
-            BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
-        let mut writer = stream;
-        writer.write_all(&json_bytes).map_err(|e| format!("prewarm send: {e}"))?;
-        let mut line = String::new();
-        reader.read_line(&mut line).map_err(|e| format!("prewarm recv: {e}"))?;
-        validate_batch_text(&line, cfg.batch.max(1)).map_err(|e| format!("prewarm: {e}"))?;
+    let mut warmed: Vec<&[u8]> = Vec::new();
+    for p in &prepared {
+        if warmed.contains(&p.json.as_slice()) {
+            continue;
+        }
+        prewarm(addr, &p.json, p.batch)?;
+        warmed.push(p.json.as_slice());
     }
 
     let mut cells = Vec::new();
-    for &mode in &cfg.modes {
-        let payload: &[u8] = match mode {
-            WireMode::Json => &json_bytes,
-            WireMode::Binary => &frame_bytes,
-        };
-        for &conns in &cfg.conns {
-            cells.push(run_cell(addr, mode, conns, payload, cfg)?);
+    for p in &prepared {
+        for &mode in &cfg.modes {
+            for &conns in &cfg.conns {
+                cells.push(run_cell(addr, mode, conns, p, cfg.secs_per_cell)?);
+            }
         }
     }
     handle.stop();
     Ok(cells)
 }
 
+fn prewarm(addr: SocketAddr, json_bytes: &[u8], batch: usize) -> Result<(), String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("prewarm: {e}"))?;
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    let mut writer = stream;
+    writer.write_all(json_bytes).map_err(|e| format!("prewarm send: {e}"))?;
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| format!("prewarm recv: {e}"))?;
+    validate_batch_text(&line, batch).map_err(|e| format!("prewarm: {e}"))
+}
+
 fn run_cell(
     addr: SocketAddr,
     mode: WireMode,
     conns: usize,
-    payload: &[u8],
-    cfg: &LoadgenConfig,
+    cell: &Prepared,
+    secs_per_cell: f64,
 ) -> Result<CellResult, String> {
     let conns = conns.max(1);
-    let batch = cfg.batch.max(1);
-    let deadline = Duration::from_secs_f64(cfg.secs_per_cell.max(0.05));
+    let payload: &[u8] = match mode {
+        WireMode::Json => &cell.json,
+        WireMode::Binary => &cell.frame,
+    };
+    let deadline = Duration::from_secs_f64(secs_per_cell.max(0.05));
     let started = Instant::now();
     let per_conn: Result<Vec<Vec<u64>>, String> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..conns)
-            .map(|_| s.spawn(move || client_loop(addr, mode, payload, batch, started, deadline)))
+            .map(|_| {
+                s.spawn(move || {
+                    client_loop(addr, mode, payload, cell.batch, cell.depth, started, deadline)
+                })
+            })
             .collect();
         handles
             .into_iter()
@@ -212,10 +457,12 @@ fn run_cell(
     }
     lats.sort_unstable();
     let roundtrips = lats.len() as u64;
-    let requests = roundtrips * batch as u64;
+    let requests = roundtrips * cell.batch as u64;
     Ok(CellResult {
         mode,
         conns,
+        depth: cell.depth,
+        mix: cell.mix.clone(),
         roundtrips,
         requests,
         elapsed_ns: elapsed.as_nanos() as u64,
@@ -225,24 +472,36 @@ fn run_cell(
     })
 }
 
+/// The one client loop behind every series.  `depth` batches ride the
+/// wire at once: the window prefills, then each response read refills
+/// the window until the deadline, after which the remainder drains.
+/// `depth == 1` is exactly the classic send-one-read-one loop.
 fn client_loop(
     addr: SocketAddr,
     mode: WireMode,
     payload: &[u8],
     batch: usize,
+    depth: usize,
     started: Instant,
     deadline: Duration,
 ) -> Result<Vec<u64>, String> {
+    let depth = depth.max(1);
     let stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
     let _ = stream.set_nodelay(true);
     let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
     let mut writer = stream;
     let mut lats = Vec::new();
     let mut line = String::new();
+    let mut inflight: VecDeque<Instant> = VecDeque::new();
     let mut first = true;
-    while started.elapsed() < deadline {
-        let t = Instant::now();
-        writer.write_all(payload).map_err(|e| format!("send: {e}"))?;
+    loop {
+        while inflight.len() < depth && started.elapsed() < deadline {
+            writer.write_all(payload).map_err(|e| format!("send: {e}"))?;
+            inflight.push_back(Instant::now());
+        }
+        let Some(sent) = inflight.pop_front() else {
+            break; // deadline passed and every response drained
+        };
         match mode {
             WireMode::Json => {
                 line.clear();
@@ -266,7 +525,7 @@ fn client_loop(
             }
         }
         first = false;
-        lats.push(t.elapsed().as_nanos() as u64);
+        lats.push(sent.elapsed().as_nanos() as u64);
     }
     Ok(lats)
 }
@@ -299,16 +558,21 @@ pub fn bench_json(cells: &[CellResult]) -> Value {
             cells
                 .iter()
                 .map(|c| {
-                    Value::obj()
+                    let mut row = Value::obj()
                         .set("name", c.name())
                         .set("mode", c.mode.as_str())
                         .set("conns", c.conns)
+                        .set("depth", c.depth as u64)
                         .set("iters", c.roundtrips)
                         .set("requests", c.requests)
                         .set("elapsed_ns", c.elapsed_ns)
                         .set("qps", c.qps)
                         .set("median_ns", c.p50_ns)
-                        .set("p99_ns", c.p99_ns)
+                        .set("p99_ns", c.p99_ns);
+                    if let Some(mix) = &c.mix {
+                        row = row.set("mix", mix.as_str());
+                    }
+                    row
                 })
                 .collect(),
         ),
@@ -324,13 +588,12 @@ pub fn write_bench_json(path: &str, cells: &[CellResult]) -> Result<(), String> 
 /// Human-readable sweep table.
 pub fn render(cells: &[CellResult]) -> String {
     let mut out = String::from(
-        "mode    conns        qps    p50(us)    p99(us)   requests\n",
+        "cell                        qps    p50(us)    p99(us)   requests\n",
     );
     for c in cells {
         out.push_str(&format!(
-            "{:<7} {:>5} {:>10.0} {:>10.1} {:>10.1} {:>10}\n",
-            c.mode.as_str(),
-            c.conns,
+            "{:<22} {:>10.0} {:>10.1} {:>10.1} {:>10}\n",
+            c.name(),
             c.qps,
             c.p50_ns as f64 / 1e3,
             c.p99_ns as f64 / 1e3,
@@ -348,22 +611,114 @@ mod tests {
     use crate::oracle::model;
 
     #[test]
-    fn quick_sweep_produces_nonzero_cells_in_both_modes() {
+    fn request_mix_builder_is_deterministic_and_weighted() {
+        let trace = r#"{"name":"mixy","batch":8,"mix":[
+            {"weight":3,"request":{"mode":"predict","kernel":"$kernel"}},
+            {"weight":1,"request":{"mode":"throughput","instr":"add.u32"}}]}"#;
+        let mix = RequestMix::from_trace_json(trace).expect("trace parses");
+        assert_eq!(mix.name(), "mixy");
+        assert_eq!(mix.batch(), 8);
+
+        let kernels = vec!["K0".to_string(), "K1".to_string()];
+        let batch = mix.batch_value(&kernels);
+        let slots = batch.as_arr().expect("batch is an array");
+        assert_eq!(slots.len(), 8);
+        let modes: Vec<&str> = slots
+            .iter()
+            .map(|s| s.get("mode").and_then(Value::as_str).unwrap())
+            .collect();
+        let predicts = modes.iter().filter(|m| **m == "predict").count();
+        assert_eq!(predicts, 6, "3:1 weights over 8 slots: {modes:?}");
+        // Smooth round-robin interleaves rather than clumping: the two
+        // throughput slots are not adjacent.
+        let tp: Vec<usize> = modes
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| **m == "throughput")
+            .map(|(i, _)| i)
+            .collect();
+        assert!(tp[1] > tp[0] + 1, "clumped throughput slots at {tp:?}");
+        for (i, s) in slots.iter().enumerate() {
+            assert_eq!(s.get("id").and_then(Value::as_u64), Some(i as u64));
+            if let Some(k) = s.get("kernel").and_then(Value::as_str) {
+                assert_eq!(k, kernels[i % 2], "kernels cycle by slot index");
+            }
+        }
+        // Deterministic: the same mix and kernels rebuild byte-identically.
+        assert_eq!(
+            json::to_string(&batch),
+            json::to_string(&mix.batch_value(&kernels))
+        );
+
+        // The built-in warm mix reproduces the legacy uniform batch.
+        let warm = RequestMix::warm_predict(4).batch_value(&kernels);
+        for (i, s) in warm.as_arr().unwrap().iter().enumerate() {
+            assert_eq!(s.get("mode").and_then(Value::as_str), Some("predict"));
+            assert_eq!(s.get("kernel").and_then(Value::as_str), Some(kernels[i % 2].as_str()));
+            assert_eq!(s.get("id").and_then(Value::as_u64), Some(i as u64));
+        }
+    }
+
+    #[test]
+    fn trace_json_rejects_schema_drift() {
+        let cases: &[(&str, &str)] = &[
+            (r#"{"name":"x","mix":[],"extra":1}"#, "unknown field"),
+            (r#"{"mix":[{"weight":1,"request":{"mode":"ping"}}]}"#, "\"name\""),
+            (r#"{"name":"has-dash","mix":[{"weight":1,"request":{"mode":"ping"}}]}"#, "A-Za-z0-9_"),
+            (r#"{"name":"x","batch":0,"mix":[{"weight":1,"request":{"mode":"ping"}}]}"#, "1..=1024"),
+            (r#"{"name":"x","mix":[]}"#, "must not be empty"),
+            (r#"{"name":"x","mix":[{"weight":0,"request":{"mode":"ping"}}]}"#, "weight"),
+            (r#"{"name":"x","mix":[{"weight":1,"request":{"mode":"ping"},"note":"hi"}]}"#, "unknown field"),
+            (
+                r#"{"name":"x","mix":[{"weight":1,"request":{"mode":"warp"}}]}"#,
+                "invalid request template",
+            ),
+            (
+                r#"{"name":"x","mix":[{"weight":1,"request":{"mode":"predict","kern":"$kernel"}}]}"#,
+                "unknown request field",
+            ),
+        ];
+        for (text, needle) in cases {
+            let err = RequestMix::from_trace_json(text).expect_err(text);
+            assert!(err.contains(needle), "{text} -> {err}");
+        }
+    }
+
+    #[test]
+    fn quick_sweep_produces_nonzero_cells_in_all_series() {
         let oracle = Arc::new(LatencyOracle::with_engine(
             model::tiny_model(),
             Engine::new(AmpereConfig::a100()),
         ));
+        let trace = RequestMix::from_trace_json(
+            r#"{"name":"tiny","batch":4,"mix":[
+                {"weight":2,"request":{"mode":"predict","kernel":"$kernel"}},
+                {"weight":1,"request":{"mode":"throughput","instr":"add.u32"}},
+                {"weight":1,"request":{"mode":"mlp","instr":"global"}}]}"#,
+        )
+        .expect("trace mix");
         let cfg = LoadgenConfig {
             conns: vec![2],
             modes: vec![WireMode::Json, WireMode::Binary],
             secs_per_cell: 0.2,
             batch: 4,
             distinct_kernels: 4,
+            pipeline_depth: 2,
+            trace: Some(trace),
         };
         let cells = run_loopback(oracle, &cfg).expect("loadgen sweep");
-        assert_eq!(cells.len(), 2);
-        assert_eq!(cells[0].name(), "json_c2");
-        assert_eq!(cells[1].name(), "binary_c2");
+        let names: Vec<String> = cells.iter().map(CellResult::name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "json_c2",
+                "binary_c2",
+                "json_p2_c2",
+                "binary_p2_c2",
+                "json_tiny_c2",
+                "binary_tiny_c2",
+            ],
+        );
         for c in &cells {
             assert!(c.qps > 0.0, "{}: zero qps", c.name());
             assert!(c.requests >= c.roundtrips, "{}: request accounting", c.name());
@@ -373,13 +728,18 @@ mod tests {
         let doc = bench_json(&cells);
         assert_eq!(doc.get("bench").and_then(Value::as_str), Some("serve"));
         let rows = doc.get("results").and_then(Value::as_arr).unwrap();
-        assert_eq!(rows.len(), 2);
+        assert_eq!(rows.len(), 6);
         for row in rows {
-            for key in ["name", "median_ns", "qps", "p99_ns"] {
+            for key in ["name", "median_ns", "qps", "p99_ns", "depth"] {
                 assert!(row.get(key).is_some(), "missing {key}");
             }
         }
+        let trace_row = rows
+            .iter()
+            .find(|r| r.get("name").and_then(Value::as_str) == Some("binary_tiny_c2"))
+            .expect("trace cell in bench json");
+        assert_eq!(trace_row.get("mix").and_then(Value::as_str), Some("tiny"));
         let table = render(&cells);
-        assert!(table.contains("json") && table.contains("binary"), "{table}");
+        assert!(table.contains("json_p2_c2") && table.contains("binary_tiny_c2"), "{table}");
     }
 }

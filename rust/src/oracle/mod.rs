@@ -16,12 +16,16 @@
 //! * [`batch`] — the sharded warm-path prediction cache (keyed by
 //!   kernel hash) and batch execution across the engine's worker pool;
 //! * [`serve`] — a `std::net::TcpListener` protocol server (no external
-//!   deps) with sharded accept loops, two wire modes (JSON lines and
-//!   length-prefixed binary frames, negotiated by the first byte),
-//!   bounded-queue backpressure, hot model reload, protocol-level
-//!   batching and multi-model hosting: an [`OracleSet`] holds one
-//!   oracle per architecture and requests route by their `"arch"` field
-//!   (`repro serve --model ampere.json --model turing.json`);
+//!   deps) with two wire modes (JSON lines and length-prefixed binary
+//!   frames, negotiated by the first byte), request pipelining with
+//!   streamed batch responses, bounded-queue backpressure, hot model
+//!   reload, protocol-level batching and multi-model hosting: an
+//!   [`OracleSet`] holds one oracle per architecture and requests route
+//!   by their `"arch"` field (`repro serve --model ampere.json --model
+//!   turing.json`).  On Linux the transport is `reactor` — an epoll
+//!   readiness loop over nonblocking sockets (sharded reactor threads
+//!   plus a codec worker pool); other targets keep a sharded
+//!   thread-per-connection backend;
 //! * [`wire`] — the binary frame codec both sides of the socket share;
 //! * [`loadgen`] — the loopback load generator behind `repro loadgen`
 //!   and `benches/serve.rs` (`BENCH_serve.json`).
@@ -36,6 +40,8 @@ pub mod batch;
 pub mod loadgen;
 pub mod model;
 pub mod predict;
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod reactor;
 pub mod serve;
 pub mod wire;
 

@@ -1,0 +1,1114 @@
+//! The Linux serving backend: an epoll readiness loop.
+//!
+//! [`super::serve`] owns the protocol (mode negotiation, request
+//! dispatch, streaming envelopes) and the public surface; this module
+//! owns the *event-driven* transport that replaced PR 6's
+//! thread-per-connection model.  `shards` reactor threads each own a
+//! cloned accept handle plus a private [`Epoll`] instance of
+//! nonblocking connections, and a small codec worker pool runs the
+//! simulator work so a slow batch never stalls a reactor's event loop:
+//!
+//! ```text
+//! reactor thread (× shards)                     codec workers (× cpus)
+//!   epoll_wait ──► accept / read / write          pool.next() ──► decode
+//!   frame rbuf ──► Pool::submit ─────────────────►  dispatch (batch::handle)
+//!   Inbox drain ◄──────────────────────────────── encode + Inbox::push
+//!   emit in seq order ──► wbuf ──► socket              │ wake-pipe byte
+//!   ▲ epoll woken by the wake pipe ◄───────────────────┘
+//! ```
+//!
+//! **Pipelining.**  Each framed request takes a per-connection sequence
+//! number; workers answer out of order into per-seq [`PendingJob`]
+//! buckets and the reactor emits strictly at the `next_emit` cursor, so
+//! responses always come back in request order (the wire contract)
+//! while the simulator work overlaps.  At most
+//! [`MAX_PIPELINE_DEPTH`] requests are in flight per connection;
+//! beyond that the connection *pauses* — its `EPOLLIN` interest drops
+//! and buffered bytes stay unframed — and resumes with hysteresis.
+//!
+//! **Write budgeting.**  PR 6's Condvar backpressure becomes
+//! readiness-based here: responses accumulate in `wbuf`, flushed only
+//! when the socket reports writable.  A stalled reader grows the
+//! backlog to [`WRITE_BUDGET_HIGH`], which pauses reading (the TCP
+//! receive window then pushes back on the client); dropping under
+//! [`WRITE_BUDGET_LOW`] resumes it.  Nothing is ever dropped.
+//!
+//! **Admission parity.**  The same bounded [`Admission`] accounting as
+//! the fallback backend, minus the threads: over-capacity sockets park
+//! in a deadline queue *inside the reactor* (no thread blocks) and are
+//! admitted as slots free, or rejected with the documented one-line
+//! error when the queue is full or the deadline lapses.
+//!
+//! Error-path parity with the fallback backend is byte-exact: the same
+//! oversized-line / bad-magic / too-large / bad-payload messages, the
+//! same answer-once-then-close semantics (with a bounded drain so the
+//! close cannot RST the error off the wire), and the same blank-line
+//! and EOF-terminated-final-line JSON behavior.
+
+use super::serve::{
+    drain_briefly, reject, respond_stream, respond_value, streaming_envelope, Admission,
+    SharedOracleSet, SlotGuard, ACCEPT_QUEUE_DEADLINE, ACCEPT_QUEUE_DEPTH, MAX_CONNECTIONS,
+    MAX_PIPELINE_DEPTH, MAX_REQUEST_BYTES, WRITE_BUDGET_HIGH, WRITE_BUDGET_LOW,
+};
+use super::{batch, wire};
+use crate::util::epoll::{self, Epoll, EpollEvent};
+use crate::util::json::{self, Value};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Epoll token of each reactor's listener registration.
+const TOKEN_LISTENER: u64 = u64::MAX;
+/// Epoll token of the worker→reactor wake pipe.
+const TOKEN_WAKE: u64 = u64::MAX - 1;
+/// Readiness records fetched per `epoll_wait`.
+const EVENTS_PER_WAIT: usize = 128;
+/// Bytes per nonblocking `read` call.
+const READ_CHUNK: usize = 64 * 1024;
+/// Baseline wait timeout: bounds shutdown latency and paces the parked
+/// admission-queue deadline scan.
+const WAIT_MS: i32 = 100;
+
+const QUEUE_FULL_MSG: &str =
+    "server at connection capacity (admission queue full), retry later";
+const DEADLINE_MSG: &str =
+    "server at connection capacity (admission deadline expired), retry later";
+
+/// Spawn the codec workers and `shards` reactor threads.  Drop-in for
+/// the fallback `Server::start` body: same listener, same shutdown
+/// flag, same join semantics ([`super::serve::ServerHandle::stop`]'s
+/// throwaway wake connection pops `epoll_wait` just like it pops a
+/// blocking `accept`).
+pub(crate) fn start(
+    shared: Arc<SharedOracleSet>,
+    listener: TcpListener,
+    shards: usize,
+    shutdown: Arc<AtomicBool>,
+) -> io::Result<Vec<JoinHandle<()>>> {
+    // One nonblocking flag serves every shard: `try_clone` shares the
+    // file description, so flipping it here covers all clones.
+    listener.set_nonblocking(true)?;
+    let admission = Arc::new(Admission::new(MAX_CONNECTIONS, ACCEPT_QUEUE_DEPTH));
+    let pool = Arc::new(Pool::new());
+    let workers = worker_count();
+    let mut joins = Vec::with_capacity(shards + workers);
+    for _ in 0..workers {
+        let shared = Arc::clone(&shared);
+        let pool = Arc::clone(&pool);
+        joins.push(std::thread::spawn(move || worker_loop(&shared, &pool)));
+    }
+    for _ in 0..shards {
+        let reactor = Reactor::new(
+            listener.try_clone()?,
+            Arc::clone(&shared),
+            Arc::clone(&admission),
+            Arc::clone(&pool),
+            Arc::clone(&shutdown),
+        )?;
+        joins.push(std::thread::spawn(move || reactor.run()));
+    }
+    Ok(joins)
+}
+
+/// Codec workers: enough to overlap decode/dispatch/encode across
+/// connections, few enough not to fight the engine's own per-batch
+/// fan-out for cores.
+fn worker_count() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(2, 16)
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool: framed requests in, encoded response chunks out.
+// ---------------------------------------------------------------------------
+
+/// One framed request, ready for a codec worker.
+enum Payload {
+    /// A raw JSON line (delimiter stripped; the worker trims).
+    JsonLine(Vec<u8>),
+    /// A raw `0xB1` frame payload (magic and length already stripped).
+    Frame(Vec<u8>),
+}
+
+struct Job {
+    payload: Payload,
+    /// Which connection (within the submitting reactor).
+    token: u64,
+    /// Position in that connection's response order.
+    seq: u64,
+    /// Where the encoded response chunks go back.
+    inbox: Arc<Inbox>,
+}
+
+/// The shared job queue all reactors feed and all workers drain.
+struct Pool {
+    queue: Mutex<PoolQueue>,
+    ready: Condvar,
+}
+
+struct PoolQueue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+impl Pool {
+    fn new() -> Pool {
+        Pool {
+            queue: Mutex::new(PoolQueue { jobs: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn submit(&self, job: Job) {
+        self.queue.lock().unwrap().jobs.push_back(job);
+        self.ready.notify_one();
+    }
+
+    fn shut_down(&self) {
+        self.queue.lock().unwrap().shutdown = true;
+        self.ready.notify_all();
+    }
+
+    /// Next job, blocking; `None` once shut down *and* drained (queued
+    /// work still completes so no admitted request is ever dropped).
+    fn next(&self) -> Option<Job> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(job) = q.jobs.pop_front() {
+                return Some(job);
+            }
+            if q.shutdown {
+                return None;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+    }
+}
+
+/// One encoded response chunk flowing worker → reactor.
+struct Completion {
+    token: u64,
+    seq: u64,
+    /// Encoded wire bytes (empty for a skipped blank line — the seq
+    /// cursor still advances).
+    chunk: Vec<u8>,
+    /// Last chunk for this seq?  Streaming jobs push `done: false`
+    /// partials first, then the terminal.
+    done: bool,
+}
+
+/// Per-reactor completion queue plus the wake pipe that pops its epoll.
+struct Inbox {
+    completions: Mutex<Vec<Completion>>,
+    /// Write end, nonblocking: one byte per push.  A full pipe just
+    /// means the reactor is already scheduled to wake — the byte is a
+    /// doorbell, not data.
+    wake: UnixStream,
+}
+
+impl Inbox {
+    fn push(&self, token: u64, seq: u64, chunk: Vec<u8>, done: bool) {
+        self.completions
+            .lock()
+            .unwrap()
+            .push(Completion { token, seq, chunk, done });
+        let _ = (&self.wake).write_all(&[1u8]);
+    }
+}
+
+/// Which framing a job answers in.
+#[derive(Clone, Copy)]
+enum WireKind {
+    Json,
+    Binary,
+}
+
+/// Encode one full (terminal) response for `kind`.
+fn encode_response(kind: WireKind, v: &Value) -> Vec<u8> {
+    match kind {
+        WireKind::Json => {
+            let mut bytes = json::to_string(v).into_bytes();
+            bytes.push(b'\n');
+            bytes
+        }
+        WireKind::Binary => wire::encode_frame(v),
+    }
+}
+
+/// Encode one streamed partial for `kind` (a plain line in JSON mode, a
+/// [`wire::PARTIAL_MAGIC`] frame in binary mode).
+fn encode_partial(kind: WireKind, v: &Value) -> Vec<u8> {
+    match kind {
+        WireKind::Json => encode_response(WireKind::Json, v),
+        WireKind::Binary => wire::encode_partial_frame(v),
+    }
+}
+
+fn worker_loop(shared: &SharedOracleSet, pool: &Pool) {
+    while let Some(job) = pool.next() {
+        run_job(shared, job);
+    }
+}
+
+fn run_job(shared: &SharedOracleSet, job: Job) {
+    let Job { payload, token, seq, inbox } = job;
+    match payload {
+        Payload::JsonLine(raw) => {
+            let line = String::from_utf8_lossy(&raw);
+            let text = line.trim();
+            if text.is_empty() {
+                // Blank lines are skipped, not answered (fallback
+                // parity — `trim` also eats Unicode whitespace the
+                // reactor's byte-level framing can't see); the empty
+                // done chunk still advances the emit cursor.
+                inbox.push(token, seq, Vec::new(), true);
+                return;
+            }
+            match json::parse(text) {
+                Err(e) => {
+                    let err = Value::obj()
+                        .set("ok", false)
+                        .set("error", format!("bad json: {e}"));
+                    inbox.push(token, seq, encode_response(WireKind::Json, &err), true);
+                }
+                Ok(v) => answer(shared, &inbox, token, seq, &v, WireKind::Json),
+            }
+        }
+        Payload::Frame(payload) => match wire::decode_value(&payload) {
+            Err(e) => {
+                let err = Value::obj()
+                    .set("ok", false)
+                    .set("error", format!("bad frame payload: {e}"));
+                inbox.push(token, seq, encode_response(WireKind::Binary, &err), true);
+            }
+            Ok(v) => answer(shared, &inbox, token, seq, &v, WireKind::Binary),
+        },
+    }
+}
+
+/// Dispatch one decoded request and push its encoded response chunks:
+/// a streaming envelope pushes one partial per completed slot before
+/// the terminal; everything else pushes exactly one done chunk.
+fn answer(
+    shared: &SharedOracleSet,
+    inbox: &Arc<Inbox>,
+    token: u64,
+    seq: u64,
+    v: &Value,
+    kind: WireKind,
+) {
+    let set = shared.current();
+    let ctx = batch::ServeCtx { set: &set, shared: Some(shared) };
+    match streaming_envelope(v) {
+        Some(Err(err)) => inbox.push(token, seq, encode_response(kind, &err), true),
+        Some(Ok(env)) => {
+            let terminal = respond_stream(ctx, &env, &mut |partial| {
+                inbox.push(token, seq, encode_partial(kind, &partial), false);
+            });
+            inbox.push(token, seq, encode_response(kind, &terminal), true);
+        }
+        None => {
+            let response = respond_value(ctx, v);
+            inbox.push(token, seq, encode_response(kind, &response), true);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection state.
+// ---------------------------------------------------------------------------
+
+/// Wire mode of one reactor connection.
+enum ConnMode {
+    /// First byte not seen yet.
+    Unknown,
+    Json,
+    Binary,
+    /// A terminal protocol error was synthesized: swallow further input
+    /// until the queued error flushes and the socket closes.
+    Discard,
+}
+
+/// Response chunks for one seq, accumulating until emitted in order.
+#[derive(Default)]
+struct PendingJob {
+    chunks: Vec<Vec<u8>>,
+    done: bool,
+    /// Close the connection once this response is on the wire (terminal
+    /// protocol errors: oversized line, bad magic, too-large frame).
+    close_after: bool,
+}
+
+struct Conn {
+    stream: TcpStream,
+    fd: i32,
+    mode: ConnMode,
+    /// Unframed request bytes.
+    rbuf: Vec<u8>,
+    /// Newline-scan cursor into `rbuf` (JSON mode): bytes before it are
+    /// known newline-free, so dribbled input isn't rescanned from zero.
+    scanned: usize,
+    /// Encoded-but-unsent response bytes; `wpos` is the flushed prefix.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Seq the next framed request will take.
+    next_seq: u64,
+    /// Seq whose response goes on the wire next — the ordering cursor.
+    next_emit: u64,
+    /// In-flight and not-yet-emitted responses by seq.
+    pending: BTreeMap<u64, PendingJob>,
+    /// Depth/budget pause: reading and framing stop, resume with
+    /// hysteresis (see [`update_pause`]).
+    paused: bool,
+    /// Peer sent EOF (half-open): finish every answer, then close.
+    eof: bool,
+    /// A `close_after` response has reached `wbuf`: stop framing, close
+    /// once flushed.
+    closing: bool,
+    /// Drain briefly on a helper thread at close so `close()` can't RST
+    /// the final response off the wire (terminal-error parity with the
+    /// fallback backend).
+    drain_on_close: bool,
+    /// Fatal socket error: tear down now, nothing left to salvage.
+    dead: bool,
+    /// Interest bits currently registered with epoll.
+    registered: u32,
+    /// Admission slot, released when the connection drops.
+    _slot: SlotGuard,
+}
+
+/// Synthesize a terminal protocol-error response: queued at the next
+/// seq so every already-pipelined answer still goes out first and in
+/// order, then the connection discards input and closes after a drain.
+fn poison(conn: &mut Conn, kind: WireKind, message: &str) {
+    let err = Value::obj().set("ok", false).set("error", message);
+    let seq = conn.next_seq;
+    conn.next_seq += 1;
+    conn.pending.insert(
+        seq,
+        PendingJob {
+            chunks: vec![encode_response(kind, &err)],
+            done: true,
+            close_after: true,
+        },
+    );
+    conn.drain_on_close = true;
+    conn.mode = ConnMode::Discard;
+    conn.rbuf.clear();
+    conn.scanned = 0;
+}
+
+/// Depth/budget pause hysteresis.  Returns `true` when the connection
+/// just *unpaused* — buffered input may already hold complete requests,
+/// so the caller must re-run the framing pump (no new `EPOLLIN` is
+/// guaranteed for bytes that were read before the pause).
+fn update_pause(conn: &mut Conn) -> bool {
+    let backlog = conn.wbuf.len() - conn.wpos;
+    let inflight = (conn.next_seq - conn.next_emit) as usize;
+    if conn.paused {
+        if backlog <= WRITE_BUDGET_LOW && inflight < MAX_PIPELINE_DEPTH / 2 {
+            conn.paused = false;
+            return true;
+        }
+    } else if backlog >= WRITE_BUDGET_HIGH || inflight >= MAX_PIPELINE_DEPTH {
+        conn.paused = true;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// The reactor.
+// ---------------------------------------------------------------------------
+
+struct Reactor {
+    ep: Epoll,
+    listener: TcpListener,
+    /// Read end of the worker wake pipe.
+    wake_rx: UnixStream,
+    inbox: Arc<Inbox>,
+    conns: HashMap<u64, Conn>,
+    /// Admission queue: accepted sockets waiting for a slot, each with
+    /// its rejection deadline.
+    parked: VecDeque<(TcpStream, Instant)>,
+    next_token: u64,
+    shared: Arc<SharedOracleSet>,
+    admission: Arc<Admission>,
+    pool: Arc<Pool>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Reactor {
+    fn new(
+        listener: TcpListener,
+        shared: Arc<SharedOracleSet>,
+        admission: Arc<Admission>,
+        pool: Arc<Pool>,
+        shutdown: Arc<AtomicBool>,
+    ) -> io::Result<Reactor> {
+        let ep = Epoll::new()?;
+        let (wake_rx, wake_tx) = UnixStream::pair()?;
+        // Both ends nonblocking: a full pipe must never block a worker
+        // (doorbell semantics) and the reactor drains without stalling.
+        wake_rx.set_nonblocking(true)?;
+        wake_tx.set_nonblocking(true)?;
+        ep.add(listener.as_raw_fd(), epoll::EPOLLIN, TOKEN_LISTENER)?;
+        ep.add(wake_rx.as_raw_fd(), epoll::EPOLLIN, TOKEN_WAKE)?;
+        Ok(Reactor {
+            ep,
+            listener,
+            wake_rx,
+            inbox: Arc::new(Inbox { completions: Mutex::new(Vec::new()), wake: wake_tx }),
+            conns: HashMap::new(),
+            parked: VecDeque::new(),
+            next_token: 0,
+            shared,
+            admission,
+            pool,
+            shutdown,
+        })
+    }
+
+    fn run(mut self) {
+        let mut events = vec![EpollEvent::zeroed(); EVENTS_PER_WAIT];
+        while !self.shutdown.load(Ordering::SeqCst) {
+            let timeout = self.wait_timeout_ms();
+            // Wait errors degrade to a timeout tick: the loop keeps
+            // serving and the shutdown flag stays authoritative.
+            let n = self.ep.wait(&mut events, timeout).unwrap_or(0);
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            for ev in &events[..n] {
+                let token = ev.token();
+                match token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKE => self.drain_wake(),
+                    _ => self.conn_event(token, ev.events()),
+                }
+            }
+            self.apply_completions();
+            self.retry_parked();
+        }
+        // Workers drain queued jobs, then exit; in-flight completions
+        // land in inboxes nobody reads, which is fine — the sockets die
+        // with the reactor.
+        self.pool.shut_down();
+    }
+
+    /// Baseline tick, shortened to the nearest parked-socket deadline.
+    fn wait_timeout_ms(&self) -> i32 {
+        let Some(nearest) = self.parked.iter().map(|(_, d)| *d).min() else {
+            return WAIT_MS;
+        };
+        let left = nearest.saturating_duration_since(Instant::now()).as_millis() as i64;
+        left.clamp(1, i64::from(WAIT_MS)) as i32
+    }
+
+    // -- accept & admission ------------------------------------------------
+
+    fn accept_ready(&mut self) {
+        loop {
+            let stream = match self.listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                // Transient accept errors (EMFILE …): back off to the
+                // next tick rather than spinning on the listener.
+                Err(_) => return,
+            };
+            if self.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            // Responses are one small line/frame each; don't let Nagle
+            // hold them back against the client's next request.
+            let _ = stream.set_nodelay(true);
+            if self.admission.try_acquire() {
+                let slot = SlotGuard::new(Arc::clone(&self.admission));
+                self.register(stream, slot);
+            } else if self.admission.try_park() {
+                // Full house: park the socket in the bounded queue (no
+                // thread blocks) with the same deadline the fallback's
+                // Condvar wait enforced.
+                self.shared.note_admission_wait();
+                self.parked
+                    .push_back((stream, Instant::now() + ACCEPT_QUEUE_DEADLINE));
+            } else {
+                reject_on_thread(stream, QUEUE_FULL_MSG);
+            }
+        }
+    }
+
+    /// Admit parked sockets as slots free; reject the ones whose
+    /// deadline lapsed.
+    fn retry_parked(&mut self) {
+        while !self.parked.is_empty() {
+            if !self.admission.try_acquire() {
+                break;
+            }
+            let (stream, _) = self.parked.pop_front().expect("non-empty parked queue");
+            self.admission.unpark();
+            let slot = SlotGuard::new(Arc::clone(&self.admission));
+            self.register(stream, slot);
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.parked.len() {
+            if self.parked[i].1 <= now {
+                let (stream, _) = self.parked.remove(i).expect("index in bounds");
+                self.admission.unpark();
+                reject_on_thread(stream, DEADLINE_MSG);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn register(&mut self, stream: TcpStream, slot: SlotGuard) {
+        // Early returns drop `slot`, releasing the admission count.
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let fd = stream.as_raw_fd();
+        let token = self.next_token;
+        self.next_token += 1;
+        let want = epoll::EPOLLIN | epoll::EPOLLRDHUP;
+        if self.ep.add(fd, want, token).is_err() {
+            return;
+        }
+        self.conns.insert(
+            token,
+            Conn {
+                stream,
+                fd,
+                mode: ConnMode::Unknown,
+                rbuf: Vec::new(),
+                scanned: 0,
+                wbuf: Vec::new(),
+                wpos: 0,
+                next_seq: 0,
+                next_emit: 0,
+                pending: BTreeMap::new(),
+                paused: false,
+                eof: false,
+                closing: false,
+                drain_on_close: false,
+                dead: false,
+                registered: want,
+                _slot: slot,
+            },
+        );
+    }
+
+    // -- event dispatch ----------------------------------------------------
+
+    fn conn_event(&mut self, token: u64, bits: u32) {
+        if bits & epoll::EPOLLERR != 0 {
+            // Socket error: nothing left to salvage on this fd.
+            self.close_conn(token);
+            return;
+        }
+        if bits & (epoll::EPOLLIN | epoll::EPOLLRDHUP | epoll::EPOLLHUP) != 0 {
+            // Hangups surface through the read path as a clean EOF, so
+            // half-open clients still get every pipelined answer.
+            self.readable(token);
+        } else if bits & epoll::EPOLLOUT != 0 {
+            self.advance(token);
+        }
+    }
+
+    /// Swallow the doorbell bytes; the completions they announce are
+    /// picked up by [`Reactor::apply_completions`] right after event
+    /// dispatch.
+    fn drain_wake(&mut self) {
+        let mut sink = [0u8; 256];
+        let mut rx = &self.wake_rx;
+        loop {
+            match rx.read(&mut sink) {
+                Ok(0) => break,
+                Ok(_) => {}
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => break, // WouldBlock: drained
+            }
+        }
+    }
+
+    /// Move worker completions into their connections' pending buckets,
+    /// then pump every touched connection.
+    fn apply_completions(&mut self) {
+        let completions = std::mem::take(&mut *self.inbox.completions.lock().unwrap());
+        let mut touched: Vec<u64> = Vec::new();
+        for c in completions {
+            let Some(conn) = self.conns.get_mut(&c.token) else {
+                continue; // connection died while the job was in flight
+            };
+            let job = conn.pending.entry(c.seq).or_default();
+            if !c.chunk.is_empty() {
+                job.chunks.push(c.chunk);
+            }
+            if c.done {
+                job.done = true;
+            }
+            if !touched.contains(&c.token) {
+                touched.push(c.token);
+            }
+        }
+        for token in touched {
+            self.advance(token);
+        }
+    }
+
+    // -- the per-connection pump -------------------------------------------
+
+    fn readable(&mut self, token: u64) {
+        let mut hard_error = false;
+        if let Some(conn) = self.conns.get_mut(&token) {
+            let mut buf = [0u8; READ_CHUNK];
+            while !conn.eof && !conn.dead {
+                let discard = matches!(conn.mode, ConnMode::Discard);
+                if conn.paused && !discard {
+                    break;
+                }
+                // Past the framing caps there is nothing useful to
+                // buffer; let framing turn what's there into an error.
+                if !discard && conn.rbuf.len() as u64 > MAX_REQUEST_BYTES + READ_CHUNK as u64 {
+                    break;
+                }
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        if !discard {
+                            conn.rbuf.extend_from_slice(&buf[..n]);
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        hard_error = true;
+                        break;
+                    }
+                }
+            }
+        } else {
+            return;
+        }
+        if hard_error {
+            if let Some(conn) = self.conns.get_mut(&token) {
+                conn.dead = true;
+            }
+        }
+        self.advance(token);
+    }
+
+    /// The pump: frame buffered requests, emit completed responses in
+    /// seq order, flush, and re-run after an unpause (buffered bytes
+    /// won't raise a fresh `EPOLLIN`).  Ends by settling registration
+    /// or closing.
+    fn advance(&mut self, token: u64) {
+        loop {
+            self.frame_requests(token);
+            self.emit_ready(token);
+            self.flush(token);
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.dead || !update_pause(conn) {
+                break;
+            }
+        }
+        self.settle(token);
+    }
+
+    /// Carve complete requests out of `rbuf` and hand them to the
+    /// worker pool, respecting the pipeline depth.
+    fn frame_requests(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        loop {
+            if conn.dead || conn.closing || conn.paused {
+                return;
+            }
+            if matches!(conn.mode, ConnMode::Unknown) {
+                let Some(&first) = conn.rbuf.first() else {
+                    break;
+                };
+                // 0xB1 can't start a JSON document (it isn't valid
+                // UTF-8), so one byte settles the mode — same
+                // negotiation as the fallback's peek.
+                conn.mode = if first == wire::MAGIC {
+                    ConnMode::Binary
+                } else {
+                    ConnMode::Json
+                };
+            }
+            if (conn.next_seq - conn.next_emit) as usize >= MAX_PIPELINE_DEPTH {
+                conn.paused = true;
+                return;
+            }
+            match conn.mode {
+                ConnMode::Unknown => unreachable!("mode settled above"),
+                ConnMode::Discard => return,
+                ConnMode::Json => {
+                    let nl = conn.rbuf[conn.scanned..]
+                        .iter()
+                        .position(|&b| b == b'\n')
+                        .map(|p| conn.scanned + p);
+                    match nl {
+                        Some(pos) if (pos as u64) < MAX_REQUEST_BYTES => {
+                            let mut line: Vec<u8> =
+                                conn.rbuf.drain(..=pos).collect();
+                            line.pop(); // the newline
+                            conn.scanned = 0;
+                            let seq = conn.next_seq;
+                            conn.next_seq += 1;
+                            self.pool.submit(Job {
+                                payload: Payload::JsonLine(line),
+                                token,
+                                seq,
+                                inbox: Arc::clone(&self.inbox),
+                            });
+                        }
+                        _ if conn.rbuf.len() as u64 >= MAX_REQUEST_BYTES => {
+                            // Newline never came within the cap:
+                            // answer once, hang up (fallback parity).
+                            poison(
+                                conn,
+                                WireKind::Json,
+                                "request line exceeds the 8 MiB limit",
+                            );
+                            return;
+                        }
+                        _ if conn.eof => {
+                            // The fallback's `read_until` hands back an
+                            // unterminated final line at EOF — frame it
+                            // the same way (blank tails are skipped by
+                            // the worker's trim).
+                            let line = std::mem::take(&mut conn.rbuf);
+                            conn.scanned = 0;
+                            if line.iter().all(u8::is_ascii_whitespace) {
+                                return;
+                            }
+                            let seq = conn.next_seq;
+                            conn.next_seq += 1;
+                            self.pool.submit(Job {
+                                payload: Payload::JsonLine(line),
+                                token,
+                                seq,
+                                inbox: Arc::clone(&self.inbox),
+                            });
+                            return;
+                        }
+                        _ => {
+                            conn.scanned = conn.rbuf.len();
+                            return;
+                        }
+                    }
+                }
+                ConnMode::Binary => {
+                    let Some(&magic) = conn.rbuf.first() else {
+                        return;
+                    };
+                    if magic != wire::MAGIC {
+                        // Desynchronized (this also catches a client
+                        // *sending* the server-only 0xB2 partial tag).
+                        let msg = format!(
+                            "bad frame magic 0x{magic:02x} (stream desynchronized)"
+                        );
+                        poison(conn, WireKind::Binary, &msg);
+                        return;
+                    }
+                    if conn.rbuf.len() < 5 {
+                        return;
+                    }
+                    let len = u32::from_le_bytes(
+                        conn.rbuf[1..5].try_into().expect("4-byte slice"),
+                    );
+                    if len > wire::MAX_FRAME_BYTES {
+                        let msg = format!(
+                            "frame of {len} bytes exceeds the {} byte limit",
+                            wire::MAX_FRAME_BYTES
+                        );
+                        poison(conn, WireKind::Binary, &msg);
+                        return;
+                    }
+                    let total = 5 + len as usize;
+                    if conn.rbuf.len() < total {
+                        return;
+                    }
+                    let payload: Vec<u8> = conn.rbuf.drain(..total).skip(5).collect();
+                    let seq = conn.next_seq;
+                    conn.next_seq += 1;
+                    self.pool.submit(Job {
+                        payload: Payload::Frame(payload),
+                        token,
+                        seq,
+                        inbox: Arc::clone(&self.inbox),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Move completed response chunks into `wbuf`, strictly at the
+    /// `next_emit` cursor — the per-connection ordering guarantee.
+    fn emit_ready(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        loop {
+            let next = conn.next_emit;
+            let Some(job) = conn.pending.get_mut(&next) else {
+                break;
+            };
+            let done = job.done;
+            let close = job.close_after;
+            // Streamed partials flush as they land, even while the
+            // terminal is still pending.
+            let chunks = std::mem::take(&mut job.chunks);
+            for chunk in &chunks {
+                conn.wbuf.extend_from_slice(chunk);
+            }
+            if !done {
+                break;
+            }
+            conn.pending.remove(&next);
+            conn.next_emit += 1;
+            if close {
+                conn.closing = true;
+                break;
+            }
+        }
+    }
+
+    /// Write as much of `wbuf` as the socket takes right now.
+    fn flush(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        if conn.dead {
+            return;
+        }
+        while conn.wpos < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    return;
+                }
+                Ok(n) => conn.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+        if conn.wpos == conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+        } else if conn.wpos > WRITE_BUDGET_LOW {
+            // Reclaim the flushed prefix so a long-stalled reader can't
+            // pin an ever-growing buffer of already-sent bytes.
+            conn.wbuf.drain(..conn.wpos);
+            conn.wpos = 0;
+        }
+    }
+
+    /// Close, or reconcile the epoll interest set with what the
+    /// connection can use right now.
+    fn settle(&mut self, token: u64) {
+        let mut close = false;
+        if let Some(conn) = self.conns.get_mut(&token) {
+            let backlog = conn.wbuf.len() - conn.wpos;
+            if conn.dead {
+                close = true;
+            } else if conn.closing && backlog == 0 {
+                // Terminal error fully on the wire.
+                close = true;
+            } else if conn.eof && conn.pending.is_empty() && backlog == 0 {
+                // Half-open peer, every pipelined answer delivered (any
+                // unframed tail is an incomplete request that can never
+                // finish).
+                close = true;
+            } else {
+                let reading = !conn.eof
+                    && !conn.closing
+                    && (!conn.paused || matches!(conn.mode, ConnMode::Discard));
+                let mut want = 0u32;
+                if reading {
+                    want |= epoll::EPOLLIN | epoll::EPOLLRDHUP;
+                }
+                if backlog > 0 {
+                    want |= epoll::EPOLLOUT;
+                }
+                if want != conn.registered {
+                    if self.ep.modify(conn.fd, want, token).is_ok() {
+                        conn.registered = want;
+                    } else {
+                        conn.dead = true;
+                        close = true;
+                    }
+                }
+            }
+        }
+        if close {
+            self.close_conn(token);
+        }
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        let Some(conn) = self.conns.remove(&token) else { return };
+        let _ = self.ep.del(conn.fd);
+        if conn.drain_on_close && !conn.dead {
+            // Same RST avoidance as the fallback's terminal-error path,
+            // without stalling the reactor: a throwaway thread drains
+            // briefly (bounded bytes, 200 ms timeout) before the drop
+            // closes the socket.  The admission slot rides along and
+            // releases when the drain finishes.
+            let stream = conn.stream;
+            let slot = conn._slot;
+            std::thread::spawn(move || {
+                let _ = stream.set_nonblocking(false);
+                drain_briefly(&stream);
+                drop(slot);
+            });
+        }
+        // Otherwise: dropping `conn` closes the socket and releases the
+        // slot here.
+    }
+}
+
+/// Reject an over-capacity socket off the reactor thread: the one-line
+/// error plus bounded drain both block, and the reactor must not.
+fn reject_on_thread(stream: TcpStream, message: &'static str) {
+    std::thread::spawn(move || {
+        let _ = stream.set_nonblocking(false);
+        reject(&stream, message);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_hands_out_jobs_in_order_then_drains_on_shutdown() {
+        let pool = Pool::new();
+        let (wake_rx, wake_tx) = UnixStream::pair().unwrap();
+        wake_rx.set_nonblocking(true).unwrap();
+        wake_tx.set_nonblocking(true).unwrap();
+        let inbox =
+            Arc::new(Inbox { completions: Mutex::new(Vec::new()), wake: wake_tx });
+        for seq in 0..3u64 {
+            pool.submit(Job {
+                payload: Payload::JsonLine(Vec::new()),
+                token: 9,
+                seq,
+                inbox: Arc::clone(&inbox),
+            });
+        }
+        pool.shut_down();
+        // Queued jobs drain in FIFO order even after shutdown…
+        for seq in 0..3u64 {
+            let job = pool.next().expect("queued job survives shutdown");
+            assert_eq!(job.seq, seq);
+            assert_eq!(job.token, 9);
+        }
+        // …and only then does the pool report exhaustion.
+        assert!(pool.next().is_none());
+        assert!(pool.next().is_none(), "shutdown is sticky");
+    }
+
+    #[test]
+    fn worker_codec_answers_in_seq_with_streamed_partials() {
+        use crate::config::AmpereConfig;
+        use crate::engine::Engine;
+        use crate::oracle::model;
+        use crate::oracle::serve::OracleSet;
+        use crate::oracle::LatencyOracle;
+
+        let oracle =
+            LatencyOracle::with_engine(model::tiny_model(), Engine::new(AmpereConfig::a100()));
+        let shared = SharedOracleSet::new(OracleSet::single(Arc::new(oracle)));
+        let (wake_rx, wake_tx) = UnixStream::pair().unwrap();
+        wake_rx.set_nonblocking(true).unwrap();
+        wake_tx.set_nonblocking(true).unwrap();
+        let inbox =
+            Arc::new(Inbox { completions: Mutex::new(Vec::new()), wake: wake_tx });
+
+        // A plain request: exactly one done chunk, newline-terminated.
+        run_job(
+            &shared,
+            Job {
+                payload: Payload::JsonLine(br#"{"mode":"ping","id":1}"#.to_vec()),
+                token: 1,
+                seq: 0,
+                inbox: Arc::clone(&inbox),
+            },
+        );
+        // A blank line: one *empty* done chunk (cursor still advances).
+        run_job(
+            &shared,
+            Job {
+                payload: Payload::JsonLine(b"   ".to_vec()),
+                token: 1,
+                seq: 1,
+                inbox: Arc::clone(&inbox),
+            },
+        );
+        // A streaming envelope in binary framing: partials then the
+        // 0xB1 terminal.
+        let env = Value::obj().set(
+            "stream",
+            Value::Arr(vec![
+                Value::obj().set("mode", "ping"),
+                Value::obj().set("mode", "ping"),
+            ]),
+        );
+        run_job(
+            &shared,
+            Job {
+                payload: Payload::Frame(wire::encode_value(&env)),
+                token: 1,
+                seq: 2,
+                inbox: Arc::clone(&inbox),
+            },
+        );
+
+        let completions = std::mem::take(&mut *inbox.completions.lock().unwrap());
+        let by_seq = |s: u64| -> Vec<&Completion> {
+            completions.iter().filter(|c| c.seq == s).collect()
+        };
+
+        let ping = by_seq(0);
+        assert_eq!(ping.len(), 1);
+        assert!(ping[0].done);
+        assert!(ping[0].chunk.ends_with(b"\n"));
+        let v = json::parse(std::str::from_utf8(&ping[0].chunk).unwrap().trim()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("id"), Some(&Value::from(1u64)));
+
+        let blank = by_seq(1);
+        assert_eq!(blank.len(), 1);
+        assert!(blank[0].done && blank[0].chunk.is_empty());
+
+        let streamed = by_seq(2);
+        assert_eq!(streamed.len(), 3, "two partials plus the terminal");
+        assert!(streamed[..2]
+            .iter()
+            .all(|c| !c.done && c.chunk[0] == wire::PARTIAL_MAGIC));
+        assert!(streamed[2].done);
+        assert_eq!(streamed[2].chunk[0], wire::MAGIC);
+        let terminal =
+            wire::decode_value(&streamed[2].chunk[5..]).expect("terminal payload");
+        assert_eq!(terminal.get("streamed"), Some(&Value::from(2u64)));
+
+        // The doorbell rang once per push.
+        let mut sink = [0u8; 64];
+        let mut rx = &wake_rx;
+        assert_eq!(rx.read(&mut sink).unwrap(), completions.len());
+    }
+}

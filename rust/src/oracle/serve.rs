@@ -75,6 +75,36 @@
 //! engine the old model ran against — a mismatch is rejected with the
 //! `geometry_mismatch` error and the old model keeps serving.
 //!
+//! ## Pipelining
+//!
+//! Both framings self-delimit (`\n` / the length prefix), so a client
+//! may send many requests without waiting for answers.  The server
+//! decodes up to [`MAX_PIPELINE_DEPTH`] in-flight requests per
+//! connection, overlaps their simulator work across the worker pool,
+//! and writes the responses back **in request order** — the
+//! per-connection ordering guarantee clients key responses off when
+//! they don't use `"id"`.
+//!
+//! ## Streaming
+//!
+//! A batch normally answers as one array — the response waits on the
+//! slowest slot.  Wrapping the batch in a *streaming envelope*
+//!
+//! ```text
+//! {"stream": [ <request>, <request>, … ], "id": …}
+//! ```
+//!
+//! instead flushes each slot as the engine completes it:
+//! `{"partial": true, "index": i, "response": {…}}` per slot
+//! (completion order — `index` says which slot), then one terminal
+//! `{"done": true, "ok": true, "streamed": n, "failed": f, "id": …}`.
+//! In the JSON mode partials are ordinary lines; in the binary mode
+//! they ride [`wire::PARTIAL_MAGIC`] (`0xB2`) frames and the terminal
+//! rides an ordinary `0xB1` frame.  The envelope is wire-level opt-in:
+//! a `"stream"` field inside a plain request or batch slot stays the
+//! documented unknown-field error, so all pre-streaming behaviour is
+//! byte-identical.
+//!
 //! ## Backpressure
 //!
 //! Beyond [`MAX_CONNECTIONS`] live connections, new connections *wait*
@@ -83,24 +113,37 @@
 //! deadline earns the one-line error response.  Because rejection
 //! happens before the first byte is read (mode negotiation never ran),
 //! backpressure errors are always a JSON line, in both wire modes.
+//! Within a connection, backpressure is readiness-based write
+//! budgeting: a client that stalls its reads accumulates at most
+//! [`WRITE_BUDGET_HIGH`] buffered response bytes before the server
+//! stops reading (and decoding) its requests, resuming below
+//! [`WRITE_BUDGET_LOW`] — responses are never dropped, the lazy
+//! reader just stops being allowed to queue new work.
 //!
 //! ## Threading
 //!
-//! N accept shards ([`Server::shards`], one cloned listener handle
-//! each — the kernel load-balances `accept` across them), one thread
-//! per admitted connection, and per-batch fan-out on the shared
-//! engine's work queue (scoped threads per batch — the same execution
-//! model the campaign uses).  All connections share one
-//! [`SharedOracleSet`]: one sharded prediction cache, one bounded
-//! compiled-kernel cache, one simulator pool per hosted model.
+//! On Linux the server is an **epoll reactor** (`oracle::reactor`,
+//! readiness via the raw-syscall shim [`crate::util::epoll`]):
+//! [`Server::shards`] reactor threads each own an epoll instance, a
+//! cloned nonblocking listener handle and a set of nonblocking
+//! connections; framing and socket I/O happen on the reactor, while
+//! decode → dispatch → encode runs on a small worker pool whose
+//! completions flow back over a wake pipe.  Per-batch fan-out still
+//! rides the shared engine's work queue (scoped threads per batch —
+//! the same execution model the campaign uses).  On other platforms
+//! the pre-reactor backend compiles in unchanged: N blocking accept
+//! shards and one thread per admitted connection.  Either way all
+//! connections share one [`SharedOracleSet`]: one sharded prediction
+//! cache, one bounded compiled-kernel cache, one simulator pool per
+//! hosted model.
 
 use super::{batch, wire, LatencyOracle};
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -120,6 +163,18 @@ pub const ACCEPT_QUEUE_DEADLINE: Duration = Duration::from_secs(2);
 
 /// Upper bound on accept shards (`available_parallelism` below it).
 pub const MAX_ACCEPT_SHARDS: usize = 8;
+
+/// Most in-flight pipelined requests decoded per connection before the
+/// server stops framing (and, transitively, reading) that socket.
+pub const MAX_PIPELINE_DEPTH: usize = 64;
+
+/// Write budget: a connection whose client stalls its reads may buffer
+/// at most this many response bytes before its requests stop being
+/// read.  Responses are never dropped — framing just pauses.
+pub const WRITE_BUDGET_HIGH: usize = 1024 * 1024;
+
+/// Reads resume once the buffered response backlog drains below this.
+pub const WRITE_BUDGET_LOW: usize = 64 * 1024;
 
 /// Accept-shard count for this machine.
 pub fn default_shards() -> usize {
@@ -253,6 +308,15 @@ impl SharedOracleSet {
         self.admission_waits.load(Ordering::Relaxed)
     }
 
+    /// Count one parked connection (the reactor's admission path).
+    #[cfg_attr(
+        not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))),
+        allow(dead_code)
+    )]
+    pub(crate) fn note_admission_wait(&self) {
+        self.admission_waits.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Load a model JSON and atomically swap it in for its
     /// architecture.  Validation before any swap: the file must load,
     /// its arch must already be hosted (reload replaces, it does not
@@ -287,6 +351,10 @@ impl SharedOracleSet {
 }
 
 /// Outcome of asking the admission controller for a connection slot.
+#[cfg_attr(
+    all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")),
+    allow(dead_code)
+)]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Admit {
     Granted,
@@ -295,10 +363,12 @@ enum Admit {
 }
 
 /// Bounded-queue admission: up to `cap` connections are live, up to
-/// `queue_depth` more wait (each a parked thread) for a freed slot
-/// until their deadline.  Replaces the old reject-at-capacity policy —
-/// a short burst now queues instead of erroring.
-struct Admission {
+/// `queue_depth` more wait for a freed slot until their deadline.
+/// Replaces the old reject-at-capacity policy — a short burst now
+/// queues instead of erroring.  The blocking [`Admission::acquire`]
+/// parks a thread (the fallback backend); the reactor uses the
+/// nonblocking `try_*` surface and parks *sockets* instead.
+pub(crate) struct Admission {
     state: Mutex<AdmissionState>,
     freed: Condvar,
     cap: usize,
@@ -311,7 +381,7 @@ struct AdmissionState {
 }
 
 impl Admission {
-    fn new(cap: usize, queue_depth: usize) -> Admission {
+    pub(crate) fn new(cap: usize, queue_depth: usize) -> Admission {
         Admission {
             state: Mutex::new(AdmissionState { active: 0, waiting: 0 }),
             freed: Condvar::new(),
@@ -320,8 +390,54 @@ impl Admission {
         }
     }
 
+    /// Claim a slot now if one is free — never parks (reactor path).
+    #[cfg_attr(
+        not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))),
+        allow(dead_code)
+    )]
+    pub(crate) fn try_acquire(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.active < self.cap {
+            st.active += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Reserve a waiting-queue seat (reactor path: the *socket* parks
+    /// in the reactor's deadline queue, no thread blocks).  Pair every
+    /// `true` with exactly one later [`Admission::unpark`].
+    #[cfg_attr(
+        not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))),
+        allow(dead_code)
+    )]
+    pub(crate) fn try_park(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.waiting < self.queue_depth {
+            st.waiting += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Give back a [`Admission::try_park`] seat (granted or expired).
+    #[cfg_attr(
+        not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))),
+        allow(dead_code)
+    )]
+    pub(crate) fn unpark(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.waiting = st.waiting.saturating_sub(1);
+    }
+
     /// `waits` counts every connection that had to park (whether it is
     /// later granted or times out) — surfaced by the `metrics` mode.
+    #[cfg_attr(
+        all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")),
+        allow(dead_code)
+    )]
     fn acquire(&self, deadline: Duration, waits: &AtomicU64) -> Admit {
         let mut st = self.state.lock().unwrap();
         if st.active < self.cap {
@@ -358,6 +474,10 @@ impl Admission {
 
     /// Park until a slot frees (or `max_wait`) without claiming one —
     /// the accept loop's stall when `accept` itself fails.
+    #[cfg_attr(
+        all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")),
+        allow(dead_code)
+    )]
     fn wait_for_capacity(&self, max_wait: Duration) {
         let st = self.state.lock().unwrap();
         if st.active < self.cap {
@@ -367,9 +487,20 @@ impl Admission {
     }
 }
 
-/// Releases the connection's admission slot when its thread ends,
-/// unwinding included, and wakes one queued waiter.
-struct SlotGuard(Arc<Admission>);
+/// Releases the connection's admission slot when the connection ends
+/// (thread exit or reactor close), unwinding included, and wakes one
+/// queued waiter.
+pub(crate) struct SlotGuard(Arc<Admission>);
+
+impl SlotGuard {
+    #[cfg_attr(
+        not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))),
+        allow(dead_code)
+    )]
+    pub(crate) fn new(admission: Arc<Admission>) -> SlotGuard {
+        SlotGuard(admission)
+    }
+}
 
 impl Drop for SlotGuard {
     fn drop(&mut self) {
@@ -434,6 +565,15 @@ impl Server {
         Ok(ServerHandle { addr, shutdown, shards, joins })
     }
 
+    /// Linux: hand everything to the epoll reactor backend.
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn start(self, shutdown: Arc<AtomicBool>) -> io::Result<Vec<JoinHandle<()>>> {
+        let Server { shared, listener, shards } = self;
+        super::reactor::start(shared, listener, shards, shutdown)
+    }
+
+    /// Other targets: the pre-reactor thread-per-connection backend.
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
     fn start(self, shutdown: Arc<AtomicBool>) -> io::Result<Vec<JoinHandle<()>>> {
         let Server { shared, listener, shards } = self;
         let admission = Arc::new(Admission::new(MAX_CONNECTIONS, ACCEPT_QUEUE_DEPTH));
@@ -454,6 +594,10 @@ impl Server {
     }
 }
 
+#[cfg_attr(
+    all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")),
+    allow(dead_code)
+)]
 fn accept_shard(
     listener: &TcpListener,
     shared: &Arc<SharedOracleSet>,
@@ -514,7 +658,7 @@ fn accept_shard(
 /// request already; closing with those bytes unread makes the kernel
 /// RST the socket and destroy the error in flight, so drain briefly
 /// (bounded, short timeout) before dropping.
-fn reject(stream: &TcpStream, message: &str) {
+pub(crate) fn reject(stream: &TcpStream, message: &str) {
     let err = Value::obj().set("ok", false).set("error", message);
     let mut writer = BufWriter::new(stream);
     let _ = writer.write_all(json::to_string(&err).as_bytes());
@@ -526,7 +670,7 @@ fn reject(stream: &TcpStream, message: &str) {
 
 /// Bounded, short-timeout drain of unread receive data before close —
 /// see [`reject`] for why (RST would destroy the response in flight).
-fn drain_briefly(stream: &TcpStream) {
+pub(crate) fn drain_briefly(stream: &TcpStream) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
     let mut reader = stream;
     let mut sink = [0u8; 8192];
@@ -589,10 +733,14 @@ impl Drop for ServerHandle {
 /// Largest accepted request line.  A 64-kernel batch is ~0.5 MiB; the
 /// cap bounds memory against a stream that never sends a newline.  The
 /// binary mode's [`wire::MAX_FRAME_BYTES`] mirrors it.
-const MAX_REQUEST_BYTES: u64 = 8 * 1024 * 1024;
+pub(crate) const MAX_REQUEST_BYTES: u64 = 8 * 1024 * 1024;
 
 /// One client connection: peek the first byte to pick the wire mode,
 /// then loop request → response until EOF.
+#[cfg_attr(
+    all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")),
+    allow(dead_code)
+)]
 fn serve_connection(shared: &SharedOracleSet, stream: TcpStream) -> io::Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let writer = BufWriter::new(stream);
@@ -619,6 +767,10 @@ fn serve_connection(shared: &SharedOracleSet, stream: TcpStream) -> io::Result<(
 /// byte becomes U+FFFD, fails JSON parsing, and earns an `ok:false`
 /// response — per the module contract, malformed input never tears the
 /// connection down (only real socket errors do).
+#[cfg_attr(
+    all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")),
+    allow(dead_code)
+)]
 fn serve_json(
     shared: &SharedOracleSet,
     mut reader: BufReader<TcpStream>,
@@ -635,9 +787,7 @@ fn serve_json(
             let err = Value::obj()
                 .set("ok", false)
                 .set("error", "request line exceeds the 8 MiB limit");
-            writer.write_all(json::to_string(&err).as_bytes())?;
-            writer.write_all(b"\n")?;
-            writer.flush()?;
+            write_json_line(&mut writer, &err)?;
             // Drain the rest of the oversized line (bounded, with a
             // short timeout so an idle client can't pin this thread)
             // before closing: unread receive data makes close() send
@@ -665,11 +815,47 @@ fn serve_json(
         if text.is_empty() {
             continue;
         }
-        let response = respond_shared(shared, text);
-        writer.write_all(json::to_string(&response).as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        match json::parse(text) {
+            Err(e) => {
+                let err =
+                    Value::obj().set("ok", false).set("error", format!("bad json: {e}"));
+                write_json_line(&mut writer, &err)?;
+            }
+            Ok(v) => {
+                let set = shared.current();
+                let ctx = batch::ServeCtx { set: &set, shared: Some(shared) };
+                match streaming_envelope(&v) {
+                    Some(Err(err)) => write_json_line(&mut writer, &err)?,
+                    Some(Ok(env)) => {
+                        let mut io_err: Option<io::Error> = None;
+                        let terminal = respond_stream(ctx, &env, &mut |partial| {
+                            if io_err.is_none() {
+                                if let Err(e) = write_json_line(&mut writer, &partial) {
+                                    io_err = Some(e);
+                                }
+                            }
+                        });
+                        if let Some(e) = io_err {
+                            return Err(e);
+                        }
+                        write_json_line(&mut writer, &terminal)?;
+                    }
+                    None => write_json_line(&mut writer, &respond_value(ctx, &v))?,
+                }
+            }
+        }
     }
+}
+
+/// One canonical-JSON value as a flushed response line.
+#[cfg_attr(
+    all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")),
+    allow(dead_code)
+)]
+fn write_json_line(writer: &mut BufWriter<TcpStream>, v: &Value) -> io::Result<()> {
+    writer.write_all(json::to_string(v).as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
 }
 
 /// Binary-frame mode: read a frame, answer a frame, until EOF.
@@ -680,6 +866,10 @@ fn serve_json(
 /// trailing bytes, over-deep nesting — earns an error *frame* and the
 /// connection lives on; non-UTF-8 string bytes decode lossily and fail
 /// field validation, never the connection.
+#[cfg_attr(
+    all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")),
+    allow(dead_code)
+)]
 fn serve_binary(
     shared: &SharedOracleSet,
     mut reader: BufReader<TcpStream>,
@@ -688,6 +878,22 @@ fn serve_binary(
     loop {
         match wire::read_frame(&mut reader)? {
             wire::FrameRead::Eof => return Ok(()),
+            // A client must never *send* a partial frame — that tag is
+            // server→client only, so inbound it is a desync like any
+            // other bad magic byte.
+            wire::FrameRead::Partial(_) => {
+                let err = Value::obj().set("ok", false).set(
+                    "error",
+                    format!(
+                        "bad frame magic 0x{:02x} (stream desynchronized)",
+                        wire::PARTIAL_MAGIC
+                    ),
+                );
+                wire::write_value_frame(&mut writer, &err)?;
+                writer.flush()?;
+                drain_briefly(reader.get_ref());
+                return Ok(());
+            }
             wire::FrameRead::BadMagic(byte) => {
                 // The stream has desynchronized — without the length
                 // prefix there is no way back to a frame boundary, so
@@ -715,18 +921,50 @@ fn serve_binary(
                 return Ok(());
             }
             wire::FrameRead::Frame(payload) => {
-                let response = match wire::decode_value(&payload) {
-                    Err(e) => Value::obj()
-                        .set("ok", false)
-                        .set("error", format!("bad frame payload: {e}")),
+                match wire::decode_value(&payload) {
+                    Err(e) => {
+                        let err = Value::obj()
+                            .set("ok", false)
+                            .set("error", format!("bad frame payload: {e}"));
+                        wire::write_value_frame(&mut writer, &err)?;
+                        writer.flush()?;
+                    }
                     Ok(v) => {
                         let set = shared.current();
                         let ctx = batch::ServeCtx { set: &set, shared: Some(shared) };
-                        respond_value(ctx, &v)
+                        match streaming_envelope(&v) {
+                            Some(Err(err)) => {
+                                wire::write_value_frame(&mut writer, &err)?;
+                                writer.flush()?;
+                            }
+                            Some(Ok(env)) => {
+                                let mut io_err: Option<io::Error> = None;
+                                let terminal = respond_stream(ctx, &env, &mut |partial| {
+                                    if io_err.is_none() {
+                                        if let Err(e) = wire::write_partial_frame(
+                                            &mut writer,
+                                            &partial,
+                                        )
+                                        .and_then(|()| writer.flush())
+                                        {
+                                            io_err = Some(e);
+                                        }
+                                    }
+                                });
+                                if let Some(e) = io_err {
+                                    return Err(e);
+                                }
+                                wire::write_value_frame(&mut writer, &terminal)?;
+                                writer.flush()?;
+                            }
+                            None => {
+                                let response = respond_value(ctx, &v);
+                                wire::write_value_frame(&mut writer, &response)?;
+                                writer.flush()?;
+                            }
+                        }
                     }
-                };
-                wire::write_value_frame(&mut writer, &response)?;
-                writer.flush()?;
+                }
             }
         }
     }
@@ -771,6 +1009,133 @@ pub fn respond_value(ctx: batch::ServeCtx<'_>, v: &Value) -> Value {
         }
         v => batch::handle(ctx, batch::request_id(v), batch::parse_request(v)),
     }
+}
+
+/// A validated streaming envelope: the batch slots plus the optional
+/// envelope id (echoed in the terminal frame).
+pub(crate) struct StreamEnvelope<'a> {
+    pub(crate) items: &'a [Value],
+    pub(crate) id: Option<&'a Value>,
+}
+
+/// Detect the wire-level streaming envelope `{"stream": […], "id": …}`.
+///
+/// * `None` — not an envelope (not an object, or no `"stream"` key):
+///   answer it as an ordinary request.
+/// * `Some(Err(response))` — envelope-shaped but invalid (`"stream"`
+///   not an array, or a stray field): answer with that one error
+///   response; nothing streams.
+/// * `Some(Ok(env))` — stream it through [`respond_stream`].
+///
+/// The check runs at the *wire* level only, before [`respond_value`]:
+/// a `"stream"` field inside a batch slot or a request answered via
+/// [`respond`] keeps the documented unknown-field error.
+pub(crate) fn streaming_envelope(v: &Value) -> Option<Result<StreamEnvelope<'_>, Value>> {
+    let map = v.as_obj()?;
+    if !map.contains_key("stream") {
+        return None;
+    }
+    let id = map.get("id");
+    let envelope_err = |message: String| {
+        let mut err = Value::obj().set("ok", false).set("error", message);
+        if let Some(id) = id {
+            err = err.set("id", id.clone());
+        }
+        Some(Err(err))
+    };
+    for key in map.keys() {
+        if key != "stream" && key != "id" {
+            return envelope_err(format!(
+                "unknown streaming field {key:?} (a streaming envelope carries only \
+                 \"stream\" and \"id\")"
+            ));
+        }
+    }
+    match map.get("stream") {
+        Some(Value::Arr(items)) => Some(Ok(StreamEnvelope { items, id })),
+        _ => envelope_err("\"stream\" must be an array of requests".to_string()),
+    }
+}
+
+/// One streamed slot: `{"partial": true, "index": i, "response": …}`.
+fn partial_response(index: usize, response: Value) -> Value {
+    Value::obj()
+        .set("partial", true)
+        .set("index", index as u64)
+        .set("response", response)
+}
+
+/// Answer a streaming envelope: `emit` receives each slot's partial
+/// wrapper as the engine completes it (completion order — the
+/// `"index"` field says which slot), and the returned value is the
+/// terminal aggregate `{"done": true, "ok": true, "streamed": n,
+/// "failed": f, "id": …}`.  Slots answer exactly as they would in an
+/// ordinary batch — same responses, just not held back by the slowest
+/// row.  `failed` counts `ok:false` slots; the terminal itself is
+/// `ok:true` whenever the envelope was well-formed.
+pub(crate) fn respond_stream(
+    ctx: batch::ServeCtx<'_>,
+    env: &StreamEnvelope<'_>,
+    emit: &mut dyn FnMut(Value),
+) -> Value {
+    let n = env.items.len();
+    let mut failed = 0u64;
+    let slot_failed =
+        |resp: &Value| resp.get("ok") == Some(&Value::Bool(false));
+    if n <= 1 {
+        // Nothing to overlap: answer inline on the calling thread.
+        for (i, item) in env.items.iter().enumerate() {
+            let resp =
+                batch::handle(ctx, batch::request_id(item), batch::parse_request(item));
+            if slot_failed(&resp) {
+                failed += 1;
+            }
+            emit(partial_response(i, resp));
+        }
+    } else {
+        // Claim slots atomically across a small scoped pool and flush
+        // each one the moment its worker finishes — the receiver (this
+        // thread) is the only writer, so partials never interleave
+        // mid-value.
+        let workers = ctx.set.default_oracle().engine().workers().clamp(1, n);
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Value)>();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(item) = env.items.get(i) else { break };
+                    let resp = batch::handle(
+                        ctx,
+                        batch::request_id(item),
+                        batch::parse_request(item),
+                    );
+                    if tx.send((i, resp)).is_err() {
+                        break;
+                    }
+                });
+            }
+            // Receiver sees EOF once every worker drops its sender.
+            drop(tx);
+            for (i, resp) in rx {
+                if slot_failed(&resp) {
+                    failed += 1;
+                }
+                emit(partial_response(i, resp));
+            }
+        });
+    }
+    let mut terminal = Value::obj()
+        .set("done", true)
+        .set("ok", true)
+        .set("streamed", n as u64)
+        .set("failed", failed);
+    if let Some(id) = env.id {
+        terminal = terminal.set("id", id.clone());
+    }
+    terminal
 }
 
 #[cfg(test)]
@@ -937,6 +1302,124 @@ mod tests {
         assert_eq!(sum("hits"), 1, "{shards:?}");
         assert_eq!(sum("evictions"), 0);
         assert_eq!(sum("entries"), 1, "one cached prediction lives in one shard");
+    }
+
+    #[test]
+    fn streaming_envelope_detection_and_validation() {
+        // Not envelopes: plain requests, batches, non-objects.
+        for text in [
+            r#"{"mode":"ping"}"#,
+            r#"[{"mode":"ping"}]"#,
+            r#"42"#,
+            r#"{"id":7}"#,
+        ] {
+            let v = json::parse(text).unwrap();
+            assert!(streaming_envelope(&v).is_none(), "{text}");
+        }
+
+        // A "stream" field inside an ordinary request stays the pinned
+        // unknown-field error through respond() — the envelope is
+        // wire-level only, and respond() sits below the wire.
+        let v = respond(&set(), r#"{"mode":"ping","stream":[]}"#);
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+        assert!(
+            v.get("error").and_then(Value::as_str).unwrap().contains("unknown request field"),
+            "{v:?}"
+        );
+
+        // Envelope-shaped but invalid: one error response, id echoed.
+        let v = json::parse(r#"{"stream":7,"id":3}"#).unwrap();
+        let Some(Err(err)) = streaming_envelope(&v) else {
+            panic!("non-array stream must be an envelope error");
+        };
+        assert_eq!(err.get("ok"), Some(&Value::Bool(false)));
+        assert!(
+            err.get("error").and_then(Value::as_str).unwrap().contains("array"),
+            "{err:?}"
+        );
+        assert_eq!(err.get("id").and_then(Value::as_u64), Some(3));
+
+        let v = json::parse(r#"{"stream":[],"mode":"ping"}"#).unwrap();
+        let Some(Err(err)) = streaming_envelope(&v) else {
+            panic!("stray fields must be an envelope error");
+        };
+        let msg = err.get("error").and_then(Value::as_str).unwrap();
+        assert!(msg.contains("unknown streaming field") && msg.contains("mode"), "{msg}");
+
+        // Valid: items + optional id.
+        let v = json::parse(r#"{"stream":[{"mode":"ping"}],"id":"b"}"#).unwrap();
+        let Some(Ok(env)) = streaming_envelope(&v) else {
+            panic!("well-formed envelope must validate");
+        };
+        assert_eq!(env.items.len(), 1);
+        assert_eq!(env.id.and_then(Value::as_str), Some("b"));
+    }
+
+    #[test]
+    fn respond_stream_emits_every_slot_once_and_a_terminal_aggregate() {
+        let o = set();
+        let v = json::parse(
+            r#"{"stream":[{"mode":"ping","id":0},{"mode":"nope","id":1},
+                {"mode":"predict","instr":"add.u32","id":2},
+                {"mode":"throughput","instr":"add.u32","id":3}],"id":"batch-7"}"#,
+        )
+        .unwrap();
+        let Some(Ok(env)) = streaming_envelope(&v) else {
+            panic!("envelope must validate");
+        };
+        let ctx = batch::ServeCtx::fixed(&o);
+        let mut partials = Vec::new();
+        let terminal = respond_stream(ctx, &env, &mut |p| partials.push(p));
+
+        // Every slot exactly once, each tagged with its index, each
+        // carrying the response the ordinary batch would have given.
+        assert_eq!(partials.len(), 4);
+        let mut seen: Vec<u64> = partials
+            .iter()
+            .map(|p| p.get("index").and_then(Value::as_u64).unwrap())
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        for p in &partials {
+            assert_eq!(p.get("partial"), Some(&Value::Bool(true)));
+            let idx = p.get("index").and_then(Value::as_u64).unwrap();
+            let resp = p.get("response").expect("wrapped slot response");
+            assert_eq!(
+                resp.get("id").and_then(Value::as_u64),
+                Some(idx),
+                "slot id rides inside the wrapped response: {p:?}"
+            );
+            let ok = resp.get("ok");
+            if idx == 1 {
+                assert_eq!(ok, Some(&Value::Bool(false)), "{resp:?}");
+            } else {
+                assert_eq!(ok, Some(&Value::Bool(true)), "{resp:?}");
+            }
+        }
+
+        assert_eq!(terminal.get("done"), Some(&Value::Bool(true)));
+        assert_eq!(terminal.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(terminal.get("streamed").and_then(Value::as_u64), Some(4));
+        assert_eq!(terminal.get("failed").and_then(Value::as_u64), Some(1));
+        assert_eq!(terminal.get("id").and_then(Value::as_str), Some("batch-7"));
+
+        // The degenerate envelopes: empty stream and a single slot.
+        let v = json::parse(r#"{"stream":[]}"#).unwrap();
+        let Some(Ok(env)) = streaming_envelope(&v) else { panic!() };
+        let mut none = Vec::new();
+        let terminal = respond_stream(ctx, &env, &mut |p| none.push(p));
+        assert!(none.is_empty());
+        assert_eq!(terminal.get("streamed").and_then(Value::as_u64), Some(0));
+        assert_eq!(terminal.get("failed").and_then(Value::as_u64), Some(0));
+        assert!(terminal.get("id").is_none(), "no envelope id, none echoed");
+
+        let v = json::parse(r#"{"stream":[{"mode":"ping","id":9}]}"#).unwrap();
+        let Some(Ok(env)) = streaming_envelope(&v) else { panic!() };
+        let mut one = Vec::new();
+        let terminal = respond_stream(ctx, &env, &mut |p| one.push(p));
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].get("index").and_then(Value::as_u64), Some(0));
+        assert_eq!(terminal.get("streamed").and_then(Value::as_u64), Some(1));
     }
 
     #[test]

@@ -21,6 +21,14 @@
 //! request minus the text parsing, and the two modes answer
 //! byte-for-byte identically once decoded.
 //!
+//! Streamed batch responses additionally use a **partial** frame — the
+//! same layout with [`PARTIAL_MAGIC`] (`0xB2`) in place of the magic
+//! byte.  Partial frames flow server→client only (each carries one
+//! completed batch slot); the stream always ends with an ordinary
+//! `0xB1` terminal frame carrying the aggregate.  A client that sends
+//! `0xB2` itself has desynchronized, exactly like any other bad magic
+//! byte.
+//!
 //! ## Payload encoding
 //!
 //! One byte of tag, then the tag-specific body.  Numbers keep the JSON
@@ -53,6 +61,11 @@ use std::io::{self, BufRead, Read, Write};
 /// First byte of every frame; also the mode-negotiation byte (a JSON
 /// request can never start with it).
 pub const MAGIC: u8 = 0xB1;
+
+/// First byte of a *partial* (streamed) response frame.  Server→client
+/// only: each partial frame carries one completed slot of a streamed
+/// batch; the terminal aggregate rides an ordinary [`MAGIC`] frame.
+pub const PARTIAL_MAGIC: u8 = 0xB2;
 
 /// Largest accepted frame payload — parity with the JSON path's 8 MiB
 /// request-line cap, and the same bound applies to responses.
@@ -87,9 +100,19 @@ pub fn encode_value(v: &Value) -> Vec<u8> {
 /// Encode one value as a complete frame: magic byte, length prefix,
 /// payload — ready to write to the socket in one call.
 pub fn encode_frame(v: &Value) -> Vec<u8> {
+    encode_frame_with(MAGIC, v)
+}
+
+/// Encode one value as a *partial* (streamed) response frame: same
+/// layout as [`encode_frame`], [`PARTIAL_MAGIC`] in the first byte.
+pub fn encode_partial_frame(v: &Value) -> Vec<u8> {
+    encode_frame_with(PARTIAL_MAGIC, v)
+}
+
+fn encode_frame_with(magic: u8, v: &Value) -> Vec<u8> {
     let payload = encode_value(v);
     let mut out = Vec::with_capacity(payload.len() + 5);
-    out.push(MAGIC);
+    out.push(magic);
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&payload);
     out
@@ -236,9 +259,14 @@ impl<'a> Reader<'a> {
 pub enum FrameRead {
     /// A complete payload (already length-checked).
     Frame(Vec<u8>),
+    /// A complete [`PARTIAL_MAGIC`] payload — one streamed batch slot.
+    /// Only clients legitimately see this; a server receiving it treats
+    /// it as a bad magic byte.
+    Partial(Vec<u8>),
     /// Clean close before any frame byte.
     Eof,
-    /// The next byte was not [`MAGIC`] — the stream has desynchronized.
+    /// The next byte was neither [`MAGIC`] nor [`PARTIAL_MAGIC`] — the
+    /// stream has desynchronized.
     BadMagic(u8),
     /// Declared length exceeds [`MAX_FRAME_BYTES`]; the payload was
     /// *not* consumed.
@@ -253,7 +281,7 @@ pub fn read_frame<R: BufRead>(r: &mut R) -> io::Result<FrameRead> {
     if r.read(&mut magic)? == 0 {
         return Ok(FrameRead::Eof);
     }
-    if magic[0] != MAGIC {
+    if magic[0] != MAGIC && magic[0] != PARTIAL_MAGIC {
         return Ok(FrameRead::BadMagic(magic[0]));
     }
     let mut len = [0u8; 4];
@@ -264,12 +292,21 @@ pub fn read_frame<R: BufRead>(r: &mut R) -> io::Result<FrameRead> {
     }
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload)?;
-    Ok(FrameRead::Frame(payload))
+    if magic[0] == PARTIAL_MAGIC {
+        Ok(FrameRead::Partial(payload))
+    } else {
+        Ok(FrameRead::Frame(payload))
+    }
 }
 
 /// Write one value as a frame.
 pub fn write_value_frame<W: Write>(w: &mut W, v: &Value) -> io::Result<()> {
     w.write_all(&encode_frame(v))
+}
+
+/// Write one value as a partial (streamed-slot) frame.
+pub fn write_partial_frame<W: Write>(w: &mut W, v: &Value) -> io::Result<()> {
+    w.write_all(&encode_partial_frame(v))
 }
 
 #[cfg(test)]
@@ -389,5 +426,41 @@ mod tests {
             read_frame(&mut r).unwrap(),
             FrameRead::TooLarge(n) if n == MAX_FRAME_BYTES + 1
         ));
+    }
+
+    #[test]
+    fn partial_frames_round_trip_and_interleave_with_terminals() {
+        use std::io::BufReader;
+
+        let slot = Value::obj().set("partial", true).set("index", 0u64);
+        let done = Value::obj().set("done", true).set("ok", true);
+
+        // Identical layout, different magic byte.
+        let p = encode_partial_frame(&slot);
+        assert_eq!(p[0], PARTIAL_MAGIC);
+        assert_eq!(encode_frame(&slot)[1..], p[1..]);
+
+        // A streamed response: partial, partial, terminal.
+        let mut wire = encode_partial_frame(&slot);
+        wire.extend_from_slice(&encode_partial_frame(&slot));
+        wire.extend_from_slice(&encode_frame(&done));
+        let mut r = BufReader::new(&wire[..]);
+        for _ in 0..2 {
+            match read_frame(&mut r).unwrap() {
+                FrameRead::Partial(p) => assert_eq!(decode_value(&p).unwrap(), slot),
+                other => panic!("{other:?}"),
+            }
+        }
+        match read_frame(&mut r).unwrap() {
+            FrameRead::Frame(p) => assert_eq!(decode_value(&p).unwrap(), done),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(read_frame(&mut r).unwrap(), FrameRead::Eof));
+
+        // An oversized partial declaration is rejected like any other.
+        let mut oversized = vec![PARTIAL_MAGIC];
+        oversized.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        let mut r = BufReader::new(&oversized[..]);
+        assert!(matches!(read_frame(&mut r).unwrap(), FrameRead::TooLarge(_)));
     }
 }

@@ -1,0 +1,280 @@
+//! A `libc`-free epoll wrapper over raw Linux syscalls.
+//!
+//! The serving reactor ([`crate::oracle::serve`]) needs readiness
+//! notification for thousands of nonblocking sockets, but the crate
+//! vendors no FFI bindings — so the three epoll calls are issued
+//! directly with inline assembly, exactly the way `libc` would. The
+//! surface is the minimal level-triggered subset the reactor uses:
+//! create, add/modify/delete an interest, and wait.
+//!
+//! Only compiled on Linux (x86_64 / aarch64); every other target keeps
+//! the thread-per-connection serving backend, so tier-1 stays green
+//! everywhere without a network or an external crate.
+
+use std::io;
+
+/// Readiness: the fd has bytes to read (or a pending accept).
+pub const EPOLLIN: u32 = 0x001;
+/// Readiness: the fd can accept writes without blocking.
+pub const EPOLLOUT: u32 = 0x004;
+/// Error condition — always reported, never needs registering.
+pub const EPOLLERR: u32 = 0x008;
+/// Hangup — always reported, never needs registering.
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer closed its writing half (half-open connection).
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CLOEXEC: usize = 0x80000;
+const EPOLL_CTL_ADD: usize = 1;
+const EPOLL_CTL_DEL: usize = 2;
+const EPOLL_CTL_MOD: usize = 3;
+
+#[cfg(target_arch = "x86_64")]
+mod nr {
+    pub const CLOSE: usize = 3;
+    pub const EPOLL_WAIT: usize = 232;
+    pub const EPOLL_CTL: usize = 233;
+    pub const EPOLL_CREATE1: usize = 291;
+}
+
+#[cfg(target_arch = "aarch64")]
+mod nr {
+    pub const EPOLL_CREATE1: usize = 20;
+    pub const EPOLL_CTL: usize = 21;
+    // aarch64 has no plain epoll_wait; epoll_pwait with a null sigmask
+    // is the kernel's own definition of it.
+    pub const EPOLL_WAIT: usize = 22;
+    pub const CLOSE: usize = 57;
+}
+
+/// One readiness record, laid out exactly as the kernel writes it.
+///
+/// x86_64 is the one ABI where `struct epoll_event` is packed (the
+/// 32-bit layout was kept for compatibility); everywhere else it has
+/// natural alignment.
+#[cfg(target_arch = "x86_64")]
+#[repr(C, packed)]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+/// One readiness record, laid out exactly as the kernel writes it.
+#[cfg(not(target_arch = "x86_64"))]
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+impl EpollEvent {
+    /// An empty record for pre-sizing the `wait` buffer.
+    pub fn zeroed() -> EpollEvent {
+        EpollEvent { events: 0, data: 0 }
+    }
+
+    /// The readiness bits the kernel reported (`EPOLLIN | …`).
+    pub fn events(&self) -> u32 {
+        // By-value copy: field *references* into a packed struct are
+        // UB-adjacent, plain reads are fine.
+        self.events
+    }
+
+    /// The caller's token, round-tripped verbatim from `add`/`modify`.
+    pub fn token(&self) -> u64 {
+        self.data
+    }
+}
+
+/// raw syscall, 4 explicit arguments (enough for every epoll call).
+#[cfg(target_arch = "x86_64")]
+unsafe fn syscall4(n: usize, a1: usize, a2: usize, a3: usize, a4: usize) -> isize {
+    let ret: isize;
+    // The syscall instruction clobbers rcx (return rip) and r11
+    // (rflags); the kernel preserves everything else we use.
+    std::arch::asm!(
+        "syscall",
+        inlateout("rax") n as isize => ret,
+        in("rdi") a1,
+        in("rsi") a2,
+        in("rdx") a3,
+        in("r10") a4,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+    ret
+}
+
+/// raw syscall, 4 explicit arguments (enough for every epoll call).
+#[cfg(target_arch = "aarch64")]
+unsafe fn syscall4(n: usize, a1: usize, a2: usize, a3: usize, a4: usize) -> isize {
+    let ret: isize;
+    // x4/x5 are zeroed so epoll_pwait sees a null sigmask: that makes
+    // it behave exactly like x86_64's epoll_wait.
+    std::arch::asm!(
+        "svc 0",
+        in("x8") n,
+        inlateout("x0") a1 => ret,
+        in("x1") a2,
+        in("x2") a3,
+        in("x3") a4,
+        in("x4") 0usize,
+        in("x5") 0usize,
+        options(nostack),
+    );
+    ret
+}
+
+/// Raw returns are `-errno` on failure, exactly like the kernel ABI.
+fn check(ret: isize) -> io::Result<usize> {
+    if ret < 0 {
+        Err(io::Error::from_raw_os_error(-ret as i32))
+    } else {
+        Ok(ret as usize)
+    }
+}
+
+/// An epoll instance (level-triggered). Closes its fd on drop.
+pub struct Epoll {
+    fd: i32,
+}
+
+impl Epoll {
+    /// `epoll_create1(EPOLL_CLOEXEC)`.
+    pub fn new() -> io::Result<Epoll> {
+        let ret = unsafe { syscall4(nr::EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0) };
+        check(ret).map(|fd| Epoll { fd: fd as i32 })
+    }
+
+    /// Start watching `fd` for `events`, tagging reports with `token`.
+    pub fn add(&self, fd: i32, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    /// Replace the interest set (and token) for an already-added `fd`.
+    pub fn modify(&self, fd: i32, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    /// Stop watching `fd`.
+    pub fn del(&self, fd: i32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    fn ctl(&self, op: usize, fd: i32, events: u32, token: u64) -> io::Result<()> {
+        // Pre-2.6.9 kernels require a non-null event pointer even for
+        // DEL, so one is always passed.
+        let mut ev = EpollEvent {
+            events,
+            data: token,
+        };
+        let ret = unsafe {
+            syscall4(
+                nr::EPOLL_CTL,
+                self.fd as usize,
+                op,
+                fd as usize,
+                &mut ev as *mut EpollEvent as usize,
+            )
+        };
+        check(ret).map(|_| ())
+    }
+
+    /// Block up to `timeout_ms` (0 = poll, negative = forever) and
+    /// fill `events` with ready records; returns how many. EINTR is
+    /// retried internally.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let ret = unsafe {
+                syscall4(
+                    nr::EPOLL_WAIT,
+                    self.fd as usize,
+                    events.as_mut_ptr() as usize,
+                    events.len(),
+                    timeout_ms as isize as usize,
+                )
+            };
+            match check(ret) {
+                Ok(n) => return Ok(n),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            syscall4(nr::CLOSE, self.fd as usize, 0, 0, 0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn readiness_tracks_socket_state() {
+        let ep = Epoll::new().unwrap();
+        let (mut a, mut b) = UnixStream::pair().unwrap();
+        ep.add(b.as_raw_fd(), EPOLLIN, 7).unwrap();
+        let mut evs = [EpollEvent::zeroed(); 8];
+
+        // Nothing buffered yet: a zero-timeout wait reports nothing.
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+
+        a.write_all(b"x").unwrap();
+        let n = ep.wait(&mut evs, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(evs[0].token(), 7);
+        assert_ne!(evs[0].events() & EPOLLIN, 0);
+
+        // Level-triggered: still ready until the byte is consumed.
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 1);
+        let mut byte = [0u8; 1];
+        b.read_exact(&mut byte).unwrap();
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+
+        // An empty send buffer reports EPOLLOUT immediately, and the
+        // token travels with the modify.
+        ep.modify(b.as_raw_fd(), EPOLLIN | EPOLLOUT, 9).unwrap();
+        let n = ep.wait(&mut evs, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(evs[0].token(), 9);
+        assert_ne!(evs[0].events() & EPOLLOUT, 0);
+
+        // After del, new bytes no longer wake the instance.
+        ep.del(b.as_raw_fd()).unwrap();
+        a.write_all(b"y").unwrap();
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn peer_close_reports_hangup_or_readable_eof() {
+        let ep = Epoll::new().unwrap();
+        let (a, b) = UnixStream::pair().unwrap();
+        ep.add(b.as_raw_fd(), EPOLLIN | EPOLLRDHUP, 1).unwrap();
+        drop(a);
+        let mut evs = [EpollEvent::zeroed(); 4];
+        let n = ep.wait(&mut evs, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!(evs[0].events() & (EPOLLIN | EPOLLHUP | EPOLLRDHUP), 0);
+    }
+
+    #[test]
+    fn double_add_is_an_error_modify_is_not() {
+        let ep = Epoll::new().unwrap();
+        let (_a, b) = UnixStream::pair().unwrap();
+        ep.add(b.as_raw_fd(), EPOLLIN, 1).unwrap();
+        assert!(ep.add(b.as_raw_fd(), EPOLLIN, 2).is_err());
+        ep.modify(b.as_raw_fd(), EPOLLOUT, 3).unwrap();
+    }
+}

@@ -7,9 +7,13 @@
 //! * [`json`]  — JSON parser + serializer (artifact manifests, `--json`);
 //! * [`f16`]   — IEEE binary16 and bfloat16 conversion/arithmetic;
 //! * [`prng`]  — deterministic xorshift PRNG for property-based tests;
-//! * [`bench`] — the criterion-style timing harness `cargo bench` runs.
+//! * [`bench`] — the criterion-style timing harness `cargo bench` runs;
+//! * `epoll`   — on Linux, a `libc`-free readiness shim (raw syscalls
+//!   via inline asm) behind the serving reactor.
 
 pub mod bench;
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub mod epoll;
 pub mod f16;
 pub mod json;
 pub mod prng;

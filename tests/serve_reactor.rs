@@ -1,0 +1,448 @@
+//! Integration: the serving transport under pipelined and abusive
+//! clients — many in-flight frames answered strictly in order, byte
+//! dribble, half-open connections, a stalled reader with responses
+//! pending, streamed batch envelopes over both framings, a hot reload
+//! landing between pipelined frames, and the client-sent partial-magic
+//! desync.  On Linux these drive the epoll reactor; elsewhere the
+//! thread-per-connection fallback must behave identically.
+
+use ampere_ubench::config::AmpereConfig;
+use ampere_ubench::engine::Engine;
+use ampere_ubench::oracle::{wire, LatencyModel, LatencyOracle, Server, ServerHandle};
+use ampere_ubench::util::json::{self, Value};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// One extracted model shared by every test in this binary (extraction
+/// runs the full campaign once).
+fn model() -> &'static LatencyModel {
+    static MODEL: OnceLock<LatencyModel> = OnceLock::new();
+    MODEL.get_or_init(|| {
+        LatencyModel::extract(&Engine::new(AmpereConfig::small())).expect("extraction")
+    })
+}
+
+fn oracle() -> LatencyOracle {
+    LatencyOracle::with_engine(model().clone(), Engine::new(AmpereConfig::small()))
+}
+
+fn spawn_server() -> ServerHandle {
+    let server = Server::bind(Arc::new(oracle()), "127.0.0.1:0").expect("bind port 0");
+    server.spawn().expect("spawn")
+}
+
+struct Conn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn open(handle: &ServerHandle) -> Conn {
+        let stream = TcpStream::connect(handle.addr()).expect("connect");
+        stream.set_nodelay(true).expect("nodelay");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        Conn { stream, reader }
+    }
+
+    fn read_json_line(&mut self) -> Value {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("receive");
+        assert!(n > 0, "server closed the connection mid-conversation");
+        json::parse(line.trim()).expect("response is JSON")
+    }
+}
+
+#[test]
+fn pipelined_json_requests_answer_strictly_in_order() {
+    let handle = spawn_server();
+    let mut c = Conn::open(&handle);
+
+    const N: u64 = 32;
+    let mut burst = String::new();
+    for i in 0..N {
+        burst.push_str(&format!(
+            "{{\"mode\":\"predict\",\"instr\":\"add.u32\",\"id\":{i}}}\n"
+        ));
+    }
+    c.stream.write_all(burst.as_bytes()).expect("send burst");
+    for i in 0..N {
+        let v = c.read_json_line();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{v:?}");
+        assert_eq!(
+            v.get("id").and_then(Value::as_u64),
+            Some(i),
+            "responses out of request order: {v:?}"
+        );
+    }
+    // The connection stays interactive after the burst.
+    c.stream.write_all(b"{\"mode\":\"ping\"}\n").expect("send");
+    assert_eq!(c.read_json_line().get("pong"), Some(&Value::Bool(true)));
+    handle.stop();
+}
+
+#[test]
+fn pipelined_binary_frames_answer_strictly_in_order_across_modes() {
+    let handle = spawn_server();
+    let mut c = Conn::open(&handle);
+
+    const N: u64 = 24;
+    let mut burst = Vec::new();
+    for i in 0..N {
+        let request = match i % 3 {
+            0 => Value::obj().set("mode", "ping").set("id", i),
+            1 => Value::obj()
+                .set("mode", "predict")
+                .set("instr", "add.u32")
+                .set("id", i),
+            _ => Value::obj().set("mode", "stats").set("id", i),
+        };
+        burst.extend_from_slice(&wire::encode_frame(&request));
+    }
+    c.stream.write_all(&burst).expect("send burst");
+    for i in 0..N {
+        let v = match wire::read_frame(&mut c.reader).expect("read frame") {
+            wire::FrameRead::Frame(p) => wire::decode_value(&p).expect("decode"),
+            other => panic!("expected a response frame, got {other:?}"),
+        };
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{v:?}");
+        assert_eq!(
+            v.get("id").and_then(Value::as_u64),
+            Some(i),
+            "responses out of request order: {v:?}"
+        );
+    }
+    handle.stop();
+}
+
+#[test]
+fn one_byte_dribble_still_frames_requests() {
+    let handle = spawn_server();
+
+    // JSON line fed one byte at a time.
+    let mut c = Conn::open(&handle);
+    for &b in b"{\"mode\":\"ping\",\"id\":7}\n" {
+        c.stream.write_all(&[b]).expect("dribble");
+        c.stream.flush().expect("flush");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let v = c.read_json_line();
+    assert_eq!(v.get("pong"), Some(&Value::Bool(true)), "{v:?}");
+    assert_eq!(v.get("id").and_then(Value::as_u64), Some(7));
+
+    // A binary frame fed one byte at a time — the magic byte, then the
+    // length header, then the payload all arrive in separate segments.
+    let mut c = Conn::open(&handle);
+    let frame = wire::encode_frame(&Value::obj().set("mode", "ping").set("id", 8_u64));
+    for &b in &frame {
+        c.stream.write_all(&[b]).expect("dribble");
+        c.stream.flush().expect("flush");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    match wire::read_frame(&mut c.reader).expect("read frame") {
+        wire::FrameRead::Frame(p) => {
+            let v = wire::decode_value(&p).expect("decode");
+            assert_eq!(v.get("pong"), Some(&Value::Bool(true)), "{v:?}");
+            assert_eq!(v.get("id").and_then(Value::as_u64), Some(8));
+        }
+        other => panic!("expected a response frame, got {other:?}"),
+    }
+    handle.stop();
+}
+
+#[test]
+fn half_open_client_receives_every_pipelined_response_then_eof() {
+    let handle = spawn_server();
+    let mut c = Conn::open(&handle);
+
+    const N: u64 = 16;
+    let mut burst = String::new();
+    for i in 0..N {
+        burst.push_str(&format!(
+            "{{\"mode\":\"predict\",\"instr\":\"add.u32\",\"id\":{i}}}\n"
+        ));
+    }
+    c.stream.write_all(burst.as_bytes()).expect("send burst");
+    // Half-close: we will never send again, but every in-flight
+    // request must still answer before the server hangs up.
+    c.stream.shutdown(Shutdown::Write).expect("shutdown write");
+    for i in 0..N {
+        let v = c.read_json_line();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{v:?}");
+        assert_eq!(v.get("id").and_then(Value::as_u64), Some(i));
+    }
+    let mut line = String::new();
+    assert_eq!(
+        c.reader.read_line(&mut line).expect("eof read"),
+        0,
+        "server must close once a half-open connection is fully answered: {line:?}"
+    );
+    handle.stop();
+}
+
+#[test]
+fn stalled_reader_with_pipelined_responses_drains_without_loss() {
+    let handle = spawn_server();
+    let mut c = Conn::open(&handle);
+
+    // Each roundtrip is a large ping batch, so the un-read responses
+    // pile hundreds of kilobytes into the server's per-connection
+    // write buffer while we stall.
+    const BATCHES: u64 = 16;
+    const SLOTS: u64 = 600;
+    let batch = Value::Arr(
+        (0..SLOTS).map(|i| Value::obj().set("mode", "ping").set("id", i)).collect(),
+    );
+    let mut line_bytes = json::to_string(&batch).into_bytes();
+    line_bytes.push(b'\n');
+    for _ in 0..BATCHES {
+        c.stream.write_all(&line_bytes).expect("send batch");
+    }
+    // Stall: give the server time to answer everything into its write
+    // buffer (and the socket) while nobody reads.
+    std::thread::sleep(Duration::from_millis(500));
+    for b in 0..BATCHES {
+        let v = c.read_json_line();
+        let arr = v.as_arr().unwrap_or_else(|| panic!("batch {b} not an array"));
+        assert_eq!(arr.len() as u64, SLOTS, "batch {b} lost slots");
+        for (i, r) in arr.iter().enumerate() {
+            assert_eq!(r.get("ok"), Some(&Value::Bool(true)), "batch {b} slot {i}");
+            assert_eq!(r.get("id").and_then(Value::as_u64), Some(i as u64));
+        }
+    }
+    // Nothing was dropped and the connection is still live.
+    c.stream.write_all(b"{\"mode\":\"ping\"}\n").expect("send");
+    assert_eq!(c.read_json_line().get("pong"), Some(&Value::Bool(true)));
+    handle.stop();
+}
+
+#[test]
+fn streaming_envelope_flushes_partials_then_terminal_json() {
+    let handle = spawn_server();
+    let mut c = Conn::open(&handle);
+
+    c.stream
+        .write_all(
+            concat!(
+                r#"{"stream":[{"mode":"ping","id":0},"#,
+                r#"{"mode":"predict","instr":"add.u32","id":1},"#,
+                r#"{"mode":"ping","id":2}],"id":"env"}"#,
+                "\n"
+            )
+            .as_bytes(),
+        )
+        .expect("send envelope");
+
+    let mut seen = [false; 3];
+    for _ in 0..3 {
+        let v = c.read_json_line();
+        assert_eq!(v.get("partial"), Some(&Value::Bool(true)), "{v:?}");
+        let index = v.get("index").and_then(Value::as_u64).expect("index") as usize;
+        assert!(!seen[index], "slot {index} streamed twice");
+        seen[index] = true;
+        let resp = v.get("response").expect("response");
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("id").and_then(Value::as_u64), Some(index as u64));
+    }
+    let terminal = c.read_json_line();
+    assert_eq!(terminal.get("done"), Some(&Value::Bool(true)), "{terminal:?}");
+    assert_eq!(terminal.get("ok"), Some(&Value::Bool(true)));
+    assert_eq!(terminal.get("streamed").and_then(Value::as_u64), Some(3));
+    assert_eq!(terminal.get("failed").and_then(Value::as_u64), Some(0));
+    assert_eq!(terminal.get("id").and_then(Value::as_str), Some("env"));
+
+    // A failing slot streams its error and the terminal counts it;
+    // the envelope itself still succeeds.
+    c.stream
+        .write_all(b"{\"stream\":[{\"mode\":\"predict\"}],\"id\":5}\n")
+        .expect("send envelope");
+    let partial = c.read_json_line();
+    assert_eq!(partial.get("partial"), Some(&Value::Bool(true)));
+    let resp = partial.get("response").expect("response");
+    assert_eq!(resp.get("ok"), Some(&Value::Bool(false)), "{resp:?}");
+    let terminal = c.read_json_line();
+    assert_eq!(terminal.get("failed").and_then(Value::as_u64), Some(1));
+    assert_eq!(terminal.get("ok"), Some(&Value::Bool(true)));
+    assert_eq!(terminal.get("id").and_then(Value::as_u64), Some(5));
+
+    // Ordinary requests keep working after a stream.
+    c.stream.write_all(b"{\"mode\":\"ping\"}\n").expect("send");
+    assert_eq!(c.read_json_line().get("pong"), Some(&Value::Bool(true)));
+    handle.stop();
+}
+
+#[test]
+fn streaming_envelope_flushes_partial_frames_then_terminal_binary() {
+    let handle = spawn_server();
+    let mut c = Conn::open(&handle);
+
+    let envelope = Value::obj()
+        .set(
+            "stream",
+            Value::Arr(
+                (0..4_u64)
+                    .map(|i| Value::obj().set("mode", "ping").set("id", i))
+                    .collect(),
+            ),
+        )
+        .set("id", 9_u64);
+    c.stream.write_all(&wire::encode_frame(&envelope)).expect("send envelope");
+
+    let mut seen = [false; 4];
+    loop {
+        match wire::read_frame(&mut c.reader).expect("read frame") {
+            wire::FrameRead::Partial(p) => {
+                let v = wire::decode_value(&p).expect("decode partial");
+                assert_eq!(v.get("partial"), Some(&Value::Bool(true)), "{v:?}");
+                let index =
+                    v.get("index").and_then(Value::as_u64).expect("index") as usize;
+                assert!(!seen[index], "slot {index} streamed twice");
+                seen[index] = true;
+                let resp = v.get("response").expect("response");
+                assert_eq!(resp.get("pong"), Some(&Value::Bool(true)), "{resp:?}");
+            }
+            wire::FrameRead::Frame(p) => {
+                // The terminal is an ordinary frame — and by protocol it
+                // arrives only after every partial.
+                let v = wire::decode_value(&p).expect("decode terminal");
+                assert_eq!(v.get("done"), Some(&Value::Bool(true)), "{v:?}");
+                assert_eq!(v.get("streamed").and_then(Value::as_u64), Some(4));
+                assert_eq!(v.get("failed").and_then(Value::as_u64), Some(0));
+                assert_eq!(v.get("id").and_then(Value::as_u64), Some(9));
+                break;
+            }
+            other => panic!("unexpected frame read: {other:?}"),
+        }
+    }
+    assert!(seen.iter().all(|s| *s), "terminal before every partial: {seen:?}");
+
+    // The stream tag is unambiguous: an ordinary frame still roundtrips.
+    c.stream
+        .write_all(&wire::encode_frame(&Value::obj().set("mode", "ping")))
+        .expect("send");
+    match wire::read_frame(&mut c.reader).expect("read frame") {
+        wire::FrameRead::Frame(p) => {
+            let v = wire::decode_value(&p).expect("decode");
+            assert_eq!(v.get("pong"), Some(&Value::Bool(true)), "{v:?}");
+        }
+        other => panic!("expected a response frame, got {other:?}"),
+    }
+    handle.stop();
+}
+
+#[test]
+fn client_sent_partial_magic_is_a_desync_and_closes() {
+    let handle = spawn_server();
+    let mut c = Conn::open(&handle);
+
+    // A healthy roundtrip first, so the desync is mid-stream.
+    c.stream
+        .write_all(&wire::encode_frame(&Value::obj().set("mode", "ping")))
+        .expect("send");
+    match wire::read_frame(&mut c.reader).expect("read frame") {
+        wire::FrameRead::Frame(_) => {}
+        other => panic!("expected a response frame, got {other:?}"),
+    }
+
+    // 0xB2 is server→client only; inbound it desynchronizes the stream.
+    c.stream.write_all(&[wire::PARTIAL_MAGIC]).expect("send partial magic");
+    match wire::read_frame(&mut c.reader).expect("read error frame") {
+        wire::FrameRead::Frame(p) => {
+            let v = wire::decode_value(&p).expect("decode");
+            let err = v.get("error").and_then(Value::as_str).expect("error");
+            assert!(err.contains("bad frame magic 0xb2"), "{err}");
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    match wire::read_frame(&mut c.reader) {
+        Ok(wire::FrameRead::Eof) | Err(_) => {}
+        other => panic!("connection should close after desync: {other:?}"),
+    }
+    handle.stop();
+}
+
+/// A hot reload landing between pipelined frames: every in-flight
+/// batch answers coherently from exactly one model snapshot, nothing
+/// drops, and frames submitted after the reload acknowledgment answer
+/// from the new model.
+#[test]
+fn hot_reload_lands_between_pipelined_frames() {
+    const BATCH: u64 = 4;
+    const DEPTH: u64 = 8;
+    let base = model().lookup("add.u32").expect("add.u32 in model").cpi;
+    let new_cpi = base + 7;
+
+    let mut bumped = model().clone();
+    {
+        let e = bumped.instructions.get_mut("add.u32").expect("add.u32 entry");
+        e.cpi += 7;
+        if let Some(d) = e.dep_cpi.as_mut() {
+            *d += 7;
+        }
+    }
+    let bumped_path = std::env::temp_dir().join("serve_reactor_reload_bumped.json");
+    let bumped_path = bumped_path.to_str().unwrap().to_string();
+    bumped.save(&bumped_path).unwrap();
+
+    let handle = spawn_server();
+    let mut c = Conn::open(&handle);
+    let batch = Value::Arr(
+        (0..BATCH)
+            .map(|i| {
+                Value::obj().set("mode", "predict").set("instr", "add.u32").set("id", i)
+            })
+            .collect(),
+    );
+    let mut line_bytes = json::to_string(&batch).into_bytes();
+    line_bytes.push(b'\n');
+
+    // One pipelined window in flight while the reload fires from a
+    // second connection.
+    for _ in 0..DEPTH {
+        c.stream.write_all(&line_bytes).expect("send window");
+    }
+    let mut r = Conn::open(&handle);
+    r.stream
+        .write_all(format!("{{\"mode\":\"reload\",\"model\":\"{bumped_path}\"}}\n").as_bytes())
+        .expect("send reload");
+    let ack = r.read_json_line();
+    assert_eq!(ack.get("ok"), Some(&Value::Bool(true)), "{ack:?}");
+    assert_eq!(ack.get("reloads").and_then(Value::as_u64), Some(1));
+
+    // Drain the window: every batch is coherent and from one of the
+    // two models (the swap point is a race by construction).
+    let coherent_cpi = |v: &Value| -> u64 {
+        let arr = v.as_arr().expect("batch response is an array");
+        assert_eq!(arr.len() as u64, BATCH);
+        let cpi = arr[0].get("cpi").and_then(Value::as_u64).expect("cpi");
+        for r in arr {
+            assert_eq!(r.get("ok"), Some(&Value::Bool(true)), "{r:?}");
+            assert_eq!(
+                r.get("cpi").and_then(Value::as_u64),
+                Some(cpi),
+                "torn read inside one pipelined batch: {v:?}"
+            );
+        }
+        assert!(cpi == base || cpi == new_cpi, "cpi {cpi} matches neither model");
+        cpi
+    };
+    for _ in 0..DEPTH {
+        coherent_cpi(&c.read_json_line());
+    }
+
+    // The reload acknowledgment happened-before anything we send now,
+    // so fresh frames on the same pipelined connection see the new
+    // model (allow a brief settle for snapshot propagation).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        c.stream.write_all(&line_bytes).expect("send post-reload");
+        if coherent_cpi(&c.read_json_line()) == new_cpi {
+            break;
+        }
+        assert!(Instant::now() < deadline, "reload never became visible");
+    }
+
+    handle.stop();
+    let _ = std::fs::remove_file(&bumped_path);
+}
